@@ -1,0 +1,75 @@
+//! Bandwidth-aware codec selection (paper §C / Fig. 11): measures every
+//! codec's ratio and throughput on a realistic sparse patch, then
+//! reports which codec minimizes end-to-end transfer time at your link
+//! rate — the paper's datacenter / cloud / constrained regimes.
+//!
+//! Run: cargo run --release --example codec_explorer -- --mbps 100
+
+use pulse::codec::Codec;
+use pulse::net::{total_transfer_time, SimLink};
+use pulse::util::cli::Args;
+use pulse::util::rng::Rng;
+use pulse::util::Stopwatch;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let mbps = args.f64_or("mbps", 100.0);
+    // build a realistic sparse patch payload (~99% sparse, 4M params)
+    let n = 4_000_000usize;
+    let layout = pulse::sparse::synthetic_layout(n, 1024);
+    let mut rng = Rng::new(9);
+    let mut idx: Vec<u64> = (0..n / 100).map(|_| rng.below(n as u64)).collect();
+    idx.sort_unstable();
+    idx.dedup();
+    let vals: Vec<u16> = idx
+        .iter()
+        .map(|_| pulse::bf16::f32_to_bf16_bits((rng.normal() * 0.02) as f32))
+        .collect();
+    let mut raw = pulse::sparse::PatchFormat::CooDownscaled.encode_indices(&idx, &layout);
+    raw.extend_from_slice(pulse::util::u16_as_bytes(&vals));
+    println!("payload: {} changed values, {} pre-codec bytes\n", idx.len(), raw.len());
+
+    println!(
+        "{:<8} {:>9} {:>12} {:>12} {:>14}",
+        "codec", "ratio", "enc MB/s", "dec MB/s", "total @ link"
+    );
+    let link = SimLink::mbit(mbps);
+    let mut best: Option<(Codec, f64)> = None;
+    for codec in Codec::ALL {
+        let t = Stopwatch::start();
+        let mut comp = Vec::new();
+        let reps = 5;
+        for _ in 0..reps {
+            comp = codec.compress(&raw)?;
+        }
+        let enc_mbps = (raw.len() * reps) as f64 / 1e6 / t.secs();
+        let t = Stopwatch::start();
+        for _ in 0..reps {
+            let d = codec.decompress(&comp, raw.len())?;
+            assert_eq!(d.len(), raw.len());
+        }
+        let dec_mbps = (raw.len() * reps) as f64 / 1e6 / t.secs();
+        let ratio = raw.len() as f64 / comp.len() as f64;
+        let total = total_transfer_time(raw.len() as u64, ratio, enc_mbps, dec_mbps, link);
+        println!(
+            "{:<8} {:>8.2}x {:>12.0} {:>12.0} {:>12.3} s",
+            codec.name(),
+            ratio,
+            enc_mbps,
+            dec_mbps,
+            total
+        );
+        if best.map(|(_, t0)| total < t0).unwrap_or(true) {
+            best = Some((codec, total));
+        }
+    }
+    let (winner, t) = best.unwrap();
+    println!(
+        "\nat {} Mbit/s the end-to-end winner is {} ({:.3} s per sync)",
+        mbps,
+        winner.name(),
+        t
+    );
+    println!("paper regimes: >800 Mbit/s → lz4/snappy; 14–800 → zstd-1; <14 → zstd-3");
+    Ok(())
+}

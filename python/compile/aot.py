@@ -1,0 +1,170 @@
+"""AOT build step: lower every L2 graph to HLO **text** and write the
+manifests the Rust runtime consumes. Runs once (`make artifacts`);
+python never executes on the request path.
+
+HLO text — NOT ``lowered.compile()`` / ``.serialize()`` — is the
+interchange format: jax ≥ 0.5 emits HloModuleProtos with 64-bit
+instruction ids which the xla crate's xla_extension 0.5.1 rejects; the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md and DESIGN.md).
+
+Per model size this writes:
+    artifacts/<size>.rollout.hlo.txt   (flat, prompts, key, temp) →
+                                       (tokens, logprobs)
+    artifacts/<size>.grad.hlo.txt      (flat, tokens, adv, old_lp, mask) →
+                                       (grads, loss, clip, ratio, density)
+    artifacts/<size>.score.hlo.txt     (flat, tokens) → (logprobs, entropy)
+    artifacts/<size>.gate.hlo.txt      (theta, s) → u8 mask   [L1 kernel]
+    artifacts/<size>.adam.hlo.txt      (scalars, p, m, v, g) → (p', m', v')
+    artifacts/<size>.init.bin          f32-LE flat init (tiny/small/med)
+    artifacts/<size>.meta.json         layout + dims + oracle block
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import adam as adam_kernel
+from .kernels import gate as gate_kernel
+
+# Sizes that ship an init.bin + numeric oracle (cross-language check).
+ORACLE_SIZES = ("tiny", "small", "med")
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_size(cfg: M.ModelConfig, out_dir: str, skip_existing: bool = True,
+               with_oracle: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    n = M.num_params(cfg)
+    f32 = jnp.float32
+    i32 = jnp.int32
+    flat_spec = jax.ShapeDtypeStruct((n,), f32)
+    tok_spec = jax.ShapeDtypeStruct((cfg.batch, cfg.seq), i32)
+    prompt_spec = jax.ShapeDtypeStruct((cfg.batch, cfg.prompt_len), i32)
+    key_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    scalar_spec = jax.ShapeDtypeStruct((), f32)
+    adv_spec = jax.ShapeDtypeStruct((cfg.batch,), f32)
+    glp_spec = jax.ShapeDtypeStruct((cfg.batch, cfg.gen_len), f32)
+
+    def emit(name, fn, *specs):
+        path = os.path.join(out_dir, f"{cfg.name}.{name}.hlo.txt")
+        if skip_existing and os.path.exists(path):
+            print(f"  [skip] {path}")
+            return os.path.basename(path)
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  [ok] {path} ({len(text)} chars)")
+        return os.path.basename(path)
+
+    artifacts = {}
+    artifacts["score"] = emit(
+        "score", lambda p, t: M.score(cfg, p, t), flat_spec, tok_spec)
+    artifacts["rollout"] = emit(
+        "rollout", lambda p, pr, k, temp: M.rollout(cfg, p, pr, k, temp),
+        flat_spec, prompt_spec, key_spec, scalar_spec)
+    artifacts["grad"] = emit(
+        "grad",
+        lambda p, t, a, olp, m: M.grpo_grad(cfg, p, t, a, olp, m),
+        flat_spec, tok_spec, adv_spec, glp_spec, glp_spec)
+    # L1 kernels exported as standalone executables over this size's N.
+    artifacts["gate"] = emit(
+        "gate",
+        lambda theta, s: (gate_kernel.visibility_gate(theta, s),),
+        flat_spec, flat_spec)
+    artifacts["adam"] = emit(
+        "adam",
+        lambda sc, p, m, v, g: adam_kernel.adamw_step(
+            p, m, v, g, sc[0], sc[1], sc[2]),
+        jax.ShapeDtypeStruct((3,), f32), flat_spec, flat_spec, flat_spec,
+        flat_spec)
+
+    meta = {
+        "name": cfg.name,
+        "n_params": n,
+        "dims": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "seq": cfg.seq,
+            "prompt_len": cfg.prompt_len,
+            "gen_len": cfg.gen_len,
+            "batch": cfg.batch,
+            "d_ff": cfg.d_ff,
+        },
+        "artifacts": artifacts,
+        "tensors": [],
+        "eps_low": M.EPS_LOW,
+        "eps_high": M.EPS_HIGH,
+    }
+    off = 0
+    for name, shape in M.param_layout(cfg):
+        size = int(np.prod(shape))
+        meta["tensors"].append(
+            {"name": name, "shape": list(shape), "offset": off, "len": size})
+        off += size
+    assert off == n
+
+    if with_oracle and cfg.name in ORACLE_SIZES:
+        init_path = os.path.join(out_dir, f"{cfg.name}.init.bin")
+        flat = np.asarray(M.init_params(cfg, 0), dtype=np.float32)
+        flat.tofile(init_path)
+        meta["init"] = f"{cfg.name}.init.bin"
+        # Numeric oracle: run score on a fixed token grid, record a
+        # fingerprint the Rust integration test must reproduce via the
+        # AOT-compiled HLO.
+        toks = (np.arange(cfg.batch * cfg.seq, dtype=np.int32)
+                .reshape(cfg.batch, cfg.seq) % cfg.vocab)
+        lp, ent = M.score(cfg, jnp.asarray(flat), jnp.asarray(toks))
+        lp = np.asarray(lp, dtype=np.float64)
+        meta["oracle"] = {
+            "tokens": "arange % vocab",
+            "logprob_sum": float(lp.sum()),
+            "logprob_first8": [float(x) for x in lp.reshape(-1)[:8]],
+            "entropy_mean": float(np.asarray(ent).mean()),
+        }
+
+    meta_path = os.path.join(out_dir, f"{cfg.name}.meta.json")
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"  [ok] {meta_path}")
+    return meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="output directory (default ../artifacts)")
+    ap.add_argument("--sizes", default="tiny,small,med",
+                    help="comma-separated model sizes "
+                         f"(available: {','.join(M.SIZES)})")
+    ap.add_argument("--force", action="store_true",
+                    help="re-lower even if the artifact exists")
+    args = ap.parse_args()
+    for size in args.sizes.split(","):
+        size = size.strip()
+        if size not in M.SIZES:
+            print(f"unknown size '{size}'", file=sys.stderr)
+            sys.exit(2)
+        print(f"[aot] lowering {size} ...")
+        lower_size(M.SIZES[size], args.out, skip_existing=not args.force)
+
+
+if __name__ == "__main__":
+    main()

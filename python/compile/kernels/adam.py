@@ -1,0 +1,72 @@
+"""L1 Pallas kernel: fused AdamW step over the flat FP32 master-weight
+vector.
+
+One program instance owns a contiguous VMEM-resident chunk of
+(p, m, v, g); the whole update — EMA updates, bias correction, the
+θ-update, and decoupled weight decay — is fused into one pass so the
+master weights stream through HBM exactly once per optimizer step.
+Scalars (lr and the precomputed bias corrections) arrive as (1,)-shaped
+operands broadcast to every grid cell.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 1 << 14  # 16Ki f32 per operand per program instance (64 KiB)
+
+
+def _adam_kernel(scalars_ref, p_ref, m_ref, v_ref, g_ref, po_ref, mo_ref, vo_ref, *, beta1,
+                 beta2, eps, weight_decay):
+    lr = scalars_ref[0]
+    bc1 = scalars_ref[1]
+    bc2 = scalars_ref[2]
+    p = p_ref[...]
+    g = g_ref[...]
+    m2 = beta1 * m_ref[...] + (1.0 - beta1) * g
+    v2 = beta2 * v_ref[...] + (1.0 - beta2) * g * g
+    mhat = m2 / bc1
+    vhat = v2 / bc2
+    po_ref[...] = p - lr * mhat / (jnp.sqrt(vhat) + eps) - lr * weight_decay * p
+    mo_ref[...] = m2
+    vo_ref[...] = v2
+
+
+def adamw_step(p, m, v, g, lr, bc1, bc2, *, beta1=0.9, beta2=0.999, eps=1e-8,
+               weight_decay=0.0, interpret=True):
+    """Fused AdamW step on flat f32 vectors (length padded to BLOCK by
+    the caller or handled via a smaller trailing grid cell).
+
+    lr, bc1, bc2: scalars (traced). Returns (p', m', v').
+    """
+    n = p.shape[0]
+    block = min(BLOCK, n)
+    # pad to a multiple of block so the grid tiles exactly
+    pad = (-n) % block
+    if pad:
+        p = jnp.pad(p, (0, pad))
+        m = jnp.pad(m, (0, pad))
+        v = jnp.pad(v, (0, pad))
+        # pad gradients with zeros: a zero gradient still decays m/v but
+        # the padded outputs are discarded below.
+        g = jnp.pad(g, (0, pad))
+    npad = p.shape[0]
+    grid = (npad // block,)
+    scalars = jnp.stack([lr, bc1, bc2]).astype(jnp.float32)
+    kernel = functools.partial(_adam_kernel, beta1=beta1, beta2=beta2, eps=eps,
+                               weight_decay=weight_decay)
+    vec = pl.BlockSpec((block,), lambda i: (i,))
+    sca = pl.BlockSpec((3,), lambda i: (0,))
+    p2, m2, v2 = pl.pallas_call(
+        kernel,
+        out_shape=[jax.ShapeDtypeStruct((npad,), jnp.float32)] * 3,
+        grid=grid,
+        in_specs=[sca, vec, vec, vec, vec],
+        out_specs=[vec, vec, vec],
+        interpret=interpret,
+    )(scalars, p, m, v, g)
+    if pad:
+        p2, m2, v2 = p2[:n], m2[:n], v2[:n]
+    return p2, m2, v2

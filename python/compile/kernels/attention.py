@@ -1,0 +1,121 @@
+"""L1 Pallas kernel: fused causal attention — the forward-pass hot spot
+of the L2 transformer (DESIGN.md §Hardware-Adaptation).
+
+TPU mapping: the grid iterates (batch, head); each program instance
+holds one head's Q/K/V tile in VMEM, runs the T×T score matmul on the
+MXU, applies the causal mask and a numerically-stable softmax in f32,
+and writes the output tile. For the sequence lengths used here
+(T ≤ 64, hd ≤ 64) one (T, hd) tile per head fits VMEM comfortably
+(≤ 64·64·4 B = 16 KB per operand; VMEM budget analysis in DESIGN.md).
+
+MUST be lowered with interpret=True — real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, scale):
+    # Block shapes are (1, 1, T, hd): squeeze the unit grid dims.
+    q = q_ref[0, 0].astype(jnp.float32)  # [T, hd]
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    T = q.shape[0]
+    s = jnp.dot(q, k.T) * scale  # MXU matmul, [T, T]
+    causal = jnp.tril(jnp.ones((T, T), dtype=bool))
+    s = jnp.where(causal, s, -1e30)
+    # stable softmax in f32
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.dot(p, v)  # [T, hd]
+    o_ref[0, 0] = o.astype(o_ref.dtype)
+
+
+def _attn_fwd_call(q, k, v, scale, interpret):
+    B, H, T, hd = q.shape
+    kernel = functools.partial(_attn_kernel, scale=scale)
+    block = pl.BlockSpec((1, 1, T, hd), lambda b, h: (b, h, 0, 0))
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        grid=(B, H),
+        in_specs=[block, block, block],
+        out_specs=block,
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _attn_bwd_kernel(q_ref, k_ref, v_ref, do_ref, dq_ref, dk_ref, dv_ref, *, scale):
+    """Flash-style backward: recompute P from (q, k) in VMEM, then
+      dV = Pᵀ dO ; dP = dO Vᵀ ; dS = P ∘ (dP − rowsum(dP ∘ P))
+      dQ = scale · dS K ; dK = scale · dSᵀ Q
+    """
+    q = q_ref[0, 0].astype(jnp.float32)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    do = do_ref[0, 0].astype(jnp.float32)
+    T = q.shape[0]
+    s = jnp.dot(q, k.T) * scale
+    causal = jnp.tril(jnp.ones((T, T), dtype=bool))
+    s = jnp.where(causal, s, -1e30)
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    dv = jnp.dot(p.T, do)
+    dp = jnp.dot(do, v.T)
+    ds = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    dq = jnp.dot(ds, k) * scale
+    dk = jnp.dot(ds.T, q) * scale
+    dq_ref[0, 0] = dq.astype(dq_ref.dtype)
+    dk_ref[0, 0] = dk.astype(dk_ref.dtype)
+    dv_ref[0, 0] = dv.astype(dv_ref.dtype)
+
+
+def _attn_bwd_call(q, k, v, do, scale, interpret):
+    B, H, T, hd = q.shape
+    kernel = functools.partial(_attn_bwd_kernel, scale=scale)
+    block = pl.BlockSpec((1, 1, T, hd), lambda b, h: (b, h, 0, 0))
+    shapes = [jax.ShapeDtypeStruct(q.shape, q.dtype)] * 3
+    return pl.pallas_call(
+        kernel,
+        out_shape=shapes,
+        grid=(B, H),
+        in_specs=[block, block, block, block],
+        out_specs=[block, block, block],
+        interpret=interpret,
+    )(q, k, v, do)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def attention(q, k, v, scale=None, interpret=True):
+    """Causal attention via pallas_call. q/k/v: [B, H, T, hd].
+
+    Differentiable: forward and backward are both Pallas kernels
+    (pallas_call has no built-in autodiff, so we provide a custom VJP).
+    """
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    return _attn_fwd_call(q, k, v, scale, interpret)
+
+
+def _attention_fwd(q, k, v, scale, interpret):
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    o = _attn_fwd_call(q, k, v, scale, interpret)
+    return o, (q, k, v)
+
+
+def _attention_bwd(scale, interpret, res, do):
+    q, k, v = res
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    dq, dk, dv = _attn_bwd_call(q, k, v, do, scale, interpret)
+    return dq, dk, dv
+
+
+attention.defvjp(_attention_fwd, _attention_bwd)

@@ -1,0 +1,43 @@
+"""L1 Pallas kernel: the compute-visibility gate (paper Eq. 1).
+
+Elementwise over the flat parameter vector: emit 1 where
+cast_BF16(θ) ≠ cast_BF16(θ − s). This is the paper's central operation;
+the Rust coordinator has a native implementation on its hot path, and
+this kernel is the AOT-compiled equivalent used for the L1↔L3 ablation
+(bench_gate) and as part of the exported artifact set.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 1 << 15
+
+
+def _gate_kernel(theta_ref, s_ref, mask_ref):
+    theta = theta_ref[...]
+    s = s_ref[...]
+    before = theta.astype(jnp.bfloat16)
+    after = (theta - s).astype(jnp.bfloat16)
+    mask_ref[...] = (before != after).astype(jnp.uint8)
+
+
+def visibility_gate(theta, s, interpret=True):
+    """BF16 compute-visibility gate over flat f32 vectors → u8 mask."""
+    n = theta.shape[0]
+    block = min(BLOCK, n)
+    pad = (-n) % block
+    if pad:
+        theta = jnp.pad(theta, (0, pad))
+        s = jnp.pad(s, (0, pad))
+    npad = theta.shape[0]
+    vec = pl.BlockSpec((block,), lambda i: (i,))
+    mask = pl.pallas_call(
+        _gate_kernel,
+        out_shape=jax.ShapeDtypeStruct((npad,), jnp.uint8),
+        grid=(npad // block,),
+        in_specs=[vec, vec],
+        out_specs=vec,
+        interpret=interpret,
+    )(theta, s)
+    return mask[:n] if pad else mask

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel (the CORE correctness
+signal: pytest asserts kernel == ref under hypothesis-driven sweeps).
+
+These references are deliberately written with plain jnp ops, no pallas,
+so a bug in the kernels cannot hide in shared code.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, scale=None):
+    """Causal multi-head attention.
+
+    q, k, v: [B, H, T, hd] (any float dtype). Returns [B, H, T, hd] in
+    q.dtype; softmax accumulates in f32.
+    """
+    B, H, T, hd = q.shape
+    if scale is None:
+        scale = 1.0 / (hd ** 0.5)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    mask = jnp.tril(jnp.ones((T, T), dtype=bool))
+    s = jnp.where(mask[None, None, :, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def adamw_ref(p, m, v, g, lr, beta1, beta2, eps, weight_decay, bc1, bc2):
+    """One fused AdamW step (bias corrections bc1 = 1-beta1^t etc. are
+    precomputed scalars, matching the kernel's interface)."""
+    m2 = beta1 * m + (1.0 - beta1) * g
+    v2 = beta2 * v + (1.0 - beta2) * g * g
+    mhat = m2 / bc1
+    vhat = v2 / bc2
+    p2 = p - lr * mhat / (jnp.sqrt(vhat) + eps) - lr * weight_decay * p
+    return p2, m2, v2
+
+
+def gate_ref(theta, s):
+    """Compute-visibility gate (paper Eq. 1), D = BF16: 1 where the BF16
+    view of theta changes after applying update s (new value theta - s).
+    """
+    before = theta.astype(jnp.bfloat16)
+    after = (theta - s).astype(jnp.bfloat16)
+    return (before != after).astype(jnp.uint8)

@@ -1,0 +1,273 @@
+"""L2: the JAX model — a GPT-style transformer LM plus the three graphs
+the Rust coordinator executes via PJRT:
+
+* ``score(params, tokens)``         → per-completion-token logprobs
+* ``rollout(params, prompts, key, temperature)`` → sampled tokens + logprobs
+* ``grpo_grad(params, tokens, advantages, old_logprobs, mask)``
+                                    → flat grads + loss diagnostics
+
+All graphs take the parameters as ONE flat f32 vector (the layout is
+described by the manifest emitted by aot.py). The forward pass runs on
+the BF16 cast of the parameters — exactly the compute-visibility
+criterion of the paper: an FP32 master update matters iff it changes
+this cast. The attention hot spot is the L1 Pallas kernel
+(kernels/attention.py); set use_pallas=False to get the pure-jnp path
+used for differential testing.
+"""
+
+import functools
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention as attn_kernel
+from .kernels import ref as kref
+
+# GRPO asymmetric clipping (DAPO): paper Table 8.
+EPS_LOW = 0.2
+EPS_HIGH = 0.28
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    seq: int          # T = prompt_len + gen_len
+    prompt_len: int
+    gen_len: int
+    batch: int        # rollout/grad batch (sequences)
+    d_ff: int = 0     # 0 → 4 * d_model
+
+    def __post_init__(self):
+        if self.d_ff == 0:
+            object.__setattr__(self, "d_ff", 4 * self.d_model)
+        assert self.seq == self.prompt_len + self.gen_len
+        assert self.d_model % self.n_heads == 0
+
+
+# The model zoo standing in for the paper's Qwen/Llama/Gemma suite
+# (DESIGN.md §2). Parameter counts: tiny≈0.12M, small≈0.85M, med≈4.8M,
+# large≈25.4M, xl≈113M.
+SIZES = {
+    "tiny": ModelConfig("tiny", 64, 64, 2, 2, 24, 16, 8, 32),
+    "small": ModelConfig("small", 64, 128, 4, 4, 24, 16, 8, 32),
+    "med": ModelConfig("med", 64, 256, 6, 8, 24, 16, 8, 32),
+    "large": ModelConfig("large", 64, 512, 8, 8, 24, 16, 8, 16),
+    "xl": ModelConfig("xl", 64, 768, 16, 12, 24, 16, 8, 16),
+}
+
+
+def param_layout(cfg: ModelConfig):
+    """Deterministic (name, shape) list defining the flat vector layout.
+    The Rust runtime reads the same layout from the manifest."""
+    specs = [
+        ("embed", (cfg.vocab, cfg.d_model)),
+        ("pos", (cfg.seq, cfg.d_model)),
+    ]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        specs += [
+            (p + "ln1_g", (cfg.d_model,)),
+            (p + "ln1_b", (cfg.d_model,)),
+            (p + "wq", (cfg.d_model, cfg.d_model)),
+            (p + "wk", (cfg.d_model, cfg.d_model)),
+            (p + "wv", (cfg.d_model, cfg.d_model)),
+            (p + "wo", (cfg.d_model, cfg.d_model)),
+            (p + "ln2_g", (cfg.d_model,)),
+            (p + "ln2_b", (cfg.d_model,)),
+            (p + "w1", (cfg.d_model, cfg.d_ff)),
+            (p + "b1", (cfg.d_ff,)),
+            (p + "w2", (cfg.d_ff, cfg.d_model)),
+            (p + "b2", (cfg.d_model,)),
+        ]
+    specs += [("lnf_g", (cfg.d_model,)), ("lnf_b", (cfg.d_model,))]
+    return specs
+
+
+def num_params(cfg: ModelConfig) -> int:
+    return sum(int(jnp.prod(jnp.array(s))) for _, s in param_layout(cfg))
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> jnp.ndarray:
+    """Magnitude-calibrated init (DESIGN.md: matches the LLM-like |w|
+    scale of paper Table 2): scaled-normal matrices, ones/zeros LNs."""
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for name, shape in param_layout(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("_g",)):
+            w = jnp.ones(shape, jnp.float32)
+        elif name.endswith(("_b", "b1", "b2")):
+            w = jnp.zeros(shape, jnp.float32)
+        elif name == "embed" or name == "pos":
+            w = 0.02 * jax.random.normal(sub, shape, jnp.float32)
+        else:
+            fan_in = shape[0]
+            w = jax.random.normal(sub, shape, jnp.float32) / jnp.sqrt(fan_in)
+        chunks.append(w.reshape(-1))
+    return jnp.concatenate(chunks)
+
+
+def unflatten(cfg: ModelConfig, flat: jnp.ndarray, dtype=jnp.bfloat16):
+    """Slice the flat vector into the named parameter dict, cast to the
+    compute dtype (the BF16 forward-pass view of the paper)."""
+    params = {}
+    off = 0
+    for name, shape in param_layout(cfg):
+        n = 1
+        for d in shape:
+            n *= d
+        params[name] = flat[off:off + n].reshape(shape).astype(dtype)
+        off += n
+    return params
+
+
+def _layernorm(x, g, b):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) / jnp.sqrt(var + 1e-5)
+    return (y * g.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def forward_logits(cfg: ModelConfig, params, tokens, use_pallas=True):
+    """Transformer forward. tokens: [B, T] int32 → logits [B, T, V] f32."""
+    B, T = tokens.shape
+    x = params["embed"][tokens] + params["pos"][None, :T, :]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        h = _layernorm(x, params[p + "ln1_g"], params[p + "ln1_b"])
+        q = h @ params[p + "wq"]
+        k = h @ params[p + "wk"]
+        v = h @ params[p + "wv"]
+        hd = cfg.d_model // cfg.n_heads
+
+        def split(z):
+            return z.reshape(B, T, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+
+        q, k, v = split(q), split(k), split(v)
+        if use_pallas:
+            o = attn_kernel.attention(q, k, v)
+        else:
+            o = kref.attention_ref(q, k, v)
+        o = o.transpose(0, 2, 1, 3).reshape(B, T, cfg.d_model)
+        x = x + o @ params[p + "wo"]
+        h = _layernorm(x, params[p + "ln2_g"], params[p + "ln2_b"])
+        h = jax.nn.gelu(h @ params[p + "w1"] + params[p + "b1"])
+        x = x + h @ params[p + "w2"] + params[p + "b2"]
+    x = _layernorm(x, params["lnf_g"], params["lnf_b"])
+    # tied unembedding; logits in f32 for a stable softmax
+    logits = jnp.einsum("btd,vd->btv", x.astype(jnp.float32),
+                        params["embed"].astype(jnp.float32))
+    return logits
+
+
+def completion_logprobs(cfg: ModelConfig, logits, tokens):
+    """Logprob of each generated token: positions P..T-1 predicted from
+    P-1..T-2. Returns [B, G] f32."""
+    P = cfg.prompt_len
+    pred = logits[:, P - 1:cfg.seq - 1, :]          # [B, G, V]
+    lp = jax.nn.log_softmax(pred, axis=-1)
+    chosen = tokens[:, P:cfg.seq]                   # [B, G]
+    return jnp.take_along_axis(lp, chosen[..., None], axis=-1)[..., 0]
+
+
+def score(cfg: ModelConfig, flat_params, tokens, use_pallas=True):
+    """(flat_params, tokens[B,T]) → (logprobs[B,G], entropy[B,G])."""
+    params = unflatten(cfg, flat_params)
+    logits = forward_logits(cfg, params, tokens, use_pallas)
+    lp = completion_logprobs(cfg, logits, tokens)
+    pred = logits[:, cfg.prompt_len - 1:cfg.seq - 1, :]
+    logp_all = jax.nn.log_softmax(pred, axis=-1)
+    entropy = -jnp.sum(jnp.exp(logp_all) * logp_all, axis=-1)
+    return lp, entropy
+
+
+def rollout(cfg: ModelConfig, flat_params, prompts, key, temperature,
+            use_pallas=True):
+    """Autoregressive generation of gen_len tokens.
+
+    prompts: [B, P] int32; key: uint32[2]; temperature: f32 scalar
+    (exactly 0 → greedy, via the Gumbel-max trick: argmax(logits +
+    T·gumbel) is greedy at T=0 and categorical sampling at T=1).
+    Returns (tokens [B, T], logprobs [B, G] of the chosen tokens under
+    the current policy).
+    """
+    B, P = prompts.shape
+    assert P == cfg.prompt_len
+    params = unflatten(cfg, flat_params)
+    tokens0 = jnp.concatenate(
+        [prompts, jnp.zeros((B, cfg.gen_len), dtype=prompts.dtype)], axis=1)
+
+    def step(tokens, g):
+        logits = forward_logits(cfg, params, tokens, use_pallas)
+        pos = P + g - 1
+        next_logits = jax.lax.dynamic_slice_in_dim(logits, pos, 1, axis=1)[:, 0, :]
+        sub = jax.random.fold_in(jax.random.wrap_key_data(key, impl="threefry2x32"), g)
+        gumbel = jax.random.gumbel(sub, next_logits.shape, jnp.float32)
+        sample = jnp.argmax(next_logits + temperature * gumbel, axis=-1)
+        lp = jnp.take_along_axis(jax.nn.log_softmax(next_logits, axis=-1),
+                                 sample[:, None], axis=-1)[:, 0]
+        tokens = jax.lax.dynamic_update_slice_in_dim(
+            tokens, sample[:, None].astype(tokens.dtype), P + g, axis=1)
+        return tokens, lp
+
+    tokens, lps = jax.lax.scan(step, tokens0, jnp.arange(cfg.gen_len))
+    return tokens, lps.T  # [B, T], [B, G]
+
+
+def grpo_loss(cfg: ModelConfig, flat_params, tokens, advantages, old_logprobs,
+              mask, use_pallas=True):
+    """GRPO clipped-surrogate loss (paper §H.1, KL term omitted
+    following DAPO). mask: [B, G] f32, 1 for real completion tokens."""
+    params = unflatten(cfg, flat_params)
+    logits = forward_logits(cfg, params, tokens, use_pallas)
+    lp = completion_logprobs(cfg, logits, tokens)          # [B, G]
+    ratio = jnp.exp(lp - old_logprobs)
+    adv = advantages[:, None]
+    unclipped = ratio * adv
+    clipped = jnp.clip(ratio, 1.0 - EPS_LOW, 1.0 + EPS_HIGH) * adv
+    obj = jnp.minimum(unclipped, clipped) * mask
+    denom = jnp.maximum(jnp.sum(mask, axis=1), 1.0)
+    per_seq = jnp.sum(obj, axis=1) / denom
+    loss = -jnp.mean(per_seq)
+    clip_frac = jnp.sum((unclipped > clipped).astype(jnp.float32) * mask) / jnp.maximum(
+        jnp.sum(mask), 1.0)
+    mean_ratio = jnp.sum(ratio * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss, (clip_frac, mean_ratio)
+
+
+def grpo_grad(cfg: ModelConfig, flat_params, tokens, advantages, old_logprobs,
+              mask, use_pallas=True):
+    """Returns (grads [N] f32, loss, clip_frac, mean_ratio, grad_density)."""
+    (loss, (clip_frac, mean_ratio)), grads = jax.value_and_grad(
+        lambda p: grpo_loss(cfg, p, tokens, advantages, old_logprobs, mask,
+                            use_pallas), has_aux=True)(flat_params)
+    grad_density = jnp.mean((grads != 0.0).astype(jnp.float32))
+    return grads, loss, clip_frac, mean_ratio, grad_density
+
+
+def make_jitted(cfg: ModelConfig, use_pallas=True):
+    """Jitted entry points with the exact signatures aot.py exports."""
+    n = num_params(cfg)
+
+    def _score(flat, tokens):
+        return score(cfg, flat, tokens, use_pallas)
+
+    def _rollout(flat, prompts, key, temperature):
+        return rollout(cfg, flat, prompts, key, temperature, use_pallas)
+
+    def _grad(flat, tokens, advantages, old_logprobs, mask):
+        return grpo_grad(cfg, flat, tokens, advantages, old_logprobs, mask,
+                         use_pallas)
+
+    return {
+        "n_params": n,
+        "score": jax.jit(_score),
+        "rollout": jax.jit(_rollout),
+        "grad": jax.jit(_grad),
+    }

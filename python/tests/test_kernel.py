@@ -1,0 +1,149 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle in
+ref.py, swept over shapes/dtypes with hypothesis."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import adam as adam_k
+from compile.kernels import attention as attn_k
+from compile.kernels import gate as gate_k
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def rand(key, shape, dtype, scale=1.0):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------- attention
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 4),
+    h=st.integers(1, 4),
+    t=st.sampled_from([1, 2, 3, 8, 17, 24, 33]),
+    hd=st.sampled_from([4, 8, 16, 32]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref(b, h, t, hd, dtype, seed):
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = rand(kq, (b, h, t, hd), dtype)
+    k = rand(kk, (b, h, t, hd), dtype)
+    v = rand(kv, (b, h, t, hd), dtype)
+    got = attn_k.attention(q, k, v)
+    want = ref.attention_ref(q, k, v)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol)
+
+
+def test_attention_is_causal():
+    # Changing future K/V must not change past outputs.
+    key = jax.random.PRNGKey(0)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = rand(kq, (1, 2, 16, 8), jnp.float32)
+    k = rand(kk, (1, 2, 16, 8), jnp.float32)
+    v = rand(kv, (1, 2, 16, 8), jnp.float32)
+    o1 = attn_k.attention(q, k, v)
+    k2 = k.at[:, :, 10:, :].set(99.0)
+    v2 = v.at[:, :, 10:, :].set(-99.0)
+    o2 = attn_k.attention(q, k2, v2)
+    np.testing.assert_allclose(
+        np.asarray(o1[:, :, :10]), np.asarray(o2[:, :, :10]), rtol=1e-6)
+    assert not np.allclose(np.asarray(o1[:, :, 10:]), np.asarray(o2[:, :, 10:]))
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 2),
+    t=st.sampled_from([4, 9, 16]),
+    hd=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_gradients_match_ref(b, t, hd, seed):
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = rand(kq, (b, 2, t, hd), jnp.float32)
+    k = rand(kk, (b, 2, t, hd), jnp.float32)
+    v = rand(kv, (b, 2, t, hd), jnp.float32)
+
+    def loss_kernel(q, k, v):
+        return jnp.sum(jnp.sin(attn_k.attention(q, k, v)))
+
+    def loss_ref(q, k, v):
+        return jnp.sum(jnp.sin(ref.attention_ref(q, k, v)))
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), rtol=1e-3,
+                                   atol=1e-4)
+
+
+# --------------------------------------------------------------------- adam
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([1, 7, 1000, 1 << 14, (1 << 14) + 3, 100_000]),
+    t=st.integers(1, 50),
+    wd=st.sampled_from([0.0, 0.1]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_adam_kernel_matches_ref(n, t, wd, seed):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    p = rand(ks[0], (n,), jnp.float32, 0.02)
+    m = rand(ks[1], (n,), jnp.float32, 1e-3)
+    v = jnp.abs(rand(ks[2], (n,), jnp.float32, 1e-6))
+    g = rand(ks[3], (n,), jnp.float32, 0.1)
+    lr, b1, b2, eps = 3e-6, 0.9, 0.999, 1e-8
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+    got = adam_k.adamw_step(p, m, v, g, jnp.float32(lr), jnp.float32(bc1),
+                            jnp.float32(bc2), weight_decay=wd)
+    want = ref.adamw_ref(p, m, v, g, lr, b1, b2, eps, wd, bc1, bc2)
+    for a, b_ in zip(got, want):
+        # fusion/FMA ordering differs between the pallas-interpret and
+        # jnp paths; allow a few ULPs.
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), rtol=2e-5,
+                                   atol=1e-9)
+
+
+# --------------------------------------------------------------------- gate
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([1, 63, 1 << 15, (1 << 15) + 11, 200_000]),
+    scale=st.sampled_from([1e-8, 1e-6, 1e-4, 1e-2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gate_kernel_matches_ref(n, scale, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    theta = rand(k1, (n,), jnp.float32, 0.02)
+    s = rand(k2, (n,), jnp.float32, scale)
+    got = gate_k.visibility_gate(theta, s)
+    want = ref.gate_ref(theta, s)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_gate_zero_update_invisible():
+    theta = jnp.full((1000,), 0.5, jnp.float32)
+    assert int(gate_k.visibility_gate(theta, jnp.zeros_like(theta)).sum()) == 0
+
+
+def test_gate_sparsity_tracks_learning_rate():
+    """Fig. 15 in miniature: larger updates → lower sparsity."""
+    key = jax.random.PRNGKey(1)
+    theta = 0.02 * jax.random.normal(key, (50_000,), jnp.float32)
+    sign = jnp.sign(jax.random.normal(jax.random.PRNGKey(2), theta.shape))
+    sp = []
+    for eta in [3e-7, 3e-6, 3e-5, 3e-4]:
+        mask = gate_k.visibility_gate(theta, sign * eta)
+        sp.append(1.0 - float(mask.mean()))
+    assert sp[0] > sp[1] > sp[2] > sp[3]
+    assert sp[0] > 0.95 and sp[3] < 0.35, sp

@@ -1,0 +1,38 @@
+//! Codec throughput/ratio micro-bench (feeds Table 5 sanity + §Perf).
+use pulse::codec::Codec;
+use pulse::util::bench::Bench;
+use pulse::util::rng::Rng;
+
+fn patch_like_payload(n_values: usize) -> Vec<u8> {
+    // realistic pre-codec patch stream: downscaled COO indices + bf16 values
+    let universe = n_values * 100;
+    let layout = pulse::sparse::synthetic_layout(universe, 1024);
+    let mut rng = Rng::new(5);
+    let mut idx: Vec<u64> = (0..n_values).map(|_| rng.below(universe as u64)).collect();
+    idx.sort_unstable();
+    idx.dedup();
+    let vals: Vec<u16> = idx
+        .iter()
+        .map(|_| pulse::bf16::f32_to_bf16_bits((rng.normal() * 0.02) as f32))
+        .collect();
+    let mut raw = pulse::sparse::PatchFormat::CooDownscaled.encode_indices(&idx, &layout);
+    raw.extend_from_slice(pulse::util::u16_as_bytes(&vals));
+    raw
+}
+
+fn main() {
+    let mut b = Bench::new();
+    let payload = patch_like_payload(200_000);
+    println!("payload: {} bytes", payload.len());
+    for codec in Codec::ALL {
+        let comp = codec.compress(&payload).unwrap();
+        println!("{:<8} ratio {:.2}x", codec.name(), payload.len() as f64 / comp.len() as f64);
+        b.run_bytes(&format!("compress/{}", codec.name()), payload.len() as u64, || {
+            std::hint::black_box(codec.compress(&payload).unwrap());
+        });
+        b.run_bytes(&format!("decompress/{}", codec.name()), payload.len() as u64, || {
+            std::hint::black_box(codec.decompress(&comp, payload.len()).unwrap());
+        });
+    }
+    b.write_csv(&pulse::coordinator::metrics::results_dir().join("bench_codec.csv")).unwrap();
+}

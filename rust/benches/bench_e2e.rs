@@ -1,0 +1,56 @@
+//! End-to-end train-step bench (§Perf): one full GRPO step (rollout +
+//! reward + advantages + grad + AdamW + sparsity meter + PULSESync
+//! encode) on the tiny model. Requires artifacts.
+use pulse::coordinator;
+use pulse::optim::{AdamConfig, AdamW};
+use pulse::rl::grpo::{self, GrpoConfig};
+use pulse::rl::tasks::MathTask;
+use pulse::runtime::{artifacts_dir, ModelRuntime};
+use pulse::sparse::{self, container};
+use pulse::util::bench::Bench;
+use pulse::util::rng::Rng;
+
+fn main() {
+    let rt = match ModelRuntime::load(&artifacts_dir(), "tiny", &["rollout", "grad"]) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping bench_e2e (run `make artifacts`): {e:#}");
+            return;
+        }
+    };
+    let task = MathTask::default();
+    let cfg = GrpoConfig::default();
+    let mut master = coordinator::init_master(&rt, 0).unwrap();
+    let mut opt = AdamW::new(master.len(), AdamConfig::default());
+    let mut rng = Rng::new(0);
+    let mut prev = Vec::new();
+    pulse::bf16::cast_slice_par(&master, &mut prev);
+    let mut b = Bench::new();
+    b.run("e2e/full_train_step/tiny", || {
+        let policy: Vec<f32> =
+            master.iter().map(|&x| pulse::bf16::bf16_round(x)).collect();
+        let batch = grpo::generate_batch(&rt, &policy, &task, cfg, &mut rng).unwrap();
+        let out = rt
+            .grad(&master, &batch.tokens, &batch.advantages, &batch.old_logprobs, &batch.mask)
+            .unwrap();
+        opt.step(&mut master, &out.grads);
+        // PULSESync encode of the new view
+        let mut view = Vec::new();
+        pulse::bf16::cast_slice_par(&master, &mut view);
+        let idx = sparse::diff_bf16(&prev, &view);
+        let vals = sparse::gather_u16(&view, &idx);
+        let patch = container::Patch {
+            step: 1,
+            base_step: 0,
+            total_params: view.len() as u64,
+            indices: idx,
+            values: container::Values::Bf16(vals),
+            result_hash: String::new(),
+        };
+        let obj =
+            container::encode(&patch, &rt.manifest.layout, Default::default()).unwrap();
+        prev = view;
+        std::hint::black_box(obj);
+    });
+    b.write_csv(&pulse::coordinator::metrics::results_dir().join("bench_e2e.csv")).unwrap();
+}

@@ -1,0 +1,28 @@
+//! Compute-visibility gate micro-bench (§Perf L3): the native gate vs
+//! the error-feedback round, per dtype.
+use pulse::bf16::Dtype;
+use pulse::gate;
+use pulse::util::bench::Bench;
+use pulse::util::rng::Rng;
+
+fn main() {
+    let n = 8_000_000usize;
+    let mut rng = Rng::new(3);
+    let theta: Vec<f32> = (0..n).map(|_| (rng.normal() * 0.02) as f32).collect();
+    let s: Vec<f32> = (0..n).map(|_| (rng.normal() * 3e-6) as f32).collect();
+    let bytes = (n * 4) as u64;
+    let mut b = Bench::new();
+    for d in [Dtype::Bf16, Dtype::Fp8E4M3, Dtype::Mxfp4] {
+        b.run_bytes(&format!("gate/{}/8M", d.name()), bytes, || {
+            std::hint::black_box(gate::gate(d, &theta, &s));
+        });
+    }
+    b.run_bytes("gate/count_only/8M", bytes, || {
+        std::hint::black_box(gate::count_visible_bf16(&theta, &s));
+    });
+    let mut ef = gate::feedback::ErrorFeedback::new(n, Dtype::Bf16);
+    b.run_bytes("error_feedback/round/8M", bytes, || {
+        std::hint::black_box(ef.gate_and_update(&theta, &s));
+    });
+    b.write_csv(&pulse::coordinator::metrics::results_dir().join("bench_gate.csv")).unwrap();
+}

@@ -1,0 +1,34 @@
+//! Optimizer micro-bench (§Perf L3): fused AdamW and the Nesterov outer
+//! step over large flat vectors.
+use pulse::optim::{AdamConfig, AdamW, Nesterov};
+use pulse::util::bench::Bench;
+use pulse::util::rng::Rng;
+
+fn main() {
+    let n = 8_000_000usize;
+    let mut rng = Rng::new(4);
+    let mut params: Vec<f32> = (0..n).map(|_| (rng.normal() * 0.02) as f32).collect();
+    let grads: Vec<f32> = (0..n).map(|_| (rng.normal() * 0.1) as f32).collect();
+    let bytes = (n * 4) as u64;
+    let mut b = Bench::new();
+    let mut opt = AdamW::new(n, AdamConfig::default());
+    b.run_bytes("adamw/step/8M", bytes, || {
+        std::hint::black_box(opt.step(&mut params, &grads));
+    });
+    let mut opt_noclip =
+        AdamW::new(n, AdamConfig { clip_global_norm: 0.0, ..Default::default() });
+    b.run_bytes("adamw/step_noclip/8M", bytes, || {
+        std::hint::black_box(opt_noclip.step(&mut params, &grads));
+    });
+    let mut outer = Nesterov::new(n);
+    b.run_bytes("nesterov/step/8M", bytes, || {
+        outer.step(&mut params, &grads);
+        std::hint::black_box(&params);
+    });
+    let mut view = Vec::new();
+    b.run_bytes("bf16_cast/8M", bytes, || {
+        pulse::bf16::cast_slice_par(&params, &mut view);
+        std::hint::black_box(&view);
+    });
+    b.write_csv(&pulse::coordinator::metrics::results_dir().join("bench_optim.csv")).unwrap();
+}

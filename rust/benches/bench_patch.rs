@@ -1,0 +1,57 @@
+//! PULSESync patch pipeline micro-bench: diff, gather, encode, decode,
+//! apply — the trainer/worker hot path (§Perf L3).
+use pulse::sparse::{self, container, PatchFormat};
+use pulse::util::bench::Bench;
+use pulse::util::rng::Rng;
+
+fn main() {
+    let n = 4_000_000usize;
+    let layout = sparse::synthetic_layout(n, 1024);
+    let mut rng = Rng::new(7);
+    let old: Vec<u16> = (0..n)
+        .map(|_| pulse::bf16::f32_to_bf16_bits((rng.normal() * 0.02) as f32))
+        .collect();
+    let mut new = old.clone();
+    for _ in 0..n / 100 {
+        let i = rng.below(n as u64) as usize;
+        new[i] = pulse::bf16::f32_to_bf16_bits((rng.normal() * 0.02) as f32);
+    }
+    let mut b = Bench::new();
+    let bytes = (n * 2) as u64;
+    b.run_bytes("diff_bf16/4M (1% changed)", bytes, || {
+        std::hint::black_box(sparse::diff_bf16(&old, &new));
+    });
+    let idx = sparse::diff_bf16(&old, &new);
+    let vals = sparse::gather_u16(&new, &idx);
+    println!("nnz = {}", idx.len());
+    for fmt in [PatchFormat::CooDownscaled, PatchFormat::FlatVarint] {
+        b.run(&format!("encode_indices/{}", fmt.name()), || {
+            std::hint::black_box(fmt.encode_indices(&idx, &layout));
+        });
+    }
+    let patch = container::Patch {
+        step: 1,
+        base_step: 0,
+        total_params: n as u64,
+        indices: idx.clone(),
+        values: container::Values::Bf16(vals.clone()),
+        result_hash: pulse::util::sha256_hex(pulse::util::u16_as_bytes(&new)),
+    };
+    b.run_bytes("container_encode/zstd1", bytes, || {
+        std::hint::black_box(container::encode(&patch, &layout, Default::default()).unwrap());
+    });
+    let obj = container::encode(&patch, &layout, Default::default()).unwrap();
+    println!("container: {} bytes ({:.0}x vs full)", obj.len(), bytes as f64 / obj.len() as f64);
+    b.run_bytes("container_decode/zstd1", bytes, || {
+        std::hint::black_box(container::decode(&obj, &layout).unwrap());
+    });
+    let mut target = old.clone();
+    b.run("apply_patch/40k values", || {
+        sparse::apply_u16(&mut target, &idx, &vals);
+        std::hint::black_box(&target);
+    });
+    b.run_bytes("sha256/8MB ckpt", bytes, || {
+        std::hint::black_box(pulse::util::sha256_hex(pulse::util::u16_as_bytes(&old)));
+    });
+    b.write_csv(&pulse::coordinator::metrics::results_dir().join("bench_patch.csv")).unwrap();
+}

@@ -1,0 +1,33 @@
+//! PJRT step latency (§Perf L2/L3 boundary): rollout / grad / score on
+//! the tiny model, including literal marshalling. Requires artifacts.
+use pulse::runtime::{artifacts_dir, ModelRuntime};
+use pulse::util::bench::Bench;
+
+fn main() {
+    let rt = match ModelRuntime::load(&artifacts_dir(), "tiny", &["rollout", "grad", "score"]) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping bench_runtime (run `make artifacts`): {e:#}");
+            return;
+        }
+    };
+    let d = rt.manifest.dims.clone();
+    let flat = rt.load_init(&artifacts_dir()).unwrap();
+    let tokens: Vec<i32> = (0..d.batch * d.seq).map(|i| (i % d.vocab) as i32).collect();
+    let prompts: Vec<i32> =
+        (0..d.batch * d.prompt_len).map(|i| (i % d.vocab) as i32).collect();
+    let mut b = Bench::new();
+    b.run("runtime/score/tiny", || {
+        std::hint::black_box(rt.score(&flat, &tokens).unwrap());
+    });
+    b.run("runtime/rollout/tiny (8 gen steps)", || {
+        std::hint::black_box(rt.rollout(&flat, &prompts, [1, 2], 1.0).unwrap());
+    });
+    let (old_lp, _) = rt.score(&flat, &tokens).unwrap();
+    let adv: Vec<f32> = (0..d.batch).map(|i| if i % 2 == 0 { 0.5 } else { -0.5 }).collect();
+    let mask = vec![1.0f32; d.batch * d.gen_len];
+    b.run("runtime/grad/tiny", || {
+        std::hint::black_box(rt.grad(&flat, &tokens, &adv, &old_lp, &mask).unwrap());
+    });
+    b.write_csv(&pulse::coordinator::metrics::results_dir().join("bench_runtime.csv")).unwrap();
+}

@@ -1,0 +1,180 @@
+//! Closed-form analysis pieces of the paper: Adam update bounds
+//! (Table 1, Fig. 9), the BF16 absorption geometry (Fig. 3), the
+//! utilization model (Fig. 1 — see also [`crate::net`]), and the
+//! lower-precision projection (Table 6, §D).
+
+use crate::bf16::Dtype;
+
+/// Adam moments simulator for the adversarial-ρ experiment (Fig. 9):
+/// feeds an arbitrary gradient sequence through Adam's EMAs and records
+/// ρ_t = |m̂_t| / √v̂_t.
+pub struct RhoTrace {
+    pub beta1: f64,
+    pub beta2: f64,
+    m: f64,
+    v: f64,
+    t: u64,
+}
+
+impl RhoTrace {
+    pub fn new(beta1: f64, beta2: f64) -> RhoTrace {
+        RhoTrace { beta1, beta2, m: 0.0, v: 0.0, t: 0 }
+    }
+
+    /// Push one gradient; returns ρ_t.
+    pub fn push(&mut self, g: f64) -> f64 {
+        self.t += 1;
+        self.m = self.beta1 * self.m + (1.0 - self.beta1) * g;
+        self.v = self.beta2 * self.v + (1.0 - self.beta2) * g * g;
+        let mhat = self.m / (1.0 - self.beta1.powi(self.t as i32));
+        let vhat = self.v / (1.0 - self.beta2.powi(self.t as i32));
+        if vhat <= 0.0 {
+            0.0
+        } else {
+            mhat.abs() / vhat.sqrt()
+        }
+    }
+}
+
+/// The paper's adversarial sequence (§A.4): `quiet` near-zero gradients
+/// followed by `loud` constant gradients of magnitude 1. Returns the
+/// ρ trace over the loud phase.
+pub fn adversarial_rho(beta1: f64, beta2: f64, quiet: usize, loud: usize) -> Vec<f64> {
+    let mut tr = RhoTrace::new(beta1, beta2);
+    for _ in 0..quiet {
+        tr.push(1e-20);
+    }
+    (0..loud).map(|_| tr.push(1.0)).collect()
+}
+
+/// Critical weight magnitude |w|_crit = η/τ_D (paper Eq. 20): weights
+/// above this scale absorb an effective-bound (≈η) one-step update.
+pub fn critical_weight(eta: f64, dtype: Dtype) -> f64 {
+    eta / dtype.tau()
+}
+
+/// Worst-case critical scale 256·η·√((1−β1)/(1−β2)) (Cor. A.5, BF16).
+pub fn critical_weight_worstcase(eta: f64, beta1: f64, beta2: f64) -> f64 {
+    256.0 * eta * ((1.0 - beta1) / (1.0 - beta2)).sqrt()
+}
+
+/// Weight-magnitude statistics over a parameter vector (Table 2).
+#[derive(Debug, Clone, Default)]
+pub struct WeightStats {
+    pub median: f64,
+    pub mean: f64,
+    pub p5: f64,
+    pub p95: f64,
+    /// Fraction with |w| > crit.
+    pub frac_above_crit: f64,
+    pub crit: f64,
+}
+
+pub fn weight_stats(weights: &[f32], crit: f64) -> WeightStats {
+    let mags: Vec<f64> = weights.iter().map(|&w| w.abs() as f64).collect();
+    let above = mags.iter().filter(|&&m| m > crit).count();
+    WeightStats {
+        median: crate::util::percentile(&mags, 50.0),
+        mean: crate::util::mean(&mags),
+        p5: crate::util::percentile(&mags, 5.0),
+        p95: crate::util::percentile(&mags, 95.0),
+        frac_above_crit: above as f64 / mags.len().max(1) as f64,
+        crit,
+    }
+}
+
+/// Table 6 row: projected absorption threshold and sparsity floor for a
+/// receiver format, against a measured weight-magnitude distribution.
+#[derive(Debug, Clone)]
+pub struct LowPrecisionRow {
+    pub dtype: Dtype,
+    pub mantissa_bits: u32,
+    pub tau: f64,
+    pub crit: f64,
+    pub frac_above: f64,
+}
+
+pub fn lower_precision_projection(weights: &[f32], eta: f64) -> Vec<LowPrecisionRow> {
+    [Dtype::Bf16, Dtype::Fp8E4M3, Dtype::Mxfp4]
+        .iter()
+        .map(|&d| {
+            let crit = critical_weight(eta, d);
+            let above = weights.iter().filter(|w| (w.abs() as f64) >= crit).count();
+            LowPrecisionRow {
+                dtype: d,
+                mantissa_bits: d.mantissa_bits(),
+                tau: d.tau(),
+                crit,
+                frac_above: above as f64 / weights.len().max(1) as f64,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adversarial_peak_matches_paper() {
+        // Paper Fig. 9: (0.9, 0.999), 1e5 quiet steps → ρ peaks ≈ 6.57
+        // after 12 loud gradients, then decays toward 1.
+        let trace = adversarial_rho(0.9, 0.999, 100_000, 3000);
+        let (argmax, max) = trace
+            .iter()
+            .enumerate()
+            .fold((0, 0.0), |(ai, am), (i, &x)| if x > am { (i, x) } else { (ai, am) });
+        assert!((max - 6.57).abs() < 0.1, "peak {}", max);
+        assert_eq!(argmax + 1, 12, "peak at loud step {}", argmax + 1);
+        // decays back toward 1 (v's half-life at β2=0.999 is ~700 steps)
+        assert!(trace[2999] < 1.1, "rho after decay {}", trace[2999]);
+        // and never exceeds the Thm A.4 bound of 10
+        assert!(trace.iter().all(|&x| x <= 10.0));
+    }
+
+    #[test]
+    fn constant_gradients_rho_is_one() {
+        let mut tr = RhoTrace::new(0.9, 0.999);
+        let mut last = 0.0;
+        for _ in 0..2000 {
+            last = tr.push(0.5);
+        }
+        assert!((last - 1.0).abs() < 1e-3, "rho {}", last);
+    }
+
+    #[test]
+    fn critical_scales_match_paper() {
+        // Eq. 16/20 at η = 3e-6.
+        assert!((critical_weight(3e-6, Dtype::Bf16) - 7.68e-4).abs() < 1e-6);
+        assert!((critical_weight(3e-6, Dtype::Fp8E4M3) - 4.8e-5).abs() < 1e-7);
+        assert!((critical_weight(3e-6, Dtype::Mxfp4) - 1.2e-5).abs() < 1e-8);
+        // Cor. A.5: PyTorch defaults → 2560·η
+        let wc = critical_weight_worstcase(3e-6, 0.9, 0.999);
+        assert!((wc / 3e-6 - 2560.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn projection_is_monotone_in_precision() {
+        let mut rng = crate::util::rng::Rng::new(3);
+        let w: Vec<f32> = (0..50_000)
+            .map(|_| {
+                let z = rng.normal();
+                let sigma = if z < 0.0 { 1.48 } else { 0.72 };
+                ((-4.47 + sigma * z).exp()) as f32
+            })
+            .collect();
+        let rows = lower_precision_projection(&w, 3e-6);
+        // coarser formats → smaller crit → more weights above
+        assert!(rows[0].frac_above < rows[1].frac_above);
+        assert!(rows[1].frac_above < rows[2].frac_above);
+        assert!(rows[0].frac_above > 0.9);
+    }
+
+    #[test]
+    fn weight_stats_sane() {
+        let w = vec![0.01f32; 99].into_iter().chain([1.0f32]).collect::<Vec<_>>();
+        let s = weight_stats(&w, 7.7e-4);
+        assert!((s.median - 0.01).abs() < 1e-9);
+        assert_eq!(s.frac_above_crit, 1.0);
+    }
+}

@@ -1,0 +1,154 @@
+//! FP8 E4M3 cast (OCP FP8 / NVIDIA variant: no infinities, single NaN at
+//! S.1111.111). Used by the lower-precision-receiver projection (§D).
+
+/// Largest finite E4M3 magnitude: 1.75 * 2^8 = 448.
+pub const FP8_MAX: f32 = 448.0;
+/// Smallest positive normal: 2^-6.
+pub const FP8_MIN_NORMAL: f32 = 0.015625;
+/// Smallest positive subnormal: 2^-9.
+pub const FP8_MIN_SUBNORMAL: f32 = 0.001953125;
+
+/// Round-to-nearest-even cast f32 → E4M3 bit pattern (u8).
+/// Values above FP8_MAX saturate to the max finite value (OCP behaviour);
+/// NaN maps to 0x7F.
+pub fn f32_to_fp8_bits(x: f32) -> u8 {
+    if x.is_nan() {
+        return 0x7F;
+    }
+    let sign = if x.is_sign_negative() { 0x80u8 } else { 0 };
+    let a = x.abs();
+    if a >= FP8_MAX * (1.0 + 1.0 / 32.0) {
+        // beyond the rounding boundary past max → saturate (no inf)
+        return sign | 0x7E;
+    }
+    if a == 0.0 {
+        return sign;
+    }
+    // Decompose: a = m * 2^e with m in [1, 2)
+    let e = a.log2().floor() as i32;
+    let e = e.clamp(-9, 8);
+    if e < -6 {
+        // subnormal range: value = f * 2^-9, f in [0, 8)
+        let f = a / 2f32.powi(-9);
+        let r = round_half_even(f);
+        if r >= 8.0 {
+            return sign | 0x08; // rounds up into normals: 1.0 * 2^-6
+        }
+        return sign | (r as u8);
+    }
+    // normal: mantissa field m3 = round((a / 2^e - 1) * 8)
+    let frac = a / 2f32.powi(e) - 1.0;
+    let m = round_half_even(frac * 8.0);
+    let (e, m) = if m >= 8.0 { (e + 1, 0.0) } else { (e, m) };
+    if e > 8 {
+        return sign | 0x7E; // saturate
+    }
+    let exp_field = (e + 7) as u8; // bias 7
+    let bits = sign | (exp_field << 3) | (m as u8);
+    // 0x7F is NaN; the largest finite is 0x7E (= 448)
+    if bits & 0x7F == 0x7F {
+        sign | 0x7E
+    } else {
+        bits
+    }
+}
+
+fn round_half_even(x: f32) -> f32 {
+    let fl = x.floor();
+    let diff = x - fl;
+    if diff > 0.5 {
+        fl + 1.0
+    } else if diff < 0.5 {
+        fl
+    } else if (fl as i64) % 2 == 0 {
+        fl
+    } else {
+        fl + 1.0
+    }
+}
+
+/// Expand an E4M3 bit pattern to f32.
+pub fn fp8_bits_to_f32(bits: u8) -> f32 {
+    let sign = if bits & 0x80 != 0 { -1.0f32 } else { 1.0 };
+    let exp = (bits >> 3) & 0x0F;
+    let man = bits & 0x07;
+    if exp == 0x0F && man == 0x07 {
+        return f32::NAN;
+    }
+    if exp == 0 {
+        return sign * (man as f32) * 2f32.powi(-9);
+    }
+    sign * (1.0 + man as f32 / 8.0) * 2f32.powi(exp as i32 - 7)
+}
+
+/// `cast_FP8` as a value.
+pub fn fp8_round(x: f32) -> f32 {
+    fp8_bits_to_f32(f32_to_fp8_bits(x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_roundtrip() {
+        for bits in 0u8..=255 {
+            let v = fp8_bits_to_f32(bits);
+            if v.is_nan() {
+                continue;
+            }
+            let back = f32_to_fp8_bits(v);
+            // -0 and +0 both decode to 0.0; accept either encoding.
+            assert_eq!(
+                fp8_bits_to_f32(back),
+                v,
+                "bits={:02x} v={} back={:02x}",
+                bits,
+                v,
+                back
+            );
+        }
+    }
+
+    #[test]
+    fn known_constants() {
+        assert_eq!(fp8_round(448.0), 448.0);
+        assert_eq!(fp8_round(1.0), 1.0);
+        assert_eq!(fp8_round(0.015625), 0.015625);
+        assert_eq!(fp8_round(1e9), 448.0); // saturation
+        assert_eq!(fp8_round(-1e9), -448.0);
+        assert_eq!(fp8_round(0.0), 0.0);
+        assert!(fp8_round(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn rounding_is_nearest() {
+        // between 1.0 and 1.125, midpoint 1.0625 → ties to even (1.0)
+        assert_eq!(fp8_round(1.0624), 1.0);
+        assert_eq!(fp8_round(1.0625), 1.0);
+        assert_eq!(fp8_round(1.0626), 1.125);
+    }
+
+    #[test]
+    fn idempotent() {
+        let mut rng = crate::util::rng::Rng::new(17);
+        for _ in 0..20_000 {
+            let x = (rng.normal() as f32) * 10f32.powi(rng.range_i64(-6, 3) as i32);
+            let once = fp8_round(x);
+            assert_eq!(fp8_round(once), once, "x={}", x);
+        }
+    }
+
+    #[test]
+    fn cast_error_bounded_by_half_ulp() {
+        let mut rng = crate::util::rng::Rng::new(19);
+        for _ in 0..20_000 {
+            let x = rng.f32() * 400.0;
+            let r = fp8_round(x);
+            // relative error ≤ 1/16 for normal range
+            if x >= FP8_MIN_NORMAL {
+                assert!((r - x).abs() / x <= 1.0 / 16.0 + 1e-6, "x={} r={}", x, r);
+            }
+        }
+    }
+}

@@ -1,0 +1,334 @@
+//! Low-precision numeric formats and rounding-cell math (paper §A.2, §D).
+//!
+//! The whole paper hinges on one operation: casting an FP32 master weight
+//! to the compute dtype of the next forward pass and asking whether the
+//! bit pattern changed. This module implements those casts in software —
+//! BF16 (round-to-nearest-even, matching jnp/torch `.bfloat16()`), FP8
+//! E4M3, and MXFP4 (OCP E2M1 with a shared block-32 power-of-two scale) —
+//! plus the ULP / rounding-cell helpers used by the analysis harnesses.
+
+pub mod fp8;
+pub mod mxfp4;
+
+/// Round-to-nearest-even cast f32 → bf16 bit pattern (u16).
+///
+/// NaNs are canonicalized to a quiet NaN so bitwise comparisons treat all
+/// NaNs as equal (matches XLA behaviour closely enough for the gate —
+/// training never produces NaNs in a healthy run).
+#[inline(always)]
+pub fn f32_to_bf16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return 0x7FC0;
+    }
+    // RNE: add 0x7FFF + LSB of the kept part, then truncate.
+    let rounding_bias = 0x7FFFu32 + ((bits >> 16) & 1);
+    ((bits + rounding_bias) >> 16) as u16
+}
+
+/// Expand a bf16 bit pattern back to f32 (exact).
+#[inline(always)]
+pub fn bf16_bits_to_f32(bits: u16) -> f32 {
+    f32::from_bits((bits as u32) << 16)
+}
+
+/// `cast_BF16` as a value: f32 → nearest bf16 → f32.
+#[inline(always)]
+pub fn bf16_round(x: f32) -> f32 {
+    bf16_bits_to_f32(f32_to_bf16_bits(x))
+}
+
+/// Cast a whole slice to bf16 bit patterns.
+pub fn cast_slice(xs: &[f32], out: &mut Vec<u16>) {
+    out.clear();
+    out.reserve(xs.len());
+    for &x in xs {
+        out.push(f32_to_bf16_bits(x));
+    }
+}
+
+/// Cast a whole slice to bf16 bit patterns, in parallel, reusing `out`.
+pub fn cast_slice_par(xs: &[f32], out: &mut Vec<u16>) {
+    out.resize(xs.len(), 0);
+    let src = xs;
+    crate::util::pool::par_chunks_mut(out, 1 << 16, |_, base, chunk| {
+        for (i, o) in chunk.iter_mut().enumerate() {
+            *o = f32_to_bf16_bits(src[base + i]);
+        }
+    });
+}
+
+/// BF16 unit-in-the-last-place at value `x` (spacing of representable
+/// values in x's binade): `2^(e-7)` for normalized `2^e <= |x| < 2^(e+1)`.
+pub fn bf16_ulp(x: f32) -> f32 {
+    if x == 0.0 || !x.is_finite() {
+        // subnormal bf16 spacing: 2^-126 * 2^-7 = 2^-133
+        return 2f32.powi(-133);
+    }
+    let e = x.abs().log2().floor() as i32;
+    2f32.powi(e - 7)
+}
+
+/// Distance from `x` (an f32 master weight) to the nearest BF16 rounding
+/// boundary — the exact per-parameter absorption threshold of Def. A.3.
+/// An update `|Δ| <` this distance cannot change `cast_BF16(x)`.
+pub fn bf16_boundary_distance(x: f32) -> f32 {
+    let cur = f32_to_bf16_bits(x);
+    // Boundaries are midpoints between adjacent bf16 values around x.
+    let lo = bf16_bits_to_f32(prev_bf16(cur));
+    let mid_lo = midpoint(lo, bf16_bits_to_f32(cur));
+    let hi = bf16_bits_to_f32(next_bf16(cur));
+    let mid_hi = midpoint(bf16_bits_to_f32(cur), hi);
+    (x - mid_lo).abs().min((mid_hi - x).abs())
+}
+
+fn midpoint(a: f32, b: f32) -> f32 {
+    (a as f64 * 0.5 + b as f64 * 0.5) as f32
+}
+
+/// Next representable bf16 (toward +inf), saturating at +inf.
+pub fn next_bf16(bits: u16) -> u16 {
+    if bits & 0x8000 == 0 {
+        // positive: increment magnitude
+        if bits >= 0x7F80 {
+            bits
+        } else {
+            bits + 1
+        }
+    } else if bits == 0x8000 {
+        // -0 → smallest positive
+        0x0001
+    } else {
+        bits - 1
+    }
+}
+
+/// Previous representable bf16 (toward -inf), saturating at -inf.
+pub fn prev_bf16(bits: u16) -> u16 {
+    if bits & 0x8000 != 0 {
+        if bits >= 0xFF80 {
+            bits
+        } else {
+            bits + 1
+        }
+    } else if bits == 0x0000 {
+        // +0 → smallest negative
+        0x8001
+    } else {
+        bits - 1
+    }
+}
+
+/// The paper's characteristic relative cell radius: |Δw|/|w| ≈ 2^-8
+/// (half a ULP). `|w| / 256` is the visibility threshold of Fig. 3b.
+pub fn visibility_threshold(w: f32) -> f32 {
+    w.abs() / 256.0
+}
+
+/// The compute dtypes the gate supports (paper §D).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    Bf16,
+    Fp8E4M3,
+    Mxfp4,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> anyhow::Result<Dtype> {
+        match s.to_ascii_lowercase().as_str() {
+            "bf16" => Ok(Dtype::Bf16),
+            "fp8" | "fp8e4m3" | "fp8_e4m3" => Ok(Dtype::Fp8E4M3),
+            "mxfp4" => Ok(Dtype::Mxfp4),
+            other => anyhow::bail!("unknown dtype '{}'", other),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dtype::Bf16 => "bf16",
+            Dtype::Fp8E4M3 => "fp8e4m3",
+            Dtype::Mxfp4 => "mxfp4",
+        }
+    }
+
+    /// Mantissa bits (effective, for MXFP4) — τ_D = 2^-(m+1) (Eq. 19).
+    pub fn mantissa_bits(&self) -> u32 {
+        match self {
+            Dtype::Bf16 => 7,
+            Dtype::Fp8E4M3 => 3,
+            Dtype::Mxfp4 => 1,
+        }
+    }
+
+    /// Relative absorption threshold τ_D (paper Eq. 19 / Table 6).
+    pub fn tau(&self) -> f64 {
+        2f64.powi(-(self.mantissa_bits() as i32 + 1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Reference cast via f64 midpoint logic, for cross-checking RNE.
+    fn ref_bf16(x: f32) -> u16 {
+        if x.is_nan() {
+            return 0x7FC0;
+        }
+        if x.is_infinite() {
+            return if x > 0.0 { 0x7F80 } else { 0xFF80 };
+        }
+        // brute force: truncate, then compare distances to the two
+        // candidates, breaking ties to even.
+        let trunc = (x.to_bits() >> 16) as u16;
+        let lo = bf16_bits_to_f32(trunc);
+        let hi_bits = if x >= 0.0 { next_bf16(trunc) } else { prev_bf16(trunc) };
+        // note: for negative x, truncation moves toward zero, so "hi" is
+        // the next value away from zero.
+        // If the next value saturates to infinity, RNE still uses the
+        // virtual next step 2^128 as the rounding boundary.
+        let hi = bf16_bits_to_f32(hi_bits);
+        let hi_virtual: f64 = if hi.is_infinite() {
+            if hi > 0.0 {
+                2f64.powi(128)
+            } else {
+                -(2f64.powi(128))
+            }
+        } else {
+            hi as f64
+        };
+        let (a, b) = (lo as f64, hi_virtual);
+        let d_lo = (x as f64 - a).abs();
+        let d_hi = (x as f64 - b).abs();
+        if d_lo < d_hi {
+            trunc
+        } else if d_hi < d_lo {
+            hi_bits
+        } else if trunc & 1 == 0 {
+            trunc
+        } else {
+            hi_bits
+        }
+    }
+
+    #[test]
+    fn known_values() {
+        assert_eq!(bf16_round(1.0), 1.0);
+        assert_eq!(bf16_round(-2.0), -2.0);
+        // 1.0 + 2^-9 rounds back down to 1.0 (inside the cell)
+        assert_eq!(bf16_round(1.0 + 2f32.powi(-9)), 1.0);
+        // 1.0 + 2^-8 is exactly the midpoint → ties-to-even → 1.0
+        assert_eq!(bf16_round(1.0 + 2f32.powi(-8)), 1.0);
+        // slightly above the midpoint → rounds up to 1.0078125
+        assert!(bf16_round(1.0 + 2f32.powi(-8) + 2f32.powi(-12)) > 1.0);
+    }
+
+    #[test]
+    fn matches_reference_cast_exhaustively_sampled() {
+        let mut rng = crate::util::rng::Rng::new(11);
+        for _ in 0..200_000 {
+            let bits = rng.next_u32();
+            let x = f32::from_bits(bits);
+            if x.is_nan() {
+                continue;
+            }
+            assert_eq!(
+                f32_to_bf16_bits(x),
+                ref_bf16(x),
+                "mismatch for {:e} ({:08x})",
+                x,
+                bits
+            );
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_idempotent() {
+        let mut rng = crate::util::rng::Rng::new(3);
+        for _ in 0..10_000 {
+            let x = (rng.normal() as f32) * 10f32.powi(rng.range_i64(-10, 4) as i32);
+            let once = bf16_round(x);
+            assert_eq!(bf16_round(once), once);
+        }
+    }
+
+    #[test]
+    fn ulp_scales_with_binade() {
+        assert_eq!(bf16_ulp(1.5), 2f32.powi(-7));
+        assert_eq!(bf16_ulp(10.0), 2f32.powi(3 - 7));
+        assert_eq!(bf16_ulp(0.01), 2f32.powi(-7 - 7));
+    }
+
+    #[test]
+    fn boundary_distance_bounds_absorption() {
+        let mut rng = crate::util::rng::Rng::new(5);
+        for _ in 0..20_000 {
+            let w = (rng.normal() as f32) * 0.02;
+            if w == 0.0 {
+                continue;
+            }
+            let d = bf16_boundary_distance(w);
+            // Any |delta| strictly below the boundary distance is absorbed.
+            let delta = d * 0.49;
+            assert_eq!(
+                f32_to_bf16_bits(w),
+                f32_to_bf16_bits(w - delta),
+                "w={:e} d={:e}",
+                w,
+                d
+            );
+            // A push of 1.5 cells always changes the cast.
+            let big = 1.5 * bf16_ulp(w).max(f32::MIN_POSITIVE);
+            assert_ne!(f32_to_bf16_bits(w), f32_to_bf16_bits(w + big), "w={:e}", w);
+        }
+    }
+
+    #[test]
+    fn next_prev_are_inverse() {
+        for bits in [0x0000u16, 0x0001, 0x3F80, 0x7F00, 0x8000, 0x8001, 0xBF80] {
+            let n = next_bf16(bits);
+            if n != bits {
+                assert_eq!(prev_bf16(n), normalize_zero(bits), "bits={:04x}", bits);
+            }
+        }
+    }
+
+    fn normalize_zero(b: u16) -> u16 {
+        // prev(next(-0)) lands on +0; treat zeros as equal.
+        if b == 0x8000 {
+            0x0000
+        } else {
+            b
+        }
+    }
+
+    #[test]
+    fn visibility_threshold_matches_ulp_scale() {
+        // |w|/256 is within a factor 2 of half a ULP for any w.
+        let mut rng = crate::util::rng::Rng::new(6);
+        for _ in 0..10_000 {
+            let w: f32 = (rng.lognormal(-4.5, 1.0) as f32).max(1e-30);
+            let half_ulp = bf16_ulp(w) / 2.0;
+            let thr = visibility_threshold(w);
+            assert!(thr <= half_ulp * 2.0 && thr >= half_ulp / 2.0, "w={:e}", w);
+        }
+    }
+
+    #[test]
+    fn tau_table_matches_paper() {
+        assert_eq!(Dtype::Bf16.tau(), 1.0 / 256.0);
+        assert_eq!(Dtype::Fp8E4M3.tau(), 1.0 / 16.0);
+        assert_eq!(Dtype::Mxfp4.tau(), 1.0 / 4.0);
+    }
+
+    #[test]
+    fn par_cast_matches_serial() {
+        let mut rng = crate::util::rng::Rng::new(9);
+        let xs: Vec<f32> = (0..100_000).map(|_| rng.normal() as f32).collect();
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        cast_slice(&xs, &mut a);
+        cast_slice_par(&xs, &mut b);
+        assert_eq!(a, b);
+    }
+}

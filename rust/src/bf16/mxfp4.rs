@@ -1,0 +1,132 @@
+//! MXFP4: OCP Microscaling FP4 — E2M1 elements sharing an 8-bit
+//! power-of-two scale per block of 32 (paper §D).
+//!
+//! The gate treats the block scale as fixed during a single optimizer
+//! step (paper's assumption), so casting a block = pick scale from the
+//! block max, then quantize each element to E2M1 × scale.
+
+/// Block size fixed by the OCP MX spec.
+pub const BLOCK: usize = 32;
+
+/// The 8 non-negative E2M1 magnitudes: 0, 0.5, 1, 1.5, 2, 3, 4, 6.
+pub const E2M1_VALUES: [f32; 8] = [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0];
+
+/// Quantize one element to E2M1 (round-to-nearest, ties toward even
+/// index) and return the 4-bit code (sign<<3 | mag).
+pub fn e2m1_code(x: f32) -> u8 {
+    let sign = if x.is_sign_negative() { 0x8u8 } else { 0 };
+    let a = x.abs();
+    let mut best = 0usize;
+    let mut best_d = f32::INFINITY;
+    for (i, &v) in E2M1_VALUES.iter().enumerate() {
+        let d = (a - v).abs();
+        if d < best_d || (d == best_d && i % 2 == 0) {
+            best_d = d;
+            best = i;
+        }
+    }
+    sign | best as u8
+}
+
+/// Decode a 4-bit E2M1 code.
+pub fn e2m1_decode(code: u8) -> f32 {
+    let v = E2M1_VALUES[(code & 0x7) as usize];
+    if code & 0x8 != 0 {
+        -v
+    } else {
+        v
+    }
+}
+
+/// Power-of-two block scale chosen so the block max maps near the top
+/// E2M1 value (the OCP recommendation: scale = 2^(floor(log2 max) - 2)).
+pub fn block_scale(block: &[f32]) -> f32 {
+    let max = block.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    if max == 0.0 || !max.is_finite() {
+        return 1.0;
+    }
+    let e = max.log2().floor() as i32;
+    // E2M1 max magnitude is 6 = 1.5 * 2^2: align so max lands in [4, 8).
+    2f32.powi((e - 2).clamp(-127, 127))
+}
+
+/// Cast a block (≤32 elements) to its MXFP4 representation: returns the
+/// codes and the scale used.
+pub fn cast_block(block: &[f32]) -> (Vec<u8>, f32) {
+    let s = block_scale(block);
+    (block.iter().map(|&x| e2m1_code(x / s)).collect(), s)
+}
+
+/// `cast_MXFP4` of a full slice: element-wise reconstructed values.
+pub fn mxfp4_round_slice(xs: &[f32]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(xs.len());
+    for block in xs.chunks(BLOCK) {
+        let (codes, s) = cast_block(block);
+        out.extend(codes.iter().map(|&c| e2m1_decode(c) * s));
+    }
+    out
+}
+
+/// Element visibility under MXFP4: whether `cast(x)` and `cast(x - d)`
+/// differ *within the same block context*. The caller supplies the block
+/// scale (from the pre-update block) per the fixed-scale assumption.
+pub fn visible_in_block(x: f32, x_new: f32, scale: f32) -> bool {
+    e2m1_code(x / scale) != e2m1_code(x_new / scale)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_roundtrip() {
+        for code in 0u8..16 {
+            let v = e2m1_decode(code);
+            let back = e2m1_code(v);
+            assert_eq!(e2m1_decode(back), v, "code={:x}", code);
+        }
+    }
+
+    #[test]
+    fn block_scale_places_max_high() {
+        let mut block = vec![0.01f32; 32];
+        block[7] = 5.0;
+        let s = block_scale(&block);
+        let top = 5.0 / s;
+        assert!((4.0..8.0).contains(&top), "top={}", top);
+    }
+
+    #[test]
+    fn zero_block() {
+        let block = vec![0.0f32; 32];
+        let (codes, s) = cast_block(&block);
+        assert_eq!(s, 1.0);
+        assert!(codes.iter().all(|&c| c & 0x7 == 0));
+    }
+
+    #[test]
+    fn small_elements_coarser_than_bf16() {
+        // An element far below the block max gets absorbed for updates
+        // that BF16 would see — MXFP4's cell is coarser (paper §D).
+        let mut block = vec![0.0f32; 32];
+        block[0] = 1.0; // sets scale
+        block[1] = 0.01;
+        let s = block_scale(&block);
+        let before = e2m1_code(block[1] / s);
+        let after = e2m1_code((block[1] + 0.01) / s);
+        assert_eq!(before, after); // +100% relative change, still invisible
+        assert_ne!(
+            crate::bf16::f32_to_bf16_bits(0.01),
+            crate::bf16::f32_to_bf16_bits(0.02)
+        );
+    }
+
+    #[test]
+    fn round_slice_idempotent() {
+        let mut rng = crate::util::rng::Rng::new(23);
+        let xs: Vec<f32> = (0..256).map(|_| rng.normal() as f32 * 0.05).collect();
+        let once = mxfp4_round_slice(&xs);
+        let twice = mxfp4_round_slice(&once);
+        assert_eq!(once, twice);
+    }
+}

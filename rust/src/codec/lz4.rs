@@ -1,0 +1,231 @@
+//! Pure-Rust LZ4 block-format codec (the `lz4_flex` crate is not in the
+//! offline image). Implements the standard LZ4 block format with a
+//! greedy hash-table matcher — the "speed end" codec of Table 5.
+
+const MIN_MATCH: usize = 4;
+const HASH_LOG: usize = 16;
+const LAST_LITERALS: usize = 5;
+/// Matches may not start within the last 12 bytes (format rule).
+const MFLIMIT: usize = 12;
+
+#[inline(always)]
+fn hash(seq: u32) -> usize {
+    (seq.wrapping_mul(2654435761) >> (32 - HASH_LOG)) as usize
+}
+
+#[inline(always)]
+fn read_u32(b: &[u8], i: usize) -> u32 {
+    u32::from_le_bytes([b[i], b[i + 1], b[i + 2], b[i + 3]])
+}
+
+/// Compress `src` into a standalone LZ4 block.
+pub fn compress(src: &[u8]) -> Vec<u8> {
+    let n = src.len();
+    let mut out = Vec::with_capacity(n / 2 + 16);
+    if n == 0 {
+        out.push(0); // single empty-literal token
+        return out;
+    }
+    if n < MFLIMIT + 1 {
+        emit_sequence(&mut out, src, 0, n, None);
+        return out;
+    }
+    let mut table = vec![0u32; 1 << HASH_LOG]; // position + 1 (0 = empty)
+    let match_limit = n - LAST_LITERALS;
+    let scan_limit = n - MFLIMIT;
+    let mut anchor = 0usize;
+    let mut i = 0usize;
+    while i < scan_limit {
+        let h = hash(read_u32(src, i));
+        let cand = table[h] as usize;
+        table[h] = (i + 1) as u32;
+        if cand > 0 {
+            let cand = cand - 1;
+            let offset = i - cand;
+            if offset <= 0xFFFF && read_u32(src, cand) == read_u32(src, i) {
+                // extend match forward
+                let mut len = MIN_MATCH;
+                while i + len < match_limit && src[cand + len] == src[i + len] {
+                    len += 1;
+                }
+                emit_sequence(&mut out, src, anchor, i - anchor, Some((offset as u16, len)));
+                i += len;
+                anchor = i;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    // trailing literals
+    emit_sequence(&mut out, src, anchor, n - anchor, None);
+    out
+}
+
+fn emit_sequence(
+    out: &mut Vec<u8>,
+    src: &[u8],
+    lit_start: usize,
+    lit_len: usize,
+    m: Option<(u16, usize)>,
+) {
+    let match_code = m.map(|(_, len)| len - MIN_MATCH);
+    let token_lit = lit_len.min(15) as u8;
+    let token_match = match_code.map(|c| c.min(15) as u8).unwrap_or(0);
+    out.push((token_lit << 4) | token_match);
+    if lit_len >= 15 {
+        put_len(out, lit_len - 15);
+    }
+    out.extend_from_slice(&src[lit_start..lit_start + lit_len]);
+    if let Some((offset, len)) = m {
+        out.extend_from_slice(&offset.to_le_bytes());
+        let code = len - MIN_MATCH;
+        if code >= 15 {
+            put_len(out, code - 15);
+        }
+    }
+}
+
+fn put_len(out: &mut Vec<u8>, mut extra: usize) {
+    while extra >= 255 {
+        out.push(255);
+        extra -= 255;
+    }
+    out.push(extra as u8);
+}
+
+/// Decompress an LZ4 block. `expected_len` bounds the output (the block
+/// format does not embed it; the container stores it).
+pub fn decompress(src: &[u8], expected_len: usize) -> anyhow::Result<Vec<u8>> {
+    let mut out: Vec<u8> = Vec::with_capacity(expected_len);
+    let mut i = 0usize;
+    loop {
+        let token = *src.get(i).ok_or_else(|| anyhow::anyhow!("lz4: truncated token"))?;
+        i += 1;
+        // literals
+        let mut lit_len = (token >> 4) as usize;
+        if lit_len == 15 {
+            lit_len += get_len(src, &mut i)?;
+        }
+        if i + lit_len > src.len() {
+            anyhow::bail!("lz4: literal overrun");
+        }
+        out.extend_from_slice(&src[i..i + lit_len]);
+        i += lit_len;
+        if i == src.len() {
+            break; // last sequence has no match part
+        }
+        // match
+        if i + 2 > src.len() {
+            anyhow::bail!("lz4: truncated offset");
+        }
+        let offset = u16::from_le_bytes([src[i], src[i + 1]]) as usize;
+        i += 2;
+        if offset == 0 {
+            anyhow::bail!("lz4: zero offset");
+        }
+        let mut mlen = (token & 0x0F) as usize;
+        if mlen == 15 {
+            mlen += get_len(src, &mut i)?;
+        }
+        mlen += MIN_MATCH;
+        let start = out
+            .len()
+            .checked_sub(offset)
+            .ok_or_else(|| anyhow::anyhow!("lz4: offset {} beyond output", offset))?;
+        // overlapping copy must be byte-by-byte
+        for k in 0..mlen {
+            let b = out[start + k];
+            out.push(b);
+        }
+        if out.len() > expected_len {
+            anyhow::bail!("lz4: output exceeds expected length");
+        }
+    }
+    Ok(out)
+}
+
+fn get_len(src: &[u8], i: &mut usize) -> anyhow::Result<usize> {
+    let mut total = 0usize;
+    loop {
+        let b = *src.get(*i).ok_or_else(|| anyhow::anyhow!("lz4: truncated length"))?;
+        *i += 1;
+        total += b as usize;
+        if b != 255 {
+            return Ok(total);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(data: &[u8]) {
+        let c = compress(data);
+        let d = decompress(&c, data.len()).unwrap();
+        assert_eq!(d, data, "len={}", data.len());
+    }
+
+    #[test]
+    fn empty_and_tiny() {
+        roundtrip(b"");
+        roundtrip(b"a");
+        roundtrip(b"abcdefgh");
+        roundtrip(b"aaaaaaaaaaaa");
+    }
+
+    #[test]
+    fn repetitive_compresses() {
+        let data = vec![42u8; 100_000];
+        let c = compress(&data);
+        assert!(c.len() < 1000, "c.len()={}", c.len());
+        assert_eq!(decompress(&c, data.len()).unwrap(), data);
+    }
+
+    #[test]
+    fn structured_data() {
+        let mut data = Vec::new();
+        for i in 0..10_000u32 {
+            data.extend_from_slice(&(i / 7).to_le_bytes());
+        }
+        let c = compress(&data);
+        assert!(c.len() < data.len() / 2);
+        assert_eq!(decompress(&c, data.len()).unwrap(), data);
+    }
+
+    #[test]
+    fn incompressible_expands_gracefully() {
+        let mut rng = crate::util::rng::Rng::new(77);
+        let data: Vec<u8> = (0..65_536).map(|_| rng.next_u32() as u8).collect();
+        let c = compress(&data);
+        assert!(c.len() < data.len() + data.len() / 128 + 32);
+        assert_eq!(decompress(&c, data.len()).unwrap(), data);
+    }
+
+    #[test]
+    fn overlapping_matches() {
+        // "abcabcabc..." forces offset < match length (RLE-like copies)
+        let data: Vec<u8> = b"abc".iter().cycle().take(9999).copied().collect();
+        roundtrip(&data);
+    }
+
+    #[test]
+    fn corrupt_input_errors_not_panics() {
+        let c = compress(b"hello hello hello hello hello hello");
+        for cut in 1..c.len() {
+            let _ = decompress(&c[..cut], 100); // must not panic
+        }
+        let _ = decompress(&[0xF0, 0x01], 100);
+    }
+
+    #[test]
+    fn prop_roundtrip() {
+        crate::util::prop::check("lz4 roundtrip", 80, |g| {
+            let n = g.len() * 8;
+            let data = g.bytes(n);
+            let c = compress(&data);
+            let d = decompress(&c, data.len()).unwrap();
+            assert_eq!(d, data);
+        });
+    }
+}

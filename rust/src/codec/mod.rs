@@ -1,0 +1,178 @@
+//! Byte-stream codecs and integer coding used by the sparse patch
+//! pipeline (paper §C, §H.2, §H.4).
+//!
+//! `lz4` and `snappy` are pure-Rust implementations of the real LZ4-block
+//! and Snappy formats (the crates are absent from the offline image);
+//! zstd and gzip wrap the vendored `zstd` / `flate2` crates. The
+//! [`Codec`] enum is the paper's codec axis (Table 5).
+
+pub mod delta;
+pub mod lz4;
+pub mod shuffle;
+pub mod snappy;
+pub mod varint;
+
+use anyhow::Result;
+
+/// General-purpose byte codecs evaluated in the paper (Table 5/12).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Codec {
+    /// No entropy coding (raw sparse stream).
+    None,
+    Snappy,
+    Lz4,
+    Zstd1,
+    Zstd3,
+    Gzip6,
+}
+
+impl Codec {
+    pub const ALL: [Codec; 5] = [Codec::Snappy, Codec::Lz4, Codec::Zstd1, Codec::Zstd3, Codec::Gzip6];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Codec::None => "none",
+            Codec::Snappy => "snappy",
+            Codec::Lz4 => "lz4",
+            Codec::Zstd1 => "zstd-1",
+            Codec::Zstd3 => "zstd-3",
+            Codec::Gzip6 => "gzip-6",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Codec> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "none" | "raw" => Codec::None,
+            "snappy" => Codec::Snappy,
+            "lz4" => Codec::Lz4,
+            "zstd-1" | "zstd1" | "zstd" => Codec::Zstd1,
+            "zstd-3" | "zstd3" => Codec::Zstd3,
+            "gzip-6" | "gzip" | "gzip6" => Codec::Gzip6,
+            other => anyhow::bail!("unknown codec '{}'", other),
+        })
+    }
+
+    /// Tag byte stored in patch containers.
+    pub fn tag(&self) -> u8 {
+        match self {
+            Codec::None => 0,
+            Codec::Snappy => 1,
+            Codec::Lz4 => 2,
+            Codec::Zstd1 => 3,
+            Codec::Zstd3 => 4,
+            Codec::Gzip6 => 5,
+        }
+    }
+
+    pub fn from_tag(tag: u8) -> Result<Codec> {
+        Ok(match tag {
+            0 => Codec::None,
+            1 => Codec::Snappy,
+            2 => Codec::Lz4,
+            3 => Codec::Zstd1,
+            4 => Codec::Zstd3,
+            5 => Codec::Gzip6,
+            other => anyhow::bail!("unknown codec tag {}", other),
+        })
+    }
+
+    pub fn compress(&self, data: &[u8]) -> Result<Vec<u8>> {
+        Ok(match self {
+            Codec::None => data.to_vec(),
+            Codec::Snappy => snappy::compress(data),
+            Codec::Lz4 => lz4::compress(data),
+            Codec::Zstd1 => zstd::bulk::compress(data, 1)?,
+            Codec::Zstd3 => zstd::bulk::compress(data, 3)?,
+            Codec::Gzip6 => {
+                use flate2::write::GzEncoder;
+                use std::io::Write;
+                let mut enc = GzEncoder::new(Vec::new(), flate2::Compression::new(6));
+                enc.write_all(data)?;
+                enc.finish()?
+            }
+        })
+    }
+
+    /// Decompress; `size_hint` is the expected decompressed size (stored
+    /// in the container header) — required by the zstd bulk API.
+    pub fn decompress(&self, data: &[u8], size_hint: usize) -> Result<Vec<u8>> {
+        Ok(match self {
+            Codec::None => data.to_vec(),
+            Codec::Snappy => snappy::decompress(data)?,
+            Codec::Lz4 => lz4::decompress(data, size_hint)?,
+            Codec::Zstd1 | Codec::Zstd3 => zstd::bulk::decompress(data, size_hint.max(64))?,
+            Codec::Gzip6 => {
+                use flate2::read::GzDecoder;
+                use std::io::Read;
+                let mut out = Vec::with_capacity(size_hint);
+                GzDecoder::new(data).read_to_end(&mut out)?;
+                out
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn payloads() -> Vec<Vec<u8>> {
+        let mut rng = crate::util::rng::Rng::new(31);
+        vec![
+            vec![],
+            b"a".to_vec(),
+            b"hello hello hello hello hello".to_vec(),
+            vec![0u8; 10_000],
+            (0..10_000u32).map(|i| (i % 251) as u8).collect(),
+            (0..50_000).map(|_| rng.next_u32() as u8).collect(),
+        ]
+    }
+
+    #[test]
+    fn all_codecs_roundtrip() {
+        for codec in Codec::ALL.iter().chain([&Codec::None]) {
+            for p in payloads() {
+                let c = codec.compress(&p).unwrap();
+                let d = codec.decompress(&c, p.len()).unwrap();
+                assert_eq!(d, p, "codec {} len {}", codec.name(), p.len());
+            }
+        }
+    }
+
+    #[test]
+    fn compressible_data_shrinks() {
+        let data = vec![7u8; 100_000];
+        for codec in Codec::ALL {
+            let c = codec.compress(&data).unwrap();
+            assert!(c.len() < data.len() / 10, "{} -> {}", codec.name(), c.len());
+        }
+    }
+
+    #[test]
+    fn tags_roundtrip() {
+        for codec in Codec::ALL.iter().chain([&Codec::None]) {
+            assert_eq!(Codec::from_tag(codec.tag()).unwrap(), *codec);
+        }
+        assert!(Codec::from_tag(99).is_err());
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(Codec::parse("zstd-1").unwrap(), Codec::Zstd1);
+        assert_eq!(Codec::parse("LZ4").unwrap(), Codec::Lz4);
+        assert!(Codec::parse("brotli").is_err());
+    }
+
+    #[test]
+    fn prop_roundtrip_random() {
+        crate::util::prop::check("codec roundtrip", 60, |g| {
+            let n = g.len();
+            let data = g.bytes(n);
+            for codec in Codec::ALL {
+                let c = codec.compress(&data).unwrap();
+                let d = codec.decompress(&c, data.len()).unwrap();
+                assert_eq!(d, data, "codec {}", codec.name());
+            }
+        });
+    }
+}

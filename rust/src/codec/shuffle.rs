@@ -1,0 +1,69 @@
+//! Byte-shuffle transform (paper §F.3: "byte-shuffle plus zstd-3").
+//!
+//! Transposes an array of fixed-width elements so that byte-plane 0 of
+//! every element is contiguous, then plane 1, etc. FP32 values with
+//! similar magnitudes share exponent bytes, so shuffling groups highly
+//! compressible planes together before the byte codec.
+
+/// Shuffle `data` (length divisible by `width`) into byte planes.
+pub fn shuffle(data: &[u8], width: usize) -> Vec<u8> {
+    assert!(width > 0 && data.len() % width == 0, "len {} % width {}", data.len(), width);
+    let n = data.len() / width;
+    let mut out = vec![0u8; data.len()];
+    for plane in 0..width {
+        let dst = &mut out[plane * n..(plane + 1) * n];
+        for (i, d) in dst.iter_mut().enumerate() {
+            *d = data[i * width + plane];
+        }
+    }
+    out
+}
+
+/// Inverse of [`shuffle`].
+pub fn unshuffle(data: &[u8], width: usize) -> Vec<u8> {
+    assert!(width > 0 && data.len() % width == 0);
+    let n = data.len() / width;
+    let mut out = vec![0u8; data.len()];
+    for plane in 0..width {
+        let src = &data[plane * n..(plane + 1) * n];
+        for (i, &s) in src.iter().enumerate() {
+            out[i * width + plane] = s;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        crate::util::prop::check("shuffle roundtrip", 40, |g| {
+            for width in [1usize, 2, 4, 8] {
+                let n = g.len();
+                let data = g.bytes(n - n % width);
+                assert_eq!(unshuffle(&shuffle(&data, width), width), data);
+            }
+        });
+    }
+
+    #[test]
+    fn improves_f32_compression() {
+        // Similar-magnitude f32s compress better shuffled.
+        let mut rng = crate::util::rng::Rng::new(41);
+        let mut raw = Vec::new();
+        for _ in 0..20_000 {
+            let v = 0.01f32 + 0.001 * rng.f32();
+            raw.extend_from_slice(&v.to_le_bytes());
+        }
+        let plain = zstd::bulk::compress(&raw, 3).unwrap();
+        let shuf = zstd::bulk::compress(&shuffle(&raw, 4), 3).unwrap();
+        assert!(
+            (shuf.len() as f64) < (plain.len() as f64) * 0.95,
+            "shuffled {} vs plain {}",
+            shuf.len(),
+            plain.len()
+        );
+    }
+}

@@ -1,0 +1,255 @@
+//! Pure-Rust Snappy codec (the `snap` crate is not in the offline
+//! image). Implements the standard Snappy raw format: uvarint length
+//! preamble, then literal / copy-1 / copy-2 tags, with a greedy
+//! hash-table matcher. Paper Table 5's fastest-encode codec.
+
+use super::varint::{get_uvarint, put_uvarint};
+
+const MIN_MATCH: usize = 4;
+const HASH_LOG: usize = 15;
+
+#[inline(always)]
+fn hash(seq: u32) -> usize {
+    (seq.wrapping_mul(0x1e35a7bd) >> (32 - HASH_LOG)) as usize
+}
+
+#[inline(always)]
+fn read_u32(b: &[u8], i: usize) -> u32 {
+    u32::from_le_bytes([b[i], b[i + 1], b[i + 2], b[i + 3]])
+}
+
+/// Compress `src` in Snappy raw format.
+pub fn compress(src: &[u8]) -> Vec<u8> {
+    let n = src.len();
+    let mut out = Vec::with_capacity(n / 2 + 16);
+    put_uvarint(&mut out, n as u64);
+    if n == 0 {
+        return out;
+    }
+    if n < MIN_MATCH + 4 {
+        emit_literal(&mut out, src);
+        return out;
+    }
+    let mut table = vec![0u32; 1 << HASH_LOG];
+    let limit = n - 4; // need 4 bytes to hash
+    let mut anchor = 0usize;
+    let mut i = 0usize;
+    while i < limit {
+        let h = hash(read_u32(src, i));
+        let cand = table[h] as usize;
+        table[h] = (i + 1) as u32;
+        if cand > 0 {
+            let cand = cand - 1;
+            let offset = i - cand;
+            if offset <= 0xFFFF && read_u32(src, cand) == read_u32(src, i) {
+                let mut len = MIN_MATCH;
+                while i + len < n && src[cand + len] == src[i + len] {
+                    len += 1;
+                }
+                if anchor < i {
+                    emit_literal(&mut out, &src[anchor..i]);
+                }
+                emit_copy(&mut out, offset, len);
+                i += len;
+                anchor = i;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    if anchor < n {
+        emit_literal(&mut out, &src[anchor..n]);
+    }
+    out
+}
+
+fn emit_literal(out: &mut Vec<u8>, lit: &[u8]) {
+    let mut rest = lit;
+    while !rest.is_empty() {
+        let take = rest.len().min(1 << 24); // keep extension ≤ 3 bytes
+        let n = take - 1;
+        if n < 60 {
+            out.push((n as u8) << 2);
+        } else if n < 256 {
+            out.push(60 << 2);
+            out.push(n as u8);
+        } else if n < 65536 {
+            out.push(61 << 2);
+            out.extend_from_slice(&(n as u16).to_le_bytes());
+        } else {
+            out.push(62 << 2);
+            out.extend_from_slice(&(n as u32).to_le_bytes()[..3]);
+        }
+        out.extend_from_slice(&rest[..take]);
+        rest = &rest[take..];
+    }
+}
+
+fn emit_copy(out: &mut Vec<u8>, offset: usize, mut len: usize) {
+    // copy-2 handles len 1..=64; split longer matches.
+    while len > 64 {
+        emit_copy2(out, offset, 64);
+        len -= 64;
+    }
+    if len >= 4 && len <= 11 && offset < 2048 {
+        // copy-1: len 4..=11, offset < 2^11
+        out.push(0b01 | (((len - 4) as u8) << 2) | (((offset >> 8) as u8) << 5));
+        out.push(offset as u8);
+    } else {
+        emit_copy2(out, offset, len);
+    }
+}
+
+fn emit_copy2(out: &mut Vec<u8>, offset: usize, len: usize) {
+    debug_assert!((1..=64).contains(&len) && offset <= 0xFFFF);
+    out.push(0b10 | (((len - 1) as u8) << 2));
+    out.extend_from_slice(&(offset as u16).to_le_bytes());
+}
+
+/// Decompress a Snappy raw buffer.
+pub fn decompress(src: &[u8]) -> anyhow::Result<Vec<u8>> {
+    let mut pos = 0usize;
+    let expect = get_uvarint(src, &mut pos)? as usize;
+    let mut out: Vec<u8> = Vec::with_capacity(expect);
+    while pos < src.len() {
+        let tag = src[pos];
+        pos += 1;
+        match tag & 0b11 {
+            0b00 => {
+                // literal
+                let code = (tag >> 2) as usize;
+                let len = if code < 60 {
+                    code + 1
+                } else {
+                    let nbytes = code - 59;
+                    if pos + nbytes > src.len() {
+                        anyhow::bail!("snappy: truncated literal length");
+                    }
+                    let mut v = 0usize;
+                    for k in 0..nbytes {
+                        v |= (src[pos + k] as usize) << (8 * k);
+                    }
+                    pos += nbytes;
+                    v + 1
+                };
+                if pos + len > src.len() {
+                    anyhow::bail!("snappy: literal overrun");
+                }
+                out.extend_from_slice(&src[pos..pos + len]);
+                pos += len;
+            }
+            0b01 => {
+                // copy-1
+                if pos >= src.len() {
+                    anyhow::bail!("snappy: truncated copy-1");
+                }
+                let len = 4 + ((tag >> 2) & 0x7) as usize;
+                let offset = (((tag >> 5) as usize) << 8) | src[pos] as usize;
+                pos += 1;
+                copy(&mut out, offset, len)?;
+            }
+            0b10 => {
+                // copy-2
+                if pos + 2 > src.len() {
+                    anyhow::bail!("snappy: truncated copy-2");
+                }
+                let len = 1 + (tag >> 2) as usize;
+                let offset = u16::from_le_bytes([src[pos], src[pos + 1]]) as usize;
+                pos += 2;
+                copy(&mut out, offset, len)?;
+            }
+            _ => {
+                // copy-4 (we never emit it, but decode for completeness)
+                if pos + 4 > src.len() {
+                    anyhow::bail!("snappy: truncated copy-4");
+                }
+                let len = 1 + (tag >> 2) as usize;
+                let offset =
+                    u32::from_le_bytes([src[pos], src[pos + 1], src[pos + 2], src[pos + 3]])
+                        as usize;
+                pos += 4;
+                copy(&mut out, offset, len)?;
+            }
+        }
+        if out.len() > expect {
+            anyhow::bail!("snappy: output exceeds declared length");
+        }
+    }
+    if out.len() != expect {
+        anyhow::bail!("snappy: output length {} != declared {}", out.len(), expect);
+    }
+    Ok(out)
+}
+
+fn copy(out: &mut Vec<u8>, offset: usize, len: usize) -> anyhow::Result<()> {
+    if offset == 0 || offset > out.len() {
+        anyhow::bail!("snappy: bad offset {} (output {})", offset, out.len());
+    }
+    let start = out.len() - offset;
+    for k in 0..len {
+        let b = out[start + k];
+        out.push(b);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(data: &[u8]) {
+        let c = compress(data);
+        let d = decompress(&c).unwrap();
+        assert_eq!(d, data, "len={}", data.len());
+    }
+
+    #[test]
+    fn empty_and_tiny() {
+        roundtrip(b"");
+        roundtrip(b"x");
+        roundtrip(b"abcdefg");
+    }
+
+    #[test]
+    fn repetitive() {
+        // Snappy's copy tags cap match length at 64, so an all-equal
+        // buffer costs ~3 bytes per 64 (unlike LZ4's run extension).
+        let data = vec![9u8; 100_000];
+        let c = compress(&data);
+        assert!(c.len() < 100_000 * 3 / 64 + 200, "c.len()={}", c.len());
+        assert_eq!(decompress(&c).unwrap(), data);
+    }
+
+    #[test]
+    fn long_literals() {
+        // incompressible run > 60 bytes exercises multi-byte literal tags
+        let mut rng = crate::util::rng::Rng::new(13);
+        for n in [61, 257, 70_000] {
+            let data: Vec<u8> = (0..n).map(|_| rng.next_u32() as u8).collect();
+            roundtrip(&data);
+        }
+    }
+
+    #[test]
+    fn overlapping_copies() {
+        let data: Vec<u8> = b"ab".iter().cycle().take(5000).copied().collect();
+        roundtrip(&data);
+    }
+
+    #[test]
+    fn corrupt_never_panics() {
+        let c = compress(b"some compressible data data data data");
+        for cut in 1..c.len() {
+            let _ = decompress(&c[..cut]);
+        }
+    }
+
+    #[test]
+    fn prop_roundtrip() {
+        crate::util::prop::check("snappy roundtrip", 80, |g| {
+            let n = g.len() * 8;
+            let data = g.bytes(n);
+            roundtrip(&data);
+        });
+    }
+}

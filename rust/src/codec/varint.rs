@@ -1,0 +1,142 @@
+//! LEB128 varints and zig-zag coding — the index-stream packing used by
+//! PULSELoCo's delta-varint payloads (paper §F.3) and the patch index
+//! pipeline (§H.2).
+
+/// Append `v` as an unsigned LEB128 varint.
+#[inline]
+pub fn put_uvarint(out: &mut Vec<u8>, mut v: u64) {
+    while v >= 0x80 {
+        out.push((v as u8 & 0x7F) | 0x80);
+        v >>= 7;
+    }
+    out.push(v as u8);
+}
+
+/// Read an unsigned varint from `buf[*pos..]`, advancing `pos`.
+#[inline]
+pub fn get_uvarint(buf: &[u8], pos: &mut usize) -> anyhow::Result<u64> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let b = *buf
+            .get(*pos)
+            .ok_or_else(|| anyhow::anyhow!("varint truncated at {}", pos))?;
+        *pos += 1;
+        if shift >= 64 {
+            anyhow::bail!("varint overflow");
+        }
+        v |= ((b & 0x7F) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+    }
+}
+
+/// Zig-zag encode a signed value (small magnitudes → small varints).
+#[inline]
+pub fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+/// Zig-zag decode.
+#[inline]
+pub fn unzigzag(v: u64) -> i64 {
+    ((v >> 1) as i64) ^ -((v & 1) as i64)
+}
+
+/// Number of bytes `v` occupies as a uvarint.
+#[inline]
+pub fn uvarint_len(v: u64) -> usize {
+    if v == 0 {
+        1
+    } else {
+        (64 - v.leading_zeros() as usize).div_ceil(7)
+    }
+}
+
+/// Encode sorted indices as first-absolute + varint gaps — the
+/// "delta-varint index" stream the paper's byte accounting uses (§F.3).
+pub fn encode_sorted_indices(indices: &[u64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(indices.len() + 8);
+    put_uvarint(&mut out, indices.len() as u64);
+    let mut prev = 0u64;
+    for (i, &idx) in indices.iter().enumerate() {
+        if i == 0 {
+            put_uvarint(&mut out, idx);
+        } else {
+            debug_assert!(idx > prev, "indices must be strictly increasing");
+            put_uvarint(&mut out, idx - prev);
+        }
+        prev = idx;
+    }
+    out
+}
+
+/// Decode the stream produced by [`encode_sorted_indices`].
+pub fn decode_sorted_indices(buf: &[u8], pos: &mut usize) -> anyhow::Result<Vec<u64>> {
+    let n = get_uvarint(buf, pos)? as usize;
+    let mut out = Vec::with_capacity(n);
+    let mut prev = 0u64;
+    for i in 0..n {
+        let v = get_uvarint(buf, pos)?;
+        let idx = if i == 0 { v } else { prev + v };
+        out.push(idx);
+        prev = idx;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uvarint_roundtrip_boundaries() {
+        for v in [0u64, 1, 127, 128, 16383, 16384, u32::MAX as u64, u64::MAX] {
+            let mut buf = Vec::new();
+            put_uvarint(&mut buf, v);
+            assert_eq!(buf.len(), uvarint_len(v), "v={}", v);
+            let mut pos = 0;
+            assert_eq!(get_uvarint(&buf, &mut pos).unwrap(), v);
+            assert_eq!(pos, buf.len());
+        }
+    }
+
+    #[test]
+    fn zigzag_roundtrip() {
+        for v in [0i64, 1, -1, 63, -64, i64::MAX, i64::MIN] {
+            assert_eq!(unzigzag(zigzag(v)), v);
+        }
+        // small magnitudes stay small
+        assert!(uvarint_len(zigzag(-3)) == 1);
+    }
+
+    #[test]
+    fn truncated_varint_errors() {
+        let buf = vec![0x80u8, 0x80];
+        let mut pos = 0;
+        assert!(get_uvarint(&buf, &mut pos).is_err());
+    }
+
+    #[test]
+    fn sorted_indices_roundtrip() {
+        crate::util::prop::check("sorted index roundtrip", 50, |g| {
+            let n = g.len();
+            let idx = g.sorted_indices(1 << 30, n);
+            let buf = encode_sorted_indices(&idx);
+            let mut pos = 0;
+            let back = decode_sorted_indices(&buf, &mut pos).unwrap();
+            assert_eq!(back, idx);
+            assert_eq!(pos, buf.len());
+        });
+    }
+
+    #[test]
+    fn gap_compression_beats_absolute() {
+        // dense gaps (mean ~16) → ~1 byte per index (paper §F.3)
+        let idx: Vec<u64> = (0..100_000u64).map(|i| i * 16).collect();
+        let buf = encode_sorted_indices(&idx);
+        assert!(buf.len() < idx.len() * 2, "len={}", buf.len());
+    }
+}

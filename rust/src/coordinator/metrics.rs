@@ -1,0 +1,88 @@
+//! CSV metrics emission for the paper harness (`results/*.csv`) — every
+//! figure/table is regenerated from these files.
+
+use anyhow::Result;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+pub struct CsvWriter {
+    file: std::fs::File,
+    pub path: PathBuf,
+    n_cols: usize,
+}
+
+impl CsvWriter {
+    /// Create (truncate) `path` with the given header columns.
+    pub fn create(path: &Path, columns: &[&str]) -> Result<CsvWriter> {
+        if let Some(p) = path.parent() {
+            std::fs::create_dir_all(p)?;
+        }
+        let mut file = std::fs::File::create(path)?;
+        writeln!(file, "{}", columns.join(","))?;
+        Ok(CsvWriter { file, path: path.to_path_buf(), n_cols: columns.len() })
+    }
+
+    pub fn row(&mut self, values: &[String]) -> Result<()> {
+        anyhow::ensure!(values.len() == self.n_cols, "row width mismatch");
+        writeln!(self.file, "{}", values.join(","))?;
+        Ok(())
+    }
+
+    pub fn rowf(&mut self, values: &[f64]) -> Result<()> {
+        self.row(&values.iter().map(|v| format!("{v}")).collect::<Vec<_>>())
+    }
+}
+
+/// Results directory: `$PULSE_RESULTS` or `<repo>/results`.
+pub fn results_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("PULSE_RESULTS") {
+        return PathBuf::from(d);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("results")
+}
+
+/// Render an aligned text table (paper-style rows) to stdout.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n== {} ==", title);
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:<w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    println!("{}", fmt_row(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>()));
+    println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("pulse_csv_{}", std::process::id()));
+        let p = dir.join("x/test.csv");
+        let mut w = CsvWriter::create(&p, &["a", "b"]).unwrap();
+        w.rowf(&[1.0, 2.5]).unwrap();
+        w.row(&["x".into(), "y".into()]).unwrap();
+        assert!(w.rowf(&[1.0]).is_err());
+        drop(w);
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        assert!(text.starts_with("a,b\n1,2.5\n"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,434 @@
+//! Training coordinator: the leader loop that composes the runtime
+//! (L2/L1 graphs), GRPO, AdamW, the sparsity meter, and the three
+//! trainer-to-trainer methods (DDP / DiLoCo / PULSELoCo) under the
+//! paper's shared-rollout-checkpoint protocol (§J.2): rollout workers
+//! serve the latest *global* checkpoint and are refreshed only at
+//! outer-round boundaries.
+
+pub mod metrics;
+pub mod sparsity;
+
+use crate::optim::{AdamConfig, AdamW};
+use crate::pulse::loco::{OuterLoop, OuterMethod, RoundStats};
+use crate::rl::grpo::{self, GrpoConfig};
+use crate::rl::tasks::{CodeTask, MathTask};
+use crate::rl::Task;
+use crate::runtime::ModelRuntime;
+use crate::util::rng::Rng;
+use anyhow::Result;
+use sparsity::SparsityMeter;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    /// One trainer (the §3 sparsity-characterization setting).
+    Single,
+    /// Per-step dense gradient all-reduce across R workers.
+    Ddp,
+    /// Dense FP32 pseudo-gradient sync every H steps.
+    DiLoCo,
+    /// BF16-gated sparse pseudo-gradient sync with error feedback.
+    PulseLoCo,
+}
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Single => "single",
+            Method::Ddp => "ddp",
+            Method::DiLoCo => "diloco",
+            Method::PulseLoCo => "pulseloco",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Method> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "single" => Method::Single,
+            "ddp" => Method::Ddp,
+            "diloco" => Method::DiLoCo,
+            "pulseloco" | "pulse" => Method::PulseLoCo,
+            other => anyhow::bail!("unknown method '{}'", other),
+        })
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskKind {
+    Math,
+    Code,
+}
+
+pub fn make_task(kind: TaskKind) -> Box<dyn Task> {
+    match kind {
+        TaskKind::Math => Box::new(MathTask::default()),
+        TaskKind::Code => Box::new(CodeTask::default()),
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub method: Method,
+    /// R trainers (paper uses 4).
+    pub workers: usize,
+    /// H local steps per outer round (DiLoCo/PULSELoCo).
+    pub local_steps: usize,
+    /// Total optimizer steps per worker.
+    pub steps: usize,
+    /// Rollout refresh interval S for Single (paper Fig. 4); multi-
+    /// trainer methods refresh at round boundaries per §J.2.
+    pub rollout_interval: usize,
+    pub adam: AdamConfig,
+    pub grpo: GrpoConfig,
+    pub seed: u64,
+    /// Evaluate pass@1 every this many global steps (0 = only at end).
+    pub eval_every: usize,
+    pub n_eval: usize,
+    pub sparsity_ks: Vec<usize>,
+    pub task: TaskKind,
+    /// Capture a BF16 checkpoint snapshot every N steps (0 = never) —
+    /// feeds the codec/compression tables.
+    pub capture_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            method: Method::Single,
+            workers: 1,
+            local_steps: 8,
+            steps: 50,
+            rollout_interval: 1,
+            adam: AdamConfig::default(),
+            grpo: GrpoConfig::default(),
+            seed: 0,
+            eval_every: 0,
+            n_eval: 64,
+            sparsity_ks: vec![1, 8, 16, 32],
+            task: TaskKind::Math,
+            capture_every: 0,
+        }
+    }
+}
+
+/// Per-optimizer-step log record.
+#[derive(Debug, Clone, Default)]
+pub struct StepLog {
+    pub step: u64,
+    pub loss: f64,
+    pub mean_reward: f64,
+    pub correct_rate: f64,
+    pub grad_density: f64,
+    pub lr: f64,
+    pub rho_mean: f64,
+    pub rho_max: f64,
+    /// (k, S_k) sparsity measurements available at this step.
+    pub sparsity: Vec<(usize, f64)>,
+    pub pass_at_1: Option<f64>,
+}
+
+/// Per-outer-round log (multi-trainer methods).
+#[derive(Debug, Clone, Default)]
+pub struct RoundLog {
+    pub round: u64,
+    pub global_step: u64,
+    pub mean_loss: f64,
+    pub mean_reward: f64,
+    pub pass_at_1: Option<f64>,
+    /// Per-worker communication stats for this round.
+    pub comm: Vec<RoundStats>,
+    /// BF16 checkpoint-patch sparsity between consecutive global
+    /// checkpoints (the paired-PULSESync measurement of Fig. 10 left).
+    pub ckpt_sparsity: f64,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct TrainResult {
+    pub steps: Vec<StepLog>,
+    pub rounds: Vec<RoundLog>,
+    pub final_pass_at_1: f64,
+    /// Captured BF16 checkpoints (step, view) for codec tables.
+    pub captures: Vec<(u64, Vec<u16>)>,
+}
+
+/// Run training per `cfg` against a loaded runtime. Single-threaded and
+/// deterministic given (cfg.seed, runtime artifacts).
+pub fn train(rt: &ModelRuntime, cfg: &TrainConfig) -> Result<TrainResult> {
+    match cfg.method {
+        Method::Single => train_single(rt, cfg),
+        Method::Ddp => train_ddp(rt, cfg),
+        Method::DiLoCo | Method::PulseLoCo => train_local_update(rt, cfg),
+    }
+}
+
+fn bf16_view_f32(master: &[f32]) -> Vec<f32> {
+    master.iter().map(|&x| crate::bf16::bf16_round(x)).collect()
+}
+
+fn train_single(rt: &ModelRuntime, cfg: &TrainConfig) -> Result<TrainResult> {
+    let task = make_task(cfg.task);
+    let mut rng = Rng::new(cfg.seed);
+    let mut master = init_master(rt, cfg.seed)?;
+    let mut opt = AdamW::new(master.len(), cfg.adam);
+    let mut meter = SparsityMeter::new(cfg.sparsity_ks.clone());
+    let mut result = TrainResult::default();
+    // record the initial view so k=1 is available from step 1
+    meter.record(&master);
+    let mut rollout_policy = bf16_view_f32(&master);
+    for step in 1..=cfg.steps as u64 {
+        // refresh rollout policy every S steps (S=1 → fully on-policy)
+        if (step - 1) % cfg.rollout_interval.max(1) as u64 == 0 {
+            rollout_policy = bf16_view_f32(&master);
+        }
+        let batch = grpo::generate_batch(rt, &rollout_policy, task.as_ref(), cfg.grpo, &mut rng)?;
+        let out = rt.grad(
+            &master,
+            &batch.tokens,
+            &batch.advantages,
+            &batch.old_logprobs,
+            &batch.mask,
+        )?;
+        let st = opt.step(&mut master, &out.grads);
+        let sparsity = meter.record(&master);
+        let pass_at_1 = if cfg.eval_every > 0 && step % cfg.eval_every as u64 == 0 {
+            Some(grpo::pass_at_1(rt, &bf16_view_f32(&master), task.as_ref(), cfg.n_eval, &mut rng)?)
+        } else {
+            None
+        };
+        if cfg.capture_every > 0 && step % cfg.capture_every as u64 == 0 {
+            let mut view = Vec::new();
+            crate::bf16::cast_slice_par(&master, &mut view);
+            result.captures.push((step, view));
+        }
+        result.steps.push(StepLog {
+            step,
+            loss: out.loss as f64,
+            mean_reward: batch.mean_reward,
+            correct_rate: batch.correct_rate,
+            grad_density: out.grad_density as f64,
+            lr: st.lr as f64,
+            rho_mean: st.rho_mean as f64,
+            rho_max: st.rho_max as f64,
+            sparsity,
+            pass_at_1,
+        });
+    }
+    result.final_pass_at_1 =
+        grpo::pass_at_1(rt, &bf16_view_f32(&master), task.as_ref(), cfg.n_eval, &mut rng)?;
+    Ok(result)
+}
+
+fn train_ddp(rt: &ModelRuntime, cfg: &TrainConfig) -> Result<TrainResult> {
+    let task = make_task(cfg.task);
+    let mut rng = Rng::new(cfg.seed);
+    let mut shard_rngs: Vec<Rng> = (0..cfg.workers).map(|w| rng.fork(w as u64)).collect();
+    let mut master = init_master(rt, cfg.seed)?;
+    let mut opt = AdamW::new(master.len(), cfg.adam);
+    let mut result = TrainResult::default();
+    let rounds = cfg.steps / cfg.local_steps.max(1);
+    let mut global_step = 0u64;
+    for round in 1..=rounds as u64 {
+        let mut mean_loss = 0.0;
+        let mut mean_reward = 0.0;
+        for _ in 0..cfg.local_steps {
+            global_step += 1;
+            let policy = bf16_view_f32(&master); // DDP is on-policy
+            let mut grads: Vec<Vec<f32>> = Vec::with_capacity(cfg.workers);
+            for w in 0..cfg.workers {
+                let batch =
+                    grpo::generate_batch(rt, &policy, task.as_ref(), cfg.grpo, &mut shard_rngs[w])?;
+                let out = rt.grad(
+                    &master,
+                    &batch.tokens,
+                    &batch.advantages,
+                    &batch.old_logprobs,
+                    &batch.mask,
+                )?;
+                mean_loss += out.loss as f64;
+                mean_reward += batch.mean_reward;
+                grads.push(out.grads);
+            }
+            crate::baselines::allreduce_mean(&mut grads);
+            opt.step(&mut master, &grads[0]);
+        }
+        let denom = (cfg.local_steps * cfg.workers) as f64;
+        let pass_at_1 = if should_eval(cfg, round, rounds as u64) {
+            Some(grpo::pass_at_1(rt, &bf16_view_f32(&master), task.as_ref(), cfg.n_eval, &mut rng)?)
+        } else {
+            None
+        };
+        // communication: H dense FP32 grads per worker per round
+        let comm = (0..cfg.workers)
+            .map(|_| RoundStats {
+                round,
+                comm_sparsity: 0.0,
+                raw_payload_bytes: crate::baselines::ddp_bytes_per_round(
+                    master.len() as u64,
+                    cfg.local_steps as u64,
+                ),
+                encoded_payload_bytes: crate::baselines::ddp_bytes_per_round(
+                    master.len() as u64,
+                    cfg.local_steps as u64,
+                ),
+                shuffled_zstd3_bytes: crate::baselines::ddp_bytes_per_round(
+                    master.len() as u64,
+                    cfg.local_steps as u64,
+                ),
+                dense_bytes: crate::baselines::ddp_bytes_per_round(
+                    master.len() as u64,
+                    cfg.local_steps as u64,
+                ),
+                residual_l1: 0.0,
+            })
+            .collect();
+        result.rounds.push(RoundLog {
+            round,
+            global_step,
+            mean_loss: mean_loss / denom,
+            mean_reward: mean_reward / denom,
+            pass_at_1,
+            comm,
+            ckpt_sparsity: 0.0,
+        });
+    }
+    result.final_pass_at_1 =
+        grpo::pass_at_1(rt, &bf16_view_f32(&master), task.as_ref(), cfg.n_eval, &mut rng)?;
+    Ok(result)
+}
+
+fn train_local_update(rt: &ModelRuntime, cfg: &TrainConfig) -> Result<TrainResult> {
+    let task = make_task(cfg.task);
+    let mut rng = Rng::new(cfg.seed);
+    let mut shard_rngs: Vec<Rng> = (0..cfg.workers).map(|w| rng.fork(w as u64)).collect();
+    let theta0 = init_master(rt, cfg.seed)?;
+    let method = if cfg.method == Method::DiLoCo {
+        OuterMethod::DiLoCo
+    } else {
+        OuterMethod::PulseLoCo
+    };
+    let mut outer = OuterLoop::new(method, theta0, cfg.workers);
+    // persistent inner Adam state per worker (standard DiLoCo practice)
+    let mut inner: Vec<AdamW> =
+        (0..cfg.workers).map(|_| AdamW::new(outer.theta.len(), cfg.adam)).collect();
+    let mut result = TrainResult::default();
+    let rounds = cfg.steps / cfg.local_steps.max(1);
+    let mut global_step = 0u64;
+    let mut prev_ckpt: Vec<u16> = Vec::new();
+    crate::bf16::cast_slice_par(&outer.theta, &mut prev_ckpt);
+    for round in 1..=rounds as u64 {
+        // rollout workers serve the shared global checkpoint (§J.2)
+        let rollout_policy = bf16_view_f32(&outer.theta);
+        let mut mean_loss = 0.0;
+        let mut mean_reward = 0.0;
+        let mut locals: Vec<Vec<f32>> = Vec::with_capacity(cfg.workers);
+        for w in 0..cfg.workers {
+            let mut local = outer.theta.clone();
+            for _ in 0..cfg.local_steps {
+                global_step += 1;
+                let batch = grpo::generate_batch(
+                    rt,
+                    &rollout_policy,
+                    task.as_ref(),
+                    cfg.grpo,
+                    &mut shard_rngs[w],
+                )?;
+                let out = rt.grad(
+                    &local,
+                    &batch.tokens,
+                    &batch.advantages,
+                    &batch.old_logprobs,
+                    &batch.mask,
+                )?;
+                inner[w].step(&mut local, &out.grads);
+                mean_loss += out.loss as f64;
+                mean_reward += batch.mean_reward;
+            }
+            locals.push(local);
+        }
+        let comm = outer.round(&locals)?;
+        // paired PULSESync measurement: patch sparsity between global
+        // checkpoints (each spans H local steps + one outer update)
+        let mut ckpt = Vec::new();
+        crate::bf16::cast_slice_par(&outer.theta, &mut ckpt);
+        let ckpt_sparsity = sparsity::sparsity_between(&prev_ckpt, &ckpt);
+        prev_ckpt = ckpt;
+        let denom = (cfg.local_steps * cfg.workers) as f64;
+        let pass_at_1 = if should_eval(cfg, round, rounds as u64) {
+            Some(grpo::pass_at_1(
+                rt,
+                &bf16_view_f32(&outer.theta),
+                task.as_ref(),
+                cfg.n_eval,
+                &mut rng,
+            )?)
+        } else {
+            None
+        };
+        result.rounds.push(RoundLog {
+            round,
+            global_step,
+            mean_loss: mean_loss / denom,
+            mean_reward: mean_reward / denom,
+            pass_at_1,
+            comm,
+            ckpt_sparsity,
+        });
+    }
+    result.final_pass_at_1 = grpo::pass_at_1(
+        rt,
+        &bf16_view_f32(&outer.theta),
+        task.as_ref(),
+        cfg.n_eval,
+        &mut rng,
+    )?;
+    Ok(result)
+}
+
+fn should_eval(cfg: &TrainConfig, round: u64, total_rounds: u64) -> bool {
+    if cfg.eval_every == 0 {
+        return round == total_rounds;
+    }
+    let steps_per_round = cfg.local_steps.max(1) as u64;
+    (round * steps_per_round) % cfg.eval_every as u64 == 0 || round == total_rounds
+}
+
+/// Initialize the master weights: use the shipped init.bin when the
+/// size provides one (so runs are comparable with the python oracle),
+/// otherwise a magnitude-calibrated random init.
+pub fn init_master(rt: &ModelRuntime, seed: u64) -> Result<Vec<f32>> {
+    if rt.manifest.init.is_some() {
+        let mut flat = rt.load_init(&crate::runtime::artifacts_dir())?;
+        if seed != 0 {
+            // decorrelate seeds: tiny sub-cell jitter (invisible to BF16
+            // at init, but changes rollout sampling via logits noise
+            // after the first few updates) plus reshuffled sign pattern
+            // would alter the model; instead we perturb at half-cell
+            // scale so runs differ while magnitudes stay calibrated.
+            let mut rng = Rng::new(seed);
+            for x in flat.iter_mut() {
+                let cell = crate::bf16::bf16_ulp(*x);
+                *x += (rng.f32() - 0.5) * cell;
+            }
+        }
+        Ok(flat)
+    } else {
+        // large/xl sizes ship no init.bin (it would be hundreds of MB);
+        // generate the same magnitude-calibrated scheme as
+        // model.init_params: fan-in-scaled normals, γ=1, b=0.
+        let mut rng = Rng::new(0xC0DE ^ seed);
+        let mut flat = vec![0.0f32; rt.manifest.n_params];
+        for t in &rt.manifest.layout {
+            let seg = &mut flat[t.offset..t.offset + t.len()];
+            if t.name.ends_with("_g") {
+                seg.fill(1.0);
+            } else if t.name.ends_with("_b") || t.name.ends_with("b1") || t.name.ends_with("b2")
+            {
+                seg.fill(0.0);
+            } else if t.name == "embed" || t.name == "pos" {
+                rng.fill_normal_f32(seg, 0.02);
+            } else {
+                let std = 1.0 / (t.rows as f32).sqrt();
+                rng.fill_normal_f32(seg, std);
+            }
+        }
+        Ok(flat)
+    }
+}

@@ -1,0 +1,112 @@
+//! Sparsity metering (paper §3, Def. A.1/A.2): maintains a ring of BF16
+//! snapshots of the master weights and reports k-step compute-view
+//! sparsity S_k = |{i : cast(θ_t) == cast(θ_{t+k})}| / d, bitwise.
+
+use crate::bf16;
+
+pub struct SparsityMeter {
+    /// Comparison distances (paper uses k ∈ {1, 8, 16, 32}).
+    pub ks: Vec<usize>,
+    ring: Vec<Vec<u16>>, // ring[t % cap]
+    cap: usize,
+    t: usize, // number of snapshots recorded
+    scratch: Vec<u16>,
+}
+
+impl SparsityMeter {
+    pub fn new(ks: Vec<usize>) -> SparsityMeter {
+        let cap = ks.iter().copied().max().unwrap_or(1) + 1;
+        SparsityMeter { ks, ring: Vec::new(), cap, t: 0, scratch: Vec::new() }
+    }
+
+    /// Record the BF16 view of `master` after an optimizer step and
+    /// return (k, sparsity) for every k with enough history.
+    pub fn record(&mut self, master: &[f32]) -> Vec<(usize, f64)> {
+        bf16::cast_slice_par(master, &mut self.scratch);
+        let snapshot = self.scratch.clone();
+        if self.ring.len() < self.cap {
+            self.ring.push(snapshot);
+        } else {
+            self.ring[self.t % self.cap] = snapshot;
+        }
+        self.t += 1;
+        let mut out = Vec::new();
+        for &k in &self.ks {
+            if self.t > k {
+                let cur = &self.ring[(self.t - 1) % self.cap];
+                let old = &self.ring[(self.t - 1 - k) % self.cap];
+                out.push((k, sparsity_between(old, cur)));
+            }
+        }
+        out
+    }
+
+    pub fn steps(&self) -> usize {
+        self.t
+    }
+}
+
+/// Fraction of bitwise-equal positions between two BF16 views.
+pub fn sparsity_between(a: &[u16], b: &[u16]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let same: usize = crate::util::pool::par_ranges(a.len(), 1 << 16, |r| {
+        let mut c = 0usize;
+        for i in r {
+            if a[i] == b[i] {
+                c += 1;
+            }
+        }
+        c
+    })
+    .into_iter()
+    .sum();
+    same as f64 / a.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn k_step_windows() {
+        let mut m = SparsityMeter::new(vec![1, 2]);
+        let n = 1000;
+        let mut w = vec![1.0f32; n];
+        assert!(m.record(&w).is_empty()); // t=1: no history
+        // change 10% of weights per step (by >1 cell)
+        for step in 0..5 {
+            for i in (step * 100)..(step * 100 + 100) {
+                w[i] *= 1.5;
+            }
+            let out = m.record(&w);
+            let s1 = out.iter().find(|(k, _)| *k == 1).map(|(_, s)| *s).unwrap();
+            assert!((s1 - 0.9).abs() < 1e-9, "s1={}", s1);
+            if step >= 1 {
+                let s2 = out.iter().find(|(k, _)| *k == 2).map(|(_, s)| *s).unwrap();
+                assert!((s2 - 0.8).abs() < 1e-9, "s2={}", s2);
+            }
+        }
+    }
+
+    #[test]
+    fn identical_views_are_fully_sparse() {
+        let mut m = SparsityMeter::new(vec![1]);
+        let w = vec![0.5f32; 100];
+        m.record(&w);
+        let out = m.record(&w);
+        assert_eq!(out, vec![(1, 1.0)]);
+    }
+
+    #[test]
+    fn sub_cell_drift_is_invisible() {
+        // FP32 master drifts by < half a cell → BF16 view unchanged.
+        let mut m = SparsityMeter::new(vec![1]);
+        let mut w: Vec<f32> = (0..100).map(|i| 0.5 + i as f32 * 1e-4).collect();
+        m.record(&w);
+        for x in w.iter_mut() {
+            *x += 1e-5; // cell radius at 0.5 is ~2e-3
+        }
+        let out = m.record(&w);
+        assert_eq!(out[0].1, 1.0);
+    }
+}

@@ -1,0 +1,135 @@
+//! FP32 error-feedback buffer for PULSELoCo (paper §4.3, Alg. 2 lines
+//! 8–11).
+//!
+//! Entries that fail the gate are *kept, not dropped*: they accumulate in
+//! the buffer and are reconsidered (added to the next pseudo-gradient)
+//! every round — mirroring how sub-cell updates accumulate in FP32
+//! master weights until they cross a BF16 boundary.
+
+use crate::bf16::Dtype;
+
+/// Per-worker error-feedback state.
+#[derive(Debug, Clone)]
+pub struct ErrorFeedback {
+    pub residual: Vec<f32>,
+    pub dtype: Dtype,
+}
+
+/// Output of one gating round.
+pub struct Gated {
+    /// Indices selected for synchronization (sorted).
+    pub indices: Vec<u64>,
+    /// FP32 values of the *combined* update (Δ + e) at those indices.
+    pub values: Vec<f32>,
+    /// Total combined-update entries considered.
+    pub total: usize,
+}
+
+impl Gated {
+    pub fn sparsity(&self) -> f64 {
+        crate::sparse::sparsity(self.indices.len(), self.total)
+    }
+}
+
+impl ErrorFeedback {
+    pub fn new(n: usize, dtype: Dtype) -> Self {
+        ErrorFeedback { residual: vec![0.0; n], dtype }
+    }
+
+    /// Alg. 2 lines 8–11: form `s = delta + e`, gate it against `theta`,
+    /// zero the sent entries of `e`, and keep the unsent entries.
+    /// Returns the sparse payload to synchronize.
+    pub fn gate_and_update(&mut self, theta: &[f32], delta: &[f32]) -> Gated {
+        assert_eq!(theta.len(), delta.len());
+        assert_eq!(theta.len(), self.residual.len());
+        // s_r^(t) = Δ_r^(t) + e_r^(t-1)
+        let s: Vec<f32> =
+            delta.iter().zip(&self.residual).map(|(&d, &e)| d + e).collect();
+        let indices = super::gate(self.dtype, theta, &s);
+        let values: Vec<f32> = indices.iter().map(|&i| s[i as usize]).collect();
+        // e[sent] = 0 ; e[unsent] = s[unsent]
+        self.residual.copy_from_slice(&s);
+        for &i in &indices {
+            self.residual[i as usize] = 0.0;
+        }
+        Gated { indices, values, total: theta.len() }
+    }
+
+    /// L∞ of the residual (diagnostic).
+    pub fn residual_linf(&self) -> f32 {
+        self.residual.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// Sum |e| (diagnostic: how much update is in flight).
+    pub fn residual_l1(&self) -> f64 {
+        self.residual.iter().map(|&x| x.abs() as f64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn conservation_sent_plus_kept_equals_s() {
+        // Invariant: after gating, payload(i)+residual(i) reconstruct
+        // s = delta + e_prev exactly at every position.
+        crate::util::prop::check("error feedback conserves mass", 30, |g| {
+            let n = g.len().max(1);
+            let theta = g.f32_vec(n);
+            let mut ef = ErrorFeedback::new(n, Dtype::Bf16);
+            for x in ef.residual.iter_mut() {
+                *x = (g.rng.normal() as f32) * 1e-6;
+            }
+            let e_prev = ef.residual.clone();
+            let delta: Vec<f32> = (0..n).map(|_| (g.rng.normal() as f32) * 1e-5).collect();
+            let out = ef.gate_and_update(&theta, &delta);
+            // reconstruct s from (payload, residual)
+            let mut s_rec = ef.residual.clone();
+            for (&i, &v) in out.indices.iter().zip(&out.values) {
+                assert_eq!(s_rec[i as usize], 0.0, "sent entry must be cleared");
+                s_rec[i as usize] = v;
+            }
+            for i in 0..n {
+                let expect = delta[i] + e_prev[i];
+                assert_eq!(s_rec[i], expect, "i={}", i);
+            }
+        });
+    }
+
+    #[test]
+    fn small_updates_accumulate_until_visible() {
+        // A constant sub-cell update must eventually pass the gate via
+        // the error buffer (paper: "accumulate until they become
+        // visible").
+        let theta = vec![0.5f32; 4];
+        let mut ef = ErrorFeedback::new(4, Dtype::Bf16);
+        // cell radius at 0.5 is ~0.5/256 ≈ 1.95e-3; send 1e-4 per round
+        let delta = vec![1e-4f32; 4];
+        let mut sent_round = None;
+        for round in 0..100 {
+            let out = ef.gate_and_update(&theta, &delta);
+            if !out.indices.is_empty() {
+                sent_round = Some(round);
+                break;
+            }
+        }
+        let r = sent_round.expect("update never became visible");
+        assert!(r >= 5 && r <= 40, "accumulated for {} rounds", r);
+    }
+
+    #[test]
+    fn visible_updates_sent_immediately_and_buffer_stays_clean() {
+        let mut rng = Rng::new(3);
+        let n = 1000;
+        let theta: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let mut ef = ErrorFeedback::new(n, Dtype::Bf16);
+        let delta: Vec<f32> = theta.iter().map(|&t| t * 0.05).collect(); // 5% change
+        let out = ef.gate_and_update(&theta, &delta);
+        assert!(out.indices.len() > n * 9 / 10);
+        for &i in &out.indices {
+            assert_eq!(ef.residual[i as usize], 0.0);
+        }
+    }
+}

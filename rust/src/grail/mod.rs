@@ -1,0 +1,418 @@
+//! grail — the decentralized RL deployment substrate (paper §E).
+//!
+//! Three node roles coordinate exclusively through the S3-like object
+//! store: **miners** pull the latest checkpoint via a PULSESync
+//! [`Consumer`], generate rollouts and upload them with grail-Proof
+//! sketches; **validators** recompute logprobs under the claimed
+//! checkpoint and mark uploads verified; the **trainer** consumes
+//! verified rollouts through a staleness-weighted [`replay`] buffer,
+//! performs GRPO/AdamW updates, and publishes sparse BF16 patches via a
+//! PULSESync [`Publisher`] at window boundaries.
+//!
+//! [`GrailSim`] drives all roles in-process against one shared compiled
+//! runtime (each role keeps its *own weights*; see DESIGN.md §2 for the
+//! substitution ledger versus the paper's live deployment).
+
+pub mod proof;
+pub mod replay;
+
+use crate::optim::{AdamConfig, AdamW};
+use crate::pulse::sync::{Consumer, Publisher};
+use crate::rl::{grpo, Instance, Task};
+use crate::runtime::ModelRuntime;
+use crate::storage::ObjectStore;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::{bail, Context, Result};
+use replay::{Entry, ReplayBuffer, ReplayConfig};
+
+/// Serialize a rollout upload (tokens + logprobs + proofs + instances).
+pub fn encode_rollout(entry: &Entry, proofs: &[Vec<u32>], beacon: u64) -> String {
+    let mut j = Json::obj();
+    j.set("window", entry.window.into())
+        .set("miner", entry.miner.into())
+        .set("beacon", beacon.into())
+        .set("tokens", Json::Arr(entry.tokens.iter().map(|&t| (t as i64).into()).collect()))
+        .set(
+            "logprobs",
+            Json::Arr(entry.logprobs.iter().map(|&x| (x as f64).into()).collect()),
+        )
+        .set(
+            "proofs",
+            Json::Arr(
+                proofs
+                    .iter()
+                    .map(|row| Json::Arr(row.iter().map(|&p| (p as u64).into()).collect()))
+                    .collect(),
+            ),
+        )
+        .set("instances", Json::Arr(entry.instances.iter().map(encode_instance).collect()));
+    j.to_string()
+}
+
+fn encode_instance(inst: &Instance) -> Json {
+    let mut j = Json::obj();
+    match inst {
+        Instance::Math { answer } => {
+            j.set("kind", "math".into()).set(
+                "answer",
+                Json::Arr(answer.iter().map(|&d| (d as u64).into()).collect()),
+            );
+        }
+        Instance::Code { tests } => {
+            j.set("kind", "code".into()).set(
+                "tests",
+                Json::Arr(
+                    tests
+                        .iter()
+                        .map(|(x, y)| Json::Arr(vec![(*x).into(), (*y).into()]))
+                        .collect(),
+                ),
+            );
+        }
+    }
+    j
+}
+
+fn decode_instance(j: &Json) -> Result<Instance> {
+    match j.req_str("kind")? {
+        "math" => Ok(Instance::Math {
+            answer: j
+                .req("answer")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|x| x.as_f64())
+                .map(|x| x as u8)
+                .collect(),
+        }),
+        "code" => Ok(Instance::Code {
+            tests: j
+                .req("tests")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|t| {
+                    Some((t.idx(0)?.as_i64()?, t.idx(1)?.as_i64()?))
+                })
+                .collect(),
+        }),
+        other => bail!("unknown instance kind '{}'", other),
+    }
+}
+
+/// Parse a rollout upload back into (entry, proofs, beacon).
+pub fn decode_rollout(text: &str) -> Result<(Entry, Vec<Vec<u32>>, u64)> {
+    let j = Json::parse(text)?;
+    let entry = Entry {
+        window: j.req_f64("window")? as u64,
+        miner: j.req_f64("miner")? as usize,
+        tokens: j
+            .req("tokens")?
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|x| x.as_i64())
+            .map(|x| x as i32)
+            .collect(),
+        logprobs: j
+            .req("logprobs")?
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|x| x.as_f64())
+            .map(|x| x as f32)
+            .collect(),
+        instances: j
+            .req("instances")?
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(decode_instance)
+            .collect::<Result<Vec<_>>>()?,
+    };
+    let proofs: Vec<Vec<u32>> = j
+        .req("proofs")?
+        .as_arr()
+        .unwrap_or(&[])
+        .iter()
+        .map(|row| {
+            row.as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|x| x.as_f64())
+                .map(|x| x as u32)
+                .collect()
+        })
+        .collect();
+    Ok((entry, proofs, j.req_f64("beacon")? as u64))
+}
+
+/// Per-window statistics (the Fig. 6 series).
+#[derive(Debug, Clone, Default)]
+pub struct WindowStats {
+    pub window: u64,
+    pub pass_at_1: f64,
+    pub upload_bytes: u64,
+    pub full_checkpoint_bytes: u64,
+    pub verified: usize,
+    pub rejected: usize,
+    pub train_steps: usize,
+    pub mean_reward: f64,
+    pub replay_mean_age: f64,
+}
+
+/// Configuration for the in-process deployment simulation.
+#[derive(Debug, Clone, Copy)]
+pub struct GrailConfig {
+    pub n_miners: usize,
+    /// Optimizer steps per window (paper: "up to 8 per ~6 min window").
+    pub steps_per_window: usize,
+    /// Rollout batches each miner uploads per window.
+    pub batches_per_miner: usize,
+    /// PULSESync anchor interval k.
+    pub anchor_interval: u64,
+    /// grail-Proof bucket tolerance.
+    pub proof_tolerance: i32,
+    /// Evaluation problems for pass@1.
+    pub n_eval: usize,
+}
+
+impl Default for GrailConfig {
+    fn default() -> Self {
+        GrailConfig {
+            n_miners: 2,
+            steps_per_window: 4,
+            batches_per_miner: 1,
+            anchor_interval: 50,
+            proof_tolerance: 2,
+            n_eval: 64,
+        }
+    }
+}
+
+/// The in-process grail deployment: one trainer, N miners, one
+/// validator, coordinating via an object store.
+pub struct GrailSim<'a> {
+    pub rt: &'a ModelRuntime,
+    pub task: &'a dyn Task,
+    pub cfg: GrailConfig,
+    pub grpo: grpo::GrpoConfig,
+    pub store: ObjectStore,
+    pub publisher: Publisher,
+    /// One consumer per miner + one for the validator.
+    pub miners: Vec<Consumer>,
+    pub validator: Consumer,
+    pub replay: ReplayBuffer,
+    pub master: Vec<f32>,
+    pub opt: AdamW,
+    pub step: u64,
+    pub rng: Rng,
+}
+
+impl<'a> GrailSim<'a> {
+    pub fn new(
+        rt: &'a ModelRuntime,
+        task: &'a dyn Task,
+        cfg: GrailConfig,
+        master: Vec<f32>,
+        adam: AdamConfig,
+        seed: u64,
+    ) -> Result<GrailSim<'a>> {
+        let store = ObjectStore::temp("grail")?;
+        let layout = rt.manifest.layout.clone();
+        let mut bf16_view = Vec::new();
+        crate::bf16::cast_slice_par(&master, &mut bf16_view);
+        let publisher = Publisher::new(
+            store.clone(),
+            "ckpt",
+            layout.clone(),
+            bf16_view,
+            cfg.anchor_interval,
+        )?;
+        let miners =
+            (0..cfg.n_miners).map(|_| Consumer::new(store.clone(), "ckpt", layout.clone())).collect();
+        let validator = Consumer::new(store.clone(), "ckpt", layout.clone());
+        let n = master.len();
+        Ok(GrailSim {
+            rt,
+            task,
+            cfg,
+            grpo: grpo::GrpoConfig::default(),
+            store,
+            publisher,
+            miners,
+            validator,
+            replay: ReplayBuffer::new(ReplayConfig::default()),
+            master,
+            opt: AdamW::new(n, adam),
+            step: 0,
+            rng: Rng::new(seed),
+        })
+    }
+
+    /// Expand a consumer's BF16 weights to the f32 vector the runtime
+    /// takes (bit-exact: bf16 → f32 widening is lossless).
+    fn consumer_f32(c: &Consumer) -> Vec<f32> {
+        c.weights
+            .as_ref()
+            .expect("consumer not synchronized")
+            .iter()
+            .map(|&b| crate::bf16::bf16_bits_to_f32(b))
+            .collect()
+    }
+
+    /// Run one full window: miners sync + generate + upload; validator
+    /// verifies; trainer trains and publishes. Returns the window stats.
+    pub fn run_window(&mut self, window: u64) -> Result<WindowStats> {
+        let beacon = 0x6A11u64 ^ window;
+        let mut stats = WindowStats { window, ..Default::default() };
+        let d = self.rt.manifest.dims.clone();
+
+        // -- miners: sync to latest checkpoint, roll out, upload
+        for m in 0..self.cfg.n_miners {
+            self.miners[m].synchronize()?;
+            let flat = Self::consumer_f32(&self.miners[m]);
+            for b in 0..self.cfg.batches_per_miner {
+                let (prompts, instances) = grpo::sample_prompts(
+                    self.task,
+                    d.batch,
+                    d.prompt_len,
+                    self.grpo.group,
+                    &mut self.rng,
+                );
+                let key = [self.rng.next_u32(), self.rng.next_u32()];
+                let ro = self.rt.rollout(&flat, &prompts, key, self.grpo.temperature)?;
+                let entry = Entry {
+                    window,
+                    miner: m,
+                    tokens: ro.tokens.clone(),
+                    logprobs: ro.logprobs.clone(),
+                    instances,
+                };
+                // per-row proofs over the generated tokens
+                let proofs: Vec<Vec<u32>> = (0..d.batch)
+                    .map(|row| {
+                        let toks =
+                            &ro.tokens[row * d.seq + d.prompt_len..(row + 1) * d.seq];
+                        let lps = &ro.logprobs[row * d.gen_len..(row + 1) * d.gen_len];
+                        proof::prove(beacon, toks, lps)
+                    })
+                    .collect();
+                let body = encode_rollout(&entry, &proofs, beacon);
+                self.store.put(
+                    &format!("rollouts/w{:06}/miner{}_b{}.json", window, m, b),
+                    body.as_bytes(),
+                )?;
+            }
+        }
+
+        // -- validator: recompute logprobs under the claimed checkpoint
+        self.validator.synchronize()?;
+        let vflat = Self::consumer_f32(&self.validator);
+        for key in self.store.list(&format!("rollouts/w{:06}", window))? {
+            let (entry, proofs, beacon_claimed) =
+                decode_rollout(&String::from_utf8(self.store.get(&key)?)?)
+                    .with_context(|| key.clone())?;
+            let (relp, _) = self.rt.score(&vflat, &entry.tokens)?;
+            let mut ok = beacon_claimed == beacon;
+            if ok {
+                for row in 0..d.batch {
+                    let toks =
+                        &entry.tokens[row * d.seq + d.prompt_len..(row + 1) * d.seq];
+                    let lps = &relp[row * d.gen_len..(row + 1) * d.gen_len];
+                    if !proof::verify(beacon, toks, lps, &proofs[row], self.cfg.proof_tolerance)
+                    {
+                        ok = false;
+                        break;
+                    }
+                }
+            }
+            if ok {
+                stats.verified += 1;
+                self.store.put(&format!("{}.verified", key), b"")?;
+                self.replay.push(entry);
+            } else {
+                stats.rejected += 1;
+            }
+        }
+        self.replay.advance_window(window);
+
+        // -- trainer: sample replay, GRPO + AdamW, publish patches
+        for _ in 0..self.cfg.steps_per_window {
+            if self.replay.is_empty() {
+                break;
+            }
+            let entry = self.replay.sample(1, &mut self.rng)[0].clone();
+            let batch = grpo::build_batch(
+                &d,
+                self.task,
+                &entry.instances,
+                entry.tokens,
+                entry.logprobs,
+                self.grpo,
+            )?;
+            let out = self.rt.grad(
+                &self.master,
+                &batch.tokens,
+                &batch.advantages,
+                &batch.old_logprobs,
+                &batch.mask,
+            )?;
+            self.opt.step(&mut self.master, &out.grads);
+            self.step += 1;
+            stats.train_steps += 1;
+            stats.mean_reward = batch.mean_reward;
+            // publish the new BF16 view as a sparse patch
+            let mut view = Vec::new();
+            crate::bf16::cast_slice_par(&self.master, &mut view);
+            let ps = self.publisher.publish(self.step, &view)?;
+            stats.upload_bytes += ps.patch_bytes;
+        }
+        stats.full_checkpoint_bytes =
+            (self.rt.manifest.n_params * 2 * stats.train_steps.max(1)) as u64;
+        stats.replay_mean_age = self.replay.mean_age();
+
+        // -- evaluation: greedy pass@1 on fresh problems with the
+        //    *published* checkpoint (what inference workers serve)
+        let mut eval_consumer =
+            Consumer::new(self.store.clone(), "ckpt", self.rt.manifest.layout.clone());
+        eval_consumer.synchronize()?;
+        let eflat = Self::consumer_f32(&eval_consumer);
+        stats.pass_at_1 =
+            grpo::pass_at_1(self.rt, &eflat, self.task, self.cfg.n_eval, &mut self.rng)?;
+        Ok(stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rollout_roundtrip_json() {
+        let entry = Entry {
+            window: 3,
+            miner: 1,
+            tokens: vec![1, 2, 3, 4],
+            logprobs: vec![-0.5, -1.25],
+            instances: vec![
+                Instance::Math { answer: vec![4, 2] },
+                Instance::Code { tests: vec![(2, 4), (-3, 9)] },
+            ],
+        };
+        let proofs = vec![vec![1u32, 2, 3], vec![4, 5, 6]];
+        let text = encode_rollout(&entry, &proofs, 99);
+        let (e2, p2, b2) = decode_rollout(&text).unwrap();
+        assert_eq!(e2.window, 3);
+        assert_eq!(e2.miner, 1);
+        assert_eq!(e2.tokens, entry.tokens);
+        assert_eq!(e2.logprobs, entry.logprobs);
+        assert_eq!(p2, proofs);
+        assert_eq!(b2, 99);
+        match &e2.instances[1] {
+            Instance::Code { tests } => assert_eq!(tests, &vec![(2, 4), (-3, 9)]),
+            _ => panic!("wrong instance"),
+        }
+    }
+}

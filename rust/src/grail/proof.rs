@@ -1,0 +1,131 @@
+//! grail Proof — rollout-authenticity verification (paper §E.3).
+//!
+//! Miners commit to the model outputs that produced each rollout:
+//! per generated token, the behaviour-policy logprob is log-quantized
+//! (heavy-tailed activations → log buckets) and hashed together with
+//! the token id, position and a per-window beacon into a 4-byte sketch.
+//! Validators recompute logprobs under the *claimed checkpoint* with
+//! their own runtime and accept a sketch if it matches within an
+//! adaptive tolerance of ±1 quantization bucket (numerical drift across
+//! hardware). A miner serving a stale or modified checkpoint produces
+//! logprobs in different buckets and fails verification.
+//!
+//! (The paper sketches top-32 hidden-state dimensions; we commit to
+//! per-token logprobs — the same "cheap commitment to model internals"
+//! mechanism using what our runtime exposes. DESIGN.md §2.)
+
+use sha2::{Digest, Sha256};
+
+/// Bucket width in log-probability space. Cross-hardware numerical
+/// drift moves logprobs by ≲1e-3 nats (well inside ±1 bucket at
+/// tolerance 1), while even one optimizer step at RL learning rates
+/// moves sampled-token logprobs by ≫0.04 nats once training is under
+/// way — so stale/modified checkpoints fail verification.
+pub const BUCKET_NATS: f32 = 0.02;
+
+/// Quantization: linear buckets in log-probability (= logarithmic in
+/// probability, handling the heavy-tailed distribution), clamped.
+pub fn log_quantize(x: f32) -> i32 {
+    let b = (x / BUCKET_NATS).round();
+    b.clamp(-1e6, 1e6) as i32
+}
+
+/// 4-byte sketch of (beacon, position, token, bucket).
+pub fn sketch(beacon: u64, pos: usize, token: i32, bucket: i32) -> u32 {
+    let mut h = Sha256::new();
+    h.update(beacon.to_le_bytes());
+    h.update((pos as u64).to_le_bytes());
+    h.update(token.to_le_bytes());
+    h.update(bucket.to_le_bytes());
+    let d = h.finalize();
+    u32::from_le_bytes([d[0], d[1], d[2], d[3]])
+}
+
+/// Miner side: sketch every generated token of a rollout row.
+pub fn prove(beacon: u64, tokens: &[i32], logprobs: &[f32]) -> Vec<u32> {
+    assert_eq!(tokens.len(), logprobs.len());
+    tokens
+        .iter()
+        .zip(logprobs)
+        .enumerate()
+        .map(|(i, (&t, &lp))| sketch(beacon, i, t, log_quantize(lp)))
+        .collect()
+}
+
+/// Validator side: accept if every sketch matches the recomputed
+/// logprob's bucket within ±`tolerance` buckets.
+pub fn verify(
+    beacon: u64,
+    tokens: &[i32],
+    recomputed_logprobs: &[f32],
+    proofs: &[u32],
+    tolerance: i32,
+) -> bool {
+    if tokens.len() != recomputed_logprobs.len() || tokens.len() != proofs.len() {
+        return false;
+    }
+    for (i, ((&t, &lp), &p)) in tokens.iter().zip(recomputed_logprobs).zip(proofs).enumerate()
+    {
+        let b = log_quantize(lp);
+        let ok = (-tolerance..=tolerance).any(|db| sketch(beacon, i, t, b + db) == p);
+        if !ok {
+            return false;
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn honest_prover_verifies_under_drift() {
+        let mut rng = Rng::new(1);
+        let tokens: Vec<i32> = (0..64).map(|_| rng.below(64) as i32).collect();
+        let lps: Vec<f32> = (0..64).map(|_| -(rng.f32() * 8.0 + 1e-3)).collect();
+        let proofs = prove(42, &tokens, &lps);
+        assert!(verify(42, &tokens, &lps, &proofs, 1));
+        // cross-hardware numeric drift (≤5e-3 nats) stays within ±1
+        // bucket at width 0.02
+        let drifted: Vec<f32> = lps.iter().map(|&x| x + 0.005).collect();
+        assert!(verify(42, &tokens, &drifted, &proofs, 1));
+    }
+
+    #[test]
+    fn wrong_checkpoint_rejected() {
+        let mut rng = Rng::new(2);
+        let tokens: Vec<i32> = (0..64).map(|_| rng.below(64) as i32).collect();
+        let lps: Vec<f32> = (0..64).map(|_| -(rng.f32() * 8.0 + 1e-3)).collect();
+        let proofs = prove(42, &tokens, &lps);
+        // a different model's logprobs differ well beyond a bucket
+        let other: Vec<f32> = lps.iter().map(|&x| x * 2.5 - 0.7).collect();
+        assert!(!verify(42, &tokens, &other, &proofs, 1));
+    }
+
+    #[test]
+    fn tampered_tokens_or_beacon_rejected() {
+        let tokens = vec![5, 6, 7, 8];
+        let lps = vec![-0.5, -1.0, -2.0, -4.0];
+        let proofs = prove(7, &tokens, &lps);
+        let mut tampered = tokens.clone();
+        tampered[2] = 9;
+        assert!(!verify(7, &tampered, &lps, &proofs, 1));
+        assert!(!verify(8, &tokens, &lps, &proofs, 1));
+        assert!(!verify(7, &tokens, &lps[..3], &proofs, 1));
+    }
+
+    #[test]
+    fn quantizer_is_monotone() {
+        let mut last = i32::MIN;
+        for i in -300..300 {
+            let b = log_quantize(i as f32 * 0.03);
+            assert!(b >= last);
+            last = b;
+        }
+        // sign separation and resolution
+        assert_ne!(log_quantize(0.5), log_quantize(-0.5));
+        assert_ne!(log_quantize(-4.0), log_quantize(-4.05));
+    }
+}

@@ -1,0 +1,167 @@
+//! Replay buffer (paper §E.2): decouples rollout arrival from training
+//! consumption. Stores rollouts from multiple windows, supports
+//! staleness-weighted sampling (fresher data preferred), and evicts
+//! entries older than a window horizon.
+
+use crate::util::rng::Rng;
+
+/// One stored verified rollout *batch* ([B,T] tokens + [B,G] logprobs
+/// + per-row problem instances) — the unit miners upload and the
+/// trainer samples.
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub window: u64,
+    /// [B*T] row-major batch tokens.
+    pub tokens: Vec<i32>,
+    /// [B*G] behaviour logprobs.
+    pub logprobs: Vec<f32>,
+    pub instances: Vec<crate::rl::Instance>,
+    /// Which miner produced it (for diagnostics).
+    pub miner: usize,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct ReplayConfig {
+    /// Entries older than `current_window - max_age` are evicted.
+    pub max_age: u64,
+    /// Exponential staleness discount per window of age.
+    pub staleness_decay: f64,
+    /// Hard capacity (entries), oldest evicted first.
+    pub capacity: usize,
+}
+
+impl Default for ReplayConfig {
+    fn default() -> Self {
+        ReplayConfig { max_age: 4, staleness_decay: 0.5, capacity: 4096 }
+    }
+}
+
+pub struct ReplayBuffer {
+    pub cfg: ReplayConfig,
+    entries: Vec<Entry>,
+    current_window: u64,
+}
+
+impl ReplayBuffer {
+    pub fn new(cfg: ReplayConfig) -> Self {
+        ReplayBuffer { cfg, entries: Vec::new(), current_window: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Advance to a new window: evict stale entries.
+    pub fn advance_window(&mut self, window: u64) {
+        self.current_window = window;
+        let horizon = window.saturating_sub(self.cfg.max_age);
+        self.entries.retain(|e| e.window >= horizon);
+    }
+
+    pub fn push(&mut self, entry: Entry) {
+        if self.entries.len() >= self.cfg.capacity {
+            // evict the oldest (min window, then FIFO)
+            if let Some((idx, _)) = self
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(i, e)| (e.window, *i))
+            {
+                self.entries.remove(idx);
+            }
+        }
+        self.entries.push(entry);
+    }
+
+    /// Staleness-weighted sample of `n` entries (with replacement):
+    /// weight = decay^(current_window - entry.window).
+    pub fn sample(&self, n: usize, rng: &mut Rng) -> Vec<&Entry> {
+        assert!(!self.entries.is_empty(), "sampling from empty replay buffer");
+        let weights: Vec<f64> = self
+            .entries
+            .iter()
+            .map(|e| {
+                self.cfg
+                    .staleness_decay
+                    .powi((self.current_window.saturating_sub(e.window)) as i32)
+            })
+            .collect();
+        (0..n).map(|_| &self.entries[rng.weighted(&weights)]).collect()
+    }
+
+    /// Mean staleness of stored entries (diagnostic).
+    pub fn mean_age(&self) -> f64 {
+        if self.entries.is_empty() {
+            return 0.0;
+        }
+        self.entries
+            .iter()
+            .map(|e| (self.current_window.saturating_sub(e.window)) as f64)
+            .sum::<f64>()
+            / self.entries.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rl::Instance;
+
+    fn entry(window: u64) -> Entry {
+        Entry {
+            window,
+            tokens: vec![1, 2, 3],
+            logprobs: vec![-0.1],
+            instances: vec![Instance::Math { answer: vec![1] }],
+            miner: 0,
+        }
+    }
+
+    #[test]
+    fn eviction_by_age_and_capacity() {
+        let mut rb = ReplayBuffer::new(ReplayConfig {
+            max_age: 2,
+            staleness_decay: 0.5,
+            capacity: 3,
+        });
+        rb.push(entry(0));
+        rb.push(entry(1));
+        rb.push(entry(2));
+        rb.push(entry(3)); // over capacity → evicts window 0
+        assert_eq!(rb.len(), 3);
+        assert!(rb.entries.iter().all(|e| e.window >= 1));
+        rb.advance_window(5); // horizon = 3 → windows 1,2 evicted
+        assert_eq!(rb.len(), 1);
+        assert_eq!(rb.entries[0].window, 3);
+    }
+
+    #[test]
+    fn sampling_prefers_fresh() {
+        let mut rb = ReplayBuffer::new(ReplayConfig::default());
+        for _ in 0..50 {
+            rb.push(entry(0));
+        }
+        for _ in 0..50 {
+            rb.push(entry(4));
+        }
+        rb.advance_window(4);
+        let mut rng = Rng::new(1);
+        let samples = rb.sample(2000, &mut rng);
+        let fresh = samples.iter().filter(|e| e.window == 4).count();
+        // decay 0.5^4 = 1/16 weight for stale → expect ≈ 16/17 fresh
+        assert!(fresh > 1700, "fresh {}", fresh);
+    }
+
+    #[test]
+    fn mean_age_tracks() {
+        let mut rb = ReplayBuffer::new(ReplayConfig::default());
+        rb.push(entry(0));
+        rb.push(entry(2));
+        rb.advance_window(2);
+        assert!((rb.mean_age() - 1.0).abs() < 1e-12);
+    }
+}

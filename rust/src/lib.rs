@@ -1,0 +1,39 @@
+//! # PULSE — compute-visible sparsification for distributed RL
+//!
+//! Rust reproduction of *"Understanding and Exploiting Weight Update
+//! Sparsity for Communication-Efficient Distributed RL"* (2026).
+//!
+//! The library is organized in three layers:
+//!
+//! * **L3 (this crate)** — the coordination contribution: the
+//!   compute-visibility gate ([`gate`]), sparse patch formats
+//!   ([`sparse`], [`codec`]), PULSESync / PULSELoCo ([`pulse`]),
+//!   dense baselines ([`baselines`]), GRPO training ([`rl`]), the
+//!   grail deployment substrate ([`grail`], [`storage`], [`net`]) and
+//!   the multi-trainer coordinator ([`coordinator`]).
+//! * **L2 (python/compile/model.py)** — the JAX model graphs, lowered
+//!   once to HLO text and executed from [`runtime`] via PJRT.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels (attention,
+//!   visibility gate, fused AdamW) that lower into the L2 graphs.
+//!
+//! Python never runs on the request path: after `make artifacts`, the
+//! Rust binary is self-contained.
+
+pub mod analysis;
+pub mod baselines;
+pub mod bf16;
+pub mod codec;
+pub mod coordinator;
+pub mod gate;
+pub mod grail;
+pub mod net;
+pub mod optim;
+pub mod pulse;
+pub mod rl;
+pub mod runtime;
+pub mod sparse;
+pub mod storage;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

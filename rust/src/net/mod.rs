@@ -1,0 +1,138 @@
+//! Networking substrate: a deterministic bandwidth/latency model used by
+//! every bench (Fig. 1, Table 14), plus a real framed TCP transport and
+//! relay for the live-sync example (paper Fig. 5's relay network).
+
+pub mod relay;
+pub mod tcp;
+
+/// A point-to-point link with a bandwidth/latency cost model.
+/// `transfer_time(bytes)` is the paper's accounting primitive: all of
+/// Fig. 1 / Fig. 11 / Table 14 are this arithmetic on measured payloads.
+#[derive(Debug, Clone, Copy)]
+pub struct SimLink {
+    /// Link rate in bits per second.
+    pub bandwidth_bps: f64,
+    /// One-way latency in seconds.
+    pub latency_s: f64,
+}
+
+impl SimLink {
+    pub fn mbit(mbps: f64) -> SimLink {
+        SimLink { bandwidth_bps: mbps * 1e6, latency_s: 0.0 }
+    }
+
+    pub fn gbit(gbps: f64) -> SimLink {
+        SimLink { bandwidth_bps: gbps * 1e9, latency_s: 0.0 }
+    }
+
+    /// Seconds to move `bytes` over this link.
+    pub fn transfer_time(&self, bytes: u64) -> f64 {
+        self.latency_s + (bytes as f64 * 8.0) / self.bandwidth_bps
+    }
+}
+
+/// End-to-end transfer time with codec overheads (paper Eq. 26):
+///   T = T_encode + S/(R·B) + T_decode
+/// where `payload` is the uncompressed sparse payload, `ratio` the codec
+/// compression ratio, and throughputs are in MB/s.
+pub fn total_transfer_time(
+    payload_bytes: u64,
+    ratio: f64,
+    encode_mbps: f64,
+    decode_mbps: f64,
+    link: SimLink,
+) -> f64 {
+    let s = payload_bytes as f64;
+    let t_enc = s / (encode_mbps * 1e6);
+    let t_dec = s / (decode_mbps * 1e6);
+    let wire = (s / ratio).ceil() as u64;
+    t_enc + link.transfer_time(wire) + t_dec
+}
+
+/// Crossover bandwidth between codecs A and B (paper Eq. 27), in bps.
+/// Below the returned rate the higher-ratio codec wins.
+pub fn crossover_bandwidth(
+    payload_bytes: u64,
+    ratio_a: f64,
+    enc_dec_secs_a: f64,
+    ratio_b: f64,
+    enc_dec_secs_b: f64,
+) -> f64 {
+    let s = payload_bytes as f64 * 8.0; // bits
+    let num = s * (1.0 / ratio_b - 1.0 / ratio_a);
+    let den = enc_dec_secs_a - enc_dec_secs_b;
+    num / den
+}
+
+/// Compute utilization under periodic communication (Fig. 1): a worker
+/// computes for `compute_s` seconds, then must move `bytes`; utilization
+/// is compute / (compute + comm) assuming no overlap.
+pub fn utilization(compute_s: f64, bytes: u64, link: SimLink) -> f64 {
+    let comm = link.transfer_time(bytes);
+    compute_s / (compute_s + comm)
+}
+
+/// Bandwidth (bps) needed to reach `target` utilization for a payload
+/// moved every `compute_s` seconds (the "0.2 / 2.6 / 20 / 44 Gbit/s"
+/// thresholds quoted in Fig. 1).
+pub fn bandwidth_for_utilization(compute_s: f64, bytes: u64, target: f64) -> f64 {
+    // target = c / (c + bytes*8/B)  ⇒  B = bytes*8 * target / (c (1-target))
+    (bytes as f64 * 8.0) * target / (compute_s * (1.0 - target))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_linear() {
+        let l = SimLink::mbit(400.0);
+        assert!((l.transfer_time(50_000_000) - 1.0).abs() < 1e-9);
+        let g = SimLink::gbit(1.0);
+        assert!((g.transfer_time(125_000_000) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fig1_thresholds_reproduce() {
+        // Paper Fig. 1: with a 50 s compute interval, full 14 GB BF16
+        // sync needs ~20 Gbit/s for 90% utilization; a 140 MB PULSESync
+        // patch needs ~0.2 Gbit/s.
+        let full = bandwidth_for_utilization(50.0, 14_000_000_000, 0.9) / 1e9;
+        assert!((full - 20.16).abs() < 0.5, "full={}", full);
+        let patch = bandwidth_for_utilization(50.0, 140_000_000, 0.9) / 1e9;
+        assert!((patch - 0.2016).abs() < 0.01, "patch={}", patch);
+        // Right panel: DiLoCo 30.5 GB → ~44 Gbit/s; PULSELoCo 1.77 GB →
+        // ~2.6 Gbit/s.
+        let diloco = bandwidth_for_utilization(50.0, 30_500_000_000, 0.9) / 1e9;
+        assert!((diloco - 43.9).abs() < 1.0, "diloco={}", diloco);
+        let ploco = bandwidth_for_utilization(50.0, 1_770_000_000, 0.9) / 1e9;
+        assert!((ploco - 2.55).abs() < 0.1, "ploco={}", ploco);
+    }
+
+    #[test]
+    fn utilization_monotone_in_bandwidth() {
+        let bytes = 1_000_000_000;
+        let mut last = 0.0;
+        for mbps in [10.0, 100.0, 1000.0, 10_000.0] {
+            let u = utilization(50.0, bytes, SimLink::mbit(mbps));
+            assert!(u > last);
+            last = u;
+        }
+        assert!(last < 1.0);
+    }
+
+    #[test]
+    fn crossover_formula_consistent() {
+        // At the crossover bandwidth the two codecs tie.
+        let payload = 194_000_000u64;
+        let (ra, ta) = (2.40, payload as f64 / 830e6 + payload as f64 / 1484e6); // lz4
+        let (rb, tb) = (3.33, payload as f64 / 534e6 + payload as f64 / 851e6); // zstd-1
+        let b = crossover_bandwidth(payload, rb, tb, ra, ta);
+        let link = SimLink { bandwidth_bps: b, latency_s: 0.0 };
+        let t_a = ta + link.transfer_time((payload as f64 / ra) as u64);
+        let t_b = tb + link.transfer_time((payload as f64 / rb) as u64);
+        assert!((t_a - t_b).abs() / t_a < 1e-3, "{} vs {}", t_a, t_b);
+        // and it lands in the high-hundreds-of-Mbit regime (§H.4.5)
+        assert!(b > 2e8 && b < 3e9, "crossover {} bps", b);
+    }
+}

@@ -1,0 +1,174 @@
+//! Patch relay (paper Fig. 5 / §E: "a relay network distributes sparse
+//! BF16 weight patches from trainers to inference workers").
+//!
+//! The relay accepts one publisher connection and N subscriber
+//! connections, fanning every PATCH/ANCHOR frame out to all subscribers.
+//! Subscribers that connect late first receive the most recent ANCHOR
+//! then the subsequent patches (mirroring the slow path of Alg. 5).
+
+use super::tcp::{self, kind, Frame};
+use anyhow::Result;
+use std::net::{TcpListener, TcpStream};
+use std::sync::{Arc, Mutex};
+
+struct Shared {
+    subscribers: Vec<TcpStream>,
+    last_anchor: Option<Frame>,
+    /// Patches since the last anchor, in order.
+    tail: Vec<Frame>,
+}
+
+/// Relay server handle.
+pub struct Relay {
+    pub port: u16,
+    shared: Arc<Mutex<Shared>>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    stop: Arc<std::sync::atomic::AtomicBool>,
+}
+
+impl Relay {
+    /// Start a relay on an ephemeral localhost port.
+    pub fn start() -> Result<Relay> {
+        let (listener, port) = tcp::listen_local()?;
+        listener.set_nonblocking(true)?;
+        let shared = Arc::new(Mutex::new(Shared {
+            subscribers: Vec::new(),
+            last_anchor: None,
+            tail: Vec::new(),
+        }));
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let accept_thread = Some(spawn_accept(listener, shared.clone(), stop.clone()));
+        Ok(Relay { port, shared, accept_thread, stop })
+    }
+
+    /// Publish a frame to all current subscribers (and remember anchors
+    /// for late joiners). Called by the trainer-side connection pump or
+    /// directly in-process.
+    pub fn publish(&self, frame: Frame) {
+        let mut sh = self.shared.lock().unwrap();
+        match frame.kind {
+            kind::ANCHOR => {
+                sh.last_anchor = Some(frame.clone());
+                sh.tail.clear();
+            }
+            kind::PATCH => sh.tail.push(frame.clone()),
+            _ => {}
+        }
+        sh.subscribers.retain_mut(|s| tcp::write_frame(s, &frame).is_ok());
+    }
+
+    pub fn subscriber_count(&self) -> usize {
+        self.shared.lock().unwrap().subscribers.len()
+    }
+
+    pub fn stop(mut self) {
+        self.stop.store(true, std::sync::atomic::Ordering::SeqCst);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn spawn_accept(
+    listener: TcpListener,
+    shared: Arc<Mutex<Shared>>,
+    stop: Arc<std::sync::atomic::AtomicBool>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || loop {
+        if stop.load(std::sync::atomic::Ordering::SeqCst) {
+            return;
+        }
+        match listener.accept() {
+            Ok((mut stream, _)) => {
+                stream.set_nodelay(true).ok();
+                // catch-up: send last anchor + tail before live frames
+                let mut sh = shared.lock().unwrap();
+                let mut ok = true;
+                if let Some(a) = &sh.last_anchor {
+                    ok = tcp::write_frame(&mut stream, a).is_ok();
+                }
+                if ok {
+                    for p in &sh.tail {
+                        if tcp::write_frame(&mut stream, p).is_err() {
+                            ok = false;
+                            break;
+                        }
+                    }
+                }
+                if ok {
+                    sh.subscribers.push(stream);
+                }
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            Err(_) => return,
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame(kind_: u8, tag: u8) -> Frame {
+        Frame { kind: kind_, payload: vec![tag; 16] }
+    }
+
+    #[test]
+    fn fan_out_and_late_join_catchup() {
+        let relay = Relay::start().unwrap();
+        // early subscriber
+        let mut early = tcp::connect_local(relay.port).unwrap();
+        // wait until registered
+        for _ in 0..200 {
+            if relay.subscriber_count() == 1 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert_eq!(relay.subscriber_count(), 1);
+        relay.publish(frame(kind::ANCHOR, 1));
+        relay.publish(frame(kind::PATCH, 2));
+        relay.publish(frame(kind::PATCH, 3));
+        // early subscriber sees all three in order
+        for tag in [1u8, 2, 3] {
+            let f = tcp::read_frame(&mut early).unwrap();
+            assert_eq!(f.payload[0], tag);
+        }
+        // late joiner gets anchor + tail replay
+        let mut late = tcp::connect_local(relay.port).unwrap();
+        for tag in [1u8, 2, 3] {
+            let f = tcp::read_frame(&mut late).unwrap();
+            assert_eq!(f.payload[0], tag);
+        }
+        // new publishes reach both
+        relay.publish(frame(kind::PATCH, 4));
+        assert_eq!(tcp::read_frame(&mut early).unwrap().payload[0], 4);
+        assert_eq!(tcp::read_frame(&mut late).unwrap().payload[0], 4);
+        relay.stop();
+    }
+
+    #[test]
+    fn dead_subscribers_are_pruned() {
+        let relay = Relay::start().unwrap();
+        {
+            let _conn = tcp::connect_local(relay.port).unwrap();
+            for _ in 0..200 {
+                if relay.subscriber_count() == 1 {
+                    break;
+                }
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+        } // dropped
+        // publishing enough data eventually hits the broken pipe and prunes
+        for _ in 0..50 {
+            relay.publish(Frame { kind: kind::PATCH, payload: vec![0; 1 << 16] });
+            if relay.subscriber_count() == 0 {
+                break;
+            }
+        }
+        assert_eq!(relay.subscriber_count(), 0);
+        relay.stop();
+    }
+}

@@ -1,0 +1,112 @@
+//! Framed TCP transport (std::net; the image has no tokio). Messages
+//! are length-prefixed byte frames with a type tag — enough to carry
+//! PULSESync patches and PULSELoCo payloads over real sockets for the
+//! live-sync example.
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+
+pub const MAX_FRAME: usize = 1 << 30;
+
+/// A framed message.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    pub kind: u8,
+    pub payload: Vec<u8>,
+}
+
+/// Frame kinds used by the live-sync protocol.
+pub mod kind {
+    /// Publisher → relay/worker: a patch container.
+    pub const PATCH: u8 = 1;
+    /// Publisher → relay/worker: a full anchor object.
+    pub const ANCHOR: u8 = 2;
+    /// Worker → publisher: subscribe (payload = last known step, u64 LE).
+    pub const SUBSCRIBE: u8 = 3;
+    /// Acknowledgement (payload = step u64 LE).
+    pub const ACK: u8 = 4;
+    /// Orderly shutdown.
+    pub const CLOSE: u8 = 5;
+}
+
+pub fn write_frame(stream: &mut TcpStream, frame: &Frame) -> Result<()> {
+    let mut header = [0u8; 5];
+    header[0] = frame.kind;
+    header[1..5].copy_from_slice(&(frame.payload.len() as u32).to_le_bytes());
+    stream.write_all(&header)?;
+    stream.write_all(&frame.payload)?;
+    stream.flush()?;
+    Ok(())
+}
+
+pub fn read_frame(stream: &mut TcpStream) -> Result<Frame> {
+    let mut header = [0u8; 5];
+    stream.read_exact(&mut header).context("reading frame header")?;
+    let kind = header[0];
+    let len = u32::from_le_bytes(header[1..5].try_into().unwrap()) as usize;
+    if len > MAX_FRAME {
+        bail!("frame too large: {}", len);
+    }
+    let mut payload = vec![0u8; len];
+    stream.read_exact(&mut payload).context("reading frame payload")?;
+    Ok(Frame { kind, payload })
+}
+
+/// Bind a listener on an ephemeral localhost port.
+pub fn listen_local() -> Result<(TcpListener, u16)> {
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let port = listener.local_addr()?.port();
+    Ok((listener, port))
+}
+
+pub fn connect_local(port: u16) -> Result<TcpStream> {
+    let s = TcpStream::connect(("127.0.0.1", port))?;
+    s.set_nodelay(true)?;
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip_over_socket() {
+        let (listener, port) = listen_local().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let f = read_frame(&mut s).unwrap();
+            assert_eq!(f.kind, kind::PATCH);
+            write_frame(
+                &mut s,
+                &Frame { kind: kind::ACK, payload: 7u64.to_le_bytes().to_vec() },
+            )
+            .unwrap();
+            f.payload
+        });
+        let mut c = connect_local(port).unwrap();
+        let payload: Vec<u8> = (0..100_000u32).map(|i| i as u8).collect();
+        write_frame(&mut c, &Frame { kind: kind::PATCH, payload: payload.clone() }).unwrap();
+        let ack = read_frame(&mut c).unwrap();
+        assert_eq!(ack.kind, kind::ACK);
+        assert_eq!(server.join().unwrap(), payload);
+    }
+
+    #[test]
+    fn oversized_frame_rejected() {
+        let (listener, port) = listen_local().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            read_frame(&mut s).is_err()
+        });
+        let mut c = connect_local(port).unwrap();
+        // hand-craft a header claiming 2 GB
+        let mut header = [0u8; 5];
+        header[0] = kind::PATCH;
+        header[1..5].copy_from_slice(&(2_000_000_000u32).to_le_bytes());
+        c.write_all(&header).unwrap();
+        c.flush().unwrap();
+        drop(c);
+        assert!(server.join().unwrap());
+    }
+}

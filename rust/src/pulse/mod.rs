@@ -1,0 +1,12 @@
+//! The PULSE methods (paper §4): one rule — *send only updates that
+//! would change the next forward pass* — instantiated as two algorithms.
+//!
+//! * [`sync`] — **PULSESync**: lossless sparse BF16 weight patches from
+//!   trainer to inference workers, over the object store, with anchors,
+//!   ready markers, hash verification and failure recovery (Alg. 1/5).
+//! * [`loco`] — **PULSELoCo**: DiLoCo-style pseudo-gradient
+//!   synchronization sparsified by the BF16 compute-visibility gate with
+//!   FP32 error feedback (Alg. 2), including the `SPARSESYNC` collective.
+
+pub mod loco;
+pub mod sync;

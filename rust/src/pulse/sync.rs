@@ -1,0 +1,482 @@
+//! PULSESync: lossless trainer→inference weight synchronization
+//! (paper §4.2 + §J).
+//!
+//! The trainer publishes, per optimizer step, a sparse **value patch**
+//! (changed BF16 positions + their new bit patterns) and, every `k`
+//! steps, a full **anchor** checkpoint. Inference workers follow the
+//! delta stream (fast path: one patch per step) and fall back to
+//! anchor + patch-chain on cold start, missed steps, or hash mismatch
+//! (slow path, Alg. 5). Reconstruction is a memory overwrite with no
+//! floating-point arithmetic, so chained patches stay bit-identical
+//! (Prop. H.1) — verified here with per-patch SHA-256 of the resulting
+//! weights (§J.4).
+
+use crate::codec::Codec;
+use crate::sparse::container::{self, EncodeOpts, Patch, Values};
+use crate::sparse::{self, TensorShape};
+use crate::storage::ObjectStore;
+use crate::util::{sha256_hex, u16_as_bytes};
+use anyhow::{bail, Context, Result};
+
+/// Key scheme under the publisher prefix.
+fn delta_key(step: u64) -> String {
+    format!("delta_{:08}.bin", step)
+}
+fn delta_ready_key(step: u64) -> String {
+    format!("delta_ready_{}", step)
+}
+fn anchor_key(step: u64) -> String {
+    format!("anchor_{:08}.bin", step)
+}
+fn anchor_ready_key(step: u64) -> String {
+    format!("anchor_ready_{}", step)
+}
+
+/// Publisher-side statistics for one published step.
+#[derive(Debug, Clone, Default)]
+pub struct PublishStats {
+    pub step: u64,
+    pub nnz: usize,
+    pub total: usize,
+    pub patch_bytes: u64,
+    pub anchor_bytes: u64,
+    pub sparsity: f64,
+    pub encode_secs: f64,
+}
+
+/// Trainer-side publisher (Alg. 5 `PublishCheckpoint`).
+pub struct Publisher {
+    pub store: ObjectStore,
+    pub prefix: String,
+    pub layout: Vec<TensorShape>,
+    pub opts: EncodeOpts,
+    /// Anchor interval k (paper uses 50).
+    pub anchor_interval: u64,
+    /// Previous published BF16 view W_{t-1}.
+    prev: Vec<u16>,
+    prev_step: u64,
+    /// Test hook: force the next delta upload to fail (§J.5 recovery).
+    pub fail_next_delta: bool,
+}
+
+impl Publisher {
+    /// Create a publisher and publish step 0 as the initial anchor.
+    pub fn new(
+        store: ObjectStore,
+        prefix: &str,
+        layout: Vec<TensorShape>,
+        initial: Vec<u16>,
+        anchor_interval: u64,
+    ) -> Result<Publisher> {
+        let mut p = Publisher {
+            store,
+            prefix: prefix.trim_end_matches('/').to_string(),
+            layout,
+            opts: EncodeOpts::default(),
+            anchor_interval: anchor_interval.max(1),
+            prev: initial,
+            prev_step: 0,
+            fail_next_delta: false,
+        };
+        p.upload_anchor(0)?;
+        Ok(p)
+    }
+
+    fn key(&self, k: String) -> String {
+        format!("{}/{}", self.prefix, k)
+    }
+
+    pub fn current_step(&self) -> u64 {
+        self.prev_step
+    }
+
+    pub fn current_weights(&self) -> &[u16] {
+        &self.prev
+    }
+
+    fn upload_anchor(&mut self, step: u64) -> Result<u64> {
+        // Anchor = zstd-1-compressed raw BF16 bytes + 16-byte header.
+        let raw = u16_as_bytes(&self.prev);
+        let comp = Codec::Zstd1.compress(raw)?;
+        let mut obj = Vec::with_capacity(comp.len() + 16);
+        obj.extend_from_slice(b"PLSA");
+        obj.extend_from_slice(&step.to_le_bytes());
+        obj.extend_from_slice(&(self.prev.len() as u64).to_le_bytes());
+        obj.extend_from_slice(&comp);
+        self.store.put(&self.key(anchor_key(step)), &obj)?;
+        // anchor ready marker carries the weight hash
+        self.store
+            .put(&self.key(anchor_ready_key(step)), sha256_hex(raw).as_bytes())?;
+        Ok(obj.len() as u64)
+    }
+
+    /// Publish optimizer step `step` whose BF16 view is `new`.
+    ///
+    /// Uploads the sparse delta first (steady-state critical path), then
+    /// the anchor if `step % k == 0` (paper §J.1 "concurrent uploads").
+    /// If the delta upload fails, falls back to publishing a full anchor
+    /// for this step (§J.5).
+    pub fn publish(&mut self, step: u64, new: &[u16]) -> Result<PublishStats> {
+        if new.len() != self.prev.len() {
+            bail!("checkpoint size changed ({} -> {})", self.prev.len(), new.len());
+        }
+        if step != self.prev_step + 1 {
+            bail!("publish steps must be consecutive ({} after {})", step, self.prev_step);
+        }
+        let t = crate::util::Stopwatch::start();
+        let indices = sparse::diff_bf16(&self.prev, new);
+        let values = sparse::gather_u16(new, &indices);
+        let result_hash = sha256_hex(u16_as_bytes(new));
+        let patch = Patch {
+            step,
+            base_step: self.prev_step,
+            total_params: new.len() as u64,
+            indices,
+            values: Values::Bf16(values),
+            result_hash,
+        };
+        let obj = container::encode(&patch, &self.layout, self.opts)?;
+        let mut stats = PublishStats {
+            step,
+            nnz: patch.indices.len(),
+            total: new.len(),
+            patch_bytes: obj.len() as u64,
+            anchor_bytes: 0,
+            sparsity: sparse::sparsity(patch.indices.len(), new.len()),
+            encode_secs: 0.0,
+        };
+
+        self.prev.copy_from_slice(new);
+        self.prev_step = step;
+
+        let delta_failed = std::mem::take(&mut self.fail_next_delta);
+        if delta_failed {
+            // §J.5: delta upload failure → publish a full anchor so the
+            // chain stays recoverable, and skip the delta marker.
+            stats.anchor_bytes = self.upload_anchor(step)?;
+            stats.encode_secs = t.secs();
+            return Ok(stats);
+        }
+        self.store.put(&self.key(delta_key(step)), &obj)?;
+        self.store
+            .put(&self.key(delta_ready_key(step)), patch.result_hash.as_bytes())?;
+        if step % self.anchor_interval == 0 {
+            stats.anchor_bytes = self.upload_anchor(step)?;
+        }
+        stats.encode_secs = t.secs();
+        Ok(stats)
+    }
+}
+
+/// Consumer-side statistics for one synchronize() call.
+#[derive(Debug, Clone, Default)]
+pub struct SyncStats {
+    pub from_step: u64,
+    pub to_step: u64,
+    pub path: SyncPath,
+    pub bytes_downloaded: u64,
+    pub patches_applied: usize,
+    pub verified: bool,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SyncPath {
+    #[default]
+    UpToDate,
+    Fast,
+    Chain,
+    Slow,
+}
+
+/// Inference-worker consumer (Alg. 5 `Synchronize`).
+pub struct Consumer {
+    pub store: ObjectStore,
+    pub prefix: String,
+    pub layout: Vec<TensorShape>,
+    /// Local BF16 weights (None until first slow-path sync).
+    pub weights: Option<Vec<u16>>,
+    pub step: u64,
+}
+
+impl Consumer {
+    pub fn new(store: ObjectStore, prefix: &str, layout: Vec<TensorShape>) -> Consumer {
+        Consumer {
+            store,
+            prefix: prefix.trim_end_matches('/').to_string(),
+            layout,
+            weights: None,
+            step: 0,
+        }
+    }
+
+    fn key(&self, k: String) -> String {
+        format!("{}/{}", self.prefix, k)
+    }
+
+    /// Latest step with a delta-ready (or anchor-ready) marker.
+    pub fn latest_ready(&self) -> Result<Option<u64>> {
+        let inv = crate::storage::retention::scan(&self.store, &self.prefix)?;
+        Ok(inv
+            .delta_steps
+            .last()
+            .copied()
+            .into_iter()
+            .chain(inv.anchor_steps.last().copied())
+            .max())
+    }
+
+    /// Synchronize to the newest published checkpoint. Implements the
+    /// fast path (single patch), chain path (several patches), and slow
+    /// path (anchor + chain); falls back to the slow path on any
+    /// verification failure (§J.5 self-healing).
+    pub fn synchronize(&mut self) -> Result<SyncStats> {
+        let latest = match self.latest_ready()? {
+            Some(s) => s,
+            None => bail!("no checkpoints published under {}", self.prefix),
+        };
+        let mut stats = SyncStats { from_step: self.step, to_step: latest, ..Default::default() };
+        if self.weights.is_some() && latest == self.step {
+            stats.path = SyncPath::UpToDate;
+            stats.verified = true;
+            return Ok(stats);
+        }
+        if let Some(w) = self.weights.clone() {
+            // try fast/chain path: apply deltas step+1 ..= latest
+            match self.apply_chain(w, self.step, latest, &mut stats) {
+                Ok(weights) => {
+                    self.weights = Some(weights);
+                    self.step = latest;
+                    stats.path = if latest == stats.from_step + 1 {
+                        SyncPath::Fast
+                    } else {
+                        SyncPath::Chain
+                    };
+                    stats.verified = true;
+                    return Ok(stats);
+                }
+                Err(_) => {
+                    // fall through to slow path
+                }
+            }
+        }
+        // slow path: nearest anchor ≤ latest, then chain
+        let inv = crate::storage::retention::scan(&self.store, &self.prefix)?;
+        let anchor = inv
+            .anchor_steps
+            .iter()
+            .filter(|&&a| a <= latest)
+            .next_back()
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("no anchor available for slow path"))?;
+        let (w, bytes) = self.download_anchor(anchor)?;
+        stats.bytes_downloaded += bytes;
+        let weights = self.apply_chain(w, anchor, latest, &mut stats)?;
+        self.weights = Some(weights);
+        self.step = latest;
+        stats.path = SyncPath::Slow;
+        stats.verified = true;
+        Ok(stats)
+    }
+
+    fn download_anchor(&self, step: u64) -> Result<(Vec<u16>, u64)> {
+        let obj = self
+            .store
+            .get(&self.key(anchor_key(step)))
+            .with_context(|| format!("anchor {}", step))?;
+        if obj.len() < 20 || &obj[0..4] != b"PLSA" {
+            bail!("bad anchor header");
+        }
+        let astep = u64::from_le_bytes(obj[4..12].try_into().unwrap());
+        let n = u64::from_le_bytes(obj[12..20].try_into().unwrap()) as usize;
+        if astep != step {
+            bail!("anchor step mismatch");
+        }
+        let raw = Codec::Zstd1.decompress(&obj[20..], n * 2)?;
+        let w = crate::util::bytes_to_u16(&raw);
+        if w.len() != n {
+            bail!("anchor length mismatch");
+        }
+        // verify against the hash in the ready marker
+        let expect = String::from_utf8(self.store.get(&self.key(anchor_ready_key(step)))?)
+            .unwrap_or_default();
+        let got = sha256_hex(u16_as_bytes(&w));
+        if !expect.is_empty() && expect != got {
+            bail!("anchor hash mismatch at step {}", step);
+        }
+        Ok((w, obj.len() as u64))
+    }
+
+    /// Apply deltas `(from, to]` onto `w`, verifying each patch's
+    /// embedded result hash (Alg. 5 lines 25–29). Steps whose delta is
+    /// missing but which have their own anchor are restarted from that
+    /// anchor (delta-upload-failure recovery).
+    fn apply_chain(
+        &self,
+        mut w: Vec<u16>,
+        from: u64,
+        to: u64,
+        stats: &mut SyncStats,
+    ) -> Result<Vec<u16>> {
+        for t in from + 1..=to {
+            if !self.store.exists(&self.key(delta_ready_key(t))) {
+                // §J.5: a failed delta upload was replaced by an anchor.
+                let (aw, bytes) = self.download_anchor(t)?;
+                w = aw;
+                stats.bytes_downloaded += bytes;
+                stats.patches_applied += 1;
+                continue;
+            }
+            let obj = self.store.get(&self.key(delta_key(t)))?;
+            stats.bytes_downloaded += obj.len() as u64;
+            let patch = container::decode(&obj, &self.layout)?;
+            if patch.step != t {
+                bail!("patch step mismatch: got {}, want {}", patch.step, t);
+            }
+            let values = match &patch.values {
+                Values::Bf16(v) => v,
+                _ => bail!("weight patch carries non-bf16 values"),
+            };
+            sparse::apply_u16(&mut w, &patch.indices, values);
+            let got = sha256_hex(u16_as_bytes(&w));
+            if got != patch.result_hash {
+                bail!("hash mismatch after applying patch {}", t);
+            }
+            stats.patches_applied += 1;
+        }
+        Ok(w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::synthetic_layout;
+    use crate::util::rng::Rng;
+
+    fn setup(n: usize, k: u64) -> (Publisher, Consumer, Vec<u16>, Rng) {
+        let store = ObjectStore::temp("pulsesync").unwrap();
+        let layout = synthetic_layout(n, 64);
+        let rng = Rng::new(1);
+        let mut r2 = Rng::new(2);
+        let init: Vec<u16> = (0..n)
+            .map(|_| crate::bf16::f32_to_bf16_bits(r2.normal() as f32 * 0.02))
+            .collect();
+        let publisher =
+            Publisher::new(store.clone(), "sync", layout.clone(), init.clone(), k).unwrap();
+        let consumer = Consumer::new(store, "sync", layout);
+        (publisher, consumer, init, rng)
+    }
+
+    fn perturb(rng: &mut Rng, w: &mut [u16], count: usize) {
+        for _ in 0..count {
+            let i = rng.below(w.len() as u64) as usize;
+            w[i] = crate::bf16::f32_to_bf16_bits(rng.normal() as f32 * 0.02);
+        }
+    }
+
+    #[test]
+    fn fast_path_bit_identical() {
+        let (mut p, mut c, mut w, mut rng) = setup(10_000, 50);
+        // cold start
+        let s0 = c.synchronize().unwrap();
+        assert_eq!(s0.path, SyncPath::Slow);
+        assert_eq!(c.weights.as_ref().unwrap(), &w);
+        for step in 1..=5u64 {
+            perturb(&mut rng, &mut w, 100);
+            let ps = p.publish(step, &w).unwrap();
+            assert!(ps.sparsity > 0.9);
+            let cs = c.synchronize().unwrap();
+            assert_eq!(cs.path, SyncPath::Fast);
+            assert!(cs.verified);
+            assert_eq!(c.weights.as_ref().unwrap(), &w, "step {}", step);
+        }
+    }
+
+    #[test]
+    fn chain_path_catches_up() {
+        let (mut p, mut c, mut w, mut rng) = setup(5_000, 50);
+        c.synchronize().unwrap();
+        for step in 1..=7u64 {
+            perturb(&mut rng, &mut w, 50);
+            p.publish(step, &w).unwrap();
+        }
+        let cs = c.synchronize().unwrap();
+        assert_eq!(cs.path, SyncPath::Chain);
+        assert_eq!(cs.patches_applied, 7);
+        assert_eq!(c.weights.as_ref().unwrap(), &w);
+    }
+
+    #[test]
+    fn slow_path_after_retention() {
+        let (mut p, mut c, mut w, mut rng) = setup(5_000, 5);
+        for step in 1..=12u64 {
+            perturb(&mut rng, &mut w, 50);
+            p.publish(step, &w).unwrap();
+        }
+        // delete early deltas (simulates retention), keep anchors
+        for t in 1..=9u64 {
+            p.store.delete(&format!("sync/{}", delta_key(t))).unwrap();
+            p.store.delete(&format!("sync/delta_ready_{}", t)).unwrap();
+        }
+        let cs = c.synchronize().unwrap();
+        assert_eq!(cs.path, SyncPath::Slow);
+        assert_eq!(c.weights.as_ref().unwrap(), &w);
+    }
+
+    #[test]
+    fn corruption_triggers_self_healing() {
+        let (mut p, mut c, mut w, mut rng) = setup(5_000, 50);
+        c.synchronize().unwrap();
+        perturb(&mut rng, &mut w, 50);
+        p.publish(1, &w).unwrap();
+        // corrupt the delta object; consumer must fall back to anchor 0
+        // + ... but anchor 0 has no deltas to reach step 1, so the chain
+        // through the corrupt patch fails. Publish step 2 with an anchor
+        // to give a recovery point.
+        let key = format!("sync/{}", delta_key(1));
+        let mut obj = p.store.get(&key).unwrap();
+        let n = obj.len();
+        obj[n - 1] ^= 0xFF;
+        p.store.put(&key, &obj).unwrap();
+        perturb(&mut rng, &mut w, 50);
+        p.fail_next_delta = true; // step 2 becomes an anchor (J.5)
+        p.publish(2, &w).unwrap();
+        let cs = c.synchronize().unwrap();
+        assert_eq!(cs.path, SyncPath::Slow);
+        assert!(cs.verified);
+        assert_eq!(c.weights.as_ref().unwrap(), &w);
+    }
+
+    #[test]
+    fn delta_upload_failure_recovery() {
+        let (mut p, mut c, mut w, mut rng) = setup(5_000, 100);
+        c.synchronize().unwrap();
+        perturb(&mut rng, &mut w, 50);
+        p.publish(1, &w).unwrap();
+        perturb(&mut rng, &mut w, 50);
+        p.fail_next_delta = true;
+        p.publish(2, &w).unwrap(); // anchor instead of delta
+        perturb(&mut rng, &mut w, 50);
+        p.publish(3, &w).unwrap();
+        let cs = c.synchronize().unwrap();
+        assert_eq!(c.weights.as_ref().unwrap(), &w);
+        assert_eq!(cs.to_step, 3);
+    }
+
+    #[test]
+    fn long_chain_remains_bit_identical() {
+        // Prop. H.1: chains of value patches never drift.
+        let (mut p, mut c, mut w, mut rng) = setup(2_000, 25);
+        c.synchronize().unwrap();
+        for step in 1..=60u64 {
+            perturb(&mut rng, &mut w, 30);
+            p.publish(step, &w).unwrap();
+            if step % 7 == 0 {
+                c.synchronize().unwrap();
+                assert_eq!(c.weights.as_ref().unwrap(), &w, "step {}", step);
+            }
+        }
+        c.synchronize().unwrap();
+        assert_eq!(c.weights.as_ref().unwrap(), &w);
+    }
+}

@@ -1,0 +1,225 @@
+//! GRPO batch construction (paper §2, §H.1): sample a group of G
+//! responses per prompt, compute group-relative advantages
+//! Â_i = (r_i − µ_G)/σ_G, build the completion mask, and evaluate
+//! pass@1 with greedy decoding.
+
+use super::{Instance, Task};
+use crate::runtime::ModelRuntime;
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// GRPO hyperparameters (paper Table 8, scaled to this testbed).
+#[derive(Debug, Clone, Copy)]
+pub struct GrpoConfig {
+    /// Rollouts per prompt (the group size G).
+    pub group: usize,
+    /// Sampling temperature for training rollouts.
+    pub temperature: f32,
+    /// σ floor to avoid division blow-ups on constant-reward groups.
+    pub sigma_floor: f64,
+}
+
+impl Default for GrpoConfig {
+    fn default() -> Self {
+        GrpoConfig { group: 8, temperature: 1.0, sigma_floor: 1e-4 }
+    }
+}
+
+/// One training batch: everything the grad graph consumes.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    /// [B, T] tokens (prompts + completions).
+    pub tokens: Vec<i32>,
+    /// [B, G] behaviour-policy logprobs from the rollout.
+    pub old_logprobs: Vec<f32>,
+    /// [B] group-relative advantages.
+    pub advantages: Vec<f32>,
+    /// [B, G] completion mask (1 up to and including first EOS).
+    pub mask: Vec<f32>,
+    /// [B] raw composite rewards.
+    pub rewards: Vec<f64>,
+    /// Mean composite reward over the batch.
+    pub mean_reward: f64,
+    /// Fraction of rollouts with full correctness.
+    pub correct_rate: f64,
+}
+
+/// Sample prompts: B/G distinct problems, each repeated G times
+/// (row-major [B, P]). Returns (prompts, instances per row).
+pub fn sample_prompts(
+    task: &dyn Task,
+    batch: usize,
+    prompt_len: usize,
+    group: usize,
+    rng: &mut Rng,
+) -> (Vec<i32>, Vec<Instance>) {
+    assert!(batch % group == 0, "batch {} not divisible by group {}", batch, group);
+    let n_problems = batch / group;
+    let mut prompts = Vec::with_capacity(batch * prompt_len);
+    let mut instances = Vec::with_capacity(batch);
+    for _ in 0..n_problems {
+        let (p, inst) = task.sample(prompt_len, rng);
+        for _ in 0..group {
+            prompts.extend_from_slice(&p);
+            instances.push(inst.clone());
+        }
+    }
+    (prompts, instances)
+}
+
+/// Compute the completion mask row: 1.0 for positions up to and
+/// including the first EOS (all G if none).
+pub fn completion_mask(completion: &[i32]) -> Vec<f32> {
+    let eos = completion.iter().position(|&t| t == super::vocab::EOS);
+    let upto = eos.map(|i| i + 1).unwrap_or(completion.len());
+    (0..completion.len()).map(|i| if i < upto { 1.0 } else { 0.0 }).collect()
+}
+
+/// Group-relative advantages (paper Eq. 25).
+pub fn group_advantages(rewards: &[f64], group: usize, sigma_floor: f64) -> Vec<f32> {
+    assert!(rewards.len() % group == 0);
+    let mut adv = Vec::with_capacity(rewards.len());
+    for chunk in rewards.chunks(group) {
+        let mu = chunk.iter().sum::<f64>() / group as f64;
+        let var = chunk.iter().map(|r| (r - mu) * (r - mu)).sum::<f64>() / group as f64;
+        let sigma = var.sqrt().max(sigma_floor);
+        for &r in chunk {
+            adv.push(((r - mu) / sigma) as f32);
+        }
+    }
+    adv
+}
+
+/// Generate one full GRPO batch through the runtime. `flat` is the
+/// *rollout policy's* parameter vector (the BF16 view the inference
+/// worker serves; the trainer passes its masters when on-policy).
+pub fn generate_batch(
+    rt: &ModelRuntime,
+    flat: &[f32],
+    task: &dyn Task,
+    cfg: GrpoConfig,
+    rng: &mut Rng,
+) -> Result<Batch> {
+    let d = rt.manifest.dims.clone();
+    let (prompts, instances) = sample_prompts(task, d.batch, d.prompt_len, cfg.group, rng);
+    let key = [rng.next_u32(), rng.next_u32()];
+    let ro = rt.rollout(flat, &prompts, key, cfg.temperature)?;
+    build_batch(&d, task, &instances, ro.tokens, ro.logprobs, cfg)
+}
+
+/// Assemble a batch from rollout outputs (separated for reuse by the
+/// grail pipeline, where rollouts arrive from remote miners).
+pub fn build_batch(
+    dims: &crate::runtime::manifest::Dims,
+    task: &dyn Task,
+    instances: &[Instance],
+    tokens: Vec<i32>,
+    old_logprobs: Vec<f32>,
+    cfg: GrpoConfig,
+) -> Result<Batch> {
+    let (b, t, g) = (dims.batch, dims.seq, dims.gen_len);
+    anyhow::ensure!(tokens.len() == b * t, "tokens shape");
+    anyhow::ensure!(old_logprobs.len() == b * g, "logprobs shape");
+    anyhow::ensure!(instances.len() == b, "instances");
+    let mut rewards = Vec::with_capacity(b);
+    let mut mask = Vec::with_capacity(b * g);
+    let mut correct = 0usize;
+    for row in 0..b {
+        let completion = &tokens[row * t + dims.prompt_len..(row + 1) * t];
+        let r = task.reward(&instances[row], completion);
+        if r.correct >= 1.0 {
+            correct += 1;
+        }
+        rewards.push(r.total);
+        mask.extend(completion_mask(completion));
+    }
+    let advantages = group_advantages(&rewards, cfg.group, cfg.sigma_floor);
+    let mean_reward = rewards.iter().sum::<f64>() / b as f64;
+    Ok(Batch {
+        tokens,
+        old_logprobs,
+        advantages,
+        mask,
+        rewards: rewards.clone(),
+        mean_reward,
+        correct_rate: correct as f64 / b as f64,
+    })
+}
+
+/// pass@1: greedy rollouts on `n_eval` problems; fraction fully correct.
+pub fn pass_at_1(
+    rt: &ModelRuntime,
+    flat: &[f32],
+    task: &dyn Task,
+    n_eval: usize,
+    rng: &mut Rng,
+) -> Result<f64> {
+    let d = rt.manifest.dims.clone();
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    while total < n_eval {
+        // fill a batch with distinct problems (group=1 semantics)
+        let mut prompts = Vec::with_capacity(d.batch * d.prompt_len);
+        let mut instances = Vec::with_capacity(d.batch);
+        for _ in 0..d.batch {
+            let (p, inst) = task.sample(d.prompt_len, rng);
+            prompts.extend_from_slice(&p);
+            instances.push(inst);
+        }
+        let ro = rt.rollout(flat, &prompts, [7, 7], 0.0)?;
+        for row in 0..d.batch {
+            if total >= n_eval {
+                break;
+            }
+            let completion = &ro.tokens[row * d.seq + d.prompt_len..(row + 1) * d.seq];
+            if task.reward(&instances[row], completion).correct >= 1.0 {
+                correct += 1;
+            }
+            total += 1;
+        }
+    }
+    Ok(correct as f64 / total as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rl::tasks::MathTask;
+    use crate::rl::vocab::*;
+
+    #[test]
+    fn advantages_are_group_normalized() {
+        let rewards = vec![1.0, 0.0, 1.0, 0.0, /* group 2 */ 0.5, 0.5, 0.5, 0.5];
+        let adv = group_advantages(&rewards, 4, 1e-4);
+        // group 1: mean 0.5, std 0.5 → ±1
+        assert!((adv[0] - 1.0).abs() < 1e-6);
+        assert!((adv[1] + 1.0).abs() < 1e-6);
+        // group 2: constant rewards → 0 (sigma floored)
+        assert_eq!(&adv[4..8], &[0.0, 0.0, 0.0, 0.0]);
+        // zero-sum within each group
+        assert!(adv[..4].iter().sum::<f32>().abs() < 1e-5);
+    }
+
+    #[test]
+    fn mask_stops_after_eos() {
+        assert_eq!(
+            completion_mask(&[THINK, digit(1), EOS, PAD, PAD]),
+            vec![1.0, 1.0, 1.0, 0.0, 0.0]
+        );
+        assert_eq!(completion_mask(&[digit(1); 4]), vec![1.0; 4]);
+    }
+
+    #[test]
+    fn sample_prompts_repeats_per_group() {
+        let task = MathTask::default();
+        let mut rng = Rng::new(3);
+        let (prompts, instances) = sample_prompts(&task, 8, 16, 4, &mut rng);
+        assert_eq!(prompts.len(), 8 * 16);
+        assert_eq!(instances.len(), 8);
+        // rows 0..4 identical, different from rows 4..8 (w.h.p.)
+        assert_eq!(&prompts[0..16], &prompts[16..32]);
+        let g1: Vec<i32> = prompts[0..16].to_vec();
+        let g2: Vec<i32> = prompts[4 * 16..5 * 16].to_vec();
+        assert_ne!(g1, g2);
+    }
+}

@@ -1,0 +1,50 @@
+//! Reinforcement-learning substrate: GRPO with verifiable rewards
+//! (RLVR, paper §2) over synthetic tasks.
+//!
+//! * [`vocab`] — the shared token vocabulary for both tasks.
+//! * [`tasks`] — the MATH stand-in (modular arithmetic with verifiable
+//!   final answers) and the MBPP stand-in (stack-VM program synthesis
+//!   verified by unit tests via [`svm`]).
+//! * [`grpo`] — group-relative advantages, rollout batching, masking,
+//!   pass@1 evaluation.
+//! * [`svm`] — the stack-machine substrate the code task executes on.
+
+pub mod grpo;
+pub mod svm;
+pub mod tasks;
+pub mod vocab;
+
+/// Composite reward breakdown (paper Eq. 21/22).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Reward {
+    /// Correctness / test-pass component in [0,1].
+    pub correct: f64,
+    /// Answer/solution format component in [0,1].
+    pub format: f64,
+    /// Thinking-presence component in [0,1].
+    pub thinking: f64,
+    /// Fourth component: no-trailing (math) or syntax validity (code).
+    pub extra: f64,
+    /// Weighted total.
+    pub total: f64,
+}
+
+/// One verifiable problem instance handed from task to verifier.
+#[derive(Debug, Clone)]
+pub enum Instance {
+    /// Modular-arithmetic: expected answer digits (most-significant
+    /// first).
+    Math { answer: Vec<u8> },
+    /// Program synthesis: unit tests as (input, expected output).
+    Code { tests: Vec<(i64, i64)> },
+}
+
+/// A verifiable-reward task: generates prompts and scores completions.
+pub trait Task: Send + Sync {
+    fn name(&self) -> &'static str;
+    /// Sample a problem; returns (prompt tokens of length P, instance).
+    fn sample(&self, prompt_len: usize, rng: &mut crate::util::rng::Rng)
+        -> (Vec<i32>, Instance);
+    /// Score a completion (the G generated tokens).
+    fn reward(&self, instance: &Instance, completion: &[i32]) -> Reward;
+}

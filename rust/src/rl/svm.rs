@@ -1,0 +1,159 @@
+//! Stack-machine substrate for the code-generation task (the MBPP
+//! stand-in, DESIGN.md §2): a tiny deterministic stack VM whose
+//! programs the model emits token-by-token, verified by unit tests
+//! exactly like MBPP's pass-rate reward (paper Eq. 22).
+
+use super::vocab::*;
+
+/// VM execution errors — these make a program fail a test, not panic.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum VmError {
+    StackUnderflow,
+    NoEnd,
+    BadToken(i32),
+    EmptyStack,
+    StepLimit,
+}
+
+/// Execute `program` (token ids) on `input`. The IN op pushes the
+/// input; the result is the stack top at END. Arithmetic is wrapping
+/// (the verifier only compares exact values).
+pub fn run(program: &[i32], input: i64) -> Result<i64, VmError> {
+    let mut stack: Vec<i64> = Vec::with_capacity(16);
+    let mut steps = 0usize;
+    for &tok in program {
+        steps += 1;
+        if steps > 256 {
+            return Err(VmError::StepLimit);
+        }
+        match tok {
+            t if (PUSH0..PUSH0 + 10).contains(&t) => stack.push((t - PUSH0) as i64),
+            OP_IN => stack.push(input),
+            OP_ADD | OP_SUB | OP_MUL => {
+                let b = stack.pop().ok_or(VmError::StackUnderflow)?;
+                let a = stack.pop().ok_or(VmError::StackUnderflow)?;
+                stack.push(match tok {
+                    OP_ADD => a.wrapping_add(b),
+                    OP_SUB => a.wrapping_sub(b),
+                    _ => a.wrapping_mul(b),
+                });
+            }
+            OP_DUP => {
+                let a = *stack.last().ok_or(VmError::StackUnderflow)?;
+                stack.push(a);
+            }
+            OP_SWAP => {
+                let n = stack.len();
+                if n < 2 {
+                    return Err(VmError::StackUnderflow);
+                }
+                stack.swap(n - 1, n - 2);
+            }
+            OP_END => return stack.last().copied().ok_or(VmError::EmptyStack),
+            PAD | EOS => break, // treat trailing padding as missing END
+            other => return Err(VmError::BadToken(other)),
+        }
+    }
+    Err(VmError::NoEnd)
+}
+
+/// Syntax check: all tokens are VM ops and an END appears.
+pub fn is_syntactically_valid(program: &[i32]) -> bool {
+    let mut saw_end = false;
+    for &tok in program {
+        match tok {
+            t if (PUSH0..PUSH0 + 10).contains(&t) => {}
+            OP_IN | OP_ADD | OP_SUB | OP_MUL | OP_DUP | OP_SWAP => {}
+            OP_END => {
+                saw_end = true;
+                break;
+            }
+            PAD | EOS => break,
+            _ => return false,
+        }
+    }
+    saw_end
+}
+
+/// Fraction of unit tests a program passes (the C_pass of Eq. 22).
+pub fn pass_rate(program: &[i32], tests: &[(i64, i64)]) -> f64 {
+    if tests.is_empty() {
+        return 0.0;
+    }
+    let passed = tests
+        .iter()
+        .filter(|(input, expect)| run(program, *input) == Ok(*expect))
+        .count();
+    passed as f64 / tests.len() as f64
+}
+
+/// Reference solutions used to generate test cases (the "ground truth
+/// programs" of the synthetic benchmark). Index = difficulty tier.
+pub fn reference_programs() -> Vec<(&'static str, Vec<i32>)> {
+    vec![
+        ("identity", vec![OP_IN, OP_END]),
+        ("square", vec![OP_IN, OP_DUP, OP_MUL, OP_END]),
+        ("double", vec![OP_IN, OP_DUP, OP_ADD, OP_END]),
+        ("add3", vec![OP_IN, PUSH0 + 3, OP_ADD, OP_END]),
+        ("sub1", vec![OP_IN, PUSH0 + 1, OP_SUB, OP_END]),
+        ("times5", vec![OP_IN, PUSH0 + 5, OP_MUL, OP_END]),
+        ("x2plus1", vec![OP_IN, OP_DUP, OP_MUL, PUSH0 + 1, OP_ADD, OP_END]),
+        ("const7", vec![PUSH0 + 7, OP_END]),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_programs_behave() {
+        let progs = reference_programs();
+        let get = |name: &str| {
+            progs.iter().find(|(n, _)| *n == name).map(|(_, p)| p.clone()).unwrap()
+        };
+        assert_eq!(run(&get("identity"), 42), Ok(42));
+        assert_eq!(run(&get("square"), 7), Ok(49));
+        assert_eq!(run(&get("double"), -3), Ok(-6));
+        assert_eq!(run(&get("add3"), 10), Ok(13));
+        assert_eq!(run(&get("x2plus1"), 4), Ok(17));
+        assert_eq!(run(&get("const7"), 999), Ok(7));
+    }
+
+    #[test]
+    fn errors_not_panics() {
+        assert_eq!(run(&[OP_ADD, OP_END], 1), Err(VmError::StackUnderflow));
+        assert_eq!(run(&[OP_IN], 1), Err(VmError::NoEnd));
+        assert_eq!(run(&[OP_END], 1), Err(VmError::EmptyStack));
+        assert_eq!(run(&[EQ, OP_END], 1), Err(VmError::BadToken(EQ)));
+        assert_eq!(run(&[], 5), Err(VmError::NoEnd));
+    }
+
+    #[test]
+    fn syntax_checker() {
+        assert!(is_syntactically_valid(&[OP_IN, OP_DUP, OP_MUL, OP_END]));
+        assert!(is_syntactically_valid(&[OP_IN, OP_END, PAD, PAD]));
+        assert!(!is_syntactically_valid(&[OP_IN, OP_DUP])); // no END
+        assert!(!is_syntactically_valid(&[EQ, OP_END])); // non-VM token
+        assert!(!is_syntactically_valid(&[OP_IN, EOS, OP_END])); // EOS cuts
+    }
+
+    #[test]
+    fn pass_rate_counts_fractions() {
+        let square = vec![OP_IN, OP_DUP, OP_MUL, OP_END];
+        let tests = vec![(2, 4), (3, 9), (4, 17)]; // last one is wrong
+        assert!((pass_rate(&square, &tests) - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(pass_rate(&[], &tests), 0.0);
+    }
+
+    #[test]
+    fn prop_vm_never_panics_on_random_programs() {
+        crate::util::prop::check("svm total", 100, |g| {
+            let len = g.rng.below(16) as usize;
+            let prog: Vec<i32> =
+                (0..len).map(|_| g.rng.below(VOCAB as u64) as i32).collect();
+            let _ = run(&prog, g.rng.range_i64(-100, 100));
+            let _ = is_syntactically_valid(&prog);
+        });
+    }
+}

@@ -1,0 +1,248 @@
+//! Verifiable-reward tasks (paper §F.5).
+//!
+//! * [`MathTask`] — MATH stand-in: modular arithmetic `a ⊕ b (mod m)`
+//!   with an exact-match final answer and the composite reward of
+//!   Eq. 21: 0.7·correct + 0.15·format + 0.1·thinking + 0.05·no-trailing.
+//! * [`CodeTask`] — MBPP stand-in: the prompt shows I/O examples for a
+//!   hidden stack-VM function; the completion is a program; reward per
+//!   Eq. 22: 0.7·pass-rate + 0.1·syntax + 0.1·format + 0.1·thinking.
+
+use super::svm;
+use super::vocab::*;
+use super::{Instance, Reward, Task};
+use crate::util::rng::Rng;
+
+/// Completion convention shared by both tasks:
+///   [THINK]* answer-tokens EOS PAD*
+/// "thinking" credit = at least one THINK token before the answer.
+fn split_completion(completion: &[i32]) -> (usize, Option<usize>) {
+    // returns (#leading THINK tokens, index of first EOS if any)
+    let think = completion.iter().take_while(|&&t| t == THINK).count();
+    let eos = completion.iter().position(|&t| t == EOS);
+    (think, eos)
+}
+
+fn no_trailing_after_eos(completion: &[i32], eos: Option<usize>) -> bool {
+    match eos {
+        None => false,
+        Some(i) => completion[i + 1..].iter().all(|&t| t == PAD),
+    }
+}
+
+// ------------------------------------------------------------------ math
+
+/// Modular arithmetic with verifiable single/multi-digit answers.
+pub struct MathTask {
+    /// Operand range [0, max_operand].
+    pub max_operand: u64,
+    /// Answer modulus (keeps answers ≤ 2 digits so they fit G=8).
+    pub modulus: u64,
+}
+
+impl Default for MathTask {
+    fn default() -> Self {
+        MathTask { max_operand: 99, modulus: 100 }
+    }
+}
+
+impl Task for MathTask {
+    fn name(&self) -> &'static str {
+        "math"
+    }
+
+    /// Prompt: BOS a-digits op b-digits MOD m-digits EQ PAD*  (length P).
+    fn sample(&self, prompt_len: usize, rng: &mut Rng) -> (Vec<i32>, Instance) {
+        let a = rng.below(self.max_operand + 1);
+        let b = rng.below(self.max_operand + 1);
+        let m = self.modulus as i64;
+        let (op_tok, result) = match rng.below(3) {
+            0 => (PLUS, (a + b) as i64),
+            1 => (MINUS, a as i64 - b as i64),
+            _ => (TIMES, (a * b) as i64),
+        };
+        let result = (result.rem_euclid(m)) as u64;
+        let mut prompt = vec![BOS];
+        encode_number(a, &mut prompt);
+        prompt.push(op_tok);
+        encode_number(b, &mut prompt);
+        prompt.push(MOD);
+        encode_number(self.modulus, &mut prompt);
+        prompt.push(EQ);
+        assert!(prompt.len() <= prompt_len, "prompt overflows P");
+        prompt.resize(prompt_len, PAD);
+        let mut answer = Vec::new();
+        encode_number(result, &mut answer);
+        let answer: Vec<u8> = answer.iter().map(|&t| as_digit(t).unwrap()).collect();
+        (prompt, Instance::Math { answer })
+    }
+
+    fn reward(&self, instance: &Instance, completion: &[i32]) -> Reward {
+        let Instance::Math { answer } = instance else {
+            panic!("MathTask got non-math instance")
+        };
+        let (think, eos) = split_completion(completion);
+        // digits between the THINK prefix and EOS (or end)
+        let upto = eos.unwrap_or(completion.len());
+        let digits: Vec<u8> =
+            completion[think..upto].iter().filter_map(|&t| as_digit(t)).collect();
+        let all_digits = completion[think..upto].iter().all(|&t| as_digit(t).is_some());
+        let correct = if &digits == answer && all_digits { 1.0 } else { 0.0 };
+        let format = if eos.is_some() && all_digits { 1.0 } else { 0.0 };
+        let thinking = if think > 0 { 1.0 } else { 0.0 };
+        let extra = if no_trailing_after_eos(completion, eos) { 1.0 } else { 0.0 };
+        let total = 0.7 * correct + 0.15 * format + 0.1 * thinking + 0.05 * extra;
+        Reward { correct, format, thinking, extra, total }
+    }
+}
+
+// ------------------------------------------------------------------ code
+
+/// Stack-VM program synthesis from I/O examples.
+pub struct CodeTask {
+    programs: Vec<(&'static str, Vec<i32>)>,
+    /// Tests per problem (shown + hidden).
+    pub n_tests: usize,
+}
+
+impl Default for CodeTask {
+    fn default() -> Self {
+        CodeTask { programs: svm::reference_programs(), n_tests: 4 }
+    }
+}
+
+impl Task for CodeTask {
+    fn name(&self) -> &'static str {
+        "code"
+    }
+
+    /// Prompt: BOS x1 ARROW y1 SEP x2 ARROW y2 SEP EQ PAD* — two worked
+    /// examples of the hidden function; the model must emit a program.
+    fn sample(&self, prompt_len: usize, rng: &mut Rng) -> (Vec<i32>, Instance) {
+        let (_, prog) = &self.programs[rng.below(self.programs.len() as u64) as usize];
+        // sample distinct small inputs so numbers stay ≤ 2 digits
+        let mut tests = Vec::new();
+        let mut used = std::collections::BTreeSet::new();
+        while tests.len() < self.n_tests {
+            let x = rng.below(10) as i64;
+            if !used.insert(x) {
+                continue;
+            }
+            let y = svm::run(prog, x).expect("reference program must run");
+            tests.push((x, y));
+        }
+        let mut prompt = vec![BOS];
+        for (i, (x, y)) in tests.iter().take(2).enumerate() {
+            if i > 0 {
+                prompt.push(SEP);
+            }
+            encode_number(*x as u64, &mut prompt);
+            prompt.push(ARROW);
+            // outputs can exceed 2 digits (e.g. 9² = 81, fits);
+            // reference programs keep |y| < 100 for x < 10
+            encode_number((*y).unsigned_abs(), &mut prompt);
+        }
+        prompt.push(EQ);
+        assert!(prompt.len() <= prompt_len, "prompt overflows P");
+        prompt.resize(prompt_len, PAD);
+        (prompt, Instance::Code { tests })
+    }
+
+    fn reward(&self, instance: &Instance, completion: &[i32]) -> Reward {
+        let Instance::Code { tests } = instance else {
+            panic!("CodeTask got non-code instance")
+        };
+        let (think, eos) = split_completion(completion);
+        let upto = eos.unwrap_or(completion.len());
+        let program = &completion[think..upto];
+        let correct = svm::pass_rate(program, tests);
+        let syntax = if svm::is_syntactically_valid(program) { 1.0 } else { 0.0 };
+        let format = if eos.is_some() || program.contains(&OP_END) { 1.0 } else { 0.0 };
+        let thinking = if think > 0 { 1.0 } else { 0.0 };
+        let total = 0.7 * correct + 0.1 * syntax + 0.1 * format + 0.1 * thinking;
+        Reward { correct, format, thinking, extra: syntax, total }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn math_prompt_fits_and_answer_verifies() {
+        let task = MathTask::default();
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            let (prompt, inst) = task.sample(16, &mut rng);
+            assert_eq!(prompt.len(), 16);
+            assert_eq!(prompt[0], BOS);
+            let Instance::Math { answer } = &inst else { unreachable!() };
+            assert!(!answer.is_empty() && answer.len() <= 2);
+            // a perfect completion scores 1.0
+            let mut completion = vec![THINK];
+            for &d in answer {
+                completion.push(digit(d));
+            }
+            completion.push(EOS);
+            completion.resize(8, PAD);
+            let r = task.reward(&inst, &completion);
+            assert!((r.total - 1.0).abs() < 1e-12, "{:?}", r);
+        }
+    }
+
+    #[test]
+    fn math_partial_credit() {
+        let task = MathTask::default();
+        let inst = Instance::Math { answer: vec![4, 2] };
+        // wrong answer, good format
+        let r = task.reward(&inst, &[THINK, digit(4), digit(3), EOS, PAD, PAD, PAD, PAD]);
+        assert_eq!(r.correct, 0.0);
+        assert_eq!(r.format, 1.0);
+        assert!((r.total - 0.3).abs() < 1e-12);
+        // right answer, no EOS (format + trailing fail)
+        let r2 = task.reward(&inst, &[digit(4), digit(2), PAD, PAD, PAD, PAD, PAD, PAD]);
+        assert_eq!(r2.format, 0.0);
+        // digits parse ignores PADs → correctness still granted? No:
+        // all_digits over [think..end] fails because PADs are not digits.
+        assert_eq!(r2.correct, 0.0);
+        // garbage
+        let r3 = task.reward(&inst, &[PLUS; 8]);
+        assert_eq!(r3.total, 0.0);
+    }
+
+    #[test]
+    fn code_reward_grades_pass_rate() {
+        let task = CodeTask::default();
+        let inst = Instance::Code { tests: vec![(2, 4), (3, 9), (5, 25), (7, 49)] };
+        use super::super::vocab::*;
+        // perfect: THINK IN DUP MUL END EOS
+        let perfect = vec![THINK, OP_IN, OP_DUP, OP_MUL, OP_END, EOS, PAD, PAD];
+        let r = task.reward(&inst, &perfect);
+        assert!((r.total - 1.0).abs() < 1e-12, "{:?}", r);
+        // wrong but valid program: identity
+        let wrong = vec![OP_IN, OP_END, EOS, PAD, PAD, PAD, PAD, PAD];
+        let r2 = task.reward(&inst, &wrong);
+        assert_eq!(r2.correct, 0.0);
+        assert_eq!(r2.extra, 1.0); // syntax
+        // garbage
+        let r3 = task.reward(&inst, &[EQ; 8]);
+        assert_eq!(r3.correct, 0.0);
+        assert_eq!(r3.extra, 0.0);
+    }
+
+    #[test]
+    fn code_prompts_verifiable_by_reference() {
+        let task = CodeTask::default();
+        let mut rng = Rng::new(2);
+        for _ in 0..100 {
+            let (prompt, inst) = task.sample(16, &mut rng);
+            assert_eq!(prompt.len(), 16);
+            let Instance::Code { tests } = &inst else { unreachable!() };
+            assert_eq!(tests.len(), 4);
+            // at least one reference program passes all tests
+            let some_pass = svm::reference_programs()
+                .iter()
+                .any(|(_, p)| svm::pass_rate(p, tests) == 1.0);
+            assert!(some_pass);
+        }
+    }
+}

@@ -1,0 +1,123 @@
+//! Shared token vocabulary for the synthetic tasks (64 symbols, matching
+//! the model zoo's vocab).
+//!
+//! Layout:
+//!   0 PAD, 1 BOS, 2 EOS, 3 THINK, 4 EQ ('='),
+//!   5–14 digits 0–9,
+//!   15 PLUS, 16 MINUS, 17 TIMES, 18 MOD,
+//!   19 SEP (example separator), 20 ARROW ('→' in I/O examples),
+//!   21–30 PUSH0–PUSH9 (stack-VM immediates),
+//!   31 ADD, 32 SUB, 33 MUL, 34 DUP, 35 SWAP, 36 IN, 37 END.
+//! Remaining ids up to 63 are unused (reserved).
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const THINK: i32 = 3;
+pub const EQ: i32 = 4;
+pub const DIGIT0: i32 = 5; // .. DIGIT0+9
+pub const PLUS: i32 = 15;
+pub const MINUS: i32 = 16;
+pub const TIMES: i32 = 17;
+pub const MOD: i32 = 18;
+pub const SEP: i32 = 19;
+pub const ARROW: i32 = 20;
+pub const PUSH0: i32 = 21; // .. PUSH0+9
+pub const OP_ADD: i32 = 31;
+pub const OP_SUB: i32 = 32;
+pub const OP_MUL: i32 = 33;
+pub const OP_DUP: i32 = 34;
+pub const OP_SWAP: i32 = 35;
+pub const OP_IN: i32 = 36;
+pub const OP_END: i32 = 37;
+
+pub const VOCAB: usize = 64;
+
+pub fn digit(d: u8) -> i32 {
+    debug_assert!(d < 10);
+    DIGIT0 + d as i32
+}
+
+pub fn as_digit(tok: i32) -> Option<u8> {
+    if (DIGIT0..DIGIT0 + 10).contains(&tok) {
+        Some((tok - DIGIT0) as u8)
+    } else {
+        None
+    }
+}
+
+/// Encode a non-negative number as digit tokens (most significant
+/// first).
+pub fn encode_number(mut n: u64, out: &mut Vec<i32>) {
+    let mut digits = Vec::new();
+    loop {
+        digits.push((n % 10) as u8);
+        n /= 10;
+        if n == 0 {
+            break;
+        }
+    }
+    for &d in digits.iter().rev() {
+        out.push(digit(d));
+    }
+}
+
+/// Human-readable rendering (debugging / logs).
+pub fn detokenize(tokens: &[i32]) -> String {
+    tokens
+        .iter()
+        .map(|&t| match t {
+            PAD => "_".to_string(),
+            BOS => "<s>".to_string(),
+            EOS => "</s>".to_string(),
+            THINK => "…".to_string(),
+            EQ => "=".to_string(),
+            PLUS => "+".to_string(),
+            MINUS => "-".to_string(),
+            TIMES => "*".to_string(),
+            MOD => "%".to_string(),
+            SEP => ";".to_string(),
+            ARROW => "→".to_string(),
+            t if as_digit(t).is_some() => as_digit(t).unwrap().to_string(),
+            t if (PUSH0..PUSH0 + 10).contains(&t) => format!("P{}", t - PUSH0),
+            OP_ADD => "ADD".to_string(),
+            OP_SUB => "SUB".to_string(),
+            OP_MUL => "MUL".to_string(),
+            OP_DUP => "DUP".to_string(),
+            OP_SWAP => "SWAP".to_string(),
+            OP_IN => "IN".to_string(),
+            OP_END => "END".to_string(),
+            other => format!("?{}", other),
+        })
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn number_encoding() {
+        let mut v = Vec::new();
+        encode_number(0, &mut v);
+        assert_eq!(v, vec![digit(0)]);
+        v.clear();
+        encode_number(407, &mut v);
+        assert_eq!(v, vec![digit(4), digit(0), digit(7)]);
+    }
+
+    #[test]
+    fn all_tokens_fit_vocab() {
+        for t in [PAD, BOS, EOS, THINK, EQ, PLUS, MINUS, TIMES, MOD, SEP, ARROW, OP_END] {
+            assert!((t as usize) < VOCAB);
+        }
+        assert!(((PUSH0 + 9) as usize) < VOCAB);
+    }
+
+    #[test]
+    fn detokenize_is_total() {
+        let s = detokenize(&(0..VOCAB as i32).collect::<Vec<_>>());
+        assert!(s.contains("</s>") && s.contains("END"));
+    }
+}

@@ -1,0 +1,171 @@
+//! Model manifest: the JSON sidecar aot.py writes next to each HLO
+//! artifact, describing the flat parameter layout, model dimensions,
+//! artifact filenames, and the optional cross-language numeric oracle.
+
+use crate::sparse::TensorShape;
+use crate::util::json::Json;
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Debug, Clone, Default)]
+pub struct Dims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub seq: usize,
+    pub prompt_len: usize,
+    pub gen_len: usize,
+    pub batch: usize,
+    pub d_ff: usize,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Oracle {
+    pub logprob_sum: f64,
+    pub logprob_first8: Vec<f64>,
+    pub entropy_mean: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub name: String,
+    pub n_params: usize,
+    pub dims: Dims,
+    /// (kind -> filename), e.g. "grad" -> "tiny.grad.hlo.txt".
+    pub artifacts: BTreeMap<String, String>,
+    /// Tensor layout for COO patch encoding (rows/cols per tensor).
+    pub layout: Vec<TensorShape>,
+    pub init: Option<String>,
+    pub oracle: Option<Oracle>,
+    pub eps_low: f64,
+    pub eps_high: f64,
+}
+
+impl ModelManifest {
+    pub fn load(path: &Path) -> Result<ModelManifest> {
+        let j = Json::parse_file(path)?;
+        let d = j.req("dims")?;
+        let dims = Dims {
+            vocab: d.req_usize("vocab")?,
+            d_model: d.req_usize("d_model")?,
+            n_layers: d.req_usize("n_layers")?,
+            n_heads: d.req_usize("n_heads")?,
+            seq: d.req_usize("seq")?,
+            prompt_len: d.req_usize("prompt_len")?,
+            gen_len: d.req_usize("gen_len")?,
+            batch: d.req_usize("batch")?,
+            d_ff: d.req_usize("d_ff")?,
+        };
+        let mut artifacts = BTreeMap::new();
+        if let Json::Obj(m) = j.req("artifacts")? {
+            for (k, v) in m {
+                artifacts.insert(k.clone(), v.as_str().unwrap_or_default().to_string());
+            }
+        }
+        let mut layout = Vec::new();
+        for t in j.req("tensors")?.as_arr().unwrap_or(&[]) {
+            let shape: Vec<usize> = t
+                .req("shape")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|x| x.as_usize())
+                .collect();
+            let (rows, cols) = match shape.as_slice() {
+                [a] => (1usize, *a),
+                [a, b] => (*a, *b),
+                other => anyhow::bail!("unsupported tensor rank {:?}", other),
+            };
+            layout.push(TensorShape {
+                name: t.req_str("name")?.to_string(),
+                offset: t.req_usize("offset")?,
+                rows,
+                cols,
+            });
+        }
+        let oracle = j.get("oracle").map(|o| Oracle {
+            logprob_sum: o.num_or("logprob_sum", 0.0),
+            logprob_first8: o
+                .get("logprob_first8")
+                .and_then(|a| a.as_arr())
+                .map(|a| a.iter().filter_map(|x| x.as_f64()).collect())
+                .unwrap_or_default(),
+            entropy_mean: o.num_or("entropy_mean", 0.0),
+        });
+        Ok(ModelManifest {
+            name: j.req_str("name")?.to_string(),
+            n_params: j.req_usize("n_params")?,
+            dims,
+            artifacts,
+            layout,
+            init: j.get("init").and_then(|x| x.as_str()).map(|s| s.to_string()),
+            oracle,
+            eps_low: j.num_or("eps_low", 0.2),
+            eps_high: j.num_or("eps_high", 0.28),
+        })
+    }
+
+    /// Sanity-check layout contiguity.
+    pub fn validate(&self) -> Result<()> {
+        let mut off = 0usize;
+        for t in &self.layout {
+            if t.offset != off {
+                anyhow::bail!("tensor '{}' offset {} != expected {}", t.name, t.offset, off);
+            }
+            off += t.len();
+        }
+        if off != self.n_params {
+            anyhow::bail!("layout covers {} params, manifest says {}", off, self.n_params);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "name": "t", "n_params": 20,
+      "dims": {"vocab": 4, "d_model": 2, "n_layers": 1, "n_heads": 1,
+               "seq": 3, "prompt_len": 2, "gen_len": 1, "batch": 2, "d_ff": 8},
+      "artifacts": {"score": "t.score.hlo.txt"},
+      "tensors": [
+        {"name": "a", "shape": [4, 2], "offset": 0, "len": 8},
+        {"name": "b", "shape": [12], "offset": 8, "len": 12}
+      ],
+      "eps_low": 0.2, "eps_high": 0.28,
+      "oracle": {"logprob_sum": -1.5, "logprob_first8": [-0.1], "entropy_mean": 0.9}
+    }"#;
+
+    #[test]
+    fn parses_and_validates() {
+        let dir = std::env::temp_dir().join(format!("pulse_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.meta.json");
+        std::fs::write(&p, SAMPLE).unwrap();
+        let m = ModelManifest::load(&p).unwrap();
+        m.validate().unwrap();
+        assert_eq!(m.dims.batch, 2);
+        assert_eq!(m.layout[0].rows, 4);
+        assert_eq!(m.layout[1].rows, 1);
+        assert_eq!(m.layout[1].cols, 12);
+        assert_eq!(m.artifacts["score"], "t.score.hlo.txt");
+        assert!((m.oracle.unwrap().logprob_sum + 1.5).abs() < 1e-12);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_layout() {
+        let bad = SAMPLE.replace("\"offset\": 8", "\"offset\": 9");
+        let dir = std::env::temp_dir().join(format!("pulse_manifest_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.meta.json");
+        std::fs::write(&p, bad).unwrap();
+        let m = ModelManifest::load(&p).unwrap();
+        assert!(m.validate().is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,246 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` +
+//! `*.meta.json`) produced by `python/compile/aot.py` and executes them
+//! on the CPU PJRT client. This is the only bridge between L3 and the
+//! L2/L1 graphs — python never runs at request time.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: HLO *text* →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`.
+
+pub mod manifest;
+
+pub use manifest::ModelManifest;
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable};
+
+/// Output of one GRPO gradient step.
+#[derive(Debug, Clone)]
+pub struct GradOut {
+    pub grads: Vec<f32>,
+    pub loss: f32,
+    pub clip_frac: f32,
+    pub mean_ratio: f32,
+    pub grad_density: f32,
+}
+
+/// Output of one rollout batch.
+#[derive(Debug, Clone)]
+pub struct RolloutOut {
+    /// [B, T] row-major.
+    pub tokens: Vec<i32>,
+    /// [B, G] row-major: behaviour-policy logprobs of generated tokens.
+    pub logprobs: Vec<f32>,
+}
+
+/// A loaded model: manifest + compiled executables.
+pub struct ModelRuntime {
+    pub manifest: ModelManifest,
+    client: PjRtClient,
+    exes: HashMap<String, PjRtLoadedExecutable>,
+}
+
+fn f32_literal(dims: &[usize], data: &[f32]) -> Result<Literal> {
+    Ok(Literal::create_from_shape_and_untyped_data(
+        ElementType::F32,
+        dims,
+        crate::util::f32_as_bytes(data),
+    )?)
+}
+
+fn i32_literal(dims: &[usize], data: &[i32]) -> Result<Literal> {
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(Literal::create_from_shape_and_untyped_data(ElementType::S32, dims, bytes)?)
+}
+
+fn u32_literal(dims: &[usize], data: &[u32]) -> Result<Literal> {
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(Literal::create_from_shape_and_untyped_data(ElementType::U32, dims, bytes)?)
+}
+
+impl ModelRuntime {
+    /// Load `<size>.meta.json` from `artifacts_dir` and compile the
+    /// executables named by `graphs` (or all if empty).
+    pub fn load(artifacts_dir: &Path, size: &str, graphs: &[&str]) -> Result<ModelRuntime> {
+        let manifest = ModelManifest::load(&artifacts_dir.join(format!("{}.meta.json", size)))?;
+        manifest.validate()?;
+        let client = PjRtClient::cpu()?;
+        let mut exes = HashMap::new();
+        for (kind, fname) in &manifest.artifacts {
+            if !graphs.is_empty() && !graphs.contains(&kind.as_str()) {
+                continue;
+            }
+            let path: PathBuf = artifacts_dir.join(fname);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).with_context(|| format!("compiling {}", fname))?;
+            exes.insert(kind.clone(), exe);
+        }
+        Ok(ModelRuntime { manifest, client, exes })
+    }
+
+    /// Load the f32 init vector shipped with the artifacts (tiny/small/
+    /// med sizes).
+    pub fn load_init(&self, artifacts_dir: &Path) -> Result<Vec<f32>> {
+        let name = self
+            .manifest
+            .init
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("size '{}' ships no init.bin", self.manifest.name))?;
+        let bytes = std::fs::read(artifacts_dir.join(name))?;
+        let flat = crate::util::bytes_to_f32(&bytes);
+        if flat.len() != self.manifest.n_params {
+            bail!("init.bin length {} != n_params {}", flat.len(), self.manifest.n_params);
+        }
+        Ok(flat)
+    }
+
+    fn exe(&self, kind: &str) -> Result<&PjRtLoadedExecutable> {
+        self.exes
+            .get(kind)
+            .ok_or_else(|| anyhow::anyhow!("graph '{}' not loaded", kind))
+    }
+
+    fn run(&self, kind: &str, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        let exe = self.exe(kind)?;
+        let result = exe.execute::<Literal>(inputs)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+
+    /// score: (flat, tokens[B,T]) → (logprobs [B*G], entropy [B*G]).
+    pub fn score(&self, flat: &[f32], tokens: &[i32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        let d = &self.manifest.dims;
+        self.check_flat(flat)?;
+        if tokens.len() != d.batch * d.seq {
+            bail!("tokens len {} != B*T {}", tokens.len(), d.batch * d.seq);
+        }
+        let out = self.run(
+            "score",
+            &[f32_literal(&[flat.len()], flat)?, i32_literal(&[d.batch, d.seq], tokens)?],
+        )?;
+        Ok((out[0].to_vec::<f32>()?, out[1].to_vec::<f32>()?))
+    }
+
+    /// rollout: (flat, prompts[B,P], key, temperature) → tokens+logprobs.
+    pub fn rollout(
+        &self,
+        flat: &[f32],
+        prompts: &[i32],
+        key: [u32; 2],
+        temperature: f32,
+    ) -> Result<RolloutOut> {
+        let d = &self.manifest.dims;
+        self.check_flat(flat)?;
+        if prompts.len() != d.batch * d.prompt_len {
+            bail!("prompts len {} != B*P {}", prompts.len(), d.batch * d.prompt_len);
+        }
+        let out = self.run(
+            "rollout",
+            &[
+                f32_literal(&[flat.len()], flat)?,
+                i32_literal(&[d.batch, d.prompt_len], prompts)?,
+                u32_literal(&[2], &key)?,
+                Literal::from(temperature),
+            ],
+        )?;
+        Ok(RolloutOut { tokens: out[0].to_vec::<i32>()?, logprobs: out[1].to_vec::<f32>()? })
+    }
+
+    /// grad: GRPO clipped-surrogate gradients on a rollout batch.
+    pub fn grad(
+        &self,
+        flat: &[f32],
+        tokens: &[i32],
+        advantages: &[f32],
+        old_logprobs: &[f32],
+        mask: &[f32],
+    ) -> Result<GradOut> {
+        let d = &self.manifest.dims;
+        self.check_flat(flat)?;
+        if tokens.len() != d.batch * d.seq
+            || advantages.len() != d.batch
+            || old_logprobs.len() != d.batch * d.gen_len
+            || mask.len() != d.batch * d.gen_len
+        {
+            bail!("grad input shape mismatch");
+        }
+        let out = self.run(
+            "grad",
+            &[
+                f32_literal(&[flat.len()], flat)?,
+                i32_literal(&[d.batch, d.seq], tokens)?,
+                f32_literal(&[d.batch], advantages)?,
+                f32_literal(&[d.batch, d.gen_len], old_logprobs)?,
+                f32_literal(&[d.batch, d.gen_len], mask)?,
+            ],
+        )?;
+        Ok(GradOut {
+            grads: out[0].to_vec::<f32>()?,
+            loss: out[1].get_first_element::<f32>()?,
+            clip_frac: out[2].get_first_element::<f32>()?,
+            mean_ratio: out[3].get_first_element::<f32>()?,
+            grad_density: out[4].get_first_element::<f32>()?,
+        })
+    }
+
+    /// The AOT-compiled L1 visibility-gate kernel (ablation vs the
+    /// native gate in `crate::gate`).
+    pub fn gate(&self, theta: &[f32], s: &[f32]) -> Result<Vec<u8>> {
+        self.check_flat(theta)?;
+        let out = self.run(
+            "gate",
+            &[f32_literal(&[theta.len()], theta)?, f32_literal(&[s.len()], s)?],
+        )?;
+        Ok(out[0].to_vec::<u8>()?)
+    }
+
+    /// The AOT-compiled fused AdamW kernel (ablation vs `crate::optim`).
+    /// `scalars` = [lr, bc1, bc2].
+    #[allow(clippy::type_complexity)]
+    pub fn adam(
+        &self,
+        scalars: [f32; 3],
+        p: &[f32],
+        m: &[f32],
+        v: &[f32],
+        g: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        self.check_flat(p)?;
+        let out = self.run(
+            "adam",
+            &[
+                f32_literal(&[3], &scalars)?,
+                f32_literal(&[p.len()], p)?,
+                f32_literal(&[m.len()], m)?,
+                f32_literal(&[v.len()], v)?,
+                f32_literal(&[g.len()], g)?,
+            ],
+        )?;
+        Ok((out[0].to_vec::<f32>()?, out[1].to_vec::<f32>()?, out[2].to_vec::<f32>()?))
+    }
+
+    fn check_flat(&self, flat: &[f32]) -> Result<()> {
+        if flat.len() != self.manifest.n_params {
+            bail!("flat params len {} != n_params {}", flat.len(), self.manifest.n_params);
+        }
+        Ok(())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+/// Default artifacts directory: `$PULSE_ARTIFACTS` or `<repo>/artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("PULSE_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

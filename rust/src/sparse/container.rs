@@ -1,0 +1,331 @@
+//! Self-describing patch container: the on-wire / on-store object that
+//! PULSESync publishes (paper Alg. 3 + §J.4 integrity verification).
+//!
+//! Layout:
+//! ```text
+//!   magic  "PLSP" (4)            version u8
+//!   kind   u8 (0=bf16 weights, 1=f32 pseudo-gradient)
+//!   format u8 (PatchFormat tag)  codec u8 (Codec tag)
+//!   flags  u8 (bit0: byte-shuffled values)
+//!   step u64 LE     base_step u64 LE
+//!   total_params u64 LE   nnz u64 LE
+//!   raw_len u64 LE (pre-codec payload length)
+//!   sha256 of the *resulting full weights* (32 bytes; zero for
+//!       pseudo-gradient payloads, which are not checkpoints)
+//!   payload: codec(compress(index stream ++ value stream))
+//! ```
+
+use super::{PatchFormat, TensorShape};
+use crate::codec::{shuffle, Codec};
+use anyhow::{bail, Result};
+
+pub const MAGIC: [u8; 4] = *b"PLSP";
+pub const VERSION: u8 = 1;
+
+/// What the values in the patch are.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PatchKind {
+    /// BF16 weight values (PULSESync).
+    Bf16Weights,
+    /// FP32 pseudo-gradient values (PULSELoCo).
+    F32Pseudograd,
+}
+
+impl PatchKind {
+    fn tag(&self) -> u8 {
+        match self {
+            PatchKind::Bf16Weights => 0,
+            PatchKind::F32Pseudograd => 1,
+        }
+    }
+    fn from_tag(t: u8) -> Result<Self> {
+        Ok(match t {
+            0 => PatchKind::Bf16Weights,
+            1 => PatchKind::F32Pseudograd,
+            other => bail!("bad patch kind {}", other),
+        })
+    }
+}
+
+/// Decoded patch values.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Values {
+    Bf16(Vec<u16>),
+    F32(Vec<f32>),
+}
+
+impl Values {
+    pub fn len(&self) -> usize {
+        match self {
+            Values::Bf16(v) => v.len(),
+            Values::F32(v) => v.len(),
+        }
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    fn kind(&self) -> PatchKind {
+        match self {
+            Values::Bf16(_) => PatchKind::Bf16Weights,
+            Values::F32(_) => PatchKind::F32Pseudograd,
+        }
+    }
+    fn width(&self) -> usize {
+        match self {
+            Values::Bf16(_) => 2,
+            Values::F32(_) => 4,
+        }
+    }
+    fn to_bytes(&self) -> Vec<u8> {
+        match self {
+            Values::Bf16(v) => crate::util::u16_as_bytes(v).to_vec(),
+            Values::F32(v) => crate::util::f32_as_bytes(v).to_vec(),
+        }
+    }
+    fn from_bytes(kind: PatchKind, bytes: &[u8]) -> Result<Values> {
+        Ok(match kind {
+            PatchKind::Bf16Weights => Values::Bf16(crate::util::bytes_to_u16(bytes)),
+            PatchKind::F32Pseudograd => Values::F32(crate::util::bytes_to_f32(bytes)),
+        })
+    }
+}
+
+/// A fully decoded patch.
+#[derive(Debug, Clone)]
+pub struct Patch {
+    pub step: u64,
+    pub base_step: u64,
+    pub total_params: u64,
+    pub indices: Vec<u64>,
+    pub values: Values,
+    /// SHA-256 (hex) of the full resulting weights, for §J.4 end-to-end
+    /// verification. Empty for pseudo-gradient payloads.
+    pub result_hash: String,
+}
+
+/// Encoding options.
+#[derive(Debug, Clone, Copy)]
+pub struct EncodeOpts {
+    pub format: PatchFormat,
+    pub codec: Codec,
+    /// Byte-shuffle the value stream before the codec (§F.3 variant).
+    pub shuffle_values: bool,
+}
+
+impl Default for EncodeOpts {
+    fn default() -> Self {
+        EncodeOpts {
+            format: PatchFormat::CooDownscaled,
+            codec: Codec::Zstd1,
+            shuffle_values: false,
+        }
+    }
+}
+
+/// Encode a patch into the container byte format.
+pub fn encode(patch: &Patch, layout: &[TensorShape], opts: EncodeOpts) -> Result<Vec<u8>> {
+    assert_eq!(patch.indices.len(), patch.values.len());
+    // pre-codec payload: index stream ++ value stream
+    let mut raw = opts.format.encode_indices(&patch.indices, layout);
+    let vbytes = patch.values.to_bytes();
+    if opts.shuffle_values && !vbytes.is_empty() {
+        raw.extend(shuffle::shuffle(&vbytes, patch.values.width()));
+    } else {
+        raw.extend_from_slice(&vbytes);
+    }
+    let compressed = opts.codec.compress(&raw)?;
+
+    let mut out = Vec::with_capacity(compressed.len() + 96);
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.push(patch.values.kind().tag());
+    out.push(opts.format.tag());
+    out.push(opts.codec.tag());
+    out.push(if opts.shuffle_values { 1 } else { 0 });
+    out.extend_from_slice(&patch.step.to_le_bytes());
+    out.extend_from_slice(&patch.base_step.to_le_bytes());
+    out.extend_from_slice(&patch.total_params.to_le_bytes());
+    out.extend_from_slice(&(patch.indices.len() as u64).to_le_bytes());
+    out.extend_from_slice(&(raw.len() as u64).to_le_bytes());
+    let mut hash32 = [0u8; 32];
+    if !patch.result_hash.is_empty() {
+        let bytes = hex_to_bytes(&patch.result_hash)?;
+        hash32.copy_from_slice(&bytes);
+    }
+    out.extend_from_slice(&hash32);
+    out.extend_from_slice(&compressed);
+    Ok(out)
+}
+
+/// Decode a container produced by [`encode`].
+pub fn decode(buf: &[u8], layout: &[TensorShape]) -> Result<Patch> {
+    if buf.len() < 9 + 5 * 8 + 32 {
+        bail!("patch container too short ({} bytes)", buf.len());
+    }
+    if buf[0..4] != MAGIC {
+        bail!("bad patch magic");
+    }
+    if buf[4] != VERSION {
+        bail!("unsupported patch version {}", buf[4]);
+    }
+    let kind = PatchKind::from_tag(buf[5])?;
+    let format = PatchFormat::from_tag(buf[6])?;
+    let codec = Codec::from_tag(buf[7])?;
+    let shuffled = buf[8] & 1 != 0;
+    let mut o = 9usize;
+    let read_u64 = |o: &mut usize| {
+        let v = u64::from_le_bytes(buf[*o..*o + 8].try_into().unwrap());
+        *o += 8;
+        v
+    };
+    let step = read_u64(&mut o);
+    let base_step = read_u64(&mut o);
+    let total_params = read_u64(&mut o);
+    let nnz = read_u64(&mut o) as usize;
+    let raw_len = read_u64(&mut o) as usize;
+    let hash32 = &buf[o..o + 32];
+    o += 32;
+    let result_hash = if hash32.iter().all(|&b| b == 0) {
+        String::new()
+    } else {
+        crate::util::hex(hash32)
+    };
+
+    let raw = codec.decompress(&buf[o..], raw_len)?;
+    if raw.len() != raw_len {
+        bail!("payload length {} != declared {}", raw.len(), raw_len);
+    }
+    let mut pos = 0usize;
+    let indices = format.decode_indices(&raw, &mut pos, layout)?;
+    if indices.len() != nnz {
+        bail!("index count {} != declared nnz {}", indices.len(), nnz);
+    }
+    let width = match kind {
+        PatchKind::Bf16Weights => 2,
+        PatchKind::F32Pseudograd => 4,
+    };
+    let vlen = nnz * width;
+    if raw.len() - pos != vlen {
+        bail!("value stream length {} != expected {}", raw.len() - pos, vlen);
+    }
+    let vbytes = if shuffled && vlen > 0 {
+        shuffle::unshuffle(&raw[pos..], width)
+    } else {
+        raw[pos..].to_vec()
+    };
+    let values = Values::from_bytes(kind, &vbytes)?;
+    Ok(Patch { step, base_step, total_params, indices, values, result_hash })
+}
+
+fn hex_to_bytes(s: &str) -> Result<Vec<u8>> {
+    if s.len() != 64 {
+        bail!("hash must be 64 hex chars, got {}", s.len());
+    }
+    (0..32)
+        .map(|i| {
+            u8::from_str_radix(&s[2 * i..2 * i + 2], 16)
+                .map_err(|e| anyhow::anyhow!("bad hex: {}", e))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::synthetic_layout;
+
+    fn mk_patch(n: usize, nnz: usize, seed: u64) -> (Patch, Vec<TensorShape>) {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let layout = synthetic_layout(n, 512);
+        let mut idx: Vec<u64> = (0..nnz).map(|_| rng.below(n as u64)).collect();
+        idx.sort_unstable();
+        idx.dedup();
+        let vals: Vec<u16> = idx.iter().map(|_| rng.next_u32() as u16).collect();
+        (
+            Patch {
+                step: 42,
+                base_step: 41,
+                total_params: n as u64,
+                indices: idx,
+                values: Values::Bf16(vals),
+                result_hash: crate::util::sha256_hex(b"test"),
+            },
+            layout,
+        )
+    }
+
+    #[test]
+    fn roundtrip_all_codecs_and_formats() {
+        let (p, layout) = mk_patch(100_000, 1000, 1);
+        for codec in [Codec::None, Codec::Lz4, Codec::Snappy, Codec::Zstd1, Codec::Gzip6] {
+            for format in PatchFormat::ALL {
+                for shuf in [false, true] {
+                    let opts = EncodeOpts { format, codec, shuffle_values: shuf };
+                    let buf = encode(&p, &layout, opts).unwrap();
+                    let back = decode(&buf, &layout).unwrap();
+                    assert_eq!(back.indices, p.indices);
+                    assert_eq!(back.values, p.values);
+                    assert_eq!(back.step, 42);
+                    assert_eq!(back.base_step, 41);
+                    assert_eq!(back.result_hash, p.result_hash);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn f32_pseudograd_roundtrip() {
+        let mut rng = crate::util::rng::Rng::new(5);
+        let layout = synthetic_layout(50_000, 512);
+        let mut idx: Vec<u64> = (0..800).map(|_| rng.below(50_000)).collect();
+        idx.sort_unstable();
+        idx.dedup();
+        let vals: Vec<f32> = idx.iter().map(|_| rng.normal() as f32).collect();
+        let p = Patch {
+            step: 7,
+            base_step: 6,
+            total_params: 50_000,
+            indices: idx,
+            values: Values::F32(vals),
+            result_hash: String::new(),
+        };
+        let opts =
+            EncodeOpts { format: PatchFormat::FlatVarint, codec: Codec::Zstd1, shuffle_values: true };
+        let buf = encode(&p, &layout, opts).unwrap();
+        let back = decode(&buf, &layout).unwrap();
+        assert_eq!(back.values, p.values);
+        assert!(back.result_hash.is_empty());
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let (p, layout) = mk_patch(10_000, 200, 9);
+        let buf = encode(&p, &layout, EncodeOpts::default()).unwrap();
+        // magic
+        let mut b = buf.clone();
+        b[0] ^= 0xFF;
+        assert!(decode(&b, &layout).is_err());
+        // version
+        let mut b = buf.clone();
+        b[4] = 99;
+        assert!(decode(&b, &layout).is_err());
+        // truncated payload
+        assert!(decode(&buf[..buf.len() - 3], &layout).is_err());
+    }
+
+    #[test]
+    fn empty_patch_roundtrip() {
+        let layout = synthetic_layout(1000, 100);
+        let p = Patch {
+            step: 1,
+            base_step: 0,
+            total_params: 1000,
+            indices: vec![],
+            values: Values::Bf16(vec![]),
+            result_hash: String::new(),
+        };
+        let buf = encode(&p, &layout, EncodeOpts::default()).unwrap();
+        let back = decode(&buf, &layout).unwrap();
+        assert!(back.indices.is_empty());
+    }
+}

@@ -1,0 +1,62 @@
+//! 1-D flat index encoding (paper §H.4.2, Table 11): global indices over
+//! the flattened parameter vector, absolute or delta-coded, packed at a
+//! fixed u32 width ("flat_int32" / "delta_flat_int32").
+
+use crate::codec::varint::{get_uvarint, put_uvarint};
+
+pub fn encode(indices: &[u64], delta: bool) -> Vec<u8> {
+    let mut out = Vec::with_capacity(indices.len() * 4 + 8);
+    put_uvarint(&mut out, indices.len() as u64);
+    let mut prev = 0u64;
+    for (k, &idx) in indices.iter().enumerate() {
+        let v = if delta && k > 0 { idx - prev } else { idx };
+        debug_assert!(v <= u32::MAX as u64, "flat_int32 overflow");
+        out.extend_from_slice(&(v as u32).to_le_bytes());
+        prev = idx;
+    }
+    out
+}
+
+pub fn decode(buf: &[u8], pos: &mut usize, delta: bool) -> anyhow::Result<Vec<u64>> {
+    let n = get_uvarint(buf, pos)? as usize;
+    if *pos + n * 4 > buf.len() {
+        anyhow::bail!("flat: truncated index stream");
+    }
+    let mut out = Vec::with_capacity(n);
+    let mut prev = 0u64;
+    for k in 0..n {
+        let c = &buf[*pos..*pos + 4];
+        *pos += 4;
+        let v = u32::from_le_bytes([c[0], c[1], c[2], c[3]]) as u64;
+        let idx = if delta && k > 0 { prev + v } else { v };
+        out.push(idx);
+        prev = idx;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_both_modes() {
+        crate::util::prop::check("flat roundtrip", 40, |g| {
+            let count = g.len();
+            let idx = g.sorted_indices(1 << 31, count);
+            for delta in [false, true] {
+                let buf = encode(&idx, delta);
+                let mut pos = 0;
+                assert_eq!(decode(&buf, &mut pos, delta).unwrap(), idx);
+                assert_eq!(pos, buf.len());
+            }
+        });
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let buf = encode(&[1, 2, 3], true);
+        let mut pos = 0;
+        assert!(decode(&buf[..buf.len() - 1], &mut pos, true).is_err());
+    }
+}

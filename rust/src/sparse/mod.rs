@@ -1,0 +1,301 @@
+//! Sparse weight-patch machinery (paper §4.2, Algorithms 1/3/4).
+//!
+//! A patch is the set of positions whose BF16 bit pattern changed between
+//! two checkpoints, together with the **new values** (never arithmetic
+//! differences — §H.6's losslessness argument relies on this). This
+//! module provides the bitwise diff, the index-stream formats evaluated
+//! in Tables 10/11, and the self-describing container with the per-patch
+//! SHA-256 used for end-to-end verification (§J.4).
+
+pub mod container;
+pub mod coo;
+pub mod flat;
+
+use crate::util::pool;
+
+/// Geometry of one tensor inside the flat parameter vector; COO formats
+/// need (rows, cols). 1-D tensors are treated as a single row.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorShape {
+    pub name: String,
+    /// Offset in the flat vector (elements).
+    pub offset: usize,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl TensorShape {
+    pub fn len(&self) -> usize {
+        self.rows * self.cols
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Make a single-tensor layout covering `n` flat elements (used when no
+/// real manifest is available; `cols` bounds u16 col downscaling).
+pub fn synthetic_layout(n: usize, cols: usize) -> Vec<TensorShape> {
+    let cols = cols.max(1);
+    let rows = n.div_ceil(cols);
+    vec![TensorShape { name: "flat".into(), offset: 0, rows, cols }]
+}
+
+/// Bitwise diff of two BF16 views: the sorted positions where the bit
+/// patterns differ. This *is* the compute-visibility gate applied to
+/// consecutive checkpoints (Alg. 1 line 2). Parallel over chunks.
+pub fn diff_bf16(old: &[u16], new: &[u16]) -> Vec<u64> {
+    assert_eq!(old.len(), new.len(), "checkpoint length mismatch");
+    let parts = pool::par_ranges(old.len(), 1 << 16, |r| {
+        let mut v = Vec::new();
+        for i in r {
+            if old[i] != new[i] {
+                v.push(i as u64);
+            }
+        }
+        v
+    });
+    let total: usize = parts.iter().map(|p| p.len()).sum();
+    let mut out = Vec::with_capacity(total);
+    for p in parts {
+        out.extend(p);
+    }
+    out
+}
+
+/// Gather `values[i] = new[idx]` for a sorted index list.
+pub fn gather_u16(new: &[u16], indices: &[u64]) -> Vec<u16> {
+    indices.iter().map(|&i| new[i as usize]).collect()
+}
+
+pub fn gather_f32(new: &[f32], indices: &[u64]) -> Vec<f32> {
+    indices.iter().map(|&i| new[i as usize]).collect()
+}
+
+/// Apply a patch: `weights[idx] = value` (Alg. 4 — a direct memory
+/// overwrite, no floating-point arithmetic).
+pub fn apply_u16(weights: &mut [u16], indices: &[u64], values: &[u16]) {
+    assert_eq!(indices.len(), values.len());
+    for (&i, &v) in indices.iter().zip(values) {
+        weights[i as usize] = v;
+    }
+}
+
+pub fn apply_f32(weights: &mut [f32], indices: &[u64], values: &[f32]) {
+    assert_eq!(indices.len(), values.len());
+    for (&i, &v) in indices.iter().zip(values) {
+        weights[i as usize] = v;
+    }
+}
+
+/// Sparsity of a patch: fraction of parameters *unchanged*.
+pub fn sparsity(nnz: usize, total: usize) -> f64 {
+    if total == 0 {
+        1.0
+    } else {
+        1.0 - nnz as f64 / total as f64
+    }
+}
+
+/// Index-stream encodings (paper Tables 10/11). `CooDownscaled` is the
+/// production default (`delta_coo_downscaled`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PatchFormat {
+    /// 2-D COO, absolute u32 rows/cols (Table 10 baseline "Raw COO").
+    CooRaw,
+    /// 2-D COO, sorted + delta-encoded rows/cols at u32 (Table 10 row 3,
+    /// Table 11 "delta_coo_int32").
+    CooDelta,
+    /// 2-D COO, delta + narrowest width (u8 rows / u16 cols typically) —
+    /// the paper's default pipeline (Table 10 row 4).
+    CooDownscaled,
+    /// 1-D flat absolute u32 indices.
+    FlatAbs,
+    /// 1-D flat delta u32 indices (Table 11 "delta_flat_int32").
+    FlatDelta,
+    /// 1-D flat delta-varint indices — the PULSELoCo wire stream (§F.3).
+    FlatVarint,
+}
+
+impl PatchFormat {
+    pub const ALL: [PatchFormat; 6] = [
+        PatchFormat::CooRaw,
+        PatchFormat::CooDelta,
+        PatchFormat::CooDownscaled,
+        PatchFormat::FlatAbs,
+        PatchFormat::FlatDelta,
+        PatchFormat::FlatVarint,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PatchFormat::CooRaw => "coo_raw",
+            PatchFormat::CooDelta => "delta_coo_int32",
+            PatchFormat::CooDownscaled => "delta_coo_downscaled",
+            PatchFormat::FlatAbs => "flat_int32",
+            PatchFormat::FlatDelta => "delta_flat_int32",
+            PatchFormat::FlatVarint => "delta_flat_varint",
+        }
+    }
+
+    pub fn tag(&self) -> u8 {
+        match self {
+            PatchFormat::CooRaw => 0,
+            PatchFormat::CooDelta => 1,
+            PatchFormat::CooDownscaled => 2,
+            PatchFormat::FlatAbs => 3,
+            PatchFormat::FlatDelta => 4,
+            PatchFormat::FlatVarint => 5,
+        }
+    }
+
+    pub fn from_tag(t: u8) -> anyhow::Result<PatchFormat> {
+        PatchFormat::ALL
+            .iter()
+            .copied()
+            .find(|f| f.tag() == t)
+            .ok_or_else(|| anyhow::anyhow!("bad patch format tag {}", t))
+    }
+
+    /// Encode an index stream (no values) for this format.
+    pub fn encode_indices(&self, indices: &[u64], layout: &[TensorShape]) -> Vec<u8> {
+        match self {
+            PatchFormat::CooRaw => coo::encode(indices, layout, false, false),
+            PatchFormat::CooDelta => coo::encode(indices, layout, true, false),
+            PatchFormat::CooDownscaled => coo::encode(indices, layout, true, true),
+            PatchFormat::FlatAbs => flat::encode(indices, false),
+            PatchFormat::FlatDelta => flat::encode(indices, true),
+            PatchFormat::FlatVarint => crate::codec::varint::encode_sorted_indices(indices),
+        }
+    }
+
+    /// Decode an index stream.
+    pub fn decode_indices(
+        &self,
+        buf: &[u8],
+        pos: &mut usize,
+        layout: &[TensorShape],
+    ) -> anyhow::Result<Vec<u64>> {
+        match self {
+            PatchFormat::CooRaw => coo::decode(buf, pos, layout, false, false),
+            PatchFormat::CooDelta => coo::decode(buf, pos, layout, true, false),
+            PatchFormat::CooDownscaled => coo::decode(buf, pos, layout, true, true),
+            PatchFormat::FlatAbs => flat::decode(buf, pos, false),
+            PatchFormat::FlatDelta => flat::decode(buf, pos, true),
+            PatchFormat::FlatVarint => crate::codec::varint::decode_sorted_indices(buf, pos),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diff_finds_exact_positions() {
+        let old = vec![1u16, 2, 3, 4, 5, 6];
+        let mut new = old.clone();
+        new[1] = 9;
+        new[4] = 0;
+        assert_eq!(diff_bf16(&old, &new), vec![1, 4]);
+        assert_eq!(diff_bf16(&old, &old), Vec::<u64>::new());
+    }
+
+    #[test]
+    fn diff_parallel_matches_serial_large() {
+        let mut rng = crate::util::rng::Rng::new(51);
+        let n = 300_000;
+        let old: Vec<u16> = (0..n).map(|_| rng.next_u32() as u16).collect();
+        let mut new = old.clone();
+        let mut expect = Vec::new();
+        for _ in 0..5000 {
+            let i = rng.below(n as u64) as usize;
+            if new[i] == old[i] {
+                new[i] ^= 1;
+            }
+        }
+        for i in 0..n {
+            if old[i] != new[i] {
+                expect.push(i as u64);
+            }
+        }
+        assert_eq!(diff_bf16(&old, &new), expect);
+    }
+
+    #[test]
+    fn apply_inverts_diff() {
+        crate::util::prop::check("patch apply reconstructs", 40, |g| {
+            let n = g.len().max(1);
+            let old: Vec<u16> = (0..n).map(|_| g.rng.next_u32() as u16).collect();
+            let mut new = old.clone();
+            for _ in 0..g.rng.below(n as u64 + 1) {
+                let i = g.rng.below(n as u64) as usize;
+                new[i] = g.rng.next_u32() as u16;
+            }
+            let idx = diff_bf16(&old, &new);
+            let vals = gather_u16(&new, &idx);
+            let mut rec = old.clone();
+            apply_u16(&mut rec, &idx, &vals);
+            assert_eq!(rec, new);
+        });
+    }
+
+    #[test]
+    fn all_formats_roundtrip_indices() {
+        crate::util::prop::check("index formats roundtrip", 40, |g| {
+            let cols = 1 + g.rng.below(2000) as usize;
+            let rows = 1 + g.rng.below(200) as usize;
+            let n = rows * cols;
+            let layout = synthetic_layout(n, cols);
+            let count = g.len();
+            let idx = g.sorted_indices(n, count);
+            for fmt in PatchFormat::ALL {
+                let buf = fmt.encode_indices(&idx, &layout);
+                let mut pos = 0;
+                let back = fmt.decode_indices(&buf, &mut pos, &layout).unwrap();
+                assert_eq!(back, idx, "format {}", fmt.name());
+                assert_eq!(pos, buf.len(), "format {}", fmt.name());
+            }
+        });
+    }
+
+    #[test]
+    fn downscaled_coo_smaller_than_raw() {
+        // clustered indices → delta+downscale should win clearly (§H.4.1)
+        let mut rng = crate::util::rng::Rng::new(61);
+        let cols = 1024usize;
+        let rows = 1000usize;
+        let layout = synthetic_layout(rows * cols, cols);
+        let mut idx: Vec<u64> = Vec::new();
+        let mut cur = 0u64;
+        while (cur as usize) < rows * cols && idx.len() < 20_000 {
+            cur += 1 + rng.below(40);
+            if (cur as usize) < rows * cols {
+                idx.push(cur);
+            }
+        }
+        let raw = PatchFormat::CooRaw.encode_indices(&idx, &layout).len();
+        let down = PatchFormat::CooDownscaled.encode_indices(&idx, &layout).len();
+        assert!(down * 2 < raw, "raw={} down={}", raw, down);
+    }
+
+    #[test]
+    fn multi_tensor_layout_roundtrip() {
+        let layout = vec![
+            TensorShape { name: "a".into(), offset: 0, rows: 10, cols: 7 },
+            TensorShape { name: "b".into(), offset: 70, rows: 1, cols: 33 },
+            TensorShape { name: "c".into(), offset: 103, rows: 5, cols: 300 },
+        ];
+        let n = 103 + 1500;
+        let mut rng = crate::util::rng::Rng::new(71);
+        let mut idx: Vec<u64> = (0..200).map(|_| rng.below(n as u64)).collect();
+        idx.sort_unstable();
+        idx.dedup();
+        for fmt in [PatchFormat::CooRaw, PatchFormat::CooDelta, PatchFormat::CooDownscaled] {
+            let buf = fmt.encode_indices(&idx, &layout);
+            let mut pos = 0;
+            let back = fmt.decode_indices(&buf, &mut pos, &layout).unwrap();
+            assert_eq!(back, idx, "format {}", fmt.name());
+        }
+    }
+}

@@ -1,0 +1,235 @@
+//! S3-like object store substrate (paper §E.1: "All coordination occurs
+//! through S3-compatible object storage").
+//!
+//! File-backed implementation with the semantics the grail / PULSESync
+//! protocols rely on: atomic single-object puts (write-temp + rename),
+//! prefix listing, signed manifests, and explicit *ready markers*
+//! (paper §J.1) so a consumer never observes a partially-uploaded
+//! checkpoint. Retention policy per §J.7 lives in [`retention`].
+
+pub mod retention;
+
+use crate::util::{atomic_write, sha256_hex};
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// A bucket rooted at a local directory. Keys are `/`-separated paths.
+#[derive(Debug, Clone)]
+pub struct ObjectStore {
+    root: PathBuf,
+    /// Simulated per-object latency knob used by deployment sims (s).
+    pub put_latency: f64,
+}
+
+impl ObjectStore {
+    pub fn open(root: impl Into<PathBuf>) -> Result<ObjectStore> {
+        let root = root.into();
+        std::fs::create_dir_all(&root)
+            .with_context(|| format!("creating bucket root {}", root.display()))?;
+        Ok(ObjectStore { root, put_latency: 0.0 })
+    }
+
+    /// Create a store under a fresh temp directory (tests).
+    pub fn temp(tag: &str) -> Result<ObjectStore> {
+        let dir = std::env::temp_dir().join(format!(
+            "pulse_store_{}_{}_{}",
+            tag,
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        ObjectStore::open(dir)
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn path_of(&self, key: &str) -> Result<PathBuf> {
+        if key.is_empty() || key.starts_with('/') || key.split('/').any(|c| c == "..") {
+            bail!("invalid object key '{}'", key);
+        }
+        Ok(self.root.join(key))
+    }
+
+    /// Atomic put: the object is either fully visible or absent.
+    pub fn put(&self, key: &str, data: &[u8]) -> Result<()> {
+        let p = self.path_of(key)?;
+        atomic_write(&p, data).with_context(|| format!("put {}", key))?;
+        Ok(())
+    }
+
+    pub fn get(&self, key: &str) -> Result<Vec<u8>> {
+        let p = self.path_of(key)?;
+        std::fs::read(&p).with_context(|| format!("get {}", key))
+    }
+
+    pub fn exists(&self, key: &str) -> bool {
+        self.path_of(key).map(|p| p.exists()).unwrap_or(false)
+    }
+
+    pub fn delete(&self, key: &str) -> Result<()> {
+        let p = self.path_of(key)?;
+        if p.exists() {
+            std::fs::remove_file(&p).with_context(|| format!("delete {}", key))?;
+        }
+        Ok(())
+    }
+
+    pub fn size(&self, key: &str) -> Result<u64> {
+        let p = self.path_of(key)?;
+        Ok(std::fs::metadata(&p)?.len())
+    }
+
+    /// List keys under `prefix` (recursive), sorted.
+    pub fn list(&self, prefix: &str) -> Result<Vec<String>> {
+        let base = if prefix.is_empty() { self.root.clone() } else { self.path_of(prefix)? };
+        let mut out = Vec::new();
+        if base.is_dir() {
+            walk(&base, &self.root, &mut out)?;
+        } else if base.is_file() {
+            out.push(prefix.to_string());
+        }
+        out.sort();
+        Ok(out)
+    }
+}
+
+fn walk(dir: &Path, root: &Path, out: &mut Vec<String>) -> Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let p = entry.path();
+        if p.is_dir() {
+            walk(&p, root, out)?;
+        } else if let Ok(rel) = p.strip_prefix(root) {
+            // skip in-flight temp files from atomic_write
+            if rel.to_string_lossy().contains(".tmp.") {
+                continue;
+            }
+            out.push(rel.to_string_lossy().replace('\\', "/"));
+        }
+    }
+    Ok(())
+}
+
+/// A signed manifest over a set of objects (paper §J.4 "file-level
+/// integrity"): per-file SHA-256 plus a signature binding the manifest
+/// to the trainer key (SHA-256(key || canonical entries)).
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub entries: Vec<(String, String)>, // (key, sha256hex)
+    pub signature: String,
+}
+
+impl Manifest {
+    pub fn build(store: &ObjectStore, keys: &[String], signing_key: &str) -> Result<Manifest> {
+        let mut entries = Vec::with_capacity(keys.len());
+        for k in keys {
+            let data = store.get(k)?;
+            entries.push((k.clone(), sha256_hex(&data)));
+        }
+        entries.sort();
+        let signature = sign(&entries, signing_key);
+        Ok(Manifest { entries, signature })
+    }
+
+    pub fn to_json(&self) -> String {
+        use crate::util::json::Json;
+        let mut j = Json::obj();
+        let files: Vec<Json> = self
+            .entries
+            .iter()
+            .map(|(k, h)| {
+                let mut e = Json::obj();
+                e.set("key", k.as_str().into()).set("sha256", h.as_str().into());
+                e
+            })
+            .collect();
+        j.set("files", Json::Arr(files)).set("signature", self.signature.as_str().into());
+        j.to_pretty()
+    }
+
+    pub fn from_json(text: &str) -> Result<Manifest> {
+        use crate::util::json::Json;
+        let j = Json::parse(text)?;
+        let mut entries = Vec::new();
+        for f in j.req("files")?.as_arr().unwrap_or(&[]) {
+            entries.push((f.req_str("key")?.to_string(), f.req_str("sha256")?.to_string()));
+        }
+        Ok(Manifest { entries, signature: j.req_str("signature")?.to_string() })
+    }
+
+    /// Verify the signature and every object hash.
+    pub fn verify(&self, store: &ObjectStore, signing_key: &str) -> Result<()> {
+        if sign(&self.entries, signing_key) != self.signature {
+            bail!("manifest signature mismatch");
+        }
+        for (k, h) in &self.entries {
+            let data = store.get(k)?;
+            let got = sha256_hex(&data);
+            if &got != h {
+                bail!("object '{}' hash mismatch (expected {}, got {})", k, h, got);
+            }
+        }
+        Ok(())
+    }
+}
+
+fn sign(entries: &[(String, String)], key: &str) -> String {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(key.as_bytes());
+    for (k, h) in entries {
+        buf.extend_from_slice(k.as_bytes());
+        buf.push(0);
+        buf.extend_from_slice(h.as_bytes());
+        buf.push(0);
+    }
+    sha256_hex(&buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_list_delete() {
+        let s = ObjectStore::temp("basic").unwrap();
+        s.put("ckpt/step_1/delta.bin", b"abc").unwrap();
+        s.put("ckpt/step_1/READY", b"").unwrap();
+        s.put("ckpt/step_2/delta.bin", b"def").unwrap();
+        assert_eq!(s.get("ckpt/step_1/delta.bin").unwrap(), b"abc");
+        assert!(s.exists("ckpt/step_1/READY"));
+        let keys = s.list("ckpt").unwrap();
+        assert_eq!(keys.len(), 3);
+        assert_eq!(keys[0], "ckpt/step_1/READY");
+        s.delete("ckpt/step_1/READY").unwrap();
+        assert!(!s.exists("ckpt/step_1/READY"));
+        std::fs::remove_dir_all(s.root()).unwrap();
+    }
+
+    #[test]
+    fn rejects_path_escape() {
+        let s = ObjectStore::temp("escape").unwrap();
+        assert!(s.put("../evil", b"x").is_err());
+        assert!(s.put("/abs", b"x").is_err());
+        assert!(s.put("a/../../b", b"x").is_err());
+        std::fs::remove_dir_all(s.root()).unwrap();
+    }
+
+    #[test]
+    fn manifest_sign_verify_tamper() {
+        let s = ObjectStore::temp("manifest").unwrap();
+        s.put("w/a.bin", b"payload-a").unwrap();
+        s.put("w/b.bin", b"payload-b").unwrap();
+        let keys = vec!["w/a.bin".to_string(), "w/b.bin".to_string()];
+        let m = Manifest::build(&s, &keys, "trainer-key").unwrap();
+        let m2 = Manifest::from_json(&m.to_json()).unwrap();
+        m2.verify(&s, "trainer-key").unwrap();
+        assert!(m2.verify(&s, "other-key").is_err());
+        s.put("w/a.bin", b"EVIL").unwrap();
+        assert!(m2.verify(&s, "trainer-key").is_err());
+        std::fs::remove_dir_all(s.root()).unwrap();
+    }
+}

@@ -1,0 +1,152 @@
+//! Retention policy (paper §J.7): keep the most recent `max_deltas`
+//! delta checkpoints and `max_anchors` full anchors, plus any anchor
+//! still referenced by a retained delta.
+
+use super::ObjectStore;
+use anyhow::Result;
+use std::collections::BTreeSet;
+
+#[derive(Debug, Clone, Copy)]
+pub struct RetentionPolicy {
+    pub max_deltas: usize,
+    pub max_anchors: usize,
+}
+
+impl Default for RetentionPolicy {
+    fn default() -> Self {
+        // Paper defaults: 100 deltas, 10 anchors.
+        RetentionPolicy { max_deltas: 100, max_anchors: 10 }
+    }
+}
+
+/// Inventory of checkpoint steps currently in the store, derived from
+/// ready markers under `prefix` (see `pulse::sync` for the key scheme).
+#[derive(Debug, Default)]
+pub struct Inventory {
+    pub delta_steps: Vec<u64>,
+    pub anchor_steps: Vec<u64>,
+}
+
+pub fn scan(store: &ObjectStore, prefix: &str) -> Result<Inventory> {
+    let mut inv = Inventory::default();
+    for key in store.list(prefix)? {
+        let rel = key.strip_prefix(prefix).unwrap_or(&key).trim_start_matches('/');
+        if let Some(step) = parse_marker(rel, "delta_ready_") {
+            inv.delta_steps.push(step);
+        } else if let Some(step) = parse_marker(rel, "anchor_ready_") {
+            inv.anchor_steps.push(step);
+        }
+    }
+    inv.delta_steps.sort_unstable();
+    inv.anchor_steps.sort_unstable();
+    Ok(inv)
+}
+
+fn parse_marker(rel: &str, kind: &str) -> Option<u64> {
+    rel.strip_prefix(kind).and_then(|s| s.parse().ok())
+}
+
+/// Steps to delete under the policy. Never removes an anchor that a
+/// retained delta chain needs: the newest anchor ≤ the oldest retained
+/// delta is always preserved (slow-path recovery, §J.1).
+pub fn plan(inv: &Inventory, policy: RetentionPolicy) -> (Vec<u64>, Vec<u64>) {
+    let keep_deltas: BTreeSet<u64> = inv
+        .delta_steps
+        .iter()
+        .rev()
+        .take(policy.max_deltas)
+        .copied()
+        .collect();
+    let mut keep_anchors: BTreeSet<u64> = inv
+        .anchor_steps
+        .iter()
+        .rev()
+        .take(policy.max_anchors)
+        .copied()
+        .collect();
+    // anchor referenced by the oldest retained delta
+    if let Some(&oldest_delta) = keep_deltas.iter().next() {
+        if let Some(&base) = inv.anchor_steps.iter().filter(|&&a| a <= oldest_delta).next_back() {
+            keep_anchors.insert(base);
+        }
+    }
+    let drop_deltas =
+        inv.delta_steps.iter().filter(|s| !keep_deltas.contains(s)).copied().collect();
+    let drop_anchors =
+        inv.anchor_steps.iter().filter(|s| !keep_anchors.contains(s)).copied().collect();
+    (drop_deltas, drop_anchors)
+}
+
+/// Maximum storage bound of Eq. 31 for given payload sizes.
+pub fn storage_bound(policy: RetentionPolicy, anchor_bytes: u64, delta_bytes: u64) -> u64 {
+    policy.max_anchors as u64 * anchor_bytes + policy.max_deltas as u64 * delta_bytes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_recent_and_referenced() {
+        let inv = Inventory {
+            delta_steps: (1..=200).collect(),
+            anchor_steps: vec![0, 50, 100, 150, 200],
+        };
+        let policy = RetentionPolicy { max_deltas: 100, max_anchors: 2 };
+        let (dd, da) = plan(&inv, policy);
+        // deltas 1..=100 dropped
+        assert_eq!(dd, (1..=100).collect::<Vec<u64>>());
+        // newest 2 anchors kept (150, 200) + anchor 100 referenced by
+        // oldest retained delta (101)
+        assert_eq!(da, vec![0, 50]);
+    }
+
+    #[test]
+    fn never_orphans_a_chain() {
+        crate::util::prop::check("retention keeps chain base", 40, |g| {
+            let n = 1 + g.rng.below(300);
+            let k = 1 + g.rng.below(60);
+            let deltas: Vec<u64> = (1..=n).collect();
+            let anchors: Vec<u64> = (0..=n).step_by(k as usize).collect();
+            let inv = Inventory { delta_steps: deltas, anchor_steps: anchors.clone() };
+            let policy = RetentionPolicy {
+                max_deltas: 1 + g.rng.below(100) as usize,
+                max_anchors: 1 + g.rng.below(5) as usize,
+            };
+            let (dd, da) = plan(&inv, policy);
+            let kept_deltas: Vec<u64> =
+                (1..=n).filter(|s| !dd.contains(s)).collect();
+            let kept_anchors: Vec<u64> =
+                anchors.iter().filter(|s| !da.contains(s)).copied().collect();
+            if let Some(&oldest) = kept_deltas.first() {
+                // some kept anchor must be ≤ oldest retained delta
+                assert!(
+                    kept_anchors.iter().any(|&a| a <= oldest),
+                    "oldest kept delta {} has no base anchor (kept {:?})",
+                    oldest,
+                    kept_anchors
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn storage_bound_matches_paper() {
+        // Eq. 31: 10 × 14 GB + 100 × 108 MB ≈ 151 GB
+        let b = storage_bound(RetentionPolicy::default(), 14_000_000_000, 108_000_000);
+        assert_eq!(b, 150_800_000_000);
+    }
+
+    #[test]
+    fn scan_parses_markers() {
+        let s = ObjectStore::temp("retention").unwrap();
+        s.put("sync/delta_ready_3", b"").unwrap();
+        s.put("sync/delta_ready_4", b"").unwrap();
+        s.put("sync/anchor_ready_0", b"").unwrap();
+        s.put("sync/other_junk", b"").unwrap();
+        let inv = scan(&s, "sync").unwrap();
+        assert_eq!(inv.delta_steps, vec![3, 4]);
+        assert_eq!(inv.anchor_steps, vec![0]);
+        std::fs::remove_dir_all(s.root()).unwrap();
+    }
+}

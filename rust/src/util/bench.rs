@@ -1,0 +1,186 @@
+//! Micro-benchmark harness (criterion substitute) used by the
+//! `cargo bench` targets (declared with `harness = false`).
+//!
+//! Methodology: warmup iterations, then timed batches until both a
+//! minimum wall time and a minimum iteration count are reached; reports
+//! mean / median / p10 / p90 and derived throughput. Results can be
+//! appended to a CSV so the perf pass can diff before/after.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    /// Optional bytes processed per iteration (enables MB/s reporting).
+    pub bytes_per_iter: Option<u64>,
+}
+
+impl BenchResult {
+    pub fn mbps(&self) -> Option<f64> {
+        self.bytes_per_iter.map(|b| (b as f64 / 1e6) / (self.mean_ns / 1e9))
+    }
+
+    pub fn report(&self) -> String {
+        let base = format!(
+            "{:<44} {:>10} iters  mean {:>12}  median {:>12}  p90 {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.p90_ns)
+        );
+        match self.mbps() {
+            Some(m) => format!("{}  {:>10.1} MB/s", base, m),
+            None => base,
+        }
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{:.1} ns", ns)
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+pub struct Bench {
+    /// Minimum total measured time per benchmark (seconds).
+    pub min_time: f64,
+    /// Minimum measured iterations.
+    pub min_iters: usize,
+    /// Warmup time (seconds).
+    pub warmup: f64,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        // PULSE_BENCH_FAST=1 runs a quick smoke pass (used by `make test`).
+        let fast = std::env::var("PULSE_BENCH_FAST").ok().as_deref() == Some("1");
+        Bench {
+            min_time: if fast { 0.05 } else { 0.3 },
+            min_iters: if fast { 3 } else { 5 },
+            warmup: if fast { 0.01 } else { 0.2 },
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time `f`, which performs one logical iteration per call.
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        self.run_with_bytes(name, None, &mut f)
+    }
+
+    /// Time `f` and report throughput for `bytes` processed per call.
+    pub fn run_bytes<F: FnMut()>(&mut self, name: &str, bytes: u64, mut f: F) -> &BenchResult {
+        self.run_with_bytes(name, Some(bytes), &mut f)
+    }
+
+    fn run_with_bytes(
+        &mut self,
+        name: &str,
+        bytes: Option<u64>,
+        f: &mut dyn FnMut(),
+    ) -> &BenchResult {
+        // Warmup.
+        let w = Instant::now();
+        while w.elapsed().as_secs_f64() < self.warmup {
+            f();
+        }
+        // Measure.
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while start.elapsed().as_secs_f64() < self.min_time || samples_ns.len() < self.min_iters {
+            let t = Instant::now();
+            f();
+            samples_ns.push(t.elapsed().as_nanos() as f64);
+            if samples_ns.len() > 2_000_000 {
+                break;
+            }
+        }
+        let mut sorted = samples_ns.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: samples_ns.len(),
+            mean_ns: samples_ns.iter().sum::<f64>() / samples_ns.len() as f64,
+            median_ns: sorted[sorted.len() / 2],
+            p10_ns: sorted[sorted.len() / 10],
+            p90_ns: sorted[sorted.len() * 9 / 10],
+            bytes_per_iter: bytes,
+        };
+        println!("{}", res.report());
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    /// Append all results to a CSV file (created with header if missing).
+    pub fn write_csv(&self, path: &std::path::Path) -> std::io::Result<()> {
+        use std::io::Write;
+        let exists = path.exists();
+        if let Some(p) = path.parent() {
+            std::fs::create_dir_all(p)?;
+        }
+        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        if !exists {
+            writeln!(f, "name,iters,mean_ns,median_ns,p10_ns,p90_ns,mbps")?;
+        }
+        for r in &self.results {
+            writeln!(
+                f,
+                "{},{},{:.1},{:.1},{:.1},{:.1},{}",
+                r.name,
+                r.iters,
+                r.mean_ns,
+                r.median_ns,
+                r.p10_ns,
+                r.p90_ns,
+                r.mbps().map(|m| format!("{:.1}", m)).unwrap_or_default()
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        std::env::set_var("PULSE_BENCH_FAST", "1");
+        let mut b = Bench::new();
+        let mut acc = 0u64;
+        let r = b.run("noop-ish", || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(r.iters >= 3);
+        assert!(r.mean_ns >= 0.0);
+    }
+
+    #[test]
+    fn throughput_reported() {
+        std::env::set_var("PULSE_BENCH_FAST", "1");
+        let mut b = Bench::new();
+        let data = vec![1u8; 1 << 16];
+        let r = b.run_bytes("sum-64k", data.len() as u64, || {
+            std::hint::black_box(data.iter().map(|&x| x as u64).sum::<u64>());
+        });
+        assert!(r.mbps().unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,133 @@
+//! Data-parallel helpers over `std::thread::scope` (rayon substitute).
+//!
+//! The hot paths that use these are embarrassingly parallel over disjoint
+//! chunks (bitwise diff, gate, Adam step), so scoped threads with static
+//! partitioning are enough — and allocation-free once the closure is set.
+
+/// Number of worker threads to use: respects `PULSE_THREADS`, defaults
+/// to available parallelism capped at 16.
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("PULSE_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+}
+
+/// Run `f(chunk_index, chunk)` over disjoint mutable chunks of `data` in
+/// parallel. Chunks are contiguous and cover the slice exactly.
+pub fn par_chunks_mut<T: Send, F>(data: &mut [T], min_chunk: usize, f: F)
+where
+    F: Fn(usize, usize, &mut [T]) + Sync,
+{
+    let n = data.len();
+    if n == 0 {
+        return;
+    }
+    let workers = num_threads().min(n.div_ceil(min_chunk)).max(1);
+    if workers == 1 {
+        f(0, 0, data);
+        return;
+    }
+    let chunk = n.div_ceil(workers);
+    std::thread::scope(|s| {
+        for (i, piece) in data.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            s.spawn(move || f(i, i * chunk, piece));
+        }
+    });
+}
+
+/// Parallel map over index ranges: splits `0..n` into contiguous ranges,
+/// calls `f(range)` on each in parallel, returns the per-range outputs in
+/// order.
+pub fn par_ranges<R: Send, F>(n: usize, min_chunk: usize, f: F) -> Vec<R>
+where
+    F: Fn(std::ops::Range<usize>) -> R + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = num_threads().min(n.div_ceil(min_chunk)).max(1);
+    let chunk = n.div_ceil(workers);
+    let mut bounds = Vec::new();
+    let mut lo = 0;
+    while lo < n {
+        let hi = (lo + chunk).min(n);
+        bounds.push(lo..hi);
+        lo = hi;
+    }
+    if bounds.len() == 1 {
+        return vec![f(bounds.pop().unwrap())];
+    }
+    let mut out: Vec<Option<R>> = (0..bounds.len()).map(|_| None).collect();
+    std::thread::scope(|s| {
+        for (slot, range) in out.iter_mut().zip(bounds.into_iter()) {
+            let f = &f;
+            s.spawn(move || {
+                *slot = Some(f(range));
+            });
+        }
+    });
+    out.into_iter().map(|o| o.unwrap()).collect()
+}
+
+/// Run N independent jobs in parallel and collect their outputs in order.
+/// Used by the coordinator to run R trainer workers per round.
+pub fn par_map<T: Send, R: Send, F>(inputs: Vec<T>, f: F) -> Vec<R>
+where
+    F: Fn(usize, T) -> R + Sync,
+{
+    let n = inputs.len();
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|s| {
+        for (i, (slot, input)) in out.iter_mut().zip(inputs.into_iter()).enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                *slot = Some(f(i, input));
+            });
+        }
+    });
+    out.into_iter().map(|o| o.unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_everything() {
+        let mut v = vec![0u64; 100_000];
+        par_chunks_mut(&mut v, 1024, |_, base, chunk| {
+            for (i, x) in chunk.iter_mut().enumerate() {
+                *x = (base + i) as u64;
+            }
+        });
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i as u64);
+        }
+    }
+
+    #[test]
+    fn ranges_sum() {
+        let total: usize = par_ranges(1000, 16, |r| r.sum::<usize>()).into_iter().sum();
+        assert_eq!(total, 1000 * 999 / 2);
+    }
+
+    #[test]
+    fn par_map_order() {
+        let out = par_map((0..32).collect::<Vec<_>>(), |i, x| {
+            assert_eq!(i, x);
+            x * 2
+        });
+        assert_eq!(out, (0..32).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_ok() {
+        let mut v: Vec<u8> = vec![];
+        par_chunks_mut(&mut v, 8, |_, _, _| panic!("should not run"));
+        assert!(par_ranges(0, 8, |_| 0).is_empty());
+    }
+}

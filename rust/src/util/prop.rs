@@ -1,0 +1,149 @@
+//! Miniature property-testing harness (proptest substitute).
+//!
+//! `check(name, cases, |g| { ... })` runs the closure `cases` times with a
+//! fresh deterministic [`Gen`] each time. On failure it re-raises the panic
+//! annotated with the failing case seed so `PULSE_PROP_SEED=<seed>` can
+//! replay exactly that case. There is no shrinking — generators are asked
+//! to produce a size spectrum instead (small sizes early).
+
+use super::rng::Rng;
+
+/// Per-case generator: a seeded RNG plus a "size" knob that grows with the
+/// case index so early cases are small (poor man's shrinking).
+pub struct Gen {
+    pub rng: Rng,
+    pub size: usize,
+    pub seed: u64,
+}
+
+impl Gen {
+    /// A vector length from 0..=size (biased small).
+    pub fn len(&mut self) -> usize {
+        let n = self.rng.below(self.size as u64 + 1) as usize;
+        if self.rng.f64() < 0.2 {
+            n / 8
+        } else {
+            n
+        }
+    }
+
+    /// Random f32 vector with mixed magnitudes incl. special values.
+    pub fn f32_vec(&mut self, len: usize) -> Vec<f32> {
+        (0..len)
+            .map(|_| match self.rng.below(20) {
+                0 => 0.0,
+                1 => -0.0,
+                2 => f32::MIN_POSITIVE,
+                3 => 1.0,
+                4 => -1.0,
+                5 => (self.rng.f32() - 0.5) * 1e-6,
+                6 => (self.rng.f32() - 0.5) * 1e6,
+                _ => (self.rng.normal() as f32) * 10f32.powi(self.rng.range_i64(-8, 2) as i32),
+            })
+            .collect()
+    }
+
+    /// Random bytes with tunable entropy (some runs highly compressible).
+    pub fn bytes(&mut self, len: usize) -> Vec<u8> {
+        let alphabet = 1usize << self.rng.below(9); // 1..=256 symbols
+        (0..len).map(|_| self.rng.below(alphabet as u64) as u8).collect()
+    }
+
+    /// Sorted unique indices below `universe`.
+    pub fn sorted_indices(&mut self, universe: usize, approx_count: usize) -> Vec<u64> {
+        if universe == 0 {
+            return Vec::new();
+        }
+        let mut v: Vec<u64> =
+            (0..approx_count).map(|_| self.rng.below(universe as u64)).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+/// Run a property. Panics (failing the enclosing test) on the first
+/// failing case, reporting the case seed.
+pub fn check<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(name: &str, cases: usize, f: F) {
+    // Replay mode: run only the requested seed.
+    if let Ok(seed_s) = std::env::var("PULSE_PROP_SEED") {
+        if let Ok(seed) = seed_s.parse::<u64>() {
+            let mut g = Gen { rng: Rng::new(seed), size: 4096, seed };
+            f(&mut g);
+            return;
+        }
+    }
+    let mut master = Rng::new(0xC0FFEE ^ name.len() as u64 ^ hash_name(name));
+    for case in 0..cases {
+        let seed = master.next_u64();
+        // size grows from 4 to 4096 across the run
+        let size = 4 + (case * 4096) / cases.max(1);
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen { rng: Rng::new(seed), size, seed };
+            f(&mut g);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{}' failed on case {}/{} (replay with PULSE_PROP_SEED={}): {}",
+                name, case, cases, seed, msg
+            );
+        }
+    }
+}
+
+fn hash_name(name: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true_property() {
+        check("reverse twice is identity", 50, |g| {
+            let n = g.len();
+            let v = g.bytes(n);
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            assert_eq!(v, w);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn reports_failing_case() {
+        check("always fails", 10, |g| {
+            assert!(g.len() == usize::MAX, "intentional failure");
+        });
+    }
+
+    #[test]
+    fn generator_hits_specials() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let seen_zero = AtomicBool::new(false);
+        let seen_tiny = AtomicBool::new(false);
+        check("gen coverage", 30, |g| {
+            for x in g.f32_vec(64) {
+                if x == 0.0 {
+                    seen_zero.store(true, Ordering::Relaxed);
+                }
+                if x != 0.0 && x.abs() < 1e-5 {
+                    seen_tiny.store(true, Ordering::Relaxed);
+                }
+            }
+        });
+        assert!(seen_zero.load(Ordering::Relaxed) && seen_tiny.load(Ordering::Relaxed));
+    }
+}

@@ -1,0 +1,93 @@
+//! grail deployment integration (paper §E): trainer + miners +
+//! validator coordinate through the object store with PULSESync patches
+//! and grail-Proof verification. Requires `make artifacts` (tiny).
+
+use pulse::coordinator;
+use pulse::grail::{GrailConfig, GrailSim};
+use pulse::optim::AdamConfig;
+use pulse::rl::tasks::MathTask;
+use pulse::runtime::{artifacts_dir, ModelRuntime};
+
+#[test]
+fn grail_windows_train_verify_and_stay_sparse() {
+    let rt = ModelRuntime::load(&artifacts_dir(), "tiny", &[]).expect("run `make artifacts`");
+    let task = MathTask::default();
+    let master = coordinator::init_master(&rt, 0).unwrap();
+    let mut sim = GrailSim::new(
+        &rt,
+        &task,
+        GrailConfig {
+            n_miners: 2,
+            steps_per_window: 3,
+            batches_per_miner: 1,
+            anchor_interval: 50,
+            proof_tolerance: 2,
+            n_eval: 32,
+        },
+        master,
+        AdamConfig::post_training(),
+        7,
+    )
+    .unwrap();
+    let mut total_upload = 0u64;
+    let mut total_full = 0u64;
+    for w in 0..3u64 {
+        let stats = sim.run_window(w).unwrap();
+        assert_eq!(stats.rejected, 0, "honest miners must verify");
+        assert_eq!(stats.verified, 2, "both miners' batches verified");
+        assert!(stats.train_steps > 0);
+        assert!(stats.pass_at_1 >= 0.0 && stats.pass_at_1 <= 1.0);
+        total_upload += stats.upload_bytes;
+        total_full += stats.full_checkpoint_bytes;
+    }
+    // sparse patches beat full checkpoints by a large factor even at
+    // tiny scale (0.1M params)
+    assert!(
+        total_upload * 3 < total_full,
+        "upload {} vs full {}",
+        total_upload,
+        total_full
+    );
+}
+
+#[test]
+fn stale_checkpoint_rollouts_are_rejected() {
+    use pulse::grail::{decode_rollout, encode_rollout, proof, replay::Entry};
+    let rt = ModelRuntime::load(&artifacts_dir(), "tiny", &[]).expect("run `make artifacts`");
+    let d = rt.manifest.dims.clone();
+    let flat_fresh = coordinator::init_master(&rt, 0).unwrap();
+    // a "stale" model: perturb weights well past BF16 cells
+    let flat_stale: Vec<f32> = flat_fresh.iter().map(|&x| x * 1.2 + 0.01).collect();
+    let prompts: Vec<i32> = (0..d.batch * d.prompt_len).map(|i| (i % d.vocab) as i32).collect();
+    let ro = rt.rollout(&flat_stale, &prompts, [5, 6], 1.0).unwrap();
+    let beacon = 99u64;
+    // miner claims the rollouts came from the fresh checkpoint
+    let proofs: Vec<Vec<u32>> = (0..d.batch)
+        .map(|row| {
+            let toks = &ro.tokens[row * d.seq + d.prompt_len..(row + 1) * d.seq];
+            let lps = &ro.logprobs[row * d.gen_len..(row + 1) * d.gen_len];
+            proof::prove(beacon, toks, lps)
+        })
+        .collect();
+    let entry = Entry {
+        window: 0,
+        miner: 0,
+        tokens: ro.tokens.clone(),
+        logprobs: ro.logprobs.clone(),
+        instances: vec![],
+    };
+    let text = encode_rollout(&entry, &proofs, beacon);
+    let (e2, p2, b2) = decode_rollout(&text).unwrap();
+    // validator recomputes under the FRESH checkpoint
+    let (relp, _) = rt.score(&flat_fresh, &e2.tokens).unwrap();
+    let mut any_rejected = false;
+    for row in 0..d.batch {
+        let toks = &e2.tokens[row * d.seq + d.prompt_len..(row + 1) * d.seq];
+        let lps = &relp[row * d.gen_len..(row + 1) * d.gen_len];
+        if !proof::verify(b2, toks, lps, &p2[row], 1) {
+            any_rejected = true;
+            break;
+        }
+    }
+    assert!(any_rejected, "stale-checkpoint rollouts must fail verification");
+}

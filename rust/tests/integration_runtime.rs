@@ -1,0 +1,175 @@
+//! Integration: the Rust runtime loads every tiny-size artifact,
+//! executes it on the PJRT CPU client, and reproduces the numeric
+//! oracle that `python/compile/aot.py` recorded with in-process jax.
+//!
+//! Requires `make artifacts` (tiny size) to have run.
+
+use pulse::runtime::{artifacts_dir, ModelRuntime};
+
+fn runtime() -> ModelRuntime {
+    let dir = artifacts_dir();
+    assert!(
+        dir.join("tiny.meta.json").exists(),
+        "artifacts missing — run `make artifacts` first ({})",
+        dir.display()
+    );
+    ModelRuntime::load(&dir, "tiny", &[]).expect("loading tiny runtime")
+}
+
+fn oracle_tokens(rt: &ModelRuntime) -> Vec<i32> {
+    let d = &rt.manifest.dims;
+    (0..d.batch * d.seq).map(|i| (i % d.vocab) as i32).collect()
+}
+
+#[test]
+fn score_matches_python_oracle() {
+    let rt = runtime();
+    let flat = rt.load_init(&artifacts_dir()).unwrap();
+    let tokens = oracle_tokens(&rt);
+    let (lp, ent) = rt.score(&flat, &tokens).unwrap();
+    let oracle = rt.manifest.oracle.clone().expect("tiny manifest has an oracle");
+    let sum: f64 = lp.iter().map(|&x| x as f64).sum();
+    let rel = (sum - oracle.logprob_sum).abs() / oracle.logprob_sum.abs().max(1.0);
+    assert!(rel < 2e-3, "logprob_sum {} vs oracle {}", sum, oracle.logprob_sum);
+    for (i, &want) in oracle.logprob_first8.iter().enumerate() {
+        let got = lp[i] as f64;
+        assert!(
+            (got - want).abs() < 5e-3 * want.abs().max(1.0),
+            "lp[{}] {} vs {}",
+            i,
+            got,
+            want
+        );
+    }
+    let ent_mean: f64 = ent.iter().map(|&x| x as f64).sum::<f64>() / ent.len() as f64;
+    assert!(
+        (ent_mean - oracle.entropy_mean).abs() < 5e-3 * oracle.entropy_mean.max(1.0),
+        "entropy {} vs {}",
+        ent_mean,
+        oracle.entropy_mean
+    );
+}
+
+#[test]
+fn rollout_generates_and_is_greedy_deterministic() {
+    let rt = runtime();
+    let flat = rt.load_init(&artifacts_dir()).unwrap();
+    let d = rt.manifest.dims.clone();
+    let prompts: Vec<i32> =
+        (0..d.batch * d.prompt_len).map(|i| (i % d.vocab) as i32).collect();
+    let a = rt.rollout(&flat, &prompts, [1, 2], 0.0).unwrap();
+    let b = rt.rollout(&flat, &prompts, [9, 9], 0.0).unwrap();
+    assert_eq!(a.tokens, b.tokens, "greedy must ignore the PRNG key");
+    // prompt preserved
+    for row in 0..d.batch {
+        for p in 0..d.prompt_len {
+            assert_eq!(a.tokens[row * d.seq + p], prompts[row * d.prompt_len + p]);
+        }
+    }
+    // sampling differs across keys
+    let c = rt.rollout(&flat, &prompts, [1, 2], 1.0).unwrap();
+    let e = rt.rollout(&flat, &prompts, [9, 9], 1.0).unwrap();
+    assert_ne!(c.tokens, e.tokens, "sampling must use the key");
+    // behaviour logprobs consistent with score() (bf16 fusion tolerance)
+    let (lp, _) = rt.score(&flat, &c.tokens).unwrap();
+    for i in 0..lp.len() {
+        assert!(
+            (lp[i] - c.logprobs[i]).abs() < 2e-2,
+            "lp[{}] {} vs rollout {}",
+            i,
+            lp[i],
+            c.logprobs[i]
+        );
+    }
+}
+
+#[test]
+fn grad_zero_advantage_is_zero() {
+    let rt = runtime();
+    let flat = rt.load_init(&artifacts_dir()).unwrap();
+    let d = rt.manifest.dims.clone();
+    let tokens = oracle_tokens(&rt);
+    let (old_lp, _) = rt.score(&flat, &tokens).unwrap();
+    let adv = vec![0.0f32; d.batch];
+    let mask = vec![1.0f32; d.batch * d.gen_len];
+    let out = rt.grad(&flat, &tokens, &adv, &old_lp, &mask).unwrap();
+    assert!(out.loss.abs() < 1e-7);
+    let max = out.grads.iter().fold(0.0f32, |m, &g| m.max(g.abs()));
+    assert!(max < 1e-7, "max grad {}", max);
+}
+
+#[test]
+fn grad_is_dense_and_descends() {
+    let rt = runtime();
+    let mut flat = rt.load_init(&artifacts_dir()).unwrap();
+    let d = rt.manifest.dims.clone();
+    let prompts: Vec<i32> =
+        (0..d.batch * d.prompt_len).map(|i| (i % d.vocab) as i32).collect();
+    let ro = rt.rollout(&flat, &prompts, [3, 4], 1.0).unwrap();
+    // synthetic advantages: +1 for even rows, -1 for odd
+    let adv: Vec<f32> =
+        (0..d.batch).map(|b| if b % 2 == 0 { 1.0 } else { -1.0 }).collect();
+    let mask = vec![1.0f32; d.batch * d.gen_len];
+    let out = rt.grad(&flat, &ro.tokens, &adv, &ro.logprobs, &mask).unwrap();
+    assert!(out.grad_density > 0.98, "grad density {}", out.grad_density);
+    // take a large step along -grad: surrogate loss must decrease
+    let g2 = out.grads.clone();
+    for (p, g) in flat.iter_mut().zip(&g2) {
+        *p -= 1.0 * g;
+    }
+    let out2 = rt.grad(&flat, &ro.tokens, &adv, &ro.logprobs, &mask).unwrap();
+    assert!(out2.loss < out.loss, "loss {} -> {}", out.loss, out2.loss);
+}
+
+#[test]
+fn aot_gate_kernel_matches_native_gate() {
+    let rt = runtime();
+    let n = rt.manifest.n_params;
+    let mut rng = pulse::util::rng::Rng::new(5);
+    let theta: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.02).collect();
+    let s: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 1e-4).collect();
+    let mask = rt.gate(&theta, &s).unwrap();
+    let native = pulse::gate::gate_bf16(&theta, &s);
+    let from_kernel: Vec<u64> = mask
+        .iter()
+        .enumerate()
+        .filter(|(_, &m)| m != 0)
+        .map(|(i, _)| i as u64)
+        .collect();
+    assert_eq!(from_kernel, native, "AOT gate and native gate disagree");
+}
+
+#[test]
+fn aot_adam_kernel_matches_native_adamw() {
+    let rt = runtime();
+    let n = rt.manifest.n_params;
+    let mut rng = pulse::util::rng::Rng::new(6);
+    let p0: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.02).collect();
+    let g: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.1).collect();
+    let cfg = pulse::optim::AdamConfig {
+        clip_global_norm: 0.0,
+        warmup_steps: 0,
+        ..Default::default()
+    };
+    // native
+    let mut opt = pulse::optim::AdamW::new(n, cfg);
+    let mut p_native = p0.clone();
+    opt.step(&mut p_native, &g);
+    // AOT kernel (t = 1)
+    let bc1 = 1.0 - cfg.beta1;
+    let bc2 = 1.0 - cfg.beta2;
+    let (p_kernel, m_kernel, _v) = rt
+        .adam([cfg.lr, bc1, bc2], &p0, &vec![0.0; n], &vec![0.0; n], &g)
+        .unwrap();
+    for i in 0..n {
+        assert!(
+            (p_native[i] - p_kernel[i]).abs() <= 1e-10 + p_native[i].abs() * 1e-4,
+            "i={} native {} kernel {}",
+            i,
+            p_native[i],
+            p_kernel[i]
+        );
+    }
+    // FMA/fusion differences between XLA and the native loop: a few ULPs.
+    assert!((m_kernel[0] - opt.m[0]).abs() <= 1e-9 + opt.m[0].abs() * 1e-5);
+}

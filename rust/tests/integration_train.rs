@@ -1,0 +1,109 @@
+//! Coordinator integration: short end-to-end GRPO training runs through
+//! the AOT-compiled graphs, exercising all three trainer-sync methods.
+//! Requires `make artifacts` (tiny).
+
+use pulse::coordinator::{train, Method, TaskKind, TrainConfig};
+use pulse::optim::AdamConfig;
+use pulse::rl::grpo::GrpoConfig;
+use pulse::runtime::{artifacts_dir, ModelRuntime};
+
+fn rt() -> ModelRuntime {
+    ModelRuntime::load(&artifacts_dir(), "tiny", &[]).expect("run `make artifacts`")
+}
+
+#[test]
+fn single_trainer_sparsity_and_density() {
+    let rt = rt();
+    let cfg = TrainConfig {
+        steps: 8,
+        adam: AdamConfig { warmup_steps: 4, ..Default::default() },
+        grpo: GrpoConfig { group: 8, ..Default::default() },
+        sparsity_ks: vec![1, 4],
+        n_eval: 32,
+        ..Default::default()
+    };
+    let res = train(&rt, &cfg).unwrap();
+    assert_eq!(res.steps.len(), 8);
+    let mut active_steps = 0;
+    for s in &res.steps {
+        // dense gradients (paper §G.1) — on steps where the batch has
+        // any advantage signal (all-constant-reward groups give exactly
+        // zero grads, a real GRPO property)
+        if s.grad_density > 0.0 {
+            active_steps += 1;
+            assert!(s.grad_density > 0.95, "step {} density {}", s.step, s.grad_density);
+        }
+        // high per-step BF16 sparsity at RL learning rates (paper §3)
+        let s1 = s.sparsity.iter().find(|(k, _)| *k == 1).map(|(_, v)| *v).unwrap();
+        assert!(s1 > 0.95, "step {} sparsity {}", s.step, s1);
+    }
+    assert!(active_steps >= 2, "only {} steps had gradient signal", active_steps);
+    // warmup dip: sparsity at full LR ≤ sparsity at warmup start (Fig. 16)
+    let first = res.steps[0].sparsity[0].1;
+    let later = res.steps[5].sparsity[0].1;
+    assert!(first >= later - 1e-4, "warmup {} later {}", first, later);
+    assert!(res.final_pass_at_1 >= 0.0);
+}
+
+#[test]
+fn rollout_staleness_keeps_sparsity_high() {
+    let rt = rt();
+    for s_interval in [1usize, 4] {
+        let cfg = TrainConfig {
+            steps: 6,
+            rollout_interval: s_interval,
+            n_eval: 16,
+            ..Default::default()
+        };
+        let res = train(&rt, &cfg).unwrap();
+        let mean_s1: f64 = res
+            .steps
+            .iter()
+            .filter_map(|s| s.sparsity.iter().find(|(k, _)| *k == 1).map(|(_, v)| *v))
+            .sum::<f64>()
+            / res.steps.len() as f64;
+        assert!(mean_s1 > 0.95, "S={} sparsity {}", s_interval, mean_s1);
+    }
+}
+
+#[test]
+fn multi_trainer_methods_run_and_account_comm() {
+    let rt = rt();
+    for method in [Method::Ddp, Method::DiLoCo, Method::PulseLoCo] {
+        let cfg = TrainConfig {
+            method,
+            workers: 2,
+            local_steps: 2,
+            steps: 4, // 2 rounds
+            n_eval: 16,
+            adam: AdamConfig::post_training(),
+            ..Default::default()
+        };
+        let res = train(&rt, &cfg).unwrap();
+        assert_eq!(res.rounds.len(), 2, "{}", method.name());
+        for r in &res.rounds {
+            assert_eq!(r.comm.len(), 2);
+            match method {
+                Method::PulseLoCo => {
+                    assert!(
+                        r.comm[0].comm_sparsity > 0.5,
+                        "pulseloco sparsity {}",
+                        r.comm[0].comm_sparsity
+                    );
+                    assert!(r.comm[0].raw_payload_bytes < r.comm[0].dense_bytes);
+                }
+                Method::DiLoCo => {
+                    assert_eq!(r.comm[0].comm_sparsity, 0.0);
+                }
+                Method::Ddp => {
+                    // H dense payloads per round
+                    assert_eq!(
+                        r.comm[0].dense_bytes,
+                        (rt.manifest.n_params * 4 * 2) as u64
+                    );
+                }
+                _ => {}
+            }
+        }
+    }
+}
