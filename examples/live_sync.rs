@@ -9,6 +9,7 @@ use pulse::bf16;
 use pulse::net::relay::Relay;
 use pulse::net::tcp::{self, kind, Frame};
 use pulse::sparse::container::{self, EncodeOpts, Patch, Values};
+use pulse::sparse::hashtree::{HashTree, DEFAULT_CHUNK_ELEMS};
 use pulse::sparse::{self, synthetic_layout};
 use pulse::util::rng::Rng;
 
@@ -43,6 +44,9 @@ fn main() -> anyhow::Result<()> {
         assert_eq!(first.kind, kind::ANCHOR);
         let raw = zstd::bulk::decompress(&first.payload, 500_000 * 2)?;
         let mut weights = pulse::util::bytes_to_u16(&raw);
+        // one tree build at join time; every patch after that verifies
+        // via fused apply+rehash over only the touched chunks (O(nnz))
+        let mut tree = HashTree::build(&weights, DEFAULT_CHUNK_ELEMS);
         let mut patches = 0usize;
         let mut bytes = first.payload.len() as u64;
         loop {
@@ -55,9 +59,9 @@ fn main() -> anyhow::Result<()> {
                         Values::Bf16(v) => v.clone(),
                         _ => anyhow::bail!("wrong value kind"),
                     };
-                    sparse::apply_u16(&mut weights, &patch.indices, &vals);
-                    let got = pulse::util::sha256_hex(pulse::util::u16_as_bytes(&weights));
-                    assert_eq!(got, patch.result_hash, "hash mismatch after patch");
+                    assert_eq!(patch.chunk_elems as usize, tree.chunk_elems());
+                    tree.apply_and_rehash(&mut weights, &patch.indices, &vals);
+                    assert_eq!(tree.root_hex(), patch.result_hash, "root mismatch after patch");
                     patches += 1;
                 }
                 kind::CLOSE => return Ok((patches, bytes)),
@@ -70,7 +74,9 @@ fn main() -> anyhow::Result<()> {
         std::thread::sleep(std::time::Duration::from_millis(10));
     }
 
-    // trainer: 10 steps of Adam-scale drift → sparse patches
+    // trainer: 10 steps of Adam-scale drift → sparse patches, with the
+    // hash-tree root updated incrementally (only touched chunks rehash)
+    let mut tree = HashTree::build(&prev, DEFAULT_CHUNK_ELEMS);
     let mut total_patch_bytes = 0u64;
     for step in 1..=10u64 {
         for x in master.iter_mut() {
@@ -78,15 +84,16 @@ fn main() -> anyhow::Result<()> {
         }
         let mut view = Vec::new();
         bf16::cast_slice_par(&master, &mut view);
-        let indices = sparse::diff_bf16(&prev, &view);
-        let values = sparse::gather_u16(&view, &indices);
+        let (indices, values) = sparse::diff_gather_bf16(&prev, &view);
+        tree.update(&view, &indices);
         let patch = Patch {
             step,
             base_step: step - 1,
             total_params: n as u64,
             indices,
             values: Values::Bf16(values),
-            result_hash: pulse::util::sha256_hex(pulse::util::u16_as_bytes(&view)),
+            result_hash: tree.root_hex(),
+            chunk_elems: tree.chunk_elems() as u64,
         };
         let obj = container::encode(&patch, &layout, EncodeOpts::default())?;
         total_patch_bytes += obj.len() as u64;

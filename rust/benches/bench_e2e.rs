@@ -37,8 +37,7 @@ fn main() {
         // PULSESync encode of the new view
         let mut view = Vec::new();
         pulse::bf16::cast_slice_par(&master, &mut view);
-        let idx = sparse::diff_bf16(&prev, &view);
-        let vals = sparse::gather_u16(&view, &idx);
+        let (idx, vals) = sparse::diff_gather_bf16(&prev, &view);
         let patch = container::Patch {
             step: 1,
             base_step: 0,
@@ -46,6 +45,7 @@ fn main() {
             indices: idx,
             values: container::Values::Bf16(vals),
             result_hash: String::new(),
+            chunk_elems: 0,
         };
         let obj =
             container::encode(&patch, &rt.manifest.layout, Default::default()).unwrap();

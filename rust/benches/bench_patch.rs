@@ -1,5 +1,11 @@
 //! PULSESync patch pipeline micro-bench: diff, gather, encode, decode,
-//! apply — the trainer/worker hot path (§Perf L3).
+//! apply, verify — the trainer/worker hot path (§Perf L3).
+//!
+//! The `diff_scalar` / `sha256` rows are the pre-hash-tree baselines;
+//! `diff_word`, `hashtree_build` and `hashtree_incremental` are the
+//! O(nnz)-hot-path replacements, so the speedup is recorded side by
+//! side in `bench_patch.csv`.
+use pulse::sparse::hashtree::{HashTree, DEFAULT_CHUNK_ELEMS};
 use pulse::sparse::{self, container, PatchFormat};
 use pulse::util::bench::Bench;
 use pulse::util::rng::Rng;
@@ -18,24 +24,41 @@ fn main() {
     }
     let mut b = Bench::new();
     let bytes = (n * 2) as u64;
-    b.run_bytes("diff_bf16/4M (1% changed)", bytes, || {
+    // baseline: the old element-at-a-time diff loop
+    b.run_bytes("diff_scalar/4M (1% changed)", bytes, || {
+        let parts = pulse::util::pool::par_ranges(n, 1 << 16, |r| {
+            let mut v = Vec::new();
+            for i in r {
+                if old[i] != new[i] {
+                    v.push(i as u64);
+                }
+            }
+            v
+        });
+        std::hint::black_box(parts);
+    });
+    b.run_bytes("diff_word/4M (1% changed)", bytes, || {
         std::hint::black_box(sparse::diff_bf16(&old, &new));
     });
-    let idx = sparse::diff_bf16(&old, &new);
-    let vals = sparse::gather_u16(&new, &idx);
+    b.run_bytes("diff_gather_fused/4M (1% changed)", bytes, || {
+        std::hint::black_box(sparse::diff_gather_bf16(&old, &new));
+    });
+    let (idx, vals) = sparse::diff_gather_bf16(&old, &new);
     println!("nnz = {}", idx.len());
     for fmt in [PatchFormat::CooDownscaled, PatchFormat::FlatVarint] {
         b.run(&format!("encode_indices/{}", fmt.name()), || {
             std::hint::black_box(fmt.encode_indices(&idx, &layout));
         });
     }
+    let tree = HashTree::build(&new, DEFAULT_CHUNK_ELEMS);
     let patch = container::Patch {
         step: 1,
         base_step: 0,
         total_params: n as u64,
         indices: idx.clone(),
         values: container::Values::Bf16(vals.clone()),
-        result_hash: pulse::util::sha256_hex(pulse::util::u16_as_bytes(&new)),
+        result_hash: tree.root_hex(),
+        chunk_elems: tree.chunk_elems() as u64,
     };
     b.run_bytes("container_encode/zstd1", bytes, || {
         std::hint::black_box(container::encode(&patch, &layout, Default::default()).unwrap());
@@ -50,8 +73,25 @@ fn main() {
         sparse::apply_u16(&mut target, &idx, &vals);
         std::hint::black_box(&target);
     });
+    // verify cost: old full-buffer scalar SHA-256 ...
     b.run_bytes("sha256/8MB ckpt", bytes, || {
         std::hint::black_box(pulse::util::sha256_hex(pulse::util::u16_as_bytes(&old)));
+    });
+    // ... vs chunked hash tree: parallel from-scratch build (slow path /
+    // anchor verify) and incremental per-patch update (steady state)
+    b.run_bytes("hashtree_build/4M", bytes, || {
+        std::hint::black_box(HashTree::build(&old, DEFAULT_CHUNK_ELEMS));
+    });
+    let mut inc = HashTree::build(&old, DEFAULT_CHUNK_ELEMS);
+    b.run_bytes("hashtree_incremental/1% changed", bytes, || {
+        inc.update(&new, &idx);
+        std::hint::black_box(inc.root());
+    });
+    let mut fused_w = old.clone();
+    let mut fused = HashTree::build(&fused_w, DEFAULT_CHUNK_ELEMS);
+    b.run("apply_and_rehash/40k values", || {
+        fused.apply_and_rehash(&mut fused_w, &idx, &vals);
+        std::hint::black_box(fused.root());
     });
     b.write_csv(&pulse::coordinator::metrics::results_dir().join("bench_patch.csv")).unwrap();
 }

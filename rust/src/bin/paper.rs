@@ -149,9 +149,8 @@ fn fig1(args: &Args) -> Result<()> {
     let n_small = rt.manifest.n_params as f64;
     let mut patch_frac = Vec::new();
     for w in res.captures.windows(2) {
-        let idx = sparse::diff_bf16(&w[0].1, &w[1].1);
         // container bytes ≈ 3 bytes/index + 2 bytes/value after codec
-        let vals = sparse::gather_u16(&w[1].1, &idx);
+        let (idx, vals) = sparse::diff_gather_bf16(&w[0].1, &w[1].1);
         let patch = pulse::sparse::container::Patch {
             step: 0,
             base_step: 0,
@@ -159,6 +158,7 @@ fn fig1(args: &Args) -> Result<()> {
             indices: idx,
             values: pulse::sparse::container::Values::Bf16(vals),
             result_hash: String::new(),
+            chunk_elems: 0,
         };
         let obj = pulse::sparse::container::encode(
             &patch,
@@ -927,11 +927,10 @@ fn measure_codecs(args: &Args) -> Result<CodecStats> {
     let mut payloads = Vec::new();
     let mut dense_bytes = 0u64;
     for w in res.captures.windows(2) {
-        let idx = sparse::diff_bf16(&w[0].1, &w[1].1);
+        let (idx, vals) = sparse::diff_gather_bf16(&w[0].1, &w[1].1);
         if idx.is_empty() {
             continue;
         }
-        let vals = sparse::gather_u16(&w[1].1, &idx);
         let mut raw = PatchFormat::CooDownscaled.encode_indices(&idx, &rt.manifest.layout);
         raw.extend_from_slice(pulse::util::u16_as_bytes(&vals));
         dense_bytes += (w[1].1.len() * 2) as u64;
@@ -1127,8 +1126,7 @@ fn table10(args: &Args) -> Result<()> {
         let mut comp_total = 0u64;
         let t = Stopwatch::start();
         for w in res.captures.windows(2) {
-            let idx = sparse::diff_bf16(&w[0].1, &w[1].1);
-            let vals = sparse::gather_u16(&w[1].1, &idx);
+            let (idx, vals) = sparse::diff_gather_bf16(&w[0].1, &w[1].1);
             let mut raw = fmt.encode_indices(&idx, &rt.manifest.layout);
             raw.extend_from_slice(pulse::util::u16_as_bytes(&vals));
             raw_total += raw.len() as u64;
@@ -1173,8 +1171,7 @@ fn table11(args: &Args) -> Result<()> {
         let mut raw_total = 0u64;
         let mut comp_total = 0u64;
         for w in res.captures.windows(2) {
-            let idx = sparse::diff_bf16(&w[0].1, &w[1].1);
-            let vals = sparse::gather_u16(&w[1].1, &idx);
+            let (idx, vals) = sparse::diff_gather_bf16(&w[0].1, &w[1].1);
             let mut raw = fmt.encode_indices(&idx, &rt.manifest.layout);
             raw.extend_from_slice(pulse::util::u16_as_bytes(&vals));
             raw_total += raw.len() as u64;
@@ -1210,9 +1207,8 @@ fn table13(args: &Args) -> Result<()> {
         let mut dense = 0u64;
         let mut comp = 0u64;
         for w in res.captures.windows(2) {
-            let idx = sparse::diff_bf16(&w[0].1, &w[1].1);
+            let (idx, vals) = sparse::diff_gather_bf16(&w[0].1, &w[1].1);
             sp.push(sparse::sparsity(idx.len(), w[1].1.len()));
-            let vals = sparse::gather_u16(&w[1].1, &idx);
             let mut raw =
                 PatchFormat::CooDownscaled.encode_indices(&idx, &rt.manifest.layout);
             raw.extend_from_slice(pulse::util::u16_as_bytes(&vals));
@@ -1245,8 +1241,17 @@ fn table14(args: &Args) -> Result<()> {
     const FULL: f64 = 14e9;
     const DELTA: f64 = 108e6; // paper's measured patch size at 7B
     let dl = |bytes: f64| link.transfer_time(bytes as u64);
-    // processing throughputs measured on this CPU (hash ≈ sha256 speed)
+    // processing throughputs measured on this CPU: verification is the
+    // chunked hash tree (parallel build; incremental per patch), with
+    // the serial full-buffer SHA-256 kept for comparison
     let sha_mbps = measure_sha_mbps();
+    let tree_mbps = measure_tree_mbps();
+    eprintln!(
+        "verify throughput: scalar sha256 {:.0} MB/s → hash-tree {:.0} MB/s ({:.1}x)",
+        sha_mbps,
+        tree_mbps,
+        tree_mbps / sha_mbps.max(1e-9)
+    );
     let decomp = |bytes: f64| bytes / (z1.dec_mbps * 1e6);
     let apply_mbps = 2000.0; // memcpy-bound; see bench_patch
     let rows_def: [(&str, f64, f64, f64); 3] = [
@@ -1263,7 +1268,7 @@ fn table14(args: &Args) -> Result<()> {
         let download = dl(full_b) + dl(delta_b);
         let dec = decomp(delta_b);
         let apply = delta_b / (apply_mbps * 1e6);
-        let hash = (FULL * n_patches.max(1.0)) / (sha_mbps * 1e6);
+        let hash = (FULL * n_patches.max(1.0)) / (tree_mbps * 1e6);
         let total = download + dec + apply + hash;
         csv.row(&[
             name.into(),
@@ -1298,4 +1303,17 @@ fn measure_sha_mbps() -> f64 {
     h.update(&data);
     std::hint::black_box(h.finalize());
     (data.len() as f64 / 1e6) / t.secs()
+}
+
+/// Verify throughput of the chunked hash tree: a parallel build over a
+/// 64 MB buffer. This bounds the steady-state incremental update from
+/// below — at uniform 1% density every chunk is touched, so the
+/// incremental rehash degenerates to a (parallel) rebuild; clustered
+/// updates only skip more.
+fn measure_tree_mbps() -> f64 {
+    use pulse::sparse::hashtree::{HashTree, DEFAULT_CHUNK_ELEMS};
+    let data = vec![7u16; 32 << 20];
+    let t = Stopwatch::start();
+    std::hint::black_box(HashTree::build(&data, DEFAULT_CHUNK_ELEMS));
+    ((data.len() * 2) as f64 / 1e6) / t.secs()
 }

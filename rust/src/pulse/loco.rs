@@ -69,7 +69,10 @@ pub fn payload_bytes(
         total_params,
         indices: contrib.indices.clone(),
         values: Values::F32(contrib.values.clone()),
+        // pseudo-gradients are not checkpoints: no result hash, so the
+        // container stays v1-framed (chunk_elems = 0) on the wire
         result_hash: String::new(),
+        chunk_elems: 0,
     };
     let layout = crate::sparse::synthetic_layout(total_params as usize, 1 << 16);
     let obj = container::encode(

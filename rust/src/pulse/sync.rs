@@ -8,12 +8,33 @@
 //! anchor + patch-chain on cold start, missed steps, or hash mismatch
 //! (slow path, Alg. 5). Reconstruction is a memory overwrite with no
 //! floating-point arithmetic, so chained patches stay bit-identical
-//! (Prop. H.1) — verified here with per-patch SHA-256 of the resulting
-//! weights (§J.4).
+//! (Prop. H.1).
+//!
+//! # Verification cost model (§J.4, made O(nnz))
+//!
+//! Integrity is checked against a chunked hash tree
+//! ([`crate::sparse::hashtree`]) instead of a scalar SHA-256 of the
+//! whole buffer. Both sides keep the tree alongside their weights, so
+//! per step:
+//!
+//! * the publisher's diff+gather is one fused word-skipping scan and its
+//!   root update rehashes only the chunks the patch touches —
+//!   O(nnz · chunk_elems) hashing instead of O(total_params);
+//! * the consumer's [`crate::sparse::hashtree::HashTree::apply_and_rehash`]
+//!   fuses the patch apply with the chunk rehash in one pass and
+//!   compares the resulting root to the one in the patch's v2 container
+//!   header (chunk size + root; see [`crate::sparse::container`]).
+//!
+//! Only the slow path still hashes the full buffer (building the tree
+//! from a downloaded anchor — a parallel chunked build). Legacy v1
+//! containers and plain-hex anchor markers verify via the scalar hash,
+//! so stores written before the hash tree still synchronize.
 
 use crate::codec::Codec;
 use crate::sparse::container::{self, EncodeOpts, Patch, Values};
+use crate::sparse::hashtree::{HashTree, DEFAULT_CHUNK_ELEMS};
 use crate::sparse::{self, TensorShape};
+use crate::storage::retention::{self, Inventory};
 use crate::storage::ObjectStore;
 use crate::util::{sha256_hex, u16_as_bytes};
 use anyhow::{bail, Context, Result};
@@ -30,6 +51,26 @@ fn anchor_key(step: u64) -> String {
 }
 fn anchor_ready_key(step: u64) -> String {
     format!("anchor_ready_{}", step)
+}
+
+/// Anchor ready-marker payload: `v2:<chunk_elems>:<root_hex>` for
+/// hash-tree verification. Legacy markers are the bare scalar SHA-256
+/// hex of the raw BF16 bytes and still verify.
+fn anchor_marker(tree: &HashTree) -> String {
+    format!("v2:{}:{}", tree.chunk_elems(), tree.root_hex())
+}
+
+fn parse_anchor_marker(s: &str) -> Option<(usize, &str)> {
+    let rest = s.strip_prefix("v2:")?;
+    let (chunk, root) = rest.split_once(':')?;
+    let chunk: usize = chunk.parse().ok()?;
+    // untrusted geometry: same wire minimum as the container header, so
+    // a corrupted marker fails verification instead of exploding the
+    // digest allocation
+    if chunk < crate::sparse::hashtree::MIN_WIRE_CHUNK_ELEMS {
+        return None;
+    }
+    Some((chunk, root))
 }
 
 /// Publisher-side statistics for one published step.
@@ -55,6 +96,8 @@ pub struct Publisher {
     /// Previous published BF16 view W_{t-1}.
     prev: Vec<u16>,
     prev_step: u64,
+    /// Chunked hash tree over `prev`, updated incrementally per publish.
+    tree: HashTree,
     /// Test hook: force the next delta upload to fail (§J.5 recovery).
     pub fail_next_delta: bool,
 }
@@ -68,6 +111,7 @@ impl Publisher {
         initial: Vec<u16>,
         anchor_interval: u64,
     ) -> Result<Publisher> {
+        let tree = HashTree::build(&initial, DEFAULT_CHUNK_ELEMS);
         let mut p = Publisher {
             store,
             prefix: prefix.trim_end_matches('/').to_string(),
@@ -76,6 +120,7 @@ impl Publisher {
             anchor_interval: anchor_interval.max(1),
             prev: initial,
             prev_step: 0,
+            tree,
             fail_next_delta: false,
         };
         p.upload_anchor(0)?;
@@ -104,9 +149,9 @@ impl Publisher {
         obj.extend_from_slice(&(self.prev.len() as u64).to_le_bytes());
         obj.extend_from_slice(&comp);
         self.store.put(&self.key(anchor_key(step)), &obj)?;
-        // anchor ready marker carries the weight hash
+        // anchor ready marker carries the hash-tree geometry + root
         self.store
-            .put(&self.key(anchor_ready_key(step)), sha256_hex(raw).as_bytes())?;
+            .put(&self.key(anchor_ready_key(step)), anchor_marker(&self.tree).as_bytes())?;
         Ok(obj.len() as u64)
     }
 
@@ -124,9 +169,11 @@ impl Publisher {
             bail!("publish steps must be consecutive ({} after {})", step, self.prev_step);
         }
         let t = crate::util::Stopwatch::start();
-        let indices = sparse::diff_bf16(&self.prev, new);
-        let values = sparse::gather_u16(new, &indices);
-        let result_hash = sha256_hex(u16_as_bytes(new));
+        // fused diff+gather, then rehash only the touched chunks: the
+        // whole encode front half is O(nnz), not O(total_params)
+        let (indices, values) = sparse::diff_gather_bf16(&self.prev, new);
+        self.tree.update(new, &indices);
+        let result_hash = self.tree.root_hex();
         let patch = Patch {
             step,
             base_step: self.prev_step,
@@ -134,8 +181,18 @@ impl Publisher {
             indices,
             values: Values::Bf16(values),
             result_hash,
+            chunk_elems: self.tree.chunk_elems() as u64,
         };
-        let obj = container::encode(&patch, &self.layout, self.opts)?;
+        let obj = match container::encode(&patch, &self.layout, self.opts) {
+            Ok(obj) => obj,
+            Err(e) => {
+                // the tree already reflects `new` but `prev` does not;
+                // rebuild from `prev` so an abandoned publish leaves the
+                // publisher consistent (error path only, O(total))
+                self.tree = HashTree::build(&self.prev, self.tree.chunk_elems());
+                return Err(e);
+            }
+        };
         let mut stats = PublishStats {
             step,
             nnz: patch.indices.len(),
@@ -174,8 +231,18 @@ pub struct SyncStats {
     pub from_step: u64,
     pub to_step: u64,
     pub path: SyncPath,
+    /// Total bytes transferred during this call, including any fast-
+    /// path attempt that was abandoned for the slow path.
     pub bytes_downloaded: u64,
+    /// Sparse delta patches applied on the chain that produced the
+    /// final weights (anchor restarts are counted in
+    /// `anchors_restored`, not here; an abandoned fast-path attempt
+    /// counts toward neither).
     pub patches_applied: usize,
+    /// Full anchors downloaded and restored from on that chain: the
+    /// slow-path base anchor plus any §J.5 anchor that replaced a
+    /// failed delta upload.
+    pub anchors_restored: usize,
     pub verified: bool,
 }
 
@@ -196,6 +263,20 @@ pub struct Consumer {
     /// Local BF16 weights (None until first slow-path sync).
     pub weights: Option<Vec<u16>>,
     pub step: u64,
+    /// Hash tree mirroring `weights`, reused across synchronize() calls
+    /// so the fast path verifies in O(nnz · chunk). None until built
+    /// from an anchor, or after a legacy v1 patch made it stale.
+    tree: Option<HashTree>,
+}
+
+/// Latest step with a delta-ready (or anchor-ready) marker in `inv`.
+fn latest_of(inv: &Inventory) -> Option<u64> {
+    inv.delta_steps
+        .last()
+        .copied()
+        .into_iter()
+        .chain(inv.anchor_steps.last().copied())
+        .max()
 }
 
 impl Consumer {
@@ -206,6 +287,7 @@ impl Consumer {
             layout,
             weights: None,
             step: 0,
+            tree: None,
         }
     }
 
@@ -215,14 +297,7 @@ impl Consumer {
 
     /// Latest step with a delta-ready (or anchor-ready) marker.
     pub fn latest_ready(&self) -> Result<Option<u64>> {
-        let inv = crate::storage::retention::scan(&self.store, &self.prefix)?;
-        Ok(inv
-            .delta_steps
-            .last()
-            .copied()
-            .into_iter()
-            .chain(inv.anchor_steps.last().copied())
-            .max())
+        Ok(latest_of(&retention::scan(&self.store, &self.prefix)?))
     }
 
     /// Synchronize to the newest published checkpoint. Implements the
@@ -230,7 +305,10 @@ impl Consumer {
     /// path (anchor + chain); falls back to the slow path on any
     /// verification failure (§J.5 self-healing).
     pub fn synchronize(&mut self) -> Result<SyncStats> {
-        let latest = match self.latest_ready()? {
+        // one inventory scan serves both the head lookup and the
+        // slow-path anchor choice
+        let inv = retention::scan(&self.store, &self.prefix)?;
+        let latest = match latest_of(&inv) {
             Some(s) => s,
             None => bail!("no checkpoints published under {}", self.prefix),
         };
@@ -242,9 +320,11 @@ impl Consumer {
         }
         if let Some(w) = self.weights.clone() {
             // try fast/chain path: apply deltas step+1 ..= latest
-            match self.apply_chain(w, self.step, latest, &mut stats) {
-                Ok(weights) => {
+            let tree = self.tree.take();
+            match self.apply_chain(w, tree, self.step, latest, &mut stats) {
+                Ok((weights, tree)) => {
                     self.weights = Some(weights);
+                    self.tree = tree;
                     self.step = latest;
                     stats.path = if latest == stats.from_step + 1 {
                         SyncPath::Fast
@@ -255,12 +335,16 @@ impl Consumer {
                     return Ok(stats);
                 }
                 Err(_) => {
-                    // fall through to slow path
+                    // fall through to slow path; drop the abandoned
+                    // attempt's apply counters (the slow path rebuilds
+                    // from an anchor) but keep bytes_downloaded — those
+                    // bytes really were transferred
+                    stats.patches_applied = 0;
+                    stats.anchors_restored = 0;
                 }
             }
         }
         // slow path: nearest anchor ≤ latest, then chain
-        let inv = crate::storage::retention::scan(&self.store, &self.prefix)?;
         let anchor = inv
             .anchor_steps
             .iter()
@@ -268,17 +352,22 @@ impl Consumer {
             .next_back()
             .copied()
             .ok_or_else(|| anyhow::anyhow!("no anchor available for slow path"))?;
-        let (w, bytes) = self.download_anchor(anchor)?;
+        let (w, tree, bytes) = self.download_anchor(anchor)?;
         stats.bytes_downloaded += bytes;
-        let weights = self.apply_chain(w, anchor, latest, &mut stats)?;
+        stats.anchors_restored += 1;
+        let (weights, tree) = self.apply_chain(w, tree, anchor, latest, &mut stats)?;
         self.weights = Some(weights);
+        self.tree = tree;
         self.step = latest;
         stats.path = SyncPath::Slow;
         stats.verified = true;
         Ok(stats)
     }
 
-    fn download_anchor(&self, step: u64) -> Result<(Vec<u16>, u64)> {
+    /// Download + verify an anchor, returning its hash tree when the
+    /// ready marker carries v2 geometry (legacy scalar markers verify
+    /// via the full-buffer hash and return no tree).
+    fn download_anchor(&self, step: u64) -> Result<(Vec<u16>, Option<HashTree>, u64)> {
         let obj = self
             .store
             .get(&self.key(anchor_key(step)))
@@ -296,34 +385,46 @@ impl Consumer {
         if w.len() != n {
             bail!("anchor length mismatch");
         }
-        // verify against the hash in the ready marker
+        // verify against the ready marker (and keep the tree it implies)
         let expect = String::from_utf8(self.store.get(&self.key(anchor_ready_key(step)))?)
             .unwrap_or_default();
-        let got = sha256_hex(u16_as_bytes(&w));
-        if !expect.is_empty() && expect != got {
-            bail!("anchor hash mismatch at step {}", step);
-        }
-        Ok((w, obj.len() as u64))
+        let tree = if let Some((chunk_elems, root)) = parse_anchor_marker(&expect) {
+            let t = HashTree::build(&w, chunk_elems);
+            if t.root_hex() != root {
+                bail!("anchor hash mismatch at step {}", step);
+            }
+            Some(t)
+        } else {
+            if !expect.is_empty() && expect != sha256_hex(u16_as_bytes(&w)) {
+                bail!("anchor hash mismatch at step {}", step);
+            }
+            None
+        };
+        Ok((w, tree, obj.len() as u64))
     }
 
     /// Apply deltas `(from, to]` onto `w`, verifying each patch's
-    /// embedded result hash (Alg. 5 lines 25–29). Steps whose delta is
+    /// embedded hash-tree root (Alg. 5 lines 25–29) with a fused
+    /// apply+rehash over only the touched chunks. Steps whose delta is
     /// missing but which have their own anchor are restarted from that
-    /// anchor (delta-upload-failure recovery).
+    /// anchor (delta-upload-failure recovery). Returns the weights and
+    /// the tree kept current with them.
     fn apply_chain(
         &self,
         mut w: Vec<u16>,
+        mut tree: Option<HashTree>,
         from: u64,
         to: u64,
         stats: &mut SyncStats,
-    ) -> Result<Vec<u16>> {
+    ) -> Result<(Vec<u16>, Option<HashTree>)> {
         for t in from + 1..=to {
             if !self.store.exists(&self.key(delta_ready_key(t))) {
                 // §J.5: a failed delta upload was replaced by an anchor.
-                let (aw, bytes) = self.download_anchor(t)?;
+                let (aw, atree, bytes) = self.download_anchor(t)?;
                 w = aw;
+                tree = atree;
                 stats.bytes_downloaded += bytes;
-                stats.patches_applied += 1;
+                stats.anchors_restored += 1;
                 continue;
             }
             let obj = self.store.get(&self.key(delta_key(t)))?;
@@ -336,14 +437,31 @@ impl Consumer {
                 Values::Bf16(v) => v,
                 _ => bail!("weight patch carries non-bf16 values"),
             };
-            sparse::apply_u16(&mut w, &patch.indices, values);
-            let got = sha256_hex(u16_as_bytes(&w));
-            if got != patch.result_hash {
-                bail!("hash mismatch after applying patch {}", t);
+            if patch.chunk_elems > 0 {
+                // v2: fused apply + chunk rehash, O(nnz · chunk) verify.
+                // Rebuild the tree only when absent or its geometry
+                // disagrees with the patch header.
+                let ce = patch.chunk_elems as usize;
+                let mut ht = match tree.take() {
+                    Some(ht) if ht.chunk_elems() == ce && ht.total_elems() == w.len() => ht,
+                    _ => HashTree::build(&w, ce),
+                };
+                ht.apply_and_rehash(&mut w, &patch.indices, values);
+                if ht.root_hex() != patch.result_hash {
+                    bail!("hash mismatch after applying patch {}", t);
+                }
+                tree = Some(ht);
+            } else {
+                // legacy v1: scalar full-buffer hash
+                sparse::apply_u16(&mut w, &patch.indices, values);
+                if sha256_hex(u16_as_bytes(&w)) != patch.result_hash {
+                    bail!("hash mismatch after applying patch {}", t);
+                }
+                tree = None;
             }
             stats.patches_applied += 1;
         }
-        Ok(w)
+        Ok((w, tree))
     }
 }
 
@@ -461,6 +579,99 @@ mod tests {
         let cs = c.synchronize().unwrap();
         assert_eq!(c.weights.as_ref().unwrap(), &w);
         assert_eq!(cs.to_step, 3);
+    }
+
+    #[test]
+    fn stats_split_patches_from_anchor_restarts() {
+        let (mut p, mut c, mut w, mut rng) = setup(5_000, 100);
+        let s0 = c.synchronize().unwrap();
+        // cold start restores exactly one anchor, applies no patches
+        assert_eq!(s0.anchors_restored, 1);
+        assert_eq!(s0.patches_applied, 0);
+        perturb(&mut rng, &mut w, 50);
+        p.publish(1, &w).unwrap();
+        perturb(&mut rng, &mut w, 50);
+        p.fail_next_delta = true;
+        p.publish(2, &w).unwrap(); // anchor instead of delta (§J.5)
+        perturb(&mut rng, &mut w, 50);
+        p.publish(3, &w).unwrap();
+        let cs = c.synchronize().unwrap();
+        assert_eq!(c.weights.as_ref().unwrap(), &w);
+        assert_eq!(cs.patches_applied, 2, "steps 1 and 3 are deltas");
+        assert_eq!(cs.anchors_restored, 1, "step 2 is an anchor restart");
+    }
+
+    #[test]
+    fn fast_path_verifies_with_hash_tree() {
+        // every delta published by the current Publisher carries v2
+        // hash-tree geometry, and the consumer keeps a tree so the fast
+        // path never rebuilds from scratch
+        let (mut p, mut c, mut w, mut rng) = setup(8_000, 50);
+        c.synchronize().unwrap();
+        assert!(c.tree.is_some(), "slow path must leave a tree behind");
+        for step in 1..=3u64 {
+            perturb(&mut rng, &mut w, 80);
+            p.publish(step, &w).unwrap();
+            let obj = p.store.get(&format!("sync/{}", delta_key(step))).unwrap();
+            let patch = container::decode(&obj, &c.layout).unwrap();
+            assert_eq!(patch.chunk_elems, DEFAULT_CHUNK_ELEMS as u64);
+            assert_eq!(patch.result_hash.len(), 64);
+            let cs = c.synchronize().unwrap();
+            assert_eq!(cs.path, SyncPath::Fast);
+            assert!(c.tree.is_some());
+            assert_eq!(
+                c.tree.as_ref().unwrap().root_hex(),
+                patch.result_hash,
+                "consumer tree tracks the published root"
+            );
+            assert_eq!(c.weights.as_ref().unwrap(), &w);
+        }
+    }
+
+    #[test]
+    fn legacy_v1_objects_still_sync() {
+        // a store written by the pre-hash-tree publisher: scalar-hash
+        // delta containers (chunk_elems = 0) and bare-hex anchor markers
+        let store = ObjectStore::temp("pulsesync_v1").unwrap();
+        let n = 4_000usize;
+        let layout = synthetic_layout(n, 64);
+        let mut rng = Rng::new(3);
+        let w0: Vec<u16> = (0..n).map(|_| rng.next_u32() as u16).collect();
+        let raw = u16_as_bytes(&w0);
+        let comp = Codec::Zstd1.compress(raw).unwrap();
+        let mut obj = Vec::new();
+        obj.extend_from_slice(b"PLSA");
+        obj.extend_from_slice(&0u64.to_le_bytes());
+        obj.extend_from_slice(&(n as u64).to_le_bytes());
+        obj.extend_from_slice(&comp);
+        store.put(&format!("sync/{}", anchor_key(0)), &obj).unwrap();
+        store
+            .put(&format!("sync/{}", anchor_ready_key(0)), sha256_hex(raw).as_bytes())
+            .unwrap();
+        let mut w1 = w0.clone();
+        perturb(&mut rng, &mut w1, 40);
+        let idx = sparse::diff_bf16(&w0, &w1);
+        let vals = sparse::gather_u16(&w1, &idx);
+        let patch = Patch {
+            step: 1,
+            base_step: 0,
+            total_params: n as u64,
+            indices: idx,
+            values: Values::Bf16(vals),
+            result_hash: sha256_hex(u16_as_bytes(&w1)),
+            chunk_elems: 0, // v1 container
+        };
+        let dobj = container::encode(&patch, &layout, EncodeOpts::default()).unwrap();
+        store.put(&format!("sync/{}", delta_key(1)), &dobj).unwrap();
+        store
+            .put(&format!("sync/{}", delta_ready_key(1)), patch.result_hash.as_bytes())
+            .unwrap();
+        let mut c = Consumer::new(store, "sync", layout);
+        let cs = c.synchronize().unwrap();
+        assert_eq!(cs.to_step, 1);
+        assert!(cs.verified);
+        assert_eq!(c.weights.as_ref().unwrap(), &w1);
+        assert!(c.tree.is_none(), "v1 chain leaves no tree");
     }
 
     #[test]

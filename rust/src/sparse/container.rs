@@ -1,26 +1,38 @@
 //! Self-describing patch container: the on-wire / on-store object that
 //! PULSESync publishes (paper Alg. 3 + §J.4 integrity verification).
 //!
-//! Layout:
+//! Layout (v2; v1 omits the `chunk_elems` field):
 //! ```text
-//!   magic  "PLSP" (4)            version u8
+//!   magic  "PLSP" (4)            version u8 (1 or 2)
 //!   kind   u8 (0=bf16 weights, 1=f32 pseudo-gradient)
 //!   format u8 (PatchFormat tag)  codec u8 (Codec tag)
 //!   flags  u8 (bit0: byte-shuffled values)
 //!   step u64 LE     base_step u64 LE
 //!   total_params u64 LE   nnz u64 LE
 //!   raw_len u64 LE (pre-codec payload length)
-//!   sha256 of the *resulting full weights* (32 bytes; zero for
-//!       pseudo-gradient payloads, which are not checkpoints)
+//!   chunk_elems u64 LE (v2 only: hash-tree chunk size in elements)
+//!   32-byte hash of the *resulting full weights* (zero for
+//!       pseudo-gradient payloads, which are not checkpoints):
+//!       v1 → scalar SHA-256 of the full buffer;
+//!       v2 → chunked hash-tree root at chunk_elems
+//!            (see `sparse::hashtree`), verifiable in
+//!            O(nnz · chunk_elems) instead of O(total)
 //!   payload: codec(compress(index stream ++ value stream))
 //! ```
+//!
+//! `encode` writes v1 when `chunk_elems == 0` (scalar hash or no hash)
+//! and v2 otherwise; `decode` accepts both, so pre-hash-tree objects in
+//! a store remain readable.
 
 use super::{PatchFormat, TensorShape};
 use crate::codec::{shuffle, Codec};
 use anyhow::{bail, Result};
 
 pub const MAGIC: [u8; 4] = *b"PLSP";
-pub const VERSION: u8 = 1;
+/// Legacy scalar-hash container version.
+pub const VERSION_V1: u8 = 1;
+/// Current version: carries the hash-tree chunk size + root.
+pub const VERSION: u8 = 2;
 
 /// What the values in the patch are.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -98,9 +110,15 @@ pub struct Patch {
     pub total_params: u64,
     pub indices: Vec<u64>,
     pub values: Values,
-    /// SHA-256 (hex) of the full resulting weights, for §J.4 end-to-end
-    /// verification. Empty for pseudo-gradient payloads.
+    /// Hex commitment to the full resulting weights, for §J.4
+    /// end-to-end verification. Empty for pseudo-gradient payloads.
+    /// When `chunk_elems == 0` this is the scalar SHA-256 of the whole
+    /// buffer (v1); otherwise it is the `sparse::hashtree` root at that
+    /// chunk size (v2).
     pub result_hash: String,
+    /// Hash-tree chunk size in elements; 0 means `result_hash` is a
+    /// scalar full-buffer hash (v1 container).
+    pub chunk_elems: u64,
 }
 
 /// Encoding options.
@@ -135,9 +153,13 @@ pub fn encode(patch: &Patch, layout: &[TensorShape], opts: EncodeOpts) -> Result
     }
     let compressed = opts.codec.compress(&raw)?;
 
-    let mut out = Vec::with_capacity(compressed.len() + 96);
+    if patch.chunk_elems > 0 && patch.chunk_elems < super::hashtree::MIN_WIRE_CHUNK_ELEMS as u64 {
+        bail!("chunk_elems {} below wire minimum", patch.chunk_elems);
+    }
+    let version = if patch.chunk_elems > 0 { VERSION } else { VERSION_V1 };
+    let mut out = Vec::with_capacity(compressed.len() + 104);
     out.extend_from_slice(&MAGIC);
-    out.push(VERSION);
+    out.push(version);
     out.push(patch.values.kind().tag());
     out.push(opts.format.tag());
     out.push(opts.codec.tag());
@@ -147,6 +169,9 @@ pub fn encode(patch: &Patch, layout: &[TensorShape], opts: EncodeOpts) -> Result
     out.extend_from_slice(&patch.total_params.to_le_bytes());
     out.extend_from_slice(&(patch.indices.len() as u64).to_le_bytes());
     out.extend_from_slice(&(raw.len() as u64).to_le_bytes());
+    if version == VERSION {
+        out.extend_from_slice(&patch.chunk_elems.to_le_bytes());
+    }
     let mut hash32 = [0u8; 32];
     if !patch.result_hash.is_empty() {
         let bytes = hex_to_bytes(&patch.result_hash)?;
@@ -165,8 +190,9 @@ pub fn decode(buf: &[u8], layout: &[TensorShape]) -> Result<Patch> {
     if buf[0..4] != MAGIC {
         bail!("bad patch magic");
     }
-    if buf[4] != VERSION {
-        bail!("unsupported patch version {}", buf[4]);
+    let version = buf[4];
+    if version != VERSION_V1 && version != VERSION {
+        bail!("unsupported patch version {}", version);
     }
     let kind = PatchKind::from_tag(buf[5])?;
     let format = PatchFormat::from_tag(buf[6])?;
@@ -183,6 +209,20 @@ pub fn decode(buf: &[u8], layout: &[TensorShape]) -> Result<Patch> {
     let total_params = read_u64(&mut o);
     let nnz = read_u64(&mut o) as usize;
     let raw_len = read_u64(&mut o) as usize;
+    let chunk_elems = if version == VERSION {
+        if buf.len() < o + 8 + 32 {
+            bail!("v2 patch container too short ({} bytes)", buf.len());
+        }
+        let ce = read_u64(&mut o);
+        // untrusted geometry: a corrupted tiny value would make the
+        // verifier allocate huge digest arrays (see hashtree docs)
+        if ce < super::hashtree::MIN_WIRE_CHUNK_ELEMS as u64 {
+            bail!("v2 chunk_elems {} below wire minimum", ce);
+        }
+        ce
+    } else {
+        0
+    };
     let hash32 = &buf[o..o + 32];
     o += 32;
     let result_hash = if hash32.iter().all(|&b| b == 0) {
@@ -214,7 +254,7 @@ pub fn decode(buf: &[u8], layout: &[TensorShape]) -> Result<Patch> {
         raw[pos..].to_vec()
     };
     let values = Values::from_bytes(kind, &vbytes)?;
-    Ok(Patch { step, base_step, total_params, indices, values, result_hash })
+    Ok(Patch { step, base_step, total_params, indices, values, result_hash, chunk_elems })
 }
 
 fn hex_to_bytes(s: &str) -> Result<Vec<u8>> {
@@ -249,6 +289,7 @@ mod tests {
                 indices: idx,
                 values: Values::Bf16(vals),
                 result_hash: crate::util::sha256_hex(b"test"),
+                chunk_elems: 0,
             },
             layout,
         )
@@ -268,9 +309,36 @@ mod tests {
                     assert_eq!(back.step, 42);
                     assert_eq!(back.base_step, 41);
                     assert_eq!(back.result_hash, p.result_hash);
+                    assert_eq!(back.chunk_elems, 0);
                 }
             }
         }
+    }
+
+    #[test]
+    fn v2_header_roundtrips_chunk_size() {
+        let (mut p, layout) = mk_patch(50_000, 500, 3);
+        p.chunk_elems = 1024;
+        let buf = encode(&p, &layout, EncodeOpts::default()).unwrap();
+        assert_eq!(buf[4], VERSION);
+        let back = decode(&buf, &layout).unwrap();
+        assert_eq!(back.chunk_elems, 1024);
+        assert_eq!(back.indices, p.indices);
+        assert_eq!(back.values, p.values);
+        assert_eq!(back.result_hash, p.result_hash);
+        // v1 objects stay byte-compatible: chunk_elems == 0 → version 1
+        p.chunk_elems = 0;
+        let buf1 = encode(&p, &layout, EncodeOpts::default()).unwrap();
+        assert_eq!(buf1[4], VERSION_V1);
+        assert_eq!(buf1.len() + 8, buf.len());
+        assert!(decode(&buf1, &layout).is_ok());
+        // wire minimum enforced on both sides: encode refuses tiny
+        // geometry, and a corrupted header field fails decode cleanly
+        p.chunk_elems = 8;
+        assert!(encode(&p, &layout, EncodeOpts::default()).is_err());
+        let mut bad = buf.clone();
+        bad[49..57].copy_from_slice(&1u64.to_le_bytes()); // chunk_elems field
+        assert!(decode(&bad, &layout).is_err());
     }
 
     #[test]
@@ -288,6 +356,7 @@ mod tests {
             indices: idx,
             values: Values::F32(vals),
             result_hash: String::new(),
+            chunk_elems: 0,
         };
         let opts =
             EncodeOpts { format: PatchFormat::FlatVarint, codec: Codec::Zstd1, shuffle_values: true };
@@ -323,6 +392,7 @@ mod tests {
             indices: vec![],
             values: Values::Bf16(vec![]),
             result_hash: String::new(),
+            chunk_elems: 0,
         };
         let buf = encode(&p, &layout, EncodeOpts::default()).unwrap();
         let back = decode(&buf, &layout).unwrap();

@@ -1,0 +1,328 @@
+//! Chunked SHA-256 hash tree over a BF16 weight buffer (§J.4, made
+//! incremental).
+//!
+//! The flat parameter vector is split into fixed-size chunks of
+//! `chunk_elems` BF16 elements; each chunk gets its own SHA-256, and the
+//! root commits to `(total_elems, chunk_elems, chunk hashes…)`. Two
+//! properties make this the O(nnz) replacement for the full-buffer
+//! scalar hash on the PULSESync hot path:
+//!
+//! * **Build** parallelizes over chunks via [`crate::util::pool`]
+//!   (scalar SHA-256 of the whole buffer is inherently serial).
+//! * **Update** after a sparse patch rehashes only the chunks that
+//!   contain patched indices — O(touched_chunks · chunk_elems), which is
+//!   at most O(nnz · chunk_elems) and independent of model size. The
+//!   root fold is two-level (chunk digests → group digests → root), so
+//!   an update refolds only the touched groups plus an
+//!   O(num_chunks / GROUP) top fold — the per-patch fold stays tiny
+//!   even at 10B+ parameters instead of scaling with the chunk count.
+//!
+//! [`HashTree::apply_and_rehash`] fuses the consumer's patch apply with
+//! the chunk rehash so both share one pass over the touched chunks.
+//!
+//! The root is exactly as binding as the scalar hash for patch
+//! verification: any corrupted value or misdirected index lands in some
+//! chunk, changes that chunk's hash, and therefore changes the root.
+
+use crate::util::{hex, pool, u16_as_bytes};
+use sha2::{Digest, Sha256};
+
+/// Default chunk size in BF16 elements (2 KB of data per chunk): small
+/// enough that per-patch rehash cost ≈ nnz · chunk stays far below the
+/// full buffer at realistic sparsities, large enough that the
+/// per-chunk SHA-256 call overhead and the root fold stay negligible
+/// (the chunk-hash array is 1/64 of the buffer).
+pub const DEFAULT_CHUNK_ELEMS: usize = 1024;
+
+/// Smallest chunk size accepted from *untrusted* geometry (v2 container
+/// headers, anchor markers). [`HashTree::build`] itself accepts any
+/// chunk size, but a corrupted header must degrade into a clean
+/// verification error — not into one 32-byte digest per element
+/// (`chunk_elems = 1` would allocate 16x the weight buffer before the
+/// root comparison ever runs).
+pub const MIN_WIRE_CHUNK_ELEMS: usize = 64;
+
+/// Chunk digests folded per level-1 group. With 32-byte digests a group
+/// covers GROUP·chunk_elems elements, so the top fold over group
+/// digests is num_chunks/GROUP hashes — negligible at any model size.
+const GROUP: usize = 1024;
+
+fn hash_chunk(chunk: &[u16]) -> [u8; 32] {
+    let mut h = Sha256::new();
+    h.update(u16_as_bytes(chunk));
+    let mut out = [0u8; 32];
+    out.copy_from_slice(&h.finalize());
+    out
+}
+
+fn hash_group(chunks: &[[u8; 32]]) -> [u8; 32] {
+    let mut h = Sha256::new();
+    for c in chunks {
+        h.update(c);
+    }
+    let mut out = [0u8; 32];
+    out.copy_from_slice(&h.finalize());
+    out
+}
+
+/// Chunked hash tree: per-chunk SHA-256 digests, level-1 group digests
+/// over runs of GROUP chunk digests, and a root that commits to the
+/// geometry and every group digest (hence every chunk, hence every
+/// element).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HashTree {
+    chunk_elems: usize,
+    total_elems: usize,
+    chunks: Vec<[u8; 32]>,
+    groups: Vec<[u8; 32]>,
+    root: [u8; 32],
+}
+
+impl HashTree {
+    /// Build from scratch, hashing chunks (and groups) in parallel.
+    pub fn build(weights: &[u16], chunk_elems: usize) -> HashTree {
+        let chunk_elems = chunk_elems.max(1);
+        let n_chunks = weights.len().div_ceil(chunk_elems);
+        let parts = pool::par_ranges(n_chunks, 8, |r| {
+            r.map(|c| {
+                let lo = c * chunk_elems;
+                let hi = (lo + chunk_elems).min(weights.len());
+                hash_chunk(&weights[lo..hi])
+            })
+            .collect::<Vec<[u8; 32]>>()
+        });
+        let mut chunks = Vec::with_capacity(n_chunks);
+        for p in parts {
+            chunks.extend(p);
+        }
+        let n_groups = n_chunks.div_ceil(GROUP);
+        let gparts = pool::par_ranges(n_groups, 4, |r| {
+            r.map(|g| {
+                let lo = g * GROUP;
+                let hi = (lo + GROUP).min(chunks.len());
+                hash_group(&chunks[lo..hi])
+            })
+            .collect::<Vec<[u8; 32]>>()
+        });
+        let mut groups = Vec::with_capacity(n_groups);
+        for p in gparts {
+            groups.extend(p);
+        }
+        let mut t = HashTree {
+            chunk_elems,
+            total_elems: weights.len(),
+            chunks,
+            groups,
+            root: [0u8; 32],
+        };
+        t.recompute_root();
+        t
+    }
+
+    fn recompute_root(&mut self) {
+        let mut h = Sha256::new();
+        h.update((self.total_elems as u64).to_le_bytes());
+        h.update((self.chunk_elems as u64).to_le_bytes());
+        for g in &self.groups {
+            h.update(g);
+        }
+        self.root.copy_from_slice(&h.finalize());
+    }
+
+    /// Refold the group digests containing `touched` (sorted chunk ids)
+    /// and the root: O(touched_groups · GROUP + num_groups) digest
+    /// bytes, independent of total model size for realistic patches.
+    fn refold(&mut self, touched: &[usize]) {
+        let mut last = usize::MAX;
+        for &c in touched {
+            let g = c / GROUP;
+            if g != last {
+                let lo = g * GROUP;
+                let hi = (lo + GROUP).min(self.chunks.len());
+                self.groups[g] = hash_group(&self.chunks[lo..hi]);
+                last = g;
+            }
+        }
+        self.recompute_root();
+    }
+
+    pub fn chunk_elems(&self) -> usize {
+        self.chunk_elems
+    }
+
+    pub fn total_elems(&self) -> usize {
+        self.total_elems
+    }
+
+    pub fn num_chunks(&self) -> usize {
+        self.chunks.len()
+    }
+
+    pub fn root(&self) -> &[u8; 32] {
+        &self.root
+    }
+
+    pub fn root_hex(&self) -> String {
+        hex(&self.root)
+    }
+
+    /// Chunk ids containing any of the (sorted) flat indices, deduped.
+    pub fn touched_chunks(&self, indices: &[u64]) -> Vec<usize> {
+        let mut out = Vec::new();
+        for &i in indices {
+            let c = i as usize / self.chunk_elems;
+            if out.last() != Some(&c) {
+                out.push(c);
+            }
+        }
+        out
+    }
+
+    /// Rehash only the chunks containing `indices` against the already-
+    /// mutated `weights` and refold the root. `indices` must be sorted
+    /// (patch index streams always are). Untouched chunk hashes are
+    /// reused — this is the publisher-side incremental step.
+    pub fn update(&mut self, weights: &[u16], indices: &[u64]) {
+        assert_eq!(weights.len(), self.total_elems, "hash tree length mismatch");
+        if indices.is_empty() {
+            return;
+        }
+        let chunk_elems = self.chunk_elems;
+        let total = self.total_elems;
+        let touched = self.touched_chunks(indices);
+        let parts = pool::par_ranges(touched.len(), 16, |r| {
+            r.map(|k| {
+                let c = touched[k];
+                let lo = c * chunk_elems;
+                let hi = (lo + chunk_elems).min(total);
+                (c, hash_chunk(&weights[lo..hi]))
+            })
+            .collect::<Vec<(usize, [u8; 32])>>()
+        });
+        for part in parts {
+            for (c, h) in part {
+                self.chunks[c] = h;
+            }
+        }
+        self.refold(&touched);
+    }
+
+    /// Fused consumer hot path: apply `weights[idx] = value` and rehash
+    /// each touched chunk in the same pass (Alg. 4 + §J.4 verification
+    /// sharing one walk over the touched chunks). `indices` must be
+    /// sorted and values must pair with them.
+    pub fn apply_and_rehash(&mut self, weights: &mut [u16], indices: &[u64], values: &[u16]) {
+        assert_eq!(indices.len(), values.len());
+        assert_eq!(weights.len(), self.total_elems, "hash tree length mismatch");
+        let chunk_elems = self.chunk_elems;
+        let mut touched = Vec::new();
+        let mut k = 0usize;
+        while k < indices.len() {
+            let c = indices[k] as usize / chunk_elems;
+            let lo = c * chunk_elems;
+            let hi = (lo + chunk_elems).min(weights.len());
+            while k < indices.len() && (indices[k] as usize) < hi {
+                weights[indices[k] as usize] = values[k];
+                k += 1;
+            }
+            self.chunks[c] = hash_chunk(&weights[lo..hi]);
+            touched.push(c);
+        }
+        if !touched.is_empty() {
+            self.refold(&touched);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn incremental_update_equals_rebuild() {
+        // Property: after a random patch, the incremental update (both
+        // the plain `update` and the fused `apply_and_rehash`) matches a
+        // from-scratch rebuild — for random chunk sizes including ones
+        // that do not divide the buffer length.
+        prop::check("hashtree incremental == rebuild", 40, |g| {
+            let n = g.len().max(1);
+            let chunk = 1 + g.rng.below(3 * n as u64 / 2 + 2) as usize;
+            let old: Vec<u16> = (0..n).map(|_| g.rng.next_u32() as u16).collect();
+            let count = g.rng.below(n as u64 + 1) as usize;
+            let idx = g.sorted_indices(n, count);
+            let vals: Vec<u16> = idx.iter().map(|_| g.rng.next_u32() as u16).collect();
+
+            // path A: plain apply then incremental update
+            let mut wa = old.clone();
+            let mut ta = HashTree::build(&wa, chunk);
+            crate::sparse::apply_u16(&mut wa, &idx, &vals);
+            ta.update(&wa, &idx);
+
+            // path B: fused apply_and_rehash
+            let mut wb = old.clone();
+            let mut tb = HashTree::build(&wb, chunk);
+            tb.apply_and_rehash(&mut wb, &idx, &vals);
+
+            // path C: from-scratch rebuild of the mutated buffer
+            let tc = HashTree::build(&wa, chunk);
+
+            assert_eq!(wa, wb);
+            assert_eq!(ta, tc, "update() diverged from rebuild (chunk={})", chunk);
+            assert_eq!(tb, tc, "apply_and_rehash() diverged from rebuild (chunk={})", chunk);
+        });
+    }
+
+    #[test]
+    fn root_commits_to_every_position() {
+        let mut rng = crate::util::rng::Rng::new(11);
+        let n = 10_000usize;
+        let mut w: Vec<u16> = (0..n).map(|_| rng.next_u32() as u16).collect();
+        let tree = HashTree::build(&w, 257); // does not divide n
+        assert_eq!(tree.num_chunks(), n.div_ceil(257));
+        for &i in &[0usize, 256, 257, 5000, n - 1] {
+            let orig = w[i];
+            w[i] ^= 1;
+            let flipped = HashTree::build(&w, 257);
+            assert_ne!(tree.root_hex(), flipped.root_hex(), "flip at {} invisible", i);
+            w[i] = orig;
+        }
+        assert_eq!(HashTree::build(&w, 257).root_hex(), tree.root_hex());
+    }
+
+    #[test]
+    fn geometry_is_part_of_the_root() {
+        let w: Vec<u16> = (0..4096).map(|i| i as u16).collect();
+        let a = HashTree::build(&w, 512);
+        let b = HashTree::build(&w, 1024);
+        assert_ne!(a.root_hex(), b.root_hex());
+        // same data + same chunking → same root
+        assert_eq!(a.root_hex(), HashTree::build(&w, 512).root_hex());
+    }
+
+    #[test]
+    fn edge_cases() {
+        // empty buffer: zero chunks, but still a well-defined root
+        let empty = HashTree::build(&[], 64);
+        assert_eq!(empty.num_chunks(), 0);
+        assert_eq!(empty.root_hex().len(), 64);
+        // buffer smaller than one chunk
+        let small = HashTree::build(&[1, 2, 3], 64);
+        assert_eq!(small.num_chunks(), 1);
+        // empty patch leaves the root untouched
+        let mut w = vec![5u16; 100];
+        let mut t = HashTree::build(&w, 7);
+        let before = t.root_hex();
+        t.update(&w, &[]);
+        t.apply_and_rehash(&mut w, &[], &[]);
+        assert_eq!(t.root_hex(), before);
+    }
+
+    #[test]
+    fn touched_chunks_dedups_sorted_runs() {
+        let w = vec![0u16; 1000];
+        let t = HashTree::build(&w, 100);
+        assert_eq!(t.touched_chunks(&[0, 1, 99, 100, 250, 999]), vec![0, 1, 2, 9]);
+        assert!(t.touched_chunks(&[]).is_empty());
+    }
+}

@@ -4,12 +4,31 @@
 //! two checkpoints, together with the **new values** (never arithmetic
 //! differences — §H.6's losslessness argument relies on this). This
 //! module provides the bitwise diff, the index-stream formats evaluated
-//! in Tables 10/11, and the self-describing container with the per-patch
-//! SHA-256 used for end-to-end verification (§J.4).
+//! in Tables 10/11, the self-describing container, and the chunked
+//! [`hashtree`] used for end-to-end verification (§J.4).
+//!
+//! # Cost model of the steady-state hot path
+//!
+//! Both sides of PULSESync are proportional to the *update*, not the
+//! model:
+//!
+//! * [`diff_bf16`] / [`diff_gather_bf16`] skip unchanged data one
+//!   128-bit word (8 BF16 elements) at a time and only descend into
+//!   words whose bit patterns differ, so the per-step diff is a
+//!   memory-bandwidth scan with O(nnz) element work on top.
+//! * Publish/verify use [`hashtree::HashTree`] instead of a full-buffer
+//!   scalar SHA-256: an incremental update rehashes only the chunks a
+//!   patch touches — O(nnz · chunk_elems) hashing instead of O(total) —
+//!   and the consumer's [`hashtree::HashTree::apply_and_rehash`] fuses
+//!   the patch apply with that rehash in one pass over touched chunks.
+//!   Containers carrying a hash-tree root use the v2 header
+//!   (chunk size + root; see [`container`]); v1 scalar-hash containers
+//!   still decode and verify.
 
 pub mod container;
 pub mod coo;
 pub mod flat;
+pub mod hashtree;
 
 use crate::util::pool;
 
@@ -41,18 +60,46 @@ pub fn synthetic_layout(n: usize, cols: usize) -> Vec<TensorShape> {
     vec![TensorShape { name: "flat".into(), offset: 0, rows, cols }]
 }
 
+/// Scan `r` for positions where the BF16 bit patterns differ, calling
+/// `emit(i)` for each in ascending order. Unchanged data is skipped one
+/// 128-bit word (8 elements) at a time: with >99% of positions
+/// unchanged, almost every word compares equal and the element loop
+/// never runs. The 16-byte loads are unaligned (`&[u16]` only guarantees
+/// 2-byte alignment), which `read_unaligned` makes sound.
+#[inline]
+fn diff_words<F: FnMut(usize)>(old: &[u16], new: &[u16], r: std::ops::Range<usize>, mut emit: F) {
+    const W: usize = 8; // BF16 elements per u128 word
+    let mut i = r.start;
+    let end = r.end;
+    while i + W <= end {
+        let a = unsafe { (old.as_ptr().add(i) as *const u128).read_unaligned() };
+        let b = unsafe { (new.as_ptr().add(i) as *const u128).read_unaligned() };
+        if a != b {
+            for j in i..i + W {
+                if old[j] != new[j] {
+                    emit(j);
+                }
+            }
+        }
+        i += W;
+    }
+    while i < end {
+        if old[i] != new[i] {
+            emit(i);
+        }
+        i += 1;
+    }
+}
+
 /// Bitwise diff of two BF16 views: the sorted positions where the bit
 /// patterns differ. This *is* the compute-visibility gate applied to
-/// consecutive checkpoints (Alg. 1 line 2). Parallel over chunks.
+/// consecutive checkpoints (Alg. 1 line 2). Parallel over chunks and
+/// word-at-a-time within each chunk.
 pub fn diff_bf16(old: &[u16], new: &[u16]) -> Vec<u64> {
     assert_eq!(old.len(), new.len(), "checkpoint length mismatch");
     let parts = pool::par_ranges(old.len(), 1 << 16, |r| {
         let mut v = Vec::new();
-        for i in r {
-            if old[i] != new[i] {
-                v.push(i as u64);
-            }
-        }
+        diff_words(old, new, r, |i| v.push(i as u64));
         v
     });
     let total: usize = parts.iter().map(|p| p.len()).sum();
@@ -61,6 +108,43 @@ pub fn diff_bf16(old: &[u16], new: &[u16]) -> Vec<u64> {
         out.extend(p);
     }
     out
+}
+
+/// Fused diff + gather: produces (sorted indices, new values) in one
+/// pass over the buffers instead of a diff followed by a separate
+/// gather. This is the publisher's per-step encode front half.
+pub fn diff_gather_bf16(old: &[u16], new: &[u16]) -> (Vec<u64>, Vec<u16>) {
+    assert_eq!(old.len(), new.len(), "checkpoint length mismatch");
+    let parts = pool::par_ranges(old.len(), 1 << 16, |r| {
+        let mut idx = Vec::new();
+        let mut val = Vec::new();
+        diff_words(old, new, r, |i| {
+            idx.push(i as u64);
+            val.push(new[i]);
+        });
+        (idx, val)
+    });
+    let total: usize = parts.iter().map(|(i, _)| i.len()).sum();
+    let mut indices = Vec::with_capacity(total);
+    let mut values = Vec::with_capacity(total);
+    for (i, v) in parts {
+        indices.extend(i);
+        values.extend(v);
+    }
+    (indices, values)
+}
+
+/// Number of positions whose bit patterns differ (word-skipping, no
+/// index materialization) — the counting core of the sparsity meter.
+pub fn count_diff_bf16(old: &[u16], new: &[u16]) -> usize {
+    assert_eq!(old.len(), new.len(), "checkpoint length mismatch");
+    pool::par_ranges(old.len(), 1 << 16, |r| {
+        let mut c = 0usize;
+        diff_words(old, new, r, |_| c += 1);
+        c
+    })
+    .into_iter()
+    .sum()
 }
 
 /// Gather `values[i] = new[idx]` for a sorted index list.
@@ -220,6 +304,40 @@ mod tests {
             }
         }
         assert_eq!(diff_bf16(&old, &new), expect);
+    }
+
+    #[test]
+    fn word_diff_matches_scalar_reference() {
+        // the word-skipping scan must agree with a plain element loop on
+        // every length (word remainders) and change density
+        crate::util::prop::check("word diff == scalar diff", 60, |g| {
+            let n = g.len();
+            let old: Vec<u16> = (0..n).map(|_| g.rng.next_u32() as u16).collect();
+            let mut new = old.clone();
+            for _ in 0..g.rng.below(n as u64 + 1) {
+                let i = g.rng.below(n.max(1) as u64) as usize;
+                if n > 0 {
+                    new[i] = g.rng.next_u32() as u16;
+                }
+            }
+            let expect: Vec<u64> = (0..n).filter(|&i| old[i] != new[i]).map(|i| i as u64).collect();
+            assert_eq!(diff_bf16(&old, &new), expect);
+            let (idx, vals) = diff_gather_bf16(&old, &new);
+            assert_eq!(idx, expect);
+            assert_eq!(vals, gather_u16(&new, &expect));
+            assert_eq!(count_diff_bf16(&old, &new), expect.len());
+        });
+    }
+
+    #[test]
+    fn diff_gather_dense_change() {
+        // every position changed: the word fast path must still emit all
+        let old = vec![0u16; 37];
+        let new = vec![1u16; 37];
+        let (idx, vals) = diff_gather_bf16(&old, &new);
+        assert_eq!(idx, (0..37).collect::<Vec<u64>>());
+        assert_eq!(vals, vec![1u16; 37]);
+        assert_eq!(count_diff_bf16(&old, &new), 37);
     }
 
     #[test]
