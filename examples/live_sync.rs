@@ -1,23 +1,114 @@
 //! Live weight synchronization over real TCP sockets (paper Fig. 5):
-//! a trainer publishes sparse BF16 patches through a relay; inference
-//! workers subscribe (including a late joiner that catches up from the
-//! anchor) and verify bit-identical reconstruction end to end.
+//! a trainer publishes sparse BF16 patches as **sharded v3 frames**
+//! through a relay; inference workers subscribe (including a late
+//! joiner that catches up from the anchor) and verify bit-identical
+//! reconstruction end to end — each shard against its subtree root,
+//! each step against the global hash-tree root.
 //!
 //! Run: cargo run --release --example live_sync
 
 use pulse::bf16;
 use pulse::net::relay::Relay;
 use pulse::net::tcp::{self, kind, Frame};
-use pulse::sparse::container::{self, EncodeOpts, Patch, Values};
-use pulse::sparse::hashtree::{HashTree, DEFAULT_CHUNK_ELEMS};
-use pulse::sparse::{self, synthetic_layout};
+use pulse::pulse::sync::ShardedEncoder;
+use pulse::sparse::container::{self, EncodeOpts, Values};
+use pulse::sparse::hashtree::{HashTree, ShardPatchRef, DEFAULT_CHUNK_ELEMS};
+use pulse::sparse::{synthetic_layout, TensorShape};
 use pulse::util::rng::Rng;
+
+const SHARDS: usize = 4;
+
+/// Worker loop: anchor → weights + tree, then one sharded step at a
+/// time (frames arrive shard 0..S-1 in order on the stream), applied
+/// in parallel with per-shard verification.
+fn run_worker(
+    port: u16,
+    layout: Vec<TensorShape>,
+    n: usize,
+) -> anyhow::Result<(usize, u64)> {
+    let mut conn = tcp::connect_local(port)?;
+    let first = tcp::read_frame(&mut conn)?;
+    assert_eq!(first.kind, kind::ANCHOR);
+    let raw = zstd::bulk::decompress(&first.payload, n * 2)?;
+    let mut weights = pulse::util::bytes_to_u16(&raw);
+    let mut tree = HashTree::build(&weights, DEFAULT_CHUNK_ELEMS);
+    let mut steps = 0usize;
+    let mut bytes = first.payload.len() as u64;
+    loop {
+        let f = tcp::read_frame(&mut conn)?;
+        match f.kind {
+            kind::PATCH => {
+                bytes += f.payload.len() as u64;
+                let meta = container::peek_meta(&f.payload)?;
+                // collect the rest of this step's shard frames; an
+                // ANCHOR arriving mid-step means the relay coalesced a
+                // catch-up for us — resync from it instead
+                let mut frames = vec![f];
+                let mut resynced = false;
+                while frames.len() < meta.shard_count as usize {
+                    let nf = tcp::read_frame(&mut conn)?;
+                    bytes += nf.payload.len() as u64;
+                    match nf.kind {
+                        kind::PATCH => frames.push(nf),
+                        kind::ANCHOR => {
+                            let raw = zstd::bulk::decompress(&nf.payload, n * 2)?;
+                            weights = pulse::util::bytes_to_u16(&raw);
+                            tree = HashTree::build(&weights, DEFAULT_CHUNK_ELEMS);
+                            resynced = true;
+                            break;
+                        }
+                        kind::CLOSE => return Ok((steps, bytes)),
+                        _ => {}
+                    }
+                }
+                if resynced {
+                    continue;
+                }
+                let patches: Vec<_> = frames
+                    .iter()
+                    .map(|fr| container::decode(&fr.payload, &layout))
+                    .collect::<anyhow::Result<_>>()?;
+                let refs: Vec<ShardPatchRef> = patches
+                    .iter()
+                    .map(|p| ShardPatchRef {
+                        elem_lo: p.elem_offset as usize,
+                        elem_hi: (p.elem_offset + p.elem_len) as usize,
+                        indices: &p.indices,
+                        values: match &p.values {
+                            Values::Bf16(v) => v,
+                            _ => panic!("wrong value kind"),
+                        },
+                        expect_root: &p.shard_root,
+                    })
+                    .collect();
+                let ok = tree.apply_and_rehash_shards(&mut weights, &refs);
+                assert!(ok.iter().all(|&v| v), "shard subtree verification failed");
+                assert_eq!(
+                    tree.root_hex(),
+                    patches[0].result_hash,
+                    "global root mismatch after step {}",
+                    meta.step
+                );
+                steps += 1;
+            }
+            kind::ANCHOR => {
+                // coalesced catch-up restart
+                let raw = zstd::bulk::decompress(&f.payload, n * 2)?;
+                weights = pulse::util::bytes_to_u16(&raw);
+                tree = HashTree::build(&weights, DEFAULT_CHUNK_ELEMS);
+                bytes += f.payload.len() as u64;
+            }
+            kind::CLOSE => return Ok((steps, bytes)),
+            _ => {}
+        }
+    }
+}
 
 fn main() -> anyhow::Result<()> {
     let n = 500_000usize;
     let layout = synthetic_layout(n, 1024);
     let relay = Relay::start()?;
-    println!("relay listening on 127.0.0.1:{}", relay.port);
+    println!("relay listening on 127.0.0.1:{} ({} shards/step)", relay.port, SHARDS);
 
     // trainer-side state: FP32 masters + previous BF16 view
     let mut rng = Rng::new(3);
@@ -33,50 +124,25 @@ fn main() -> anyhow::Result<()> {
 
     // ANCHOR frame: compressed full BF16 view
     let anchor_payload = zstd::bulk::compress(pulse::util::u16_as_bytes(&prev), 1)?;
-    relay.publish(Frame { kind: kind::ANCHOR, payload: anchor_payload.clone() });
+    relay.publish(Frame { kind: kind::ANCHOR, payload: anchor_payload });
 
-    // early worker subscribes, decodes the anchor
-    let port = relay.port;
-    let layout_w = layout.clone();
-    let worker = std::thread::spawn(move || -> anyhow::Result<(usize, u64)> {
-        let mut conn = tcp::connect_local(port)?;
-        let first = tcp::read_frame(&mut conn)?;
-        assert_eq!(first.kind, kind::ANCHOR);
-        let raw = zstd::bulk::decompress(&first.payload, 500_000 * 2)?;
-        let mut weights = pulse::util::bytes_to_u16(&raw);
-        // one tree build at join time; every patch after that verifies
-        // via fused apply+rehash over only the touched chunks (O(nnz))
-        let mut tree = HashTree::build(&weights, DEFAULT_CHUNK_ELEMS);
-        let mut patches = 0usize;
-        let mut bytes = first.payload.len() as u64;
-        loop {
-            let f = tcp::read_frame(&mut conn)?;
-            match f.kind {
-                kind::PATCH => {
-                    bytes += f.payload.len() as u64;
-                    let patch = container::decode(&f.payload, &layout_w)?;
-                    let vals = match &patch.values {
-                        Values::Bf16(v) => v.clone(),
-                        _ => anyhow::bail!("wrong value kind"),
-                    };
-                    assert_eq!(patch.chunk_elems as usize, tree.chunk_elems());
-                    tree.apply_and_rehash(&mut weights, &patch.indices, &vals);
-                    assert_eq!(tree.root_hex(), patch.result_hash, "root mismatch after patch");
-                    patches += 1;
-                }
-                kind::CLOSE => return Ok((patches, bytes)),
-                _ => {}
-            }
-        }
+    // two workers: one subscribes immediately, one joins late and
+    // catches up from the relayed anchor + tail — each drained by its
+    // own per-subscriber relay queue
+    let (port, l1, l2) = (relay.port, layout.clone(), layout.clone());
+    let fast = std::thread::spawn(move || run_worker(port, l1, n));
+    let late = std::thread::spawn(move || {
+        std::thread::sleep(std::time::Duration::from_millis(150));
+        run_worker(port, l2, n)
     });
-    // give the worker time to register before streaming
-    while relay.subscriber_count() < 1 {
+    // wait for both (the late joiner replays the anchor + any tail it
+    // missed from the relay's catch-up preload) before streaming ends
+    while relay.subscriber_count() < 2 {
         std::thread::sleep(std::time::Duration::from_millis(10));
     }
 
-    // trainer: 10 steps of Adam-scale drift → sparse patches, with the
-    // hash-tree root updated incrementally (only touched chunks rehash)
-    let mut tree = HashTree::build(&prev, DEFAULT_CHUNK_ELEMS);
+    // trainer: 10 steps of Adam-scale drift → sharded sparse patches
+    let mut enc = ShardedEncoder::new(prev, 0);
     let mut total_patch_bytes = 0u64;
     for step in 1..=10u64 {
         for x in master.iter_mut() {
@@ -84,35 +150,33 @@ fn main() -> anyhow::Result<()> {
         }
         let mut view = Vec::new();
         bf16::cast_slice_par(&master, &mut view);
-        let (indices, values) = sparse::diff_gather_bf16(&prev, &view);
-        tree.update(&view, &indices);
-        let patch = Patch {
-            step,
-            base_step: step - 1,
-            total_params: n as u64,
-            indices,
-            values: Values::Bf16(values),
-            result_hash: tree.root_hex(),
-            chunk_elems: tree.chunk_elems() as u64,
-        };
-        let obj = container::encode(&patch, &layout, EncodeOpts::default())?;
-        total_patch_bytes += obj.len() as u64;
+        let encoded = enc.encode_step(step, &view, &layout, EncodeOpts::default(), SHARDS)?;
+        let step_bytes: u64 = encoded.frames.iter().map(|f| f.bytes.len() as u64).sum();
+        total_patch_bytes += step_bytes;
         println!(
-            "trainer step {:>2}: nnz {:>6} / {}  patch {:>9}",
+            "trainer step {:>2}: nnz {:>6} / {}  {} shards  {:>9} total",
             step,
-            patch.indices.len(),
+            encoded.nnz,
             n,
-            pulse::util::fmt_bytes(obj.len() as u64)
+            encoded.frames.len(),
+            pulse::util::fmt_bytes(step_bytes)
         );
-        relay.publish(Frame { kind: kind::PATCH, payload: obj });
-        prev = view;
+        for f in encoded.frames {
+            relay.publish(Frame { kind: kind::PATCH, payload: f.bytes });
+        }
     }
     relay.publish(Frame { kind: kind::CLOSE, payload: vec![] });
-    let (patches, bytes) = worker.join().unwrap()?;
+    let (fast_steps, fast_bytes) = fast.join().unwrap()?;
+    let (late_steps, late_bytes) = late.join().unwrap()?;
     println!(
-        "\nworker applied {} patches over TCP ({} total), all hash-verified ✓",
-        patches,
-        pulse::util::fmt_bytes(bytes)
+        "\nearly worker applied {} sharded steps over TCP ({}), all hash-verified ✓",
+        fast_steps,
+        pulse::util::fmt_bytes(fast_bytes)
+    );
+    println!(
+        "late joiner applied {} steps ({}) after anchor catch-up ✓",
+        late_steps,
+        pulse::util::fmt_bytes(late_bytes)
     );
     println!(
         "full-checkpoint streaming would have been {} ({}x more)",

@@ -1,20 +1,65 @@
-//! End-to-end train-step bench (§Perf): one full GRPO step (rollout +
-//! reward + advantages + grad + AdamW + sparsity meter + PULSESync
-//! encode) on the tiny model. Requires artifacts.
+//! End-to-end benches (§Perf): the PULSESync publish→synchronize
+//! roundtrip over the object store at 1M parameters (sharded vs
+//! unsharded fan-out — runs everywhere, including CI bench-smoke), and
+//! one full GRPO train step on the tiny model (requires artifacts;
+//! skipped cleanly without them).
+use pulse::bf16;
 use pulse::coordinator;
 use pulse::optim::{AdamConfig, AdamW};
+use pulse::pulse::sync::{Consumer, Publisher};
 use pulse::rl::grpo::{self, GrpoConfig};
 use pulse::rl::tasks::MathTask;
 use pulse::runtime::{artifacts_dir, ModelRuntime};
-use pulse::sparse::{self, container};
+use pulse::sparse::{self, container, synthetic_layout};
+use pulse::storage::ObjectStore;
 use pulse::util::bench::Bench;
 use pulse::util::rng::Rng;
 
-fn main() {
+/// Sharded vs unsharded publish+synchronize over a temp store: the
+/// whole sync plane (diff, encode, upload, download, decode, parallel
+/// apply, verify) per optimizer step.
+fn bench_sync_roundtrip(b: &mut Bench) {
+    let n = 1_000_000usize;
+    let layout = synthetic_layout(n, 1024);
+    let mut rng = Rng::new(11);
+    let init: Vec<u16> = (0..n)
+        .map(|_| pulse::bf16::f32_to_bf16_bits((rng.normal() * 0.02) as f32))
+        .collect();
+    for shards in [1usize, 4] {
+        let store = ObjectStore::temp(&format!("bench_e2e_s{}", shards)).unwrap();
+        let mut publisher =
+            Publisher::new(store.clone(), "sync", layout.clone(), init.clone(), 1_000_000)
+                .unwrap()
+                .with_shards(shards);
+        let mut consumer = Consumer::new(store, "sync", layout.clone());
+        consumer.synchronize().unwrap();
+        let mut w = init.clone();
+        let mut step = 0u64;
+        b.run_bytes(
+            &format!("e2e/pulsesync_roundtrip/1M x{} shards", shards),
+            (n * 2) as u64,
+            || {
+                step += 1;
+                // ~1% of positions move per step (paper's sparse regime)
+                for _ in 0..n / 100 {
+                    let i = rng.below(n as u64) as usize;
+                    w[i] = pulse::bf16::f32_to_bf16_bits((rng.normal() * 0.02) as f32);
+                }
+                publisher.publish(step, &w).unwrap();
+                let cs = consumer.synchronize().unwrap();
+                assert!(cs.verified);
+            },
+        );
+    }
+}
+
+/// One full GRPO step (rollout + reward + advantages + grad + AdamW +
+/// sparsity meter + PULSESync encode) on the tiny model.
+fn bench_train_step(b: &mut Bench) {
     let rt = match ModelRuntime::load(&artifacts_dir(), "tiny", &["rollout", "grad"]) {
         Ok(rt) => rt,
         Err(e) => {
-            eprintln!("skipping bench_e2e (run `make artifacts`): {e:#}");
+            eprintln!("skipping e2e train-step bench (run `make artifacts`): {e:#}");
             return;
         }
     };
@@ -24,8 +69,7 @@ fn main() {
     let mut opt = AdamW::new(master.len(), AdamConfig::default());
     let mut rng = Rng::new(0);
     let mut prev = Vec::new();
-    pulse::bf16::cast_slice_par(&master, &mut prev);
-    let mut b = Bench::new();
+    bf16::cast_slice_par(&master, &mut prev);
     b.run("e2e/full_train_step/tiny", || {
         let policy: Vec<f32> =
             master.iter().map(|&x| pulse::bf16::bf16_round(x)).collect();
@@ -36,7 +80,7 @@ fn main() {
         opt.step(&mut master, &out.grads);
         // PULSESync encode of the new view
         let mut view = Vec::new();
-        pulse::bf16::cast_slice_par(&master, &mut view);
+        bf16::cast_slice_par(&master, &mut view);
         let (idx, vals) = sparse::diff_gather_bf16(&prev, &view);
         let patch = container::Patch {
             step: 1,
@@ -46,11 +90,20 @@ fn main() {
             values: container::Values::Bf16(vals),
             result_hash: String::new(),
             chunk_elems: 0,
+            ..Default::default()
         };
         let obj =
             container::encode(&patch, &rt.manifest.layout, Default::default()).unwrap();
         prev = view;
         std::hint::black_box(obj);
     });
-    b.write_csv(&pulse::coordinator::metrics::results_dir().join("bench_e2e.csv")).unwrap();
+}
+
+fn main() {
+    let mut b = Bench::new();
+    bench_sync_roundtrip(&mut b);
+    bench_train_step(&mut b);
+    let results = pulse::coordinator::metrics::results_dir();
+    b.write_csv(&results.join("bench_e2e.csv")).unwrap();
+    b.write_json(&results.join("BENCH_e2e.json")).unwrap();
 }

@@ -5,7 +5,9 @@
 //! `diff_word`, `hashtree_build` and `hashtree_incremental` are the
 //! O(nnz)-hot-path replacements, so the speedup is recorded side by
 //! side in `bench_patch.csv`.
-use pulse::sparse::hashtree::{HashTree, DEFAULT_CHUNK_ELEMS};
+use pulse::pulse::sync::ShardedEncoder;
+use pulse::sparse::container::EncodeOpts;
+use pulse::sparse::hashtree::{self, HashTree, ShardPatchRef, DEFAULT_CHUNK_ELEMS};
 use pulse::sparse::{self, container, PatchFormat};
 use pulse::util::bench::Bench;
 use pulse::util::rng::Rng;
@@ -59,6 +61,7 @@ fn main() {
         values: container::Values::Bf16(vals.clone()),
         result_hash: tree.root_hex(),
         chunk_elems: tree.chunk_elems() as u64,
+        ..Default::default()
     };
     b.run_bytes("container_encode/zstd1", bytes, || {
         std::hint::black_box(container::encode(&patch, &layout, Default::default()).unwrap());
@@ -93,5 +96,69 @@ fn main() {
         fused.apply_and_rehash(&mut fused_w, &idx, &vals);
         std::hint::black_box(fused.root());
     });
-    b.write_csv(&pulse::coordinator::metrics::results_dir().join("bench_patch.csv")).unwrap();
+
+    // sharded fan-out: the whole publisher front half (per-shard
+    // diff+gather, one tree update, per-shard encode+compress) on the
+    // pool, alternating old↔new so every iteration does real work
+    for shards in [1usize, 4, 8] {
+        let mut enc = ShardedEncoder::new(old.clone(), 0);
+        let mut step = 0u64;
+        let mut to_new = true;
+        b.run_bytes(&format!("shard_encode_step/{} shards", shards), bytes, || {
+            step += 1;
+            let target: &[u16] = if to_new { &new } else { &old };
+            to_new = !to_new;
+            std::hint::black_box(
+                enc.encode_step(step, target, &layout, EncodeOpts::default(), shards)
+                    .unwrap(),
+            );
+        });
+    }
+
+    // consumer-side parallel sharded apply+verify, alternating
+    // directions with precomputed per-shard slices and subtree roots
+    let shard_n = 4usize;
+    let ranges = hashtree::shard_ranges(n, DEFAULT_CHUNK_ELEMS, shard_n);
+    let vals_back: Vec<u16> = idx.iter().map(|&i| old[i as usize]).collect();
+    let tree_old = HashTree::build(&old, DEFAULT_CHUNK_ELEMS);
+    let cuts: Vec<(usize, usize)> = ranges
+        .iter()
+        .map(|r| {
+            (
+                idx.partition_point(|&i| (i as usize) < r.start),
+                idx.partition_point(|&i| (i as usize) < r.end),
+            )
+        })
+        .collect();
+    let roots_new: Vec<String> =
+        ranges.iter().map(|r| tree.subtree_root_hex(r.start, r.end)).collect();
+    let roots_old: Vec<String> =
+        ranges.iter().map(|r| tree_old.subtree_root_hex(r.start, r.end)).collect();
+    let mut sw = old.clone();
+    let mut st = HashTree::build(&sw, DEFAULT_CHUNK_ELEMS);
+    let mut to_new = true;
+    b.run(&format!("apply_and_rehash_shards/{} shards", shard_n), || {
+        let (values, roots) =
+            if to_new { (&vals, &roots_new) } else { (&vals_back, &roots_old) };
+        to_new = !to_new;
+        let refs: Vec<ShardPatchRef> = ranges
+            .iter()
+            .zip(&cuts)
+            .zip(roots.iter())
+            .map(|((r, &(a, b_)), root)| ShardPatchRef {
+                elem_lo: r.start,
+                elem_hi: r.end,
+                indices: &idx[a..b_],
+                values: &values[a..b_],
+                expect_root: root,
+            })
+            .collect();
+        let ok = st.apply_and_rehash_shards(&mut sw, &refs);
+        assert!(ok.iter().all(|&v| v));
+        std::hint::black_box(st.root());
+    });
+
+    let results = pulse::coordinator::metrics::results_dir();
+    b.write_csv(&results.join("bench_patch.csv")).unwrap();
+    b.write_json(&results.join("BENCH_patch.json")).unwrap();
 }

@@ -159,6 +159,7 @@ fn fig1(args: &Args) -> Result<()> {
             values: pulse::sparse::container::Values::Bf16(vals),
             result_hash: String::new(),
             chunk_elems: 0,
+            ..Default::default()
         };
         let obj = pulse::sparse::container::encode(
             &patch,

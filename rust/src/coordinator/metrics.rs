@@ -1,5 +1,7 @@
 //! CSV metrics emission for the paper harness (`results/*.csv`) — every
-//! figure/table is regenerated from these files.
+//! figure/table is regenerated from these files — plus the per-shard
+//! fan-out meter ([`ShardFanoutMeter`]) that tracks bytes/latency per
+//! shard of the sharded publish path (`pulse::sync`).
 
 use anyhow::Result;
 use std::io::Write;
@@ -30,6 +32,83 @@ impl CsvWriter {
 
     pub fn rowf(&mut self, values: &[f64]) -> Result<()> {
         self.row(&values.iter().map(|v| format!("{v}")).collect::<Vec<_>>())
+    }
+}
+
+/// Accumulates per-shard publish accounting (bytes + encode seconds per
+/// shard index) across steps, from `PublishStats::shard_bytes` /
+/// `shard_encode_secs`. Feeds `results/shard_fanout.csv` and gives a
+/// quick balance check: a skewed `byte_imbalance()` means the shard
+/// ranges are not splitting the update stream evenly.
+#[derive(Debug, Default)]
+pub struct ShardFanoutMeter {
+    steps: u64,
+    bytes: Vec<u64>,
+    secs: Vec<f64>,
+}
+
+impl ShardFanoutMeter {
+    pub fn new() -> ShardFanoutMeter {
+        ShardFanoutMeter::default()
+    }
+
+    /// Record one published step's per-shard bytes and encode seconds.
+    pub fn record(&mut self, shard_bytes: &[u64], shard_secs: &[f64]) {
+        if self.bytes.len() < shard_bytes.len() {
+            self.bytes.resize(shard_bytes.len(), 0);
+        }
+        if self.secs.len() < shard_secs.len() {
+            self.secs.resize(shard_secs.len(), 0.0);
+        }
+        for (i, b) in shard_bytes.iter().enumerate() {
+            self.bytes[i] += b;
+        }
+        for (i, s) in shard_secs.iter().enumerate() {
+            self.secs[i] += s;
+        }
+        self.steps += 1;
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.bytes.len()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes.iter().sum()
+    }
+
+    /// Max shard bytes over mean shard bytes (1.0 = perfectly
+    /// balanced; 0.0 when nothing was recorded).
+    pub fn byte_imbalance(&self) -> f64 {
+        let total = self.total_bytes();
+        if total == 0 || self.bytes.is_empty() {
+            return 0.0;
+        }
+        let mean = total as f64 / self.bytes.len() as f64;
+        let max = self.bytes.iter().copied().max().unwrap_or(0) as f64;
+        max / mean
+    }
+
+    /// One CSV row per shard: totals plus per-step means.
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        let mut w = CsvWriter::create(
+            path,
+            &["shard", "steps", "total_bytes", "total_encode_secs", "mean_bytes_per_step"],
+        )?;
+        for (i, (&b, &s)) in self.bytes.iter().zip(&self.secs).enumerate() {
+            w.row(&[
+                i.to_string(),
+                self.steps.to_string(),
+                b.to_string(),
+                format!("{:.6}", s),
+                format!("{:.1}", b as f64 / self.steps.max(1) as f64),
+            ])?;
+        }
+        Ok(())
     }
 }
 
@@ -70,6 +149,26 @@ pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn shard_fanout_meter_accumulates() {
+        let mut m = ShardFanoutMeter::new();
+        assert_eq!(m.byte_imbalance(), 0.0);
+        m.record(&[100, 100, 100, 100], &[0.1, 0.1, 0.1, 0.1]);
+        m.record(&[300, 100, 100, 100], &[0.2, 0.1, 0.1, 0.1]);
+        assert_eq!(m.steps(), 2);
+        assert_eq!(m.shard_count(), 4);
+        assert_eq!(m.total_bytes(), 1000);
+        // shard 0 carried 400 of 1000 bytes over 4 shards → 1.6x mean
+        assert!((m.byte_imbalance() - 1.6).abs() < 1e-9);
+        let dir = std::env::temp_dir().join(format!("pulse_shardcsv_{}", std::process::id()));
+        let p = dir.join("shard_fanout.csv");
+        m.write_csv(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text.lines().count(), 5, "header + one row per shard");
+        assert!(text.lines().nth(1).unwrap().starts_with("0,2,400,"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
 
     #[test]
     fn csv_roundtrip() {

@@ -1,21 +1,81 @@
 //! Patch relay (paper Fig. 5 / §E: "a relay network distributes sparse
 //! BF16 weight patches from trainers to inference workers").
 //!
-//! The relay accepts one publisher connection and N subscriber
-//! connections, fanning every PATCH/ANCHOR frame out to all subscribers.
-//! Subscribers that connect late first receive the most recent ANCHOR
-//! then the subsequent patches (mirroring the slow path of Alg. 5).
+//! The relay accepts one publisher and N subscriber connections and
+//! fans every PATCH/ANCHOR frame out to all subscribers. Subscribers
+//! that connect late first receive the most recent ANCHOR plus the
+//! subsequent patch tail (mirroring the slow path of Alg. 5).
+//!
+//! # Fan-out architecture: per-subscriber queues
+//!
+//! [`Relay::publish`] never touches a socket. Each subscriber owns a
+//! bounded outbound queue drained by a dedicated writer thread, so a
+//! slow or stalled subscriber blocks only *its own* writer — N-worker
+//! fan-out degrades per subscriber, not globally (the previous design
+//! held one mutex around all subscribers and wrote frames serially, so
+//! one full TCP send buffer stalled every worker).
+//!
+//! # Coalescing catch-up policy
+//!
+//! Patch frames are chained deltas, so dropping one at random would
+//! corrupt a subscriber's stream. Instead, per subscriber:
+//!
+//! * **ANCHOR** frames supersede everything queued before them: the
+//!   queue is cleared and restarts at the anchor.
+//! * A **PATCH** that would overflow the bounded queue replaces the
+//!   queue contents with the canonical catch-up bundle — last ANCHOR +
+//!   every patch published since (`tail`) — which is exactly the
+//!   late-joiner stream and therefore always a consistent restart.
+//!   Repeated overflow re-coalesces, so a lagging subscriber's memory
+//!   stays bounded by `max(queue_depth, anchor_interval + 1)` frames
+//!   while it receives superseded patches at most once.
+//! * Control frames (CLOSE, …) are never dropped; a coalesce re-queues
+//!   them after the catch-up bundle.
+//!
+//! Writers that hit a dead socket mark themselves dead and are pruned
+//! on the next publish. [`Relay::stop`] waits briefly for queues to
+//! drain, then shuts the sockets down, so a stalled subscriber cannot
+//! wedge shutdown (it may lose in-flight frames — it was going to
+//! resync from an anchor anyway).
 
 use super::tcp::{self, kind, Frame};
 use anyhow::Result;
-use std::net::{TcpListener, TcpStream};
-use std::sync::{Arc, Mutex};
+use std::collections::VecDeque;
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Default bound on a subscriber's outbound queue, in frames.
+pub const DEFAULT_QUEUE_DEPTH: usize = 64;
+
+struct SubQueue {
+    /// Frames are `Arc`-shared across subscribers/tail, so enqueueing
+    /// (and coalescing) is pointer bumps, not payload copies, under the
+    /// shared lock.
+    q: VecDeque<Arc<Frame>>,
+    dead: bool,
+    /// Frames dropped/superseded for this subscriber by coalescing.
+    dropped: u64,
+}
+
+type Chan = Arc<(Mutex<SubQueue>, Condvar)>;
+
+struct SubHandle {
+    chan: Chan,
+    /// Clone of the subscriber socket, kept so `stop()` can unblock a
+    /// writer stuck in `write`.
+    stream: TcpStream,
+    writer: Option<std::thread::JoinHandle<()>>,
+}
 
 struct Shared {
-    subscribers: Vec<TcpStream>,
-    last_anchor: Option<Frame>,
+    subs: Vec<SubHandle>,
+    last_anchor: Option<Arc<Frame>>,
     /// Patches since the last anchor, in order.
-    tail: Vec<Frame>,
+    tail: Vec<Arc<Frame>>,
+    queue_depth: usize,
+    /// Total coalescing events across subscribers (observability).
+    coalesced: u64,
 }
 
 /// Relay server handle.
@@ -23,29 +83,40 @@ pub struct Relay {
     pub port: u16,
     shared: Arc<Mutex<Shared>>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
-    stop: Arc<std::sync::atomic::AtomicBool>,
+    stop: Arc<AtomicBool>,
 }
 
 impl Relay {
-    /// Start a relay on an ephemeral localhost port.
+    /// Start a relay on an ephemeral localhost port with the default
+    /// queue depth.
     pub fn start() -> Result<Relay> {
+        Relay::start_with_depth(DEFAULT_QUEUE_DEPTH)
+    }
+
+    /// Start with an explicit per-subscriber queue bound (≥ 1).
+    pub fn start_with_depth(queue_depth: usize) -> Result<Relay> {
         let (listener, port) = tcp::listen_local()?;
         listener.set_nonblocking(true)?;
         let shared = Arc::new(Mutex::new(Shared {
-            subscribers: Vec::new(),
+            subs: Vec::new(),
             last_anchor: None,
             tail: Vec::new(),
+            queue_depth: queue_depth.max(1),
+            coalesced: 0,
         }));
-        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let stop = Arc::new(AtomicBool::new(false));
         let accept_thread = Some(spawn_accept(listener, shared.clone(), stop.clone()));
         Ok(Relay { port, shared, accept_thread, stop })
     }
 
     /// Publish a frame to all current subscribers (and remember anchors
-    /// for late joiners). Called by the trainer-side connection pump or
-    /// directly in-process.
+    /// + tail for late joiners and catch-up). Never blocks on a
+    /// subscriber socket: enqueue only, with the coalescing policy
+    /// above.
     pub fn publish(&self, frame: Frame) {
-        let mut sh = self.shared.lock().unwrap();
+        let frame = Arc::new(frame);
+        let mut guard = self.shared.lock().unwrap();
+        let sh: &mut Shared = &mut guard;
         match frame.kind {
             kind::ANCHOR => {
                 sh.last_anchor = Some(frame.clone());
@@ -54,50 +125,168 @@ impl Relay {
             kind::PATCH => sh.tail.push(frame.clone()),
             _ => {}
         }
-        sh.subscribers.retain_mut(|s| tcp::write_frame(s, &frame).is_ok());
+        let Shared { subs, last_anchor, tail, queue_depth, coalesced } = sh;
+        let depth = *queue_depth;
+        subs.retain_mut(|sub| {
+            let (lock, cv) = &*sub.chan;
+            let mut q = lock.lock().unwrap();
+            if q.dead {
+                drop(q);
+                if let Some(h) = sub.writer.take() {
+                    let _ = h.join();
+                }
+                return false;
+            }
+            match frame.kind {
+                kind::ANCHOR => {
+                    // the anchor supersedes everything queued before it
+                    q.dropped += q.q.len() as u64;
+                    q.q.clear();
+                    q.q.push_back(frame.clone());
+                }
+                kind::PATCH if q.q.len() >= depth => {
+                    // slow subscriber: swap the queue for the canonical
+                    // catch-up bundle (anchor + tail), keeping control
+                    // frames; superseded patches are dropped once
+                    *coalesced += 1;
+                    let keep: Vec<Arc<Frame>> = q
+                        .q
+                        .iter()
+                        .filter(|f| f.kind != kind::PATCH && f.kind != kind::ANCHOR)
+                        .cloned()
+                        .collect();
+                    q.dropped += (q.q.len() - keep.len()) as u64;
+                    q.q.clear();
+                    if let Some(a) = last_anchor.as_ref() {
+                        q.q.push_back(a.clone());
+                    }
+                    for p in tail.iter() {
+                        q.q.push_back(p.clone());
+                    }
+                    q.q.extend(keep);
+                }
+                _ => q.q.push_back(frame.clone()),
+            }
+            cv.notify_one();
+            true
+        });
     }
 
+    /// Live (non-dead) subscriber connections.
     pub fn subscriber_count(&self) -> usize {
-        self.shared.lock().unwrap().subscribers.len()
+        let sh = self.shared.lock().unwrap();
+        sh.subs.iter().filter(|s| !s.chan.0.lock().unwrap().dead).count()
     }
 
+    /// Total coalescing (catch-up) events so far, across subscribers.
+    pub fn coalesced_catchups(&self) -> u64 {
+        self.shared.lock().unwrap().coalesced
+    }
+
+    /// Frames dropped as superseded across current subscribers.
+    pub fn dropped_frames(&self) -> u64 {
+        let sh = self.shared.lock().unwrap();
+        sh.subs.iter().map(|s| s.chan.0.lock().unwrap().dropped).sum()
+    }
+
+    /// Graceful-best-effort shutdown: waits briefly for queues to
+    /// drain, then closes subscriber sockets (unblocking any stalled
+    /// writer) and joins all threads.
     pub fn stop(mut self) {
-        self.stop.store(true, std::sync::atomic::Ordering::SeqCst);
+        self.stop.store(true, Ordering::SeqCst);
+        // join the accept thread FIRST (it polls the stop flag every
+        // ~5ms), so no subscriber can register after we drain the list
+        // — otherwise its writer thread would leak
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
         }
+        let subs = {
+            let mut sh = self.shared.lock().unwrap();
+            std::mem::take(&mut sh.subs)
+        };
+        for mut sub in subs {
+            let (lock, cv) = &*sub.chan;
+            for _ in 0..100 {
+                let q = lock.lock().unwrap();
+                if q.q.is_empty() || q.dead {
+                    break;
+                }
+                drop(q);
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            }
+            lock.lock().unwrap().dead = true;
+            cv.notify_all();
+            let _ = sub.stream.shutdown(Shutdown::Both);
+            if let Some(h) = sub.writer.take() {
+                let _ = h.join();
+            }
+        }
     }
+}
+
+/// Writer thread: drains one subscriber's queue onto its socket. Only
+/// this thread ever blocks on the socket, so a stalled subscriber
+/// cannot delay anyone else.
+fn spawn_writer(
+    mut stream: TcpStream,
+    chan: Chan,
+    stop: Arc<AtomicBool>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || loop {
+        let frame = {
+            let (lock, cv) = &*chan;
+            let mut q = lock.lock().unwrap();
+            loop {
+                if q.dead {
+                    return;
+                }
+                if let Some(f) = q.q.pop_front() {
+                    break f;
+                }
+                if stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                q = cv.wait_timeout(q, std::time::Duration::from_millis(20)).unwrap().0;
+            }
+        };
+        if tcp::write_frame(&mut stream, &frame).is_err() {
+            let (lock, _) = &*chan;
+            lock.lock().unwrap().dead = true;
+            return;
+        }
+    })
 }
 
 fn spawn_accept(
     listener: TcpListener,
     shared: Arc<Mutex<Shared>>,
-    stop: Arc<std::sync::atomic::AtomicBool>,
+    stop: Arc<AtomicBool>,
 ) -> std::thread::JoinHandle<()> {
     std::thread::spawn(move || loop {
-        if stop.load(std::sync::atomic::Ordering::SeqCst) {
+        if stop.load(Ordering::SeqCst) {
             return;
         }
         match listener.accept() {
-            Ok((mut stream, _)) => {
+            Ok((stream, _)) => {
                 stream.set_nodelay(true).ok();
-                // catch-up: send last anchor + tail before live frames
+                let clone = match stream.try_clone() {
+                    Ok(c) => c,
+                    Err(_) => continue,
+                };
                 let mut sh = shared.lock().unwrap();
-                let mut ok = true;
+                // catch-up preload: anchor + tail; the writer thread
+                // delivers it, so a slow joiner cannot stall accept
+                let mut q = VecDeque::new();
                 if let Some(a) = &sh.last_anchor {
-                    ok = tcp::write_frame(&mut stream, a).is_ok();
+                    q.push_back(a.clone());
                 }
-                if ok {
-                    for p in &sh.tail {
-                        if tcp::write_frame(&mut stream, p).is_err() {
-                            ok = false;
-                            break;
-                        }
-                    }
+                for p in &sh.tail {
+                    q.push_back(p.clone());
                 }
-                if ok {
-                    sh.subscribers.push(stream);
-                }
+                let chan: Chan =
+                    Arc::new((Mutex::new(SubQueue { q, dead: false, dropped: 0 }), Condvar::new()));
+                let writer = spawn_writer(stream, chan.clone(), stop.clone());
+                sh.subs.push(SubHandle { chan, stream: clone, writer: Some(writer) });
             }
             Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 std::thread::sleep(std::time::Duration::from_millis(5));
@@ -161,14 +350,51 @@ mod tests {
                 std::thread::sleep(std::time::Duration::from_millis(5));
             }
         } // dropped
-        // publishing enough data eventually hits the broken pipe and prunes
-        for _ in 0..50 {
+        // publish until the writer hits the broken pipe and the dead
+        // entry is pruned on a subsequent publish
+        let mut pruned = false;
+        for _ in 0..400 {
             relay.publish(Frame { kind: kind::PATCH, payload: vec![0; 1 << 16] });
             if relay.subscriber_count() == 0 {
+                pruned = true;
                 break;
             }
+            std::thread::sleep(std::time::Duration::from_millis(5));
         }
-        assert_eq!(relay.subscriber_count(), 0);
+        assert!(pruned, "dead subscriber was never pruned");
+        relay.stop();
+    }
+
+    #[test]
+    fn anchor_supersedes_queued_patches() {
+        // a subscriber that never reads: once its socket buffers fill,
+        // patches queue up, and the next anchor replaces them instead
+        // of letting them accumulate
+        let relay = Relay::start_with_depth(16).unwrap();
+        let conn = tcp::connect_local(relay.port).unwrap();
+        for _ in 0..200 {
+            if relay.subscriber_count() == 1 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        relay.publish(Frame { kind: kind::ANCHOR, payload: vec![1u8; 1 << 16] });
+        // 20 MB of patches against a non-reading subscriber: far more
+        // than kernel send+recv buffering, so the writer blocks and the
+        // queue holds at least one frame when the anchor arrives
+        for i in 0..10u8 {
+            relay.publish(Frame { kind: kind::PATCH, payload: vec![10 + i; 2 << 20] });
+        }
+        relay.publish(Frame { kind: kind::ANCHOR, payload: vec![2u8; 1 << 16] });
+        {
+            let sh = relay.shared.lock().unwrap();
+            let q = sh.subs[0].chan.0.lock().unwrap();
+            assert_eq!(q.q.len(), 1, "anchor must clear the queue");
+            assert_eq!(q.q[0].kind, kind::ANCHOR);
+            assert_eq!(q.q[0].payload[0], 2);
+            assert!(q.dropped >= 1, "superseded patches must be counted");
+        }
+        drop(conn);
         relay.stop();
     }
 }

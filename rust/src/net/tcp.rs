@@ -18,16 +18,44 @@ pub struct Frame {
 
 /// Frame kinds used by the live-sync protocol.
 pub mod kind {
-    /// Publisher → relay/worker: a patch container.
+    /// Publisher → relay/worker: a patch container (whole-step v1/v2,
+    /// or one v3 shard frame of a sharded step — the container header
+    /// is self-describing, see `sparse::container::peek_meta`).
     pub const PATCH: u8 = 1;
     /// Publisher → relay/worker: a full anchor object.
     pub const ANCHOR: u8 = 2;
     /// Worker → publisher: subscribe (payload = last known step, u64 LE).
     pub const SUBSCRIBE: u8 = 3;
-    /// Acknowledgement (payload = step u64 LE).
+    /// Acknowledgement (payload = step u64 LE, or step u64 ++ shard
+    /// u32 for ACK-per-shard; see [`super::shard_ack_payload`]).
     pub const ACK: u8 = 4;
     /// Orderly shutdown.
     pub const CLOSE: u8 = 5;
+    /// Worker → publisher: negative acknowledgement for one shard
+    /// frame (payload = step u64 ++ shard u32 LE); the publisher
+    /// re-sends just that shard.
+    pub const NACK: u8 = 6;
+}
+
+/// Payload for an ACK/NACK addressing one shard of a step.
+pub fn shard_ack_payload(step: u64, shard: u32) -> Vec<u8> {
+    let mut p = Vec::with_capacity(12);
+    p.extend_from_slice(&step.to_le_bytes());
+    p.extend_from_slice(&shard.to_le_bytes());
+    p
+}
+
+/// Decode an ACK/NACK payload. Legacy 8-byte step-only ACKs decode
+/// with shard 0.
+pub fn parse_shard_ack(payload: &[u8]) -> Result<(u64, u32)> {
+    match payload.len() {
+        8 => Ok((u64::from_le_bytes(payload.try_into().unwrap()), 0)),
+        12 => Ok((
+            u64::from_le_bytes(payload[0..8].try_into().unwrap()),
+            u32::from_le_bytes(payload[8..12].try_into().unwrap()),
+        )),
+        n => bail!("bad ack payload length {}", n),
+    }
 }
 
 pub fn write_frame(stream: &mut TcpStream, frame: &Frame) -> Result<()> {
@@ -90,6 +118,14 @@ mod tests {
         let ack = read_frame(&mut c).unwrap();
         assert_eq!(ack.kind, kind::ACK);
         assert_eq!(server.join().unwrap(), payload);
+    }
+
+    #[test]
+    fn shard_ack_roundtrip() {
+        let p = shard_ack_payload(77, 3);
+        assert_eq!(parse_shard_ack(&p).unwrap(), (77, 3));
+        assert_eq!(parse_shard_ack(&9u64.to_le_bytes()).unwrap(), (9, 0));
+        assert!(parse_shard_ack(&[1, 2, 3]).is_err());
     }
 
     #[test]

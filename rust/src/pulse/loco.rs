@@ -73,6 +73,7 @@ pub fn payload_bytes(
         // container stays v1-framed (chunk_elems = 0) on the wire
         result_hash: String::new(),
         chunk_elems: 0,
+        ..Default::default()
     };
     let layout = crate::sparse::synthetic_layout(total_params as usize, 1 << 16);
     let obj = container::encode(

@@ -29,19 +29,60 @@
 //! from a downloaded anchor — a parallel chunked build). Legacy v1
 //! containers and plain-hex anchor markers verify via the scalar hash,
 //! so stores written before the hash tree still synchronize.
+//!
+//! # Sharded pipelined fan-out
+//!
+//! With `Publisher::shard_count > 1` (or a [`ShardedEncoder`] driven
+//! directly, as the TCP relay path does), each step is split into S
+//! contiguous element ranges aligned to hash-tree chunk boundaries
+//! ([`crate::sparse::hashtree::shard_ranges`]). Per shard, the fused
+//! diff+gather, the container encode+compress, and the store upload all
+//! run on the [`crate::util::pool`] worker pool, so encode latency of
+//! one shard hides behind the upload of another. Each shard travels as
+//! its own v3 container frame carrying `(shard_index, shard_count,
+//! elem_offset, elem_len)`, its **subtree root** over exactly its
+//! element range, and the step's global root
+//! ([`crate::sparse::container`]).
+//!
+//! Wire/store layout for a sharded step `t`:
+//!
+//! ```text
+//!   delta_000000t.s000.bin … delta_000000t.s00{S-1}.bin   (shard frames)
+//!   delta_ready_t = "v3:<S>:<global_root_hex>"            (commit marker)
+//! ```
+//!
+//! The consumer fetches and decodes shard frames on the pool, applies
+//! them in parallel
+//! ([`crate::sparse::hashtree::HashTree::apply_and_rehash_shards`]),
+//! and verifies each shard's subtree root independently. A shard that
+//! fails verification is restored *exactly* (values + chunk digests)
+//! and **re-fetched alone** — `SyncStats::shard_refetches` — while the
+//! other shards stay applied; only a second failure abandons the step
+//! to the anchor slow path. The assembled step is then bound end to end
+//! by comparing the tree root against the marker's global root, so
+//! sharded apply is bit-identical to the unsharded path by
+//! construction and by test.
 
 use crate::codec::Codec;
 use crate::sparse::container::{self, EncodeOpts, Patch, Values};
-use crate::sparse::hashtree::{HashTree, DEFAULT_CHUNK_ELEMS};
+use crate::sparse::hashtree::{self, HashTree, ShardPatchRef, DEFAULT_CHUNK_ELEMS};
 use crate::sparse::{self, TensorShape};
 use crate::storage::retention::{self, Inventory};
 use crate::storage::ObjectStore;
-use crate::util::{sha256_hex, u16_as_bytes};
+use crate::util::{pool, sha256_hex, u16_as_bytes};
 use anyhow::{bail, Context, Result};
+
+/// Upper bound on the shard count accepted from untrusted markers and
+/// headers (a corrupted marker must not drive per-shard allocations).
+pub const MAX_SHARDS: u32 = 4096;
 
 /// Key scheme under the publisher prefix.
 fn delta_key(step: u64) -> String {
     format!("delta_{:08}.bin", step)
+}
+/// Shard frame object key for a sharded step.
+fn delta_shard_key(step: u64, shard: u32) -> String {
+    format!("delta_{:08}.s{:03}.bin", step, shard)
 }
 fn delta_ready_key(step: u64) -> String {
     format!("delta_ready_{}", step)
@@ -73,6 +114,18 @@ fn parse_anchor_marker(s: &str) -> Option<(usize, &str)> {
     Some((chunk, root))
 }
 
+/// Sharded delta ready-marker: `v3:<shard_count>:<global_root_hex>`.
+/// Unsharded delta markers remain the bare result-hash hex.
+fn parse_sharded_marker(s: &str) -> Option<(u32, &str)> {
+    let rest = s.strip_prefix("v3:")?;
+    let (count, root) = rest.split_once(':')?;
+    let count: u32 = count.parse().ok()?;
+    if !(2..=MAX_SHARDS).contains(&count) || root.len() != 64 {
+        return None;
+    }
+    Some((count, root))
+}
+
 /// Publisher-side statistics for one published step.
 #[derive(Debug, Clone, Default)]
 pub struct PublishStats {
@@ -83,6 +136,161 @@ pub struct PublishStats {
     pub anchor_bytes: u64,
     pub sparsity: f64,
     pub encode_secs: f64,
+    /// Effective shards this step was published as (1 = unsharded).
+    pub shard_count: usize,
+    /// Per-shard container bytes (one entry per shard, index order).
+    pub shard_bytes: Vec<u64>,
+    /// Per-shard encode+compress seconds (wall, on the pool).
+    pub shard_encode_secs: Vec<f64>,
+}
+
+/// One encoded shard frame of a step.
+#[derive(Debug, Clone)]
+pub struct ShardFrame {
+    pub shard_index: u32,
+    pub elem_offset: u64,
+    pub elem_len: u64,
+    pub nnz: usize,
+    /// The container object (v2 for a single-shard step, v3 otherwise).
+    pub bytes: Vec<u8>,
+    pub encode_secs: f64,
+}
+
+/// A fully encoded step: one frame per shard. With `shard_count == 1`
+/// the single frame is byte-identical to the classic unsharded v2
+/// container.
+#[derive(Debug, Clone)]
+pub struct EncodedStep {
+    pub step: u64,
+    /// Global hash-tree root after this step applies.
+    pub root: String,
+    pub nnz: usize,
+    pub frames: Vec<ShardFrame>,
+}
+
+/// Trainer-side sharded patch encoder: owns the previously published
+/// BF16 view and its hash tree, and turns each new view into one
+/// container frame per shard (per-shard diff+gather and
+/// encode+compress run on the worker pool). [`Publisher`] drives it
+/// against the object store; the live TCP path
+/// (`examples/live_sync.rs`, the relay integration tests) drives it
+/// directly and ships the frames as PATCH messages.
+pub struct ShardedEncoder {
+    prev: Vec<u16>,
+    prev_step: u64,
+    tree: HashTree,
+}
+
+impl ShardedEncoder {
+    /// Start from the view published at `start_step` (builds the tree).
+    pub fn new(initial: Vec<u16>, start_step: u64) -> ShardedEncoder {
+        let tree = HashTree::build(&initial, DEFAULT_CHUNK_ELEMS);
+        ShardedEncoder { prev: initial, prev_step: start_step, tree }
+    }
+
+    pub fn current(&self) -> &[u16] {
+        &self.prev
+    }
+
+    pub fn current_step(&self) -> u64 {
+        self.prev_step
+    }
+
+    pub fn tree(&self) -> &HashTree {
+        &self.tree
+    }
+
+    /// Encode step `step` (must be `current_step() + 1`) for view
+    /// `new`. On success the encoder advances to `new`; on error it is
+    /// left consistent at the previous step.
+    pub fn encode_step(
+        &mut self,
+        step: u64,
+        new: &[u16],
+        layout: &[TensorShape],
+        opts: EncodeOpts,
+        shard_count: usize,
+    ) -> Result<EncodedStep> {
+        if new.len() != self.prev.len() {
+            bail!("checkpoint size changed ({} -> {})", self.prev.len(), new.len());
+        }
+        if step != self.prev_step + 1 {
+            bail!("publish steps must be consecutive ({} after {})", step, self.prev_step);
+        }
+        // cap at the wire limit consumers accept, or a marker could
+        // advertise a shard count no consumer will ever apply
+        let shard_count = shard_count.clamp(1, MAX_SHARDS as usize);
+        let ranges = hashtree::shard_ranges(new.len(), self.tree.chunk_elems(), shard_count);
+        // phase 1: fused diff+gather. Unsharded keeps the globally
+        // parallel scan; sharded runs one serial scan per shard on its
+        // own pool worker (shard-level parallelism without nesting a
+        // second thread fan-out inside each worker).
+        let prev = &self.prev;
+        let parts: Vec<(Vec<u64>, Vec<u16>)> = if ranges.len() == 1 {
+            vec![sparse::diff_gather_bf16(prev, new)]
+        } else {
+            pool::par_map(ranges.clone(), |_, r| sparse::diff_gather_bf16_range(prev, new, r))
+        };
+        // phase 2: one incremental tree update over all touched chunks,
+        // then read the global + per-shard roots
+        let all_idx: Vec<u64> =
+            parts.iter().flat_map(|(idx, _)| idx.iter().copied()).collect();
+        let nnz = all_idx.len();
+        self.tree.update(new, &all_idx);
+        drop(all_idx);
+        let root = self.tree.root_hex();
+        let s_eff = ranges.len() as u32;
+        let mut patches = Vec::with_capacity(parts.len());
+        for (i, ((indices, values), r)) in parts.into_iter().zip(ranges.iter()).enumerate() {
+            let mut p = Patch {
+                step,
+                base_step: self.prev_step,
+                total_params: new.len() as u64,
+                indices,
+                values: Values::Bf16(values),
+                result_hash: root.clone(),
+                chunk_elems: self.tree.chunk_elems() as u64,
+                ..Default::default()
+            };
+            p.elem_offset = r.start as u64;
+            p.elem_len = (r.end - r.start) as u64;
+            if s_eff > 1 {
+                p.shard_index = i as u32;
+                p.shard_count = s_eff;
+                p.shard_root = self.tree.subtree_root_hex(r.start, r.end);
+            }
+            patches.push(p);
+        }
+        // phase 3: per-shard container encode+compress on the pool
+        let encoded: Vec<Result<ShardFrame>> = pool::par_map(patches, |i, p| {
+            let t = crate::util::Stopwatch::start();
+            let bytes = container::encode(&p, layout, opts)?;
+            Ok(ShardFrame {
+                shard_index: i as u32,
+                elem_offset: p.elem_offset,
+                elem_len: p.elem_len,
+                nnz: p.indices.len(),
+                bytes,
+                encode_secs: t.secs(),
+            })
+        });
+        let mut frames = Vec::with_capacity(encoded.len());
+        for fr in encoded {
+            match fr {
+                Ok(f) => frames.push(f),
+                Err(e) => {
+                    // the tree already reflects `new` but `prev` does
+                    // not; rebuild from `prev` so an abandoned encode
+                    // leaves the encoder consistent (error path only)
+                    self.tree = HashTree::build(&self.prev, self.tree.chunk_elems());
+                    return Err(e);
+                }
+            }
+        }
+        self.prev.copy_from_slice(new);
+        self.prev_step = step;
+        Ok(EncodedStep { step, root, nnz, frames })
+    }
 }
 
 /// Trainer-side publisher (Alg. 5 `PublishCheckpoint`).
@@ -93,11 +301,11 @@ pub struct Publisher {
     pub opts: EncodeOpts,
     /// Anchor interval k (paper uses 50).
     pub anchor_interval: u64,
-    /// Previous published BF16 view W_{t-1}.
-    prev: Vec<u16>,
-    prev_step: u64,
-    /// Chunked hash tree over `prev`, updated incrementally per publish.
-    tree: HashTree,
+    /// Shards per published step (1 = classic single-frame publish;
+    /// shard ranges align to hash-tree chunk boundaries).
+    pub shard_count: usize,
+    /// Previous published view + hash tree, advanced per publish.
+    enc: ShardedEncoder,
     /// Test hook: force the next delta upload to fail (§J.5 recovery).
     pub fail_next_delta: bool,
 }
@@ -111,20 +319,24 @@ impl Publisher {
         initial: Vec<u16>,
         anchor_interval: u64,
     ) -> Result<Publisher> {
-        let tree = HashTree::build(&initial, DEFAULT_CHUNK_ELEMS);
         let mut p = Publisher {
             store,
             prefix: prefix.trim_end_matches('/').to_string(),
             layout,
             opts: EncodeOpts::default(),
             anchor_interval: anchor_interval.max(1),
-            prev: initial,
-            prev_step: 0,
-            tree,
+            shard_count: 1,
+            enc: ShardedEncoder::new(initial, 0),
             fail_next_delta: false,
         };
         p.upload_anchor(0)?;
         Ok(p)
+    }
+
+    /// Builder-style shard count override (clamped to [`MAX_SHARDS`]).
+    pub fn with_shards(mut self, shards: usize) -> Publisher {
+        self.shard_count = shards.clamp(1, MAX_SHARDS as usize);
+        self
     }
 
     fn key(&self, k: String) -> String {
@@ -132,79 +344,52 @@ impl Publisher {
     }
 
     pub fn current_step(&self) -> u64 {
-        self.prev_step
+        self.enc.current_step()
     }
 
     pub fn current_weights(&self) -> &[u16] {
-        &self.prev
+        self.enc.current()
     }
 
     fn upload_anchor(&mut self, step: u64) -> Result<u64> {
         // Anchor = zstd-1-compressed raw BF16 bytes + 16-byte header.
-        let raw = u16_as_bytes(&self.prev);
+        let raw = u16_as_bytes(self.enc.current());
         let comp = Codec::Zstd1.compress(raw)?;
         let mut obj = Vec::with_capacity(comp.len() + 16);
         obj.extend_from_slice(b"PLSA");
         obj.extend_from_slice(&step.to_le_bytes());
-        obj.extend_from_slice(&(self.prev.len() as u64).to_le_bytes());
+        obj.extend_from_slice(&(self.enc.current().len() as u64).to_le_bytes());
         obj.extend_from_slice(&comp);
         self.store.put(&self.key(anchor_key(step)), &obj)?;
         // anchor ready marker carries the hash-tree geometry + root
         self.store
-            .put(&self.key(anchor_ready_key(step)), anchor_marker(&self.tree).as_bytes())?;
+            .put(&self.key(anchor_ready_key(step)), anchor_marker(self.enc.tree()).as_bytes())?;
         Ok(obj.len() as u64)
     }
 
     /// Publish optimizer step `step` whose BF16 view is `new`.
     ///
-    /// Uploads the sparse delta first (steady-state critical path), then
-    /// the anchor if `step % k == 0` (paper §J.1 "concurrent uploads").
-    /// If the delta upload fails, falls back to publishing a full anchor
-    /// for this step (§J.5).
+    /// Encodes per shard on the worker pool, uploads the shard frames
+    /// (also on the pool, so uploads overlap), then commits the
+    /// ready marker; the anchor follows if `step % k == 0` (paper §J.1
+    /// "concurrent uploads"). If the delta upload fails, falls back to
+    /// publishing a full anchor for this step (§J.5).
     pub fn publish(&mut self, step: u64, new: &[u16]) -> Result<PublishStats> {
-        if new.len() != self.prev.len() {
-            bail!("checkpoint size changed ({} -> {})", self.prev.len(), new.len());
-        }
-        if step != self.prev_step + 1 {
-            bail!("publish steps must be consecutive ({} after {})", step, self.prev_step);
-        }
         let t = crate::util::Stopwatch::start();
-        // fused diff+gather, then rehash only the touched chunks: the
-        // whole encode front half is O(nnz), not O(total_params)
-        let (indices, values) = sparse::diff_gather_bf16(&self.prev, new);
-        self.tree.update(new, &indices);
-        let result_hash = self.tree.root_hex();
-        let patch = Patch {
-            step,
-            base_step: self.prev_step,
-            total_params: new.len() as u64,
-            indices,
-            values: Values::Bf16(values),
-            result_hash,
-            chunk_elems: self.tree.chunk_elems() as u64,
-        };
-        let obj = match container::encode(&patch, &self.layout, self.opts) {
-            Ok(obj) => obj,
-            Err(e) => {
-                // the tree already reflects `new` but `prev` does not;
-                // rebuild from `prev` so an abandoned publish leaves the
-                // publisher consistent (error path only, O(total))
-                self.tree = HashTree::build(&self.prev, self.tree.chunk_elems());
-                return Err(e);
-            }
-        };
+        let encoded =
+            self.enc.encode_step(step, new, &self.layout, self.opts, self.shard_count)?;
         let mut stats = PublishStats {
             step,
-            nnz: patch.indices.len(),
+            nnz: encoded.nnz,
             total: new.len(),
-            patch_bytes: obj.len() as u64,
+            patch_bytes: encoded.frames.iter().map(|f| f.bytes.len() as u64).sum(),
             anchor_bytes: 0,
-            sparsity: sparse::sparsity(patch.indices.len(), new.len()),
+            sparsity: sparse::sparsity(encoded.nnz, new.len()),
             encode_secs: 0.0,
+            shard_count: encoded.frames.len(),
+            shard_bytes: encoded.frames.iter().map(|f| f.bytes.len() as u64).collect(),
+            shard_encode_secs: encoded.frames.iter().map(|f| f.encode_secs).collect(),
         };
-
-        self.prev.copy_from_slice(new);
-        self.prev_step = step;
 
         let delta_failed = std::mem::take(&mut self.fail_next_delta);
         if delta_failed {
@@ -214,9 +399,27 @@ impl Publisher {
             stats.encode_secs = t.secs();
             return Ok(stats);
         }
-        self.store.put(&self.key(delta_key(step)), &obj)?;
-        self.store
-            .put(&self.key(delta_ready_key(step)), patch.result_hash.as_bytes())?;
+        if encoded.frames.len() == 1 {
+            self.store.put(&self.key(delta_key(step)), &encoded.frames[0].bytes)?;
+            self.store
+                .put(&self.key(delta_ready_key(step)), encoded.root.as_bytes())?;
+        } else {
+            // pipelined fan-out: each shard frame uploads on its own
+            // pool worker, overlapping store latency across shards; the
+            // marker commits only after every frame landed
+            let store = &self.store;
+            let prefix = &self.prefix;
+            let uploads: Vec<(u32, &Vec<u8>)> =
+                encoded.frames.iter().map(|f| (f.shard_index, &f.bytes)).collect();
+            let results: Vec<Result<()>> = pool::par_map(uploads, |_, (i, bytes)| {
+                store.put(&format!("{}/{}", prefix, delta_shard_key(step, i)), bytes)
+            });
+            for r in results {
+                r?;
+            }
+            let marker = format!("v3:{}:{}", encoded.frames.len(), encoded.root);
+            self.store.put(&self.key(delta_ready_key(step)), marker.as_bytes())?;
+        }
         if step % self.anchor_interval == 0 {
             stats.anchor_bytes = self.upload_anchor(step)?;
         }
@@ -243,6 +446,9 @@ pub struct SyncStats {
     /// slow-path base anchor plus any §J.5 anchor that replaced a
     /// failed delta upload.
     pub anchors_restored: usize,
+    /// Shard frames re-fetched after a decode failure or a subtree-root
+    /// mismatch (the other shards of the step stay applied).
+    pub shard_refetches: usize,
     pub verified: bool,
 }
 
@@ -418,13 +624,24 @@ impl Consumer {
         stats: &mut SyncStats,
     ) -> Result<(Vec<u16>, Option<HashTree>)> {
         for t in from + 1..=to {
-            if !self.store.exists(&self.key(delta_ready_key(t))) {
-                // §J.5: a failed delta upload was replaced by an anchor.
-                let (aw, atree, bytes) = self.download_anchor(t)?;
-                w = aw;
-                tree = atree;
-                stats.bytes_downloaded += bytes;
-                stats.anchors_restored += 1;
+            let marker = match self.store.get(&self.key(delta_ready_key(t))) {
+                Ok(m) => m,
+                Err(_) => {
+                    // §J.5: a failed delta upload was replaced by an
+                    // anchor.
+                    let (aw, atree, bytes) = self.download_anchor(t)?;
+                    w = aw;
+                    tree = atree;
+                    stats.bytes_downloaded += bytes;
+                    stats.anchors_restored += 1;
+                    continue;
+                }
+            };
+            if let Some((count, root)) =
+                parse_sharded_marker(&String::from_utf8_lossy(&marker))
+            {
+                self.apply_sharded(t, count, root, &mut w, &mut tree, stats)?;
+                stats.patches_applied += 1;
                 continue;
             }
             let obj = self.store.get(&self.key(delta_key(t)))?;
@@ -437,6 +654,19 @@ impl Consumer {
                 Values::Bf16(v) => v,
                 _ => bail!("weight patch carries non-bf16 values"),
             };
+            // a corrupted-but-decodable index stream must degrade into
+            // this chain erroring (→ slow path), never an out-of-bounds
+            // panic inside the apply
+            let mut prev_idx: Option<u64> = None;
+            for &i in &patch.indices {
+                if i as usize >= w.len() {
+                    bail!("patch {} index {} out of bounds ({})", t, i, w.len());
+                }
+                if prev_idx.is_some_and(|p| i <= p) {
+                    bail!("patch {} index stream not strictly sorted", t);
+                }
+                prev_idx = Some(i);
+            }
             if patch.chunk_elems > 0 {
                 // v2: fused apply + chunk rehash, O(nnz · chunk) verify.
                 // Rebuild the tree only when absent or its geometry
@@ -463,6 +693,213 @@ impl Consumer {
         }
         Ok((w, tree))
     }
+
+    fn fetch_shard(&self, step: u64, shard: u32, stats: &mut SyncStats) -> Result<Vec<u8>> {
+        let obj = self
+            .store
+            .get(&self.key(delta_shard_key(step, shard)))
+            .with_context(|| format!("shard {} of step {}", shard, step))?;
+        stats.bytes_downloaded += obj.len() as u64;
+        Ok(obj)
+    }
+
+    /// Apply one sharded step: fetch + decode all shard frames (decode
+    /// on the pool), apply them in parallel with per-shard subtree
+    /// verification, re-fetch any shard that fails exactly once, then
+    /// bind the assembled step to the marker's global root. Any
+    /// unrecoverable failure propagates, sending the caller to the
+    /// anchor slow path.
+    fn apply_sharded(
+        &self,
+        step: u64,
+        shard_count: u32,
+        expect_root: &str,
+        w: &mut Vec<u16>,
+        tree: &mut Option<HashTree>,
+        stats: &mut SyncStats,
+    ) -> Result<()> {
+        // fetch every shard frame on the pool so store latency overlaps
+        // across shards (the publisher's upload path does the same)
+        let store = &self.store;
+        let prefix = &self.prefix;
+        let fetched: Vec<Result<Vec<u8>>> =
+            pool::par_map((0..shard_count).collect(), |_, i| {
+                store
+                    .get(&format!("{}/{}", prefix, delta_shard_key(step, i)))
+                    .with_context(|| format!("shard {} of step {}", i, step))
+            });
+        let mut objs = Vec::with_capacity(fetched.len());
+        for r in fetched {
+            let obj = r?;
+            stats.bytes_downloaded += obj.len() as u64;
+            objs.push(obj);
+        }
+        let layout = &self.layout;
+        let decoded: Vec<Result<Patch>> =
+            pool::par_map(objs, |_, obj| container::decode(&obj, layout));
+        let mut patches = Vec::with_capacity(decoded.len());
+        for (i, d) in decoded.into_iter().enumerate() {
+            match d {
+                Ok(p) => patches.push(p),
+                Err(_) => {
+                    // transport/store-level corruption: one refetch
+                    stats.shard_refetches += 1;
+                    let obj = self.fetch_shard(step, i as u32, stats)?;
+                    patches.push(container::decode(&obj, layout).with_context(|| {
+                        format!("shard {} of step {} after refetch", i, step)
+                    })?);
+                }
+            }
+        }
+        let ce = validate_shard_set(&patches, step, shard_count, expect_root, w.len())?;
+        let mut ht = match tree.take() {
+            Some(ht) if ht.chunk_elems() == ce && ht.total_elems() == w.len() => ht,
+            _ => HashTree::build(w, ce),
+        };
+        let refs: Vec<ShardPatchRef> = patches.iter().map(shard_ref).collect();
+        let verified = ht.apply_and_rehash_shards(w, &refs);
+        for (i, ok) in verified.iter().enumerate() {
+            if *ok {
+                continue;
+            }
+            // the failed shard was restored exactly; refetch it alone
+            // while every other shard stays applied
+            stats.shard_refetches += 1;
+            let obj = self.fetch_shard(step, i as u32, stats)?;
+            let retry = container::decode(&obj, layout)
+                .with_context(|| format!("shard {} of step {} after refetch", i, step))?;
+            validate_shard_retry(&retry, &patches[i])?;
+            let ok2 = ht.apply_and_rehash_shards(w, &[shard_ref(&retry)]);
+            if !ok2[0] {
+                bail!("shard {} of step {} failed verification after refetch", i, step);
+            }
+        }
+        if ht.root_hex() != expect_root {
+            bail!("assembled shard root mismatch at step {}", step);
+        }
+        *tree = Some(ht);
+        Ok(())
+    }
+}
+
+/// Borrow a validated sharded patch as a hashtree shard apply.
+fn shard_ref(p: &Patch) -> ShardPatchRef<'_> {
+    let values = match &p.values {
+        Values::Bf16(v) => v.as_slice(),
+        // validate_shard_set rejects non-bf16 shards before this runs
+        Values::F32(_) => &[],
+    };
+    ShardPatchRef {
+        elem_lo: p.elem_offset as usize,
+        elem_hi: (p.elem_offset + p.elem_len) as usize,
+        indices: &p.indices,
+        values,
+        expect_root: &p.shard_root,
+    }
+}
+
+/// Validate a decoded shard set against the marker and local state:
+/// complete partition of `0..total` in index order, chunk-aligned,
+/// consistent geometry, strictly sorted in-range indices, and every
+/// frame bound to the same global root. Returns the (shared)
+/// hash-tree chunk size. Anything inconsistent is a hard error — the
+/// caller falls back to the anchor slow path rather than trusting wire
+/// geometry.
+fn validate_shard_set(
+    patches: &[Patch],
+    step: u64,
+    shard_count: u32,
+    expect_root: &str,
+    total: usize,
+) -> Result<usize> {
+    if patches.len() != shard_count as usize {
+        bail!("expected {} shards, decoded {}", shard_count, patches.len());
+    }
+    let ce = patches[0].chunk_elems as usize;
+    let mut next_lo = 0u64;
+    for (i, p) in patches.iter().enumerate() {
+        if p.step != step {
+            bail!("shard {} carries step {}, want {}", i, p.step, step);
+        }
+        if p.shard_count != shard_count || p.shard_index != i as u32 {
+            bail!("shard header mismatch at frame {} of step {}", i, step);
+        }
+        if p.total_params != total as u64 {
+            bail!("shard {} total_params {} != local {}", i, p.total_params, total);
+        }
+        if p.chunk_elems as usize != ce || ce == 0 {
+            bail!("inconsistent hash-tree geometry across shards of step {}", step);
+        }
+        if p.result_hash != expect_root {
+            bail!("shard {} global root disagrees with marker at step {}", i, step);
+        }
+        if p.shard_root.len() != 64 {
+            bail!("shard {} missing subtree root", i);
+        }
+        if !matches!(p.values, Values::Bf16(_)) {
+            bail!("shard {} carries non-bf16 values", i);
+        }
+        if p.elem_offset != next_lo {
+            bail!("shard ranges of step {} do not partition the buffer", step);
+        }
+        if p.elem_offset % ce as u64 != 0 {
+            bail!("shard {} range not chunk-aligned", i);
+        }
+        let hi = p
+            .elem_offset
+            .checked_add(p.elem_len)
+            .ok_or_else(|| anyhow::anyhow!("shard {} range overflows", i))?;
+        if hi > total as u64 || (hi % ce as u64 != 0 && hi != total as u64) {
+            bail!("shard {} range end not chunk-aligned", i);
+        }
+        validate_shard_indices(p)?;
+        next_lo = hi;
+    }
+    if next_lo != total as u64 {
+        bail!("shard ranges of step {} do not cover the buffer", step);
+    }
+    Ok(ce)
+}
+
+/// Strictly sorted indices inside the shard's declared range (protects
+/// the parallel apply, which asserts these invariants, from corrupted
+/// index streams).
+fn validate_shard_indices(p: &Patch) -> Result<()> {
+    let lo = p.elem_offset;
+    let hi = p.elem_offset + p.elem_len;
+    let mut prev: Option<u64> = None;
+    for &i in &p.indices {
+        if i < lo || i >= hi {
+            bail!("shard {} index {} outside range {}..{}", p.shard_index, i, lo, hi);
+        }
+        if let Some(prev) = prev {
+            if i <= prev {
+                bail!("shard {} index stream not strictly sorted", p.shard_index);
+            }
+        }
+        prev = Some(i);
+    }
+    if p.indices.len() != p.values.len() {
+        bail!("shard {} index/value length mismatch", p.shard_index);
+    }
+    Ok(())
+}
+
+/// A refetched shard must describe the same slot as the frame it
+/// replaces (the original geometry already passed partition checks).
+fn validate_shard_retry(retry: &Patch, original: &Patch) -> Result<()> {
+    if retry.step != original.step
+        || retry.shard_index != original.shard_index
+        || retry.shard_count != original.shard_count
+        || retry.elem_offset != original.elem_offset
+        || retry.elem_len != original.elem_len
+        || retry.chunk_elems != original.chunk_elems
+        || retry.result_hash != original.result_hash
+        || !matches!(retry.values, Values::Bf16(_))
+    {
+        bail!("refetched shard {} disagrees with its slot", original.shard_index);
+    }
+    validate_shard_indices(retry)
 }
 
 #[cfg(test)]
@@ -660,6 +1097,7 @@ mod tests {
             values: Values::Bf16(vals),
             result_hash: sha256_hex(u16_as_bytes(&w1)),
             chunk_elems: 0, // v1 container
+            ..Default::default()
         };
         let dobj = container::encode(&patch, &layout, EncodeOpts::default()).unwrap();
         store.put(&format!("sync/{}", delta_key(1)), &dobj).unwrap();
@@ -672,6 +1110,120 @@ mod tests {
         assert!(cs.verified);
         assert_eq!(c.weights.as_ref().unwrap(), &w1);
         assert!(c.tree.is_none(), "v1 chain leaves no tree");
+    }
+
+    #[test]
+    fn sharded_publish_bit_identical_to_unsharded() {
+        // acceptance: sharded apply must produce the same final buffer
+        // and the same hash-tree root as the unsharded path
+        let n = 40_000usize;
+        let store = ObjectStore::temp("pulsesync_shard_eq").unwrap();
+        let layout = synthetic_layout(n, 64);
+        let mut rng = Rng::new(9);
+        let mut r2 = Rng::new(10);
+        let init: Vec<u16> = (0..n)
+            .map(|_| crate::bf16::f32_to_bf16_bits(r2.normal() as f32 * 0.02))
+            .collect();
+        let mut p1 =
+            Publisher::new(store.clone(), "plain", layout.clone(), init.clone(), 50).unwrap();
+        let mut p4 = Publisher::new(store.clone(), "sharded", layout.clone(), init.clone(), 50)
+            .unwrap()
+            .with_shards(4);
+        let mut c1 = Consumer::new(store.clone(), "plain", layout.clone());
+        let mut c4 = Consumer::new(store.clone(), "sharded", layout.clone());
+        c1.synchronize().unwrap();
+        c4.synchronize().unwrap();
+        let mut w = init;
+        for step in 1..=6u64 {
+            perturb(&mut rng, &mut w, 300);
+            let s1 = p1.publish(step, &w).unwrap();
+            let s4 = p4.publish(step, &w).unwrap();
+            assert_eq!(s1.shard_count, 1);
+            assert_eq!(s4.shard_count, 4);
+            assert_eq!(s4.shard_bytes.len(), 4);
+            let r1 = c1.synchronize().unwrap();
+            let r4 = c4.synchronize().unwrap();
+            assert!(r1.verified && r4.verified);
+            assert_eq!(r4.shard_refetches, 0);
+            assert_eq!(c1.weights.as_ref().unwrap(), &w, "plain step {}", step);
+            assert_eq!(c4.weights.as_ref().unwrap(), c1.weights.as_ref().unwrap());
+            assert_eq!(
+                c1.tree.as_ref().unwrap().root_hex(),
+                c4.tree.as_ref().unwrap().root_hex(),
+                "sharded and unsharded roots must agree at step {}",
+                step
+            );
+        }
+        // the sharded store really contains per-shard frames + v3 marker
+        let marker =
+            String::from_utf8(store.get("sharded/delta_ready_6").unwrap()).unwrap();
+        assert!(marker.starts_with("v3:4:"), "marker = {}", marker);
+        for i in 0..4u32 {
+            let obj = store.get(&format!("sharded/{}", delta_shard_key(6, i))).unwrap();
+            let meta = container::peek_meta(&obj).unwrap();
+            assert_eq!(meta.shard_index, i);
+            assert_eq!(meta.shard_count, 4);
+        }
+    }
+
+    #[test]
+    fn sharded_chain_path_catches_up() {
+        let (mut p, mut c, mut w, mut rng) = setup(20_000, 50);
+        p.shard_count = 3;
+        c.synchronize().unwrap();
+        for step in 1..=5u64 {
+            perturb(&mut rng, &mut w, 200);
+            p.publish(step, &w).unwrap();
+        }
+        let cs = c.synchronize().unwrap();
+        assert_eq!(cs.path, SyncPath::Chain);
+        assert_eq!(cs.patches_applied, 5);
+        assert_eq!(c.weights.as_ref().unwrap(), &w);
+        // encoder and consumer agree on the tree end to end
+        assert_eq!(c.tree.as_ref().unwrap().root_hex(), p.enc.tree().root_hex());
+    }
+
+    #[test]
+    fn sharded_corruption_self_heals_via_slow_path() {
+        // persistent corruption of one shard object: the single-shard
+        // refetch sees the same bad bytes, so the step is abandoned and
+        // the consumer recovers from the next anchor (§J.5 pattern)
+        let (mut p, mut c, mut w, mut rng) = setup(20_000, 50);
+        p.shard_count = 4;
+        c.synchronize().unwrap();
+        perturb(&mut rng, &mut w, 200);
+        p.publish(1, &w).unwrap();
+        let key = format!("sync/{}", delta_shard_key(1, 2));
+        let mut obj = p.store.get(&key).unwrap();
+        let len = obj.len();
+        obj[len - 1] ^= 0xFF;
+        p.store.put(&key, &obj).unwrap();
+        perturb(&mut rng, &mut w, 200);
+        p.fail_next_delta = true; // step 2 becomes an anchor (J.5)
+        p.publish(2, &w).unwrap();
+        let cs = c.synchronize().unwrap();
+        assert_eq!(cs.path, SyncPath::Slow);
+        assert!(cs.verified);
+        assert!(cs.shard_refetches >= 1, "the bad shard must be re-fetched");
+        assert_eq!(c.weights.as_ref().unwrap(), &w);
+    }
+
+    #[test]
+    fn single_shard_config_stays_wire_compatible() {
+        // shard_count = 1 must produce exactly the classic v2 object
+        // under the classic key, so old consumers keep working
+        let (mut p, mut c, mut w, mut rng) = setup(6_000, 50);
+        assert_eq!(p.shard_count, 1);
+        c.synchronize().unwrap();
+        perturb(&mut rng, &mut w, 60);
+        p.publish(1, &w).unwrap();
+        let obj = p.store.get(&format!("sync/{}", delta_key(1))).unwrap();
+        assert_eq!(obj[4], container::VERSION, "single-shard stays v2");
+        let marker = String::from_utf8(p.store.get("sync/delta_ready_1").unwrap()).unwrap();
+        assert_eq!(marker.len(), 64, "unsharded marker stays a bare root hex");
+        let cs = c.synchronize().unwrap();
+        assert_eq!(cs.path, SyncPath::Fast);
+        assert_eq!(c.weights.as_ref().unwrap(), &w);
     }
 
     #[test]

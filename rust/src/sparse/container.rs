@@ -1,28 +1,45 @@
 //! Self-describing patch container: the on-wire / on-store object that
 //! PULSESync publishes (paper Alg. 3 + §J.4 integrity verification).
 //!
-//! Layout (v2; v1 omits the `chunk_elems` field):
+//! Layout (v3; v2 omits the shard fields, v1 additionally omits
+//! `chunk_elems`):
 //! ```text
-//!   magic  "PLSP" (4)            version u8 (1 or 2)
+//!   magic  "PLSP" (4)            version u8 (1, 2 or 3)
 //!   kind   u8 (0=bf16 weights, 1=f32 pseudo-gradient)
 //!   format u8 (PatchFormat tag)  codec u8 (Codec tag)
 //!   flags  u8 (bit0: byte-shuffled values)
 //!   step u64 LE     base_step u64 LE
 //!   total_params u64 LE   nnz u64 LE
 //!   raw_len u64 LE (pre-codec payload length)
-//!   chunk_elems u64 LE (v2 only: hash-tree chunk size in elements)
+//!   chunk_elems u64 LE (v2+: hash-tree chunk size in elements)
+//!   -- v3 only (sharded fan-out; see `pulse::sync`) --
+//!   shard_index u32 LE    shard_count u32 LE
+//!   elem_offset u64 LE (first flat element this shard covers)
+//!   elem_len u64 LE (elements this shard covers)
+//!   32-byte shard subtree root at chunk_elems over
+//!       elem_offset..elem_offset+elem_len
+//!       (`hashtree::HashTree::subtree_root_hex`)
+//!   -- all versions --
 //!   32-byte hash of the *resulting full weights* (zero for
 //!       pseudo-gradient payloads, which are not checkpoints):
 //!       v1 → scalar SHA-256 of the full buffer;
-//!       v2 → chunked hash-tree root at chunk_elems
+//!       v2/v3 → chunked hash-tree root at chunk_elems
 //!            (see `sparse::hashtree`), verifiable in
 //!            O(nnz · chunk_elems) instead of O(total)
 //!   payload: codec(compress(index stream ++ value stream))
 //! ```
 //!
-//! `encode` writes v1 when `chunk_elems == 0` (scalar hash or no hash)
-//! and v2 otherwise; `decode` accepts both, so pre-hash-tree objects in
-//! a store remain readable.
+//! Index streams always carry **absolute** flat indices, so a v3 shard
+//! frame is decodable with the same formats as a whole-step frame.
+//! Every shard frame of a step carries the same `result_hash` (the
+//! post-step global root) plus its own `shard_root`, so a consumer can
+//! verify shards independently — a corrupted shard is re-fetched alone
+//! — and still bind the assembled step end-to-end.
+//!
+//! `encode` writes v1 when `chunk_elems == 0` (scalar hash or no
+//! hash), v2 for an unsharded hash-tree patch (`shard_count <= 1`),
+//! and v3 when `shard_count > 1`; `decode` accepts all three, so
+//! pre-hash-tree and pre-sharding objects in a store remain readable.
 
 use super::{PatchFormat, TensorShape};
 use crate::codec::{shuffle, Codec};
@@ -31,8 +48,10 @@ use anyhow::{bail, Result};
 pub const MAGIC: [u8; 4] = *b"PLSP";
 /// Legacy scalar-hash container version.
 pub const VERSION_V1: u8 = 1;
-/// Current version: carries the hash-tree chunk size + root.
+/// Unsharded hash-tree version: carries the chunk size + root.
 pub const VERSION: u8 = 2;
+/// Sharded fan-out version: v2 plus shard header fields.
+pub const VERSION_V3: u8 = 3;
 
 /// What the values in the patch are.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -119,6 +138,73 @@ pub struct Patch {
     /// Hash-tree chunk size in elements; 0 means `result_hash` is a
     /// scalar full-buffer hash (v1 container).
     pub chunk_elems: u64,
+    /// This frame's shard index within the step (0 for unsharded).
+    pub shard_index: u32,
+    /// Shards the step was split into (1 for unsharded).
+    pub shard_count: u32,
+    /// First flat element this shard covers (0 for unsharded).
+    pub elem_offset: u64,
+    /// Elements this shard covers (== `total_params` for unsharded).
+    pub elem_len: u64,
+    /// Hex subtree root over this shard's element range after the step
+    /// applies (empty for unsharded frames).
+    pub shard_root: String,
+}
+
+impl Default for Patch {
+    fn default() -> Patch {
+        Patch {
+            step: 0,
+            base_step: 0,
+            total_params: 0,
+            indices: Vec::new(),
+            values: Values::Bf16(Vec::new()),
+            result_hash: String::new(),
+            chunk_elems: 0,
+            shard_index: 0,
+            shard_count: 1,
+            elem_offset: 0,
+            elem_len: 0,
+            shard_root: String::new(),
+        }
+    }
+}
+
+/// Cheap header peek: enough to route a frame (e.g. NACK/resend a
+/// specific shard) without decompressing the payload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardMeta {
+    pub step: u64,
+    pub shard_index: u32,
+    pub shard_count: u32,
+}
+
+/// Read `(step, shard_index, shard_count)` from a container header.
+pub fn peek_meta(buf: &[u8]) -> Result<ShardMeta> {
+    if buf.len() < 9 + 5 * 8 + 32 {
+        bail!("patch container too short ({} bytes)", buf.len());
+    }
+    if buf[0..4] != MAGIC {
+        bail!("bad patch magic");
+    }
+    let version = buf[4];
+    if version != VERSION_V1 && version != VERSION && version != VERSION_V3 {
+        bail!("unsupported patch version {}", version);
+    }
+    let step = u64::from_le_bytes(buf[9..17].try_into().unwrap());
+    if version == VERSION_V3 {
+        if buf.len() < 65 {
+            bail!("v3 patch container too short ({} bytes)", buf.len());
+        }
+        let shard_index = u32::from_le_bytes(buf[57..61].try_into().unwrap());
+        let shard_count = u32::from_le_bytes(buf[61..65].try_into().unwrap());
+        if shard_count < 2 || shard_index >= shard_count {
+            bail!("bad shard header: index {} of {}", shard_index, shard_count);
+        }
+        Ok(ShardMeta { step, shard_index, shard_count })
+    } else {
+        Ok(ShardMeta { step, shard_index: 0, shard_count: 1 })
+    }
 }
 
 /// Encoding options.
@@ -156,8 +242,29 @@ pub fn encode(patch: &Patch, layout: &[TensorShape], opts: EncodeOpts) -> Result
     if patch.chunk_elems > 0 && patch.chunk_elems < super::hashtree::MIN_WIRE_CHUNK_ELEMS as u64 {
         bail!("chunk_elems {} below wire minimum", patch.chunk_elems);
     }
-    let version = if patch.chunk_elems > 0 { VERSION } else { VERSION_V1 };
-    let mut out = Vec::with_capacity(compressed.len() + 104);
+    let sharded = patch.shard_count > 1;
+    if sharded {
+        if patch.chunk_elems == 0 {
+            bail!("sharded patches require hash-tree geometry (chunk_elems > 0)");
+        }
+        if patch.shard_index >= patch.shard_count {
+            bail!("shard index {} out of range {}", patch.shard_index, patch.shard_count);
+        }
+        if patch.shard_root.is_empty() {
+            bail!("sharded patches require a shard subtree root");
+        }
+        if patch.elem_offset + patch.elem_len > patch.total_params {
+            bail!("shard range exceeds total_params");
+        }
+    }
+    let version = if sharded {
+        VERSION_V3
+    } else if patch.chunk_elems > 0 {
+        VERSION
+    } else {
+        VERSION_V1
+    };
+    let mut out = Vec::with_capacity(compressed.len() + 160);
     out.extend_from_slice(&MAGIC);
     out.push(version);
     out.push(patch.values.kind().tag());
@@ -169,8 +276,16 @@ pub fn encode(patch: &Patch, layout: &[TensorShape], opts: EncodeOpts) -> Result
     out.extend_from_slice(&patch.total_params.to_le_bytes());
     out.extend_from_slice(&(patch.indices.len() as u64).to_le_bytes());
     out.extend_from_slice(&(raw.len() as u64).to_le_bytes());
-    if version == VERSION {
+    if version >= VERSION {
         out.extend_from_slice(&patch.chunk_elems.to_le_bytes());
+    }
+    if version == VERSION_V3 {
+        out.extend_from_slice(&patch.shard_index.to_le_bytes());
+        out.extend_from_slice(&patch.shard_count.to_le_bytes());
+        out.extend_from_slice(&patch.elem_offset.to_le_bytes());
+        out.extend_from_slice(&patch.elem_len.to_le_bytes());
+        let bytes = hex_to_bytes(&patch.shard_root)?;
+        out.extend_from_slice(&bytes);
     }
     let mut hash32 = [0u8; 32];
     if !patch.result_hash.is_empty() {
@@ -191,7 +306,7 @@ pub fn decode(buf: &[u8], layout: &[TensorShape]) -> Result<Patch> {
         bail!("bad patch magic");
     }
     let version = buf[4];
-    if version != VERSION_V1 && version != VERSION {
+    if version != VERSION_V1 && version != VERSION && version != VERSION_V3 {
         bail!("unsupported patch version {}", version);
     }
     let kind = PatchKind::from_tag(buf[5])?;
@@ -209,7 +324,7 @@ pub fn decode(buf: &[u8], layout: &[TensorShape]) -> Result<Patch> {
     let total_params = read_u64(&mut o);
     let nnz = read_u64(&mut o) as usize;
     let raw_len = read_u64(&mut o) as usize;
-    let chunk_elems = if version == VERSION {
+    let chunk_elems = if version >= VERSION {
         if buf.len() < o + 8 + 32 {
             bail!("v2 patch container too short ({} bytes)", buf.len());
         }
@@ -222,6 +337,27 @@ pub fn decode(buf: &[u8], layout: &[TensorShape]) -> Result<Patch> {
         ce
     } else {
         0
+    };
+    let (shard_index, shard_count, elem_offset, elem_len, shard_root) = if version == VERSION_V3
+    {
+        // shard fields: u32 + u32 + u64 + u64 + 32-byte shard root =
+        // 56 bytes, followed by the 32-byte result hash
+        if buf.len() < o + 56 + 32 {
+            bail!("v3 patch container too short ({} bytes)", buf.len());
+        }
+        let si = u32::from_le_bytes(buf[o..o + 4].try_into().unwrap());
+        let sc = u32::from_le_bytes(buf[o + 4..o + 8].try_into().unwrap());
+        o += 8;
+        let eo = read_u64(&mut o);
+        let el = read_u64(&mut o);
+        let sr = &buf[o..o + 32];
+        o += 32;
+        if sc < 2 || si >= sc {
+            bail!("bad shard header: index {} of {}", si, sc);
+        }
+        (si, sc, eo, el, crate::util::hex(sr))
+    } else {
+        (0u32, 1u32, 0u64, total_params, String::new())
     };
     let hash32 = &buf[o..o + 32];
     o += 32;
@@ -254,7 +390,20 @@ pub fn decode(buf: &[u8], layout: &[TensorShape]) -> Result<Patch> {
         raw[pos..].to_vec()
     };
     let values = Values::from_bytes(kind, &vbytes)?;
-    Ok(Patch { step, base_step, total_params, indices, values, result_hash, chunk_elems })
+    Ok(Patch {
+        step,
+        base_step,
+        total_params,
+        indices,
+        values,
+        result_hash,
+        chunk_elems,
+        shard_index,
+        shard_count,
+        elem_offset,
+        elem_len,
+        shard_root,
+    })
 }
 
 fn hex_to_bytes(s: &str) -> Result<Vec<u8>> {
@@ -290,6 +439,7 @@ mod tests {
                 values: Values::Bf16(vals),
                 result_hash: crate::util::sha256_hex(b"test"),
                 chunk_elems: 0,
+                ..Default::default()
             },
             layout,
         )
@@ -357,6 +507,7 @@ mod tests {
             values: Values::F32(vals),
             result_hash: String::new(),
             chunk_elems: 0,
+            ..Default::default()
         };
         let opts =
             EncodeOpts { format: PatchFormat::FlatVarint, codec: Codec::Zstd1, shuffle_values: true };
@@ -393,9 +544,53 @@ mod tests {
             values: Values::Bf16(vec![]),
             result_hash: String::new(),
             chunk_elems: 0,
+            ..Default::default()
         };
         let buf = encode(&p, &layout, EncodeOpts::default()).unwrap();
         let back = decode(&buf, &layout).unwrap();
         assert!(back.indices.is_empty());
+    }
+
+    #[test]
+    fn v3_shard_header_roundtrips() {
+        let (mut p, layout) = mk_patch(60_000, 700, 13);
+        p.chunk_elems = 1024;
+        p.shard_index = 2;
+        p.shard_count = 4;
+        p.elem_offset = 30_000;
+        p.elem_len = 15_000;
+        p.shard_root = crate::util::sha256_hex(b"shard");
+        let buf = encode(&p, &layout, EncodeOpts::default()).unwrap();
+        assert_eq!(buf[4], VERSION_V3);
+        let meta = peek_meta(&buf).unwrap();
+        assert_eq!(meta, ShardMeta { step: 42, shard_index: 2, shard_count: 4 });
+        let back = decode(&buf, &layout).unwrap();
+        assert_eq!(back.shard_index, 2);
+        assert_eq!(back.shard_count, 4);
+        assert_eq!(back.elem_offset, 30_000);
+        assert_eq!(back.elem_len, 15_000);
+        assert_eq!(back.shard_root, p.shard_root);
+        assert_eq!(back.result_hash, p.result_hash);
+        assert_eq!(back.indices, p.indices);
+        assert_eq!(back.values, p.values);
+        // unsharded defaults survive v1/v2 decode
+        let mut un = p.clone();
+        un.shard_count = 1;
+        un.shard_index = 0;
+        let buf2 = encode(&un, &layout, EncodeOpts::default()).unwrap();
+        assert_eq!(buf2[4], VERSION);
+        let back2 = decode(&buf2, &layout).unwrap();
+        assert_eq!(back2.shard_count, 1);
+        assert_eq!(back2.elem_len, un.total_params);
+        assert!(back2.shard_root.is_empty());
+        // sharded frames without hash-tree geometry are rejected
+        let mut bad = p.clone();
+        bad.chunk_elems = 0;
+        assert!(encode(&bad, &layout, EncodeOpts::default()).is_err());
+        // corrupted shard header fields fail decode cleanly
+        let mut corrupt = buf.clone();
+        corrupt[61..65].copy_from_slice(&0u32.to_le_bytes()); // shard_count = 0
+        assert!(decode(&corrupt, &layout).is_err());
+        assert!(peek_meta(&corrupt).is_err());
     }
 }

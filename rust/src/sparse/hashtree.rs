@@ -23,6 +23,22 @@
 //! The root is exactly as binding as the scalar hash for patch
 //! verification: any corrupted value or misdirected index lands in some
 //! chunk, changes that chunk's hash, and therefore changes the root.
+//!
+//! # Shard subtrees (sharded fan-out)
+//!
+//! The sharded patch fabric ([`crate::pulse::sync`]) splits the
+//! parameter space into contiguous chunk-aligned element ranges
+//! ([`shard_ranges`]). Because shards never split a chunk, a **shard
+//! subtree root** ([`HashTree::subtree_root_hex`]) — a digest over the
+//! shard's geometry plus its run of chunk digests — is computable by
+//! publisher and consumer from the same per-chunk state, and a
+//! corrupted shard perturbs only its own subtree root.
+//! [`HashTree::apply_and_rehash_shards`] applies disjoint shard patches
+//! in parallel (scoped threads over disjoint weight/digest slices),
+//! verifies each shard's subtree root, and *restores a failed shard
+//! exactly* (old values + old chunk digests, both saved at O(nnz)
+//! cost), so one bad shard can be refetched while the others stay
+//! applied.
 
 use crate::util::{hex, pool, u16_as_bytes};
 use sha2::{Digest, Sha256};
@@ -234,6 +250,198 @@ impl HashTree {
     }
 }
 
+/// Contiguous, chunk-aligned element ranges covering `0..total_elems`
+/// for up to `shards` shards (fewer when there are fewer chunks than
+/// shards). Both sides of the sharded fan-out derive the ranges from
+/// `(total_elems, chunk_elems, shard_count)` with this function, so the
+/// wire-level `elem_offset` is cross-checked, never trusted.
+pub fn shard_ranges(
+    total_elems: usize,
+    chunk_elems: usize,
+    shards: usize,
+) -> Vec<std::ops::Range<usize>> {
+    let ce = chunk_elems.max(1);
+    let shards = shards.max(1);
+    let n_chunks = total_elems.div_ceil(ce).max(1);
+    let chunks_per_shard = n_chunks.div_ceil(shards);
+    let mut out = Vec::new();
+    let mut c = 0usize;
+    while c < n_chunks {
+        let lo = (c * ce).min(total_elems);
+        let hi = (((c + chunks_per_shard).min(n_chunks)) * ce).min(total_elems);
+        out.push(lo..hi);
+        c += chunks_per_shard;
+    }
+    out
+}
+
+/// One shard's patch, borrowed for [`HashTree::apply_and_rehash_shards`].
+/// `indices` are absolute flat indices, sorted, all inside
+/// `elem_lo..elem_hi`; `expect_root` is the publisher's subtree root
+/// for this shard after the step applies.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardPatchRef<'a> {
+    pub elem_lo: usize,
+    pub elem_hi: usize,
+    pub indices: &'a [u64],
+    pub values: &'a [u16],
+    pub expect_root: &'a str,
+}
+
+/// Digest a shard subtree: geometry + the shard's run of chunk digests.
+fn subtree_digest(
+    chunk_elems: usize,
+    elem_lo: usize,
+    elem_hi: usize,
+    digests: &[[u8; 32]],
+) -> [u8; 32] {
+    let mut h = Sha256::new();
+    h.update(b"PULSE-shard-v3");
+    h.update((elem_lo as u64).to_le_bytes());
+    h.update((elem_hi as u64).to_le_bytes());
+    h.update((chunk_elems as u64).to_le_bytes());
+    for d in digests {
+        h.update(d);
+    }
+    let mut out = [0u8; 32];
+    out.copy_from_slice(&h.finalize());
+    out
+}
+
+/// Apply one shard's patch on its disjoint weight/digest slices, rehash
+/// its touched chunks, and verify its subtree root. On mismatch the
+/// shard is restored exactly (saved values + saved digests). Returns
+/// `(verified, touched global chunk ids)`.
+fn shard_worker(
+    w: &mut [u16],
+    chunks: &mut [[u8; 32]],
+    s: &ShardPatchRef<'_>,
+    chunk_elems: usize,
+) -> (bool, Vec<usize>) {
+    let c_lo = s.elem_lo / chunk_elems;
+    let saved_vals: Vec<u16> =
+        s.indices.iter().map(|&i| w[i as usize - s.elem_lo]).collect();
+    let mut saved_digests: Vec<(usize, [u8; 32])> = Vec::new();
+    let mut touched_local: Vec<usize> = Vec::new();
+    let mut k = 0usize;
+    while k < s.indices.len() {
+        let c = s.indices[k] as usize / chunk_elems; // global chunk id
+        let lo = c * chunk_elems;
+        let hi = ((c + 1) * chunk_elems).min(s.elem_hi);
+        let cl = c - c_lo;
+        saved_digests.push((cl, chunks[cl]));
+        while k < s.indices.len() && (s.indices[k] as usize) < hi {
+            w[s.indices[k] as usize - s.elem_lo] = s.values[k];
+            k += 1;
+        }
+        chunks[cl] = hash_chunk(&w[lo - s.elem_lo..hi - s.elem_lo]);
+        touched_local.push(cl);
+    }
+    let root = subtree_digest(chunk_elems, s.elem_lo, s.elem_hi, chunks);
+    if hex(&root) == s.expect_root {
+        (true, touched_local.into_iter().map(|cl| cl + c_lo).collect())
+    } else {
+        for (j, &i) in s.indices.iter().enumerate() {
+            w[i as usize - s.elem_lo] = saved_vals[j];
+        }
+        for &(cl, d) in &saved_digests {
+            chunks[cl] = d;
+        }
+        (false, Vec::new())
+    }
+}
+
+impl HashTree {
+    /// Subtree root over elements `elem_lo..elem_hi` — the per-shard
+    /// commitment carried in v3 container headers. `elem_lo` must be
+    /// chunk-aligned and `elem_hi` chunk-aligned or the buffer end
+    /// (shards never split a chunk; see [`shard_ranges`]).
+    pub fn subtree_root_hex(&self, elem_lo: usize, elem_hi: usize) -> String {
+        let ce = self.chunk_elems;
+        assert!(elem_lo % ce == 0, "shard lo must be chunk-aligned");
+        assert!(
+            elem_hi % ce == 0 || elem_hi == self.total_elems,
+            "shard hi must be chunk-aligned or the buffer end"
+        );
+        assert!(elem_lo <= elem_hi && elem_hi <= self.total_elems);
+        let digests = &self.chunks[elem_lo / ce..elem_hi.div_ceil(ce)];
+        hex(&subtree_digest(ce, elem_lo, elem_hi, digests))
+    }
+
+    /// Apply disjoint shard patches in parallel (one scoped thread per
+    /// shard over non-overlapping weight/digest slices), verifying each
+    /// shard's subtree root independently. Shards that fail
+    /// verification are restored exactly and reported `false`; the
+    /// group/root fold runs once at the end over every verified shard's
+    /// touched chunks. Shard ranges must be sorted, disjoint, and
+    /// chunk-aligned — derive them with [`shard_ranges`], and validate
+    /// index bounds/order before calling (out-of-range indices panic).
+    pub fn apply_and_rehash_shards(
+        &mut self,
+        weights: &mut [u16],
+        shards: &[ShardPatchRef<'_>],
+    ) -> Vec<bool> {
+        assert_eq!(weights.len(), self.total_elems, "hash tree length mismatch");
+        let ce = self.chunk_elems;
+        let mut prev_hi = 0usize;
+        for s in shards {
+            assert!(
+                s.elem_lo >= prev_hi && s.elem_lo <= s.elem_hi,
+                "shard ranges must be sorted and disjoint"
+            );
+            assert!(s.elem_lo % ce == 0, "shard lo must be chunk-aligned");
+            assert!(
+                (s.elem_hi % ce == 0 || s.elem_hi == self.total_elems)
+                    && s.elem_hi <= self.total_elems,
+                "shard hi must be chunk-aligned or the buffer end"
+            );
+            assert_eq!(s.indices.len(), s.values.len());
+            if let (Some(&first), Some(&last)) = (s.indices.first(), s.indices.last()) {
+                assert!(
+                    first as usize >= s.elem_lo && (last as usize) < s.elem_hi,
+                    "shard indices outside the shard range"
+                );
+            }
+            prev_hi = s.elem_hi;
+        }
+        let mut results: Vec<(bool, Vec<usize>)> = Vec::new();
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(shards.len());
+            let mut w_tail: &mut [u16] = weights;
+            let mut c_tail: &mut [[u8; 32]] = &mut self.chunks;
+            let mut w_off = 0usize;
+            let mut c_off = 0usize;
+            for s in shards {
+                let c_lo = s.elem_lo / ce;
+                let c_hi = s.elem_hi.div_ceil(ce);
+                let tail = std::mem::take(&mut w_tail);
+                let (_gap, rest) = tail.split_at_mut(s.elem_lo - w_off);
+                let (w_mine, rest) = rest.split_at_mut(s.elem_hi - s.elem_lo);
+                w_tail = rest;
+                w_off = s.elem_hi;
+                let tail = std::mem::take(&mut c_tail);
+                let (_gap, rest) = tail.split_at_mut(c_lo - c_off);
+                let (c_mine, rest) = rest.split_at_mut(c_hi - c_lo);
+                c_tail = rest;
+                c_off = c_hi;
+                handles.push(scope.spawn(move || shard_worker(w_mine, c_mine, s, ce)));
+            }
+            results = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        });
+        let mut touched_all: Vec<usize> = Vec::new();
+        let mut verified = Vec::with_capacity(results.len());
+        for (ok, touched) in results {
+            verified.push(ok);
+            touched_all.extend(touched);
+        }
+        touched_all.sort_unstable();
+        if !touched_all.is_empty() {
+            self.refold(&touched_all);
+        }
+        verified
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -324,5 +532,170 @@ mod tests {
         let t = HashTree::build(&w, 100);
         assert_eq!(t.touched_chunks(&[0, 1, 99, 100, 250, 999]), vec![0, 1, 2, 9]);
         assert!(t.touched_chunks(&[]).is_empty());
+    }
+
+    #[test]
+    fn shard_ranges_cover_and_align() {
+        for (n, ce, s) in [
+            (10_000usize, 64usize, 4usize),
+            (10_000, 64, 1),
+            (100, 64, 8),  // fewer chunks than shards
+            (1000, 300, 3), // unaligned tail
+            (0, 64, 4),
+            (64, 64, 4),
+        ] {
+            let ranges = shard_ranges(n, ce, s);
+            assert!(ranges.len() <= s.max(1), "n={} ce={} s={}", n, ce, s);
+            let mut expect_lo = 0usize;
+            for r in &ranges {
+                assert_eq!(r.start, expect_lo);
+                assert!(r.start % ce == 0);
+                assert!(r.end % ce == 0 || r.end == n);
+                expect_lo = r.end;
+            }
+            assert_eq!(expect_lo, n, "ranges must cover the buffer (n={})", n);
+        }
+        // empty buffer still yields one (empty) shard
+        assert_eq!(shard_ranges(0, 64, 4), vec![0..0]);
+    }
+
+    #[test]
+    fn subtree_roots_localize_changes() {
+        let mut rng = crate::util::rng::Rng::new(21);
+        let n = 5_000usize;
+        let ce = 128usize;
+        let mut w: Vec<u16> = (0..n).map(|_| rng.next_u32() as u16).collect();
+        let ranges = shard_ranges(n, ce, 4);
+        let t = HashTree::build(&w, ce);
+        let roots: Vec<String> =
+            ranges.iter().map(|r| t.subtree_root_hex(r.start, r.end)).collect();
+        // flip one element inside shard 2: only shard 2's root moves
+        let victim = ranges[2].start + 7;
+        w[victim] ^= 1;
+        let t2 = HashTree::build(&w, ce);
+        for (i, r) in ranges.iter().enumerate() {
+            let root2 = t2.subtree_root_hex(r.start, r.end);
+            if i == 2 {
+                assert_ne!(roots[i], root2, "shard {} should change", i);
+            } else {
+                assert_eq!(roots[i], root2, "shard {} must be untouched", i);
+            }
+        }
+        // the subtree commitment binds geometry, not just bytes
+        assert_ne!(
+            t.subtree_root_hex(0, ranges[0].end),
+            t.subtree_root_hex(ranges[0].end, ranges[1].end)
+        );
+    }
+
+    #[test]
+    fn sharded_apply_matches_serial() {
+        prop::check("sharded apply == serial apply", 30, |g| {
+            let n = g.len().max(1);
+            let ce = 1 + g.rng.below(n as u64 / 2 + 2) as usize;
+            let nshards = 1 + g.rng.below(6) as usize;
+            let old: Vec<u16> = (0..n).map(|_| g.rng.next_u32() as u16).collect();
+            let count = g.rng.below(n as u64 + 1) as usize;
+            let idx = g.sorted_indices(n, count);
+            let vals: Vec<u16> = idx.iter().map(|_| g.rng.next_u32() as u16).collect();
+
+            // serial reference
+            let mut ws = old.clone();
+            let mut ts = HashTree::build(&ws, ce);
+            ts.apply_and_rehash(&mut ws, &idx, &vals);
+
+            // sharded path: split the patch by shard range, use the
+            // reference tree's subtree roots as the expected commitments
+            let ranges = shard_ranges(n, ce, nshards);
+            let mut wp = old.clone();
+            let mut tp = HashTree::build(&wp, ce);
+            let mut shards = Vec::new();
+            for r in &ranges {
+                let a = idx.partition_point(|&i| (i as usize) < r.start);
+                let b = idx.partition_point(|&i| (i as usize) < r.end);
+                shards.push((r.clone(), a, b, ts.subtree_root_hex(r.start, r.end)));
+            }
+            let refs: Vec<ShardPatchRef> = shards
+                .iter()
+                .map(|(r, a, b, root)| ShardPatchRef {
+                    elem_lo: r.start,
+                    elem_hi: r.end,
+                    indices: &idx[*a..*b],
+                    values: &vals[*a..*b],
+                    expect_root: root,
+                })
+                .collect();
+            let ok = tp.apply_and_rehash_shards(&mut wp, &refs);
+            assert!(ok.iter().all(|&b| b), "all shards must verify");
+            assert_eq!(wp, ws);
+            assert_eq!(tp, ts, "sharded tree diverged from serial");
+        });
+    }
+
+    #[test]
+    fn failed_shard_restores_exactly_and_others_apply() {
+        let mut rng = crate::util::rng::Rng::new(33);
+        let n = 4_096usize;
+        let ce = 64usize;
+        let old: Vec<u16> = (0..n).map(|_| rng.next_u32() as u16).collect();
+        let mut new = old.clone();
+        for _ in 0..200 {
+            let i = rng.below(n as u64) as usize;
+            new[i] = rng.next_u32() as u16;
+        }
+        let (idx, vals) = crate::sparse::diff_gather_bf16(&old, &new);
+        let expect_tree = HashTree::build(&new, ce);
+        let ranges = shard_ranges(n, ce, 4);
+        let mut per_shard: Vec<(usize, usize)> = Vec::new();
+        for r in &ranges {
+            let a = idx.partition_point(|&i| (i as usize) < r.start);
+            let b = idx.partition_point(|&i| (i as usize) < r.end);
+            per_shard.push((a, b));
+        }
+        // corrupt shard 1's values (but hand it the *correct* expected
+        // root, as a consumer would have from the wire)
+        let mut bad_vals = vals.clone();
+        let (a1, b1) = per_shard[1];
+        assert!(b1 > a1, "test needs changes in shard 1");
+        bad_vals[a1] ^= 0x0101;
+        let roots: Vec<String> =
+            ranges.iter().map(|r| expect_tree.subtree_root_hex(r.start, r.end)).collect();
+        let mut w = old.clone();
+        let mut t = HashTree::build(&w, ce);
+        let refs: Vec<ShardPatchRef> = ranges
+            .iter()
+            .enumerate()
+            .map(|(i, r)| ShardPatchRef {
+                elem_lo: r.start,
+                elem_hi: r.end,
+                indices: &idx[per_shard[i].0..per_shard[i].1],
+                values: &bad_vals[per_shard[i].0..per_shard[i].1],
+                expect_root: &roots[i],
+            })
+            .collect();
+        let ok = t.apply_and_rehash_shards(&mut w, &refs);
+        assert_eq!(ok.iter().filter(|&&b| !b).count(), 1);
+        assert!(!ok[1]);
+        // failed shard bit-identical to the pre-apply state, others new
+        assert_eq!(w[ranges[1].clone()], old[ranges[1].clone()]);
+        for (i, r) in ranges.iter().enumerate() {
+            if i != 1 {
+                assert_eq!(w[r.clone()], new[r.clone()], "shard {} must be applied", i);
+            }
+        }
+        // tree matches a rebuild of the mixed buffer
+        assert_eq!(t, HashTree::build(&w, ce));
+        // retry shard 1 with the good values: everything converges
+        let retry = [ShardPatchRef {
+            elem_lo: ranges[1].start,
+            elem_hi: ranges[1].end,
+            indices: &idx[a1..b1],
+            values: &vals[a1..b1],
+            expect_root: &roots[1],
+        }];
+        let ok2 = t.apply_and_rehash_shards(&mut w, &retry);
+        assert!(ok2[0]);
+        assert_eq!(w, new);
+        assert_eq!(t, expect_tree);
     }
 }

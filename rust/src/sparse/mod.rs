@@ -134,6 +134,27 @@ pub fn diff_gather_bf16(old: &[u16], new: &[u16]) -> (Vec<u64>, Vec<u16>) {
     (indices, values)
 }
 
+/// Serial fused diff + gather over `r`, emitting **absolute** sorted
+/// indices. This is the per-shard encode front half of the sharded
+/// fan-out: each shard already runs on its own pool worker
+/// ([`crate::pulse::sync::ShardedEncoder`]), so the scan inside a shard
+/// stays serial instead of nesting a second thread fan-out.
+pub fn diff_gather_bf16_range(
+    old: &[u16],
+    new: &[u16],
+    r: std::ops::Range<usize>,
+) -> (Vec<u64>, Vec<u16>) {
+    assert_eq!(old.len(), new.len(), "checkpoint length mismatch");
+    assert!(r.end <= new.len(), "diff range out of bounds");
+    let mut idx = Vec::new();
+    let mut val = Vec::new();
+    diff_words(old, new, r, |i| {
+        idx.push(i as u64);
+        val.push(new[i]);
+    });
+    (idx, val)
+}
+
 /// Number of positions whose bit patterns differ (word-skipping, no
 /// index materialization) — the counting core of the sparsity meter.
 pub fn count_diff_bf16(old: &[u16], new: &[u16]) -> usize {
@@ -338,6 +359,33 @@ mod tests {
         assert_eq!(idx, (0..37).collect::<Vec<u64>>());
         assert_eq!(vals, vec![1u16; 37]);
         assert_eq!(count_diff_bf16(&old, &new), 37);
+    }
+
+    #[test]
+    fn range_diff_composes_to_full_diff() {
+        crate::util::prop::check("range diffs concat == full diff", 40, |g| {
+            let n = g.len();
+            let old: Vec<u16> = (0..n).map(|_| g.rng.next_u32() as u16).collect();
+            let mut new = old.clone();
+            for _ in 0..g.rng.below(n as u64 + 1) {
+                if n > 0 {
+                    let i = g.rng.below(n as u64) as usize;
+                    new[i] = g.rng.next_u32() as u16;
+                }
+            }
+            let cut1 = g.rng.below(n as u64 + 1) as usize;
+            let cut2 = cut1 + g.rng.below((n - cut1) as u64 + 1) as usize;
+            let mut idx = Vec::new();
+            let mut vals = Vec::new();
+            for r in [0..cut1, cut1..cut2, cut2..n] {
+                let (i, v) = diff_gather_bf16_range(&old, &new, r);
+                idx.extend(i);
+                vals.extend(v);
+            }
+            let (full_idx, full_vals) = diff_gather_bf16(&old, &new);
+            assert_eq!(idx, full_idx);
+            assert_eq!(vals, full_vals);
+        });
     }
 
     #[test]

@@ -129,6 +129,36 @@ impl Bench {
         self.results.last().unwrap()
     }
 
+    /// Write all results as one JSON snapshot (overwrites). This is the
+    /// machine-readable artifact the CI bench-smoke job uploads
+    /// (`BENCH_*.json`), so the perf trajectory accumulates per PR.
+    pub fn write_json(&self, path: &std::path::Path) -> std::io::Result<()> {
+        use crate::util::json::Json;
+        let rows: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                let mut j = Json::obj();
+                j.set("name", r.name.as_str().into())
+                    .set("iters", (r.iters as u64).into())
+                    .set("mean_ns", r.mean_ns.into())
+                    .set("median_ns", r.median_ns.into())
+                    .set("p10_ns", r.p10_ns.into())
+                    .set("p90_ns", r.p90_ns.into());
+                if let Some(m) = r.mbps() {
+                    j.set("mbps", m.into());
+                }
+                j
+            })
+            .collect();
+        let mut root = Json::obj();
+        root.set("results", Json::Arr(rows));
+        if let Some(p) = path.parent() {
+            std::fs::create_dir_all(p)?;
+        }
+        std::fs::write(path, root.to_pretty())
+    }
+
     /// Append all results to a CSV file (created with header if missing).
     pub fn write_csv(&self, path: &std::path::Path) -> std::io::Result<()> {
         use std::io::Write;
@@ -182,5 +212,23 @@ mod tests {
             std::hint::black_box(data.iter().map(|&x| x as u64).sum::<u64>());
         });
         assert!(r.mbps().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn json_snapshot_written() {
+        std::env::set_var("PULSE_BENCH_FAST", "1");
+        let mut b = Bench::new();
+        b.run("noop", || {
+            std::hint::black_box(1u8);
+        });
+        let dir = std::env::temp_dir().join(format!("pulse_benchjson_{}", std::process::id()));
+        let p = dir.join("BENCH_test.json");
+        b.write_json(&p).unwrap();
+        let j = crate::util::json::Json::parse_file(&p).unwrap();
+        let rows = j.req("results").unwrap().as_arr().unwrap_or(&[]).to_vec();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].req_str("name").unwrap(), "noop");
+        assert!(rows[0].req_f64("mean_ns").unwrap() >= 0.0);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

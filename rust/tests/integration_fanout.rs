@@ -1,0 +1,360 @@
+//! Integration tests for the sharded pipelined patch fan-out:
+//!
+//! * relay isolation — a throttled subscriber must not delay a fast
+//!   subscriber's patch delivery (per-subscriber queues + coalescing
+//!   catch-up, `net::relay`);
+//! * shard recovery — flipping bytes in one shard frame triggers a
+//!   single-shard NACK/resend while the other shards stay applied
+//!   (`sparse::container` v3 + `sparse::hashtree` subtree roots);
+//! * end-to-end bit-identity of the sharded stream over a real relay.
+
+use pulse::net::relay::Relay;
+use pulse::net::tcp::{self, kind, Frame};
+use pulse::pulse::sync::ShardedEncoder;
+use pulse::sparse::container::{self, EncodeOpts, Patch, Values};
+use pulse::sparse::hashtree::{HashTree, ShardPatchRef, DEFAULT_CHUNK_ELEMS};
+use pulse::sparse::{synthetic_layout, TensorShape};
+use pulse::util::rng::Rng;
+
+fn perturb(rng: &mut Rng, w: &mut [u16], count: usize) {
+    for _ in 0..count {
+        let i = rng.below(w.len() as u64) as usize;
+        w[i] = rng.next_u32() as u16;
+    }
+}
+
+/// Apply one step's decoded shard patches; returns the indices of
+/// shards that failed subtree verification (their state is restored).
+fn apply_step(
+    weights: &mut Vec<u16>,
+    tree: &mut HashTree,
+    patches: &[Patch],
+) -> Vec<usize> {
+    let refs: Vec<ShardPatchRef> = patches
+        .iter()
+        .map(|p| ShardPatchRef {
+            elem_lo: p.elem_offset as usize,
+            elem_hi: (p.elem_offset + p.elem_len) as usize,
+            indices: &p.indices,
+            values: match &p.values {
+                Values::Bf16(v) => v,
+                _ => panic!("wrong value kind"),
+            },
+            expect_root: &p.shard_root,
+        })
+        .collect();
+    tree.apply_and_rehash_shards(weights, &refs)
+        .into_iter()
+        .enumerate()
+        .filter(|(_, ok)| !ok)
+        .map(|(i, _)| i)
+        .collect()
+}
+
+/// A throttled (non-reading) subscriber must not delay a fast
+/// subscriber. Under the old single-mutex relay, `publish` blocked on
+/// the stalled socket once kernel buffers filled, so the fast
+/// subscriber starved; with per-subscriber queues the fast reader
+/// drains everything while the slow one is still stalled.
+#[test]
+fn slow_subscriber_does_not_delay_fast_subscriber() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+    const STEPS: u8 = 40;
+    const MB: usize = 1 << 20;
+    let relay = Relay::start_with_depth(4).unwrap();
+
+    // fast subscriber: reads eagerly on its own thread
+    let mut fast_conn = tcp::connect_local(relay.port).unwrap();
+    // slow subscriber: connected but NOT read until the fast one is done
+    let mut slow_conn = tcp::connect_local(relay.port).unwrap();
+    while relay.subscriber_count() < 2 {
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+
+    let fast_read = Arc::new(AtomicUsize::new(0));
+    let fast_read_w = fast_read.clone();
+    let fast = std::thread::spawn(move || -> anyhow::Result<(Vec<u8>, f64)> {
+        let t = std::time::Instant::now();
+        let mut tags = Vec::new();
+        loop {
+            let f = tcp::read_frame(&mut fast_conn)?;
+            match f.kind {
+                kind::ANCHOR | kind::PATCH => {
+                    tags.push(f.payload[0]);
+                    fast_read_w.fetch_add(1, Ordering::SeqCst);
+                }
+                kind::CLOSE => return Ok((tags, t.elapsed().as_secs_f64())),
+                _ => {}
+            }
+        }
+    });
+
+    // Publish ~42 MB, pacing against the FAST reader only (its queue
+    // stays within depth, so its stream is the exact published
+    // sequence). The slow subscriber reads nothing: its socket buffers
+    // fill, its writer stalls, its queue overflows and coalesces —
+    // none of which may hold up the publisher or the fast reader.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+    let mut published = 0usize;
+    let mut pace = |relay: &Relay, frame: Frame| {
+        relay.publish(frame);
+        published += 1;
+        while fast_read.load(Ordering::SeqCst) + 2 < published {
+            assert!(
+                std::time::Instant::now() < deadline,
+                "fast subscriber stalled — isolation failed"
+            );
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+    };
+    pace(&relay, Frame { kind: kind::ANCHOR, payload: vec![0u8; MB] });
+    for step in 1..=STEPS {
+        pace(&relay, Frame { kind: kind::PATCH, payload: vec![step; MB] });
+    }
+    // second anchor supersedes whatever the slow subscriber missed
+    pace(&relay, Frame { kind: kind::ANCHOR, payload: vec![100u8; MB] });
+    relay.publish(Frame { kind: kind::CLOSE, payload: vec![] });
+
+    // the fast subscriber finishes while the slow one has read nothing
+    let (fast_tags, fast_secs) = fast.join().unwrap().unwrap();
+    assert_eq!(fast_tags.len(), STEPS as usize + 2, "fast subscriber missed frames");
+    assert_eq!(fast_tags[0], 0);
+    for (i, &tag) in fast_tags[1..=STEPS as usize].iter().enumerate() {
+        assert_eq!(tag as usize, i + 1, "fast subscriber saw out-of-order patches");
+    }
+    assert_eq!(fast_tags[STEPS as usize + 1], 100);
+    assert!(
+        fast_secs < 60.0,
+        "fast subscriber took {:.1}s — it was waiting on the slow one",
+        fast_secs
+    );
+    assert!(
+        relay.coalesced_catchups() > 0 || relay.dropped_frames() > 0,
+        "the stalled subscriber never triggered coalescing"
+    );
+
+    // now drain the slow subscriber: it sees a valid restart — whatever
+    // was in flight, then the superseding anchor, then CLOSE
+    let mut slow_tags = Vec::new();
+    loop {
+        let f = tcp::read_frame(&mut slow_conn).unwrap();
+        match f.kind {
+            kind::ANCHOR | kind::PATCH => slow_tags.push((f.kind, f.payload[0])),
+            kind::CLOSE => break,
+            _ => {}
+        }
+    }
+    assert_eq!(
+        slow_tags.last().copied(),
+        Some((kind::ANCHOR, 100)),
+        "slow subscriber must end on the superseding anchor"
+    );
+    assert!(
+        slow_tags.len() < STEPS as usize + 2,
+        "slow subscriber received everything — nothing was coalesced"
+    );
+    relay.stop();
+}
+
+/// Build a decodable-but-corrupt copy of one shard frame: same header
+/// and commitments, one flipped value — exactly what bit rot in
+/// transit looks like after framing survives. The shard's subtree root
+/// no longer matches, so the worker NACKs just that shard.
+fn tamper_frame(good: &[u8], layout: &[TensorShape]) -> Vec<u8> {
+    let mut p = container::decode(good, layout).unwrap();
+    match &mut p.values {
+        Values::Bf16(v) => {
+            assert!(!v.is_empty(), "test shard must carry at least one value");
+            v[0] ^= 0x0101;
+        }
+        _ => panic!("wrong value kind"),
+    }
+    container::encode(&p, layout, EncodeOpts::default()).unwrap()
+}
+
+#[test]
+fn corrupted_shard_frame_triggers_single_shard_refetch() {
+    let n = 100_000usize;
+    let layout = synthetic_layout(n, 1024);
+    let mut rng = Rng::new(41);
+    let old: Vec<u16> = (0..n).map(|_| rng.next_u32() as u16).collect();
+    let mut new = old.clone();
+    perturb(&mut rng, &mut new, 2_000);
+
+    let mut enc = ShardedEncoder::new(old.clone(), 0);
+    let encoded = enc.encode_step(1, &new, &layout, EncodeOpts::default(), 4).unwrap();
+    assert_eq!(encoded.frames.len(), 4);
+    let frames: Vec<Vec<u8>> = encoded.frames.iter().map(|f| f.bytes.clone()).collect();
+    let expect_root = encoded.root.clone();
+
+    let (listener, port) = tcp::listen_local().unwrap();
+    let layout_pub = layout.clone();
+    let frames_pub = frames.clone();
+    let publisher = std::thread::spawn(move || -> anyhow::Result<u32> {
+        let (mut s, _) = listener.accept()?;
+        for (i, f) in frames_pub.iter().enumerate() {
+            let payload =
+                if i == 2 { tamper_frame(f, &layout_pub) } else { f.clone() };
+            tcp::write_frame(&mut s, &Frame { kind: kind::PATCH, payload })?;
+        }
+        // worker NACKs the corrupted shard; resend the good frame
+        let nack = tcp::read_frame(&mut s)?;
+        assert_eq!(nack.kind, kind::NACK);
+        let (step, shard) = tcp::parse_shard_ack(&nack.payload)?;
+        assert_eq!(step, 1);
+        tcp::write_frame(
+            &mut s,
+            &Frame { kind: kind::PATCH, payload: frames_pub[shard as usize].clone() },
+        )?;
+        let ack = tcp::read_frame(&mut s)?;
+        assert_eq!(ack.kind, kind::ACK);
+        Ok(shard)
+    });
+
+    // worker: receive the step, apply, NACK the failing shard only
+    let mut conn = tcp::connect_local(port).unwrap();
+    let mut weights = old.clone();
+    let mut tree = HashTree::build(&weights, DEFAULT_CHUNK_ELEMS);
+    let mut patches = Vec::new();
+    for _ in 0..4 {
+        let f = tcp::read_frame(&mut conn).unwrap();
+        patches.push(container::decode(&f.payload, &layout).unwrap());
+    }
+    let failed = apply_step(&mut weights, &mut tree, &patches);
+    assert_eq!(failed, vec![2], "exactly the tampered shard must fail");
+    // the other three shards are already applied; the failed shard's
+    // range is bit-identical to its pre-step state
+    let lo = patches[2].elem_offset as usize;
+    let hi = lo + patches[2].elem_len as usize;
+    assert_eq!(&weights[lo..hi], &old[lo..hi]);
+    assert_ne!(&weights[..lo], &old[..lo], "untampered shards must be applied");
+
+    for shard in failed {
+        tcp::write_frame(
+            &mut conn,
+            &Frame {
+                kind: kind::NACK,
+                payload: tcp::shard_ack_payload(1, shard as u32),
+            },
+        )
+        .unwrap();
+        let replacement = tcp::read_frame(&mut conn).unwrap();
+        assert_eq!(replacement.kind, kind::PATCH);
+        let p = container::decode(&replacement.payload, &layout).unwrap();
+        let still_failed = apply_step(&mut weights, &mut tree, &[p]);
+        assert!(still_failed.is_empty(), "resent shard must verify");
+    }
+    tcp::write_frame(
+        &mut conn,
+        &Frame { kind: kind::ACK, payload: tcp::shard_ack_payload(1, 2) },
+    )
+    .unwrap();
+
+    assert_eq!(publisher.join().unwrap().unwrap(), 2);
+    assert_eq!(weights, new, "assembled step must be bit-identical");
+    assert_eq!(tree.root_hex(), expect_root, "global root must bind the step");
+}
+
+/// Full path: sharded frames through a real relay to two workers (one
+/// a late joiner), ending bit-identical to the trainer's view.
+#[test]
+fn sharded_relay_stream_is_bit_identical() {
+    let n = 60_000usize;
+    let layout = synthetic_layout(n, 512);
+    let mut rng = Rng::new(55);
+    let init: Vec<u16> = (0..n).map(|_| rng.next_u32() as u16).collect();
+
+    let relay = Relay::start().unwrap();
+    let port = relay.port;
+
+    fn worker(port: u16, layout: Vec<TensorShape>, n: usize) -> anyhow::Result<(Vec<u16>, String)> {
+        let mut conn = tcp::connect_local(port)?;
+        let first = tcp::read_frame(&mut conn)?;
+        assert_eq!(first.kind, kind::ANCHOR);
+        let mut weights = pulse::util::bytes_to_u16(&first.payload);
+        assert_eq!(weights.len(), n);
+        let mut tree = HashTree::build(&weights, DEFAULT_CHUNK_ELEMS);
+        loop {
+            let f = tcp::read_frame(&mut conn)?;
+            match f.kind {
+                kind::PATCH => {
+                    let meta = container::peek_meta(&f.payload)?;
+                    let mut patches =
+                        vec![container::decode(&f.payload, &layout)?];
+                    let mut resynced = false;
+                    while patches.len() < meta.shard_count as usize {
+                        let nf = tcp::read_frame(&mut conn)?;
+                        match nf.kind {
+                            kind::PATCH => {
+                                patches.push(container::decode(&nf.payload, &layout)?)
+                            }
+                            kind::ANCHOR => {
+                                // relay coalescing restarted the stream
+                                // mid-step: resync from the anchor
+                                weights = pulse::util::bytes_to_u16(&nf.payload);
+                                tree = HashTree::build(&weights, DEFAULT_CHUNK_ELEMS);
+                                resynced = true;
+                                break;
+                            }
+                            kind::CLOSE => return Ok((weights, tree.root_hex())),
+                            _ => {}
+                        }
+                    }
+                    if resynced {
+                        continue;
+                    }
+                    let failed = apply_step(&mut weights, &mut tree, &patches);
+                    assert!(failed.is_empty());
+                    assert_eq!(tree.root_hex(), patches[0].result_hash);
+                }
+                kind::ANCHOR => {
+                    weights = pulse::util::bytes_to_u16(&f.payload);
+                    tree = HashTree::build(&weights, DEFAULT_CHUNK_ELEMS);
+                }
+                kind::CLOSE => return Ok((weights, tree.root_hex())),
+                _ => {}
+            }
+        }
+    }
+
+    let (l1, l2) = (layout.clone(), layout.clone());
+    let early = std::thread::spawn(move || worker(port, l1, n));
+
+    relay.publish(Frame {
+        kind: kind::ANCHOR,
+        payload: pulse::util::u16_as_bytes(&init).to_vec(),
+    });
+    while relay.subscriber_count() < 1 {
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+
+    let mut enc = ShardedEncoder::new(init.clone(), 0);
+    let mut view = init;
+    let mut l2_opt = Some(l2);
+    let mut late: Option<std::thread::JoinHandle<anyhow::Result<(Vec<u16>, String)>>> = None;
+    for step in 1..=3u64 {
+        perturb(&mut rng, &mut view, 500);
+        let encoded = enc.encode_step(step, &view, &layout, EncodeOpts::default(), 3).unwrap();
+        assert_eq!(encoded.frames.len(), 3);
+        for f in encoded.frames {
+            relay.publish(Frame { kind: kind::PATCH, payload: f.bytes });
+        }
+        if step == 1 {
+            // late joiner catches up from the relayed anchor + tail
+            let l2 = l2_opt.take().unwrap();
+            late = Some(std::thread::spawn(move || worker(port, l2, n)));
+            while relay.subscriber_count() < 2 {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+        }
+    }
+    relay.publish(Frame { kind: kind::CLOSE, payload: vec![] });
+    let (w_early, root_early) = early.join().unwrap().unwrap();
+    let (w_late, root_late) = late.unwrap().join().unwrap().unwrap();
+    assert_eq!(w_early, view, "early worker must be bit-identical to the trainer");
+    assert_eq!(w_late, view, "late joiner must be bit-identical to the trainer");
+    assert_eq!(root_early, enc.tree().root_hex());
+    assert_eq!(root_late, root_early);
+    relay.stop();
+}

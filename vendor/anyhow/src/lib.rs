@@ -1,0 +1,230 @@
+//! Offline stand-in for the `anyhow` crate, exposing the subset of its
+//! API this workspace uses: [`Error`], [`Result`], the [`Context`]
+//! trait, and the `anyhow!` / `bail!` / `ensure!` macros.
+//!
+//! The build image has no crates.io access, so the workspace vendors
+//! path dependencies instead of registry ones (see `vendor/README.md`).
+//! Swapping this for the real crate is a one-line change in
+//! `rust/Cargo.toml`; nothing here extends the real crate's surface.
+//!
+//! Internals are simpler than real anyhow: an error is an owned chain
+//! of human-readable messages (outermost context first). `Display`
+//! shows the outermost message, `{:#}` joins the whole chain with
+//! `": "`, and `Debug` renders the multi-line "Caused by" form —
+//! matching how the three formats are conventionally consumed.
+
+use std::fmt;
+
+/// Error chain: `chain[0]` is the outermost (most recent) context.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg(message: impl fmt::Display) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context(mut self, context: impl fmt::Display) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The messages from outermost context to root cause.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost (root cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the full chain on one line.
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.chain.split_first() {
+            None => Ok(()),
+            Some((head, rest)) => {
+                write!(f, "{}", head)?;
+                if !rest.is_empty() {
+                    write!(f, "\n\nCaused by:")?;
+                    for cause in rest {
+                        write!(f, "\n    {}", cause)?;
+                    }
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(err: E) -> Error {
+        let mut chain = vec![err.to_string()];
+        let mut source = err.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Drop-in alias for `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context()` / `.with_context()` to `Result`
+/// and `Option`, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    fn context<C>(self, context: C) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    E: Into<Error>,
+{
+    fn context<C>(self, context: C) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or printable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            $crate::bail!("condition failed: `{}`", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "disk on fire")
+    }
+
+    #[test]
+    fn display_and_alternate() {
+        let e: Error = io_err().into();
+        let e = e.context("reading header");
+        assert_eq!(format!("{}", e), "reading header");
+        assert_eq!(format!("{:#}", e), "reading header: disk on fire");
+        let dbg = format!("{:?}", e);
+        assert!(dbg.contains("Caused by"));
+        assert!(dbg.contains("disk on fire"));
+    }
+
+    #[test]
+    fn macros_and_context() {
+        fn fails() -> Result<()> {
+            bail!("bad {}", 7);
+        }
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "bad 7");
+
+        fn guarded(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {}", x);
+            Ok(x)
+        }
+        assert!(guarded(1).is_ok());
+        assert_eq!(guarded(-2).unwrap_err().to_string(), "x must be positive, got -2");
+
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| format!("step {}", 3)).unwrap_err();
+        assert_eq!(format!("{:#}", e), "step 3: disk on fire");
+
+        let o: Option<u8> = None;
+        assert_eq!(o.context("missing byte").unwrap_err().to_string(), "missing byte");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(f().unwrap_err().root_cause(), "disk on fire");
+    }
+}

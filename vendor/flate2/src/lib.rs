@@ -1,0 +1,121 @@
+//! Offline stand-in for the `flate2` crate surface this workspace
+//! uses: `Compression`, `write::GzEncoder`, `read::GzDecoder`. Backed
+//! by the vendored [`lzcore`] LZSS codec — **not** DEFLATE/gzip wire
+//! format (see `vendor/README.md`; streams are only read back by this
+//! same library and containers carry a codec tag). Signatures match
+//! `flate2`, so restoring the real crate is a manifest-only change.
+
+use std::io::{self, Read, Write};
+
+/// Hard ceiling on a decoded stream, so a corrupted header cannot
+/// trigger an outsized allocation (the flate2 API carries no expected
+/// output size).
+const MAX_DECODED: usize = 1 << 31;
+
+/// Compression level wrapper (API parity; the LZSS backend is
+/// level-independent).
+#[derive(Debug, Clone, Copy)]
+pub struct Compression(u32);
+
+impl Compression {
+    pub fn new(level: u32) -> Compression {
+        Compression(level)
+    }
+    pub fn level(&self) -> u32 {
+        self.0
+    }
+}
+
+pub mod write {
+    use super::*;
+
+    /// Buffering encoder: bytes written are compressed as one stream on
+    /// [`GzEncoder::finish`], which hands back the inner writer.
+    pub struct GzEncoder<W: Write> {
+        inner: W,
+        buf: Vec<u8>,
+        level: u32,
+    }
+
+    impl<W: Write> GzEncoder<W> {
+        pub fn new(inner: W, level: Compression) -> GzEncoder<W> {
+            GzEncoder { inner, buf: Vec::new(), level: level.level() }
+        }
+
+        pub fn finish(mut self) -> io::Result<W> {
+            let compressed = lzcore::compress(&self.buf, self.level as i32);
+            self.inner.write_all(&compressed)?;
+            self.inner.flush()?;
+            Ok(self.inner)
+        }
+    }
+
+    impl<W: Write> Write for GzEncoder<W> {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            self.buf.extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+}
+
+pub mod read {
+    use super::*;
+
+    /// Decoder: drains the inner reader on first read, decompresses,
+    /// then serves the decoded bytes.
+    pub struct GzDecoder<R: Read> {
+        inner: Option<R>,
+        decoded: Vec<u8>,
+        pos: usize,
+    }
+
+    impl<R: Read> GzDecoder<R> {
+        pub fn new(inner: R) -> GzDecoder<R> {
+            GzDecoder { inner: Some(inner), decoded: Vec::new(), pos: 0 }
+        }
+    }
+
+    impl<R: Read> Read for GzDecoder<R> {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            if let Some(mut inner) = self.inner.take() {
+                let mut raw = Vec::new();
+                inner.read_to_end(&mut raw)?;
+                self.decoded = lzcore::decompress(&raw, MAX_DECODED)?;
+            }
+            let n = buf.len().min(self.decoded.len() - self.pos);
+            buf[..n].copy_from_slice(&self.decoded[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encoder_decoder_roundtrip() {
+        let data: Vec<u8> = (0..40_000u32).map(|i| (i % 97) as u8).collect();
+        let mut enc = write::GzEncoder::new(Vec::new(), Compression::new(6));
+        enc.write_all(&data).unwrap();
+        let compressed = enc.finish().unwrap();
+        assert!(compressed.len() < data.len());
+        let mut out = Vec::new();
+        read::GzDecoder::new(&compressed[..]).read_to_end(&mut out).unwrap();
+        assert_eq!(out, data);
+    }
+
+    #[test]
+    fn corrupt_stream_errors() {
+        let mut enc = write::GzEncoder::new(Vec::new(), Compression::new(6));
+        enc.write_all(&vec![5u8; 1000]).unwrap();
+        let mut compressed = enc.finish().unwrap();
+        compressed.truncate(compressed.len() / 2);
+        let mut out = Vec::new();
+        assert!(read::GzDecoder::new(&compressed[..]).read_to_end(&mut out).is_err());
+    }
+}

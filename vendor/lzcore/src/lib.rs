@@ -1,0 +1,257 @@
+//! Byte-oriented LZSS codec shared by the offline `zstd` and `flate2`
+//! shims (this workspace has no crates.io access; see
+//! `vendor/README.md`). **The stream format here is NOT zstd or
+//! DEFLATE wire format** — it is a self-describing private format that
+//! the paired shims both write and read. Nothing in the workspace
+//! persists these streams across implementations: compressed bytes are
+//! always decompressed by the same library that produced them, so
+//! swapping the real crates back in only requires re-encoding stored
+//! objects (the PULSESync container records the codec tag, so readers
+//! fail loudly, not silently).
+//!
+//! Stream layout:
+//!
+//! ```text
+//!   varint raw_len
+//!   repeated groups: control byte (LSB-first; bit=1 → match) then 8
+//!   items; literal = 1 raw byte, match = u16 LE distance (>=1) +
+//!   u8 (length - MIN_MATCH), lengths MIN_MATCH..=MIN_MATCH+255
+//! ```
+//!
+//! Compression quality is LZ4-class (greedy hash-table matcher, no
+//! entropy stage): constant/structured data shrinks by orders of
+//! magnitude, incompressible data expands by at most 1 bit per byte
+//! plus the header.
+
+use std::io;
+
+const MIN_MATCH: usize = 4;
+const MAX_MATCH: usize = MIN_MATCH + 255;
+const MAX_DISTANCE: usize = 65535;
+const HASH_BITS: u32 = 15;
+
+fn err(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg)
+}
+
+fn write_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let byte = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(byte);
+            return;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+fn read_varint(data: &[u8], pos: &mut usize) -> io::Result<u64> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let byte = *data.get(*pos).ok_or_else(|| err("truncated varint"))?;
+        *pos += 1;
+        if shift >= 63 && byte > 1 {
+            return Err(err("varint overflow"));
+        }
+        v |= u64::from(byte & 0x7f) << shift;
+        if byte & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+    }
+}
+
+#[inline]
+fn hash4(data: &[u8], i: usize) -> usize {
+    let word = u32::from_le_bytes([data[i], data[i + 1], data[i + 2], data[i + 3]]);
+    (word.wrapping_mul(2654435761) >> (32 - HASH_BITS)) as usize
+}
+
+/// Compress `data`. `level` is accepted for API parity with the real
+/// codecs; all levels currently use the same greedy matcher.
+pub fn compress(data: &[u8], _level: i32) -> Vec<u8> {
+    let mut out = Vec::with_capacity(16 + data.len() / 2);
+    write_varint(&mut out, data.len() as u64);
+
+    let mut table = vec![usize::MAX; 1 << HASH_BITS];
+    // pending items within the current control group
+    let mut control = 0u8;
+    let mut nbits = 0u8;
+    let mut group: Vec<u8> = Vec::with_capacity(8 * 3);
+    let mut control_slot: Option<usize> = None;
+
+    macro_rules! begin_item {
+        ($is_match:expr) => {
+            if nbits == 0 {
+                control_slot = Some(out.len());
+                out.push(0);
+            }
+            if $is_match {
+                control |= 1 << nbits;
+            }
+            nbits += 1;
+        };
+    }
+    macro_rules! flush_group {
+        () => {
+            if nbits > 0 {
+                out[control_slot.unwrap()] = control;
+                out.extend_from_slice(&group);
+                group.clear();
+                control = 0;
+                nbits = 0;
+                control_slot = None;
+            }
+        };
+    }
+
+    let mut i = 0usize;
+    while i < data.len() {
+        let mut matched = 0usize;
+        let mut dist = 0usize;
+        if i + MIN_MATCH <= data.len() {
+            let h = hash4(data, i);
+            let cand = table[h];
+            table[h] = i;
+            if cand != usize::MAX && i - cand <= MAX_DISTANCE {
+                // verify and extend
+                let max_len = MAX_MATCH.min(data.len() - i);
+                let mut l = 0usize;
+                while l < max_len && data[cand + l] == data[i + l] {
+                    l += 1;
+                }
+                if l >= MIN_MATCH {
+                    matched = l;
+                    dist = i - cand;
+                }
+            }
+        }
+        if matched >= MIN_MATCH {
+            begin_item!(true);
+            group.extend_from_slice(&(dist as u16).to_le_bytes());
+            group.push((matched - MIN_MATCH) as u8);
+            // seed the table sparsely inside the match to keep the
+            // matcher O(n) on highly repetitive data
+            let step = 1 + matched / 8;
+            let mut j = i + 1;
+            while j + MIN_MATCH <= data.len() && j < i + matched {
+                table[hash4(data, j)] = j;
+                j += step;
+            }
+            i += matched;
+        } else {
+            begin_item!(false);
+            group.push(data[i]);
+            i += 1;
+        }
+        if nbits == 8 {
+            flush_group!();
+        }
+    }
+    flush_group!();
+    out
+}
+
+/// Decompress a stream produced by [`compress`]. The declared raw
+/// length is validated against `max_len` before allocation so a
+/// corrupted header cannot trigger an outsized allocation.
+pub fn decompress(data: &[u8], max_len: usize) -> io::Result<Vec<u8>> {
+    let mut pos = 0usize;
+    let raw_len = read_varint(data, &mut pos)? as usize;
+    if raw_len > max_len {
+        return Err(err("declared length exceeds limit"));
+    }
+    let mut out = Vec::with_capacity(raw_len);
+    while out.len() < raw_len {
+        let control = *data.get(pos).ok_or_else(|| err("truncated control byte"))?;
+        pos += 1;
+        for bit in 0..8 {
+            if out.len() == raw_len {
+                break;
+            }
+            if control & (1 << bit) != 0 {
+                if pos + 3 > data.len() {
+                    return Err(err("truncated match"));
+                }
+                let dist = u16::from_le_bytes([data[pos], data[pos + 1]]) as usize;
+                let len = data[pos + 2] as usize + MIN_MATCH;
+                pos += 3;
+                if dist == 0 || dist > out.len() {
+                    return Err(err("match distance out of range"));
+                }
+                if out.len() + len > raw_len {
+                    return Err(err("match overruns declared length"));
+                }
+                // overlapping copy must be byte-at-a-time
+                let start = out.len() - dist;
+                for k in 0..len {
+                    let b = out[start + k];
+                    out.push(b);
+                }
+            } else {
+                let b = *data.get(pos).ok_or_else(|| err("truncated literal"))?;
+                pos += 1;
+                out.push(b);
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(data: &[u8]) {
+        let c = compress(data, 1);
+        let d = decompress(&c, data.len()).unwrap();
+        assert_eq!(d, data, "roundtrip failed for len {}", data.len());
+    }
+
+    #[test]
+    fn roundtrips() {
+        roundtrip(b"");
+        roundtrip(b"a");
+        roundtrip(b"abcabcabcabcabcabcabcabc");
+        roundtrip(&vec![7u8; 100_000]);
+        let patterned: Vec<u8> = (0..50_000u32).map(|i| (i % 251) as u8).collect();
+        roundtrip(&patterned);
+        // pseudo-random (LCG) incompressible-ish data
+        let mut x = 12345u64;
+        let random: Vec<u8> = (0..30_000)
+            .map(|_| {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                (x >> 33) as u8
+            })
+            .collect();
+        roundtrip(&random);
+    }
+
+    #[test]
+    fn constant_data_shrinks_hard() {
+        let data = vec![42u8; 100_000];
+        let c = compress(&data, 1);
+        assert!(c.len() < data.len() / 50, "compressed to {}", c.len());
+    }
+
+    #[test]
+    fn truncation_and_corruption_error_cleanly() {
+        let data: Vec<u8> = (0..10_000u32).map(|i| (i % 17) as u8).collect();
+        let c = compress(&data, 1);
+        for cut in [0usize, 1, c.len() / 2, c.len() - 1] {
+            assert!(decompress(&c[..cut], data.len()).is_err(), "cut {}", cut);
+        }
+        // limit enforced before allocation
+        assert!(decompress(&c, data.len() - 1).is_err());
+    }
+
+    #[test]
+    fn overlapping_matches() {
+        // RLE-style: match distance 1
+        let mut data = vec![b'x'];
+        data.extend(std::iter::repeat(b'y').take(1000));
+        roundtrip(&data);
+    }
+}

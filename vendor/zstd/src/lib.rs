@@ -1,0 +1,35 @@
+//! Offline stand-in for the `zstd` crate's `bulk` API. Backed by the
+//! vendored [`lzcore`] LZSS codec — **not** zstd wire format (see
+//! `vendor/README.md` and `lzcore`'s crate docs for why this is safe
+//! in this workspace: the stream is only ever read back by the same
+//! library, and stored containers carry a codec tag). Signatures match
+//! `zstd::bulk`, so restoring the real crate is a manifest-only change.
+
+pub mod bulk {
+    use std::io;
+
+    /// Compress `data` at `level` (levels are accepted for API parity;
+    /// the backing LZSS matcher is level-independent).
+    pub fn compress(data: &[u8], level: i32) -> io::Result<Vec<u8>> {
+        Ok(lzcore::compress(data, level))
+    }
+
+    /// Decompress, allocating at most `capacity` output bytes — same
+    /// contract as `zstd::bulk::decompress` (errors if the frame's
+    /// declared content size exceeds `capacity`).
+    pub fn decompress(data: &[u8], capacity: usize) -> io::Result<Vec<u8>> {
+        lzcore::decompress(data, capacity)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn bulk_roundtrip_and_capacity() {
+        let data = vec![9u8; 50_000];
+        let c = super::bulk::compress(&data, 1).unwrap();
+        assert!(c.len() < data.len() / 10);
+        assert_eq!(super::bulk::decompress(&c, data.len()).unwrap(), data);
+        assert!(super::bulk::decompress(&c, data.len() - 1).is_err());
+    }
+}
