@@ -2,112 +2,67 @@
 //! a trainer publishes sparse BF16 patches as **sharded v3 frames**
 //! through a relay; inference workers subscribe (including a late
 //! joiner that catches up from the anchor) and verify bit-identical
-//! reconstruction end to end — each shard against its subtree root,
-//! each step against the global hash-tree root.
+//! reconstruction end to end.
+//!
+//! This used to hand-wire the relay protocol; it now runs the library
+//! `Publisher`/`Consumer` over `RelayTransport` — the exact same state
+//! machines the object-store path uses, on a different fabric. The
+//! workers poll `latest_ready()` (one scan per poll, cached into the
+//! following `synchronize()`), and a corrupted shard would be healed
+//! by a per-subscriber NACK retransmit without rebroadcasting.
 //!
 //! Run: cargo run --release --example live_sync
 
 use pulse::bf16;
 use pulse::net::relay::Relay;
-use pulse::net::tcp::{self, kind, Frame};
-use pulse::pulse::sync::ShardedEncoder;
-use pulse::sparse::container::{self, EncodeOpts, Values};
-use pulse::sparse::hashtree::{HashTree, ShardPatchRef, DEFAULT_CHUNK_ELEMS};
+use pulse::net::transport::{RelayTransport, SyncTransport};
+use pulse::pulse::sync::{Consumer, Publisher, SyncPath};
 use pulse::sparse::{synthetic_layout, TensorShape};
 use pulse::util::rng::Rng;
+use std::sync::Arc;
 
 const SHARDS: usize = 4;
 
-/// Worker loop: anchor → weights + tree, then one sharded step at a
-/// time (frames arrive shard 0..S-1 in order on the stream), applied
-/// in parallel with per-shard verification.
+/// Worker loop: a `Consumer<RelayTransport>` polling the staged stream
+/// until the trainer closes it. Returns (steps applied, bytes fetched,
+/// final root).
 fn run_worker(
     port: u16,
     layout: Vec<TensorShape>,
-    n: usize,
-) -> anyhow::Result<(usize, u64)> {
-    let mut conn = tcp::connect_local(port)?;
-    let first = tcp::read_frame(&mut conn)?;
-    assert_eq!(first.kind, kind::ANCHOR);
-    let raw = zstd::bulk::decompress(&first.payload, n * 2)?;
-    let mut weights = pulse::util::bytes_to_u16(&raw);
-    let mut tree = HashTree::build(&weights, DEFAULT_CHUNK_ELEMS);
+) -> anyhow::Result<(usize, u64, String)> {
+    let transport = RelayTransport::subscribe(port)?;
+    let mut consumer = Consumer::over(transport, layout);
     let mut steps = 0usize;
-    let mut bytes = first.payload.len() as u64;
     loop {
-        let f = tcp::read_frame(&mut conn)?;
-        match f.kind {
-            kind::PATCH => {
-                bytes += f.payload.len() as u64;
-                let meta = container::peek_meta(&f.payload)?;
-                // collect the rest of this step's shard frames; an
-                // ANCHOR arriving mid-step means the relay coalesced a
-                // catch-up for us — resync from it instead
-                let mut frames = vec![f];
-                let mut resynced = false;
-                while frames.len() < meta.shard_count as usize {
-                    let nf = tcp::read_frame(&mut conn)?;
-                    bytes += nf.payload.len() as u64;
-                    match nf.kind {
-                        kind::PATCH => frames.push(nf),
-                        kind::ANCHOR => {
-                            let raw = zstd::bulk::decompress(&nf.payload, n * 2)?;
-                            weights = pulse::util::bytes_to_u16(&raw);
-                            tree = HashTree::build(&weights, DEFAULT_CHUNK_ELEMS);
-                            resynced = true;
-                            break;
-                        }
-                        kind::CLOSE => return Ok((steps, bytes)),
-                        _ => {}
-                    }
-                }
-                if resynced {
-                    continue;
-                }
-                let patches: Vec<_> = frames
-                    .iter()
-                    .map(|fr| container::decode(&fr.payload, &layout))
-                    .collect::<anyhow::Result<_>>()?;
-                let refs: Vec<ShardPatchRef> = patches
-                    .iter()
-                    .map(|p| ShardPatchRef {
-                        elem_lo: p.elem_offset as usize,
-                        elem_hi: (p.elem_offset + p.elem_len) as usize,
-                        indices: &p.indices,
-                        values: match &p.values {
-                            Values::Bf16(v) => v,
-                            _ => panic!("wrong value kind"),
-                        },
-                        expect_root: &p.shard_root,
-                    })
-                    .collect();
-                let ok = tree.apply_and_rehash_shards(&mut weights, &refs);
-                assert!(ok.iter().all(|&v| v), "shard subtree verification failed");
-                assert_eq!(
-                    tree.root_hex(),
-                    patches[0].result_hash,
-                    "global root mismatch after step {}",
-                    meta.step
-                );
-                steps += 1;
+        // read the close flag BEFORE polling: the receiver stages every
+        // in-flight frame before it sets closed, so "closed and the
+        // subsequent poll saw nothing new" means fully drained
+        let closed = consumer.transport.stream_closed();
+        let head = consumer.latest_ready()?;
+        let behind =
+            head.is_some_and(|h| consumer.weights.is_none() || h > consumer.step);
+        if behind {
+            let cs = consumer.synchronize()?;
+            assert!(cs.verified);
+            assert_eq!(cs.shard_refetches, 0);
+            if cs.path != SyncPath::UpToDate {
+                steps += cs.patches_applied + cs.anchors_restored;
             }
-            kind::ANCHOR => {
-                // coalesced catch-up restart
-                let raw = zstd::bulk::decompress(&f.payload, n * 2)?;
-                weights = pulse::util::bytes_to_u16(&raw);
-                tree = HashTree::build(&weights, DEFAULT_CHUNK_ELEMS);
-                bytes += f.payload.len() as u64;
-            }
-            kind::CLOSE => return Ok((steps, bytes)),
-            _ => {}
+        } else if closed {
+            break;
+        } else {
+            std::thread::sleep(std::time::Duration::from_millis(2));
         }
     }
+    let bytes = consumer.transport.counters().bytes_fetched;
+    let root = consumer.tree_root().unwrap_or_default();
+    Ok((steps, bytes, root))
 }
 
 fn main() -> anyhow::Result<()> {
     let n = 500_000usize;
     let layout = synthetic_layout(n, 1024);
-    let relay = Relay::start()?;
+    let relay = Arc::new(Relay::start()?);
     println!("relay listening on 127.0.0.1:{} ({} shards/step)", relay.port, SHARDS);
 
     // trainer-side state: FP32 masters + previous BF16 view
@@ -122,27 +77,29 @@ fn main() -> anyhow::Result<()> {
     let mut prev = Vec::new();
     bf16::cast_slice_par(&master, &mut prev);
 
-    // ANCHOR frame: compressed full BF16 view
-    let anchor_payload = zstd::bulk::compress(pulse::util::u16_as_bytes(&prev), 1)?;
-    relay.publish(Frame { kind: kind::ANCHOR, payload: anchor_payload });
+    // publisher over the relay fabric: anchor 0 goes out immediately
+    let mut publisher =
+        Publisher::over(RelayTransport::publisher(relay.clone()), layout.clone(), prev, 1_000)?
+            .with_shards(SHARDS)
+            .with_shard_balancing(true);
 
     // two workers: one subscribes immediately, one joins late and
     // catches up from the relayed anchor + tail — each drained by its
     // own per-subscriber relay queue
     let (port, l1, l2) = (relay.port, layout.clone(), layout.clone());
-    let fast = std::thread::spawn(move || run_worker(port, l1, n));
+    let fast = std::thread::spawn(move || run_worker(port, l1));
     let late = std::thread::spawn(move || {
         std::thread::sleep(std::time::Duration::from_millis(150));
-        run_worker(port, l2, n)
+        run_worker(port, l2)
     });
     // wait for both (the late joiner replays the anchor + any tail it
-    // missed from the relay's catch-up preload) before streaming ends
+    // missed from the relay's catch-up preload) before streaming ends —
+    // CLOSE is a control broadcast, not part of the replayable tail
     while relay.subscriber_count() < 2 {
         std::thread::sleep(std::time::Duration::from_millis(10));
     }
 
     // trainer: 10 steps of Adam-scale drift → sharded sparse patches
-    let mut enc = ShardedEncoder::new(prev, 0);
     let mut total_patch_bytes = 0u64;
     for step in 1..=10u64 {
         for x in master.iter_mut() {
@@ -150,26 +107,26 @@ fn main() -> anyhow::Result<()> {
         }
         let mut view = Vec::new();
         bf16::cast_slice_par(&master, &mut view);
-        let encoded = enc.encode_step(step, &view, &layout, EncodeOpts::default(), SHARDS)?;
-        let step_bytes: u64 = encoded.frames.iter().map(|f| f.bytes.len() as u64).sum();
-        total_patch_bytes += step_bytes;
+        let ps = publisher.publish(step, &view)?;
+        total_patch_bytes += ps.patch_bytes;
         println!(
             "trainer step {:>2}: nnz {:>6} / {}  {} shards  {:>9} total",
             step,
-            encoded.nnz,
+            ps.nnz,
             n,
-            encoded.frames.len(),
-            pulse::util::fmt_bytes(step_bytes)
+            ps.shard_count,
+            pulse::util::fmt_bytes(ps.patch_bytes)
         );
-        for f in encoded.frames {
-            relay.publish(Frame { kind: kind::PATCH, payload: f.bytes });
-        }
     }
-    relay.publish(Frame { kind: kind::CLOSE, payload: vec![] });
-    let (fast_steps, fast_bytes) = fast.join().unwrap()?;
-    let (late_steps, late_bytes) = late.join().unwrap()?;
+    // CLOSE travels FIFO behind the data frames on every subscriber
+    // queue, so workers drain everything before they observe it
+    publisher.transport.close();
+    let (fast_steps, fast_bytes, fast_root) = fast.join().unwrap()?;
+    let (late_steps, late_bytes, late_root) = late.join().unwrap()?;
+    assert_eq!(fast_root, publisher.tree().root_hex(), "early worker root mismatch");
+    assert_eq!(late_root, publisher.tree().root_hex(), "late joiner root mismatch");
     println!(
-        "\nearly worker applied {} sharded steps over TCP ({}), all hash-verified ✓",
+        "\nearly worker applied {} steps over TCP ({}), all hash-verified ✓",
         fast_steps,
         pulse::util::fmt_bytes(fast_bytes)
     );

@@ -1,10 +1,13 @@
 //! End-to-end benches (§Perf): the PULSESync publish→synchronize
-//! roundtrip over the object store at 1M parameters (sharded vs
-//! unsharded fan-out — runs everywhere, including CI bench-smoke), and
-//! one full GRPO train step on the tiny model (requires artifacts;
-//! skipped cleanly without them).
+//! roundtrip at 1M parameters — sharded vs unsharded fan-out, over the
+//! object-store AND the in-proc `SyncTransport` backends, so the
+//! per-transport rows in `BENCH_e2e.json` separate protocol cost from
+//! store I/O (runs everywhere, including CI bench-smoke) — and one
+//! full GRPO train step on the tiny model (requires artifacts; skipped
+//! cleanly without them).
 use pulse::bf16;
 use pulse::coordinator;
+use pulse::net::transport::{InProcTransport, ObjectStoreTransport, SyncTransport};
 use pulse::optim::{AdamConfig, AdamW};
 use pulse::pulse::sync::{Consumer, Publisher};
 use pulse::rl::grpo::{self, GrpoConfig};
@@ -15,40 +18,69 @@ use pulse::storage::ObjectStore;
 use pulse::util::bench::Bench;
 use pulse::util::rng::Rng;
 
-/// Sharded vs unsharded publish+synchronize over a temp store: the
-/// whole sync plane (diff, encode, upload, download, decode, parallel
-/// apply, verify) per optimizer step.
+/// One publish+synchronize roundtrip bench over any transport pair:
+/// the whole sync plane (diff, encode, publish, fetch, decode,
+/// parallel apply, verify) per optimizer step.
+fn roundtrip_over<P: SyncTransport, C: SyncTransport>(
+    b: &mut Bench,
+    label: &str,
+    prod: P,
+    cons: C,
+    shards: usize,
+    n: usize,
+    init: &[u16],
+    rng: &mut Rng,
+) {
+    let layout = synthetic_layout(n, 1024);
+    let mut publisher = Publisher::over(prod, layout.clone(), init.to_vec(), 1_000_000)
+        .unwrap()
+        .with_shards(shards);
+    let mut consumer = Consumer::over(cons, layout);
+    consumer.synchronize().unwrap();
+    let mut w = init.to_vec();
+    let mut step = 0u64;
+    b.run_bytes(label, (n * 2) as u64, || {
+        step += 1;
+        // ~1% of positions move per step (paper's sparse regime)
+        for _ in 0..n / 100 {
+            let i = rng.below(n as u64) as usize;
+            w[i] = pulse::bf16::f32_to_bf16_bits((rng.normal() * 0.02) as f32);
+        }
+        publisher.publish(step, &w).unwrap();
+        let cs = consumer.synchronize().unwrap();
+        assert!(cs.verified);
+    });
+}
+
+/// Sharded vs unsharded roundtrips, per transport backend.
 fn bench_sync_roundtrip(b: &mut Bench) {
     let n = 1_000_000usize;
-    let layout = synthetic_layout(n, 1024);
     let mut rng = Rng::new(11);
     let init: Vec<u16> = (0..n)
         .map(|_| pulse::bf16::f32_to_bf16_bits((rng.normal() * 0.02) as f32))
         .collect();
     for shards in [1usize, 4] {
         let store = ObjectStore::temp(&format!("bench_e2e_s{}", shards)).unwrap();
-        let mut publisher =
-            Publisher::new(store.clone(), "sync", layout.clone(), init.clone(), 1_000_000)
-                .unwrap()
-                .with_shards(shards);
-        let mut consumer = Consumer::new(store, "sync", layout.clone());
-        consumer.synchronize().unwrap();
-        let mut w = init.clone();
-        let mut step = 0u64;
-        b.run_bytes(
+        roundtrip_over(
+            b,
             &format!("e2e/pulsesync_roundtrip/1M x{} shards", shards),
-            (n * 2) as u64,
-            || {
-                step += 1;
-                // ~1% of positions move per step (paper's sparse regime)
-                for _ in 0..n / 100 {
-                    let i = rng.below(n as u64) as usize;
-                    w[i] = pulse::bf16::f32_to_bf16_bits((rng.normal() * 0.02) as f32);
-                }
-                publisher.publish(step, &w).unwrap();
-                let cs = consumer.synchronize().unwrap();
-                assert!(cs.verified);
-            },
+            ObjectStoreTransport::new(store.clone(), "sync"),
+            ObjectStoreTransport::new(store, "sync"),
+            shards,
+            n,
+            &init,
+            &mut rng,
+        );
+        let fabric = InProcTransport::new();
+        roundtrip_over(
+            b,
+            &format!("e2e/pulsesync_roundtrip/1M x{} shards inproc", shards),
+            fabric.clone(),
+            fabric,
+            shards,
+            n,
+            &init,
+            &mut rng,
         );
     }
 }

@@ -99,12 +99,21 @@ fn main() {
 
     // sharded fan-out: the whole publisher front half (per-shard
     // diff+gather, one tree update, per-shard encode+compress) on the
-    // pool, alternating old↔new so every iteration does real work
-    for shards in [1usize, 4, 8] {
+    // pool, alternating old↔new so every iteration does real work.
+    // The `balanced` row adds the per-chunk nnz profile + equal-nnz
+    // cut on top, so the cost of load-balancing is visible next to the
+    // static split.
+    for (shards, balance) in [(1usize, false), (4, false), (4, true), (8, false)] {
         let mut enc = ShardedEncoder::new(old.clone(), 0);
+        enc.balance = balance;
+        let label = if balance {
+            format!("shard_encode_step/{} shards balanced", shards)
+        } else {
+            format!("shard_encode_step/{} shards", shards)
+        };
         let mut step = 0u64;
         let mut to_new = true;
-        b.run_bytes(&format!("shard_encode_step/{} shards", shards), bytes, || {
+        b.run_bytes(&label, bytes, || {
             step += 1;
             let target: &[u16] = if to_new { &new } else { &old };
             to_new = !to_new;

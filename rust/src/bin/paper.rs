@@ -66,11 +66,13 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         "table11" => table11(args),
         "table13" => table13(args),
         "table14" => table14(args),
+        "transports" => transports(args),
         "all" => {
             for c in [
                 "table1", "fig9", "fig3", "table2", "table6", "fig1", "fig2", "fig14", "fig13",
                 "fig16", "fig15", "fig4", "fig8", "table5", "table10", "table11", "table13",
-                "fig11", "table14", "fig7", "fig10", "fig12", "fig17", "table7", "fig6",
+                "fig11", "table14", "transports", "fig7", "fig10", "fig12", "fig17", "table7",
+                "fig6",
             ] {
                 println!("\n################ paper {} ################", c);
                 dispatch(c, args)?;
@@ -82,7 +84,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
                 "usage: paper <exp> [--options]\n\
                  exps: fig1 fig2 fig3 fig4 fig6 fig7 fig8 fig9 fig10 fig11 fig12 fig13 fig14\n\
                  fig15 fig16 fig17 table1 table2 table4 table5 table6 table7 table10\n\
-                 table11 table13 table14 all"
+                 table11 table13 table14 transports all"
             );
             Ok(())
         }
@@ -1293,6 +1295,136 @@ fn table14(args: &Args) -> Result<()> {
         &["path", "download", "decompress", "apply", "hash", "total"],
         &rows,
     );
+    Ok(())
+}
+
+// ====================================================== transports
+/// The same PULSESync stream over every local `SyncTransport` backend:
+/// per-backend publish/synchronize wall time plus traffic counters
+/// (`results/transport_plane.csv`). Object-store vs in-proc separates
+/// store I/O from protocol cost; the fault-injected leg prices §J.5
+/// self-healing (exactly one shard refetch for the injected
+/// corruption).
+fn transports(args: &Args) -> Result<()> {
+    use pulse::coordinator::metrics::TransportMeter;
+    use pulse::net::transport::{
+        FaultInjectingTransport, InProcTransport, ObjectStoreTransport, SyncTransport,
+    };
+    use pulse::pulse::sync::{Consumer, Publisher, SyncPath};
+    use pulse::storage::ObjectStore;
+    use pulse::util::rng::Rng;
+
+    fn drive<P: SyncTransport, C: SyncTransport>(
+        prod: P,
+        cons: C,
+        layout: &[sparse::TensorShape],
+        views: &[Vec<u16>],
+        shards: usize,
+        meter: &mut TransportMeter,
+    ) -> Result<(String, f64, f64)> {
+        let mut publisher =
+            Publisher::over(prod, layout.to_vec(), views[0].clone(), 6)?.with_shards(shards);
+        let mut consumer = Consumer::over(cons, layout.to_vec());
+        consumer.synchronize()?;
+        let label = consumer.transport.name().to_string();
+        let (mut t_pub, mut t_sync) = (0.0f64, 0.0f64);
+        for (step, view) in views.iter().enumerate().skip(1) {
+            let t = Stopwatch::start();
+            publisher.publish(step as u64, view)?;
+            t_pub += t.secs();
+            meter.record_publish(&label);
+            let t = Stopwatch::start();
+            let cs = consumer.synchronize()?;
+            t_sync += t.secs();
+            meter.record_sync(&label, cs.shard_refetches as u64, cs.path == SyncPath::Slow);
+            anyhow::ensure!(
+                cs.verified && consumer.weights.as_ref().unwrap() == view,
+                "bit-identity broken on {} at step {}",
+                label,
+                step
+            );
+        }
+        meter.set_counters(&label, consumer.transport.counters());
+        Ok((label, t_pub, t_sync))
+    }
+
+    let n = args.usize_or("params", 400_000);
+    let steps = args.usize_or("steps", 12) as u64;
+    let shards = args.usize_or("shards", 4).max(1);
+    let layout = sparse::synthetic_layout(n, 1024);
+    let mut rng = Rng::new(41);
+    let init: Vec<u16> = (0..n).map(|_| rng.next_u32() as u16).collect();
+    let mut views = vec![init.clone()];
+    {
+        let mut w = init;
+        for _ in 0..steps {
+            for _ in 0..n / 100 {
+                let i = rng.below(n as u64) as usize;
+                w[i] = rng.next_u32() as u16;
+            }
+            views.push(w.clone());
+        }
+    }
+
+    let mut meter = TransportMeter::new();
+    let mut timings = Vec::new();
+    let store = ObjectStore::temp("paper_transports")?;
+    timings.push(drive(
+        ObjectStoreTransport::new(store.clone(), "sync"),
+        ObjectStoreTransport::new(store.clone(), "sync"),
+        &layout,
+        &views,
+        shards,
+        &mut meter,
+    )?);
+    let fabric = InProcTransport::new();
+    timings.push(drive(fabric.clone(), fabric, &layout, &views, shards, &mut meter)?);
+    if shards > 1 {
+        // fault-injected in-proc: corrupt one shard of step 2 once; the
+        // consumer must heal it with exactly one refetch
+        let fabric = InProcTransport::new();
+        let cons =
+            FaultInjectingTransport::targeting(fabric.clone(), 2, 1.min(shards as u32 - 1));
+        timings.push(drive(fabric, cons, &layout, &views, shards, &mut meter)?);
+    } else {
+        // unsharded streams never call fetch_shard, so the targeted
+        // corruption scenario would silently measure nothing
+        println!("(fault-injected leg skipped: needs --shards > 1)");
+    }
+
+    let results = results_dir();
+    meter.write_csv(&results.join("transport_plane.csv"))?;
+    let mut rows = Vec::new();
+    for ((label, t_pub, t_sync), row) in timings.iter().zip(meter.rows()) {
+        rows.push(vec![
+            label.clone(),
+            format!("{:.1} ms", t_pub * 1e3 / steps as f64),
+            format!("{:.1} ms", t_sync * 1e3 / steps as f64),
+            fmt_bytes(row.counters.bytes_published),
+            fmt_bytes(row.counters.bytes_fetched),
+            row.counters.inventory_scans.to_string(),
+            row.shard_refetches.to_string(),
+            row.counters.faults_injected.to_string(),
+        ]);
+    }
+    print_table(
+        &format!(
+            "Transport plane: identical {}-step stream ({} params, {} shards) per backend",
+            steps, n, shards
+        ),
+        &[
+            "transport",
+            "publish/step",
+            "sync/step",
+            "bytes up",
+            "bytes down",
+            "scans",
+            "refetches",
+            "faults",
+        ],
+        &rows,
+    );
+    std::fs::remove_dir_all(store.root()).ok();
     Ok(())
 }
 

@@ -1,8 +1,11 @@
 //! CSV metrics emission for the paper harness (`results/*.csv`) — every
 //! figure/table is regenerated from these files — plus the per-shard
 //! fan-out meter ([`ShardFanoutMeter`]) that tracks bytes/latency per
-//! shard of the sharded publish path (`pulse::sync`).
+//! shard of the sharded publish path (`pulse::sync`) and the
+//! per-transport meter ([`TransportMeter`]) that accumulates sync-plane
+//! traffic per `net::transport` backend.
 
+use crate::net::transport::TransportCounters;
 use anyhow::Result;
 use std::io::Write;
 use std::path::{Path, PathBuf};
@@ -112,6 +115,104 @@ impl ShardFanoutMeter {
     }
 }
 
+/// Accumulates sync-plane traffic per transport backend: one row per
+/// backend label, fed from [`TransportCounters`] snapshots plus the
+/// consumer's `SyncStats` refetch/path tallies. Feeds
+/// `results/transport_plane.csv` and the `paper transports` table, so
+/// the per-backend cost of the same PULSESync stream is directly
+/// comparable.
+#[derive(Debug, Default)]
+pub struct TransportMeter {
+    rows: Vec<TransportRow>,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct TransportRow {
+    pub transport: String,
+    pub publishes: u64,
+    pub syncs: u64,
+    pub counters: TransportCounters,
+    pub shard_refetches: u64,
+    pub slow_paths: u64,
+}
+
+impl TransportMeter {
+    pub fn new() -> TransportMeter {
+        TransportMeter::default()
+    }
+
+    fn row_mut(&mut self, transport: &str) -> &mut TransportRow {
+        if let Some(i) = self.rows.iter().position(|r| r.transport == transport) {
+            return &mut self.rows[i];
+        }
+        self.rows.push(TransportRow { transport: transport.to_string(), ..Default::default() });
+        self.rows.last_mut().unwrap()
+    }
+
+    /// Record one publish on `transport` (counter deltas are absorbed
+    /// by [`TransportMeter::set_counters`] at the end of a run).
+    pub fn record_publish(&mut self, transport: &str) {
+        self.row_mut(transport).publishes += 1;
+    }
+
+    /// Record one synchronize() outcome on `transport`.
+    pub fn record_sync(&mut self, transport: &str, shard_refetches: u64, slow_path: bool) {
+        let row = self.row_mut(transport);
+        row.syncs += 1;
+        row.shard_refetches += shard_refetches;
+        if slow_path {
+            row.slow_paths += 1;
+        }
+    }
+
+    /// Attach the final counter snapshot for `transport`.
+    pub fn set_counters(&mut self, transport: &str, counters: TransportCounters) {
+        self.row_mut(transport).counters = counters;
+    }
+
+    pub fn rows(&self) -> &[TransportRow] {
+        &self.rows
+    }
+
+    /// One CSV row per backend.
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        let mut w = CsvWriter::create(
+            path,
+            &[
+                "transport",
+                "publishes",
+                "syncs",
+                "inventory_scans",
+                "frames_published",
+                "bytes_published",
+                "frames_fetched",
+                "bytes_fetched",
+                "nacks_sent",
+                "faults_injected",
+                "shard_refetches",
+                "slow_paths",
+            ],
+        )?;
+        for r in &self.rows {
+            w.row(&[
+                r.transport.clone(),
+                r.publishes.to_string(),
+                r.syncs.to_string(),
+                r.counters.inventory_scans.to_string(),
+                r.counters.frames_published.to_string(),
+                r.counters.bytes_published.to_string(),
+                r.counters.frames_fetched.to_string(),
+                r.counters.bytes_fetched.to_string(),
+                r.counters.nacks_sent.to_string(),
+                r.counters.faults_injected.to_string(),
+                r.shard_refetches.to_string(),
+                r.slow_paths.to_string(),
+            ])?;
+        }
+        Ok(())
+    }
+}
+
 /// Results directory: `$PULSE_RESULTS` or `<repo>/results`.
 pub fn results_dir() -> PathBuf {
     if let Ok(d) = std::env::var("PULSE_RESULTS") {
@@ -167,6 +268,34 @@ mod tests {
         let text = std::fs::read_to_string(&p).unwrap();
         assert_eq!(text.lines().count(), 5, "header + one row per shard");
         assert!(text.lines().nth(1).unwrap().starts_with("0,2,400,"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn transport_meter_accumulates_per_backend() {
+        let mut m = TransportMeter::new();
+        m.record_publish("in-proc");
+        m.record_publish("in-proc");
+        m.record_sync("in-proc", 1, false);
+        m.record_sync("object-store", 0, true);
+        m.set_counters(
+            "in-proc",
+            TransportCounters { inventory_scans: 2, bytes_fetched: 512, ..Default::default() },
+        );
+        assert_eq!(m.rows().len(), 2);
+        let row = &m.rows()[0];
+        assert_eq!(row.transport, "in-proc");
+        assert_eq!(row.publishes, 2);
+        assert_eq!(row.syncs, 1);
+        assert_eq!(row.shard_refetches, 1);
+        assert_eq!(row.counters.bytes_fetched, 512);
+        assert_eq!(m.rows()[1].slow_paths, 1);
+        let dir = std::env::temp_dir().join(format!("pulse_transcsv_{}", std::process::id()));
+        let p = dir.join("transport_plane.csv");
+        m.write_csv(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text.lines().count(), 3, "header + one row per backend");
+        assert!(text.lines().nth(1).unwrap().starts_with("in-proc,2,1,2,"));
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

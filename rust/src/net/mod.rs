@@ -1,9 +1,13 @@
 //! Networking substrate: a deterministic bandwidth/latency model used by
-//! every bench (Fig. 1, Table 14), plus a real framed TCP transport and
-//! relay for the live-sync example (paper Fig. 5's relay network).
+//! every bench (Fig. 1, Table 14), a real framed TCP transport and relay
+//! (paper Fig. 5's relay network), and the [`transport`] module — the
+//! `SyncTransport` trait that runs the whole PULSESync plane over the
+//! object store, the relay, an in-proc staging map, or fault-injected
+//! wrappers of any of them.
 
 pub mod relay;
 pub mod tcp;
+pub mod transport;
 
 /// A point-to-point link with a bandwidth/latency cost model.
 /// `transfer_time(bytes)` is the paper's accounting primitive: all of

@@ -2,9 +2,9 @@
 //! BF16 weight patches from trainers to inference workers").
 //!
 //! The relay accepts one publisher and N subscriber connections and
-//! fans every PATCH/ANCHOR frame out to all subscribers. Subscribers
-//! that connect late first receive the most recent ANCHOR plus the
-//! subsequent patch tail (mirroring the slow path of Alg. 5).
+//! fans every PATCH/ANCHOR/MARKER frame out to all subscribers.
+//! Subscribers that connect late first receive the most recent ANCHOR
+//! plus the subsequent tail (mirroring the slow path of Alg. 5).
 //!
 //! # Fan-out architecture: per-subscriber queues
 //!
@@ -15,6 +15,11 @@
 //! held one mutex around all subscribers and wrote frames serially, so
 //! one full TCP send buffer stalled every worker).
 //!
+//! A dedicated per-subscriber **reader thread** drains the subscriber's
+//! upstream direction: NACK frames are serviced from the relay's frame
+//! index (below), CLOSE or a dead socket marks the subscriber dead so
+//! the next publish prunes it.
+//!
 //! # Coalescing catch-up policy
 //!
 //! Patch frames are chained deltas, so dropping one at random would
@@ -24,13 +29,29 @@
 //!   queue is cleared and restarts at the anchor.
 //! * A **PATCH** that would overflow the bounded queue replaces the
 //!   queue contents with the canonical catch-up bundle — last ANCHOR +
-//!   every patch published since (`tail`) — which is exactly the
-//!   late-joiner stream and therefore always a consistent restart.
-//!   Repeated overflow re-coalesces, so a lagging subscriber's memory
-//!   stays bounded by `max(queue_depth, anchor_interval + 1)` frames
-//!   while it receives superseded patches at most once.
-//! * Control frames (CLOSE, …) are never dropped; a coalesce re-queues
-//!   them after the catch-up bundle.
+//!   everything published since (`tail`, patches *and* markers) — which
+//!   is exactly the late-joiner stream and therefore always a
+//!   consistent restart. Repeated overflow re-coalesces, so a lagging
+//!   subscriber's memory stays bounded by
+//!   `max(queue_depth, anchor_interval + 1)` frames while it receives
+//!   superseded patches at most once.
+//! * MARKER frames ride in the tail (they are part of the replayable
+//!   stream — a step is only committed once its marker lands), so a
+//!   coalesced or late-joining subscriber still sees every surviving
+//!   step's commit.
+//! * Other control frames (CLOSE, …) are never dropped; a coalesce
+//!   re-queues them after the catch-up bundle.
+//!
+//! # Per-shard NACK routing
+//!
+//! PATCH payloads that parse as patch containers are indexed by
+//! `(step, shard_index)` (via `container::peek_meta`; opaque payloads
+//! are simply not indexed). A NACK read from a subscriber's socket is
+//! answered by enqueueing the indexed frame **onto that subscriber's
+//! queue only** — a shard retransmit never rebroadcasts to the other
+//! subscribers. The index is bounded to the most recent
+//! [`INDEX_STEPS`] distinct steps; a NACK for an evicted step is
+//! ignored and the subscriber recovers via the anchor slow path.
 //!
 //! Writers that hit a dead socket mark themselves dead and are pruned
 //! on the next publish. [`Relay::stop`] waits briefly for queues to
@@ -40,13 +61,16 @@
 
 use super::tcp::{self, kind, Frame};
 use anyhow::Result;
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 /// Default bound on a subscriber's outbound queue, in frames.
 pub const DEFAULT_QUEUE_DEPTH: usize = 64;
+
+/// Distinct steps the NACK frame index retains.
+pub const INDEX_STEPS: usize = 8;
 
 struct SubQueue {
     /// Frames are `Arc`-shared across subscribers/tail, so enqueueing
@@ -63,26 +87,33 @@ type Chan = Arc<(Mutex<SubQueue>, Condvar)>;
 struct SubHandle {
     chan: Chan,
     /// Clone of the subscriber socket, kept so `stop()` can unblock a
-    /// writer stuck in `write`.
+    /// writer stuck in `write` (the reader holds its own clone).
     stream: TcpStream,
     writer: Option<std::thread::JoinHandle<()>>,
+    reader: Option<std::thread::JoinHandle<()>>,
 }
 
 struct Shared {
     subs: Vec<SubHandle>,
     last_anchor: Option<Arc<Frame>>,
-    /// Patches since the last anchor, in order.
+    /// Patches + markers since the last anchor, in publish order.
     tail: Vec<Arc<Frame>>,
     queue_depth: usize,
     /// Total coalescing events across subscribers (observability).
     coalesced: u64,
+    /// Container PATCH frames by (step, shard_index) for NACK service.
+    frame_index: HashMap<(u64, u32), Arc<Frame>>,
+    /// Distinct steps present in `frame_index`, insertion order.
+    index_steps: VecDeque<u64>,
+    /// Shard NACKs serviced from the index (observability/tests).
+    nacks_serviced: u64,
 }
 
 /// Relay server handle.
 pub struct Relay {
     pub port: u16,
     shared: Arc<Mutex<Shared>>,
-    accept_thread: Option<std::thread::JoinHandle<()>>,
+    accept_thread: Mutex<Option<std::thread::JoinHandle<()>>>,
     stop: Arc<AtomicBool>,
 }
 
@@ -103,9 +134,13 @@ impl Relay {
             tail: Vec::new(),
             queue_depth: queue_depth.max(1),
             coalesced: 0,
+            frame_index: HashMap::new(),
+            index_steps: VecDeque::new(),
+            nacks_serviced: 0,
         }));
         let stop = Arc::new(AtomicBool::new(false));
-        let accept_thread = Some(spawn_accept(listener, shared.clone(), stop.clone()));
+        let accept_thread =
+            Mutex::new(Some(spawn_accept(listener, shared.clone(), stop.clone())));
         Ok(Relay { port, shared, accept_thread, stop })
     }
 
@@ -122,19 +157,43 @@ impl Relay {
                 sh.last_anchor = Some(frame.clone());
                 sh.tail.clear();
             }
-            kind::PATCH => sh.tail.push(frame.clone()),
+            kind::PATCH => {
+                sh.tail.push(frame.clone());
+                // index container frames for per-shard NACK service;
+                // opaque payloads just aren't NACKable
+                if let Ok(meta) = crate::sparse::container::peek_meta(&frame.payload) {
+                    if !sh.index_steps.contains(&meta.step) {
+                        sh.index_steps.push_back(meta.step);
+                        while sh.index_steps.len() > INDEX_STEPS {
+                            let old = sh.index_steps.pop_front().unwrap();
+                            sh.frame_index.retain(|&(s, _), _| s != old);
+                        }
+                    }
+                    sh.frame_index.insert((meta.step, meta.shard_index), frame.clone());
+                }
+            }
+            // markers are part of the replayable stream: a step is only
+            // committed once its marker lands, so late joiners and
+            // coalesced subscribers must replay them with the patches
+            kind::MARKER => sh.tail.push(frame.clone()),
             _ => {}
         }
-        let Shared { subs, last_anchor, tail, queue_depth, coalesced } = sh;
+        let Shared { subs, last_anchor, tail, queue_depth, coalesced, .. } = sh;
         let depth = *queue_depth;
         subs.retain_mut(|sub| {
             let (lock, cv) = &*sub.chan;
             let mut q = lock.lock().unwrap();
             if q.dead {
                 drop(q);
+                // unblock a writer stuck in write() / a reader stuck in
+                // read() before joining the writer; the reader handle is
+                // dropped (detached) — it exits on the socket error and
+                // never blocks on anything we hold
+                let _ = sub.stream.shutdown(Shutdown::Both);
                 if let Some(h) = sub.writer.take() {
                     let _ = h.join();
                 }
+                drop(sub.reader.take());
                 return false;
             }
             match frame.kind {
@@ -147,12 +206,17 @@ impl Relay {
                 kind::PATCH if q.q.len() >= depth => {
                     // slow subscriber: swap the queue for the canonical
                     // catch-up bundle (anchor + tail), keeping control
-                    // frames; superseded patches are dropped once
+                    // frames; superseded patches/markers are dropped
+                    // once (the tail replays surviving markers)
                     *coalesced += 1;
                     let keep: Vec<Arc<Frame>> = q
                         .q
                         .iter()
-                        .filter(|f| f.kind != kind::PATCH && f.kind != kind::ANCHOR)
+                        .filter(|f| {
+                            f.kind != kind::PATCH
+                                && f.kind != kind::ANCHOR
+                                && f.kind != kind::MARKER
+                        })
                         .cloned()
                         .collect();
                     q.dropped += (q.q.len() - keep.len()) as u64;
@@ -189,15 +253,21 @@ impl Relay {
         sh.subs.iter().map(|s| s.chan.0.lock().unwrap().dropped).sum()
     }
 
+    /// Shard NACKs answered from the frame index so far.
+    pub fn nacks_serviced(&self) -> u64 {
+        self.shared.lock().unwrap().nacks_serviced
+    }
+
     /// Graceful-best-effort shutdown: waits briefly for queues to
     /// drain, then closes subscriber sockets (unblocking any stalled
-    /// writer) and joins all threads.
-    pub fn stop(mut self) {
+    /// writer or reader) and joins all threads. Takes `&self` so an
+    /// `Arc<Relay>` shared with a transport can still be stopped.
+    pub fn stop(&self) {
         self.stop.store(true, Ordering::SeqCst);
         // join the accept thread FIRST (it polls the stop flag every
         // ~5ms), so no subscriber can register after we drain the list
-        // — otherwise its writer thread would leak
-        if let Some(t) = self.accept_thread.take() {
+        // — otherwise its writer/reader threads would leak
+        if let Some(t) = self.accept_thread.lock().unwrap().take() {
             let _ = t.join();
         }
         let subs = {
@@ -220,13 +290,16 @@ impl Relay {
             if let Some(h) = sub.writer.take() {
                 let _ = h.join();
             }
+            if let Some(h) = sub.reader.take() {
+                let _ = h.join();
+            }
         }
     }
 }
 
 /// Writer thread: drains one subscriber's queue onto its socket. Only
-/// this thread ever blocks on the socket, so a stalled subscriber
-/// cannot delay anyone else.
+/// this thread ever blocks on the socket's write half, so a stalled
+/// subscriber cannot delay anyone else.
 fn spawn_writer(
     mut stream: TcpStream,
     chan: Chan,
@@ -250,9 +323,62 @@ fn spawn_writer(
             }
         };
         if tcp::write_frame(&mut stream, &frame).is_err() {
-            let (lock, _) = &*chan;
+            let (lock, cv) = &*chan;
             lock.lock().unwrap().dead = true;
+            cv.notify_all();
             return;
+        }
+    })
+}
+
+/// Reader thread: drains one subscriber's upstream direction. A NACK
+/// for an indexed (step, shard) frame re-queues that frame **onto this
+/// subscriber's queue only**. EOF, a socket error, or CLOSE marks the
+/// subscriber dead (and shuts the socket down so the writer unblocks).
+///
+/// Lock order matches `publish`: `shared` first, then the subscriber
+/// chan — never the reverse — so NACK routing cannot deadlock against
+/// a concurrent publish.
+fn spawn_reader(
+    mut stream: TcpStream,
+    chan: Chan,
+    shared: Arc<Mutex<Shared>>,
+    stop: Arc<AtomicBool>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || loop {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        match tcp::read_frame(&mut stream) {
+            Ok(f) if f.kind == kind::NACK => {
+                if let Ok((step, shard)) = tcp::parse_shard_ack(&f.payload) {
+                    let mut sh = shared.lock().unwrap();
+                    if let Some(frame) = sh.frame_index.get(&(step, shard)).cloned() {
+                        sh.nacks_serviced += 1;
+                        let (lock, cv) = &*chan;
+                        let mut q = lock.lock().unwrap();
+                        if !q.dead {
+                            // a retransmit bypasses the coalescing
+                            // policy: it is already the minimal repair
+                            q.q.push_back(frame);
+                            cv.notify_one();
+                        }
+                    }
+                    // unknown (step, shard): evicted or never indexed —
+                    // the subscriber recovers via the anchor slow path
+                }
+            }
+            // ACK/SUBSCRIBE are accepted and ignored (observability
+            // hooks may consume them later); CLOSE and socket errors
+            // end the subscription
+            Ok(f) if f.kind != kind::CLOSE => {}
+            _ => {
+                let (lock, cv) = &*chan;
+                lock.lock().unwrap().dead = true;
+                cv.notify_all();
+                let _ = stream.shutdown(Shutdown::Both);
+                return;
+            }
         }
     })
 }
@@ -269,13 +395,14 @@ fn spawn_accept(
         match listener.accept() {
             Ok((stream, _)) => {
                 stream.set_nodelay(true).ok();
-                let clone = match stream.try_clone() {
-                    Ok(c) => c,
-                    Err(_) => continue,
+                let (clone, rclone) = match (stream.try_clone(), stream.try_clone()) {
+                    (Ok(c), Ok(r)) => (c, r),
+                    _ => continue,
                 };
                 let mut sh = shared.lock().unwrap();
-                // catch-up preload: anchor + tail; the writer thread
-                // delivers it, so a slow joiner cannot stall accept
+                // catch-up preload: anchor + tail (patches and markers);
+                // the writer thread delivers it, so a slow joiner cannot
+                // stall accept
                 let mut q = VecDeque::new();
                 if let Some(a) = &sh.last_anchor {
                     q.push_back(a.clone());
@@ -286,7 +413,13 @@ fn spawn_accept(
                 let chan: Chan =
                     Arc::new((Mutex::new(SubQueue { q, dead: false, dropped: 0 }), Condvar::new()));
                 let writer = spawn_writer(stream, chan.clone(), stop.clone());
-                sh.subs.push(SubHandle { chan, stream: clone, writer: Some(writer) });
+                let reader = spawn_reader(rclone, chan.clone(), shared.clone(), stop.clone());
+                sh.subs.push(SubHandle {
+                    chan,
+                    stream: clone,
+                    writer: Some(writer),
+                    reader: Some(reader),
+                });
             }
             Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 std::thread::sleep(std::time::Duration::from_millis(5));
@@ -299,6 +432,8 @@ fn spawn_accept(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sparse::container::{self, EncodeOpts, Patch, Values};
+    use crate::sparse::synthetic_layout;
 
     fn frame(kind_: u8, tag: u8) -> Frame {
         Frame { kind: kind_, payload: vec![tag; 16] }
@@ -339,6 +474,28 @@ mod tests {
     }
 
     #[test]
+    fn markers_ride_the_tail() {
+        let relay = Relay::start().unwrap();
+        relay.publish(frame(kind::ANCHOR, 1));
+        relay.publish(Frame {
+            kind: kind::MARKER,
+            payload: tcp::marker_frame_payload(true, 0, "m0"),
+        });
+        relay.publish(frame(kind::PATCH, 2));
+        relay.publish(Frame {
+            kind: kind::MARKER,
+            payload: tcp::marker_frame_payload(false, 1, "m1"),
+        });
+        // a late joiner replays anchor, anchor marker, patch, marker —
+        // in publish order
+        let mut late = tcp::connect_local(relay.port).unwrap();
+        let kinds: Vec<u8> =
+            (0..4).map(|_| tcp::read_frame(&mut late).unwrap().kind).collect();
+        assert_eq!(kinds, vec![kind::ANCHOR, kind::MARKER, kind::PATCH, kind::MARKER]);
+        relay.stop();
+    }
+
+    #[test]
     fn dead_subscribers_are_pruned() {
         let relay = Relay::start().unwrap();
         {
@@ -350,8 +507,8 @@ mod tests {
                 std::thread::sleep(std::time::Duration::from_millis(5));
             }
         } // dropped
-        // publish until the writer hits the broken pipe and the dead
-        // entry is pruned on a subsequent publish
+        // publish until the writer/reader notices the dead socket and
+        // the dead entry is pruned on a subsequent publish
         let mut pruned = false;
         for _ in 0..400 {
             relay.publish(Frame { kind: kind::PATCH, payload: vec![0; 1 << 16] });
@@ -395,6 +552,80 @@ mod tests {
             assert!(q.dropped >= 1, "superseded patches must be counted");
         }
         drop(conn);
+        relay.stop();
+    }
+
+    /// A v3-shaped shard frame whose header peeks as (step, shard, S).
+    fn shard_frame(step: u64, shard: u32, of: u32, tag: u8) -> Frame {
+        let n = 2048usize;
+        let layout = synthetic_layout(n, 64);
+        let per = n as u64 / of as u64;
+        let patch = Patch {
+            step,
+            base_step: step.saturating_sub(1),
+            total_params: n as u64,
+            indices: vec![shard as u64 * per],
+            values: Values::Bf16(vec![tag as u16]),
+            result_hash: "ab".repeat(32),
+            chunk_elems: 64,
+            shard_index: shard,
+            shard_count: of,
+            elem_offset: shard as u64 * per,
+            elem_len: per,
+            shard_root: "cd".repeat(32),
+        };
+        let bytes = container::encode(&patch, &layout, EncodeOpts::default()).unwrap();
+        Frame { kind: kind::PATCH, payload: bytes }
+    }
+
+    #[test]
+    fn nack_resends_only_to_requester() {
+        let relay = Relay::start().unwrap();
+        let mut a = tcp::connect_local(relay.port).unwrap();
+        let mut b = tcp::connect_local(relay.port).unwrap();
+        for _ in 0..200 {
+            if relay.subscriber_count() == 2 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        let f0 = shard_frame(7, 0, 2, 1);
+        let f1 = shard_frame(7, 1, 2, 2);
+        relay.publish(f0.clone());
+        relay.publish(f1.clone());
+        // both subscribers get the broadcast pair
+        for conn in [&mut a, &mut b] {
+            for expect in [&f0, &f1] {
+                let f = tcp::read_frame(conn).unwrap();
+                assert_eq!(&f, expect);
+            }
+        }
+        // A NACKs shard 1 of step 7: only A receives the retransmit
+        tcp::write_frame(
+            &mut a,
+            &Frame { kind: kind::NACK, payload: tcp::shard_ack_payload(7, 1) },
+        )
+        .unwrap();
+        let resent = tcp::read_frame(&mut a).unwrap();
+        assert_eq!(resent, f1, "requester must get exactly the NACKed shard");
+        for _ in 0..100 {
+            if relay.nacks_serviced() == 1 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert_eq!(relay.nacks_serviced(), 1);
+        // B's stream continues with the next broadcast, no duplicate
+        relay.publish(frame(kind::CLOSE, 0));
+        let next_b = tcp::read_frame(&mut b).unwrap();
+        assert_eq!(next_b.kind, kind::CLOSE, "B must not see the retransmit");
+        // a NACK for an unindexed slot is ignored, not fatal
+        tcp::write_frame(
+            &mut a,
+            &Frame { kind: kind::NACK, payload: tcp::shard_ack_payload(99, 0) },
+        )
+        .unwrap();
+        assert_eq!(tcp::read_frame(&mut a).unwrap().kind, kind::CLOSE);
         relay.stop();
     }
 }

@@ -35,6 +35,12 @@ pub mod kind {
     /// frame (payload = step u64 ++ shard u32 LE); the publisher
     /// re-sends just that shard.
     pub const NACK: u8 = 6;
+    /// Publisher → relay/worker: a ready marker committing a step
+    /// (payload = marker kind u8 ++ step u64 LE ++ marker utf8; see
+    /// [`super::marker_frame_payload`]). The sync-plane transport layer
+    /// (`net::transport`) uses this to carry the same commit protocol
+    /// the object store expresses with `*_ready_*` objects.
+    pub const MARKER: u8 = 7;
 }
 
 /// Payload for an ACK/NACK addressing one shard of a step.
@@ -56,6 +62,29 @@ pub fn parse_shard_ack(payload: &[u8]) -> Result<(u64, u32)> {
         )),
         n => bail!("bad ack payload length {}", n),
     }
+}
+
+/// Payload for a MARKER frame: `anchor` selects the marker namespace
+/// (false = delta-ready, true = anchor-ready), `marker` is the exact
+/// string the object-store plane would write under the ready key.
+pub fn marker_frame_payload(anchor: bool, step: u64, marker: &str) -> Vec<u8> {
+    let mut p = Vec::with_capacity(9 + marker.len());
+    p.push(if anchor { 1 } else { 0 });
+    p.extend_from_slice(&step.to_le_bytes());
+    p.extend_from_slice(marker.as_bytes());
+    p
+}
+
+/// Decode a MARKER frame payload into `(is_anchor, step, marker)`.
+pub fn parse_marker_frame(payload: &[u8]) -> Result<(bool, u64, String)> {
+    if payload.len() < 9 || payload[0] > 1 {
+        bail!("bad marker frame payload ({} bytes)", payload.len());
+    }
+    let step = u64::from_le_bytes(payload[1..9].try_into().unwrap());
+    let marker = std::str::from_utf8(&payload[9..])
+        .map_err(|_| anyhow::anyhow!("marker frame payload is not utf8"))?
+        .to_string();
+    Ok((payload[0] == 1, step, marker))
 }
 
 pub fn write_frame(stream: &mut TcpStream, frame: &Frame) -> Result<()> {
@@ -126,6 +155,16 @@ mod tests {
         assert_eq!(parse_shard_ack(&p).unwrap(), (77, 3));
         assert_eq!(parse_shard_ack(&9u64.to_le_bytes()).unwrap(), (9, 0));
         assert!(parse_shard_ack(&[1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn marker_frame_roundtrip() {
+        let p = marker_frame_payload(false, 12, "v3:4:abcd");
+        assert_eq!(parse_marker_frame(&p).unwrap(), (false, 12, "v3:4:abcd".to_string()));
+        let p = marker_frame_payload(true, 0, "");
+        assert_eq!(parse_marker_frame(&p).unwrap(), (true, 0, String::new()));
+        assert!(parse_marker_frame(&[0, 1]).is_err());
+        assert!(parse_marker_frame(&[9, 0, 0, 0, 0, 0, 0, 0, 0]).is_err());
     }
 
     #[test]

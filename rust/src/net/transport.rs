@@ -1,0 +1,1288 @@
+//! `SyncTransport`: one sync plane over interchangeable fabrics.
+//!
+//! PULSESync's protocol (paper Alg. 5 + §J) is fabric-agnostic: a
+//! producer stores *frames* (delta containers, shard frames, anchor
+//! objects) and then commits each step with a *ready marker*; a
+//! consumer discovers committed steps, fetches their frames, and
+//! verifies them against the hash-tree commitments the frames carry.
+//! This module turns that contract into a trait so the same
+//! `Publisher`/`Consumer` state machines ([`crate::pulse::sync`]) run
+//! unchanged over an S3-like object store, a TCP relay, an in-process
+//! staging map, or any of those wrapped in deterministic fault
+//! injection.
+//!
+//! # The contract
+//!
+//! * **Commit ordering.** A producer publishes every frame of a step
+//!   *before* its marker ([`SyncTransport::publish_marker`]). A step
+//!   listed by [`SyncTransport::latest_ready`] is committed: its
+//!   marker has landed. Fetching a committed step's data may still
+//!   fail (retention, relay coalescing, corruption) — the consumer
+//!   treats any fetch or verification failure as a signal to degrade
+//!   to the anchor slow path, so a backend never has to guarantee
+//!   perfect delivery, only eventual anchor availability.
+//! * **Integrity is end-to-end, not transport-level.** Frames carry
+//!   their own hash-tree commitments; a backend may deliver corrupted
+//!   bytes and the consumer heals (per-shard refetch, then anchor
+//!   fallback). [`SyncTransport::fetch_shard`] is the designated
+//!   repair seam: calling it again for the same `(step, shard)` asks
+//!   the backend for a *fresh* copy (the relay backend turns that into
+//!   a NACK retransmit; stores simply re-read).
+//! * **Markers are opaque strings** with the same grammar on every
+//!   backend: a bare 64-hex root for an unsharded delta,
+//!   `v3:<shards>:<root>` for a sharded step
+//!   ([`sharded_marker`]/[`parse_sharded_marker`]), and
+//!   `v2:<chunk_elems>:<root>` (or a legacy bare scalar hash) for
+//!   anchors.
+//!
+//! # Adding a backend
+//!
+//! Implement the seven methods; the conformance suite
+//! (`rust/tests/integration_transport.rs`) is generic over
+//! `T: SyncTransport` — run your backend through it to inherit the
+//! bit-identity, chain/slow-path, and corruption-recovery checks. The
+//! split between producer-side and consumer-side methods is
+//! intentional: symmetric backends ([`ObjectStoreTransport`],
+//! [`InProcTransport`]) implement both on one value; directional
+//! fabrics ([`RelayTransport`]) construct per-role values whose
+//! wrong-side methods error.
+
+use crate::net::relay::Relay;
+use crate::net::tcp::{self, kind, Frame};
+use crate::sparse::container;
+use crate::storage::retention::{self, Inventory, RetentionPolicy};
+use crate::storage::ObjectStore;
+use crate::util::rng::splitmix64;
+use anyhow::{bail, Context, Result};
+use std::collections::{BTreeMap, HashSet};
+use std::net::Shutdown;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Upper bound on the shard count accepted from untrusted markers and
+/// headers (a corrupted marker must not drive per-shard allocations).
+pub const MAX_SHARDS: u32 = 4096;
+
+/// How long the relay backend waits for a NACKed shard retransmit.
+pub const NACK_TIMEOUT: Duration = Duration::from_secs(5);
+
+// ---------------------------------------------------------------- keys
+
+/// Object key of an unsharded delta container (store-plane layout).
+pub fn delta_key(step: u64) -> String {
+    format!("delta_{:08}.bin", step)
+}
+/// Object key of one shard frame of a sharded step.
+pub fn delta_shard_key(step: u64, shard: u32) -> String {
+    format!("delta_{:08}.s{:03}.bin", step, shard)
+}
+/// Ready-marker key committing a delta step.
+pub fn delta_ready_key(step: u64) -> String {
+    format!("delta_ready_{}", step)
+}
+/// Object key of a full anchor checkpoint.
+pub fn anchor_key(step: u64) -> String {
+    format!("anchor_{:08}.bin", step)
+}
+/// Ready-marker key committing an anchor.
+pub fn anchor_ready_key(step: u64) -> String {
+    format!("anchor_ready_{}", step)
+}
+
+/// Sharded delta ready-marker payload: `v3:<shard_count>:<root_hex>`.
+pub fn sharded_marker(shard_count: u32, root: &str) -> String {
+    format!("v3:{}:{}", shard_count, root)
+}
+
+/// Parse a sharded delta marker; `None` for unsharded (bare-root)
+/// markers or anything malformed / out of the trusted shard range.
+pub fn parse_sharded_marker(s: &str) -> Option<(u32, &str)> {
+    let rest = s.strip_prefix("v3:")?;
+    let (count, root) = rest.split_once(':')?;
+    let count: u32 = count.parse().ok()?;
+    if !(2..=MAX_SHARDS).contains(&count) || root.len() != 64 {
+        return None;
+    }
+    Some((count, root))
+}
+
+// --------------------------------------------------------------- types
+
+/// Address of one stored frame on the sync plane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FrameId {
+    /// Unsharded delta container for a step.
+    Delta { step: u64 },
+    /// One shard frame of a sharded step.
+    Shard { step: u64, shard: u32 },
+    /// Full anchor object for a step.
+    Anchor { step: u64 },
+}
+
+impl FrameId {
+    /// The store-plane object key for this frame.
+    pub fn object_key(&self) -> String {
+        match *self {
+            FrameId::Delta { step } => delta_key(step),
+            FrameId::Shard { step, shard } => delta_shard_key(step, shard),
+            FrameId::Anchor { step } => anchor_key(step),
+        }
+    }
+
+    pub fn step(&self) -> u64 {
+        match *self {
+            FrameId::Delta { step }
+            | FrameId::Shard { step, .. }
+            | FrameId::Anchor { step } => step,
+        }
+    }
+
+    fn is_anchor(&self) -> bool {
+        matches!(self, FrameId::Anchor { .. })
+    }
+}
+
+/// Address of a ready marker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MarkerId {
+    Delta(u64),
+    Anchor(u64),
+}
+
+impl MarkerId {
+    pub fn object_key(&self) -> String {
+        match *self {
+            MarkerId::Delta(step) => delta_ready_key(step),
+            MarkerId::Anchor(step) => anchor_ready_key(step),
+        }
+    }
+
+    pub fn step(&self) -> u64 {
+        match *self {
+            MarkerId::Delta(s) | MarkerId::Anchor(s) => s,
+        }
+    }
+
+    pub fn is_anchor(&self) -> bool {
+        matches!(self, MarkerId::Anchor(_))
+    }
+}
+
+/// What [`SyncTransport::fetch_step`] returns for a committed step.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StepData {
+    /// Unsharded delta: the container object (v1/v2).
+    Whole(Vec<u8>),
+    /// Sharded step: parsed `v3` marker; frames come via
+    /// [`SyncTransport::fetch_shard`].
+    Sharded { shard_count: u32, root: String },
+}
+
+/// Snapshot of a backend's operation counters — the observability
+/// surface the regression tests (single inventory scan per
+/// synchronize) and [`crate::coordinator::metrics::TransportMeter`]
+/// read.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct TransportCounters {
+    pub inventory_scans: u64,
+    pub frames_published: u64,
+    pub bytes_published: u64,
+    pub markers_published: u64,
+    pub frames_fetched: u64,
+    pub bytes_fetched: u64,
+    /// Relay backend only: shard retransmits requested.
+    pub nacks_sent: u64,
+    /// Fault decorator only: faults actually injected.
+    pub faults_injected: u64,
+}
+
+#[derive(Default)]
+struct CounterCell {
+    inventory_scans: AtomicU64,
+    frames_published: AtomicU64,
+    bytes_published: AtomicU64,
+    markers_published: AtomicU64,
+    frames_fetched: AtomicU64,
+    bytes_fetched: AtomicU64,
+    nacks_sent: AtomicU64,
+}
+
+impl CounterCell {
+    fn snapshot(&self) -> TransportCounters {
+        TransportCounters {
+            inventory_scans: self.inventory_scans.load(Ordering::Relaxed),
+            frames_published: self.frames_published.load(Ordering::Relaxed),
+            bytes_published: self.bytes_published.load(Ordering::Relaxed),
+            markers_published: self.markers_published.load(Ordering::Relaxed),
+            frames_fetched: self.frames_fetched.load(Ordering::Relaxed),
+            bytes_fetched: self.bytes_fetched.load(Ordering::Relaxed),
+            nacks_sent: self.nacks_sent.load(Ordering::Relaxed),
+            faults_injected: 0,
+        }
+    }
+
+    fn bump(&self, c: &AtomicU64) {
+        c.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn fetched(&self, bytes: usize) {
+        self.frames_fetched.fetch_add(1, Ordering::Relaxed);
+        self.bytes_fetched.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    fn published(&self, bytes: usize) {
+        self.frames_published.fetch_add(1, Ordering::Relaxed);
+        self.bytes_published.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+}
+
+// --------------------------------------------------------------- trait
+
+/// One sync plane over interchangeable fabrics (see module docs for
+/// the contract). Producer-side methods: [`Self::publish_frame`],
+/// [`Self::publish_marker`]. Consumer-side: [`Self::latest_ready`],
+/// [`Self::fetch_step`], [`Self::fetch_shard`], [`Self::fetch_anchor`].
+pub trait SyncTransport: Send + Sync {
+    /// Stable backend label (used in stats rows and bench names).
+    fn name(&self) -> &'static str;
+
+    /// Store one frame. Must complete before the step's marker is
+    /// published; concurrent calls for different frames of one step
+    /// are allowed (the sharded fan-out uploads shards in parallel).
+    fn publish_frame(&self, id: FrameId, bytes: &[u8]) -> Result<()>;
+
+    /// Commit a step by publishing its ready marker (see module docs
+    /// for the marker grammar).
+    fn publish_marker(&self, id: MarkerId, payload: &str) -> Result<()>;
+
+    /// One snapshot of committed steps — a single backend scan serves
+    /// both the head lookup and the slow-path anchor choice.
+    fn latest_ready(&self) -> Result<Inventory>;
+
+    /// A committed step's delta descriptor; `Ok(None)` when the step
+    /// has no delta marker (a §J.5 anchor replaced the delta).
+    fn fetch_step(&self, step: u64) -> Result<Option<StepData>>;
+
+    /// One shard frame of a sharded step. Calling again for the same
+    /// slot requests a fresh copy (the repair seam).
+    fn fetch_shard(&self, step: u64, shard: u32) -> Result<Vec<u8>>;
+
+    /// A committed anchor: `(object bytes, marker payload)`.
+    fn fetch_anchor(&self, step: u64) -> Result<(Vec<u8>, String)>;
+
+    /// Operation counters (zero for backends that don't track them).
+    fn counters(&self) -> TransportCounters {
+        TransportCounters::default()
+    }
+}
+
+// -------------------------------------------------- ObjectStoreTransport
+
+/// The paper's deployment fabric (§E.1): frames and markers are
+/// objects under `prefix/` in an S3-like [`ObjectStore`], committed
+/// steps are discovered by scanning ready markers
+/// ([`retention::scan`]). This wraps exactly the key scheme the
+/// pre-trait `Publisher`/`Consumer` used, so stores written before the
+/// refactor remain readable.
+#[derive(Clone)]
+pub struct ObjectStoreTransport {
+    pub store: ObjectStore,
+    pub prefix: String,
+    counters: Arc<CounterCell>,
+}
+
+impl ObjectStoreTransport {
+    pub fn new(store: ObjectStore, prefix: &str) -> ObjectStoreTransport {
+        ObjectStoreTransport {
+            store,
+            prefix: prefix.trim_end_matches('/').to_string(),
+            counters: Arc::new(CounterCell::default()),
+        }
+    }
+
+    fn key(&self, k: String) -> String {
+        format!("{}/{}", self.prefix, k)
+    }
+}
+
+impl SyncTransport for ObjectStoreTransport {
+    fn name(&self) -> &'static str {
+        "object-store"
+    }
+
+    fn publish_frame(&self, id: FrameId, bytes: &[u8]) -> Result<()> {
+        self.store.put(&self.key(id.object_key()), bytes)?;
+        self.counters.published(bytes.len());
+        Ok(())
+    }
+
+    fn publish_marker(&self, id: MarkerId, payload: &str) -> Result<()> {
+        self.store.put(&self.key(id.object_key()), payload.as_bytes())?;
+        self.counters.bump(&self.counters.markers_published);
+        Ok(())
+    }
+
+    fn latest_ready(&self) -> Result<Inventory> {
+        self.counters.bump(&self.counters.inventory_scans);
+        retention::scan(&self.store, &self.prefix)
+    }
+
+    fn fetch_step(&self, step: u64) -> Result<Option<StepData>> {
+        // a missing marker is the §J.5 "anchor replaced the delta"
+        // signal, not a transport failure
+        let marker = match self.store.get(&self.key(delta_ready_key(step))) {
+            Ok(m) => String::from_utf8_lossy(&m).into_owned(),
+            Err(_) => return Ok(None),
+        };
+        if let Some((shard_count, root)) = parse_sharded_marker(&marker) {
+            return Ok(Some(StepData::Sharded { shard_count, root: root.to_string() }));
+        }
+        let obj = self.store.get(&self.key(delta_key(step)))?;
+        self.counters.fetched(obj.len());
+        Ok(Some(StepData::Whole(obj)))
+    }
+
+    fn fetch_shard(&self, step: u64, shard: u32) -> Result<Vec<u8>> {
+        let obj = self
+            .store
+            .get(&self.key(delta_shard_key(step, shard)))
+            .with_context(|| format!("shard {} of step {}", shard, step))?;
+        self.counters.fetched(obj.len());
+        Ok(obj)
+    }
+
+    fn fetch_anchor(&self, step: u64) -> Result<(Vec<u8>, String)> {
+        let obj = self
+            .store
+            .get(&self.key(anchor_key(step)))
+            .with_context(|| format!("anchor {}", step))?;
+        let marker = String::from_utf8_lossy(&self.store.get(&self.key(anchor_ready_key(step)))?)
+            .into_owned();
+        self.counters.fetched(obj.len());
+        Ok((obj, marker))
+    }
+
+    fn counters(&self) -> TransportCounters {
+        self.counters.snapshot()
+    }
+}
+
+// ------------------------------------------------------ InProcTransport
+
+/// Zero-I/O in-memory backend for tests and benches: a bounded staging
+/// window shared by every clone (producer and consumer hold clones of
+/// one value). The window is the channel bound: once more than
+/// `max_deltas` committed steps are staged, the oldest are evicted
+/// under [`retention::plan`] semantics — a consumer that falls behind
+/// the window recovers via the anchor slow path, exactly like store
+/// retention or relay coalescing.
+#[derive(Clone)]
+pub struct InProcTransport {
+    state: Arc<Mutex<InProcState>>,
+    counters: Arc<CounterCell>,
+    max_deltas: usize,
+    max_anchors: usize,
+}
+
+#[derive(Default)]
+struct InProcState {
+    deltas: BTreeMap<u64, Vec<u8>>,
+    shards: BTreeMap<(u64, u32), Vec<u8>>,
+    anchors: BTreeMap<u64, Vec<u8>>,
+    delta_markers: BTreeMap<u64, String>,
+    anchor_markers: BTreeMap<u64, String>,
+}
+
+impl InProcTransport {
+    /// Default window: 1024 delta steps, 16 anchors.
+    pub fn new() -> InProcTransport {
+        InProcTransport::with_window(1024, 16)
+    }
+
+    /// Explicit staging bounds (≥ 1 each).
+    pub fn with_window(max_deltas: usize, max_anchors: usize) -> InProcTransport {
+        InProcTransport {
+            state: Arc::new(Mutex::new(InProcState::default())),
+            counters: Arc::new(CounterCell::default()),
+            max_deltas: max_deltas.max(1),
+            max_anchors: max_anchors.max(1),
+        }
+    }
+
+    fn evict(&self, st: &mut InProcState) {
+        if st.delta_markers.len() <= self.max_deltas
+            && st.anchor_markers.len() <= self.max_anchors
+        {
+            return;
+        }
+        let inv = Inventory {
+            delta_steps: st.delta_markers.keys().copied().collect(),
+            anchor_steps: st.anchor_markers.keys().copied().collect(),
+        };
+        let policy =
+            RetentionPolicy { max_deltas: self.max_deltas, max_anchors: self.max_anchors };
+        let (drop_deltas, drop_anchors) = retention::plan(&inv, policy);
+        let dropped: HashSet<u64> = drop_deltas.iter().copied().collect();
+        for s in &drop_deltas {
+            st.deltas.remove(s);
+            st.delta_markers.remove(s);
+        }
+        if !dropped.is_empty() {
+            st.shards.retain(|(s, _), _| !dropped.contains(s));
+        }
+        for s in &drop_anchors {
+            st.anchors.remove(s);
+            st.anchor_markers.remove(s);
+        }
+    }
+}
+
+impl Default for InProcTransport {
+    fn default() -> Self {
+        InProcTransport::new()
+    }
+}
+
+impl SyncTransport for InProcTransport {
+    fn name(&self) -> &'static str {
+        "in-proc"
+    }
+
+    fn publish_frame(&self, id: FrameId, bytes: &[u8]) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        match id {
+            FrameId::Delta { step } => {
+                st.deltas.insert(step, bytes.to_vec());
+            }
+            FrameId::Shard { step, shard } => {
+                st.shards.insert((step, shard), bytes.to_vec());
+            }
+            FrameId::Anchor { step } => {
+                st.anchors.insert(step, bytes.to_vec());
+            }
+        }
+        self.counters.published(bytes.len());
+        Ok(())
+    }
+
+    fn publish_marker(&self, id: MarkerId, payload: &str) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        match id {
+            MarkerId::Delta(step) => {
+                st.delta_markers.insert(step, payload.to_string());
+            }
+            MarkerId::Anchor(step) => {
+                st.anchor_markers.insert(step, payload.to_string());
+            }
+        }
+        self.evict(&mut st);
+        self.counters.bump(&self.counters.markers_published);
+        Ok(())
+    }
+
+    fn latest_ready(&self) -> Result<Inventory> {
+        self.counters.bump(&self.counters.inventory_scans);
+        let st = self.state.lock().unwrap();
+        Ok(Inventory {
+            delta_steps: st.delta_markers.keys().copied().collect(),
+            anchor_steps: st.anchor_markers.keys().copied().collect(),
+        })
+    }
+
+    fn fetch_step(&self, step: u64) -> Result<Option<StepData>> {
+        let st = self.state.lock().unwrap();
+        let marker = match st.delta_markers.get(&step) {
+            Some(m) => m.clone(),
+            None => return Ok(None),
+        };
+        if let Some((shard_count, root)) = parse_sharded_marker(&marker) {
+            return Ok(Some(StepData::Sharded { shard_count, root: root.to_string() }));
+        }
+        let obj = st
+            .deltas
+            .get(&step)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("delta object for step {} not staged", step))?;
+        self.counters.fetched(obj.len());
+        Ok(Some(StepData::Whole(obj)))
+    }
+
+    fn fetch_shard(&self, step: u64, shard: u32) -> Result<Vec<u8>> {
+        let st = self.state.lock().unwrap();
+        let obj = st
+            .shards
+            .get(&(step, shard))
+            .cloned()
+            .with_context(|| format!("shard {} of step {}", shard, step))?;
+        self.counters.fetched(obj.len());
+        Ok(obj)
+    }
+
+    fn fetch_anchor(&self, step: u64) -> Result<(Vec<u8>, String)> {
+        let st = self.state.lock().unwrap();
+        let obj = st
+            .anchors
+            .get(&step)
+            .cloned()
+            .with_context(|| format!("anchor {}", step))?;
+        let marker = st
+            .anchor_markers
+            .get(&step)
+            .cloned()
+            .with_context(|| format!("anchor marker {}", step))?;
+        self.counters.fetched(obj.len());
+        Ok((obj, marker))
+    }
+
+    fn counters(&self) -> TransportCounters {
+        self.counters.snapshot()
+    }
+}
+
+// ------------------------------------------------------- RelayTransport
+
+/// The TCP relay fabric (paper Fig. 5), pull-shaped: the producer role
+/// pushes frames/markers into an in-process [`Relay`]; the subscriber
+/// role connects over TCP, stages everything a background receiver
+/// thread reads, and answers the consumer-side trait methods from that
+/// staging. A second [`SyncTransport::fetch_shard`] call for the same
+/// slot sends a NACK and waits for the relay's per-subscriber
+/// retransmit — the wire realization of the repair seam. This promotes
+/// the wiring that used to live only in `examples/live_sync.rs` into
+/// the library.
+pub struct RelayTransport {
+    role: RelayRole,
+}
+
+enum RelayRole {
+    Publisher { relay: Arc<Relay>, counters: Arc<CounterCell> },
+    Subscriber(Box<Subscriber>),
+}
+
+struct Subscriber {
+    state: Arc<(Mutex<SubState>, Condvar)>,
+    /// Write half for NACKs (the receiver thread owns the read half).
+    conn: Mutex<TcpStream>,
+    reader: Option<std::thread::JoinHandle<()>>,
+    counters: Arc<CounterCell>,
+}
+
+#[derive(Default)]
+struct SubState {
+    deltas: BTreeMap<u64, DeltaStage>,
+    anchors: BTreeMap<u64, AnchorStage>,
+    /// Slots already served once: a second fetch means "repair".
+    /// Pruned together with `deltas` so a long-lived subscriber stays
+    /// bounded.
+    served: HashSet<(u64, u32)>,
+    closed: bool,
+}
+
+impl SubState {
+    /// A complete anchor at `anchor_step` supersedes every delta at or
+    /// below it (the slow path restarts from the newest anchor), so
+    /// their staged frames — and their served-slot bookkeeping — can
+    /// go. This is what keeps a long-running subscriber's memory
+    /// bounded by the anchor interval instead of the stream length.
+    fn prune_superseded(&mut self, anchor_step: u64) {
+        self.deltas.retain(|&s, _| s > anchor_step);
+        self.served.retain(|&(s, _)| s > anchor_step);
+    }
+
+    /// Enforce the staging window after an insert, keeping `served`
+    /// consistent with the retained steps.
+    fn trim(&mut self) {
+        let mut popped = false;
+        while self.deltas.len() > STAGE_STEPS {
+            self.deltas.pop_first();
+            popped = true;
+        }
+        while self.anchors.len() > STAGE_ANCHORS {
+            self.anchors.pop_first();
+        }
+        if popped {
+            if let Some((&min_staged, _)) = self.deltas.iter().next() {
+                self.served.retain(|&(s, _)| s >= min_staged);
+            }
+        }
+    }
+}
+
+#[derive(Default)]
+struct DeltaStage {
+    marker: Option<String>,
+    /// shard index → (frame bytes, arrival generation).
+    frames: BTreeMap<u32, (Vec<u8>, u64)>,
+}
+
+#[derive(Default)]
+struct AnchorStage {
+    marker: Option<String>,
+    object: Option<Vec<u8>>,
+}
+
+impl DeltaStage {
+    /// Shards this step's marker promises (1 for unsharded).
+    fn expected_shards(&self) -> Option<u32> {
+        let m = self.marker.as_deref()?;
+        Some(parse_sharded_marker(m).map(|(s, _)| s).unwrap_or(1))
+    }
+
+    fn complete(&self) -> bool {
+        match self.expected_shards() {
+            Some(s) => (0..s).all(|i| self.frames.contains_key(&i)),
+            None => false,
+        }
+    }
+}
+
+/// Staged delta steps retained by a subscriber before the oldest are
+/// dropped (a consumer that lags further recovers via the anchor).
+const STAGE_STEPS: usize = 4096;
+const STAGE_ANCHORS: usize = 32;
+
+impl RelayTransport {
+    /// Producer role over an in-process relay handle.
+    pub fn publisher(relay: Arc<Relay>) -> RelayTransport {
+        RelayTransport {
+            role: RelayRole::Publisher { relay, counters: Arc::new(CounterCell::default()) },
+        }
+    }
+
+    /// Subscriber role: connect to a relay port and start staging.
+    pub fn subscribe(port: u16) -> Result<RelayTransport> {
+        let stream = tcp::connect_local(port)?;
+        let rstream = stream.try_clone()?;
+        let state: Arc<(Mutex<SubState>, Condvar)> = Arc::new(Default::default());
+        let reader = spawn_receiver(rstream, state.clone());
+        Ok(RelayTransport {
+            role: RelayRole::Subscriber(Box::new(Subscriber {
+                state,
+                conn: Mutex::new(stream),
+                reader: Some(reader),
+                counters: Arc::new(CounterCell::default()),
+            })),
+        })
+    }
+
+    /// Publisher role: broadcast an orderly end-of-stream.
+    pub fn close(&self) {
+        if let RelayRole::Publisher { relay, .. } = &self.role {
+            relay.publish(Frame { kind: kind::CLOSE, payload: Vec::new() });
+        }
+    }
+
+    /// Subscriber role: true once the stream ended (CLOSE or socket
+    /// error). Always false for the producer role.
+    pub fn stream_closed(&self) -> bool {
+        match &self.role {
+            RelayRole::Subscriber(sub) => sub.state.0.lock().unwrap().closed,
+            RelayRole::Publisher { .. } => false,
+        }
+    }
+
+    fn pub_side(&self) -> Result<(&Arc<Relay>, &Arc<CounterCell>)> {
+        match &self.role {
+            RelayRole::Publisher { relay, counters } => Ok((relay, counters)),
+            RelayRole::Subscriber(_) => {
+                bail!("subscriber-side relay transport cannot publish")
+            }
+        }
+    }
+
+    fn sub_side(&self) -> Result<&Subscriber> {
+        match &self.role {
+            RelayRole::Subscriber(sub) => Ok(sub),
+            RelayRole::Publisher { .. } => {
+                bail!("publisher-side relay transport cannot fetch")
+            }
+        }
+    }
+}
+
+impl Drop for RelayTransport {
+    fn drop(&mut self) {
+        if let RelayRole::Subscriber(sub) = &mut self.role {
+            let _ = sub.conn.lock().unwrap().shutdown(Shutdown::Both);
+            if let Some(h) = sub.reader.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// Background receiver: stages PATCH/ANCHOR/MARKER frames from the
+/// relay stream. Frames identify themselves (container header / PLSA
+/// anchor header / marker payload), so arrival order within a step
+/// does not matter.
+fn spawn_receiver(
+    mut stream: TcpStream,
+    state: Arc<(Mutex<SubState>, Condvar)>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || loop {
+        let frame = match tcp::read_frame(&mut stream) {
+            Ok(f) => f,
+            Err(_) => {
+                let (lock, cv) = &*state;
+                lock.lock().unwrap().closed = true;
+                cv.notify_all();
+                return;
+            }
+        };
+        let (lock, cv) = &*state;
+        match frame.kind {
+            kind::PATCH => {
+                if let Ok(meta) = container::peek_meta(&frame.payload) {
+                    let mut st = lock.lock().unwrap();
+                    let stage = st.deltas.entry(meta.step).or_default();
+                    let generation = stage
+                        .frames
+                        .get(&meta.shard_index)
+                        .map(|(_, g)| *g)
+                        .unwrap_or(0)
+                        + 1;
+                    stage.frames.insert(meta.shard_index, (frame.payload, generation));
+                    st.trim();
+                    cv.notify_all();
+                }
+            }
+            kind::ANCHOR => {
+                // anchors travel as the store-plane PLSA object, so the
+                // step rides in the header
+                if frame.payload.len() >= 20 && &frame.payload[0..4] == b"PLSA" {
+                    let step = u64::from_le_bytes(frame.payload[4..12].try_into().unwrap());
+                    let mut st = lock.lock().unwrap();
+                    let stage = st.anchors.entry(step).or_default();
+                    stage.object = Some(frame.payload);
+                    if stage.marker.is_some() {
+                        st.prune_superseded(step);
+                    }
+                    st.trim();
+                    cv.notify_all();
+                }
+            }
+            kind::MARKER => {
+                if let Ok((is_anchor, step, marker)) = tcp::parse_marker_frame(&frame.payload) {
+                    let mut st = lock.lock().unwrap();
+                    if is_anchor {
+                        let stage = st.anchors.entry(step).or_default();
+                        stage.marker = Some(marker);
+                        if stage.object.is_some() {
+                            st.prune_superseded(step);
+                        }
+                    } else {
+                        st.deltas.entry(step).or_default().marker = Some(marker);
+                    }
+                    st.trim();
+                    cv.notify_all();
+                }
+            }
+            kind::CLOSE => {
+                lock.lock().unwrap().closed = true;
+                cv.notify_all();
+                return;
+            }
+            _ => {}
+        }
+    })
+}
+
+impl SyncTransport for RelayTransport {
+    fn name(&self) -> &'static str {
+        "relay"
+    }
+
+    fn publish_frame(&self, id: FrameId, bytes: &[u8]) -> Result<()> {
+        let (relay, counters) = self.pub_side()?;
+        let kind_ = if id.is_anchor() { kind::ANCHOR } else { kind::PATCH };
+        relay.publish(Frame { kind: kind_, payload: bytes.to_vec() });
+        counters.published(bytes.len());
+        Ok(())
+    }
+
+    fn publish_marker(&self, id: MarkerId, payload: &str) -> Result<()> {
+        let (relay, counters) = self.pub_side()?;
+        relay.publish(Frame {
+            kind: kind::MARKER,
+            payload: tcp::marker_frame_payload(id.is_anchor(), id.step(), payload),
+        });
+        counters.bump(&counters.markers_published);
+        Ok(())
+    }
+
+    fn latest_ready(&self) -> Result<Inventory> {
+        let sub = self.sub_side()?;
+        sub.counters.bump(&sub.counters.inventory_scans);
+        let st = sub.state.0.lock().unwrap();
+        Ok(Inventory {
+            // only fully-staged steps are committed from this
+            // subscriber's point of view: a coalesced-away step simply
+            // never becomes visible, and the consumer anchors past it
+            delta_steps: st
+                .deltas
+                .iter()
+                .filter(|(_, d)| d.complete())
+                .map(|(&s, _)| s)
+                .collect(),
+            anchor_steps: st
+                .anchors
+                .iter()
+                .filter(|(_, a)| a.marker.is_some() && a.object.is_some())
+                .map(|(&s, _)| s)
+                .collect(),
+        })
+    }
+
+    fn fetch_step(&self, step: u64) -> Result<Option<StepData>> {
+        let sub = self.sub_side()?;
+        let st = sub.state.0.lock().unwrap();
+        let stage = match st.deltas.get(&step) {
+            Some(d) => d,
+            None => return Ok(None),
+        };
+        let marker = match &stage.marker {
+            Some(m) => m.clone(),
+            None => return Ok(None),
+        };
+        if let Some((shard_count, root)) = parse_sharded_marker(&marker) {
+            return Ok(Some(StepData::Sharded { shard_count, root: root.to_string() }));
+        }
+        let obj = stage
+            .frames
+            .get(&0)
+            .map(|(b, _)| b.clone())
+            .ok_or_else(|| anyhow::anyhow!("delta frame for step {} not staged", step))?;
+        sub.counters.fetched(obj.len());
+        Ok(Some(StepData::Whole(obj)))
+    }
+
+    fn fetch_shard(&self, step: u64, shard: u32) -> Result<Vec<u8>> {
+        let sub = self.sub_side()?;
+        let (lock, cv) = &*sub.state;
+        let (first, staged) = {
+            let mut st = lock.lock().unwrap();
+            let first = st.served.insert((step, shard));
+            let staged = st
+                .deltas
+                .get(&step)
+                .and_then(|d| d.frames.get(&shard))
+                .map(|(b, g)| (b.clone(), *g));
+            (first, staged)
+        };
+        if first {
+            if let Some((bytes, _)) = staged {
+                sub.counters.fetched(bytes.len());
+                return Ok(bytes);
+            }
+        }
+        // repair (or a frame that never arrived): NACK the slot and
+        // wait for the relay's per-subscriber retransmit to land as a
+        // new generation
+        let base_generation = staged.map(|(_, g)| g).unwrap_or(0);
+        {
+            let mut conn = sub.conn.lock().unwrap();
+            tcp::write_frame(
+                &mut conn,
+                &Frame { kind: kind::NACK, payload: tcp::shard_ack_payload(step, shard) },
+            )
+            .context("sending shard NACK")?;
+            sub.counters.bump(&sub.counters.nacks_sent);
+        }
+        let deadline = Instant::now() + NACK_TIMEOUT;
+        let mut st = lock.lock().unwrap();
+        loop {
+            if let Some((bytes, g)) = st.deltas.get(&step).and_then(|d| d.frames.get(&shard)) {
+                if *g > base_generation {
+                    let out = bytes.clone();
+                    sub.counters.fetched(out.len());
+                    return Ok(out);
+                }
+            }
+            if st.closed {
+                bail!("relay stream closed awaiting shard {} of step {}", shard, step);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                bail!("timed out awaiting retransmit of shard {} step {}", shard, step);
+            }
+            st = cv.wait_timeout(st, deadline - now).unwrap().0;
+        }
+    }
+
+    fn fetch_anchor(&self, step: u64) -> Result<(Vec<u8>, String)> {
+        let sub = self.sub_side()?;
+        let st = sub.state.0.lock().unwrap();
+        let stage = st.anchors.get(&step).with_context(|| format!("anchor {}", step))?;
+        match (&stage.object, &stage.marker) {
+            (Some(obj), Some(marker)) => {
+                sub.counters.fetched(obj.len());
+                Ok((obj.clone(), marker.clone()))
+            }
+            _ => bail!("anchor {} not fully staged", step),
+        }
+    }
+
+    fn counters(&self) -> TransportCounters {
+        match &self.role {
+            RelayRole::Publisher { counters, .. } => counters.snapshot(),
+            RelayRole::Subscriber(sub) => sub.counters.snapshot(),
+        }
+    }
+}
+
+// ---------------------------------------------- FaultInjectingTransport
+
+/// What a [`FaultInjectingTransport`] may do to consumer-side traffic.
+/// All decisions are pure functions of `(seed, step, shard)` — never
+/// of call order — so a failing run replays exactly.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FaultPlan {
+    /// Probability a shard frame is mangled on its *first* serve
+    /// (truncated below the container header minimum, so decode fails
+    /// deterministically and the consumer's single-shard refetch
+    /// heals it). Repairs always pass through clean.
+    pub corrupt_shard_prob: f64,
+    /// Probability the first fetch of a shard errors outright (a lost
+    /// frame); the refetch succeeds.
+    pub drop_shard_prob: f64,
+    /// Probability the newest committed step is hidden from one
+    /// [`SyncTransport::latest_ready`] snapshot (a reordered/late
+    /// marker); the next poll sees it.
+    pub delay_marker_prob: f64,
+    /// Force-corrupt exactly this slot (first serve), independent of
+    /// the probabilities — the targeted §J.5 recovery scenario.
+    pub target: Option<(u64, u32)>,
+}
+
+/// Decorator that deterministically corrupts, drops, and delays
+/// consumer-side traffic of any inner backend, so §J.5 self-healing is
+/// exercisable on *every* fabric. Producer-side calls pass through
+/// untouched.
+pub struct FaultInjectingTransport<T> {
+    inner: T,
+    plan: FaultPlan,
+    seed: u64,
+    served: Mutex<HashSet<(u64, u32)>>,
+    delayed: Mutex<HashSet<u64>>,
+    injected: AtomicU64,
+}
+
+const SALT_CORRUPT: u64 = 0xC0;
+const SALT_DROP: u64 = 0xD0;
+const SALT_DELAY: u64 = 0xDE;
+
+impl<T: SyncTransport> FaultInjectingTransport<T> {
+    pub fn new(inner: T, seed: u64, plan: FaultPlan) -> FaultInjectingTransport<T> {
+        FaultInjectingTransport {
+            inner,
+            plan,
+            seed,
+            served: Mutex::new(HashSet::new()),
+            delayed: Mutex::new(HashSet::new()),
+            injected: AtomicU64::new(0),
+        }
+    }
+
+    /// Convenience: corrupt exactly one `(step, shard)` slot.
+    pub fn targeting(inner: T, step: u64, shard: u32) -> FaultInjectingTransport<T> {
+        FaultInjectingTransport::new(
+            inner,
+            0,
+            FaultPlan { target: Some((step, shard)), ..FaultPlan::default() },
+        )
+    }
+
+    pub fn inner(&self) -> &T {
+        &self.inner
+    }
+
+    /// Faults injected so far.
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    /// Deterministic uniform [0,1) from (seed, step, shard, salt).
+    fn roll(&self, step: u64, shard: u32, salt: u64) -> f64 {
+        let mut s = self
+            .seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            ^ step.wrapping_mul(0xA24BAED4963EE407)
+            ^ ((shard as u64) << 32)
+            ^ salt;
+        (splitmix64(&mut s) >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+}
+
+impl<T: SyncTransport> SyncTransport for FaultInjectingTransport<T> {
+    fn name(&self) -> &'static str {
+        "fault-injected"
+    }
+
+    fn publish_frame(&self, id: FrameId, bytes: &[u8]) -> Result<()> {
+        self.inner.publish_frame(id, bytes)
+    }
+
+    fn publish_marker(&self, id: MarkerId, payload: &str) -> Result<()> {
+        self.inner.publish_marker(id, payload)
+    }
+
+    fn latest_ready(&self) -> Result<Inventory> {
+        let mut inv = self.inner.latest_ready()?;
+        if self.plan.delay_marker_prob > 0.0 {
+            if let Some(&head) = inv.delta_steps.last() {
+                if self.roll(head, 0, SALT_DELAY) < self.plan.delay_marker_prob
+                    && self.delayed.lock().unwrap().insert(head)
+                {
+                    self.injected.fetch_add(1, Ordering::Relaxed);
+                    inv.delta_steps.pop();
+                }
+            }
+        }
+        Ok(inv)
+    }
+
+    fn fetch_step(&self, step: u64) -> Result<Option<StepData>> {
+        self.inner.fetch_step(step)
+    }
+
+    fn fetch_shard(&self, step: u64, shard: u32) -> Result<Vec<u8>> {
+        let first = self.served.lock().unwrap().insert((step, shard));
+        if first
+            && self.plan.drop_shard_prob > 0.0
+            && self.roll(step, shard, SALT_DROP) < self.plan.drop_shard_prob
+        {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+            bail!("injected drop of shard {} step {}", shard, step);
+        }
+        let mut bytes = self.inner.fetch_shard(step, shard)?;
+        let corrupt = self.plan.target == Some((step, shard))
+            || (self.plan.corrupt_shard_prob > 0.0
+                && self.roll(step, shard, SALT_CORRUPT) < self.plan.corrupt_shard_prob);
+        if first && corrupt {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+            // truncate below the container header minimum: decode fails
+            // deterministically, never "accidentally valid" bytes
+            bytes.truncate(8.min(bytes.len()));
+        }
+        Ok(bytes)
+    }
+
+    fn fetch_anchor(&self, step: u64) -> Result<(Vec<u8>, String)> {
+        self.inner.fetch_anchor(step)
+    }
+
+    fn counters(&self) -> TransportCounters {
+        let mut c = self.inner.counters();
+        c.faults_injected += self.injected.load(Ordering::Relaxed);
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn object_store_transport_uses_the_store_key_scheme() {
+        let store = ObjectStore::temp("transport_store").unwrap();
+        let t = ObjectStoreTransport::new(store.clone(), "sync/");
+        assert_eq!(t.prefix, "sync");
+        t.publish_frame(FrameId::Delta { step: 3 }, b"obj3").unwrap();
+        t.publish_frame(FrameId::Shard { step: 4, shard: 1 }, b"s41").unwrap();
+        t.publish_frame(FrameId::Anchor { step: 0 }, b"anch").unwrap();
+        t.publish_marker(MarkerId::Anchor(0), "m0").unwrap();
+        assert_eq!(store.get("sync/delta_00000003.bin").unwrap(), b"obj3");
+        assert_eq!(store.get("sync/delta_00000004.s001.bin").unwrap(), b"s41");
+        assert_eq!(store.get("sync/anchor_00000000.bin").unwrap(), b"anch");
+        // no delta marker yet → fetch_step sees the §J.5 signal
+        assert_eq!(t.fetch_step(3).unwrap(), None);
+        t.publish_marker(MarkerId::Delta(3), &"ab".repeat(32)).unwrap();
+        assert_eq!(t.fetch_step(3).unwrap(), Some(StepData::Whole(b"obj3".to_vec())));
+        t.publish_marker(MarkerId::Delta(4), &sharded_marker(2, &"cd".repeat(32)))
+            .unwrap();
+        assert_eq!(
+            t.fetch_step(4).unwrap(),
+            Some(StepData::Sharded { shard_count: 2, root: "cd".repeat(32) })
+        );
+        assert_eq!(t.fetch_shard(4, 1).unwrap(), b"s41");
+        assert_eq!(t.fetch_anchor(0).unwrap(), (b"anch".to_vec(), "m0".to_string()));
+        let inv = t.latest_ready().unwrap();
+        assert_eq!(inv.delta_steps, vec![3, 4]);
+        assert_eq!(inv.anchor_steps, vec![0]);
+        assert_eq!(t.counters().inventory_scans, 1);
+        std::fs::remove_dir_all(store.root()).unwrap();
+    }
+
+    #[test]
+    fn inproc_window_evicts_with_chain_base_kept() {
+        let t = InProcTransport::with_window(4, 2);
+        t.publish_frame(FrameId::Anchor { step: 0 }, b"a0").unwrap();
+        t.publish_marker(MarkerId::Anchor(0), "m0").unwrap();
+        for step in 1..=10u64 {
+            t.publish_frame(FrameId::Delta { step }, format!("d{}", step).as_bytes())
+                .unwrap();
+            t.publish_marker(MarkerId::Delta(step), &"ab".repeat(32)).unwrap();
+            if step % 5 == 0 {
+                t.publish_frame(FrameId::Anchor { step }, b"a").unwrap();
+                t.publish_marker(MarkerId::Anchor(step), "m").unwrap();
+            }
+        }
+        let inv = t.latest_ready().unwrap();
+        assert_eq!(inv.delta_steps, vec![7, 8, 9, 10], "window keeps the newest 4");
+        // anchors 5 and 10 retained; anchor 5 is the chain base for
+        // delta 7 even though only 2 anchors fit
+        assert!(inv.anchor_steps.contains(&10));
+        assert!(inv.anchor_steps.iter().any(|&a| a <= 7));
+        assert_eq!(t.fetch_step(2).unwrap(), None, "evicted step reads as replaced");
+        assert_eq!(
+            t.fetch_step(8).unwrap(),
+            Some(StepData::Whole(b"d8".to_vec()))
+        );
+    }
+
+    #[test]
+    fn clones_share_inproc_state() {
+        let producer = InProcTransport::new();
+        let consumer = producer.clone();
+        producer.publish_frame(FrameId::Delta { step: 1 }, b"x").unwrap();
+        producer.publish_marker(MarkerId::Delta(1), &"ee".repeat(32)).unwrap();
+        assert_eq!(consumer.latest_ready().unwrap().delta_steps, vec![1]);
+        assert_eq!(consumer.fetch_step(1).unwrap(), Some(StepData::Whole(b"x".to_vec())));
+    }
+
+    #[test]
+    fn fault_decorator_is_deterministic_and_heals_on_refetch() {
+        let make = || {
+            let inner = InProcTransport::new();
+            inner
+                .publish_frame(FrameId::Shard { step: 5, shard: 2 }, &vec![7u8; 256])
+                .unwrap();
+            inner
+        };
+        // targeted corruption: first serve truncated, repair clean
+        let t = FaultInjectingTransport::targeting(make(), 5, 2);
+        let first = t.fetch_shard(5, 2).unwrap();
+        assert_eq!(first.len(), 8, "first serve must be truncated");
+        let second = t.fetch_shard(5, 2).unwrap();
+        assert_eq!(second, vec![7u8; 256], "repair must pass through clean");
+        assert_eq!(t.injected(), 1);
+        assert_eq!(t.counters().faults_injected, 1);
+        // zero probabilities, no target → bitwise passthrough
+        let clean = FaultInjectingTransport::new(make(), 123, FaultPlan::default());
+        assert_eq!(clean.fetch_shard(5, 2).unwrap(), vec![7u8; 256]);
+        assert_eq!(clean.injected(), 0);
+        // decisions are a pure function of (seed, step, shard)
+        let a = FaultInjectingTransport::new(
+            make(),
+            42,
+            FaultPlan { corrupt_shard_prob: 0.5, ..FaultPlan::default() },
+        );
+        let b = FaultInjectingTransport::new(
+            make(),
+            42,
+            FaultPlan { corrupt_shard_prob: 0.5, ..FaultPlan::default() },
+        );
+        assert_eq!(a.fetch_shard(5, 2).unwrap(), b.fetch_shard(5, 2).unwrap());
+    }
+
+    #[test]
+    fn fault_decorator_drop_errors_once_then_serves() {
+        let inner = InProcTransport::new();
+        inner.publish_frame(FrameId::Shard { step: 9, shard: 0 }, b"frame").unwrap();
+        let t = FaultInjectingTransport::new(
+            inner,
+            7,
+            FaultPlan { drop_shard_prob: 1.0, ..FaultPlan::default() },
+        );
+        assert!(t.fetch_shard(9, 0).is_err(), "first fetch must drop");
+        assert_eq!(t.fetch_shard(9, 0).unwrap(), b"frame", "refetch must serve");
+        assert_eq!(t.injected(), 1);
+    }
+
+    #[test]
+    fn fault_decorator_delays_head_marker_once() {
+        let inner = InProcTransport::new();
+        for step in 1..=3u64 {
+            inner.publish_frame(FrameId::Delta { step }, b"d").unwrap();
+            inner.publish_marker(MarkerId::Delta(step), &"ab".repeat(32)).unwrap();
+        }
+        let t = FaultInjectingTransport::new(
+            inner,
+            1,
+            FaultPlan { delay_marker_prob: 1.0, ..FaultPlan::default() },
+        );
+        assert_eq!(t.latest_ready().unwrap().delta_steps, vec![1, 2], "head hidden once");
+        assert_eq!(t.latest_ready().unwrap().delta_steps, vec![1, 2, 3], "then visible");
+    }
+
+    #[test]
+    fn relay_transport_roundtrips_markers_and_frames() {
+        let relay = Arc::new(Relay::start().unwrap());
+        let producer = RelayTransport::publisher(relay.clone());
+        let consumer = RelayTransport::subscribe(relay.port).unwrap();
+        // wrong-side calls error instead of hanging
+        assert!(producer.latest_ready().is_err());
+        assert!(consumer.publish_marker(MarkerId::Delta(1), "x").is_err());
+        // a PLSA-framed anchor + marker, then an unsharded container
+        let mut anchor = Vec::new();
+        anchor.extend_from_slice(b"PLSA");
+        anchor.extend_from_slice(&0u64.to_le_bytes());
+        anchor.extend_from_slice(&0u64.to_le_bytes());
+        anchor.extend_from_slice(b"payload");
+        producer.publish_frame(FrameId::Anchor { step: 0 }, &anchor).unwrap();
+        producer.publish_marker(MarkerId::Anchor(0), "anchor-marker").unwrap();
+        let patch = container::Patch {
+            step: 1,
+            total_params: 64,
+            result_hash: "ab".repeat(32),
+            chunk_elems: 64,
+            ..Default::default()
+        };
+        let obj = container::encode(
+            &patch,
+            &crate::sparse::synthetic_layout(64, 64),
+            container::EncodeOpts::default(),
+        )
+        .unwrap();
+        producer.publish_frame(FrameId::Delta { step: 1 }, &obj).unwrap();
+        producer.publish_marker(MarkerId::Delta(1), &"ab".repeat(32)).unwrap();
+        // staging is asynchronous: poll until committed
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let inv = consumer.latest_ready().unwrap();
+            if inv.delta_steps == vec![1] && inv.anchor_steps == vec![0] {
+                break;
+            }
+            assert!(Instant::now() < deadline, "staging never completed");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(consumer.fetch_step(1).unwrap(), Some(StepData::Whole(obj)));
+        assert_eq!(
+            consumer.fetch_anchor(0).unwrap(),
+            (anchor, "anchor-marker".to_string())
+        );
+        assert_eq!(consumer.fetch_step(2).unwrap(), None);
+        producer.close();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while !consumer.stream_closed() {
+            assert!(Instant::now() < deadline, "close never observed");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        drop(consumer);
+        relay.stop();
+    }
+
+    #[test]
+    fn marker_grammar_roundtrip() {
+        assert_eq!(sharded_marker(4, &"ab".repeat(32)), format!("v3:4:{}", "ab".repeat(32)));
+        let m = sharded_marker(4, &"ab".repeat(32));
+        let (s, r) = parse_sharded_marker(&m).unwrap();
+        assert_eq!((s, r), (4, "ab".repeat(32).as_str()));
+        assert!(parse_sharded_marker(&"ab".repeat(32)).is_none(), "bare root is unsharded");
+        assert!(parse_sharded_marker("v3:1:root").is_none());
+        assert!(parse_sharded_marker(&format!("v3:99999:{}", "ab".repeat(32))).is_none());
+        assert!(parse_sharded_marker("v3:4:short").is_none());
+    }
+}

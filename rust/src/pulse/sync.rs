@@ -10,6 +10,21 @@
 //! floating-point arithmetic, so chained patches stay bit-identical
 //! (Prop. H.1).
 //!
+//! # One protocol, many fabrics
+//!
+//! [`Publisher`] and [`Consumer`] are generic over
+//! [`crate::net::transport::SyncTransport`]: the same state machines
+//! run over the S3-like object store ([`ObjectStoreTransport`], the
+//! default — `Publisher::new(store, ...)` / `Consumer::new(store, ...)`
+//! construct it), the TCP relay
+//! ([`crate::net::transport::RelayTransport`]), the zero-I/O in-proc
+//! backend ([`crate::net::transport::InProcTransport`]), or any of
+//! those wrapped in deterministic fault injection
+//! ([`crate::net::transport::FaultInjectingTransport`]). The protocol
+//! (frames first, then a committing marker; integrity carried in the
+//! frames, not the fabric) is the transport contract — see
+//! [`crate::net::transport`] for it and for how to add a backend.
+//!
 //! # Verification cost model (§J.4, made O(nnz))
 //!
 //! Integrity is checked against a chunked hash tree
@@ -33,18 +48,23 @@
 //! # Sharded pipelined fan-out
 //!
 //! With `Publisher::shard_count > 1` (or a [`ShardedEncoder`] driven
-//! directly, as the TCP relay path does), each step is split into S
-//! contiguous element ranges aligned to hash-tree chunk boundaries
-//! ([`crate::sparse::hashtree::shard_ranges`]). Per shard, the fused
-//! diff+gather, the container encode+compress, and the store upload all
-//! run on the [`crate::util::pool`] worker pool, so encode latency of
-//! one shard hides behind the upload of another. Each shard travels as
-//! its own v3 container frame carrying `(shard_index, shard_count,
-//! elem_offset, elem_len)`, its **subtree root** over exactly its
-//! element range, and the step's global root
+//! directly), each step is split into S contiguous element ranges
+//! aligned to hash-tree chunk boundaries
+//! ([`crate::sparse::hashtree::shard_ranges`]) — or, with
+//! [`Publisher::with_shard_balancing`], into equal-nnz chunk-aligned
+//! ranges cut along the measured per-chunk update profile
+//! ([`crate::sparse::hashtree::balanced_shard_ranges`]), so a skewed
+//! update stream no longer serializes behind its hottest shard. Per
+//! shard, the fused diff+gather, the container encode+compress, and the
+//! frame publish all run on the [`crate::util::pool`] worker pool, so
+//! encode latency of one shard hides behind the upload of another.
+//! Each shard travels as its own v3 container frame carrying
+//! `(shard_index, shard_count, elem_offset, elem_len)`, its **subtree
+//! root** over exactly its element range, and the step's global root
 //! ([`crate::sparse::container`]).
 //!
-//! Wire/store layout for a sharded step `t`:
+//! Store layout for a sharded step `t` (other fabrics carry the same
+//! frames and marker strings — only the addressing differs):
 //!
 //! ```text
 //!   delta_000000t.s000.bin … delta_000000t.s00{S-1}.bin   (shard frames)
@@ -54,45 +74,31 @@
 //! The consumer fetches and decodes shard frames on the pool, applies
 //! them in parallel
 //! ([`crate::sparse::hashtree::HashTree::apply_and_rehash_shards`]),
-//! and verifies each shard's subtree root independently. A shard that
-//! fails verification is restored *exactly* (values + chunk digests)
-//! and **re-fetched alone** — `SyncStats::shard_refetches` — while the
-//! other shards stay applied; only a second failure abandons the step
-//! to the anchor slow path. The assembled step is then bound end to end
-//! by comparing the tree root against the marker's global root, so
-//! sharded apply is bit-identical to the unsharded path by
-//! construction and by test.
+//! and verifies each shard's subtree root independently. A shard whose
+//! fetch or decode fails, or whose subtree root mismatches, is restored
+//! *exactly* (values + chunk digests) and **re-fetched alone** through
+//! the transport's repair seam — `SyncStats::shard_refetches` — while
+//! the other shards stay applied; only a second failure abandons the
+//! step to the anchor slow path. The assembled step is then bound end
+//! to end by comparing the tree root against the marker's global root,
+//! so sharded apply is bit-identical to the unsharded path by
+//! construction and by test (the transport conformance suite runs this
+//! on every backend).
 
 use crate::codec::Codec;
+use crate::net::transport::{
+    FrameId, MarkerId, ObjectStoreTransport, StepData, SyncTransport,
+};
 use crate::sparse::container::{self, EncodeOpts, Patch, Values};
 use crate::sparse::hashtree::{self, HashTree, ShardPatchRef, DEFAULT_CHUNK_ELEMS};
 use crate::sparse::{self, TensorShape};
-use crate::storage::retention::{self, Inventory};
+use crate::storage::retention::Inventory;
 use crate::storage::ObjectStore;
 use crate::util::{pool, sha256_hex, u16_as_bytes};
 use anyhow::{bail, Context, Result};
 
-/// Upper bound on the shard count accepted from untrusted markers and
-/// headers (a corrupted marker must not drive per-shard allocations).
-pub const MAX_SHARDS: u32 = 4096;
-
-/// Key scheme under the publisher prefix.
-fn delta_key(step: u64) -> String {
-    format!("delta_{:08}.bin", step)
-}
-/// Shard frame object key for a sharded step.
-fn delta_shard_key(step: u64, shard: u32) -> String {
-    format!("delta_{:08}.s{:03}.bin", step, shard)
-}
-fn delta_ready_key(step: u64) -> String {
-    format!("delta_ready_{}", step)
-}
-fn anchor_key(step: u64) -> String {
-    format!("anchor_{:08}.bin", step)
-}
-fn anchor_ready_key(step: u64) -> String {
-    format!("anchor_ready_{}", step)
-}
+/// Re-exported so existing callers keep a stable path.
+pub use crate::net::transport::MAX_SHARDS;
 
 /// Anchor ready-marker payload: `v2:<chunk_elems>:<root_hex>` for
 /// hash-tree verification. Legacy markers are the bare scalar SHA-256
@@ -112,18 +118,6 @@ fn parse_anchor_marker(s: &str) -> Option<(usize, &str)> {
         return None;
     }
     Some((chunk, root))
-}
-
-/// Sharded delta ready-marker: `v3:<shard_count>:<global_root_hex>`.
-/// Unsharded delta markers remain the bare result-hash hex.
-fn parse_sharded_marker(s: &str) -> Option<(u32, &str)> {
-    let rest = s.strip_prefix("v3:")?;
-    let (count, root) = rest.split_once(':')?;
-    let count: u32 = count.parse().ok()?;
-    if !(2..=MAX_SHARDS).contains(&count) || root.len() != 64 {
-        return None;
-    }
-    Some((count, root))
 }
 
 /// Publisher-side statistics for one published step.
@@ -172,20 +166,22 @@ pub struct EncodedStep {
 /// BF16 view and its hash tree, and turns each new view into one
 /// container frame per shard (per-shard diff+gather and
 /// encode+compress run on the worker pool). [`Publisher`] drives it
-/// against the object store; the live TCP path
-/// (`examples/live_sync.rs`, the relay integration tests) drives it
-/// directly and ships the frames as PATCH messages.
+/// against a [`SyncTransport`]; tests and benches can drive it
+/// directly and ship the frames however they like.
 pub struct ShardedEncoder {
     prev: Vec<u16>,
     prev_step: u64,
     tree: HashTree,
+    /// Cut shard ranges along the measured per-chunk nnz profile
+    /// (equal-nnz shards) instead of the static equal-element split.
+    pub balance: bool,
 }
 
 impl ShardedEncoder {
     /// Start from the view published at `start_step` (builds the tree).
     pub fn new(initial: Vec<u16>, start_step: u64) -> ShardedEncoder {
         let tree = HashTree::build(&initial, DEFAULT_CHUNK_ELEMS);
-        ShardedEncoder { prev: initial, prev_step: start_step, tree }
+        ShardedEncoder { prev: initial, prev_step: start_step, tree, balance: false }
     }
 
     pub fn current(&self) -> &[u16] {
@@ -220,7 +216,28 @@ impl ShardedEncoder {
         // cap at the wire limit consumers accept, or a marker could
         // advertise a shard count no consumer will ever apply
         let shard_count = shard_count.clamp(1, MAX_SHARDS as usize);
-        let ranges = hashtree::shard_ranges(new.len(), self.tree.chunk_elems(), shard_count);
+        let ce = self.tree.chunk_elems();
+        let ranges = if self.balance && shard_count > 1 {
+            let counts = sparse::count_diff_bf16_blocks(&self.prev, new, ce);
+            hashtree::balanced_shard_ranges(&counts, ce, new.len(), shard_count)
+        } else {
+            hashtree::shard_ranges(new.len(), ce, shard_count)
+        };
+        // whichever split chose the cuts, shards must stay chunk-aligned
+        // or subtree roots would not be derivable from shared per-chunk
+        // state (and the consumer's partition validation would reject
+        // the step)
+        let mut expect_lo = 0usize;
+        for r in &ranges {
+            assert!(
+                r.start == expect_lo
+                    && r.start % ce == 0
+                    && (r.end % ce == 0 || r.end == new.len()),
+                "shard ranges must stay chunk-aligned"
+            );
+            expect_lo = r.end;
+        }
+        assert!(expect_lo == new.len() && ranges.len() <= shard_count);
         // phase 1: fused diff+gather. Unsharded keeps the globally
         // parallel scan; sharded runs one serial scan per shard on its
         // own pool worker (shard-level parallelism without nesting a
@@ -293,10 +310,11 @@ impl ShardedEncoder {
     }
 }
 
-/// Trainer-side publisher (Alg. 5 `PublishCheckpoint`).
-pub struct Publisher {
-    pub store: ObjectStore,
-    pub prefix: String,
+/// Trainer-side publisher (Alg. 5 `PublishCheckpoint`), generic over
+/// the sync fabric. `Publisher::new(store, prefix, ...)` builds the
+/// object-store instance; [`Publisher::over`] accepts any transport.
+pub struct Publisher<T: SyncTransport = ObjectStoreTransport> {
+    pub transport: T,
     pub layout: Vec<TensorShape>,
     pub opts: EncodeOpts,
     /// Anchor interval k (paper uses 50).
@@ -310,18 +328,31 @@ pub struct Publisher {
     pub fail_next_delta: bool,
 }
 
-impl Publisher {
-    /// Create a publisher and publish step 0 as the initial anchor.
+impl Publisher<ObjectStoreTransport> {
+    /// Create an object-store publisher and publish step 0 as the
+    /// initial anchor (the pre-trait constructor, kept stable).
     pub fn new(
         store: ObjectStore,
         prefix: &str,
         layout: Vec<TensorShape>,
         initial: Vec<u16>,
         anchor_interval: u64,
-    ) -> Result<Publisher> {
+    ) -> Result<Publisher<ObjectStoreTransport>> {
+        Publisher::over(ObjectStoreTransport::new(store, prefix), layout, initial, anchor_interval)
+    }
+}
+
+impl<T: SyncTransport> Publisher<T> {
+    /// Create a publisher over any transport and publish step 0 as the
+    /// initial anchor.
+    pub fn over(
+        transport: T,
+        layout: Vec<TensorShape>,
+        initial: Vec<u16>,
+        anchor_interval: u64,
+    ) -> Result<Publisher<T>> {
         let mut p = Publisher {
-            store,
-            prefix: prefix.trim_end_matches('/').to_string(),
+            transport,
             layout,
             opts: EncodeOpts::default(),
             anchor_interval: anchor_interval.max(1),
@@ -334,13 +365,16 @@ impl Publisher {
     }
 
     /// Builder-style shard count override (clamped to [`MAX_SHARDS`]).
-    pub fn with_shards(mut self, shards: usize) -> Publisher {
+    pub fn with_shards(mut self, shards: usize) -> Publisher<T> {
         self.shard_count = shards.clamp(1, MAX_SHARDS as usize);
         self
     }
 
-    fn key(&self, k: String) -> String {
-        format!("{}/{}", self.prefix, k)
+    /// Builder-style toggle for the equal-nnz load-balanced shard
+    /// split (see [`crate::sparse::hashtree::balanced_shard_ranges`]).
+    pub fn with_shard_balancing(mut self, on: bool) -> Publisher<T> {
+        self.enc.balance = on;
+        self
     }
 
     pub fn current_step(&self) -> u64 {
@@ -349,6 +383,10 @@ impl Publisher {
 
     pub fn current_weights(&self) -> &[u16] {
         self.enc.current()
+    }
+
+    pub fn tree(&self) -> &HashTree {
+        self.enc.tree()
     }
 
     fn upload_anchor(&mut self, step: u64) -> Result<u64> {
@@ -360,16 +398,16 @@ impl Publisher {
         obj.extend_from_slice(&step.to_le_bytes());
         obj.extend_from_slice(&(self.enc.current().len() as u64).to_le_bytes());
         obj.extend_from_slice(&comp);
-        self.store.put(&self.key(anchor_key(step)), &obj)?;
+        self.transport.publish_frame(FrameId::Anchor { step }, &obj)?;
         // anchor ready marker carries the hash-tree geometry + root
-        self.store
-            .put(&self.key(anchor_ready_key(step)), anchor_marker(self.enc.tree()).as_bytes())?;
+        self.transport
+            .publish_marker(MarkerId::Anchor(step), &anchor_marker(self.enc.tree()))?;
         Ok(obj.len() as u64)
     }
 
     /// Publish optimizer step `step` whose BF16 view is `new`.
     ///
-    /// Encodes per shard on the worker pool, uploads the shard frames
+    /// Encodes per shard on the worker pool, publishes the shard frames
     /// (also on the pool, so uploads overlap), then commits the
     /// ready marker; the anchor follows if `step % k == 0` (paper §J.1
     /// "concurrent uploads"). If the delta upload fails, falls back to
@@ -400,25 +438,27 @@ impl Publisher {
             return Ok(stats);
         }
         if encoded.frames.len() == 1 {
-            self.store.put(&self.key(delta_key(step)), &encoded.frames[0].bytes)?;
-            self.store
-                .put(&self.key(delta_ready_key(step)), encoded.root.as_bytes())?;
+            self.transport
+                .publish_frame(FrameId::Delta { step }, &encoded.frames[0].bytes)?;
+            self.transport.publish_marker(MarkerId::Delta(step), &encoded.root)?;
         } else {
-            // pipelined fan-out: each shard frame uploads on its own
-            // pool worker, overlapping store latency across shards; the
-            // marker commits only after every frame landed
-            let store = &self.store;
-            let prefix = &self.prefix;
+            // pipelined fan-out: each shard frame publishes on its own
+            // pool worker, overlapping fabric latency across shards;
+            // the marker commits only after every frame landed
+            let tr = &self.transport;
             let uploads: Vec<(u32, &Vec<u8>)> =
                 encoded.frames.iter().map(|f| (f.shard_index, &f.bytes)).collect();
-            let results: Vec<Result<()>> = pool::par_map(uploads, |_, (i, bytes)| {
-                store.put(&format!("{}/{}", prefix, delta_shard_key(step, i)), bytes)
+            let results: Vec<Result<()>> = pool::par_map(uploads, |_, (shard, bytes)| {
+                tr.publish_frame(FrameId::Shard { step, shard }, bytes)
             });
             for r in results {
                 r?;
             }
-            let marker = format!("v3:{}:{}", encoded.frames.len(), encoded.root);
-            self.store.put(&self.key(delta_ready_key(step)), marker.as_bytes())?;
+            let marker = crate::net::transport::sharded_marker(
+                encoded.frames.len() as u32,
+                &encoded.root,
+            );
+            self.transport.publish_marker(MarkerId::Delta(step), &marker)?;
         }
         if step % self.anchor_interval == 0 {
             stats.anchor_bytes = self.upload_anchor(step)?;
@@ -434,6 +474,8 @@ pub struct SyncStats {
     pub from_step: u64,
     pub to_step: u64,
     pub path: SyncPath,
+    /// Which transport backend served this call.
+    pub transport: &'static str,
     /// Total bytes transferred during this call, including any fast-
     /// path attempt that was abandoned for the slow path.
     pub bytes_downloaded: u64,
@@ -446,8 +488,9 @@ pub struct SyncStats {
     /// slow-path base anchor plus any §J.5 anchor that replaced a
     /// failed delta upload.
     pub anchors_restored: usize,
-    /// Shard frames re-fetched after a decode failure or a subtree-root
-    /// mismatch (the other shards of the step stay applied).
+    /// Shard frames re-fetched after a fetch failure, a decode failure
+    /// or a subtree-root mismatch (the other shards of the step stay
+    /// applied).
     pub shard_refetches: usize,
     pub verified: bool,
 }
@@ -461,10 +504,11 @@ pub enum SyncPath {
     Slow,
 }
 
-/// Inference-worker consumer (Alg. 5 `Synchronize`).
-pub struct Consumer {
-    pub store: ObjectStore,
-    pub prefix: String,
+/// Inference-worker consumer (Alg. 5 `Synchronize`), generic over the
+/// sync fabric. `Consumer::new(store, prefix, layout)` builds the
+/// object-store instance; [`Consumer::over`] accepts any transport.
+pub struct Consumer<T: SyncTransport = ObjectStoreTransport> {
+    pub transport: T,
     pub layout: Vec<TensorShape>,
     /// Local BF16 weights (None until first slow-path sync).
     pub weights: Option<Vec<u16>>,
@@ -473,6 +517,10 @@ pub struct Consumer {
     /// so the fast path verifies in O(nnz · chunk). None until built
     /// from an anchor, or after a legacy v1 patch made it stale.
     tree: Option<HashTree>,
+    /// Inventory snapshot taken by [`Consumer::latest_ready`], consumed
+    /// by the next [`Consumer::synchronize`] so the poll-then-sync
+    /// pattern costs one backend scan, not two.
+    cached_inv: Option<Inventory>,
 }
 
 /// Latest step with a delta-ready (or anchor-ready) marker in `inv`.
@@ -485,25 +533,33 @@ fn latest_of(inv: &Inventory) -> Option<u64> {
         .max()
 }
 
-impl Consumer {
+impl Consumer<ObjectStoreTransport> {
+    /// Object-store consumer (the pre-trait constructor, kept stable).
     pub fn new(store: ObjectStore, prefix: &str, layout: Vec<TensorShape>) -> Consumer {
-        Consumer {
-            store,
-            prefix: prefix.trim_end_matches('/').to_string(),
-            layout,
-            weights: None,
-            step: 0,
-            tree: None,
-        }
+        Consumer::over(ObjectStoreTransport::new(store, prefix), layout)
+    }
+}
+
+impl<T: SyncTransport> Consumer<T> {
+    /// Consumer over any transport.
+    pub fn over(transport: T, layout: Vec<TensorShape>) -> Consumer<T> {
+        Consumer { transport, layout, weights: None, step: 0, tree: None, cached_inv: None }
     }
 
-    fn key(&self, k: String) -> String {
-        format!("{}/{}", self.prefix, k)
+    /// Root of the hash tree mirroring the local weights (None before
+    /// the first sync or after a legacy v1 chain dropped the tree).
+    pub fn tree_root(&self) -> Option<String> {
+        self.tree.as_ref().map(|t| t.root_hex())
     }
 
-    /// Latest step with a delta-ready (or anchor-ready) marker.
-    pub fn latest_ready(&self) -> Result<Option<u64>> {
-        Ok(latest_of(&retention::scan(&self.store, &self.prefix)?))
+    /// Latest step with a delta-ready (or anchor-ready) marker. The
+    /// snapshot is cached and reused by the next [`Self::synchronize`]
+    /// call, collapsing the poll-then-sync pattern to one scan.
+    pub fn latest_ready(&mut self) -> Result<Option<u64>> {
+        let inv = self.transport.latest_ready()?;
+        let head = latest_of(&inv);
+        self.cached_inv = Some(inv);
+        Ok(head)
     }
 
     /// Synchronize to the newest published checkpoint. Implements the
@@ -511,14 +567,27 @@ impl Consumer {
     /// path (anchor + chain); falls back to the slow path on any
     /// verification failure (§J.5 self-healing).
     pub fn synchronize(&mut self) -> Result<SyncStats> {
-        // one inventory scan serves both the head lookup and the
-        // slow-path anchor choice
-        let inv = retention::scan(&self.store, &self.prefix)?;
+        // one inventory scan serves the head lookup and the slow-path
+        // anchor choice — reusing the snapshot a preceding
+        // latest_ready() already paid for. A cached snapshot that saw
+        // no checkpoints is discarded and rescanned: it may predate the
+        // first publish, and failing on it would turn a stale poll into
+        // a hard error (a stale-but-nonempty snapshot is fine — we sync
+        // to its head and the next poll catches up).
+        let inv = match self.cached_inv.take() {
+            Some(inv) if latest_of(&inv).is_some() => inv,
+            _ => self.transport.latest_ready()?,
+        };
         let latest = match latest_of(&inv) {
             Some(s) => s,
-            None => bail!("no checkpoints published under {}", self.prefix),
+            None => bail!("no checkpoints published on {}", self.transport.name()),
         };
-        let mut stats = SyncStats { from_step: self.step, to_step: latest, ..Default::default() };
+        let mut stats = SyncStats {
+            from_step: self.step,
+            to_step: latest,
+            transport: self.transport.name(),
+            ..Default::default()
+        };
         if self.weights.is_some() && latest == self.step {
             stats.path = SyncPath::UpToDate;
             stats.verified = true;
@@ -574,9 +643,9 @@ impl Consumer {
     /// ready marker carries v2 geometry (legacy scalar markers verify
     /// via the full-buffer hash and return no tree).
     fn download_anchor(&self, step: u64) -> Result<(Vec<u16>, Option<HashTree>, u64)> {
-        let obj = self
-            .store
-            .get(&self.key(anchor_key(step)))
+        let (obj, expect) = self
+            .transport
+            .fetch_anchor(step)
             .with_context(|| format!("anchor {}", step))?;
         if obj.len() < 20 || &obj[0..4] != b"PLSA" {
             bail!("bad anchor header");
@@ -592,8 +661,6 @@ impl Consumer {
             bail!("anchor length mismatch");
         }
         // verify against the ready marker (and keep the tree it implies)
-        let expect = String::from_utf8(self.store.get(&self.key(anchor_ready_key(step)))?)
-            .unwrap_or_default();
         let tree = if let Some((chunk_elems, root)) = parse_anchor_marker(&expect) {
             let t = HashTree::build(&w, chunk_elems);
             if t.root_hex() != root {
@@ -624,9 +691,9 @@ impl Consumer {
         stats: &mut SyncStats,
     ) -> Result<(Vec<u16>, Option<HashTree>)> {
         for t in from + 1..=to {
-            let marker = match self.store.get(&self.key(delta_ready_key(t))) {
-                Ok(m) => m,
-                Err(_) => {
+            let step_data = match self.transport.fetch_step(t)? {
+                Some(d) => d,
+                None => {
                     // §J.5: a failed delta upload was replaced by an
                     // anchor.
                     let (aw, atree, bytes) = self.download_anchor(t)?;
@@ -637,14 +704,14 @@ impl Consumer {
                     continue;
                 }
             };
-            if let Some((count, root)) =
-                parse_sharded_marker(&String::from_utf8_lossy(&marker))
-            {
-                self.apply_sharded(t, count, root, &mut w, &mut tree, stats)?;
-                stats.patches_applied += 1;
-                continue;
-            }
-            let obj = self.store.get(&self.key(delta_key(t)))?;
+            let obj = match step_data {
+                StepData::Sharded { shard_count, root } => {
+                    self.apply_sharded(t, shard_count, &root, &mut w, &mut tree, stats)?;
+                    stats.patches_applied += 1;
+                    continue;
+                }
+                StepData::Whole(obj) => obj,
+            };
             stats.bytes_downloaded += obj.len() as u64;
             let patch = container::decode(&obj, &self.layout)?;
             if patch.step != t {
@@ -694,10 +761,11 @@ impl Consumer {
         Ok((w, tree))
     }
 
-    fn fetch_shard(&self, step: u64, shard: u32, stats: &mut SyncStats) -> Result<Vec<u8>> {
+    /// One counted repair fetch through the transport's repair seam.
+    fn refetch_shard(&self, step: u64, shard: u32, stats: &mut SyncStats) -> Result<Vec<u8>> {
         let obj = self
-            .store
-            .get(&self.key(delta_shard_key(step, shard)))
+            .transport
+            .fetch_shard(step, shard)
             .with_context(|| format!("shard {} of step {}", shard, step))?;
         stats.bytes_downloaded += obj.len() as u64;
         Ok(obj)
@@ -705,10 +773,10 @@ impl Consumer {
 
     /// Apply one sharded step: fetch + decode all shard frames (decode
     /// on the pool), apply them in parallel with per-shard subtree
-    /// verification, re-fetch any shard that fails exactly once, then
-    /// bind the assembled step to the marker's global root. Any
-    /// unrecoverable failure propagates, sending the caller to the
-    /// anchor slow path.
+    /// verification, re-fetch any shard that fails — at fetch, decode,
+    /// or verify time — exactly once, then bind the assembled step to
+    /// the marker's global root. Any unrecoverable failure propagates,
+    /// sending the caller to the anchor slow path.
     fn apply_sharded(
         &self,
         step: u64,
@@ -718,20 +786,26 @@ impl Consumer {
         tree: &mut Option<HashTree>,
         stats: &mut SyncStats,
     ) -> Result<()> {
-        // fetch every shard frame on the pool so store latency overlaps
-        // across shards (the publisher's upload path does the same)
-        let store = &self.store;
-        let prefix = &self.prefix;
+        // fetch every shard frame on the pool so fabric latency
+        // overlaps across shards (the publisher's upload path does the
+        // same)
+        let tr = &self.transport;
         let fetched: Vec<Result<Vec<u8>>> =
-            pool::par_map((0..shard_count).collect(), |_, i| {
-                store
-                    .get(&format!("{}/{}", prefix, delta_shard_key(step, i)))
-                    .with_context(|| format!("shard {} of step {}", i, step))
-            });
+            pool::par_map((0..shard_count).collect(), |_, i| tr.fetch_shard(step, i));
         let mut objs = Vec::with_capacity(fetched.len());
-        for r in fetched {
-            let obj = r?;
-            stats.bytes_downloaded += obj.len() as u64;
+        for (i, r) in fetched.into_iter().enumerate() {
+            let obj = match r {
+                Ok(obj) => {
+                    stats.bytes_downloaded += obj.len() as u64;
+                    obj
+                }
+                Err(_) => {
+                    // transport-level loss: one repair fetch (which
+                    // counts its own bytes) before abandoning the step
+                    stats.shard_refetches += 1;
+                    self.refetch_shard(step, i as u32, stats)?
+                }
+            };
             objs.push(obj);
         }
         let layout = &self.layout;
@@ -744,7 +818,7 @@ impl Consumer {
                 Err(_) => {
                     // transport/store-level corruption: one refetch
                     stats.shard_refetches += 1;
-                    let obj = self.fetch_shard(step, i as u32, stats)?;
+                    let obj = self.refetch_shard(step, i as u32, stats)?;
                     patches.push(container::decode(&obj, layout).with_context(|| {
                         format!("shard {} of step {} after refetch", i, step)
                     })?);
@@ -765,7 +839,7 @@ impl Consumer {
             // the failed shard was restored exactly; refetch it alone
             // while every other shard stays applied
             stats.shard_refetches += 1;
-            let obj = self.fetch_shard(step, i as u32, stats)?;
+            let obj = self.refetch_shard(step, i as u32, stats)?;
             let retry = container::decode(&obj, layout)
                 .with_context(|| format!("shard {} of step {} after refetch", i, step))?;
             validate_shard_retry(&retry, &patches[i])?;
@@ -905,10 +979,11 @@ fn validate_shard_retry(retry: &Patch, original: &Patch) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::net::transport::{delta_key, delta_shard_key, InProcTransport};
     use crate::sparse::synthetic_layout;
     use crate::util::rng::Rng;
 
-    fn setup(n: usize, k: u64) -> (Publisher, Consumer, Vec<u16>, Rng) {
+    fn setup(n: usize, k: u64) -> (Publisher, Consumer, ObjectStore, Vec<u16>, Rng) {
         let store = ObjectStore::temp("pulsesync").unwrap();
         let layout = synthetic_layout(n, 64);
         let rng = Rng::new(1);
@@ -918,8 +993,8 @@ mod tests {
             .collect();
         let publisher =
             Publisher::new(store.clone(), "sync", layout.clone(), init.clone(), k).unwrap();
-        let consumer = Consumer::new(store, "sync", layout);
-        (publisher, consumer, init, rng)
+        let consumer = Consumer::new(store.clone(), "sync", layout);
+        (publisher, consumer, store, init, rng)
     }
 
     fn perturb(rng: &mut Rng, w: &mut [u16], count: usize) {
@@ -931,10 +1006,11 @@ mod tests {
 
     #[test]
     fn fast_path_bit_identical() {
-        let (mut p, mut c, mut w, mut rng) = setup(10_000, 50);
+        let (mut p, mut c, _store, mut w, mut rng) = setup(10_000, 50);
         // cold start
         let s0 = c.synchronize().unwrap();
         assert_eq!(s0.path, SyncPath::Slow);
+        assert_eq!(s0.transport, "object-store");
         assert_eq!(c.weights.as_ref().unwrap(), &w);
         for step in 1..=5u64 {
             perturb(&mut rng, &mut w, 100);
@@ -949,7 +1025,7 @@ mod tests {
 
     #[test]
     fn chain_path_catches_up() {
-        let (mut p, mut c, mut w, mut rng) = setup(5_000, 50);
+        let (mut p, mut c, _store, mut w, mut rng) = setup(5_000, 50);
         c.synchronize().unwrap();
         for step in 1..=7u64 {
             perturb(&mut rng, &mut w, 50);
@@ -963,15 +1039,15 @@ mod tests {
 
     #[test]
     fn slow_path_after_retention() {
-        let (mut p, mut c, mut w, mut rng) = setup(5_000, 5);
+        let (mut p, mut c, store, mut w, mut rng) = setup(5_000, 5);
         for step in 1..=12u64 {
             perturb(&mut rng, &mut w, 50);
             p.publish(step, &w).unwrap();
         }
         // delete early deltas (simulates retention), keep anchors
         for t in 1..=9u64 {
-            p.store.delete(&format!("sync/{}", delta_key(t))).unwrap();
-            p.store.delete(&format!("sync/delta_ready_{}", t)).unwrap();
+            store.delete(&format!("sync/{}", delta_key(t))).unwrap();
+            store.delete(&format!("sync/delta_ready_{}", t)).unwrap();
         }
         let cs = c.synchronize().unwrap();
         assert_eq!(cs.path, SyncPath::Slow);
@@ -980,7 +1056,7 @@ mod tests {
 
     #[test]
     fn corruption_triggers_self_healing() {
-        let (mut p, mut c, mut w, mut rng) = setup(5_000, 50);
+        let (mut p, mut c, store, mut w, mut rng) = setup(5_000, 50);
         c.synchronize().unwrap();
         perturb(&mut rng, &mut w, 50);
         p.publish(1, &w).unwrap();
@@ -989,10 +1065,10 @@ mod tests {
         // through the corrupt patch fails. Publish step 2 with an anchor
         // to give a recovery point.
         let key = format!("sync/{}", delta_key(1));
-        let mut obj = p.store.get(&key).unwrap();
+        let mut obj = store.get(&key).unwrap();
         let n = obj.len();
         obj[n - 1] ^= 0xFF;
-        p.store.put(&key, &obj).unwrap();
+        store.put(&key, &obj).unwrap();
         perturb(&mut rng, &mut w, 50);
         p.fail_next_delta = true; // step 2 becomes an anchor (J.5)
         p.publish(2, &w).unwrap();
@@ -1004,7 +1080,7 @@ mod tests {
 
     #[test]
     fn delta_upload_failure_recovery() {
-        let (mut p, mut c, mut w, mut rng) = setup(5_000, 100);
+        let (mut p, mut c, _store, mut w, mut rng) = setup(5_000, 100);
         c.synchronize().unwrap();
         perturb(&mut rng, &mut w, 50);
         p.publish(1, &w).unwrap();
@@ -1020,7 +1096,7 @@ mod tests {
 
     #[test]
     fn stats_split_patches_from_anchor_restarts() {
-        let (mut p, mut c, mut w, mut rng) = setup(5_000, 100);
+        let (mut p, mut c, _store, mut w, mut rng) = setup(5_000, 100);
         let s0 = c.synchronize().unwrap();
         // cold start restores exactly one anchor, applies no patches
         assert_eq!(s0.anchors_restored, 1);
@@ -1043,13 +1119,13 @@ mod tests {
         // every delta published by the current Publisher carries v2
         // hash-tree geometry, and the consumer keeps a tree so the fast
         // path never rebuilds from scratch
-        let (mut p, mut c, mut w, mut rng) = setup(8_000, 50);
+        let (mut p, mut c, store, mut w, mut rng) = setup(8_000, 50);
         c.synchronize().unwrap();
         assert!(c.tree.is_some(), "slow path must leave a tree behind");
         for step in 1..=3u64 {
             perturb(&mut rng, &mut w, 80);
             p.publish(step, &w).unwrap();
-            let obj = p.store.get(&format!("sync/{}", delta_key(step))).unwrap();
+            let obj = store.get(&format!("sync/{}", delta_key(step))).unwrap();
             let patch = container::decode(&obj, &c.layout).unwrap();
             assert_eq!(patch.chunk_elems, DEFAULT_CHUNK_ELEMS as u64);
             assert_eq!(patch.result_hash.len(), 64);
@@ -1081,10 +1157,10 @@ mod tests {
         obj.extend_from_slice(&0u64.to_le_bytes());
         obj.extend_from_slice(&(n as u64).to_le_bytes());
         obj.extend_from_slice(&comp);
-        store.put(&format!("sync/{}", anchor_key(0)), &obj).unwrap();
         store
-            .put(&format!("sync/{}", anchor_ready_key(0)), sha256_hex(raw).as_bytes())
+            .put(&format!("sync/{}", crate::net::transport::anchor_key(0)), &obj)
             .unwrap();
+        store.put("sync/anchor_ready_0", sha256_hex(raw).as_bytes()).unwrap();
         let mut w1 = w0.clone();
         perturb(&mut rng, &mut w1, 40);
         let idx = sparse::diff_bf16(&w0, &w1);
@@ -1102,7 +1178,7 @@ mod tests {
         let dobj = container::encode(&patch, &layout, EncodeOpts::default()).unwrap();
         store.put(&format!("sync/{}", delta_key(1)), &dobj).unwrap();
         store
-            .put(&format!("sync/{}", delta_ready_key(1)), patch.result_hash.as_bytes())
+            .put("sync/delta_ready_1", patch.result_hash.as_bytes())
             .unwrap();
         let mut c = Consumer::new(store, "sync", layout);
         let cs = c.synchronize().unwrap();
@@ -1168,7 +1244,7 @@ mod tests {
 
     #[test]
     fn sharded_chain_path_catches_up() {
-        let (mut p, mut c, mut w, mut rng) = setup(20_000, 50);
+        let (mut p, mut c, _store, mut w, mut rng) = setup(20_000, 50);
         p.shard_count = 3;
         c.synchronize().unwrap();
         for step in 1..=5u64 {
@@ -1188,16 +1264,16 @@ mod tests {
         // persistent corruption of one shard object: the single-shard
         // refetch sees the same bad bytes, so the step is abandoned and
         // the consumer recovers from the next anchor (§J.5 pattern)
-        let (mut p, mut c, mut w, mut rng) = setup(20_000, 50);
+        let (mut p, mut c, store, mut w, mut rng) = setup(20_000, 50);
         p.shard_count = 4;
         c.synchronize().unwrap();
         perturb(&mut rng, &mut w, 200);
         p.publish(1, &w).unwrap();
         let key = format!("sync/{}", delta_shard_key(1, 2));
-        let mut obj = p.store.get(&key).unwrap();
+        let mut obj = store.get(&key).unwrap();
         let len = obj.len();
         obj[len - 1] ^= 0xFF;
-        p.store.put(&key, &obj).unwrap();
+        store.put(&key, &obj).unwrap();
         perturb(&mut rng, &mut w, 200);
         p.fail_next_delta = true; // step 2 becomes an anchor (J.5)
         p.publish(2, &w).unwrap();
@@ -1212,14 +1288,14 @@ mod tests {
     fn single_shard_config_stays_wire_compatible() {
         // shard_count = 1 must produce exactly the classic v2 object
         // under the classic key, so old consumers keep working
-        let (mut p, mut c, mut w, mut rng) = setup(6_000, 50);
+        let (mut p, mut c, store, mut w, mut rng) = setup(6_000, 50);
         assert_eq!(p.shard_count, 1);
         c.synchronize().unwrap();
         perturb(&mut rng, &mut w, 60);
         p.publish(1, &w).unwrap();
-        let obj = p.store.get(&format!("sync/{}", delta_key(1))).unwrap();
+        let obj = store.get(&format!("sync/{}", delta_key(1))).unwrap();
         assert_eq!(obj[4], container::VERSION, "single-shard stays v2");
-        let marker = String::from_utf8(p.store.get("sync/delta_ready_1").unwrap()).unwrap();
+        let marker = String::from_utf8(store.get("sync/delta_ready_1").unwrap()).unwrap();
         assert_eq!(marker.len(), 64, "unsharded marker stays a bare root hex");
         let cs = c.synchronize().unwrap();
         assert_eq!(cs.path, SyncPath::Fast);
@@ -1229,7 +1305,7 @@ mod tests {
     #[test]
     fn long_chain_remains_bit_identical() {
         // Prop. H.1: chains of value patches never drift.
-        let (mut p, mut c, mut w, mut rng) = setup(2_000, 25);
+        let (mut p, mut c, _store, mut w, mut rng) = setup(2_000, 25);
         c.synchronize().unwrap();
         for step in 1..=60u64 {
             perturb(&mut rng, &mut w, 30);
@@ -1241,5 +1317,114 @@ mod tests {
         }
         c.synchronize().unwrap();
         assert_eq!(c.weights.as_ref().unwrap(), &w);
+    }
+
+    #[test]
+    fn balanced_sharding_stays_bit_identical_and_spreads_bytes() {
+        // updates concentrated in the first 10% of the buffer: the
+        // static split gives shard 0 nearly all payload; the balanced
+        // split must spread it while staying bit-identical end to end
+        let n = 64_000usize;
+        let store = ObjectStore::temp("pulsesync_balance").unwrap();
+        let layout = synthetic_layout(n, 64);
+        let mut rng = Rng::new(17);
+        let init: Vec<u16> = (0..n).map(|_| rng.next_u32() as u16).collect();
+        let hot = n / 10;
+        let mut p_static = Publisher::new(store.clone(), "st", layout.clone(), init.clone(), 50)
+            .unwrap()
+            .with_shards(4);
+        let mut p_bal = Publisher::new(store.clone(), "bal", layout.clone(), init.clone(), 50)
+            .unwrap()
+            .with_shards(4)
+            .with_shard_balancing(true);
+        let mut c_bal = Consumer::new(store.clone(), "bal", layout.clone());
+        c_bal.synchronize().unwrap();
+        let mut w = init;
+        for step in 1..=4u64 {
+            for _ in 0..800 {
+                let i = rng.below(hot as u64) as usize;
+                w[i] = rng.next_u32() as u16;
+            }
+            let ss = p_static.publish(step, &w).unwrap();
+            let sb = p_bal.publish(step, &w).unwrap();
+            assert_eq!(sb.shard_count, 4, "balanced split must still use 4 shards");
+            let imbalance = |bytes: &[u64]| {
+                let total: u64 = bytes.iter().sum();
+                let mean = total as f64 / bytes.len() as f64;
+                *bytes.iter().max().unwrap() as f64 / mean
+            };
+            assert!(
+                imbalance(&sb.shard_bytes) < imbalance(&ss.shard_bytes),
+                "balanced split must beat static on a hot-region stream \
+                 (static {:?}, balanced {:?})",
+                ss.shard_bytes,
+                sb.shard_bytes
+            );
+            assert!(
+                imbalance(&sb.shard_bytes) < 2.0,
+                "balanced shard bytes still skewed: {:?}",
+                sb.shard_bytes
+            );
+            let cs = c_bal.synchronize().unwrap();
+            assert!(cs.verified);
+            assert_eq!(cs.shard_refetches, 0);
+            assert_eq!(c_bal.weights.as_ref().unwrap(), &w, "step {}", step);
+        }
+        // the balanced publisher's tree agrees with the consumer's
+        assert_eq!(c_bal.tree.as_ref().unwrap().root_hex(), p_bal.tree().root_hex());
+    }
+
+    #[test]
+    fn stale_empty_poll_does_not_poison_synchronize() {
+        // a latest_ready() taken before anything was published caches
+        // an empty snapshot; a later synchronize must rescan instead of
+        // failing on the stale cache
+        let fabric = InProcTransport::new();
+        let layout = synthetic_layout(2_000, 64);
+        let mut c = Consumer::over(fabric.clone(), layout.clone());
+        assert_eq!(c.latest_ready().unwrap(), None);
+        let init: Vec<u16> = (0..2_000u32).map(|i| i as u16).collect();
+        let mut p = Publisher::over(fabric, layout, init.clone(), 10).unwrap();
+        let mut w = init;
+        w[7] ^= 1;
+        p.publish(1, &w).unwrap();
+        let cs = c.synchronize().unwrap();
+        assert!(cs.verified);
+        assert_eq!(cs.to_step, 1);
+        assert_eq!(c.weights.as_ref().unwrap(), &w);
+    }
+
+    #[test]
+    fn generic_publisher_consumer_over_inproc() {
+        // the same state machines over the zero-I/O backend; also the
+        // single-scan regression: latest_ready + synchronize = 1 scan
+        let n = 12_000usize;
+        let layout = synthetic_layout(n, 64);
+        let mut rng = Rng::new(23);
+        let init: Vec<u16> = (0..n).map(|_| rng.next_u32() as u16).collect();
+        let fabric = InProcTransport::new();
+        let mut p = Publisher::over(fabric.clone(), layout.clone(), init.clone(), 4)
+            .unwrap()
+            .with_shards(3);
+        let mut c = Consumer::over(fabric.clone(), layout);
+        let s0 = c.synchronize().unwrap();
+        assert_eq!(s0.path, SyncPath::Slow);
+        assert_eq!(s0.transport, "in-proc");
+        let mut w = init;
+        for step in 1..=6u64 {
+            perturb(&mut rng, &mut w, 150);
+            p.publish(step, &w).unwrap();
+            let scans_before = fabric.counters().inventory_scans;
+            let head = c.latest_ready().unwrap();
+            assert_eq!(head, Some(step));
+            let cs = c.synchronize().unwrap();
+            assert_eq!(
+                fabric.counters().inventory_scans,
+                scans_before + 1,
+                "latest_ready + synchronize must cost exactly one scan"
+            );
+            assert!(cs.verified);
+            assert_eq!(c.weights.as_ref().unwrap(), &w, "step {}", step);
+        }
     }
 }

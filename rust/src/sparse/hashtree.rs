@@ -275,6 +275,55 @@ pub fn shard_ranges(
     out
 }
 
+/// Load-balanced variant of [`shard_ranges`]: contiguous chunk-aligned
+/// element ranges cut so every shard carries roughly `total_nnz /
+/// shards` changed positions, given `counts[c]` = changed positions in
+/// chunk `c` (from [`crate::sparse::count_diff_bf16_blocks`] at
+/// `chunk_elems` blocks). Because cuts are only ever placed on chunk
+/// boundaries, shard subtree roots remain valid exactly as with the
+/// static split; a uniformly-zero profile degrades to [`shard_ranges`].
+/// Produces *at most* `shards` ranges — a profile concentrated in the
+/// final chunks can yield fewer (splitting a zero-nnz prefix would
+/// only add frame overhead).
+pub fn balanced_shard_ranges(
+    counts: &[usize],
+    chunk_elems: usize,
+    total_elems: usize,
+    shards: usize,
+) -> Vec<std::ops::Range<usize>> {
+    let ce = chunk_elems.max(1);
+    let shards = shards.max(1);
+    if total_elems == 0 {
+        return shard_ranges(total_elems, ce, shards);
+    }
+    let n_chunks = total_elems.div_ceil(ce).max(1);
+    assert_eq!(counts.len(), n_chunks, "one count per hash-tree chunk");
+    let total_nnz: usize = counts.iter().sum();
+    if total_nnz == 0 || shards == 1 {
+        return shard_ranges(total_elems, ce, shards);
+    }
+    let mut out = Vec::with_capacity(shards.min(n_chunks));
+    let mut cum = 0usize;
+    let mut start_chunk = 0usize;
+    for (c, &cnt) in counts.iter().enumerate() {
+        cum += cnt;
+        // cut after chunk c once the cumulative nnz crosses the next
+        // equal-share boundary — unless this is the last chunk (the
+        // final range always runs to the buffer end) or we already
+        // produced shards-1 cuts
+        let produced = out.len();
+        if c + 1 < n_chunks
+            && produced + 1 < shards
+            && cum * shards >= total_nnz * (produced + 1)
+        {
+            out.push(start_chunk * ce..(c + 1) * ce);
+            start_chunk = c + 1;
+        }
+    }
+    out.push(start_chunk * ce..total_elems);
+    out
+}
+
 /// One shard's patch, borrowed for [`HashTree::apply_and_rehash_shards`].
 /// `indices` are absolute flat indices, sorted, all inside
 /// `elem_lo..elem_hi`; `expect_root` is the publisher's subtree root
@@ -557,6 +606,86 @@ mod tests {
         }
         // empty buffer still yields one (empty) shard
         assert_eq!(shard_ranges(0, 64, 4), vec![0..0]);
+    }
+
+    #[test]
+    fn balanced_ranges_cover_align_and_balance() {
+        prop::check("balanced shard ranges partition + balance", 40, |g| {
+            let n = g.len().max(1);
+            let ce = 1 + g.rng.below(n as u64 / 2 + 2) as usize;
+            let shards = 1 + g.rng.below(8) as usize;
+            let n_chunks = n.div_ceil(ce);
+            // skewed profile: a few hot chunks own most of the nnz
+            let counts: Vec<usize> = (0..n_chunks)
+                .map(|_| {
+                    if g.rng.f64() < 0.2 {
+                        g.rng.below(1000) as usize
+                    } else {
+                        g.rng.below(3) as usize
+                    }
+                })
+                .collect();
+            let ranges = balanced_shard_ranges(&counts, ce, n, shards);
+            assert!(!ranges.is_empty() && ranges.len() <= shards);
+            let mut expect_lo = 0usize;
+            for r in &ranges {
+                assert_eq!(r.start, expect_lo);
+                assert!(r.start < r.end, "empty shard range");
+                assert!(r.start % ce == 0, "shard lo must stay chunk-aligned");
+                assert!(r.end % ce == 0 || r.end == n, "shard hi must stay chunk-aligned");
+                expect_lo = r.end;
+            }
+            assert_eq!(expect_lo, n, "ranges must cover the buffer");
+            // every proper prefix of ranges carries at least its equal
+            // share of the nnz (the greedy cut invariant)
+            let total: usize = counts.iter().sum();
+            if total > 0 {
+                let mut cum = 0usize;
+                for (k, r) in ranges.iter().enumerate().take(ranges.len() - 1) {
+                    let c_lo = r.start / ce;
+                    let c_hi = r.end.div_ceil(ce);
+                    cum += counts[c_lo..c_hi].iter().sum::<usize>();
+                    assert!(
+                        cum * shards >= total * (k + 1),
+                        "prefix {} under-filled: {} of {}",
+                        k,
+                        cum,
+                        total
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn balanced_ranges_split_hot_region() {
+        // all updates land in the first quarter: the static split gives
+        // shard 0 everything; the balanced split cuts the hot quarter
+        let n = 64 * 1024usize;
+        let ce = 1024usize;
+        let n_chunks = n / ce;
+        let mut counts = vec![0usize; n_chunks];
+        for c in 0..n_chunks / 4 {
+            counts[c] = 100;
+        }
+        let ranges = balanced_shard_ranges(&counts, ce, n, 4);
+        assert_eq!(ranges.len(), 4);
+        // first three shards split the hot quarter ≈ evenly
+        let hot_end = (n_chunks / 4) * ce;
+        assert!(ranges[2].end <= hot_end, "cuts must land inside the hot region");
+        let nnz_of = |r: &std::ops::Range<usize>| {
+            counts[r.start / ce..r.end.div_ceil(ce)].iter().sum::<usize>()
+        };
+        let total: usize = counts.iter().sum();
+        for r in ranges.iter().take(3) {
+            let share = nnz_of(r) as f64 / total as f64;
+            assert!(share > 0.15 && share < 0.45, "share {}", share);
+        }
+        // zero profile falls back to the static split
+        assert_eq!(
+            balanced_shard_ranges(&vec![0; n_chunks], ce, n, 4),
+            shard_ranges(n, ce, 4)
+        );
     }
 
     #[test]

@@ -168,6 +168,32 @@ pub fn count_diff_bf16(old: &[u16], new: &[u16]) -> usize {
     .sum()
 }
 
+/// Per-block changed-position counts: block `b` covers elements
+/// `b*block_elems .. (b+1)*block_elems` (last block may be short).
+/// One word-skipping parallel pass — the profile the load-balanced
+/// shard split ([`hashtree::balanced_shard_ranges`]) partitions so
+/// every shard carries ≈ nnz/S of the update stream.
+pub fn count_diff_bf16_blocks(old: &[u16], new: &[u16], block_elems: usize) -> Vec<usize> {
+    assert_eq!(old.len(), new.len(), "checkpoint length mismatch");
+    let be = block_elems.max(1);
+    let n_blocks = old.len().div_ceil(be);
+    let parts = pool::par_ranges(n_blocks, 8, |r| {
+        r.map(|b| {
+            let lo = b * be;
+            let hi = (lo + be).min(old.len());
+            let mut c = 0usize;
+            diff_words(old, new, lo..hi, |_| c += 1);
+            c
+        })
+        .collect::<Vec<usize>>()
+    });
+    let mut out = Vec::with_capacity(n_blocks);
+    for p in parts {
+        out.extend(p);
+    }
+    out
+}
+
 /// Gather `values[i] = new[idx]` for a sorted index list.
 pub fn gather_u16(new: &[u16], indices: &[u64]) -> Vec<u16> {
     indices.iter().map(|&i| new[i as usize]).collect()
@@ -359,6 +385,31 @@ mod tests {
         assert_eq!(idx, (0..37).collect::<Vec<u64>>());
         assert_eq!(vals, vec![1u16; 37]);
         assert_eq!(count_diff_bf16(&old, &new), 37);
+    }
+
+    #[test]
+    fn block_counts_sum_to_total_diff() {
+        crate::util::prop::check("block counts partition the diff", 40, |g| {
+            let n = g.len();
+            let be = 1 + g.rng.below(n as u64 / 2 + 4) as usize;
+            let old: Vec<u16> = (0..n).map(|_| g.rng.next_u32() as u16).collect();
+            let mut new = old.clone();
+            for _ in 0..g.rng.below(n as u64 + 1) {
+                if n > 0 {
+                    let i = g.rng.below(n as u64) as usize;
+                    new[i] = g.rng.next_u32() as u16;
+                }
+            }
+            let counts = count_diff_bf16_blocks(&old, &new, be);
+            assert_eq!(counts.len(), n.div_ceil(be));
+            assert_eq!(counts.iter().sum::<usize>(), count_diff_bf16(&old, &new));
+            for (b, &c) in counts.iter().enumerate() {
+                let lo = b * be;
+                let hi = (lo + be).min(n);
+                let expect = (lo..hi).filter(|&i| old[i] != new[i]).count();
+                assert_eq!(c, expect, "block {}", b);
+            }
+        });
     }
 
     #[test]

@@ -21,7 +21,7 @@ impl Default for RetentionPolicy {
 
 /// Inventory of checkpoint steps currently in the store, derived from
 /// ready markers under `prefix` (see `pulse::sync` for the key scheme).
-#[derive(Debug, Default)]
+#[derive(Debug, Default, Clone)]
 pub struct Inventory {
     pub delta_steps: Vec<u64>,
     pub anchor_steps: Vec<u64>,

@@ -1,0 +1,367 @@
+//! Transport conformance suite: the SAME PULSESync stream (seeded,
+//! deterministic) runs over every `SyncTransport` backend —
+//! object-store, in-proc, TCP relay, and fault-injected wrappers — and
+//! must end bit-identical to the object-store reference:
+//!
+//! * bit-identity per step and at the end of the stream;
+//! * chain catch-up and cold-start slow path on every backend;
+//! * single-shard corruption healed by exactly one counted refetch on
+//!   every backend (on the relay this is a real NACK retransmit);
+//! * the poll-then-sync pattern costs one inventory scan, not two;
+//! * a zero-fault `FaultInjectingTransport` is transparent.
+
+use pulse::net::relay::Relay;
+use pulse::net::transport::{
+    FaultInjectingTransport, FaultPlan, InProcTransport, ObjectStoreTransport, RelayTransport,
+    SyncTransport,
+};
+use pulse::pulse::sync::{Consumer, Publisher, SyncPath, SyncStats};
+use pulse::sparse::synthetic_layout;
+use pulse::storage::ObjectStore;
+use pulse::util::rng::Rng;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const N: usize = 24_000;
+const SHARDS: usize = 4;
+const STEPS: u64 = 6;
+
+/// The canonical stream: views[0] is the initial checkpoint, views[t]
+/// the view at step t. Seeded, so every backend sees identical data.
+fn views(n: usize, steps: u64, perturbs: usize) -> Vec<Vec<u16>> {
+    let mut rng = Rng::new(77);
+    let mut w: Vec<u16> = (0..n).map(|_| rng.next_u32() as u16).collect();
+    let mut out = vec![w.clone()];
+    for _ in 0..steps {
+        for _ in 0..perturbs {
+            let i = rng.below(n as u64) as usize;
+            w[i] = rng.next_u32() as u16;
+        }
+        out.push(w.clone());
+    }
+    out
+}
+
+/// Poll until `step` is committed from this consumer's view, then
+/// synchronize once (exercising the cached-inventory single-scan
+/// path). Asynchronous backends (relay) need the poll; synchronous
+/// ones pass on the first iteration.
+fn wait_sync<T: SyncTransport>(c: &mut Consumer<T>, step: u64) -> SyncStats {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        if let Ok(Some(head)) = c.latest_ready() {
+            if head >= step {
+                return c.synchronize().unwrap();
+            }
+        }
+        assert!(Instant::now() < deadline, "step {} never became ready", step);
+        std::thread::sleep(Duration::from_millis(3));
+    }
+}
+
+/// Drive the canonical stream over (producer, consumer) transports:
+/// publish each step, synchronize, assert per-step bit-identity.
+/// Returns (final weights, total shard refetches).
+fn run_stream<P: SyncTransport, C: SyncTransport>(
+    prod: P,
+    cons: C,
+    anchor_interval: u64,
+) -> (Vec<u16>, usize) {
+    let layout = synthetic_layout(N, 64);
+    let vs = views(N, STEPS, 400);
+    let mut publisher = Publisher::over(prod, layout.clone(), vs[0].clone(), anchor_interval)
+        .unwrap()
+        .with_shards(SHARDS);
+    let mut consumer = Consumer::over(cons, layout);
+    let s0 = wait_sync(&mut consumer, 0);
+    assert_eq!(s0.path, SyncPath::Slow, "cold start is the slow path");
+    assert_eq!(consumer.weights.as_ref().unwrap(), &vs[0]);
+    let mut refetches = 0usize;
+    for step in 1..=STEPS {
+        publisher.publish(step, &vs[step as usize]).unwrap();
+        let cs = wait_sync(&mut consumer, step);
+        refetches += cs.shard_refetches;
+        assert!(cs.verified, "step {} unverified", step);
+        assert_eq!(
+            consumer.weights.as_ref().unwrap(),
+            &vs[step as usize],
+            "bit-identity broken at step {}",
+            step
+        );
+    }
+    assert_eq!(consumer.weights.as_ref().unwrap(), publisher.current_weights());
+    (consumer.weights.clone().unwrap(), refetches)
+}
+
+/// The object-store run IS the pre-refactor path (same key scheme,
+/// same objects); it doubles as the cross-backend reference.
+fn object_store_reference() -> Vec<u16> {
+    let store = ObjectStore::temp("conf_ref").unwrap();
+    let (w, refetches) = run_stream(
+        ObjectStoreTransport::new(store.clone(), "sync"),
+        ObjectStoreTransport::new(store.clone(), "sync"),
+        3,
+    );
+    assert_eq!(refetches, 0);
+    std::fs::remove_dir_all(store.root()).unwrap();
+    w
+}
+
+#[test]
+fn all_backends_bit_identical_to_object_store_reference() {
+    let reference = object_store_reference();
+
+    // in-proc: producer and consumer share one staging window
+    let fabric = InProcTransport::new();
+    let (w_inproc, r) = run_stream(fabric.clone(), fabric.clone(), 3);
+    assert_eq!(r, 0);
+    assert_eq!(w_inproc, reference, "in-proc diverged from object store");
+
+    // relay: real sockets, staging receiver, markers over the wire
+    let relay = Arc::new(Relay::start().unwrap());
+    let prod = RelayTransport::publisher(relay.clone());
+    let cons = RelayTransport::subscribe(relay.port).unwrap();
+    let (w_relay, r) = run_stream(prod, cons, 3);
+    assert_eq!(r, 0);
+    assert_eq!(w_relay, reference, "relay diverged from object store");
+    relay.stop();
+
+    // fault-injected (zero-fault plan): byte-for-byte transparent
+    let inner = InProcTransport::new();
+    let cons = FaultInjectingTransport::new(inner.clone(), 99, FaultPlan::default());
+    let (w_fault, r) = run_stream(inner, cons, 3);
+    assert_eq!(r, 0);
+    assert_eq!(w_fault, reference, "fault decorator must be transparent at prob 0");
+}
+
+/// Cold-start slow path + multi-step chain catch-up, on one backend.
+fn chain_and_slow<P: SyncTransport, C: SyncTransport>(prod: P, cons: C) {
+    let layout = synthetic_layout(N, 64);
+    let vs = views(N, STEPS, 400);
+    let mut publisher =
+        Publisher::over(prod, layout.clone(), vs[0].clone(), 50).unwrap().with_shards(SHARDS);
+    publisher.publish(1, &vs[1]).unwrap();
+    publisher.publish(2, &vs[2]).unwrap();
+    // cold start two steps in: anchor 0 + chain of sharded deltas
+    let mut consumer = Consumer::over(cons, layout);
+    let cs = wait_sync(&mut consumer, 2);
+    assert_eq!(cs.path, SyncPath::Slow);
+    assert_eq!(cs.anchors_restored, 1);
+    assert_eq!(cs.patches_applied, 2);
+    assert_eq!(consumer.weights.as_ref().unwrap(), &vs[2]);
+    // fall three steps behind: chain path, no anchor
+    for step in 3..=5u64 {
+        publisher.publish(step, &vs[step as usize]).unwrap();
+    }
+    let cs = wait_sync(&mut consumer, 5);
+    assert_eq!(cs.path, SyncPath::Chain);
+    assert_eq!(cs.patches_applied, 3);
+    assert_eq!(cs.anchors_restored, 0);
+    assert_eq!(consumer.weights.as_ref().unwrap(), &vs[5]);
+}
+
+#[test]
+fn chain_and_slow_paths_on_every_backend() {
+    let store = ObjectStore::temp("conf_chain").unwrap();
+    chain_and_slow(
+        ObjectStoreTransport::new(store.clone(), "sync"),
+        ObjectStoreTransport::new(store.clone(), "sync"),
+    );
+    std::fs::remove_dir_all(store.root()).unwrap();
+
+    let fabric = InProcTransport::new();
+    chain_and_slow(fabric.clone(), fabric);
+
+    let relay = Arc::new(Relay::start().unwrap());
+    let prod = RelayTransport::publisher(relay.clone());
+    let cons = RelayTransport::subscribe(relay.port).unwrap();
+    chain_and_slow(prod, cons);
+    relay.stop();
+
+    let inner = InProcTransport::new();
+    let cons = FaultInjectingTransport::new(inner.clone(), 5, FaultPlan::default());
+    chain_and_slow(inner, cons);
+}
+
+/// Corrupt exactly (step 2, shard 1) on the consumer side of `base`;
+/// the stream must stay bit-identical with exactly one counted
+/// refetch (acceptance: §J.5 recovery on every backend).
+fn corruption_heals<P: SyncTransport, C: SyncTransport>(prod: P, cons: C) {
+    let decorated = FaultInjectingTransport::targeting(cons, 2, 1);
+    let (w, refetches) = run_stream(prod, decorated, 50);
+    let vs = views(N, STEPS, 400);
+    assert_eq!(w, vs[STEPS as usize]);
+    assert_eq!(refetches, 1, "single corruption must heal with exactly one refetch");
+}
+
+#[test]
+fn single_shard_corruption_heals_on_every_backend() {
+    let store = ObjectStore::temp("conf_corrupt").unwrap();
+    corruption_heals(
+        ObjectStoreTransport::new(store.clone(), "sync"),
+        ObjectStoreTransport::new(store.clone(), "sync"),
+    );
+    std::fs::remove_dir_all(store.root()).unwrap();
+
+    let fabric = InProcTransport::new();
+    corruption_heals(fabric.clone(), fabric);
+}
+
+#[test]
+fn single_shard_corruption_heals_over_relay_via_nack() {
+    // on the relay the repair seam is a real NACK: the relay must
+    // retransmit exactly the corrupted shard to exactly this subscriber
+    let relay = Arc::new(Relay::start().unwrap());
+    let prod = RelayTransport::publisher(relay.clone());
+    let cons = RelayTransport::subscribe(relay.port).unwrap();
+    let decorated = FaultInjectingTransport::targeting(cons, 2, 1);
+    let (w, refetches) = run_stream(prod, decorated, 50);
+    let vs = views(N, STEPS, 400);
+    assert_eq!(w, vs[STEPS as usize]);
+    assert_eq!(refetches, 1);
+    assert_eq!(relay.nacks_serviced(), 1, "the heal must be a relay retransmit");
+    relay.stop();
+}
+
+#[test]
+fn dropped_shard_heals_with_one_refetch() {
+    // a lost frame (fetch error) takes the same repair seam as
+    // corruption: one counted refetch, bit-identity preserved
+    let fabric = InProcTransport::new();
+    let cons = FaultInjectingTransport::new(
+        fabric.clone(),
+        11,
+        FaultPlan { drop_shard_prob: 1.0, ..FaultPlan::default() },
+    );
+    let (w, refetches) = run_stream(fabric, cons, 50);
+    let vs = views(N, STEPS, 400);
+    assert_eq!(w, vs[STEPS as usize]);
+    // every shard of every delta step dropped once: S refetches per step
+    assert_eq!(refetches, STEPS as usize * SHARDS);
+}
+
+#[test]
+fn delayed_markers_only_defer_visibility() {
+    // "reordering": the head marker is hidden from one poll; the next
+    // poll sees it, and nothing else changes
+    let fabric = InProcTransport::new();
+    let cons = FaultInjectingTransport::new(
+        fabric.clone(),
+        13,
+        FaultPlan { delay_marker_prob: 1.0, ..FaultPlan::default() },
+    );
+    let (w, refetches) = run_stream(fabric, cons, 3);
+    let vs = views(N, STEPS, 400);
+    assert_eq!(w, vs[STEPS as usize]);
+    assert_eq!(refetches, 0);
+}
+
+/// Publish + sync the small stream over a fresh in-proc fabric with
+/// the given consumer-side transport; returns the final weights.
+fn small_leg<C: SyncTransport>(
+    fabric: InProcTransport,
+    cons: C,
+    layout: &[pulse::sparse::TensorShape],
+    vs: &[Vec<u16>],
+) -> Vec<u16> {
+    let mut publisher = Publisher::over(fabric, layout.to_vec(), vs[0].clone(), 2)
+        .unwrap()
+        .with_shards(3);
+    let mut c = Consumer::over(cons, layout.to_vec());
+    for (step, view) in vs.iter().enumerate().skip(1) {
+        publisher.publish(step as u64, view).unwrap();
+        let cs = c.synchronize().unwrap();
+        assert!(cs.verified);
+        assert_eq!(cs.shard_refetches, 0);
+        assert_eq!(c.weights.as_ref().unwrap(), view, "step {}", step);
+    }
+    c.weights.clone().unwrap()
+}
+
+#[test]
+fn fault_free_decorator_is_transparent_property() {
+    // property (satellite): corruption probability 0 ⇒ the decorated
+    // run is bit-identical to the undecorated one, for any seed
+    let layout = synthetic_layout(6_000, 64);
+    let vs = views(6_000, 4, 120);
+    pulse::util::prop::check("fault prob 0 == inner", 5, |g| {
+        let seed = g.rng.next_u64();
+        let plain_fabric = InProcTransport::new();
+        let plain = small_leg(plain_fabric.clone(), plain_fabric, &layout, &vs);
+        let fab = InProcTransport::new();
+        let decorated_cons =
+            FaultInjectingTransport::new(fab.clone(), seed, FaultPlan::default());
+        let decorated = small_leg(fab, decorated_cons, &layout, &vs);
+        assert_eq!(plain, decorated, "decorated and plain runs diverged (seed {})", seed);
+        assert_eq!(plain, vs[vs.len() - 1]);
+    });
+}
+
+#[test]
+fn any_single_shard_corruption_heals_once_property() {
+    // property (satellite): for ANY (step, shard) target, the stream
+    // heals with exactly one shard_refetches increment
+    let n = 8_000usize;
+    let layout = synthetic_layout(n, 64);
+    let steps = 4u64;
+    let vs = views(n, steps, 150);
+    pulse::util::prop::check("single corruption heals once", 8, |g| {
+        let step = 1 + g.rng.below(steps);
+        let shard = g.rng.below(4) as u32;
+        let fabric = InProcTransport::new();
+        let mut publisher = Publisher::over(fabric.clone(), layout.clone(), vs[0].clone(), 50)
+            .unwrap()
+            .with_shards(4);
+        let mut c =
+            Consumer::over(FaultInjectingTransport::targeting(fabric, step, shard), layout.clone());
+        c.synchronize().unwrap();
+        let mut refetches = 0usize;
+        for s in 1..=steps {
+            publisher.publish(s, &vs[s as usize]).unwrap();
+            let cs = c.synchronize().unwrap();
+            refetches += cs.shard_refetches;
+            assert!(cs.verified);
+            assert_eq!(c.weights.as_ref().unwrap(), &vs[s as usize]);
+        }
+        assert_eq!(
+            refetches, 1,
+            "target ({}, {}) must heal with exactly one refetch",
+            step, shard
+        );
+    });
+}
+
+#[test]
+fn poll_then_sync_costs_one_scan_on_object_store() {
+    // regression (satellite): Consumer::latest_ready + synchronize
+    // used to run retention::scan twice; the cached inventory makes
+    // the pair cost exactly one ObjectStore list pass
+    let store = ObjectStore::temp("conf_scans").unwrap();
+    let layout = synthetic_layout(4_000, 64);
+    let vs = views(4_000, 2, 60);
+    let mut publisher = Publisher::over(
+        ObjectStoreTransport::new(store.clone(), "sync"),
+        layout.clone(),
+        vs[0].clone(),
+        50,
+    )
+    .unwrap();
+    let consumer_transport = ObjectStoreTransport::new(store.clone(), "sync");
+    let handle = consumer_transport.clone(); // clones share counters
+    let mut c = Consumer::over(consumer_transport, layout);
+    c.synchronize().unwrap(); // cold start: one scan
+    assert_eq!(handle.counters().inventory_scans, 1);
+    for step in 1..=2u64 {
+        publisher.publish(step, &vs[step as usize]).unwrap();
+        let before = handle.counters().inventory_scans;
+        assert_eq!(c.latest_ready().unwrap(), Some(step));
+        let cs = c.synchronize().unwrap();
+        assert!(cs.verified);
+        assert_eq!(
+            handle.counters().inventory_scans,
+            before + 1,
+            "poll + sync must cost exactly one scan"
+        );
+    }
+    std::fs::remove_dir_all(store.root()).unwrap();
+}
