@@ -12,8 +12,15 @@
 //! by a per-subscriber NACK retransmit without rebroadcasting.
 //!
 //! Run: cargo run --release --example live_sync
+//!
+//! With `--tree` (or `PULSE_TREE=1`) the workers subscribe through a
+//! chained `RelayNode` instead of the root relay — a 2-level
+//! distribution tree: the root fans out to one node, the node re-stages
+//! the stream and serves both workers' catch-up and NACK repair from
+//! its own staging. Same stream, same bit-identity, one more hop.
 
 use pulse::bf16;
+use pulse::net::node::RelayNode;
 use pulse::net::relay::Relay;
 use pulse::net::transport::{RelayTransport, SyncTransport};
 use pulse::pulse::sync::{Consumer, Publisher, SyncPath};
@@ -60,10 +67,26 @@ fn run_worker(
 }
 
 fn main() -> anyhow::Result<()> {
+    let tree = std::env::args().any(|a| a == "--tree")
+        || std::env::var("PULSE_TREE").map_or(false, |v| v == "1");
     let n = 500_000usize;
     let layout = synthetic_layout(n, 1024);
     let relay = Arc::new(Relay::start()?);
-    println!("relay listening on 127.0.0.1:{} ({} shards/step)", relay.port, SHARDS);
+    // opt-in 2-level tree: workers subscribe to a chained node that
+    // re-stages the root's stream
+    let node = if tree { Some(RelayNode::join(relay.port)?) } else { None };
+    let sub_port = node.as_ref().map_or(relay.port, |n| n.port());
+    match &node {
+        Some(nd) => println!(
+            "relay tree: root 127.0.0.1:{} -> node 127.0.0.1:{} ({} shards/step)",
+            relay.port,
+            nd.port(),
+            SHARDS
+        ),
+        None => {
+            println!("relay listening on 127.0.0.1:{} ({} shards/step)", relay.port, SHARDS)
+        }
+    }
 
     // trainer-side state: FP32 masters + previous BF16 view
     let mut rng = Rng::new(3);
@@ -85,8 +108,9 @@ fn main() -> anyhow::Result<()> {
 
     // two workers: one subscribes immediately, one joins late and
     // catches up from the relayed anchor + tail — each drained by its
-    // own per-subscriber relay queue
-    let (port, l1, l2) = (relay.port, layout.clone(), layout.clone());
+    // own per-subscriber queue (on the node in tree mode, so the late
+    // join never touches the root)
+    let (port, l1, l2) = (sub_port, layout.clone(), layout.clone());
     let fast = std::thread::spawn(move || run_worker(port, l1));
     let late = std::thread::spawn(move || {
         std::thread::sleep(std::time::Duration::from_millis(150));
@@ -95,7 +119,8 @@ fn main() -> anyhow::Result<()> {
     // wait for both (the late joiner replays the anchor + any tail it
     // missed from the relay's catch-up preload) before streaming ends —
     // CLOSE is a control broadcast, not part of the replayable tail
-    while relay.subscriber_count() < 2 {
+    let worker_relay = node.as_ref().map_or(&relay, |n| n.relay());
+    while worker_relay.subscriber_count() < 2 {
         std::thread::sleep(std::time::Duration::from_millis(10));
     }
 
@@ -140,6 +165,10 @@ fn main() -> anyhow::Result<()> {
         pulse::util::fmt_bytes((n as u64 * 2) * 10),
         (n as u64 * 2 * 10) / total_patch_bytes.max(1)
     );
+    if let Some(nd) = &node {
+        println!("tree hop depth at the node: {} (root = 0)", nd.hop());
+        nd.stop();
+    }
     relay.stop();
     Ok(())
 }

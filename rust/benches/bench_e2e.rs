@@ -2,12 +2,18 @@
 //! roundtrip at 1M parameters — sharded vs unsharded fan-out, over the
 //! object-store AND the in-proc `SyncTransport` backends, so the
 //! per-transport rows in `BENCH_e2e.json` separate protocol cost from
-//! store I/O (runs everywhere, including CI bench-smoke) — and one
-//! full GRPO train step on the tiny model (requires artifacts; skipped
-//! cleanly without them).
+//! store I/O (runs everywhere, including CI bench-smoke); star vs
+//! 2-level-tree relay fan-out over real TCP sockets, so the chaining
+//! trade-off (one extra staging hop vs root uplink load) accumulates
+//! data points per PR; and one full GRPO train step on the tiny model
+//! (requires artifacts; skipped cleanly without them).
 use pulse::bf16;
 use pulse::coordinator;
-use pulse::net::transport::{InProcTransport, ObjectStoreTransport, SyncTransport};
+use pulse::net::node::RelayNode;
+use pulse::net::relay::Relay;
+use pulse::net::transport::{
+    InProcTransport, ObjectStoreTransport, RelayTransport, SyncTransport,
+};
 use pulse::optim::{AdamConfig, AdamW};
 use pulse::pulse::sync::{Consumer, Publisher};
 use pulse::rl::grpo::{self, GrpoConfig};
@@ -85,6 +91,93 @@ fn bench_sync_roundtrip(b: &mut Bench) {
     }
 }
 
+/// One publish → EVERY leaf synced, over a real TCP relay topology:
+/// `tree = false` is the star (all leaves on the root), `tree = true`
+/// a 2-level tree (two mid-tier `RelayNode`s, leaves split across
+/// them, so the root fans out to 2 sockets instead of `leaves`).
+/// Leaves synchronize in parallel — that is the fan-out being priced.
+fn fanout_over(
+    b: &mut Bench,
+    label: &str,
+    tree: bool,
+    leaves: usize,
+    n: usize,
+    init: &[u16],
+    rng: &mut Rng,
+) {
+    use pulse::util::pool;
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    let layout = synthetic_layout(n, 1024);
+    let root = Arc::new(Relay::start().unwrap());
+    let nodes: Vec<RelayNode> = if tree {
+        (0..2).map(|_| RelayNode::join(root.port).unwrap()).collect()
+    } else {
+        Vec::new()
+    };
+    let ports: Vec<u16> = (0..leaves)
+        .map(|i| if tree { nodes[i % nodes.len()].port() } else { root.port })
+        .collect();
+    let mut publisher = Publisher::over(
+        RelayTransport::publisher(root.clone()),
+        layout.clone(),
+        init.to_vec(),
+        1_000_000,
+    )
+    .unwrap()
+    .with_shards(4);
+    let consumers: Vec<Consumer<RelayTransport>> = ports
+        .iter()
+        .map(|&p| Consumer::over(RelayTransport::subscribe(p).unwrap(), layout.clone()))
+        .collect();
+    let sync_to = |mut c: Consumer<RelayTransport>, step: u64| {
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            if let Ok(Some(head)) = c.latest_ready() {
+                if head >= step {
+                    let cs = c.synchronize().unwrap();
+                    assert!(cs.verified);
+                    return c;
+                }
+            }
+            assert!(Instant::now() < deadline, "step {} never became ready", step);
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    };
+    // cold start every leaf off the bench clock
+    let mut consumers = pool::par_map(consumers, |_, c| sync_to(c, 0));
+    let mut w = init.to_vec();
+    let mut step = 0u64;
+    b.run_bytes(label, (n * 2) as u64, || {
+        step += 1;
+        for _ in 0..n / 100 {
+            let i = rng.below(n as u64) as usize;
+            w[i] = pulse::bf16::f32_to_bf16_bits((rng.normal() * 0.02) as f32);
+        }
+        publisher.publish(step, &w).unwrap();
+        consumers = pool::par_map(std::mem::take(&mut consumers), |_, c| sync_to(c, step));
+    });
+    drop(consumers);
+    for node in &nodes {
+        node.stop();
+    }
+    root.stop();
+}
+
+/// Star vs 2-level tree for the same leaf count (bench-smoke row: the
+/// perf trajectory for relay chaining).
+fn bench_fanout_topologies(b: &mut Bench) {
+    let n = 200_000usize;
+    let leaves = 6usize;
+    let mut rng = Rng::new(29);
+    let init: Vec<u16> = (0..n)
+        .map(|_| pulse::bf16::f32_to_bf16_bits((rng.normal() * 0.02) as f32))
+        .collect();
+    fanout_over(b, &format!("e2e/fanout_star/{}leaves 200k", leaves), false, leaves, n, &init, &mut rng);
+    fanout_over(b, &format!("e2e/fanout_tree2/{}leaves 200k", leaves), true, leaves, n, &init, &mut rng);
+}
+
 /// One full GRPO step (rollout + reward + advantages + grad + AdamW +
 /// sparsity meter + PULSESync encode) on the tiny model.
 fn bench_train_step(b: &mut Bench) {
@@ -134,6 +227,7 @@ fn bench_train_step(b: &mut Bench) {
 fn main() {
     let mut b = Bench::new();
     bench_sync_roundtrip(&mut b);
+    bench_fanout_topologies(&mut b);
     bench_train_step(&mut b);
     let results = pulse::coordinator::metrics::results_dir();
     b.write_csv(&results.join("bench_e2e.csv")).unwrap();

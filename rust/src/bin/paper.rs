@@ -67,12 +67,13 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         "table13" => table13(args),
         "table14" => table14(args),
         "transports" => transports(args),
+        "topology" => topology(args),
         "all" => {
             for c in [
                 "table1", "fig9", "fig3", "table2", "table6", "fig1", "fig2", "fig14", "fig13",
                 "fig16", "fig15", "fig4", "fig8", "table5", "table10", "table11", "table13",
-                "fig11", "table14", "transports", "fig7", "fig10", "fig12", "fig17", "table7",
-                "fig6",
+                "fig11", "table14", "transports", "topology", "fig7", "fig10", "fig12", "fig17",
+                "table7", "fig6",
             ] {
                 println!("\n################ paper {} ################", c);
                 dispatch(c, args)?;
@@ -84,7 +85,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
                 "usage: paper <exp> [--options]\n\
                  exps: fig1 fig2 fig3 fig4 fig6 fig7 fig8 fig9 fig10 fig11 fig12 fig13 fig14\n\
                  fig15 fig16 fig17 table1 table2 table4 table5 table6 table7 table10\n\
-                 table11 table13 table14 transports all"
+                 table11 table13 table14 transports topology all"
             );
             Ok(())
         }
@@ -1425,6 +1426,200 @@ fn transports(args: &Args) -> Result<()> {
         &rows,
     );
     std::fs::remove_dir_all(store.root()).ok();
+    Ok(())
+}
+
+// ====================================================== topology
+/// Star vs 2-level relay tree for the same PULSESync stream and the
+/// same number of leaf subscribers: per-hop `TransportMeter` rows
+/// (`results/topology.csv`) plus publish / all-leaves-synced wall
+/// times. The star saturates the root's uplink at high fan-out; the
+/// tree pays one extra staging hop to halve the root's subscriber
+/// count — this table is where that trade-off gets data points.
+fn topology(args: &Args) -> Result<()> {
+    use pulse::coordinator::metrics::TransportMeter;
+    use pulse::net::node::RelayNode;
+    use pulse::net::relay::Relay;
+    use pulse::net::transport::{RelayTransport, SyncTransport};
+    use pulse::pulse::sync::{Consumer, Publisher, SyncPath, SyncStats};
+    use pulse::util::pool;
+    use pulse::util::rng::Rng;
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    /// Poll one leaf until `step` is committed from its view, then
+    /// synchronize once (relays stage asynchronously).
+    fn wait_sync(c: &mut Consumer<RelayTransport>, step: u64) -> Result<SyncStats> {
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            if let Some(head) = c.latest_ready()? {
+                if head >= step {
+                    return c.synchronize();
+                }
+            }
+            anyhow::ensure!(Instant::now() < deadline, "step {} never became ready", step);
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    /// Drive the seeded stream from the root through `leaf_ports`;
+    /// leaves synchronize in parallel (that IS the fan-out being
+    /// measured). Returns (publish s/step, all-leaves-synced s/step).
+    #[allow(clippy::too_many_arguments)]
+    fn drive(
+        label: &str,
+        root: &Arc<Relay>,
+        leaf_ports: &[u16],
+        layout: &[sparse::TensorShape],
+        views: &[Vec<u16>],
+        shards: usize,
+        meter: &mut TransportMeter,
+    ) -> Result<(f64, f64)> {
+        let root_label = format!("{}/root", label);
+        let leaf_label = format!("{}/leaf", label);
+        let mut publisher = Publisher::over(
+            RelayTransport::publisher(root.clone()),
+            layout.to_vec(),
+            views[0].clone(),
+            6,
+        )?
+        .with_shards(shards);
+        let mut consumers: Vec<Consumer<RelayTransport>> = Vec::new();
+        for &p in leaf_ports {
+            consumers.push(Consumer::over(RelayTransport::subscribe(p)?, layout.to_vec()));
+        }
+        // cold start every leaf (slow path from anchor 0)
+        let started = pool::par_map(consumers, |_, mut c| {
+            let r = wait_sync(&mut c, 0);
+            (c, r)
+        });
+        consumers = Vec::with_capacity(started.len());
+        for (c, r) in started {
+            r?;
+            consumers.push(c);
+        }
+        let (mut t_pub, mut t_sync) = (0.0f64, 0.0f64);
+        for (step, view) in views.iter().enumerate().skip(1) {
+            let t = Stopwatch::start();
+            publisher.publish(step as u64, view)?;
+            t_pub += t.secs();
+            meter.record_publish(&root_label);
+            let t = Stopwatch::start();
+            let synced = pool::par_map(consumers, |_, mut c| {
+                let r = wait_sync(&mut c, step as u64);
+                (c, r)
+            });
+            t_sync += t.secs();
+            consumers = Vec::with_capacity(synced.len());
+            for (c, r) in synced {
+                let cs = r?;
+                anyhow::ensure!(
+                    cs.verified && c.weights.as_deref() == Some(view.as_slice()),
+                    "bit-identity broken on {} at step {}",
+                    label,
+                    step
+                );
+                meter.record_sync(&leaf_label, cs.shard_refetches as u64, cs.path == SyncPath::Slow);
+                consumers.push(c);
+            }
+        }
+        let steps = (views.len() - 1).max(1) as f64;
+        meter.set_hop(&root_label, 0);
+        meter.set_hop(&leaf_label, consumers[0].transport.hops().unwrap_or(0));
+        // one representative leaf's counters (they all carry the same
+        // stream); the sync/refetch tallies above aggregate all leaves
+        meter.set_counters(&leaf_label, consumers[0].transport.counters());
+        Ok((t_pub / steps, t_sync / steps))
+    }
+
+    let n = args.usize_or("params", 200_000);
+    let steps = args.usize_or("steps", 8) as u64;
+    let shards = args.usize_or("shards", 4).max(1);
+    let subs = args.usize_or("subs", 6).max(2);
+    let layout = sparse::synthetic_layout(n, 1024);
+    let mut rng = Rng::new(47);
+    let init: Vec<u16> = (0..n).map(|_| rng.next_u32() as u16).collect();
+    let mut views = vec![init.clone()];
+    {
+        let mut w = init;
+        for _ in 0..steps {
+            for _ in 0..n / 100 {
+                let i = rng.below(n as u64) as usize;
+                w[i] = rng.next_u32() as u16;
+            }
+            views.push(w.clone());
+        }
+    }
+
+    let mut meter = TransportMeter::new();
+
+    // star: every leaf subscribes to the root
+    let root = Arc::new(Relay::start()?);
+    let star_ports = vec![root.port; subs];
+    let (star_pub, star_sync) =
+        drive("star", &root, &star_ports, &layout, &views, shards, &mut meter)?;
+    root.stop();
+
+    // 2-level tree: two mid-tier nodes, leaves split across them —
+    // the root now fans out to 2 subscribers instead of `subs`
+    let root = Arc::new(Relay::start()?);
+    let node_a = RelayNode::join(root.port)?;
+    let node_b = RelayNode::join(root.port)?;
+    // let the nodes learn their depth before leaves attach, so the
+    // per-hop rows report hop 2 deterministically
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while (node_a.hop() != 1 || node_b.hop() != 1) && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(3));
+    }
+    let tree_ports: Vec<u16> =
+        (0..subs).map(|i| if i % 2 == 0 { node_a.port() } else { node_b.port() }).collect();
+    let (tree_pub, tree_sync) =
+        drive("tree", &root, &tree_ports, &layout, &views, shards, &mut meter)?;
+    let node_nacks = node_a.relay().nacks_serviced() + node_b.relay().nacks_serviced();
+    node_a.stop();
+    node_b.stop();
+    root.stop();
+
+    let results = results_dir();
+    meter.write_csv(&results.join("topology.csv"))?;
+    let mut rows = Vec::new();
+    for r in meter.rows() {
+        let (t_pub, t_sync) = if r.transport.starts_with("star") {
+            (star_pub, star_sync)
+        } else {
+            (tree_pub, tree_sync)
+        };
+        rows.push(vec![
+            r.transport.clone(),
+            r.hop.to_string(),
+            if r.publishes > 0 { format!("{:.1} ms", t_pub * 1e3) } else { String::new() },
+            if r.syncs > 0 { format!("{:.1} ms", t_sync * 1e3) } else { String::new() },
+            r.publishes.to_string(),
+            r.syncs.to_string(),
+            fmt_bytes(r.counters.bytes_fetched),
+            r.shard_refetches.to_string(),
+            r.slow_paths.to_string(),
+        ]);
+    }
+    print_table(
+        &format!(
+            "Relay topology: star vs 2-level tree, {} leaves, {}-step stream \
+             ({} params, {} shards; tree serviced {} NACKs mid-tier)",
+            subs, steps, n, shards, node_nacks
+        ),
+        &[
+            "role",
+            "hop",
+            "publish/step",
+            "all-synced/step",
+            "publishes",
+            "syncs",
+            "bytes down (1 leaf)",
+            "refetches",
+            "slow",
+        ],
+        &rows,
+    );
     Ok(())
 }
 

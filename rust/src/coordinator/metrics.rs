@@ -117,9 +117,12 @@ impl ShardFanoutMeter {
 
 /// Accumulates sync-plane traffic per transport backend: one row per
 /// backend label, fed from [`TransportCounters`] snapshots plus the
-/// consumer's `SyncStats` refetch/path tallies. Feeds
-/// `results/transport_plane.csv` and the `paper transports` table, so
-/// the per-backend cost of the same PULSESync stream is directly
+/// consumer's `SyncStats` refetch/path tallies. Chained-relay
+/// topologies label one row per hop ([`TransportMeter::set_hop`]), so
+/// the `paper topology` table can show where in the tree each cost is
+/// paid. Feeds `results/transport_plane.csv` / `results/topology.csv`
+/// and the `paper transports` / `paper topology` tables, so the
+/// per-backend cost of the same PULSESync stream is directly
 /// comparable.
 #[derive(Debug, Default)]
 pub struct TransportMeter {
@@ -129,6 +132,9 @@ pub struct TransportMeter {
 #[derive(Debug, Clone, Default)]
 pub struct TransportRow {
     pub transport: String,
+    /// Relay hops between this row's peer and the publisher (0 for
+    /// non-relay backends and the root).
+    pub hop: u32,
     pub publishes: u64,
     pub syncs: u64,
     pub counters: TransportCounters,
@@ -170,6 +176,12 @@ impl TransportMeter {
         self.row_mut(transport).counters = counters;
     }
 
+    /// Record the row's distance from the publisher in relay hops
+    /// (chained topologies; leave 0 for flat backends).
+    pub fn set_hop(&mut self, transport: &str, hop: u32) {
+        self.row_mut(transport).hop = hop;
+    }
+
     pub fn rows(&self) -> &[TransportRow] {
         &self.rows
     }
@@ -180,6 +192,7 @@ impl TransportMeter {
             path,
             &[
                 "transport",
+                "hop",
                 "publishes",
                 "syncs",
                 "inventory_scans",
@@ -188,6 +201,7 @@ impl TransportMeter {
                 "frames_fetched",
                 "bytes_fetched",
                 "nacks_sent",
+                "nacks_unserviceable",
                 "faults_injected",
                 "shard_refetches",
                 "slow_paths",
@@ -196,6 +210,7 @@ impl TransportMeter {
         for r in &self.rows {
             w.row(&[
                 r.transport.clone(),
+                r.hop.to_string(),
                 r.publishes.to_string(),
                 r.syncs.to_string(),
                 r.counters.inventory_scans.to_string(),
@@ -204,6 +219,7 @@ impl TransportMeter {
                 r.counters.frames_fetched.to_string(),
                 r.counters.bytes_fetched.to_string(),
                 r.counters.nacks_sent.to_string(),
+                r.counters.nacks_unserviceable.to_string(),
                 r.counters.faults_injected.to_string(),
                 r.shard_refetches.to_string(),
                 r.slow_paths.to_string(),
@@ -282,20 +298,25 @@ mod tests {
             "in-proc",
             TransportCounters { inventory_scans: 2, bytes_fetched: 512, ..Default::default() },
         );
+        m.set_hop("object-store", 2);
         assert_eq!(m.rows().len(), 2);
         let row = &m.rows()[0];
         assert_eq!(row.transport, "in-proc");
+        assert_eq!(row.hop, 0);
         assert_eq!(row.publishes, 2);
         assert_eq!(row.syncs, 1);
         assert_eq!(row.shard_refetches, 1);
         assert_eq!(row.counters.bytes_fetched, 512);
         assert_eq!(m.rows()[1].slow_paths, 1);
+        assert_eq!(m.rows()[1].hop, 2);
         let dir = std::env::temp_dir().join(format!("pulse_transcsv_{}", std::process::id()));
         let p = dir.join("transport_plane.csv");
         m.write_csv(&p).unwrap();
         let text = std::fs::read_to_string(&p).unwrap();
         assert_eq!(text.lines().count(), 3, "header + one row per backend");
-        assert!(text.lines().nth(1).unwrap().starts_with("in-proc,2,1,2,"));
+        assert!(text.starts_with("transport,hop,"));
+        assert!(text.lines().nth(1).unwrap().starts_with("in-proc,0,2,1,2,"));
+        assert!(text.lines().nth(2).unwrap().starts_with("object-store,2,"));
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

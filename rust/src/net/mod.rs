@@ -1,10 +1,13 @@
 //! Networking substrate: a deterministic bandwidth/latency model used by
 //! every bench (Fig. 1, Table 14), a real framed TCP transport and relay
-//! (paper Fig. 5's relay network), and the [`transport`] module — the
-//! `SyncTransport` trait that runs the whole PULSESync plane over the
-//! object store, the relay, an in-proc staging map, or fault-injected
-//! wrappers of any of them.
+//! (paper Fig. 5's relay network), relay→relay chaining ([`node`]) that
+//! composes relays into distribution trees for >100-subscriber fan-out,
+//! and the [`transport`] module — the `SyncTransport` trait that runs
+//! the whole PULSESync plane over the object store, the relay (star or
+//! chained), an in-proc staging map, or fault-injected wrappers of any
+//! of them.
 
+pub mod node;
 pub mod relay;
 pub mod tcp;
 pub mod transport;

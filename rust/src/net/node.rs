@@ -1,0 +1,238 @@
+//! Relay→relay chaining: [`RelayNode`] subscribes to an upstream relay
+//! (or another node) and republishes downstream through its own
+//! [`Relay`], so relays compose into distribution **trees** — the
+//! topology that lets one publisher feed hundreds of inference workers
+//! without saturating the trainer uplink (paper Fig. 5 scaled out;
+//! ROADMAP ">100-subscriber fan-out").
+//!
+//! # What a hop guarantees
+//!
+//! Each node re-stages the stream in its own relay exactly as a root
+//! relay would, which makes fault handling *recursive*:
+//!
+//! * **Late joiners** are served the anchor + tail catch-up bundle
+//!   from the node's staging — no upstream traffic.
+//! * **Per-shard NACK repair** is served from the node's bounded frame
+//!   index. Only when the index has evicted the slot does the node
+//!   escalate the NACK upstream ([`Relay::set_escalation`]); the
+//!   retransmit that comes back is delivered to exactly the waiting
+//!   downstream subscribers ([`Relay::deliver_retransmit`]) and
+//!   re-indexed so the next repair of that slot stays local.
+//! * An upstream **NACK_MISS** (the slot is gone everywhere on the
+//!   path to the publisher) is forwarded to the waiting subscribers
+//!   ([`Relay::fail_escalated`]), which then fall back to the anchor
+//!   slow path instead of timing out.
+//! * **MARKER and CLOSE** frames are republished verbatim, so the
+//!   commit protocol (frames first, then the committing marker) and
+//!   orderly shutdown survive any tree depth.
+//! * A **slow subscriber** of a node coalesces inside that node's
+//!   per-subscriber queue; siblings and the upstream are unaffected.
+//!
+//! Because every hop runs the same staging + coalescing + NACK logic,
+//! end-to-end bit-identity holds at any depth: the transport
+//! conformance suite (`tests/integration_transport.rs`) and the chain
+//! suite (`tests/integration_chain.rs`) drive the same seeded stream
+//! through chained topologies and assert it.
+//!
+//! # Topology bookkeeping
+//!
+//! On join, the node sends a SUBSCRIBE upstream and learns its hop
+//! depth from the HOP reply (root = 0, so a node directly under the
+//! root reports 1). The depth is re-served to downstream SUBSCRIBEs,
+//! so every peer in the tree knows its distance from the publisher —
+//! `paper topology` prints the per-hop rows.
+
+use super::relay::Relay;
+use super::tcp::{self, kind, Frame};
+use anyhow::{Context, Result};
+use std::net::{Shutdown, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// One interior hop of a relay tree: an upstream subscription feeding
+/// a downstream [`Relay`]. Construct with [`RelayNode::join`]; point
+/// subscribers (or further nodes) at [`RelayNode::port`].
+pub struct RelayNode {
+    relay: Arc<Relay>,
+    /// Write half of the upstream connection (NACK escalation + the
+    /// SUBSCRIBE handshake); the forward thread owns the read half.
+    upstream: Arc<Mutex<TcpStream>>,
+    forward: Mutex<Option<std::thread::JoinHandle<()>>>,
+    stop: Arc<AtomicBool>,
+    /// True once the upstream stream ended (CLOSE or socket error).
+    upstream_closed: Arc<AtomicBool>,
+}
+
+impl RelayNode {
+    /// Join an upstream relay (or node) on `upstream_port` with the
+    /// default queue depth and frame-index bound.
+    pub fn join(upstream_port: u16) -> Result<RelayNode> {
+        RelayNode::join_with_opts(
+            upstream_port,
+            super::relay::DEFAULT_QUEUE_DEPTH,
+            super::relay::INDEX_STEPS,
+        )
+    }
+
+    /// Join with explicit per-subscriber queue depth and NACK
+    /// frame-index bound for the node's own relay.
+    pub fn join_with_opts(
+        upstream_port: u16,
+        queue_depth: usize,
+        index_steps: usize,
+    ) -> Result<RelayNode> {
+        let relay = Arc::new(Relay::start_with_opts(queue_depth, index_steps)?);
+        let up = tcp::connect_local(upstream_port).context("connecting upstream")?;
+        let up_read = up.try_clone()?;
+        let upstream = Arc::new(Mutex::new(up));
+        // topology handshake: ask the upstream for its hop depth
+        {
+            let mut conn = upstream.lock().unwrap();
+            tcp::write_frame(
+                &mut conn,
+                &Frame { kind: kind::SUBSCRIBE, payload: 0u64.to_le_bytes().to_vec() },
+            )
+            .context("subscribing upstream")?;
+        }
+        // escalation: a downstream NACK the node's index has evicted is
+        // forwarded up this same connection; the reply (retransmit or
+        // NACK_MISS) comes back on the forward thread
+        {
+            let upstream = upstream.clone();
+            relay.set_escalation(move |step, shard| {
+                let mut conn = upstream.lock().unwrap();
+                tcp::write_frame(
+                    &mut conn,
+                    &Frame { kind: kind::NACK, payload: tcp::shard_ack_payload(step, shard) },
+                )
+                .is_ok()
+            });
+        }
+        let stop = Arc::new(AtomicBool::new(false));
+        let upstream_closed = Arc::new(AtomicBool::new(false));
+        let forward = spawn_forward(
+            up_read,
+            relay.clone(),
+            stop.clone(),
+            upstream_closed.clone(),
+        );
+        Ok(RelayNode {
+            relay,
+            upstream,
+            forward: Mutex::new(Some(forward)),
+            stop,
+            upstream_closed,
+        })
+    }
+
+    /// Port downstream subscribers (or further nodes) connect to.
+    pub fn port(&self) -> u16 {
+        self.relay.port
+    }
+
+    /// The node's downstream relay (staging, counters, subscribers).
+    pub fn relay(&self) -> &Arc<Relay> {
+        &self.relay
+    }
+
+    /// Hops between this node and the publisher (learned from the
+    /// upstream's HOP reply; 0 until the reply has arrived).
+    pub fn hop(&self) -> u32 {
+        self.relay.hop()
+    }
+
+    /// True once the upstream stream ended (CLOSE or socket error).
+    /// The CLOSE was republished downstream before this flips.
+    pub fn upstream_closed(&self) -> bool {
+        self.upstream_closed.load(Ordering::SeqCst)
+    }
+
+    /// Stop the node: detach from the upstream, then stop the
+    /// downstream relay (draining queues best-effort, like
+    /// [`Relay::stop`]). Idempotent; takes `&self` so an
+    /// `Arc<RelayNode>` shared with workers can still be stopped.
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = self.upstream.lock().unwrap().shutdown(Shutdown::Both);
+        if let Some(h) = self.forward.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        self.relay.stop();
+    }
+}
+
+/// Forward thread: reads the upstream stream and republishes it
+/// downstream. PATCH frames for slots the node escalated are consumed
+/// as retransmits (delivered to the waiting subscribers only, never
+/// rebroadcast); everything else is ordinary stream traffic.
+fn spawn_forward(
+    mut stream: TcpStream,
+    relay: Arc<Relay>,
+    stop: Arc<AtomicBool>,
+    upstream_closed: Arc<AtomicBool>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        let mut forwarded_close = false;
+        loop {
+            if stop.load(Ordering::SeqCst) {
+                return;
+            }
+            let frame = match tcp::read_frame(&mut stream) {
+                Ok(f) => f,
+                Err(_) => {
+                    // upstream died: end the downstream stream so leaf
+                    // consumers stop waiting (they resync when a new
+                    // tree is built)
+                    if !forwarded_close {
+                        relay.publish(Frame { kind: kind::CLOSE, payload: Vec::new() });
+                    }
+                    upstream_closed.store(true, Ordering::SeqCst);
+                    return;
+                }
+            };
+            match frame.kind {
+                kind::PATCH => {
+                    // an escalated-NACK retransmit is addressed to the
+                    // waiting subscribers only; anything else is stream
+                    // traffic for everyone
+                    let meta = crate::sparse::container::peek_meta(&frame.payload).ok();
+                    let consumed = meta.is_some_and(|m| {
+                        relay.deliver_retransmit(m.step, m.shard_index, frame.clone())
+                    });
+                    if !consumed {
+                        relay.publish(frame);
+                    }
+                }
+                kind::ANCHOR | kind::MARKER => relay.publish(frame),
+                kind::CLOSE => {
+                    relay.publish(frame);
+                    forwarded_close = true;
+                    upstream_closed.store(true, Ordering::SeqCst);
+                    // keep reading: late NACK escalation replies may
+                    // still arrive until the socket actually closes
+                }
+                kind::HOP => {
+                    if let Ok(up_hop) = tcp::parse_hop(&frame.payload) {
+                        relay.set_hop(up_hop + 1);
+                    }
+                }
+                kind::NACK_MISS => {
+                    if let Ok((step, shard)) = tcp::parse_shard_ack(&frame.payload) {
+                        relay.fail_escalated(step, shard);
+                    }
+                }
+                _ => {}
+            }
+        }
+    })
+}
+
+impl Drop for RelayNode {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = self.upstream.lock().unwrap().shutdown(Shutdown::Both);
+        if let Some(h) = self.forward.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}

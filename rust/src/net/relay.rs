@@ -27,14 +27,16 @@
 //!
 //! * **ANCHOR** frames supersede everything queued before them: the
 //!   queue is cleared and restarts at the anchor.
-//! * A **PATCH** that would overflow the bounded queue replaces the
-//!   queue contents with the canonical catch-up bundle — last ANCHOR +
-//!   everything published since (`tail`, patches *and* markers) — which
-//!   is exactly the late-joiner stream and therefore always a
-//!   consistent restart. Repeated overflow re-coalesces, so a lagging
-//!   subscriber's memory stays bounded by
-//!   `max(queue_depth, anchor_interval + 1)` frames while it receives
-//!   superseded patches at most once.
+//! * **Any other frame** that would overflow the bounded queue
+//!   replaces the queue contents with the canonical catch-up bundle —
+//!   last ANCHOR + everything published since (`tail`, patches *and*
+//!   markers) — which is exactly the late-joiner stream and therefore
+//!   always a consistent restart. (The depth bound used to be checked
+//!   only for PATCH frames, so a marker-heavy stream grew a slow
+//!   subscriber's queue past the bound without ever coalescing.)
+//!   Repeated overflow re-coalesces, so a lagging subscriber's memory
+//!   stays bounded by the catch-up bundle — anchor + one epoch of tail
+//!   — while it receives superseded patches at most once.
 //! * MARKER frames ride in the tail (they are part of the replayable
 //!   stream — a step is only committed once its marker lands), so a
 //!   coalesced or late-joining subscriber still sees every surviving
@@ -42,16 +44,32 @@
 //! * Other control frames (CLOSE, …) are never dropped; a coalesce
 //!   re-queues them after the catch-up bundle.
 //!
-//! # Per-shard NACK routing
+//! # Per-shard NACK routing and escalation
 //!
 //! PATCH payloads that parse as patch containers are indexed by
 //! `(step, shard_index)` (via `container::peek_meta`; opaque payloads
 //! are simply not indexed). A NACK read from a subscriber's socket is
 //! answered by enqueueing the indexed frame **onto that subscriber's
 //! queue only** — a shard retransmit never rebroadcasts to the other
-//! subscribers. The index is bounded to the most recent
-//! [`INDEX_STEPS`] distinct steps; a NACK for an evicted step is
-//! ignored and the subscriber recovers via the anchor slow path.
+//! subscribers. The index is bounded to the most recent `index_steps`
+//! distinct steps ([`INDEX_STEPS`] by default). A NACK for an evicted
+//! slot is either **escalated upstream** (chained relays: see
+//! [`crate::net::node::RelayNode`] and [`Relay::set_escalation`] —
+//! the requester keeps waiting and the retransmit is delivered to it
+//! alone via [`Relay::deliver_retransmit`]) or, with no upstream to
+//! ask, answered with an explicit [`kind::NACK_MISS`] reply so the
+//! subscriber falls back to the anchor slow path immediately instead
+//! of timing out.
+//!
+//! # Topology (relay trees)
+//!
+//! A subscriber that sends a [`kind::SUBSCRIBE`] frame gets a
+//! [`kind::HOP`] reply carrying this relay's distance from the
+//! publisher (0 = root). [`crate::net::node::RelayNode`] chains relays
+//! into distribution trees: each hop re-stages the anchor + tail and
+//! serves catch-up and NACK repair from its *own* staging, so fan-out
+//! scales with the tree's leaves while the trainer uplink still
+//! carries each frame once.
 //!
 //! Writers that hit a dead socket mark themselves dead and are pruned
 //! on the next publish. [`Relay::stop`] waits briefly for queues to
@@ -84,6 +102,28 @@ struct SubQueue {
 
 type Chan = Arc<(Mutex<SubQueue>, Condvar)>;
 
+/// Push one frame onto a subscriber channel (bypassing the coalescing
+/// policy — used for NACK retransmits and control replies, which are
+/// already minimal) and wake its writer. No-op on a dead subscriber.
+fn push_direct(chan: &Chan, frame: Arc<Frame>) {
+    let (lock, cv) = &**chan;
+    let mut q = lock.lock().unwrap();
+    if !q.dead {
+        q.q.push_back(frame);
+        cv.notify_one();
+    }
+}
+
+/// Count and answer one unserviceable NACK with a NACK_MISS reply to
+/// exactly the requesting subscriber.
+fn reply_miss(sh: &mut Shared, chan: &Chan, step: u64, shard: u32) {
+    sh.nacks_unserviceable += 1;
+    push_direct(
+        chan,
+        Arc::new(Frame { kind: kind::NACK_MISS, payload: tcp::shard_ack_payload(step, shard) }),
+    );
+}
+
 struct SubHandle {
     chan: Chan,
     /// Clone of the subscriber socket, kept so `stop()` can unblock a
@@ -92,6 +132,11 @@ struct SubHandle {
     writer: Option<std::thread::JoinHandle<()>>,
     reader: Option<std::thread::JoinHandle<()>>,
 }
+
+/// Upstream escalation hook (relay chaining): sends a NACK for one
+/// `(step, shard)` slot towards the publisher; returns false when the
+/// upstream is unreachable (the requester then gets a NACK_MISS).
+type Escalate = Arc<dyn Fn(u64, u32) -> bool + Send + Sync>;
 
 struct Shared {
     subs: Vec<SubHandle>,
@@ -105,8 +150,36 @@ struct Shared {
     frame_index: HashMap<(u64, u32), Arc<Frame>>,
     /// Distinct steps present in `frame_index`, insertion order.
     index_steps: VecDeque<u64>,
+    /// Bound on `index_steps` (defaults to [`INDEX_STEPS`]).
+    max_index_steps: usize,
     /// Shard NACKs serviced from the index (observability/tests).
     nacks_serviced: u64,
+    /// NACKs forwarded upstream because the local index missed.
+    nacks_escalated: u64,
+    /// NACKs answered with NACK_MISS (no upstream, or upstream missed).
+    nacks_unserviceable: u64,
+    /// Slots escalated upstream → subscribers awaiting the retransmit.
+    pending_upstream: HashMap<(u64, u32), Vec<Chan>>,
+    /// Upstream NACK hook; None for a root relay.
+    escalate: Option<Escalate>,
+    /// This relay's distance from the publisher (0 = root); replied to
+    /// SUBSCRIBE frames as a HOP frame.
+    hop: u32,
+}
+
+impl Shared {
+    /// Index one container PATCH frame for per-shard NACK service,
+    /// evicting the oldest indexed steps past the bound.
+    fn index_frame(&mut self, step: u64, shard: u32, frame: Arc<Frame>) {
+        if !self.index_steps.contains(&step) {
+            self.index_steps.push_back(step);
+            while self.index_steps.len() > self.max_index_steps {
+                let old = self.index_steps.pop_front().unwrap();
+                self.frame_index.retain(|&(s, _), _| s != old);
+            }
+        }
+        self.frame_index.insert((step, shard), frame);
+    }
 }
 
 /// Relay server handle.
@@ -126,6 +199,13 @@ impl Relay {
 
     /// Start with an explicit per-subscriber queue bound (≥ 1).
     pub fn start_with_depth(queue_depth: usize) -> Result<Relay> {
+        Relay::start_with_opts(queue_depth, INDEX_STEPS)
+    }
+
+    /// Start with explicit queue depth and NACK frame-index bound
+    /// (both ≥ 1). A smaller `index_steps` evicts repair slots sooner —
+    /// chained-relay tests use this to force upstream escalation.
+    pub fn start_with_opts(queue_depth: usize, index_steps: usize) -> Result<Relay> {
         let (listener, port) = tcp::listen_local()?;
         listener.set_nonblocking(true)?;
         let shared = Arc::new(Mutex::new(Shared {
@@ -136,12 +216,38 @@ impl Relay {
             coalesced: 0,
             frame_index: HashMap::new(),
             index_steps: VecDeque::new(),
+            max_index_steps: index_steps.max(1),
             nacks_serviced: 0,
+            nacks_escalated: 0,
+            nacks_unserviceable: 0,
+            pending_upstream: HashMap::new(),
+            escalate: None,
+            hop: 0,
         }));
         let stop = Arc::new(AtomicBool::new(false));
         let accept_thread =
             Mutex::new(Some(spawn_accept(listener, shared.clone(), stop.clone())));
         Ok(Relay { port, shared, accept_thread, stop })
+    }
+
+    /// Install the upstream NACK hook (relay chaining): called when a
+    /// subscriber NACKs a slot the local frame index has evicted. The
+    /// hook sends the NACK towards the publisher and returns whether
+    /// the send succeeded; the requester is answered later via
+    /// [`Relay::deliver_retransmit`] or [`Relay::fail_escalated`].
+    pub fn set_escalation(&self, f: impl Fn(u64, u32) -> bool + Send + Sync + 'static) {
+        self.shared.lock().unwrap().escalate = Some(Arc::new(f));
+    }
+
+    /// Set this relay's hop distance from the publisher (0 = root),
+    /// replied to SUBSCRIBE frames so downstream peers learn theirs.
+    pub fn set_hop(&self, hop: u32) {
+        self.shared.lock().unwrap().hop = hop;
+    }
+
+    /// Hop distance from the publisher (0 = root relay).
+    pub fn hop(&self) -> u32 {
+        self.shared.lock().unwrap().hop
     }
 
     /// Publish a frame to all current subscribers (and remember anchors
@@ -162,14 +268,7 @@ impl Relay {
                 // index container frames for per-shard NACK service;
                 // opaque payloads just aren't NACKable
                 if let Ok(meta) = crate::sparse::container::peek_meta(&frame.payload) {
-                    if !sh.index_steps.contains(&meta.step) {
-                        sh.index_steps.push_back(meta.step);
-                        while sh.index_steps.len() > INDEX_STEPS {
-                            let old = sh.index_steps.pop_front().unwrap();
-                            sh.frame_index.retain(|&(s, _), _| s != old);
-                        }
-                    }
-                    sh.frame_index.insert((meta.step, meta.shard_index), frame.clone());
+                    sh.index_frame(meta.step, meta.shard_index, frame.clone());
                 }
             }
             // markers are part of the replayable stream: a step is only
@@ -198,12 +297,32 @@ impl Relay {
             }
             match frame.kind {
                 kind::ANCHOR => {
-                    // the anchor supersedes everything queued before it
-                    q.dropped += q.q.len() as u64;
+                    // the anchor supersedes the queued stream; control
+                    // replies (HOP, NACK_MISS, CLOSE, …) survive the
+                    // clear exactly as they survive a coalesce —
+                    // otherwise an anchor racing a SUBSCRIBE handshake
+                    // would eat the HOP reply for good
+                    let keep: Vec<Arc<Frame>> = q
+                        .q
+                        .iter()
+                        .filter(|f| {
+                            f.kind != kind::PATCH
+                                && f.kind != kind::ANCHOR
+                                && f.kind != kind::MARKER
+                        })
+                        .cloned()
+                        .collect();
+                    q.dropped += (q.q.len() - keep.len()) as u64;
                     q.q.clear();
                     q.q.push_back(frame.clone());
+                    q.q.extend(keep);
                 }
-                kind::PATCH if q.q.len() >= depth => {
+                // the depth bound applies to EVERY enqueue, not just
+                // patches: a marker- or control-heavy stream must
+                // coalesce a slow subscriber exactly like a patch
+                // stream would (this used to be `kind::PATCH if …`,
+                // letting markers grow the queue past the bound)
+                _ if q.q.len() >= depth => {
                     // slow subscriber: swap the queue for the canonical
                     // catch-up bundle (anchor + tail), keeping control
                     // frames; superseded patches/markers are dropped
@@ -228,6 +347,11 @@ impl Relay {
                         q.q.push_back(p.clone());
                     }
                     q.q.extend(keep);
+                    // PATCH/MARKER frames already ride in the rebuilt
+                    // tail; anything else (CLOSE, …) follows the bundle
+                    if frame.kind != kind::PATCH && frame.kind != kind::MARKER {
+                        q.q.push_back(frame.clone());
+                    }
                 }
                 _ => q.q.push_back(frame.clone()),
             }
@@ -256,6 +380,56 @@ impl Relay {
     /// Shard NACKs answered from the frame index so far.
     pub fn nacks_serviced(&self) -> u64 {
         self.shared.lock().unwrap().nacks_serviced
+    }
+
+    /// NACKs forwarded upstream because the local index had evicted
+    /// the slot (0 unless this relay is a chained node).
+    pub fn nacks_escalated(&self) -> u64 {
+        self.shared.lock().unwrap().nacks_escalated
+    }
+
+    /// NACKs answered with an explicit NACK_MISS (no upstream to ask,
+    /// or the upstream missed too).
+    pub fn nacks_unserviceable(&self) -> u64 {
+        self.shared.lock().unwrap().nacks_unserviceable
+    }
+
+    /// Deliver an upstream retransmit for an escalated `(step, shard)`
+    /// slot: re-index the frame (so the next NACK for it is served
+    /// locally) and enqueue it to exactly the subscribers that were
+    /// waiting on the escalation. Returns false when nothing was
+    /// pending for the slot — the caller should then treat the frame
+    /// as ordinary stream traffic.
+    pub fn deliver_retransmit(&self, step: u64, shard: u32, frame: Frame) -> bool {
+        let frame = Arc::new(frame);
+        let mut sh = self.shared.lock().unwrap();
+        let chans = match sh.pending_upstream.remove(&(step, shard)) {
+            Some(c) => c,
+            None => return false,
+        };
+        sh.index_frame(step, shard, frame.clone());
+        sh.nacks_serviced += 1;
+        for chan in &chans {
+            push_direct(chan, frame.clone());
+        }
+        true
+    }
+
+    /// The upstream answered an escalated `(step, shard)` slot with
+    /// NACK_MISS: forward the miss to the waiting subscribers so they
+    /// stop waiting and take the anchor slow path.
+    pub fn fail_escalated(&self, step: u64, shard: u32) {
+        let mut sh = self.shared.lock().unwrap();
+        if let Some(chans) = sh.pending_upstream.remove(&(step, shard)) {
+            sh.nacks_unserviceable += chans.len() as u64;
+            let miss = Arc::new(Frame {
+                kind: kind::NACK_MISS,
+                payload: tcp::shard_ack_payload(step, shard),
+            });
+            for chan in &chans {
+                push_direct(chan, miss.clone());
+            }
+        }
     }
 
     /// Graceful-best-effort shutdown: waits briefly for queues to
@@ -333,12 +507,16 @@ fn spawn_writer(
 
 /// Reader thread: drains one subscriber's upstream direction. A NACK
 /// for an indexed (step, shard) frame re-queues that frame **onto this
-/// subscriber's queue only**. EOF, a socket error, or CLOSE marks the
-/// subscriber dead (and shuts the socket down so the writer unblocks).
+/// subscriber's queue only**; an evicted slot is escalated upstream
+/// (when an escalation hook is installed) or answered with NACK_MISS.
+/// SUBSCRIBE gets a HOP reply carrying this relay's depth. EOF, a
+/// socket error, or CLOSE marks the subscriber dead (and shuts the
+/// socket down so the writer unblocks).
 ///
 /// Lock order matches `publish`: `shared` first, then the subscriber
 /// chan — never the reverse — so NACK routing cannot deadlock against
-/// a concurrent publish.
+/// a concurrent publish. The escalation hook is invoked with no lock
+/// held (it writes to the upstream socket).
 fn spawn_reader(
     mut stream: TcpStream,
     chan: Chan,
@@ -355,22 +533,63 @@ fn spawn_reader(
                     let mut sh = shared.lock().unwrap();
                     if let Some(frame) = sh.frame_index.get(&(step, shard)).cloned() {
                         sh.nacks_serviced += 1;
-                        let (lock, cv) = &*chan;
-                        let mut q = lock.lock().unwrap();
-                        if !q.dead {
-                            // a retransmit bypasses the coalescing
-                            // policy: it is already the minimal repair
-                            q.q.push_back(frame);
-                            cv.notify_one();
-                        }
+                        // a retransmit bypasses the coalescing policy:
+                        // it is already the minimal repair
+                        push_direct(&chan, frame);
+                        continue;
                     }
-                    // unknown (step, shard): evicted or never indexed —
-                    // the subscriber recovers via the anchor slow path
+                    // evicted or never indexed: escalate upstream when
+                    // we can, otherwise tell the requester explicitly
+                    // so it degrades to the anchor slow path instead
+                    // of waiting out its NACK timeout
+                    let esc = sh.escalate.clone();
+                    match esc {
+                        Some(esc) => {
+                            // an escalation for this slot already in
+                            // flight answers every rider: duplicating
+                            // the upstream NACK would make the second
+                            // retransmit arrive with nothing pending
+                            // and be rebroadcast as stale stream
+                            // traffic
+                            let in_flight = sh.pending_upstream.contains_key(&(step, shard));
+                            sh.pending_upstream
+                                .entry((step, shard))
+                                .or_default()
+                                .push(chan.clone());
+                            if in_flight {
+                                continue;
+                            }
+                            sh.nacks_escalated += 1;
+                            drop(sh);
+                            if !esc(step, shard) {
+                                // upstream unreachable: the escalation
+                                // never went out, so answer EVERY
+                                // waiter (riders included) with a miss
+                                let mut sh = shared.lock().unwrap();
+                                if let Some(chans) =
+                                    sh.pending_upstream.remove(&(step, shard))
+                                {
+                                    for c in &chans {
+                                        reply_miss(&mut sh, c, step, shard);
+                                    }
+                                }
+                            }
+                        }
+                        None => reply_miss(&mut sh, &chan, step, shard),
+                    }
                 }
             }
-            // ACK/SUBSCRIBE are accepted and ignored (observability
-            // hooks may consume them later); CLOSE and socket errors
-            // end the subscription
+            Ok(f) if f.kind == kind::SUBSCRIBE => {
+                // topology handshake: reply with this relay's hop depth
+                let hop = shared.lock().unwrap().hop;
+                push_direct(
+                    &chan,
+                    Arc::new(Frame { kind: kind::HOP, payload: tcp::hop_payload(hop) }),
+                );
+            }
+            // ACK is accepted and ignored (observability hooks may
+            // consume it later); CLOSE and socket errors end the
+            // subscription
             Ok(f) if f.kind != kind::CLOSE => {}
             _ => {
                 let (lock, cv) = &*chan;
@@ -552,6 +771,105 @@ mod tests {
             assert!(q.dropped >= 1, "superseded patches must be counted");
         }
         drop(conn);
+        relay.stop();
+    }
+
+    #[test]
+    fn marker_flood_coalesces_like_patches() {
+        // regression: the depth bound used to apply only to PATCH
+        // frames, so a marker-heavy stream pushed a slow subscriber's
+        // queue past the bound without ever coalescing. Markers must
+        // trigger the same catch-up bundle swap.
+        let depth = 4usize;
+        let relay = Relay::start_with_depth(depth).unwrap();
+        let conn = tcp::connect_local(relay.port).unwrap();
+        for _ in 0..200 {
+            if relay.subscriber_count() == 1 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        // big frames so the writer blocks on the kernel send buffer
+        // against a non-reading subscriber and the queue really fills
+        relay.publish(Frame { kind: kind::ANCHOR, payload: vec![1u8; 2 << 20] });
+        let marker = |i: u64| Frame {
+            kind: kind::MARKER,
+            payload: {
+                let mut p = tcp::marker_frame_payload(false, i, "m");
+                p.resize(2 << 20, 0x6d);
+                p
+            },
+        };
+        for i in 1..=(3 * depth as u64) {
+            relay.publish(marker(i));
+        }
+        assert!(
+            relay.coalesced_catchups() >= 1,
+            "a marker flood past queue_depth must coalesce"
+        );
+        {
+            let sh = relay.shared.lock().unwrap();
+            let q = sh.subs[0].chan.0.lock().unwrap();
+            // the queue is exactly the canonical catch-up bundle:
+            // anchor first, then the surviving tail — never more than
+            // bundle-size frames, however many markers flooded past
+            assert!(
+                q.q.len() <= 1 + sh.tail.len(),
+                "queue ({}) exceeds the catch-up bundle ({})",
+                q.q.len(),
+                1 + sh.tail.len()
+            );
+            assert_eq!(q.q[0].kind, kind::ANCHOR, "coalesce must restart at the anchor");
+        }
+        drop(conn);
+        relay.stop();
+    }
+
+    #[test]
+    fn unindexed_nack_gets_explicit_miss() {
+        // regression: a NACK for an evicted / never-indexed slot used
+        // to be silently ignored, leaving the subscriber to wait out
+        // its timeout; a root relay must answer NACK_MISS immediately
+        let relay = Relay::start().unwrap();
+        let mut conn = tcp::connect_local(relay.port).unwrap();
+        for _ in 0..200 {
+            if relay.subscriber_count() == 1 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        tcp::write_frame(
+            &mut conn,
+            &Frame { kind: kind::NACK, payload: tcp::shard_ack_payload(42, 3) },
+        )
+        .unwrap();
+        let reply = tcp::read_frame(&mut conn).unwrap();
+        assert_eq!(reply.kind, kind::NACK_MISS);
+        assert_eq!(tcp::parse_shard_ack(&reply.payload).unwrap(), (42, 3));
+        assert_eq!(relay.nacks_unserviceable(), 1);
+        assert_eq!(relay.nacks_serviced(), 0);
+        relay.stop();
+    }
+
+    #[test]
+    fn subscribe_gets_hop_reply() {
+        let relay = Relay::start().unwrap();
+        relay.set_hop(2);
+        let mut conn = tcp::connect_local(relay.port).unwrap();
+        for _ in 0..200 {
+            if relay.subscriber_count() == 1 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        tcp::write_frame(
+            &mut conn,
+            &Frame { kind: kind::SUBSCRIBE, payload: 0u64.to_le_bytes().to_vec() },
+        )
+        .unwrap();
+        let reply = tcp::read_frame(&mut conn).unwrap();
+        assert_eq!(reply.kind, kind::HOP);
+        assert_eq!(tcp::parse_hop(&reply.payload).unwrap(), 2);
         relay.stop();
     }
 

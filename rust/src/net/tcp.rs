@@ -41,6 +41,18 @@ pub mod kind {
     /// (`net::transport`) uses this to carry the same commit protocol
     /// the object store expresses with `*_ready_*` objects.
     pub const MARKER: u8 = 7;
+    /// Relay → worker (or upstream relay → downstream relay): a NACK
+    /// for one shard frame cannot be serviced — the `(step, shard)`
+    /// slot was evicted from every frame index on the path to the
+    /// publisher (payload = step u64 ++ shard u32 LE, same as NACK).
+    /// The subscriber must stop waiting and recover via the anchor
+    /// slow path instead of timing out.
+    pub const NACK_MISS: u8 = 8;
+    /// Relay → subscriber: topology info, sent in reply to SUBSCRIBE
+    /// (payload = hop count u32 LE: 0 = root relay, 1 = one relay
+    /// between this peer and the publisher, …). Lets chained
+    /// relays/workers report their depth in the distribution tree.
+    pub const HOP: u8 = 9;
 }
 
 /// Payload for an ACK/NACK addressing one shard of a step.
@@ -61,6 +73,20 @@ pub fn parse_shard_ack(payload: &[u8]) -> Result<(u64, u32)> {
             u32::from_le_bytes(payload[8..12].try_into().unwrap()),
         )),
         n => bail!("bad ack payload length {}", n),
+    }
+}
+
+/// Payload for a HOP frame: the sender's distance from the publisher
+/// in relay hops (0 = root relay).
+pub fn hop_payload(hops: u32) -> Vec<u8> {
+    hops.to_le_bytes().to_vec()
+}
+
+/// Decode a HOP frame payload.
+pub fn parse_hop(payload: &[u8]) -> Result<u32> {
+    match payload.len() {
+        4 => Ok(u32::from_le_bytes(payload.try_into().unwrap())),
+        n => bail!("bad hop payload length {}", n),
     }
 }
 
@@ -155,6 +181,16 @@ mod tests {
         assert_eq!(parse_shard_ack(&p).unwrap(), (77, 3));
         assert_eq!(parse_shard_ack(&9u64.to_le_bytes()).unwrap(), (9, 0));
         assert!(parse_shard_ack(&[1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn hop_payload_roundtrip() {
+        assert_eq!(parse_hop(&hop_payload(0)).unwrap(), 0);
+        assert_eq!(parse_hop(&hop_payload(3)).unwrap(), 3);
+        assert!(parse_hop(&[1, 2]).is_err());
+        // NACK_MISS reuses the shard ack payload shape
+        let p = shard_ack_payload(12, 4);
+        assert_eq!(parse_shard_ack(&p).unwrap(), (12, 4));
     }
 
     #[test]

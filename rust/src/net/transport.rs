@@ -45,7 +45,10 @@
 //! intentional: symmetric backends ([`ObjectStoreTransport`],
 //! [`InProcTransport`]) implement both on one value; directional
 //! fabrics ([`RelayTransport`]) construct per-role values whose
-//! wrong-side methods error.
+//! wrong-side methods error. [`RelayTransport::subscribe`] works
+//! unchanged against a root relay or any chained
+//! [`crate::net::node::RelayNode`], so the chained topology rides the
+//! same conformance suite as the flat backends.
 
 use crate::net::relay::Relay;
 use crate::net::tcp::{self, kind, Frame};
@@ -67,6 +70,20 @@ pub const MAX_SHARDS: u32 = 4096;
 
 /// How long the relay backend waits for a NACKed shard retransmit.
 pub const NACK_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Marker substring carried by the error [`RelayTransport::fetch_shard`]
+/// returns when the relay answered a repair NACK with NACK_MISS (the
+/// slot is evicted along the whole path to the publisher). Detected
+/// with [`is_unserviceable`], which only relies on error formatting so
+/// it survives `.context()` wrapping and an `anyhow` swap alike.
+pub const UNSERVICEABLE_MARK: &str = "retransmit unserviceable";
+
+/// True when `e` (anywhere in its context chain) reports an
+/// unserviceable shard repair — the consumer should stop retrying the
+/// slot and recover via the anchor slow path.
+pub fn is_unserviceable(e: &anyhow::Error) -> bool {
+    format!("{:#}", e).contains(UNSERVICEABLE_MARK)
+}
 
 // ---------------------------------------------------------------- keys
 
@@ -194,6 +211,10 @@ pub struct TransportCounters {
     pub bytes_fetched: u64,
     /// Relay backend only: shard retransmits requested.
     pub nacks_sent: u64,
+    /// Relay backend only: NACKs answered with NACK_MISS — the slot
+    /// was evicted along the whole relay path, so the repair degraded
+    /// to the anchor slow path.
+    pub nacks_unserviceable: u64,
     /// Fault decorator only: faults actually injected.
     pub faults_injected: u64,
 }
@@ -207,6 +228,7 @@ struct CounterCell {
     frames_fetched: AtomicU64,
     bytes_fetched: AtomicU64,
     nacks_sent: AtomicU64,
+    nacks_unserviceable: AtomicU64,
 }
 
 impl CounterCell {
@@ -219,6 +241,7 @@ impl CounterCell {
             frames_fetched: self.frames_fetched.load(Ordering::Relaxed),
             bytes_fetched: self.bytes_fetched.load(Ordering::Relaxed),
             nacks_sent: self.nacks_sent.load(Ordering::Relaxed),
+            nacks_unserviceable: self.nacks_unserviceable.load(Ordering::Relaxed),
             faults_injected: 0,
         }
     }
@@ -574,9 +597,17 @@ struct SubState {
     deltas: BTreeMap<u64, DeltaStage>,
     anchors: BTreeMap<u64, AnchorStage>,
     /// Slots already served once: a second fetch means "repair".
-    /// Pruned together with `deltas` so a long-lived subscriber stays
-    /// bounded.
+    /// Pruned when an anchor supersedes the steps (and capped as a
+    /// backstop) — NOT when a step is merely evicted from `deltas`:
+    /// eviction forgets the frames, not the serves.
     served: HashSet<(u64, u32)>,
+    /// Slots whose repair NACK the relay answered with NACK_MISS; a
+    /// waiting `fetch_shard` consumes its entry and errors out so the
+    /// consumer degrades to the anchor slow path immediately.
+    unserviceable: HashSet<(u64, u32)>,
+    /// Relay hops between this subscriber and the publisher (from the
+    /// HOP reply to our SUBSCRIBE; None until it arrives).
+    hops: Option<u32>,
     closed: bool,
 }
 
@@ -589,23 +620,38 @@ impl SubState {
     fn prune_superseded(&mut self, anchor_step: u64) {
         self.deltas.retain(|&s, _| s > anchor_step);
         self.served.retain(|&(s, _)| s > anchor_step);
+        self.unserviceable.retain(|&(s, _)| s > anchor_step);
     }
 
-    /// Enforce the staging window after an insert, keeping `served`
-    /// consistent with the retained steps.
+    /// Enforce the staging window after an insert.
     fn trim(&mut self) {
-        let mut popped = false;
-        while self.deltas.len() > STAGE_STEPS {
+        self.trim_to(STAGE_STEPS, STAGE_ANCHORS, SERVED_CAP);
+    }
+
+    /// Window enforcement with explicit bounds (tests shrink them).
+    ///
+    /// `served` deliberately survives delta eviction: a step that is
+    /// evicted and later *restaged* (a late retransmit) must still
+    /// treat the next fetch of an already-served slot as a repair —
+    /// pruning `served` to the staged minimum (the old behavior) lost
+    /// that bookkeeping, so the repair silently became a "first serve"
+    /// of the stale staged bytes and no NACK was ever sent. Anchor
+    /// pruning (`prune_superseded`) is what bounds `served` in any
+    /// anchored stream; `served_cap` is a backstop for anchor-free
+    /// streams, dropping the lowest (oldest) steps first.
+    fn trim_to(&mut self, max_steps: usize, max_anchors: usize, served_cap: usize) {
+        while self.deltas.len() > max_steps {
             self.deltas.pop_first();
-            popped = true;
         }
-        while self.anchors.len() > STAGE_ANCHORS {
+        while self.anchors.len() > max_anchors {
             self.anchors.pop_first();
         }
-        if popped {
-            if let Some((&min_staged, _)) = self.deltas.iter().next() {
-                self.served.retain(|&(s, _)| s >= min_staged);
-            }
+        if self.served.len() > served_cap {
+            let mut steps: Vec<u64> = self.served.iter().map(|&(s, _)| s).collect();
+            steps.sort_unstable();
+            let cut = steps[steps.len() / 2];
+            self.served.retain(|&(s, _)| s > cut);
+            self.unserviceable.retain(|&(s, _)| s > cut);
         }
     }
 }
@@ -642,6 +688,9 @@ impl DeltaStage {
 /// dropped (a consumer that lags further recovers via the anchor).
 const STAGE_STEPS: usize = 4096;
 const STAGE_ANCHORS: usize = 32;
+/// Backstop bound on served-slot bookkeeping for anchor-free streams
+/// (anchored streams are pruned by `prune_superseded` long before).
+const SERVED_CAP: usize = 8 * STAGE_STEPS;
 
 impl RelayTransport {
     /// Producer role over an in-process relay handle.
@@ -652,8 +701,17 @@ impl RelayTransport {
     }
 
     /// Subscriber role: connect to a relay port and start staging.
+    /// Works unchanged against a root [`Relay`] or a chained
+    /// [`crate::net::node::RelayNode`] — the subscriber cannot tell
+    /// (and need not care) how deep in the tree its relay sits; the
+    /// HOP reply to the SUBSCRIBE handshake reports it for metrics.
     pub fn subscribe(port: u16) -> Result<RelayTransport> {
-        let stream = tcp::connect_local(port)?;
+        let mut stream = tcp::connect_local(port)?;
+        tcp::write_frame(
+            &mut stream,
+            &Frame { kind: kind::SUBSCRIBE, payload: 0u64.to_le_bytes().to_vec() },
+        )
+        .context("subscribe handshake")?;
         let rstream = stream.try_clone()?;
         let state: Arc<(Mutex<SubState>, Condvar)> = Arc::new(Default::default());
         let reader = spawn_receiver(rstream, state.clone());
@@ -680,6 +738,17 @@ impl RelayTransport {
         match &self.role {
             RelayRole::Subscriber(sub) => sub.state.0.lock().unwrap().closed,
             RelayRole::Publisher { .. } => false,
+        }
+    }
+
+    /// Relay hops between this peer and the publisher: `Some(0)` for
+    /// the producer role (it feeds the root relay in-process); for a
+    /// subscriber, the upstream relay's depth + 1 once the HOP reply
+    /// to the SUBSCRIBE handshake has arrived (None before that).
+    pub fn hops(&self) -> Option<u32> {
+        match &self.role {
+            RelayRole::Subscriber(sub) => sub.state.0.lock().unwrap().hops,
+            RelayRole::Publisher { .. } => Some(0),
         }
     }
 
@@ -777,6 +846,22 @@ fn spawn_receiver(
                     }
                     st.trim();
                     cv.notify_all();
+                }
+            }
+            kind::NACK_MISS => {
+                // the relay path cannot retransmit this slot: flag it
+                // so a waiting fetch_shard stops immediately instead
+                // of running out its NACK timeout
+                if let Ok((step, shard)) = tcp::parse_shard_ack(&frame.payload) {
+                    let mut st = lock.lock().unwrap();
+                    st.unserviceable.insert((step, shard));
+                    cv.notify_all();
+                }
+            }
+            kind::HOP => {
+                // reply to our SUBSCRIBE: upstream relay depth → ours
+                if let Ok(h) = tcp::parse_hop(&frame.payload) {
+                    lock.lock().unwrap().hops = Some(h + 1);
                 }
             }
             kind::CLOSE => {
@@ -879,9 +964,13 @@ impl SyncTransport for RelayTransport {
         }
         // repair (or a frame that never arrived): NACK the slot and
         // wait for the relay's per-subscriber retransmit to land as a
-        // new generation
+        // new generation — or for an explicit NACK_MISS saying the
+        // slot is unserviceable along the whole relay path
         let base_generation = staged.map(|(_, g)| g).unwrap_or(0);
         {
+            // a stale miss flag from an earlier attempt must not
+            // short-circuit this fresh NACK's answer
+            lock.lock().unwrap().unserviceable.remove(&(step, shard));
             let mut conn = sub.conn.lock().unwrap();
             tcp::write_frame(
                 &mut conn,
@@ -899,6 +988,15 @@ impl SyncTransport for RelayTransport {
                     sub.counters.fetched(out.len());
                     return Ok(out);
                 }
+            }
+            if st.unserviceable.remove(&(step, shard)) {
+                sub.counters.bump(&sub.counters.nacks_unserviceable);
+                bail!(
+                    "shard {} of step {}: {} (slot evicted along the relay path)",
+                    shard,
+                    step,
+                    UNSERVICEABLE_MARK
+                );
             }
             if st.closed {
                 bail!("relay stream closed awaiting shard {} of step {}", shard, step);
@@ -954,6 +1052,13 @@ pub struct FaultPlan {
     /// Force-corrupt exactly this slot (first serve), independent of
     /// the probabilities — the targeted §J.5 recovery scenario.
     pub target: Option<(u64, u32)>,
+    /// Poison exactly this slot's REPAIR seam: the first serve is
+    /// corrupted (like [`FaultPlan::target`]) and every repair fetch
+    /// errors with [`UNSERVICEABLE_MARK`] — modelling a relay path
+    /// that delivered bad bytes and has since evicted the slot. The
+    /// consumer must abandon the step to the anchor slow path and
+    /// count the event (`SyncStats::nacks_unserviceable`).
+    pub target_unserviceable: Option<(u64, u32)>,
 }
 
 /// Decorator that deterministically corrupts, drops, and delays
@@ -991,6 +1096,16 @@ impl<T: SyncTransport> FaultInjectingTransport<T> {
             inner,
             0,
             FaultPlan { target: Some((step, shard)), ..FaultPlan::default() },
+        )
+    }
+
+    /// Convenience: corrupt one slot's first serve AND poison its
+    /// repair seam (every refetch reports unserviceable).
+    pub fn unserviceable(inner: T, step: u64, shard: u32) -> FaultInjectingTransport<T> {
+        FaultInjectingTransport::new(
+            inner,
+            0,
+            FaultPlan { target_unserviceable: Some((step, shard)), ..FaultPlan::default() },
         )
     }
 
@@ -1049,6 +1164,19 @@ impl<T: SyncTransport> SyncTransport for FaultInjectingTransport<T> {
 
     fn fetch_shard(&self, step: u64, shard: u32) -> Result<Vec<u8>> {
         let first = self.served.lock().unwrap().insert((step, shard));
+        if !first && self.plan.target_unserviceable == Some((step, shard)) {
+            // the repair seam is dead for this slot: report it the way
+            // the relay backend reports a NACK_MISS, so the consumer's
+            // anchor fallback (and its counting) is exercisable on any
+            // inner backend
+            self.injected.fetch_add(1, Ordering::Relaxed);
+            bail!(
+                "injected: shard {} of step {} {}",
+                shard,
+                step,
+                UNSERVICEABLE_MARK
+            );
+        }
         if first
             && self.plan.drop_shard_prob > 0.0
             && self.roll(step, shard, SALT_DROP) < self.plan.drop_shard_prob
@@ -1058,6 +1186,7 @@ impl<T: SyncTransport> SyncTransport for FaultInjectingTransport<T> {
         }
         let mut bytes = self.inner.fetch_shard(step, shard)?;
         let corrupt = self.plan.target == Some((step, shard))
+            || self.plan.target_unserviceable == Some((step, shard))
             || (self.plan.corrupt_shard_prob > 0.0
                 && self.roll(step, shard, SALT_CORRUPT) < self.plan.corrupt_shard_prob);
         if first && corrupt {
@@ -1272,6 +1401,131 @@ mod tests {
         }
         drop(consumer);
         relay.stop();
+    }
+
+    #[test]
+    fn served_slots_survive_eviction_and_restaging() {
+        // regression: `trim` used to prune `served` to the staged
+        // minimum, so a step evicted from `deltas` and later restaged
+        // by a late retransmit was treated as never-served — the next
+        // fetch of the slot skipped the NACK repair path entirely
+        let mut st = SubState::default();
+        st.deltas.insert(1, DeltaStage::default());
+        st.served.insert((1, 0));
+        // steps 2..=5 arrive; window of 4 evicts step 1
+        for s in 2..=5u64 {
+            st.deltas.insert(s, DeltaStage::default());
+            st.trim_to(4, 4, 1 << 20);
+        }
+        assert!(!st.deltas.contains_key(&1), "step 1 must be evicted");
+        assert!(
+            st.served.contains(&(1, 0)),
+            "eviction must forget the frames, not the serves"
+        );
+        // late retransmit restages step 1: the slot still reads as
+        // served, so the next fetch takes the repair path
+        st.deltas.insert(1, DeltaStage::default());
+        assert!(!st.served.insert((1, 0)), "restaged slot must still count as served");
+        // anchors DO prune serves (those steps can never be refetched)
+        st.prune_superseded(3);
+        assert!(!st.served.contains(&(1, 0)));
+        // the cap backstop drops oldest steps first
+        let mut st = SubState::default();
+        for s in 0..10u64 {
+            st.served.insert((s, 0));
+        }
+        st.trim_to(4, 4, 6);
+        assert!(st.served.len() <= 6);
+        assert!(st.served.contains(&(9, 0)), "newest serves must survive the cap");
+        assert!(!st.served.contains(&(0, 0)), "oldest serves go first");
+    }
+
+    #[test]
+    fn served_consistency_property() {
+        // property: under ANY interleaving of staging, eviction,
+        // restaging, and anchor pruning, a slot is in `served` iff it
+        // was served and not superseded by an anchor (while under the
+        // cap) — i.e. eviction alone never forgets a serve
+        crate::util::prop::check("served tracks serves, not staging", 12, |g| {
+            let mut st = SubState::default();
+            let mut model: HashSet<(u64, u32)> = HashSet::new();
+            let mut max_anchor = 0u64;
+            for _ in 0..200 {
+                let step = 1 + g.rng.below(40);
+                let shard = g.rng.below(3) as u32;
+                match g.rng.below(4) {
+                    0 => {
+                        // stage (or restage) a frame, then window-trim
+                        st.deltas.entry(step).or_default();
+                        st.trim_to(6, 4, 1 << 20);
+                    }
+                    1 => {
+                        // serve a staged slot
+                        if st.deltas.contains_key(&step) && step > max_anchor {
+                            st.served.insert((step, shard));
+                            model.insert((step, shard));
+                        }
+                    }
+                    2 => {
+                        // a complete anchor supersedes steps <= step
+                        st.prune_superseded(step);
+                        max_anchor = max_anchor.max(step);
+                        model.retain(|&(s, _)| s > step);
+                    }
+                    _ => {
+                        // heavy staging burst forces evictions
+                        for s in step..step + 8 {
+                            st.deltas.entry(s).or_default();
+                            st.trim_to(6, 4, 1 << 20);
+                        }
+                    }
+                }
+                assert_eq!(
+                    st.served, model,
+                    "served diverged from the serve/supersede model"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn relay_fetch_shard_fails_fast_on_unserviceable_nack() {
+        // a repair NACK for a slot the relay never indexed (or has
+        // evicted) must error out via the explicit NACK_MISS reply —
+        // quickly, not by burning the full NACK timeout
+        let relay = Arc::new(Relay::start().unwrap());
+        let consumer = RelayTransport::subscribe(relay.port).unwrap();
+        // stage a committed sharded step so fetch_shard(1, 1) has a
+        // marker to believe in, but shard 1's frame never arrives
+        producer_stage_marker(&relay, 1, 2);
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while consumer.sub_side().unwrap().state.0.lock().unwrap().deltas.is_empty() {
+            assert!(Instant::now() < deadline, "marker never staged");
+            std::thread::sleep(Duration::from_millis(3));
+        }
+        let t0 = Instant::now();
+        let err = consumer.fetch_shard(1, 1).unwrap_err();
+        assert!(is_unserviceable(&err), "error must carry the marker: {:#}", err);
+        assert!(
+            t0.elapsed() < NACK_TIMEOUT / 2,
+            "NACK_MISS must fail fast, not wait out the timeout"
+        );
+        assert_eq!(consumer.counters().nacks_unserviceable, 1);
+        assert_eq!(relay.nacks_unserviceable(), 1);
+        // context wrapping keeps the marker detectable
+        let wrapped = Err::<(), _>(err).context("outer").unwrap_err();
+        assert!(is_unserviceable(&wrapped));
+        drop(consumer);
+        relay.stop();
+    }
+
+    /// Publish a sharded v3 marker for `step` with `shards` shards so
+    /// a subscriber stages the step (without any shard frames).
+    fn producer_stage_marker(relay: &Arc<Relay>, step: u64, shards: u32) {
+        let producer = RelayTransport::publisher(relay.clone());
+        producer
+            .publish_marker(MarkerId::Delta(step), &sharded_marker(shards, &"ab".repeat(32)))
+            .unwrap();
     }
 
     #[test]

@@ -492,6 +492,13 @@ pub struct SyncStats {
     /// or a subtree-root mismatch (the other shards of the step stay
     /// applied).
     pub shard_refetches: usize,
+    /// Repair fetches the transport reported as unserviceable (relay
+    /// NACK answered with NACK_MISS: the slot is evicted along the
+    /// whole path to the publisher). Each one abandons its step to the
+    /// anchor slow path instead of waiting out the NACK timeout.
+    /// Survives the fast-path → slow-path fallback, like
+    /// `bytes_downloaded`.
+    pub nacks_unserviceable: usize,
     pub verified: bool,
 }
 
@@ -762,13 +769,22 @@ impl<T: SyncTransport> Consumer<T> {
     }
 
     /// One counted repair fetch through the transport's repair seam.
+    /// A repair the transport reports as unserviceable (the relay path
+    /// has evicted the slot) is tallied separately — the error still
+    /// propagates, abandoning the step to the anchor slow path.
     fn refetch_shard(&self, step: u64, shard: u32, stats: &mut SyncStats) -> Result<Vec<u8>> {
-        let obj = self
-            .transport
-            .fetch_shard(step, shard)
-            .with_context(|| format!("shard {} of step {}", shard, step))?;
-        stats.bytes_downloaded += obj.len() as u64;
-        Ok(obj)
+        match self.transport.fetch_shard(step, shard) {
+            Ok(obj) => {
+                stats.bytes_downloaded += obj.len() as u64;
+                Ok(obj)
+            }
+            Err(e) => {
+                if crate::net::transport::is_unserviceable(&e) {
+                    stats.nacks_unserviceable += 1;
+                }
+                Err(e).with_context(|| format!("shard {} of step {}", shard, step))
+            }
+        }
     }
 
     /// Apply one sharded step: fetch + decode all shard frames (decode

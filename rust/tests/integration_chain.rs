@@ -1,0 +1,441 @@
+//! Relay-chaining integration suite (tentpole: relay→relay trees).
+//!
+//! The star topology's fault handling is covered by
+//! `integration_transport.rs`; this suite checks what chaining adds —
+//! that every guarantee is **recursive**:
+//!
+//! * a 2-level tree (root → 2 nodes → leaves) delivers the same seeded
+//!   stream bit-identically to every leaf, and CLOSE survives the
+//!   hops;
+//! * late joiners catch up from their *node's* staging without adding
+//!   load (or even a connection) at the root;
+//! * a stalled leaf coalesces inside its node's per-subscriber queue
+//!   while its sibling keeps streaming;
+//! * a NACK the node's bounded frame index has evicted escalates
+//!   upstream, and the retransmit comes back to exactly the requester;
+//! * a NACK no hop can service gets an explicit NACK_MISS, the
+//!   consumer degrades to the anchor slow path, and `SyncStats`
+//!   counts it.
+
+use pulse::net::node::RelayNode;
+use pulse::net::relay::Relay;
+use pulse::net::tcp::{self, kind, Frame};
+use pulse::net::transport::{FaultInjectingTransport, RelayTransport, SyncTransport};
+use pulse::pulse::sync::{Consumer, Publisher, SyncPath, SyncStats};
+use pulse::sparse::synthetic_layout;
+use pulse::storage::retention::Inventory;
+use pulse::util::rng::Rng;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const N: usize = 16_000;
+const SHARDS: usize = 4;
+
+/// Seeded stream of views (views[0] = initial checkpoint).
+fn views(n: usize, steps: u64, perturbs: usize) -> Vec<Vec<u16>> {
+    let mut rng = Rng::new(91);
+    let mut w: Vec<u16> = (0..n).map(|_| rng.next_u32() as u16).collect();
+    let mut out = vec![w.clone()];
+    for _ in 0..steps {
+        for _ in 0..perturbs {
+            let i = rng.below(n as u64) as usize;
+            w[i] = rng.next_u32() as u16;
+        }
+        out.push(w.clone());
+    }
+    out
+}
+
+/// Poll until `step` is committed from this consumer's view, then
+/// synchronize once.
+fn wait_sync<T: SyncTransport>(c: &mut Consumer<T>, step: u64) -> SyncStats {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        if let Ok(Some(head)) = c.latest_ready() {
+            if head >= step {
+                return c.synchronize().unwrap();
+            }
+        }
+        assert!(Instant::now() < deadline, "step {} never became ready", step);
+        std::thread::sleep(Duration::from_millis(3));
+    }
+}
+
+/// Wait until a node has learned its hop depth from the upstream HOP
+/// reply (asynchronous), so leaves attached afterwards report theirs.
+fn wait_hop(node: &RelayNode, want: u32) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while node.hop() != want {
+        assert!(Instant::now() < deadline, "node never learned hop {}", want);
+        std::thread::sleep(Duration::from_millis(3));
+    }
+}
+
+#[test]
+fn two_level_tree_fans_out_bit_identically() {
+    let steps = 5u64;
+    let vs = views(N, steps, 300);
+    let layout = synthetic_layout(N, 64);
+
+    let root = Arc::new(Relay::start().unwrap());
+    let node_a = RelayNode::join(root.port).unwrap();
+    let node_b = RelayNode::join(root.port).unwrap();
+    wait_hop(&node_a, 1);
+    wait_hop(&node_b, 1);
+
+    // two leaves per node
+    let ports = [node_a.port(), node_a.port(), node_b.port(), node_b.port()];
+    let mut leaves: Vec<Consumer<RelayTransport>> = ports
+        .iter()
+        .map(|&p| Consumer::over(RelayTransport::subscribe(p).unwrap(), layout.clone()))
+        .collect();
+
+    let mut publisher = Publisher::over(
+        RelayTransport::publisher(root.clone()),
+        layout.clone(),
+        vs[0].clone(),
+        3,
+    )
+    .unwrap()
+    .with_shards(SHARDS);
+
+    for leaf in leaves.iter_mut() {
+        let s0 = wait_sync(leaf, 0);
+        assert_eq!(s0.path, SyncPath::Slow, "cold start is the slow path");
+        assert_eq!(leaf.weights.as_ref().unwrap(), &vs[0]);
+    }
+    for step in 1..=steps {
+        publisher.publish(step, &vs[step as usize]).unwrap();
+        for (i, leaf) in leaves.iter_mut().enumerate() {
+            let cs = wait_sync(leaf, step);
+            assert!(cs.verified, "leaf {} unverified at step {}", i, step);
+            assert_eq!(cs.shard_refetches, 0);
+            assert_eq!(
+                leaf.weights.as_ref().unwrap(),
+                &vs[step as usize],
+                "leaf {} diverged at step {}",
+                i,
+                step
+            );
+        }
+    }
+    // topology bookkeeping: every leaf sits two hops below the
+    // publisher (root = 0 → node = 1 → leaf = 2); the HOP reply rides
+    // the same queue as data, so poll briefly
+    let deadline = Instant::now() + Duration::from_secs(10);
+    for leaf in &leaves {
+        while leaf.transport.hops() != Some(2) {
+            assert!(Instant::now() < deadline, "leaf never learned hops=2");
+            std::thread::sleep(Duration::from_millis(3));
+        }
+    }
+    // the root fans out to exactly the two nodes, never the leaves
+    assert_eq!(root.subscriber_count(), 2);
+
+    // CLOSE survives both hops (commit protocol shutdown included)
+    publisher.transport.close();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    for leaf in &leaves {
+        while !leaf.transport.stream_closed() {
+            assert!(Instant::now() < deadline, "CLOSE never crossed the tree");
+            std::thread::sleep(Duration::from_millis(3));
+        }
+    }
+    drop(leaves);
+    node_a.stop();
+    node_b.stop();
+    root.stop();
+}
+
+#[test]
+fn late_joiner_catches_up_from_node_staging() {
+    let steps = 4u64;
+    let vs = views(N, steps, 250);
+    let layout = synthetic_layout(N, 64);
+
+    let root = Arc::new(Relay::start().unwrap());
+    let node = RelayNode::join(root.port).unwrap();
+    let mut publisher = Publisher::over(
+        RelayTransport::publisher(root.clone()),
+        layout.clone(),
+        vs[0].clone(),
+        50,
+    )
+    .unwrap()
+    .with_shards(SHARDS);
+    for step in 1..=steps {
+        publisher.publish(step, &vs[step as usize]).unwrap();
+    }
+    // wait until the whole stream is staged at the node (the node's
+    // relay replays anchor + tail to any late joiner)
+    let deadline = Instant::now() + Duration::from_secs(15);
+    let mut late = loop {
+        let mut probe =
+            Consumer::over(RelayTransport::subscribe(node.port()).unwrap(), layout.clone());
+        if let Ok(Some(head)) = probe.latest_ready() {
+            if head >= steps {
+                break probe;
+            }
+        }
+        assert!(Instant::now() < deadline, "node staging never completed");
+        std::thread::sleep(Duration::from_millis(10));
+    };
+    let cs = late.synchronize().unwrap();
+    assert_eq!(cs.path, SyncPath::Slow, "late join replays anchor + tail");
+    assert_eq!(cs.anchors_restored, 1);
+    assert_eq!(cs.patches_applied, steps as usize);
+    assert_eq!(late.weights.as_ref().unwrap(), &vs[steps as usize]);
+    // the late joins hit the node only: the root still sees exactly
+    // one subscriber (the node itself)
+    assert_eq!(root.subscriber_count(), 1);
+    drop(late);
+    node.stop();
+    root.stop();
+}
+
+#[test]
+fn slow_peers_coalesce_in_place_without_stalling_the_tree() {
+    // raw-frame topology test, both stall directions at once:
+    //  * a stalled (never-reading) peer at the ROOT — the stand-in for
+    //    a slow mid-tree node — must coalesce inside the root's
+    //    per-subscriber queue;
+    //  * a stalled leaf under the NODE must coalesce inside the
+    //    node's queue;
+    // while a healthy leaf under the node receives the full stream in
+    // publish order through both hops.
+    let root = Arc::new(Relay::start_with_opts(4, 8).unwrap());
+    let node = RelayNode::join_with_opts(root.port, 4, 8).unwrap();
+    let _stalled_mid = tcp::connect_local(root.port).unwrap();
+    let _stalled_leaf = tcp::connect_local(node.port()).unwrap();
+    let mut sibling = tcp::connect_local(node.port()).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while root.subscriber_count() < 2 || node.relay().subscriber_count() < 2 {
+        assert!(Instant::now() < deadline, "subscribers never registered");
+        std::thread::sleep(Duration::from_millis(3));
+    }
+    // big frames so the stalled peers' writers wedge on their sockets;
+    // 12 patches against queue depth 4 force coalescing. The healthy
+    // sibling reads in lockstep with the publishes, so ITS queues
+    // (root→node and node→sibling) never overflow — it must see the
+    // full stream in publish order.
+    root.publish(Frame { kind: kind::ANCHOR, payload: vec![1u8; 2 << 20] });
+    let f = tcp::read_frame(&mut sibling).unwrap();
+    assert_eq!((f.kind, f.payload[0]), (kind::ANCHOR, 1));
+    for i in 0..12u8 {
+        root.publish(Frame { kind: kind::PATCH, payload: vec![10 + i; 2 << 20] });
+        let f = tcp::read_frame(&mut sibling).unwrap();
+        assert_eq!((f.kind, f.payload[0]), (kind::PATCH, 10 + i), "sibling stalled at {}", i);
+    }
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while root.coalesced_catchups() == 0 || node.relay().coalesced_catchups() == 0 {
+        assert!(Instant::now() < deadline, "stalled peers never coalesced");
+        std::thread::sleep(Duration::from_millis(3));
+    }
+    node.stop();
+    root.stop();
+}
+
+#[test]
+fn evicted_nack_escalates_upstream_and_heals() {
+    // the node's frame index holds ONE step, so by the time the
+    // consumer repairs step 1 the node must escalate the NACK to the
+    // root, deliver the upstream retransmit to the requester, and
+    // re-index it — one counted refetch, bit-identity preserved
+    let steps = 4u64;
+    let vs = views(N, steps, 250);
+    let layout = synthetic_layout(N, 64);
+
+    let root = Arc::new(Relay::start().unwrap());
+    let node = RelayNode::join_with_opts(
+        root.port,
+        pulse::net::relay::DEFAULT_QUEUE_DEPTH,
+        1, // aggressive eviction: index only the newest step
+    )
+    .unwrap();
+    let cons = RelayTransport::subscribe(node.port()).unwrap();
+    let decorated = FaultInjectingTransport::targeting(cons, 1, 0);
+    let mut consumer = Consumer::over(decorated, layout.clone());
+    let mut publisher = Publisher::over(
+        RelayTransport::publisher(root.clone()),
+        layout.clone(),
+        vs[0].clone(),
+        50,
+    )
+    .unwrap()
+    .with_shards(SHARDS);
+    for step in 1..=steps {
+        publisher.publish(step, &vs[step as usize]).unwrap();
+    }
+    // cold start AFTER the whole stream landed: the chain replays step
+    // 1, whose (1, 0) frame the decorator corrupts on first serve; the
+    // node's index has long evicted step 1
+    let cs = wait_sync(&mut consumer, steps);
+    assert_eq!(cs.path, SyncPath::Slow);
+    assert!(cs.verified);
+    assert_eq!(cs.shard_refetches, 1, "exactly one counted refetch");
+    assert_eq!(cs.nacks_unserviceable, 0);
+    assert_eq!(consumer.weights.as_ref().unwrap(), &vs[steps as usize]);
+    assert_eq!(node.relay().nacks_escalated(), 1, "the node must escalate the evicted slot");
+    assert_eq!(root.nacks_serviced(), 1, "the root must serve the escalated NACK");
+    assert_eq!(
+        node.relay().nacks_serviced(),
+        1,
+        "the retransmit is delivered (and re-indexed) by the node"
+    );
+    drop(consumer);
+    node.stop();
+    root.stop();
+}
+
+#[test]
+fn unserviceable_nack_errors_fast_then_anchor_rescues() {
+    // end-to-end over the wire: a repair NACK whose slot the relay has
+    // evicted gets an explicit NACK_MISS — the consumer's synchronize
+    // fails FAST (no NACK-timeout burn) with a detectable error, and a
+    // later anchor above the poisoned step rescues the next call
+    let steps = 3u64;
+    let vs = views(N, steps + 1, 250);
+    let layout = synthetic_layout(N, 64);
+
+    let root =
+        Arc::new(Relay::start_with_opts(pulse::net::relay::DEFAULT_QUEUE_DEPTH, 1).unwrap());
+    let cons = RelayTransport::subscribe(root.port).unwrap();
+    let decorated = FaultInjectingTransport::targeting(cons, 1, 0);
+    let mut consumer = Consumer::over(decorated, layout.clone());
+    let mut publisher = Publisher::over(
+        RelayTransport::publisher(root.clone()),
+        layout.clone(),
+        vs[0].clone(),
+        4, // anchor at step 4 = the eventual rescue point
+    )
+    .unwrap()
+    .with_shards(SHARDS);
+    // the whole stream lands before the cold start, so the root's
+    // one-step frame index has long evicted step 1's slots
+    for step in 1..=steps {
+        publisher.publish(step, &vs[step as usize]).unwrap();
+    }
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        if consumer.latest_ready().unwrap() >= Some(steps) {
+            break;
+        }
+        assert!(Instant::now() < deadline, "stream never staged");
+        std::thread::sleep(Duration::from_millis(3));
+    }
+    // cold start: anchor 0 + chain; (1, 0) is corrupted on first
+    // serve, the repair NACK is unserviceable everywhere → hard error
+    let t0 = Instant::now();
+    let err = consumer.synchronize().unwrap_err();
+    assert!(
+        t0.elapsed() < pulse::net::transport::NACK_TIMEOUT,
+        "NACK_MISS must preempt the retransmit timeout"
+    );
+    assert!(
+        pulse::net::transport::is_unserviceable(&err),
+        "the error must be detectably unserviceable: {:#}",
+        err
+    );
+    assert_eq!(root.nacks_unserviceable(), 1);
+    assert_eq!(consumer.transport.inner().counters().nacks_unserviceable, 1);
+    // step 4 publishes the rescue anchor (4 % anchor_interval == 0);
+    // the consumer's staging prunes the poisoned step and the next
+    // synchronize restores from the new anchor
+    publisher.publish(steps + 1, &vs[(steps + 1) as usize]).unwrap();
+    let cs = wait_sync(&mut consumer, steps + 1);
+    assert_eq!(cs.path, SyncPath::Slow, "recovery must ride the fresh anchor");
+    assert!(cs.verified);
+    assert_eq!(consumer.weights.as_ref().unwrap(), &vs[(steps + 1) as usize]);
+    drop(consumer);
+    root.stop();
+}
+
+#[test]
+fn unserviceable_repair_degrades_to_anchor_and_is_counted_in_stats() {
+    // SyncStats accounting: a chain attempt that dies on an
+    // unserviceable repair must fall back to the anchor path within
+    // the SAME synchronize call and report nacks_unserviceable — run
+    // over the in-proc fabric, whose staging keeps the poisoned step
+    // visible so the chain attempt really meets it
+    use pulse::net::transport::InProcTransport;
+    let steps = 5u64;
+    let vs = views(N, steps, 250);
+    let layout = synthetic_layout(N, 64);
+
+    let fabric = InProcTransport::new();
+    let decorated = FaultInjectingTransport::unserviceable(fabric.clone(), 2, 0);
+    let mut consumer = Consumer::over(decorated, layout.clone());
+    // anchor every 4 steps: the recovery anchor (step 4) exists by the
+    // time step 2's repair turns out to be unserviceable
+    let mut publisher = Publisher::over(fabric, layout.clone(), vs[0].clone(), 4)
+        .unwrap()
+        .with_shards(SHARDS);
+    // sync cleanly to step 1 first, so the poisoned step 2 is met on
+    // the CHAIN path (whose failure falls back to the anchor path)
+    publisher.publish(1, &vs[1]).unwrap();
+    let s1 = consumer.synchronize().unwrap();
+    assert!(s1.verified);
+    for step in 2..=steps {
+        publisher.publish(step, &vs[step as usize]).unwrap();
+    }
+    let cs = consumer.synchronize().unwrap();
+    assert_eq!(cs.path, SyncPath::Slow, "the failed chain must degrade to the anchor path");
+    assert!(cs.verified);
+    assert_eq!(cs.nacks_unserviceable, 1, "SyncStats must count the unserviceable repair");
+    assert_eq!(cs.shard_refetches, 1, "the dead repair was still one counted refetch");
+    assert!(cs.anchors_restored >= 1);
+    assert_eq!(consumer.weights.as_ref().unwrap(), &vs[steps as usize]);
+    assert_eq!(consumer.transport.injected(), 2, "first-serve corrupt + dead repair");
+}
+
+#[test]
+fn chained_consumer_reads_same_inventory_as_star() {
+    // the commit protocol survives the extra hop: a chained consumer's
+    // inventory (committed deltas + anchors) matches a star consumer's
+    // once both drained the same stream
+    let steps = 4u64;
+    let vs = views(8_000, steps, 150);
+    let layout = synthetic_layout(8_000, 64);
+
+    let root = Arc::new(Relay::start().unwrap());
+    let node = RelayNode::join(root.port).unwrap();
+    let mut star = Consumer::over(RelayTransport::subscribe(root.port).unwrap(), layout.clone());
+    let mut chained =
+        Consumer::over(RelayTransport::subscribe(node.port()).unwrap(), layout.clone());
+    let mut publisher = Publisher::over(
+        RelayTransport::publisher(root.clone()),
+        layout.clone(),
+        vs[0].clone(),
+        2,
+    )
+    .unwrap()
+    .with_shards(3);
+    for step in 1..=steps {
+        publisher.publish(step, &vs[step as usize]).unwrap();
+    }
+    let a = wait_sync(&mut star, steps);
+    let b = wait_sync(&mut chained, steps);
+    assert!(a.verified && b.verified);
+    assert_eq!(star.weights, chained.weights);
+    // the chained leaf drains one hop later: poll both to the steady
+    // state (the final anchor staged) before comparing inventories
+    let settle = |t: &RelayTransport| -> Inventory {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let inv = t.latest_ready().unwrap();
+            if inv.anchor_steps.contains(&steps) {
+                return inv;
+            }
+            assert!(Instant::now() < deadline, "final anchor never staged");
+            std::thread::sleep(Duration::from_millis(3));
+        }
+    };
+    let inv_star = settle(&star.transport);
+    let inv_chain = settle(&chained.transport);
+    assert_eq!(inv_star.delta_steps, inv_chain.delta_steps);
+    assert_eq!(inv_star.anchor_steps, inv_chain.anchor_steps);
+    drop(star);
+    drop(chained);
+    node.stop();
+    root.stop();
+}

@@ -1,15 +1,19 @@
 //! Transport conformance suite: the SAME PULSESync stream (seeded,
 //! deterministic) runs over every `SyncTransport` backend —
-//! object-store, in-proc, TCP relay, and fault-injected wrappers — and
-//! must end bit-identical to the object-store reference:
+//! object-store, in-proc, TCP relay (star AND chained through a
+//! `RelayNode`), and fault-injected wrappers — and must end
+//! bit-identical to the object-store reference:
 //!
 //! * bit-identity per step and at the end of the stream;
 //! * chain catch-up and cold-start slow path on every backend;
 //! * single-shard corruption healed by exactly one counted refetch on
-//!   every backend (on the relay this is a real NACK retransmit);
+//!   every backend (on the relay this is a real NACK retransmit; on
+//!   the chained relay the retransmit is served from the *node's*
+//!   staging without touching the root);
 //! * the poll-then-sync pattern costs one inventory scan, not two;
 //! * a zero-fault `FaultInjectingTransport` is transparent.
 
+use pulse::net::node::RelayNode;
 use pulse::net::relay::Relay;
 use pulse::net::transport::{
     FaultInjectingTransport, FaultPlan, InProcTransport, ObjectStoreTransport, RelayTransport,
@@ -132,6 +136,18 @@ fn all_backends_bit_identical_to_object_store_reference() {
     let (w_fault, r) = run_stream(inner, cons, 3);
     assert_eq!(r, 0);
     assert_eq!(w_fault, reference, "fault decorator must be transparent at prob 0");
+
+    // chained relay: the consumer subscribes to a RelayNode one hop
+    // below the root — same subscribe API, one more staging hop
+    let root = Arc::new(Relay::start().unwrap());
+    let node = RelayNode::join(root.port).unwrap();
+    let prod = RelayTransport::publisher(root.clone());
+    let cons = RelayTransport::subscribe(node.port()).unwrap();
+    let (w_chain, r) = run_stream(prod, cons, 3);
+    assert_eq!(r, 0);
+    assert_eq!(w_chain, reference, "chained relay diverged from object store");
+    node.stop();
+    root.stop();
 }
 
 /// Cold-start slow path + multi-step chain catch-up, on one backend.
@@ -178,6 +194,14 @@ fn chain_and_slow_paths_on_every_backend() {
     chain_and_slow(prod, cons);
     relay.stop();
 
+    let root = Arc::new(Relay::start().unwrap());
+    let node = RelayNode::join(root.port).unwrap();
+    let prod = RelayTransport::publisher(root.clone());
+    let cons = RelayTransport::subscribe(node.port()).unwrap();
+    chain_and_slow(prod, cons);
+    node.stop();
+    root.stop();
+
     let inner = InProcTransport::new();
     let cons = FaultInjectingTransport::new(inner.clone(), 5, FaultPlan::default());
     chain_and_slow(inner, cons);
@@ -221,6 +245,32 @@ fn single_shard_corruption_heals_over_relay_via_nack() {
     assert_eq!(refetches, 1);
     assert_eq!(relay.nacks_serviced(), 1, "the heal must be a relay retransmit");
     relay.stop();
+}
+
+#[test]
+fn single_shard_corruption_at_leaf_heals_from_node_staging() {
+    // chained topology: corruption at a LEAF consumer must heal with
+    // exactly one refetch served from the mid-tree node's frame index
+    // — the root never sees the NACK (acceptance: recursive fault
+    // handling, repair locality)
+    let root = Arc::new(Relay::start().unwrap());
+    let node = RelayNode::join(root.port).unwrap();
+    let prod = RelayTransport::publisher(root.clone());
+    let cons = RelayTransport::subscribe(node.port()).unwrap();
+    let decorated = FaultInjectingTransport::targeting(cons, 2, 1);
+    let (w, refetches) = run_stream(prod, decorated, 50);
+    let vs = views(N, STEPS, 400);
+    assert_eq!(w, vs[STEPS as usize]);
+    assert_eq!(refetches, 1, "single corruption must heal with exactly one refetch");
+    assert_eq!(
+        node.relay().nacks_serviced(),
+        1,
+        "the heal must be a retransmit from the node's own staging"
+    );
+    assert_eq!(node.relay().nacks_escalated(), 0);
+    assert_eq!(root.nacks_serviced(), 0, "the NACK must never reach the root");
+    node.stop();
+    root.stop();
 }
 
 #[test]
