@@ -18,6 +18,13 @@
 //! distribution tree: the root fans out to one node, the node re-stages
 //! the stream and serves both workers' catch-up and NACK repair from
 //! its own staging. Same stream, same bit-identity, one more hop.
+//!
+//! `--index-bound N` (or `PULSE_INDEX_BOUND=N`) sets how many distinct
+//! steps each hop's NACK frame index retains (default
+//! `relay::INDEX_STEPS` = 8). Shrink it deliberately — e.g.
+//! `PULSE_INDEX_BOUND=1` — to force repair NACKs past the local index:
+//! in tree mode they escalate upstream, which is exactly the failover
+//! path `paper control` measures.
 
 use pulse::bf16;
 use pulse::net::node::RelayNode;
@@ -67,25 +74,51 @@ fn run_worker(
 }
 
 fn main() -> anyhow::Result<()> {
-    let tree = std::env::args().any(|a| a == "--tree")
+    let argv: Vec<String> = std::env::args().collect();
+    let tree = argv.iter().any(|a| a == "--tree")
         || std::env::var("PULSE_TREE").map_or(false, |v| v == "1");
+    // relay frame-index bound: `--index-bound N` wins over
+    // PULSE_INDEX_BOUND; default keeps the library's INDEX_STEPS (8).
+    // Failover experiments shrink it to force NACK escalation.
+    let index_bound = argv
+        .iter()
+        .position(|a| a == "--index-bound")
+        .and_then(|i| argv.get(i + 1))
+        .and_then(|v| v.parse::<usize>().ok())
+        .or_else(|| {
+            std::env::var("PULSE_INDEX_BOUND").ok().and_then(|v| v.parse().ok())
+        })
+        .unwrap_or(pulse::net::relay::INDEX_STEPS)
+        .max(1);
     let n = 500_000usize;
     let layout = synthetic_layout(n, 1024);
-    let relay = Arc::new(Relay::start()?);
+    let relay =
+        Arc::new(Relay::start_with_opts(pulse::net::relay::DEFAULT_QUEUE_DEPTH, index_bound)?);
     // opt-in 2-level tree: workers subscribe to a chained node that
     // re-stages the root's stream
-    let node = if tree { Some(RelayNode::join(relay.port)?) } else { None };
+    let node = if tree {
+        Some(RelayNode::join_with_opts(
+            relay.port,
+            pulse::net::relay::DEFAULT_QUEUE_DEPTH,
+            index_bound,
+        )?)
+    } else {
+        None
+    };
     let sub_port = node.as_ref().map_or(relay.port, |n| n.port());
     match &node {
         Some(nd) => println!(
-            "relay tree: root 127.0.0.1:{} -> node 127.0.0.1:{} ({} shards/step)",
+            "relay tree: root 127.0.0.1:{} -> node 127.0.0.1:{} ({} shards/step, \
+             NACK index bound {} steps/hop)",
             relay.port,
             nd.port(),
-            SHARDS
+            SHARDS,
+            index_bound
         ),
-        None => {
-            println!("relay listening on 127.0.0.1:{} ({} shards/step)", relay.port, SHARDS)
-        }
+        None => println!(
+            "relay listening on 127.0.0.1:{} ({} shards/step, NACK index bound {} steps)",
+            relay.port, SHARDS, index_bound
+        ),
     }
 
     // trainer-side state: FP32 masters + previous BF16 view

@@ -5,7 +5,9 @@
 //! store I/O (runs everywhere, including CI bench-smoke); star vs
 //! 2-level-tree relay fan-out over real TCP sockets, so the chaining
 //! trade-off (one extra staging hop vs root uplink load) accumulates
-//! data points per PR; and one full GRPO train step on the tiny model
+//! data points per PR; a control-plane failover cycle
+//! (`e2e/control_replan`) pricing detection + replan + re-subscribe +
+//! catch-up end to end; and one full GRPO train step on the tiny model
 //! (requires artifacts; skipped cleanly without them).
 use pulse::bf16;
 use pulse::coordinator;
@@ -178,6 +180,110 @@ fn bench_fanout_topologies(b: &mut Bench) {
     fanout_over(b, &format!("e2e/fanout_tree2/{}leaves 200k", leaves), true, leaves, n, &init, &mut rng);
 }
 
+/// One full control-plane failover cycle: assemble a plane-managed
+/// tree (1 active relay + 1 standby, 2 leaves) from JOINs, stream,
+/// crash the active relay silently, and wait until every leaf has
+/// verified a step published after the kill. The row tracks
+/// end-to-end re-parenting latency (detection + replan + re-subscribe
+/// + catch-up) per PR in `BENCH_e2e.json`.
+fn bench_control_replan(b: &mut Bench) {
+    use pulse::net::control::{
+        ControlConfig, ControlPlane, ControlSubscriberTransport, ControlledNode,
+    };
+    use pulse::net::relay::{DEFAULT_QUEUE_DEPTH, INDEX_STEPS};
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    let n = 50_000usize;
+    let layout = synthetic_layout(n, 1024);
+    let mut rng = Rng::new(83);
+    let init: Vec<u16> = (0..n)
+        .map(|_| pulse::bf16::f32_to_bf16_bits((rng.normal() * 0.02) as f32))
+        .collect();
+    let hb = Duration::from_millis(30);
+    let cfg = ControlConfig {
+        fanout_cap: 2,
+        min_relay_levels: 1,
+        heartbeat_interval: hb,
+        missed_heartbeats: 5, // 150 ms death timeout
+    };
+    let wait_sync = |c: &mut Consumer<ControlSubscriberTransport>, step: u64| {
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            if let Ok(Some(head)) = c.latest_ready() {
+                if head >= step {
+                    if let Ok(cs) = c.synchronize() {
+                        assert!(cs.verified);
+                        return;
+                    }
+                }
+            }
+            assert!(Instant::now() < deadline, "step {} never synced", step);
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    };
+    b.run("e2e/control_replan/2leaves 50k", || {
+        let root = Arc::new(Relay::start().unwrap());
+        let mut publisher = Publisher::over(
+            RelayTransport::publisher(root.clone()),
+            layout.clone(),
+            init.clone(),
+            1_000,
+        )
+        .unwrap()
+        .with_shards(2);
+        let plane = ControlPlane::start(root.port, cfg).unwrap();
+        let nodes: Vec<ControlledNode> = (0..2)
+            .map(|_| {
+                ControlledNode::join_with_opts(plane.port, DEFAULT_QUEUE_DEPTH, INDEX_STEPS, hb)
+                    .unwrap()
+            })
+            .collect();
+        let mut leaves: Vec<Consumer<ControlSubscriberTransport>> = (0..2)
+            .map(|_| {
+                Consumer::over(
+                    ControlSubscriberTransport::join_with_heartbeat(plane.port, hb).unwrap(),
+                    layout.clone(),
+                )
+            })
+            .collect();
+        let deadline = Instant::now() + Duration::from_secs(20);
+        while plane.live_peers() != (2, 2) {
+            assert!(Instant::now() < deadline, "membership never settled");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let mut w = init.clone();
+        for i in 0..n / 200 {
+            w[(i * 199) % n] = pulse::bf16::f32_to_bf16_bits(0.03);
+        }
+        publisher.publish(1, &w).unwrap();
+        for leaf in leaves.iter_mut() {
+            wait_sync(leaf, 1);
+        }
+        // crash whichever relay is active (the one that attached)
+        let victim = nodes
+            .iter()
+            .find(|nd| nd.node().upstream_attached())
+            .expect("one relay must be active");
+        victim.fail_silently();
+        for i in 0..n / 200 {
+            w[(i * 211) % n] = pulse::bf16::f32_to_bf16_bits(-0.03);
+        }
+        publisher.publish(2, &w).unwrap();
+        // the measured quantity: both leaves verified at the post-kill
+        // step, which requires detection + replan + re-subscribe
+        for leaf in leaves.iter_mut() {
+            wait_sync(leaf, 2);
+        }
+        drop(leaves);
+        for nd in &nodes {
+            nd.stop();
+        }
+        plane.stop();
+        root.stop();
+    });
+}
+
 /// One full GRPO step (rollout + reward + advantages + grad + AdamW +
 /// sparsity meter + PULSESync encode) on the tiny model.
 fn bench_train_step(b: &mut Bench) {
@@ -228,6 +334,7 @@ fn main() {
     let mut b = Bench::new();
     bench_sync_roundtrip(&mut b);
     bench_fanout_topologies(&mut b);
+    bench_control_replan(&mut b);
     bench_train_step(&mut b);
     let results = pulse::coordinator::metrics::results_dir();
     b.write_csv(&results.join("bench_e2e.csv")).unwrap();

@@ -68,12 +68,13 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         "table14" => table14(args),
         "transports" => transports(args),
         "topology" => topology(args),
+        "control" => control(args),
         "all" => {
             for c in [
                 "table1", "fig9", "fig3", "table2", "table6", "fig1", "fig2", "fig14", "fig13",
                 "fig16", "fig15", "fig4", "fig8", "table5", "table10", "table11", "table13",
-                "fig11", "table14", "transports", "topology", "fig7", "fig10", "fig12", "fig17",
-                "table7", "fig6",
+                "fig11", "table14", "transports", "topology", "control", "fig7", "fig10",
+                "fig12", "fig17", "table7", "fig6",
             ] {
                 println!("\n################ paper {} ################", c);
                 dispatch(c, args)?;
@@ -85,7 +86,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
                 "usage: paper <exp> [--options]\n\
                  exps: fig1 fig2 fig3 fig4 fig6 fig7 fig8 fig9 fig10 fig11 fig12 fig13 fig14\n\
                  fig15 fig16 fig17 table1 table2 table4 table5 table6 table7 table10\n\
-                 table11 table13 table14 transports topology all"
+                 table11 table13 table14 transports topology control all"
             );
             Ok(())
         }
@@ -1617,6 +1618,252 @@ fn topology(args: &Args) -> Result<()> {
             "bytes down (1 leaf)",
             "refetches",
             "slow",
+        ],
+        &rows,
+    );
+    Ok(())
+}
+
+// ====================================================== control
+/// Control-plane failover cost: replan latency and recovery traffic vs
+/// subtree size. For each subtree size S the plane assembles 2 active
+/// relays (S leaves each) + 1 standby from JOINs alone, streams a few
+/// steps, then one active relay is crashed (silent heartbeats — only
+/// the failure detector can see it). Reported per S: detection latency
+/// (kill → epoch bump), recovery latency (kill → every orphaned leaf
+/// verified at a post-kill step), and what the orphans paid to catch
+/// up (re-parents, replayed anchors/patches, slow paths). Writes
+/// `results/control_plane.csv`.
+fn control(args: &Args) -> Result<()> {
+    use pulse::coordinator::planner::Upstream;
+    use pulse::net::control::{
+        ControlConfig, ControlPlane, ControlSubscriberTransport, ControlledNode,
+    };
+    use pulse::net::relay::{Relay, DEFAULT_QUEUE_DEPTH, INDEX_STEPS};
+    use pulse::net::transport::RelayTransport;
+    use pulse::pulse::sync::{Consumer, Publisher, SyncPath, SyncStats};
+    use pulse::util::pool;
+    use pulse::util::rng::Rng;
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    /// Poll one leaf until `step` is committed from its view, then
+    /// synchronize; transient errors (mid-failover) retry.
+    fn wait_sync(
+        c: &mut Consumer<ControlSubscriberTransport>,
+        step: u64,
+    ) -> Result<SyncStats> {
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            if let Ok(Some(head)) = c.latest_ready() {
+                if head >= step {
+                    if let Ok(cs) = c.synchronize() {
+                        return Ok(cs);
+                    }
+                }
+            }
+            anyhow::ensure!(Instant::now() < deadline, "step {} never synced", step);
+            std::thread::sleep(Duration::from_millis(3));
+        }
+    }
+
+    let n = args.usize_or("params", 100_000);
+    let pre_steps = args.usize_or("steps", 3) as u64;
+    let subtrees = args.usize_list_or("subtrees", &[2, 4, 8]);
+    let hb = Duration::from_millis(args.u64_or("heartbeat-ms", 50));
+    let missed = args.usize_or("missed", 6) as u32;
+    let layout = sparse::synthetic_layout(n, 1024);
+
+    let results = results_dir();
+    let mut csv = CsvWriter::create(
+        &results.join("control_plane.csv"),
+        &[
+            "subtree",
+            "leaves",
+            "detect_ms",
+            "recover_ms",
+            "epoch",
+            "reparents",
+            "orphan_slow_paths",
+            "catchup_patches",
+            "catchup_anchors",
+        ],
+    )?;
+    let mut rows = Vec::new();
+
+    for &s in &subtrees {
+        let s = s.max(2); // cap ≥ 2, so 2 relays need ≥ 2 leaves each
+        let leaves_n = 2 * s;
+        let mut rng = Rng::new(61 + s as u64);
+        let init: Vec<u16> = (0..n).map(|_| rng.next_u32() as u16).collect();
+        let mut views = vec![init.clone()];
+        {
+            let mut w = init;
+            for _ in 0..pre_steps + 1 {
+                for _ in 0..n / 100 {
+                    let i = rng.below(n as u64) as usize;
+                    w[i] = rng.next_u32() as u16;
+                }
+                views.push(w.clone());
+            }
+        }
+
+        let root = Arc::new(Relay::start()?);
+        let mut publisher = Publisher::over(
+            RelayTransport::publisher(root.clone()),
+            layout.clone(),
+            views[0].clone(),
+            1_000,
+        )?
+        .with_shards(4);
+        let cfg = ControlConfig {
+            fanout_cap: s,
+            min_relay_levels: 1,
+            heartbeat_interval: hb,
+            missed_heartbeats: missed,
+        };
+        let plane = ControlPlane::start(root.port, cfg)?;
+        let nodes: Vec<ControlledNode> = (0..3)
+            .map(|_| {
+                ControlledNode::join_with_opts(plane.port, DEFAULT_QUEUE_DEPTH, INDEX_STEPS, hb)
+            })
+            .collect::<Result<_>>()?;
+        let mut consumers: Vec<Consumer<ControlSubscriberTransport>> = Vec::new();
+        for _ in 0..leaves_n {
+            consumers.push(Consumer::over(
+                ControlSubscriberTransport::join_with_heartbeat(plane.port, hb)?,
+                layout.clone(),
+            ));
+        }
+        let deadline = Instant::now() + Duration::from_secs(20);
+        while plane.live_peers() != (3, leaves_n) {
+            anyhow::ensure!(Instant::now() < deadline, "membership never settled");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+
+        for step in 1..=pre_steps {
+            publisher.publish(step, &views[step as usize])?;
+        }
+        let synced = pool::par_map(consumers, |_, mut c| {
+            let r = wait_sync(&mut c, pre_steps);
+            (c, r)
+        });
+        consumers = Vec::with_capacity(synced.len());
+        for (c, r) in synced {
+            r?;
+            consumers.push(c);
+        }
+
+        // assembly replans may already have moved leaves between
+        // relays as the tree grew; the failover column must report the
+        // kill's cost alone, so snapshot before crashing
+        let reparents_before: u64 =
+            consumers.iter().map(|c| c.transport.reparents()).sum();
+
+        // victim = the relay parenting leaf 0; crash it silently
+        let plan = plane.plan().unwrap();
+        let parent_of = |id: u64| match plan.assignment_of(id).map(|a| a.upstream) {
+            Some(Upstream::Peer(p)) => p,
+            _ => 0,
+        };
+        let leaf_ids: Vec<u64> = consumers
+            .iter()
+            .map(|c| c.transport.peer_id().unwrap_or(0))
+            .collect();
+        let victim_id = parent_of(leaf_ids[0]);
+        let orphan_set: Vec<bool> =
+            leaf_ids.iter().map(|&id| parent_of(id) == victim_id).collect();
+        let victim = nodes
+            .iter()
+            .find(|nd| nd.peer_id() == Some(victim_id))
+            .ok_or_else(|| anyhow::anyhow!("victim relay not found"))?;
+        let epoch_before = plane.epoch();
+        let t_kill = Instant::now();
+        victim.fail_silently();
+        let deadline = Instant::now() + Duration::from_secs(20);
+        while plane.epoch() == epoch_before {
+            anyhow::ensure!(Instant::now() < deadline, "death never detected");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let detect = t_kill.elapsed();
+
+        // the recovery step: published after the kill, so a leaf
+        // verifying it proves the subtree re-parented and caught up
+        let rec_step = pre_steps + 1;
+        publisher.publish(rec_step, &views[rec_step as usize])?;
+        let synced = pool::par_map(consumers, |_, mut c| {
+            let r = wait_sync(&mut c, rec_step);
+            (c, r)
+        });
+        let recover = t_kill.elapsed();
+        let (mut reparents_total, mut slow, mut patches, mut anchors) = (0u64, 0u64, 0u64, 0u64);
+        consumers = Vec::with_capacity(synced.len());
+        for (i, (c, r)) in synced.into_iter().enumerate() {
+            let cs = r?;
+            anyhow::ensure!(
+                cs.verified && c.weights.as_deref() == Some(views[rec_step as usize].as_slice()),
+                "leaf {} not bit-identical after failover",
+                i
+            );
+            if orphan_set[i] {
+                slow += (cs.path == SyncPath::Slow) as u64;
+                patches += cs.patches_applied as u64;
+                anchors += cs.anchors_restored as u64;
+            }
+            reparents_total += c.transport.reparents();
+            consumers.push(c);
+        }
+        // the kill's cost alone (see snapshot above)
+        let reparents = reparents_total.saturating_sub(reparents_before);
+        let epoch = plane.epoch();
+
+        csv.row(&[
+            s.to_string(),
+            leaves_n.to_string(),
+            format!("{:.1}", detect.as_secs_f64() * 1e3),
+            format!("{:.1}", recover.as_secs_f64() * 1e3),
+            epoch.to_string(),
+            reparents.to_string(),
+            slow.to_string(),
+            patches.to_string(),
+            anchors.to_string(),
+        ])?;
+        rows.push(vec![
+            format!("{}", s),
+            format!("{}", leaves_n),
+            format!("{:.0} ms", detect.as_secs_f64() * 1e3),
+            format!("{:.0} ms", recover.as_secs_f64() * 1e3),
+            epoch.to_string(),
+            reparents.to_string(),
+            slow.to_string(),
+            patches.to_string(),
+            anchors.to_string(),
+        ]);
+
+        drop(consumers);
+        for nd in &nodes {
+            nd.stop();
+        }
+        plane.stop();
+        root.stop();
+    }
+
+    print_table(
+        &format!(
+            "Control plane: failover cost vs subtree size ({} params, {} pre-kill steps, \
+             heartbeat {:?} × {} missed)",
+            n, pre_steps, hb, missed
+        ),
+        &[
+            "subtree",
+            "leaves",
+            "detect",
+            "recover",
+            "epoch",
+            "reparents",
+            "orphan slow",
+            "catchup patches",
+            "catchup anchors",
         ],
         &rows,
     );

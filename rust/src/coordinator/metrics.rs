@@ -120,10 +120,12 @@ impl ShardFanoutMeter {
 /// consumer's `SyncStats` refetch/path tallies. Chained-relay
 /// topologies label one row per hop ([`TransportMeter::set_hop`]), so
 /// the `paper topology` table can show where in the tree each cost is
-/// paid. Feeds `results/transport_plane.csv` / `results/topology.csv`
-/// and the `paper transports` / `paper topology` tables, so the
-/// per-backend cost of the same PULSESync stream is directly
-/// comparable.
+/// paid; control-plane runs carry `reparents`/`epoch` columns so
+/// `results/topology.csv`-style tables can show failover cost. Feeds
+/// `results/transport_plane.csv` / `results/topology.csv` /
+/// `results/control_plane.csv` and the `paper transports` / `paper
+/// topology` / `paper control` tables, so the per-backend cost of the
+/// same PULSESync stream is directly comparable.
 #[derive(Debug, Default)]
 pub struct TransportMeter {
     rows: Vec<TransportRow>,
@@ -205,6 +207,8 @@ impl TransportMeter {
                 "faults_injected",
                 "shard_refetches",
                 "slow_paths",
+                "reparents",
+                "epoch",
             ],
         )?;
         for r in &self.rows {
@@ -223,6 +227,8 @@ impl TransportMeter {
                 r.counters.faults_injected.to_string(),
                 r.shard_refetches.to_string(),
                 r.slow_paths.to_string(),
+                r.counters.reparents.to_string(),
+                r.counters.epoch.to_string(),
             ])?;
         }
         Ok(())
@@ -298,6 +304,10 @@ mod tests {
             "in-proc",
             TransportCounters { inventory_scans: 2, bytes_fetched: 512, ..Default::default() },
         );
+        m.set_counters(
+            "object-store",
+            TransportCounters { reparents: 3, epoch: 9, ..Default::default() },
+        );
         m.set_hop("object-store", 2);
         assert_eq!(m.rows().len(), 2);
         let row = &m.rows()[0];
@@ -315,8 +325,12 @@ mod tests {
         let text = std::fs::read_to_string(&p).unwrap();
         assert_eq!(text.lines().count(), 3, "header + one row per backend");
         assert!(text.starts_with("transport,hop,"));
+        assert!(text.lines().next().unwrap().ends_with(",reparents,epoch"));
         assert!(text.lines().nth(1).unwrap().starts_with("in-proc,0,2,1,2,"));
-        assert!(text.lines().nth(2).unwrap().starts_with("object-store,2,"));
+        assert!(text.lines().nth(1).unwrap().ends_with(",0,0"), "static backend: no failovers");
+        let os = text.lines().nth(2).unwrap();
+        assert!(os.starts_with("object-store,2,"));
+        assert!(os.ends_with(",3,9"), "failover columns must round-trip: {}", os);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -6,6 +6,7 @@
 //! outer-round boundaries.
 
 pub mod metrics;
+pub mod planner;
 pub mod sparsity;
 
 use crate::optim::{AdamConfig, AdamW};

@@ -1,0 +1,442 @@
+//! Fan-out planning for relay distribution trees (ROADMAP: "deeper
+//! (3+ level) trees with automatic fan-out planning from measured leaf
+//! counts").
+//!
+//! Two layers, deliberately separated so each is testable alone:
+//!
+//! * [`FanoutShape`] — the *pure* balanced k-ary shape: given a
+//!   measured leaf count and a per-hop fan-out cap, how many interior
+//!   relays sit at each level, and which last-level relay parents each
+//!   leaf. Minimal depth by construction ([`plan_shape`]), optionally
+//!   deepened for experiments ([`plan_shape_with_depth`]). Property:
+//!   every leaf reached exactly once, cap respected at every hop,
+//!   depth minimal — checked by the `util::prop` test below.
+//! * [`TopologyPlan`] — the shape *bound* to actual peer ids by
+//!   [`bind`]: each relay slot gets a joined relay peer (join order,
+//!   so survivors keep their slots across replans where possible),
+//!   extra relays become standbys, and an under-provisioned cluster
+//!   degrades gracefully (fewer levels, then cap overflow, then
+//!   leaves directly on the root) instead of failing.
+//!
+//! The control plane ([`crate::net::control`]) recomputes a bound plan
+//! per epoch (join, death) and pushes it as ASSIGN directives.
+
+/// The balanced k-ary tree shape for one leaf population.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FanoutShape {
+    /// Per-hop fan-out cap the shape was planned for (≥ 2).
+    pub fanout_cap: usize,
+    /// Leaves the shape was planned for (`leaf_parents.len()` when
+    /// interior levels exist; kept separately so flat shapes — leaves
+    /// straight on the root — still know their fan-out).
+    pub leaf_count: usize,
+    /// Interior relays per level; `relay_levels[0]` sits directly
+    /// under the root, the last level parents the leaves. Empty =
+    /// leaves attach straight to the root.
+    pub relay_levels: Vec<usize>,
+    /// Per leaf: index of its parent within the LAST relay level
+    /// (unused when `relay_levels` is empty).
+    pub leaf_parents: Vec<usize>,
+}
+
+impl FanoutShape {
+    /// Hops from the root relay to a leaf (1 = leaves on the root).
+    pub fn depth(&self) -> usize {
+        self.relay_levels.len() + 1
+    }
+
+    /// Total interior relay slots the shape needs.
+    pub fn relays_required(&self) -> usize {
+        self.relay_levels.iter().sum()
+    }
+
+    /// Parent of relay `idx` at `level` (0-based): `None` = the root,
+    /// `Some(i)` = relay `i` one level up. Round-robin, so sibling
+    /// counts differ by at most one.
+    pub fn relay_parent(&self, level: usize, idx: usize) -> Option<usize> {
+        if level == 0 {
+            None
+        } else {
+            Some(idx % self.relay_levels[level - 1])
+        }
+    }
+
+    /// Children of relay `idx` at `level`: `(relay children at level+1,
+    /// leaf children)` — exactly one of the two is non-empty in a
+    /// well-formed shape.
+    fn child_count(&self, level: usize, idx: usize) -> usize {
+        if level + 1 < self.relay_levels.len() {
+            (0..self.relay_levels[level + 1])
+                .filter(|&i| i % self.relay_levels[level] == idx)
+                .count()
+        } else {
+            self.leaf_parents.iter().filter(|&&p| p == idx).count()
+        }
+    }
+
+    /// Largest child count over the root and every relay slot.
+    pub fn max_fanout(&self) -> usize {
+        if self.relay_levels.is_empty() {
+            // flat: every leaf hangs on the root
+            return self.leaf_count;
+        }
+        let mut max = self.relay_levels[0]; // root's children
+        for (level, &count) in self.relay_levels.iter().enumerate() {
+            for idx in 0..count {
+                max = max.max(self.child_count(level, idx));
+            }
+        }
+        max
+    }
+}
+
+/// Minimal-depth balanced shape for `leaf_count` leaves under a
+/// per-hop `fanout_cap` (clamped to ≥ 2).
+pub fn plan_shape(leaf_count: usize, fanout_cap: usize) -> FanoutShape {
+    plan_shape_with_depth(leaf_count, fanout_cap, 0)
+}
+
+/// Like [`plan_shape`], but with at least `min_relay_levels` interior
+/// levels (failover experiments force 3+ hop trees this way even for
+/// small leaf counts). Depth stays minimal whenever
+/// `min_relay_levels` does not force otherwise.
+pub fn plan_shape_with_depth(
+    leaf_count: usize,
+    fanout_cap: usize,
+    min_relay_levels: usize,
+) -> FanoutShape {
+    let cap = fanout_cap.max(2);
+    let mut relay_levels: Vec<usize> = Vec::new();
+    if leaf_count > cap || (leaf_count > 0 && min_relay_levels > 0) {
+        // last level: enough relays that no relay parents > cap leaves
+        relay_levels.push(leaf_count.div_ceil(cap));
+        // build upward until the top level fits under the root
+        while relay_levels[0] > cap {
+            let above = relay_levels[0].div_ceil(cap);
+            relay_levels.insert(0, above);
+        }
+        // forced extra depth: single-relay chain levels on top (the
+        // old top, ≤ cap relays, fits under one relay)
+        while relay_levels.len() < min_relay_levels {
+            relay_levels.insert(0, 1);
+        }
+    }
+    let leaf_parents = match relay_levels.last() {
+        Some(&last) => (0..leaf_count).map(|i| i % last).collect(),
+        None => Vec::new(),
+    };
+    FanoutShape { fanout_cap: cap, leaf_count, relay_levels, leaf_parents }
+}
+
+/// What a bound peer connects upstream to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Upstream {
+    /// The root relay (the publisher's own relay).
+    Root,
+    /// Another relay peer, by its control-plane peer id.
+    Peer(u64),
+    /// No upstream this epoch: detach and wait (spare relay).
+    Standby,
+}
+
+/// One peer's place in a bound plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Assignment {
+    pub peer: u64,
+    pub upstream: Upstream,
+    /// Hops from the publisher (1 = directly under the root relay).
+    pub hop: u32,
+}
+
+/// A [`FanoutShape`] bound to joined peers for one epoch.
+#[derive(Debug, Clone)]
+pub struct TopologyPlan {
+    pub epoch: u64,
+    pub shape: FanoutShape,
+    /// Relay assignments, level-major (level 0 first). Standby relays
+    /// ride at the end with [`Upstream::Standby`].
+    pub relays: Vec<Assignment>,
+    /// One assignment per leaf, in the order given to [`bind`].
+    pub leaves: Vec<Assignment>,
+}
+
+impl TopologyPlan {
+    /// Hops from root to leaf under this plan.
+    pub fn depth(&self) -> usize {
+        self.shape.depth()
+    }
+
+    /// The assignment for `peer`, if it is part of the plan.
+    pub fn assignment_of(&self, peer: u64) -> Option<Assignment> {
+        self.relays
+            .iter()
+            .chain(self.leaves.iter())
+            .find(|a| a.peer == peer)
+            .copied()
+    }
+}
+
+/// Order the live relays for binding so peers holding ACTIVE slots in
+/// `prev` keep exactly those slots: a dead peer's slot is a *hole*
+/// filled by a spare (a previous standby, or a new joiner) rather than
+/// shifting every later slot down — this is what confines a replan's
+/// rewiring to the dead peer's own subtree. Peers never seen before
+/// (and unfillable holes, when the cluster truly shrank) append/close
+/// in join order. With no previous plan this is join order unchanged.
+pub fn stable_relay_order(prev: Option<&TopologyPlan>, live: &[u64]) -> Vec<u64> {
+    let Some(prev) = prev else { return live.to_vec() };
+    let prev_active: Vec<u64> = prev
+        .relays
+        .iter()
+        .filter(|a| a.upstream != Upstream::Standby)
+        .map(|a| a.peer)
+        .collect();
+    let mut spares: std::collections::VecDeque<u64> =
+        live.iter().copied().filter(|id| !prev_active.contains(id)).collect();
+    let mut out = Vec::with_capacity(live.len());
+    for id in &prev_active {
+        if live.contains(id) {
+            out.push(*id);
+        } else if let Some(s) = spares.pop_front() {
+            out.push(s);
+        }
+        // dead slot and no spare left: the hole closes and later
+        // slots shift — unavoidable when the cluster truly shrank
+    }
+    out.extend(spares);
+    out
+}
+
+/// Bind a shape to the live peers. `relay_peers` and `leaf_peers` are
+/// the control plane's live sets — relays pre-ordered by
+/// [`stable_relay_order`] so survivors keep their slots across replans
+/// and only orphaned subtrees rewire; leaves in join order.
+///
+/// Degradation when relays are scarce: first the forced extra depth is
+/// given up, then levels are collapsed to a single tier of however
+/// many relays exist (each carrying more than `fanout_cap` leaves if
+/// it must), and with no relays at all every leaf attaches straight to
+/// the root. The plan never fails — a degraded tree that moves frames
+/// beats an optimal tree that doesn't exist.
+pub fn bind(
+    epoch: u64,
+    relay_peers: &[u64],
+    leaf_peers: &[u64],
+    fanout_cap: usize,
+    min_relay_levels: usize,
+) -> TopologyPlan {
+    let mut shape = plan_shape_with_depth(leaf_peers.len(), fanout_cap, min_relay_levels);
+    if shape.relays_required() > relay_peers.len() {
+        shape = plan_shape(leaf_peers.len(), fanout_cap);
+    }
+    if shape.relays_required() > relay_peers.len() {
+        // under-provisioned: one tier of whatever relays exist
+        let last = relay_peers.len();
+        shape = FanoutShape {
+            fanout_cap: fanout_cap.max(2),
+            leaf_count: leaf_peers.len(),
+            relay_levels: if last > 0 { vec![last] } else { Vec::new() },
+            leaf_parents: if last > 0 {
+                (0..leaf_peers.len()).map(|i| i % last).collect()
+            } else {
+                Vec::new()
+            },
+        };
+    }
+
+    // bind relay slots level-major in join order
+    let mut relays = Vec::with_capacity(relay_peers.len());
+    let mut level_base = Vec::with_capacity(shape.relay_levels.len()); // slot index of each level's first relay
+    let mut next = 0usize;
+    for (level, &count) in shape.relay_levels.iter().enumerate() {
+        level_base.push(next);
+        for idx in 0..count {
+            let upstream = match shape.relay_parent(level, idx) {
+                None => Upstream::Root,
+                Some(p) => Upstream::Peer(relay_peers[level_base[level - 1] + p]),
+            };
+            relays.push(Assignment {
+                peer: relay_peers[next],
+                upstream,
+                hop: level as u32 + 1,
+            });
+            next += 1;
+        }
+    }
+    for &spare in &relay_peers[next..] {
+        relays.push(Assignment { peer: spare, upstream: Upstream::Standby, hop: 0 });
+    }
+
+    let leaf_level_base = level_base.last().copied().unwrap_or(0);
+    let leaves = leaf_peers
+        .iter()
+        .enumerate()
+        .map(|(i, &peer)| match shape.leaf_parents.get(i) {
+            Some(&p) => Assignment {
+                peer,
+                upstream: Upstream::Peer(relay_peers[leaf_level_base + p]),
+                hop: shape.depth() as u32,
+            },
+            None => Assignment { peer, upstream: Upstream::Root, hop: 1 },
+        })
+        .collect();
+
+    TopologyPlan { epoch, shape, relays, leaves }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Smallest d ≥ 1 with cap^d ≥ leaves (the information-theoretic
+    /// depth floor for a cap-ary tree).
+    fn minimal_depth(leaves: usize, cap: usize) -> usize {
+        let mut d = 1usize;
+        let mut reach = cap;
+        while reach < leaves {
+            reach = reach.saturating_mul(cap);
+            d += 1;
+        }
+        d
+    }
+
+    #[test]
+    fn shape_property_coverage_cap_and_minimal_depth() {
+        // satellite: for ANY leaf count 1..=256 and cap 2..=8 the plan
+        // reaches every leaf exactly once, respects the cap at every
+        // hop, and uses minimal depth
+        crate::util::prop::check("fanout shape is covering, capped, minimal", 64, |g| {
+            let leaves = 1 + g.rng.below(256) as usize;
+            let cap = 2 + g.rng.below(7) as usize;
+            let s = plan_shape(leaves, cap);
+            assert_eq!(s.fanout_cap, cap);
+            assert_eq!(s.leaf_count, leaves);
+            // every leaf exactly once, parents in range
+            if s.relay_levels.is_empty() {
+                assert!(leaves <= cap, "flat shape must fit under the root");
+                assert!(s.leaf_parents.is_empty());
+                assert_eq!(s.max_fanout(), leaves, "flat fan-out is the root's");
+            } else {
+                assert_eq!(s.leaf_parents.len(), leaves);
+                let last = *s.relay_levels.last().unwrap();
+                assert!(s.leaf_parents.iter().all(|&p| p < last));
+            }
+            // cap respected at every hop (root, every relay)
+            assert!(
+                s.max_fanout() <= cap,
+                "fanout {} exceeds cap {} (leaves={}, levels={:?})",
+                s.max_fanout(),
+                cap,
+                leaves,
+                s.relay_levels
+            );
+            // minimal depth
+            assert_eq!(
+                s.depth(),
+                minimal_depth(leaves, cap),
+                "depth not minimal for leaves={} cap={}",
+                leaves,
+                cap
+            );
+        });
+    }
+
+    #[test]
+    fn forced_depth_pads_with_chain_levels() {
+        let s = plan_shape_with_depth(4, 2, 2);
+        assert_eq!(s.relay_levels, vec![1, 2]);
+        assert_eq!(s.depth(), 3);
+        assert!(s.max_fanout() <= 2);
+        // forcing depth on an already-deep shape changes nothing
+        let s = plan_shape_with_depth(100, 2, 2);
+        assert_eq!(s, plan_shape(100, 2));
+    }
+
+    #[test]
+    fn bind_assigns_slots_spares_and_leaf_parents() {
+        // 4 leaves, cap 2, forced 2 interior levels → shape [1, 2];
+        // 4 relays joined → 3 bound + 1 standby
+        let plan = bind(5, &[10, 11, 12, 13], &[20, 21, 22, 23], 2, 2);
+        assert_eq!(plan.epoch, 5);
+        assert_eq!(plan.depth(), 3);
+        assert_eq!(plan.relays.len(), 4);
+        assert_eq!(
+            plan.relays[0],
+            Assignment { peer: 10, upstream: Upstream::Root, hop: 1 }
+        );
+        assert_eq!(
+            plan.relays[1],
+            Assignment { peer: 11, upstream: Upstream::Peer(10), hop: 2 }
+        );
+        assert_eq!(
+            plan.relays[2],
+            Assignment { peer: 12, upstream: Upstream::Peer(10), hop: 2 }
+        );
+        assert_eq!(
+            plan.relays[3],
+            Assignment { peer: 13, upstream: Upstream::Standby, hop: 0 }
+        );
+        // leaves round-robin across the last level (peers 11, 12)
+        let parents: Vec<Upstream> = plan.leaves.iter().map(|a| a.upstream).collect();
+        assert_eq!(
+            parents,
+            vec![
+                Upstream::Peer(11),
+                Upstream::Peer(12),
+                Upstream::Peer(11),
+                Upstream::Peer(12)
+            ]
+        );
+        assert!(plan.leaves.iter().all(|a| a.hop == 3));
+        assert_eq!(plan.assignment_of(13).unwrap().upstream, Upstream::Standby);
+        assert_eq!(plan.assignment_of(99), None);
+    }
+
+    #[test]
+    fn bind_degrades_when_under_provisioned() {
+        // 4 leaves, cap 2 wants 2 last-level relays; only 1 joined →
+        // that relay carries all 4 (cap overflow beats no tree)
+        let plan = bind(1, &[7], &[1, 2, 3, 4], 2, 0);
+        assert_eq!(plan.shape.relay_levels, vec![1]);
+        assert!(plan.leaves.iter().all(|a| a.upstream == Upstream::Peer(7)));
+        // no relays at all → leaves on the root
+        let plan = bind(2, &[], &[1, 2, 3], 2, 1);
+        assert!(plan.relays.is_empty());
+        assert!(plan
+            .leaves
+            .iter()
+            .all(|a| a.upstream == Upstream::Root && a.hop == 1));
+        // forced depth is the first thing surrendered
+        let plan = bind(3, &[7, 8], &[1, 2, 3, 4], 2, 2);
+        assert_eq!(plan.shape.relay_levels, vec![2], "depth padding dropped first");
+        assert!(plan.relays.iter().all(|a| a.upstream == Upstream::Root));
+    }
+
+    #[test]
+    fn survivors_keep_slots_across_replans() {
+        // shape [2]: 10 and 11 active, 12 standby; leaves alternate
+        // parents 10, 11, 10, 11
+        let before = bind(1, &[10, 11, 12], &[20, 21, 22, 23], 2, 0);
+        assert_eq!(before.assignment_of(21).unwrap().upstream, Upstream::Peer(11));
+        // kill the SLOT-0 peer (10): the spare must fill the hole, so
+        // slot 1's occupant (11) — and therefore its leaves — stay put
+        let order = stable_relay_order(Some(&before), &[11, 12]);
+        assert_eq!(order, vec![12, 11], "spare fills the hole; slot 1 unmoved");
+        let after = bind(2, &order, &[20, 21, 22, 23], 2, 0);
+        assert_eq!(
+            after.assignment_of(21).unwrap().upstream,
+            Upstream::Peer(11),
+            "a non-orphan leaf must keep its parent"
+        );
+        assert_eq!(after.assignment_of(20).unwrap().upstream, Upstream::Peer(12));
+        // no previous plan → join order passes through
+        assert_eq!(stable_relay_order(None, &[5, 6]), vec![5, 6]);
+        // hole with no spare left: later slots shift (truly shrank)
+        assert_eq!(stable_relay_order(Some(&before), &[11]), vec![11]);
+        // a new joiner appends after the surviving slots
+        assert_eq!(
+            stable_relay_order(Some(&before), &[10, 11, 12, 13]),
+            vec![10, 11, 12, 13]
+        );
+    }
+}

@@ -1,0 +1,1213 @@
+//! Control plane for relay distribution trees: cluster membership,
+//! automatic fan-out planning, and live re-parenting.
+//!
+//! PR 4's mechanisms (relay chaining, NACK escalation, staged anchor +
+//! tail catch-up) made deep trees *work*; this module makes them
+//! *self-assembling and self-healing*. Peers never hard-wire an
+//! upstream address — they JOIN a [`ControlPlane`] over the existing
+//! `net::tcp` framing and are told where to attach:
+//!
+//! ```text
+//!   peer                         control plane
+//!    │ ── JOIN(role, port) ──────────▶ │  register, replan (epoch+1)
+//!    │ ◀─────────── EPOCH(e) ───────── │  fence: nothing older than e
+//!    │ ◀─ ASSIGN(e, id, upstream, hop) │  attach here
+//!    │ ── HEARTBEAT(id, e) ──────────▶ │  every interval
+//!    │        (silence × missed_heartbeats ⇒ dead ⇒ replan)
+//! ```
+//!
+//! * **Membership** — every peer (interior relay or leaf subscriber)
+//!   holds one TCP connection to the plane: JOINs register, heartbeats
+//!   prove liveness, a closed socket or
+//!   [`ControlConfig::missed_heartbeats`] silent intervals mark the
+//!   peer dead.
+//! * **Planning** — each membership change bumps the epoch and
+//!   recomputes a [`crate::coordinator::planner::TopologyPlan`]
+//!   (balanced k-ary tree from the *measured* leaf count, per-hop
+//!   fan-out cap, optional forced depth). The plan is pushed as ASSIGN
+//!   directives; peers that keep their upstream port don't rewire.
+//!   Extra relays park as standbys — live spares for the next failure.
+//! * **Re-parenting** — a [`ControlledNode`] wraps a detached-mode
+//!   [`RelayNode`]: on a new directive it re-attaches its upstream
+//!   *while its own subscribers stay connected*, receiving the new
+//!   parent's anchor + tail staging as a fresh subscriber and
+//!   republishing it downstream — the orphaned subtree catches up
+//!   without one leaf resubscribing. Leaves that do sit directly on a
+//!   failed relay use [`ControlSubscriberTransport`], which swaps its
+//!   inner [`RelayTransport`] subscription on re-parent and counts the
+//!   event (`TransportCounters::reparents`); the `Consumer`'s step
+//!   tracking makes the replayed catch-up idempotent, so no frame is
+//!   ever applied twice across an epoch boundary.
+//! * **Epoch fencing** — ASSIGN/EPOCH frames carry the epoch; a client
+//!   never applies a directive older than the newest epoch it has
+//!   seen, so a delayed directive from a superseded plan (or a plane
+//!   hiccup re-delivering one) cannot wire a demoted relay back into
+//!   the tree.
+//!
+//! Hand-wiring ([`RelayNode::join`], `RelayTransport::subscribe`)
+//! remains first-class for static single-host topologies; the control
+//! plane earns its keep once relays can die or the leaf count is only
+//! known at runtime. `tests/integration_control.rs` asserts the
+//! acceptance bar: a 3-level tree self-assembles from JOINs alone, and
+//! killing a mid-tree relay re-parents its subtree with every
+//! surviving leaf bit-identical to the object-store reference.
+
+use super::node::RelayNode;
+use super::relay;
+use super::tcp::{self, kind, Frame};
+use super::transport::{
+    FrameId, MarkerId, RelayTransport, StepData, SyncTransport, TransportCounters,
+};
+use crate::coordinator::planner::{self, TopologyPlan, Upstream};
+use crate::storage::retention::Inventory;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Peer roles carried in JOIN frames.
+pub mod role {
+    /// An interior relay: runs a [`super::RelayNode`], serves a
+    /// downstream port, can parent other peers.
+    pub const RELAY: u8 = 1;
+    /// A leaf subscriber: consumes the stream, parents nobody.
+    pub const LEAF: u8 = 2;
+}
+
+/// Default heartbeat cadence (clients) and the plane's default
+/// liveness bookkeeping derives from it.
+pub const DEFAULT_HEARTBEAT: Duration = Duration::from_millis(500);
+
+/// Control-plane tuning knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct ControlConfig {
+    /// Per-hop fan-out cap the planner balances under (≥ 2).
+    pub fanout_cap: usize,
+    /// Force at least this many interior relay levels (0 = minimal
+    /// depth; failover experiments force 3+ hop trees this way).
+    pub min_relay_levels: usize,
+    /// Expected peer heartbeat cadence. Clients must be constructed
+    /// with the same value (it is not negotiated on the wire).
+    pub heartbeat_interval: Duration,
+    /// Consecutive missed heartbeats before a peer is declared dead
+    /// and its subtree re-parented (≥ 1).
+    pub missed_heartbeats: u32,
+}
+
+impl Default for ControlConfig {
+    fn default() -> Self {
+        ControlConfig {
+            fanout_cap: 4,
+            min_relay_levels: 0,
+            heartbeat_interval: DEFAULT_HEARTBEAT,
+            missed_heartbeats: 3,
+        }
+    }
+}
+
+impl ControlConfig {
+    fn death_timeout(&self) -> Duration {
+        self.heartbeat_interval * self.missed_heartbeats.max(1)
+    }
+}
+
+// ========================================================= ControlPlane
+
+struct PeerEntry {
+    id: u64,
+    role: u8,
+    listen_port: u16,
+    /// Write half (ASSIGN/EPOCH pushes); the handler thread owns the
+    /// read half.
+    conn: TcpStream,
+    last_heartbeat: Instant,
+    alive: bool,
+}
+
+struct PlaneState {
+    peers: Vec<PeerEntry>,
+    epoch: u64,
+    root_port: u16,
+    next_id: u64,
+    plan: Option<TopologyPlan>,
+    replans: u64,
+    deaths: u64,
+}
+
+impl PlaneState {
+    /// Recompute the plan for the current live membership and push it
+    /// to every live peer (EPOCH fence first, then the peer's ASSIGN).
+    /// A peer whose control socket fails the push is dead: it is
+    /// counted and the plan recomputed immediately WITHOUT it, so
+    /// children the failed plan parented under it are re-homed in the
+    /// same call instead of stranding until the next membership event.
+    /// Terminates: every retry shrinks the live set by at least one.
+    fn replan(&mut self, cfg: &ControlConfig) {
+        while !self.replan_once(cfg) {}
+    }
+
+    /// One planning + push pass; false if a push failure killed a peer
+    /// (the plan is stale and must be recomputed).
+    fn replan_once(&mut self, cfg: &ControlConfig) -> bool {
+        self.epoch += 1;
+        self.replans += 1;
+        let relays: Vec<u64> = self
+            .peers
+            .iter()
+            .filter(|p| p.alive && p.role == role::RELAY)
+            .map(|p| p.id)
+            .collect();
+        let leaves: Vec<u64> = self
+            .peers
+            .iter()
+            .filter(|p| p.alive && p.role == role::LEAF)
+            .map(|p| p.id)
+            .collect();
+        // stable slots: survivors keep their place, spares fill dead
+        // peers' holes — so only the dead peer's own subtree rewires
+        let relays = planner::stable_relay_order(self.plan.as_ref(), &relays);
+        let plan =
+            planner::bind(self.epoch, &relays, &leaves, cfg.fanout_cap, cfg.min_relay_levels);
+        let port_of: HashMap<u64, u16> =
+            self.peers.iter().map(|p| (p.id, p.listen_port)).collect();
+        let root_port = self.root_port;
+        let epoch = self.epoch;
+        let mut push_deaths = 0u64;
+        for peer in self.peers.iter_mut().filter(|p| p.alive) {
+            let Some(a) = plan.assignment_of(peer.id) else { continue };
+            let upstream_port = match a.upstream {
+                Upstream::Root => root_port,
+                Upstream::Peer(id) => port_of.get(&id).copied().unwrap_or(0),
+                Upstream::Standby => 0,
+            };
+            let ok = tcp::write_frame(
+                &mut peer.conn,
+                &Frame { kind: kind::EPOCH, payload: tcp::epoch_payload(epoch) },
+            )
+            .and_then(|_| {
+                tcp::write_frame(
+                    &mut peer.conn,
+                    &Frame {
+                        kind: kind::ASSIGN,
+                        payload: tcp::assign_payload(epoch, peer.id, upstream_port, a.hop),
+                    },
+                )
+            })
+            .is_ok();
+            if !ok {
+                peer.alive = false;
+                push_deaths += 1;
+            }
+        }
+        self.plan = Some(plan);
+        self.deaths += push_deaths;
+        push_deaths == 0
+    }
+}
+
+/// The membership + planning service. One per distribution tree; holds
+/// the root relay's port (the publisher's own relay — the stream
+/// source, which never JOINs) and assigns every other peer its place.
+pub struct ControlPlane {
+    pub port: u16,
+    cfg: ControlConfig,
+    shared: Arc<Mutex<PlaneState>>,
+    stop: Arc<AtomicBool>,
+    accept: Mutex<Option<std::thread::JoinHandle<()>>>,
+    monitor: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl ControlPlane {
+    /// Start the plane on an ephemeral localhost port. `root_port` is
+    /// the root relay every epoch's tree hangs under.
+    pub fn start(root_port: u16, cfg: ControlConfig) -> Result<ControlPlane> {
+        let (listener, port) = tcp::listen_local()?;
+        listener.set_nonblocking(true)?;
+        let shared = Arc::new(Mutex::new(PlaneState {
+            peers: Vec::new(),
+            epoch: 0,
+            root_port,
+            next_id: 1,
+            plan: None,
+            replans: 0,
+            deaths: 0,
+        }));
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept = Mutex::new(Some(spawn_plane_accept(
+            listener,
+            shared.clone(),
+            cfg,
+            stop.clone(),
+        )));
+        let monitor = Mutex::new(Some(spawn_plane_monitor(shared.clone(), cfg, stop.clone())));
+        Ok(ControlPlane { port, cfg, shared, stop, accept, monitor })
+    }
+
+    /// Current topology epoch (0 until the first peer joins).
+    pub fn epoch(&self) -> u64 {
+        self.shared.lock().unwrap().epoch
+    }
+
+    /// Replans so far (joins, deaths, forced).
+    pub fn replans(&self) -> u64 {
+        self.shared.lock().unwrap().replans
+    }
+
+    /// Peers declared dead by heartbeat timeout so far.
+    pub fn deaths(&self) -> u64 {
+        self.shared.lock().unwrap().deaths
+    }
+
+    /// Live `(relays, leaves)` counts.
+    pub fn live_peers(&self) -> (usize, usize) {
+        let sh = self.shared.lock().unwrap();
+        let relays =
+            sh.peers.iter().filter(|p| p.alive && p.role == role::RELAY).count();
+        let leaves = sh.peers.iter().filter(|p| p.alive && p.role == role::LEAF).count();
+        (relays, leaves)
+    }
+
+    /// Snapshot of the current plan (None before the first JOIN).
+    pub fn plan(&self) -> Option<TopologyPlan> {
+        self.shared.lock().unwrap().plan.clone()
+    }
+
+    /// Root-to-leaf hop depth of the current plan.
+    pub fn depth(&self) -> Option<usize> {
+        self.plan().map(|p| p.depth())
+    }
+
+    /// Bump the epoch and push fresh ASSIGNs without a membership
+    /// change (operational escape hatch).
+    pub fn force_replan(&self) {
+        self.shared.lock().unwrap().replan(&self.cfg);
+    }
+
+    /// Stop the plane: no more joins, no more replans; peers keep
+    /// their last assignment (the data plane keeps flowing — the
+    /// control plane is not on the data path).
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.monitor.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        let sh = self.shared.lock().unwrap();
+        for p in &sh.peers {
+            let _ = p.conn.shutdown(Shutdown::Both);
+        }
+    }
+}
+
+impl Drop for ControlPlane {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn spawn_plane_accept(
+    listener: TcpListener,
+    shared: Arc<Mutex<PlaneState>>,
+    cfg: ControlConfig,
+    stop: Arc<AtomicBool>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || loop {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                stream.set_nodelay(true).ok();
+                let shared = shared.clone();
+                let stop = stop.clone();
+                // handler threads are detached: they exit when their
+                // socket dies, which ControlPlane::stop forces
+                std::thread::spawn(move || plane_handler(stream, shared, cfg, stop));
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => return,
+        }
+    })
+}
+
+/// Per-peer handler: reads the peer's side of the control connection.
+/// JOIN registers (and replans); HEARTBEAT refreshes liveness (and
+/// resurrects a peer the monitor gave up on — it re-enters the pool at
+/// the next replan); CLOSE or a dead socket marks the peer dead.
+fn plane_handler(
+    mut stream: TcpStream,
+    shared: Arc<Mutex<PlaneState>>,
+    cfg: ControlConfig,
+    stop: Arc<AtomicBool>,
+) {
+    // until a JOIN lands this connection is unregistered — stop()
+    // cannot find it to shut down, so a silent probe (port scan, LB
+    // health check) must time itself out instead of leaking a
+    // permanently-blocked thread
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+    let mut my_id: Option<u64> = None;
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let frame = match tcp::read_frame(&mut stream) {
+            Ok(f) => f,
+            Err(_) => break,
+        };
+        match frame.kind {
+            kind::JOIN => {
+                let Ok((peer_role, listen_port)) = tcp::parse_join(&frame.payload) else {
+                    break;
+                };
+                let Ok(conn) = stream.try_clone() else { break };
+                // replan() pushes directives while holding the plane
+                // mutex: a peer that stops draining its control socket
+                // must fail the write (and be marked dead) rather than
+                // block the whole plane — including failure detection —
+                // behind a full send buffer
+                let _ = conn.set_write_timeout(Some(Duration::from_secs(2)));
+                // registered peers block on reads indefinitely (their
+                // liveness is the heartbeat timeout, and stop() can now
+                // reach this socket through the peer table)
+                let _ = stream.set_read_timeout(None);
+                let mut sh = shared.lock().unwrap();
+                let id = sh.next_id;
+                sh.next_id += 1;
+                my_id = Some(id);
+                sh.peers.push(PeerEntry {
+                    id,
+                    role: peer_role,
+                    listen_port,
+                    conn,
+                    last_heartbeat: Instant::now(),
+                    alive: true,
+                });
+                sh.replan(&cfg);
+            }
+            kind::HEARTBEAT => {
+                if let Ok((id, _peer_epoch)) = tcp::parse_heartbeat(&frame.payload) {
+                    let mut sh = shared.lock().unwrap();
+                    let mut resurrected = false;
+                    if let Some(p) = sh.peers.iter_mut().find(|p| p.id == id) {
+                        p.last_heartbeat = Instant::now();
+                        resurrected = !p.alive;
+                        p.alive = true;
+                    }
+                    if resurrected {
+                        sh.replan(&cfg);
+                    }
+                }
+            }
+            kind::CLOSE => break,
+            _ => {}
+        }
+    }
+    // the peer's connection ended: it is gone (orderly or not). A
+    // plane being stopped tears these sockets down itself — honor
+    // stop()'s "no more replans" contract instead of replanning the
+    // teardown.
+    if stop.load(Ordering::SeqCst) {
+        return;
+    }
+    if let Some(id) = my_id {
+        let mut sh = shared.lock().unwrap();
+        if let Some(p) = sh.peers.iter_mut().find(|p| p.id == id) {
+            if p.alive {
+                p.alive = false;
+                sh.deaths += 1;
+                sh.replan(&cfg);
+            }
+        }
+    }
+}
+
+/// Failure detector: any live peer silent past the death timeout is
+/// declared dead and the tree replans around it in one sweep.
+fn spawn_plane_monitor(
+    shared: Arc<Mutex<PlaneState>>,
+    cfg: ControlConfig,
+    stop: Arc<AtomicBool>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        let tick = (cfg.heartbeat_interval / 2).max(Duration::from_millis(5));
+        let timeout = cfg.death_timeout();
+        loop {
+            if stop.load(Ordering::SeqCst) {
+                return;
+            }
+            std::thread::sleep(tick);
+            let mut sh = shared.lock().unwrap();
+            let now = Instant::now();
+            let mut died = 0u64;
+            for p in sh.peers.iter_mut().filter(|p| p.alive) {
+                if now.duration_since(p.last_heartbeat) > timeout {
+                    p.alive = false;
+                    died += 1;
+                }
+            }
+            if died > 0 {
+                sh.deaths += died;
+                sh.replan(&cfg);
+            }
+        }
+    })
+}
+
+// ======================================================== ControlClient
+
+#[derive(Default)]
+struct ClientState {
+    peer_id: Option<u64>,
+    /// Newest epoch seen (EPOCH fence or accepted ASSIGN).
+    epoch: u64,
+    /// Latest accepted directive: `(upstream_port, hop)`; port 0 =
+    /// standby. None until the first ASSIGN.
+    directive: Option<(u16, u32)>,
+    /// Bumps on every accepted ASSIGN (so the supervisor can tell a
+    /// re-push of the same port from no news).
+    directive_seq: u64,
+    closed: bool,
+}
+
+/// A peer's side of the control connection: JOIN handshake, directive
+/// intake with epoch fencing, heartbeat emission. Shared by
+/// [`ControlledNode`] (relays) and [`ControlSubscriberTransport`]
+/// (leaves).
+struct ControlClient {
+    conn: Arc<Mutex<TcpStream>>,
+    state: Arc<(Mutex<ClientState>, Condvar)>,
+    stop: Arc<AtomicBool>,
+    /// Fault injection: stop emitting heartbeats while keeping the
+    /// connection open — a hung process, as the detector sees it.
+    silenced: Arc<AtomicBool>,
+    reader: Mutex<Option<std::thread::JoinHandle<()>>>,
+    heart: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl ControlClient {
+    fn join(
+        ctl_port: u16,
+        peer_role: u8,
+        listen_port: u16,
+        heartbeat: Duration,
+    ) -> Result<ControlClient> {
+        let mut stream = tcp::connect_local(ctl_port).context("connecting control plane")?;
+        let rstream = stream.try_clone()?;
+        let state: Arc<(Mutex<ClientState>, Condvar)> = Arc::new(Default::default());
+        let stop = Arc::new(AtomicBool::new(false));
+        // reader first, so the JOIN's immediate ASSIGN cannot race it
+        let reader = spawn_client_reader(rstream, state.clone(), stop.clone());
+        tcp::write_frame(
+            &mut stream,
+            &Frame { kind: kind::JOIN, payload: tcp::join_payload(peer_role, listen_port) },
+        )
+        .context("sending JOIN")?;
+        let conn = Arc::new(Mutex::new(stream));
+        let silenced = Arc::new(AtomicBool::new(false));
+        let heart = spawn_client_heartbeat(
+            conn.clone(),
+            state.clone(),
+            stop.clone(),
+            silenced.clone(),
+            heartbeat,
+        );
+        Ok(ControlClient {
+            conn,
+            state,
+            stop,
+            silenced,
+            reader: Mutex::new(Some(reader)),
+            heart: Mutex::new(Some(heart)),
+        })
+    }
+
+    /// Fault injection: go silent (no more heartbeats) without closing
+    /// the control connection — the plane must discover the death by
+    /// timeout, not by socket teardown.
+    fn silence(&self) {
+        self.silenced.store(true, Ordering::SeqCst);
+    }
+
+    fn snapshot(&self) -> (u64, u64, Option<(u16, u32)>, Option<u64>) {
+        let st = self.state.0.lock().unwrap();
+        (st.epoch, st.directive_seq, st.directive, st.peer_id)
+    }
+
+    fn epoch(&self) -> u64 {
+        self.state.0.lock().unwrap().epoch
+    }
+
+    fn peer_id(&self) -> Option<u64> {
+        self.state.0.lock().unwrap().peer_id
+    }
+
+    /// Wait (bounded) for a directive newer than `seen_seq`; returns
+    /// the new `(seq, port, hop)` or None on timeout/closed plane.
+    fn wait_directive(&self, seen_seq: u64, timeout: Duration) -> Option<(u64, u16, u32)> {
+        let (lock, cv) = &*self.state;
+        let deadline = Instant::now() + timeout;
+        let mut st = lock.lock().unwrap();
+        loop {
+            if st.directive_seq > seen_seq {
+                let (port, hop) = st.directive.unwrap();
+                return Some((st.directive_seq, port, hop));
+            }
+            if st.closed {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            st = cv.wait_timeout(st, deadline - now).unwrap().0;
+        }
+    }
+
+    fn stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = self.conn.lock().unwrap().shutdown(Shutdown::Both);
+        if let Some(h) = self.reader.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.heart.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ControlClient {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Client reader: applies ASSIGN directives with the epoch fence —
+/// nothing older than the newest epoch seen (EPOCH or ASSIGN) is ever
+/// accepted, so a stale directive cannot wire a demoted peer back in.
+fn spawn_client_reader(
+    mut stream: TcpStream,
+    state: Arc<(Mutex<ClientState>, Condvar)>,
+    stop: Arc<AtomicBool>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || loop {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let (lock, cv) = &*state;
+        let frame = match tcp::read_frame(&mut stream) {
+            Ok(f) => f,
+            Err(_) => {
+                lock.lock().unwrap().closed = true;
+                cv.notify_all();
+                return;
+            }
+        };
+        match frame.kind {
+            kind::EPOCH => {
+                if let Ok(e) = tcp::parse_epoch(&frame.payload) {
+                    let mut st = lock.lock().unwrap();
+                    st.epoch = st.epoch.max(e);
+                }
+            }
+            kind::ASSIGN => {
+                if let Ok((epoch, id, port, hop)) = tcp::parse_assign(&frame.payload) {
+                    let mut st = lock.lock().unwrap();
+                    if epoch < st.epoch {
+                        continue; // fenced: a newer epoch superseded this
+                    }
+                    st.epoch = epoch;
+                    st.peer_id = Some(id);
+                    st.directive = Some((port, hop));
+                    st.directive_seq += 1;
+                    cv.notify_all();
+                }
+            }
+            kind::CLOSE => {
+                lock.lock().unwrap().closed = true;
+                cv.notify_all();
+                return;
+            }
+            _ => {}
+        }
+    })
+}
+
+fn spawn_client_heartbeat(
+    conn: Arc<Mutex<TcpStream>>,
+    state: Arc<(Mutex<ClientState>, Condvar)>,
+    stop: Arc<AtomicBool>,
+    silenced: Arc<AtomicBool>,
+    interval: Duration,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || loop {
+        // sliced sleep so stop() never waits out a long interval
+        let until = Instant::now() + interval;
+        while Instant::now() < until {
+            if stop.load(Ordering::SeqCst) {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(10).min(interval));
+        }
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        if silenced.load(Ordering::SeqCst) {
+            continue;
+        }
+        let (id, epoch) = {
+            let st = state.0.lock().unwrap();
+            if st.closed {
+                return;
+            }
+            (st.peer_id, st.epoch)
+        };
+        let Some(id) = id else { continue };
+        let mut c = conn.lock().unwrap();
+        if tcp::write_frame(
+            &mut c,
+            &Frame { kind: kind::HEARTBEAT, payload: tcp::heartbeat_payload(id, epoch) },
+        )
+        .is_err()
+        {
+            return;
+        }
+    })
+}
+
+// ======================================================= ControlledNode
+
+/// An interior relay under control-plane management: a detached-mode
+/// [`RelayNode`] whose upstream attachment follows ASSIGN directives.
+/// Its own downstream subscribers never notice a re-parent — they are
+/// served from the node's staging throughout, then receive the new
+/// parent's catch-up republish.
+pub struct ControlledNode {
+    node: Arc<RelayNode>,
+    client: Arc<ControlClient>,
+    reparents: Arc<AtomicU64>,
+    stop: Arc<AtomicBool>,
+    supervisor: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl ControlledNode {
+    /// Join the plane at `ctl_port` with default relay options and the
+    /// default heartbeat cadence.
+    pub fn join(ctl_port: u16) -> Result<ControlledNode> {
+        ControlledNode::join_with_opts(
+            ctl_port,
+            relay::DEFAULT_QUEUE_DEPTH,
+            relay::INDEX_STEPS,
+            DEFAULT_HEARTBEAT,
+        )
+    }
+
+    /// Join with explicit queue depth / NACK index bound for the
+    /// node's own relay, and an explicit heartbeat cadence (must match
+    /// the plane's [`ControlConfig::heartbeat_interval`]).
+    pub fn join_with_opts(
+        ctl_port: u16,
+        queue_depth: usize,
+        index_steps: usize,
+        heartbeat: Duration,
+    ) -> Result<ControlledNode> {
+        let node = Arc::new(RelayNode::detached_with_opts(queue_depth, index_steps)?);
+        let client =
+            Arc::new(ControlClient::join(ctl_port, role::RELAY, node.port(), heartbeat)?);
+        let reparents = Arc::new(AtomicU64::new(0));
+        let stop = Arc::new(AtomicBool::new(false));
+        let supervisor = Mutex::new(Some(spawn_node_supervisor(
+            node.clone(),
+            client.clone(),
+            reparents.clone(),
+            stop.clone(),
+        )));
+        Ok(ControlledNode { node, client, reparents, stop, supervisor })
+    }
+
+    /// Port downstream subscribers (or further nodes) connect to.
+    pub fn port(&self) -> u16 {
+        self.node.port()
+    }
+
+    /// The managed relay node (staging, counters, subscribers).
+    pub fn node(&self) -> &Arc<RelayNode> {
+        &self.node
+    }
+
+    /// Topology epoch last accepted from the plane.
+    pub fn epoch(&self) -> u64 {
+        self.client.epoch()
+    }
+
+    /// Plane-assigned peer id (None until the first ASSIGN arrives).
+    pub fn peer_id(&self) -> Option<u64> {
+        self.client.peer_id()
+    }
+
+    /// Upstream re-attachments beyond the first (failover/replan cost).
+    pub fn reparents(&self) -> u64 {
+        self.reparents.load(Ordering::Relaxed)
+    }
+
+    /// Hops between this node and the publisher under the current
+    /// attachment.
+    pub fn hop(&self) -> u32 {
+        self.node.hop()
+    }
+
+    /// Stop: leave the plane, detach upstream, stop the relay. The
+    /// closed control connection is an *orderly* leave — the plane
+    /// re-parents this node's subtree immediately, no timeout needed.
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.client.stop();
+        if let Some(h) = self.supervisor.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        self.node.stop();
+    }
+
+    /// Fault injection (failover tests and drills): crash the data
+    /// plane — relay, upstream, subscribers — and go silent on the
+    /// control plane while keeping the control socket OPEN. To the
+    /// failure detector this is a hung process: the death is only
+    /// discoverable by heartbeat timeout, which is exactly the path
+    /// being exercised.
+    pub fn fail_silently(&self) {
+        self.client.silence();
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.supervisor.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        self.node.stop();
+    }
+}
+
+impl Drop for ControlledNode {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+impl RelayNode {
+    /// Take the upstream from the control plane instead of a
+    /// hard-coded address: JOIN the plane at `ctl_port` as a relay and
+    /// follow its ASSIGN directives (initial attachment, standby, and
+    /// live re-parenting across epochs).
+    pub fn connect_via_control(ctl_port: u16) -> Result<ControlledNode> {
+        ControlledNode::join(ctl_port)
+    }
+}
+
+/// Node supervisor: applies directives to the underlying node. Rewires
+/// only when the upstream PORT changes (or the current upstream died),
+/// so an epoch bump that keeps a peer's parent costs nothing on the
+/// data plane. Connect failures retry on the next tick — the upstream
+/// named by a fresh plan may itself still be attaching.
+fn spawn_node_supervisor(
+    node: Arc<RelayNode>,
+    client: Arc<ControlClient>,
+    reparents: Arc<AtomicU64>,
+    stop: Arc<AtomicBool>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        let mut seen_seq = 0u64;
+        let mut applied_port: Option<u16> = None;
+        let mut ever_attached = false;
+        loop {
+            if stop.load(Ordering::SeqCst) {
+                return;
+            }
+            let (_, seq, directive, _) = client.snapshot();
+            seen_seq = seen_seq.max(seq);
+            match directive {
+                None | Some((0, _)) => {
+                    // standby (or nothing yet): hold no upstream
+                    if applied_port.is_some() {
+                        node.detach_upstream();
+                        applied_port = None;
+                    }
+                }
+                Some((port, hop)) => {
+                    // re-attach on a directive change or a DEAD socket;
+                    // an orderly CLOSE (upstream_closed without
+                    // upstream_failed) is the stream ending, not the
+                    // parent dying — never rewire around it
+                    let need = applied_port != Some(port)
+                        || (!node.upstream_attached())
+                        || node.upstream_failed();
+                    if need {
+                        if node.attach_upstream(port).is_ok() {
+                            if ever_attached {
+                                reparents.fetch_add(1, Ordering::Relaxed);
+                            }
+                            ever_attached = true;
+                            applied_port = Some(port);
+                        } else {
+                            applied_port = None; // retry next tick
+                        }
+                    }
+                    // the plan's hop is authoritative for a managed
+                    // node (the SUBSCRIBE→HOP handshake may have read
+                    // the parent before ITS hop settled); write only
+                    // on drift so steady state costs one read per tick
+                    if node.relay().hop() != hop {
+                        node.relay().set_hop(hop);
+                    }
+                }
+            }
+            // wake promptly on a new directive, re-check health often
+            client.wait_directive(seen_seq, Duration::from_millis(20));
+        }
+    })
+}
+
+// ============================================ ControlSubscriberTransport
+
+/// Leaf-side sync transport under control-plane management: delegates
+/// every consumer-side [`SyncTransport`] call to an inner
+/// [`RelayTransport`] subscription that the plane can move between
+/// relays. On re-parent the inner subscription is swapped for a fresh
+/// one against the new upstream; the replayed anchor + tail stages
+/// there and the `Consumer`'s step tracking skips everything already
+/// applied — zero duplicate frames across the epoch boundary.
+/// `counters()` reports the inner backend's traffic **since the last
+/// re-parent**, plus the cumulative `reparents` count and the current
+/// `epoch`.
+pub struct ControlSubscriberTransport {
+    client: Arc<ControlClient>,
+    inner: Arc<Mutex<Option<Arc<RelayTransport>>>>,
+    reparents: Arc<AtomicU64>,
+    stop: Arc<AtomicBool>,
+    supervisor: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl ControlSubscriberTransport {
+    /// JOIN the plane at `ctl_port` as a leaf with the default
+    /// heartbeat cadence; the first ASSIGN produces the first
+    /// subscription (consumer calls error with "no upstream assigned"
+    /// until then — poll [`Consumer::latest_ready`] as usual).
+    ///
+    /// [`Consumer::latest_ready`]: crate::pulse::sync::Consumer::latest_ready
+    pub fn join(ctl_port: u16) -> Result<ControlSubscriberTransport> {
+        ControlSubscriberTransport::join_with_heartbeat(ctl_port, DEFAULT_HEARTBEAT)
+    }
+
+    /// [`ControlSubscriberTransport::join`] with an explicit heartbeat
+    /// cadence (must match the plane's).
+    pub fn join_with_heartbeat(
+        ctl_port: u16,
+        heartbeat: Duration,
+    ) -> Result<ControlSubscriberTransport> {
+        let client = Arc::new(ControlClient::join(ctl_port, role::LEAF, 0, heartbeat)?);
+        let inner: Arc<Mutex<Option<Arc<RelayTransport>>>> = Arc::new(Mutex::new(None));
+        let reparents = Arc::new(AtomicU64::new(0));
+        let stop = Arc::new(AtomicBool::new(false));
+        let supervisor = Mutex::new(Some(spawn_leaf_supervisor(
+            inner.clone(),
+            client.clone(),
+            reparents.clone(),
+            stop.clone(),
+        )));
+        Ok(ControlSubscriberTransport { client, inner, reparents, stop, supervisor })
+    }
+
+    fn current(&self) -> Result<Arc<RelayTransport>> {
+        self.inner
+            .lock()
+            .unwrap()
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("no upstream assigned yet by the control plane"))
+    }
+
+    /// Topology epoch last accepted from the plane.
+    pub fn epoch(&self) -> u64 {
+        self.client.epoch()
+    }
+
+    /// Plane-assigned peer id (None until the first ASSIGN arrives).
+    pub fn peer_id(&self) -> Option<u64> {
+        self.client.peer_id()
+    }
+
+    /// Re-subscriptions beyond the first (failover/replan cost).
+    pub fn reparents(&self) -> u64 {
+        self.reparents.load(Ordering::Relaxed)
+    }
+
+    /// Relay hops between this leaf and the publisher under the
+    /// current subscription (None before the HOP reply lands).
+    pub fn hops(&self) -> Option<u32> {
+        self.inner.lock().unwrap().as_ref().and_then(|t| t.hops())
+    }
+}
+
+impl Drop for ControlSubscriberTransport {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.client.stop();
+        if let Some(h) = self.supervisor.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Leaf supervisor: (re)subscribes the inner transport per directive.
+/// The swap is an `Arc` replace — an in-flight fetch on the old
+/// subscription finishes (or errors) on the old value and the next
+/// call lands on the new one.
+fn spawn_leaf_supervisor(
+    inner: Arc<Mutex<Option<Arc<RelayTransport>>>>,
+    client: Arc<ControlClient>,
+    reparents: Arc<AtomicU64>,
+    stop: Arc<AtomicBool>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        let mut seen_seq = 0u64;
+        let mut applied_port: Option<u16> = None;
+        loop {
+            if stop.load(Ordering::SeqCst) {
+                return;
+            }
+            let (_, seq, directive, _) = client.snapshot();
+            seen_seq = seen_seq.max(seq);
+            match directive {
+                None | Some((0, _)) => {
+                    if applied_port.is_some() {
+                        *inner.lock().unwrap() = None;
+                        applied_port = None;
+                    }
+                }
+                Some((port, hop)) => {
+                    let _ = hop; // leaves learn depth from the HOP reply
+                    // re-subscribe on a directive change or a DEAD
+                    // socket; an orderly CLOSE is the stream ending —
+                    // resubscribing would flip stream_closed back to
+                    // false and undo end-of-stream for the consumer
+                    let dead = inner
+                        .lock()
+                        .unwrap()
+                        .as_ref()
+                        .is_some_and(|t| t.stream_failed());
+                    if applied_port != Some(port) || dead {
+                        if let Ok(t) = RelayTransport::subscribe(port) {
+                            let had_previous = {
+                                let mut cur = inner.lock().unwrap();
+                                let had = cur.is_some();
+                                *cur = Some(Arc::new(t));
+                                had
+                            };
+                            if had_previous {
+                                reparents.fetch_add(1, Ordering::Relaxed);
+                            }
+                            applied_port = Some(port);
+                        } else {
+                            applied_port = None; // retry next tick
+                        }
+                    }
+                }
+            }
+            client.wait_directive(seen_seq, Duration::from_millis(20));
+        }
+    })
+}
+
+impl SyncTransport for ControlSubscriberTransport {
+    fn name(&self) -> &'static str {
+        "control-relay"
+    }
+
+    fn publish_frame(&self, _id: FrameId, _bytes: &[u8]) -> Result<()> {
+        bail!("control-plane leaf transport is consumer-side only")
+    }
+
+    fn publish_marker(&self, _id: MarkerId, _payload: &str) -> Result<()> {
+        bail!("control-plane leaf transport is consumer-side only")
+    }
+
+    fn latest_ready(&self) -> Result<Inventory> {
+        self.current()?.latest_ready()
+    }
+
+    fn fetch_step(&self, step: u64) -> Result<Option<StepData>> {
+        self.current()?.fetch_step(step)
+    }
+
+    fn fetch_shard(&self, step: u64, shard: u32) -> Result<Vec<u8>> {
+        self.current()?.fetch_shard(step, shard)
+    }
+
+    fn fetch_anchor(&self, step: u64) -> Result<(Vec<u8>, String)> {
+        self.current()?.fetch_anchor(step)
+    }
+
+    fn counters(&self) -> TransportCounters {
+        let mut c = match self.current() {
+            Ok(t) => t.counters(),
+            Err(_) => TransportCounters::default(),
+        };
+        c.reparents = self.reparents.load(Ordering::Relaxed);
+        c.epoch = self.client.epoch();
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Drive the raw JOIN/EPOCH/ASSIGN protocol with hand-held sockets:
+    /// a relay peer joins (standby while no leaves exist), then a leaf
+    /// joins and the replan wires leaf → relay → root.
+    #[test]
+    fn join_assign_protocol_roundtrip() {
+        let cfg = ControlConfig {
+            fanout_cap: 2,
+            min_relay_levels: 1,
+            heartbeat_interval: Duration::from_millis(50),
+            missed_heartbeats: 100, // liveness not under test here
+        };
+        let plane = ControlPlane::start(4242, cfg).unwrap();
+        let mut relay_conn = tcp::connect_local(plane.port).unwrap();
+        tcp::write_frame(
+            &mut relay_conn,
+            &Frame { kind: kind::JOIN, payload: tcp::join_payload(role::RELAY, 7777) },
+        )
+        .unwrap();
+        // epoch 1: no leaves yet → the relay parks as standby
+        let f = tcp::read_frame(&mut relay_conn).unwrap();
+        assert_eq!((f.kind, tcp::parse_epoch(&f.payload).unwrap()), (kind::EPOCH, 1));
+        let f = tcp::read_frame(&mut relay_conn).unwrap();
+        assert_eq!(f.kind, kind::ASSIGN);
+        let (epoch, relay_id, port, _hop) = tcp::parse_assign(&f.payload).unwrap();
+        assert_eq!((epoch, port), (1, 0), "no leaves → standby");
+        // a leaf joins → epoch 2 wires leaf under the relay, relay
+        // under the root (min_relay_levels = 1 forces the tier)
+        let mut leaf_conn = tcp::connect_local(plane.port).unwrap();
+        tcp::write_frame(
+            &mut leaf_conn,
+            &Frame { kind: kind::JOIN, payload: tcp::join_payload(role::LEAF, 0) },
+        )
+        .unwrap();
+        let f = tcp::read_frame(&mut leaf_conn).unwrap();
+        assert_eq!((f.kind, tcp::parse_epoch(&f.payload).unwrap()), (kind::EPOCH, 2));
+        let f = tcp::read_frame(&mut leaf_conn).unwrap();
+        let (epoch, leaf_id, port, hop) = tcp::parse_assign(&f.payload).unwrap();
+        assert_eq!((epoch, port, hop), (2, 7777, 2), "leaf attaches under the relay");
+        assert_ne!(leaf_id, relay_id);
+        // the relay's epoch-2 directive: upstream = the root port
+        let f = tcp::read_frame(&mut relay_conn).unwrap();
+        assert_eq!(f.kind, kind::EPOCH);
+        let f = tcp::read_frame(&mut relay_conn).unwrap();
+        let (epoch, id, port, hop) = tcp::parse_assign(&f.payload).unwrap();
+        assert_eq!((epoch, id, port, hop), (2, relay_id, 4242, 1));
+        assert_eq!(plane.depth(), Some(2));
+        assert_eq!(plane.live_peers(), (1, 1));
+        plane.stop();
+    }
+
+    /// The epoch fence: a directive older than the newest epoch seen
+    /// is ignored, whether the fence came from an EPOCH frame or a
+    /// newer ASSIGN.
+    #[test]
+    fn client_fences_stale_epochs() {
+        let (listener, port) = tcp::listen_local().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let join = tcp::read_frame(&mut s).unwrap();
+            assert_eq!(join.kind, kind::JOIN);
+            assert_eq!(tcp::parse_join(&join.payload).unwrap(), (role::RELAY, 9999));
+            let assign = |epoch, port, hop| Frame {
+                kind: kind::ASSIGN,
+                payload: tcp::assign_payload(epoch, 1, port, hop),
+            };
+            // epoch 5 accepted; epoch 3 must be fenced
+            tcp::write_frame(&mut s, &assign(5, 1000, 1)).unwrap();
+            tcp::write_frame(&mut s, &assign(3, 2000, 9)).unwrap();
+            // EPOCH 7 fences the following epoch-6 ASSIGN too
+            tcp::write_frame(
+                &mut s,
+                &Frame { kind: kind::EPOCH, payload: tcp::epoch_payload(7) },
+            )
+            .unwrap();
+            tcp::write_frame(&mut s, &assign(6, 3000, 9)).unwrap();
+            tcp::write_frame(&mut s, &assign(8, 4000, 2)).unwrap();
+            s // keep the socket open until the client is done
+        });
+        let client = ControlClient::join(
+            port,
+            role::RELAY,
+            9999,
+            Duration::from_secs(60), // no heartbeats during the test
+        )
+        .unwrap();
+        // first directive: epoch 5
+        let (seq, port5, hop) = client.wait_directive(0, Duration::from_secs(10)).unwrap();
+        assert_eq!((port5, hop), (1000, 1));
+        // the next ACCEPTED directive must be epoch 8's — epochs 3 and
+        // 6 were fenced and never surface
+        let (_, port8, hop) = client.wait_directive(seq, Duration::from_secs(10)).unwrap();
+        assert_eq!((port8, hop), (4000, 2));
+        assert_eq!(client.epoch(), 8);
+        assert_eq!(client.peer_id(), Some(1));
+        let _s = server.join().unwrap();
+        client.stop();
+    }
+
+    /// Heartbeat silence kills a peer and the plan replans without it;
+    /// a later heartbeat resurrects it into the next epoch.
+    #[test]
+    fn heartbeat_timeout_marks_dead_and_resurrects() {
+        let cfg = ControlConfig {
+            fanout_cap: 2,
+            min_relay_levels: 0,
+            heartbeat_interval: Duration::from_millis(20),
+            missed_heartbeats: 3,
+        };
+        let plane = ControlPlane::start(1, cfg).unwrap();
+        // a raw relay peer that never heartbeats
+        let mut conn = tcp::connect_local(plane.port).unwrap();
+        tcp::write_frame(
+            &mut conn,
+            &Frame { kind: kind::JOIN, payload: tcp::join_payload(role::RELAY, 5555) },
+        )
+        .unwrap();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while plane.deaths() == 0 {
+            assert!(Instant::now() < deadline, "silent peer never declared dead");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(plane.live_peers(), (0, 0));
+        let epoch_after_death = plane.epoch();
+        // read our id from the initial ASSIGN, then resurrect
+        let mut id = None;
+        loop {
+            let f = tcp::read_frame(&mut conn).unwrap();
+            if f.kind == kind::ASSIGN {
+                id = Some(tcp::parse_assign(&f.payload).unwrap().1);
+                break;
+            }
+        }
+        tcp::write_frame(
+            &mut conn,
+            &Frame {
+                kind: kind::HEARTBEAT,
+                payload: tcp::heartbeat_payload(id.unwrap(), epoch_after_death),
+            },
+        )
+        .unwrap();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while plane.live_peers() != (1, 0) {
+            assert!(Instant::now() < deadline, "peer never resurrected");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(plane.epoch() > epoch_after_death, "resurrection must bump the epoch");
+        plane.stop();
+    }
+}

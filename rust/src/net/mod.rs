@@ -5,8 +5,12 @@
 //! and the [`transport`] module — the `SyncTransport` trait that runs
 //! the whole PULSESync plane over the object store, the relay (star or
 //! chained), an in-proc staging map, or fault-injected wrappers of any
-//! of them.
+//! of them. The [`control`] module adds the operational layer: cluster
+//! membership (JOIN/HEARTBEAT), automatic fan-out planning from the
+//! measured leaf count ([`crate::coordinator::planner`]), and live
+//! re-parenting of relay subtrees when a hop dies.
 
+pub mod control;
 pub mod node;
 pub mod relay;
 pub mod tcp;

@@ -34,9 +34,28 @@
 //! suite (`tests/integration_chain.rs`) drive the same seeded stream
 //! through chained topologies and assert it.
 //!
+//! # Attachment lifecycle (live re-parenting)
+//!
+//! The upstream subscription is **detachable**: a node built with
+//! [`RelayNode::detached`] starts with no upstream, and
+//! [`RelayNode::attach_upstream`] / [`RelayNode::detach_upstream`]
+//! move it between parents *while its own subscribers stay connected*.
+//! This is the mechanism the control plane
+//! ([`crate::net::control`]) drives for failover: when a mid-tree
+//! relay dies, its children re-attach to the surviving parent the next
+//! epoch's ASSIGN names, pick up that hop's anchor + tail catch-up
+//! preload as a fresh subscriber, and republish it downstream — the
+//! subtree heals without a single leaf reconnecting. Hand-wired nodes
+//! ([`RelayNode::join`]) keep the legacy behavior of forwarding a
+//! CLOSE downstream when the upstream dies; detached-mode nodes hold
+//! their subtree open instead (the control plane owns the failure
+//! response). A detach fails all in-flight NACK escalations with
+//! NACK_MISS ([`Relay::fail_all_escalated`]) so no subscriber waits on
+//! a retransmit that can no longer arrive.
+//!
 //! # Topology bookkeeping
 //!
-//! On join, the node sends a SUBSCRIBE upstream and learns its hop
+//! On attach, the node sends a SUBSCRIBE upstream and learns its hop
 //! depth from the HOP reply (root = 0, so a node directly under the
 //! root reports 1). The depth is re-served to downstream SUBSCRIBEs,
 //! so every peer in the tree knows its distance from the publisher —
@@ -46,21 +65,37 @@ use super::relay::Relay;
 use super::tcp::{self, kind, Frame};
 use anyhow::{Context, Result};
 use std::net::{Shutdown, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// One interior hop of a relay tree: an upstream subscription feeding
-/// a downstream [`Relay`]. Construct with [`RelayNode::join`]; point
-/// subscribers (or further nodes) at [`RelayNode::port`].
+/// a downstream [`Relay`]. Construct with [`RelayNode::join`]
+/// (hand-wired upstream) or [`RelayNode::detached`] (upstream managed
+/// later, e.g. by the control plane); point subscribers (or further
+/// nodes) at [`RelayNode::port`].
 pub struct RelayNode {
     relay: Arc<Relay>,
-    /// Write half of the upstream connection (NACK escalation + the
-    /// SUBSCRIBE handshake); the forward thread owns the read half.
-    upstream: Arc<Mutex<TcpStream>>,
+    /// Write half of the current upstream connection (NACK escalation
+    /// + the SUBSCRIBE handshake); the forward thread owns the read
+    /// half. `None` while detached.
+    upstream: Arc<Mutex<Option<TcpStream>>>,
     forward: Mutex<Option<std::thread::JoinHandle<()>>>,
     stop: Arc<AtomicBool>,
-    /// True once the upstream stream ended (CLOSE or socket error).
+    /// Bumped on every detach; a forward thread whose generation is
+    /// stale exits silently instead of reporting upstream loss.
+    attach_gen: Arc<AtomicU64>,
+    /// True once the CURRENT attachment's stream ended (CLOSE or
+    /// socket error); reset by the next attach.
     upstream_closed: Arc<AtomicBool>,
+    /// True only when the current attachment ended in a SOCKET ERROR —
+    /// an orderly publisher CLOSE does not set it. This is the signal
+    /// the control plane re-attaches on; treating an orderly
+    /// end-of-stream as a failure would resubscribe forever.
+    upstream_failed: Arc<AtomicBool>,
+    /// Hand-wired nodes end their downstream stream (publish CLOSE)
+    /// when the upstream dies; control-managed nodes hold the subtree
+    /// open and wait to be re-parented.
+    close_on_upstream_loss: bool,
 }
 
 impl RelayNode {
@@ -81,48 +116,119 @@ impl RelayNode {
         queue_depth: usize,
         index_steps: usize,
     ) -> Result<RelayNode> {
+        let node = RelayNode::new(queue_depth, index_steps, true)?;
+        node.attach_upstream(upstream_port)?;
+        Ok(node)
+    }
+
+    /// A node with no upstream yet: its relay accepts subscribers and
+    /// serves whatever it has staged, but nothing flows until
+    /// [`RelayNode::attach_upstream`]. Upstream loss does NOT end the
+    /// downstream stream — the caller (the control plane) decides.
+    pub fn detached() -> Result<RelayNode> {
+        RelayNode::detached_with_opts(
+            super::relay::DEFAULT_QUEUE_DEPTH,
+            super::relay::INDEX_STEPS,
+        )
+    }
+
+    /// [`RelayNode::detached`] with explicit queue depth and NACK
+    /// frame-index bound.
+    pub fn detached_with_opts(queue_depth: usize, index_steps: usize) -> Result<RelayNode> {
+        RelayNode::new(queue_depth, index_steps, false)
+    }
+
+    fn new(
+        queue_depth: usize,
+        index_steps: usize,
+        close_on_upstream_loss: bool,
+    ) -> Result<RelayNode> {
         let relay = Arc::new(Relay::start_with_opts(queue_depth, index_steps)?);
-        let up = tcp::connect_local(upstream_port).context("connecting upstream")?;
-        let up_read = up.try_clone()?;
-        let upstream = Arc::new(Mutex::new(up));
-        // topology handshake: ask the upstream for its hop depth
-        {
-            let mut conn = upstream.lock().unwrap();
-            tcp::write_frame(
-                &mut conn,
-                &Frame { kind: kind::SUBSCRIBE, payload: 0u64.to_le_bytes().to_vec() },
-            )
-            .context("subscribing upstream")?;
-        }
+        let upstream: Arc<Mutex<Option<TcpStream>>> = Arc::new(Mutex::new(None));
         // escalation: a downstream NACK the node's index has evicted is
-        // forwarded up this same connection; the reply (retransmit or
-        // NACK_MISS) comes back on the forward thread
+        // forwarded up the CURRENT upstream connection; the reply
+        // (retransmit or NACK_MISS) comes back on the forward thread.
+        // Installed once — re-attaching swaps the stream under the Arc.
         {
             let upstream = upstream.clone();
             relay.set_escalation(move |step, shard| {
                 let mut conn = upstream.lock().unwrap();
-                tcp::write_frame(
-                    &mut conn,
-                    &Frame { kind: kind::NACK, payload: tcp::shard_ack_payload(step, shard) },
-                )
-                .is_ok()
+                match conn.as_mut() {
+                    Some(conn) => tcp::write_frame(
+                        conn,
+                        &Frame { kind: kind::NACK, payload: tcp::shard_ack_payload(step, shard) },
+                    )
+                    .is_ok(),
+                    None => false,
+                }
             });
         }
-        let stop = Arc::new(AtomicBool::new(false));
-        let upstream_closed = Arc::new(AtomicBool::new(false));
-        let forward = spawn_forward(
-            up_read,
-            relay.clone(),
-            stop.clone(),
-            upstream_closed.clone(),
-        );
         Ok(RelayNode {
             relay,
             upstream,
-            forward: Mutex::new(Some(forward)),
-            stop,
-            upstream_closed,
+            forward: Mutex::new(None),
+            stop: Arc::new(AtomicBool::new(false)),
+            attach_gen: Arc::new(AtomicU64::new(0)),
+            upstream_closed: Arc::new(AtomicBool::new(false)),
+            upstream_failed: Arc::new(AtomicBool::new(false)),
+            close_on_upstream_loss,
         })
+    }
+
+    /// Attach (or re-attach) the node under the relay/node listening on
+    /// `upstream_port`: connect, run the SUBSCRIBE→HOP handshake, and
+    /// start forwarding. An existing attachment is detached first, so
+    /// this is the one call the control plane needs for re-parenting.
+    /// As a fresh subscriber the node receives the new parent's anchor
+    /// + tail catch-up preload and republishes it downstream — that IS
+    /// the subtree's failover catch-up.
+    pub fn attach_upstream(&self, upstream_port: u16) -> Result<()> {
+        self.detach_upstream();
+        let mut up = tcp::connect_local(upstream_port).context("connecting upstream")?;
+        tcp::write_frame(
+            &mut up,
+            &Frame { kind: kind::SUBSCRIBE, payload: 0u64.to_le_bytes().to_vec() },
+        )
+        .context("subscribing upstream")?;
+        let up_read = up.try_clone()?;
+        self.upstream_closed.store(false, Ordering::SeqCst);
+        self.upstream_failed.store(false, Ordering::SeqCst);
+        *self.upstream.lock().unwrap() = Some(up);
+        let gen = self.attach_gen.load(Ordering::SeqCst);
+        let handle = spawn_forward(
+            up_read,
+            self.relay.clone(),
+            self.stop.clone(),
+            self.attach_gen.clone(),
+            gen,
+            self.upstream_closed.clone(),
+            self.upstream_failed.clone(),
+            self.close_on_upstream_loss,
+        );
+        *self.forward.lock().unwrap() = Some(handle);
+        Ok(())
+    }
+
+    /// Detach from the current upstream (idempotent): stop the forward
+    /// thread, close the connection, and fail all in-flight NACK
+    /// escalations with NACK_MISS (their retransmits can no longer
+    /// arrive here). Downstream subscribers stay connected and keep
+    /// being served from the node's staging.
+    pub fn detach_upstream(&self) {
+        self.attach_gen.fetch_add(1, Ordering::SeqCst);
+        if let Some(conn) = self.upstream.lock().unwrap().take() {
+            let _ = conn.shutdown(Shutdown::Both);
+        }
+        if let Some(h) = self.forward.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        self.relay.fail_all_escalated();
+    }
+
+    /// True while an upstream connection is attached (it may still be
+    /// closed-but-unreaped; see [`RelayNode::upstream_closed`]).
+    pub fn upstream_attached(&self) -> bool {
+        self.upstream.lock().unwrap().is_some()
     }
 
     /// Port downstream subscribers (or further nodes) connect to.
@@ -141,10 +247,19 @@ impl RelayNode {
         self.relay.hop()
     }
 
-    /// True once the upstream stream ended (CLOSE or socket error).
-    /// The CLOSE was republished downstream before this flips.
+    /// True once the current attachment's stream ended (CLOSE or
+    /// socket error); reset by the next [`RelayNode::attach_upstream`].
+    /// For hand-wired nodes the CLOSE was republished downstream
+    /// before this flips; detached-mode nodes hold the subtree open.
     pub fn upstream_closed(&self) -> bool {
         self.upstream_closed.load(Ordering::SeqCst)
+    }
+
+    /// True only when the current attachment died on a socket error
+    /// (the re-attach signal); an orderly publisher CLOSE leaves this
+    /// false. Reset by the next [`RelayNode::attach_upstream`].
+    pub fn upstream_failed(&self) -> bool {
+        self.upstream_failed.load(Ordering::SeqCst)
     }
 
     /// Stop the node: detach from the upstream, then stop the
@@ -153,10 +268,7 @@ impl RelayNode {
     /// `Arc<RelayNode>` shared with workers can still be stopped.
     pub fn stop(&self) {
         self.stop.store(true, Ordering::SeqCst);
-        let _ = self.upstream.lock().unwrap().shutdown(Shutdown::Both);
-        if let Some(h) = self.forward.lock().unwrap().take() {
-            let _ = h.join();
-        }
+        self.detach_upstream();
         self.relay.stop();
     }
 }
@@ -164,32 +276,52 @@ impl RelayNode {
 /// Forward thread: reads the upstream stream and republishes it
 /// downstream. PATCH frames for slots the node escalated are consumed
 /// as retransmits (delivered to the waiting subscribers only, never
-/// rebroadcast); everything else is ordinary stream traffic.
+/// rebroadcast); everything else is ordinary stream traffic. A thread
+/// whose attachment generation went stale (the node re-parented) exits
+/// without touching the downstream stream.
+#[allow(clippy::too_many_arguments)]
 fn spawn_forward(
     mut stream: TcpStream,
     relay: Arc<Relay>,
     stop: Arc<AtomicBool>,
+    attach_gen: Arc<AtomicU64>,
+    gen: u64,
     upstream_closed: Arc<AtomicBool>,
+    upstream_failed: Arc<AtomicBool>,
+    close_on_upstream_loss: bool,
 ) -> std::thread::JoinHandle<()> {
     std::thread::spawn(move || {
         let mut forwarded_close = false;
+        let stale = |current: &Arc<AtomicU64>| current.load(Ordering::SeqCst) != gen;
         loop {
-            if stop.load(Ordering::SeqCst) {
+            if stop.load(Ordering::SeqCst) || stale(&attach_gen) {
                 return;
             }
             let frame = match tcp::read_frame(&mut stream) {
                 Ok(f) => f,
                 Err(_) => {
-                    // upstream died: end the downstream stream so leaf
-                    // consumers stop waiting (they resync when a new
-                    // tree is built)
-                    if !forwarded_close {
+                    // a detach shut this socket down on purpose: say
+                    // nothing. A genuine upstream death either ends
+                    // the downstream stream (hand-wired trees) or is
+                    // left for the control plane to re-parent around.
+                    if stale(&attach_gen) {
+                        return;
+                    }
+                    if close_on_upstream_loss && !forwarded_close {
                         relay.publish(Frame { kind: kind::CLOSE, payload: Vec::new() });
                     }
+                    upstream_failed.store(true, Ordering::SeqCst);
                     upstream_closed.store(true, Ordering::SeqCst);
                     return;
                 }
             };
+            // a frame that was already in flight when a detach bumped
+            // the generation belongs to the OLD attachment: it must
+            // never reach the downstream stream (a stale CLOSE would
+            // end the re-parented subtree for good)
+            if stale(&attach_gen) {
+                return;
+            }
             match frame.kind {
                 kind::PATCH => {
                     // an escalated-NACK retransmit is addressed to the
@@ -205,6 +337,9 @@ fn spawn_forward(
                 }
                 kind::ANCHOR | kind::MARKER => relay.publish(frame),
                 kind::CLOSE => {
+                    // an orderly end-of-stream from the publisher: NOT
+                    // a failure — the control plane must not re-parent
+                    // around it (upstream_failed stays false)
                     relay.publish(frame);
                     forwarded_close = true;
                     upstream_closed.store(true, Ordering::SeqCst);
@@ -230,9 +365,8 @@ fn spawn_forward(
 impl Drop for RelayNode {
     fn drop(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        let _ = self.upstream.lock().unwrap().shutdown(Shutdown::Both);
-        if let Some(h) = self.forward.lock().unwrap().take() {
-            let _ = h.join();
-        }
+        // full detach (not just socket teardown): waiting subscribers
+        // get their NACK_MISS instead of burning the NACK timeout
+        self.detach_upstream();
     }
 }

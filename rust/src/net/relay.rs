@@ -117,11 +117,20 @@ fn push_direct(chan: &Chan, frame: Arc<Frame>) {
 /// Count and answer one unserviceable NACK with a NACK_MISS reply to
 /// exactly the requesting subscriber.
 fn reply_miss(sh: &mut Shared, chan: &Chan, step: u64, shard: u32) {
-    sh.nacks_unserviceable += 1;
-    push_direct(
-        chan,
-        Arc::new(Frame { kind: kind::NACK_MISS, payload: tcp::shard_ack_payload(step, shard) }),
-    );
+    miss_waiters(sh, step, shard, std::slice::from_ref(chan));
+}
+
+/// Fail one escalated `(step, shard)` slot: count every waiter and
+/// push it a NACK_MISS so it degrades to the anchor slow path now
+/// instead of waiting out its NACK timeout. Caller holds the lock on
+/// `sh`.
+fn miss_waiters(sh: &mut Shared, step: u64, shard: u32, chans: &[Chan]) {
+    sh.nacks_unserviceable += chans.len() as u64;
+    let miss =
+        Arc::new(Frame { kind: kind::NACK_MISS, payload: tcp::shard_ack_payload(step, shard) });
+    for chan in chans {
+        push_direct(chan, miss.clone());
+    }
 }
 
 struct SubHandle {
@@ -421,14 +430,21 @@ impl Relay {
     pub fn fail_escalated(&self, step: u64, shard: u32) {
         let mut sh = self.shared.lock().unwrap();
         if let Some(chans) = sh.pending_upstream.remove(&(step, shard)) {
-            sh.nacks_unserviceable += chans.len() as u64;
-            let miss = Arc::new(Frame {
-                kind: kind::NACK_MISS,
-                payload: tcp::shard_ack_payload(step, shard),
-            });
-            for chan in &chans {
-                push_direct(chan, miss.clone());
-            }
+            miss_waiters(&mut sh, step, shard, &chans);
+        }
+    }
+
+    /// Fail EVERY escalated slot with NACK_MISS: called when the
+    /// upstream connection is torn down (re-parenting, orderly
+    /// detach), because the retransmits those escalations were waiting
+    /// for can no longer arrive on it. The waiting subscribers degrade
+    /// to the anchor slow path immediately instead of burning their
+    /// NACK timeouts across the failover.
+    pub fn fail_all_escalated(&self) {
+        let mut sh = self.shared.lock().unwrap();
+        let pending = std::mem::take(&mut sh.pending_upstream);
+        for ((step, shard), chans) in pending {
+            miss_waiters(&mut sh, step, shard, &chans);
         }
     }
 

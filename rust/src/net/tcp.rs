@@ -53,6 +53,26 @@ pub mod kind {
     /// between this peer and the publisher, …). Lets chained
     /// relays/workers report their depth in the distribution tree.
     pub const HOP: u8 = 9;
+    /// Peer → control plane: join the cluster (payload = role u8 ++
+    /// listen port u16 LE; port 0 for leaves — see
+    /// [`crate::net::control`] and [`super::join_payload`]).
+    pub const JOIN: u8 = 10;
+    /// Control plane → peer: topology directive (payload = epoch u64
+    /// ++ peer id u64 ++ upstream port u16 ++ hop u32, all LE; see
+    /// [`super::assign_payload`]). Upstream port 0 = standby (detach
+    /// and wait). A peer ignores an ASSIGN whose epoch is older than
+    /// the newest it has seen — the epoch fence.
+    pub const ASSIGN: u8 = 11;
+    /// Peer → control plane: liveness beacon (payload = peer id u64 ++
+    /// epoch u64 LE). Missing several consecutive beacons (see
+    /// `ControlConfig::missed_heartbeats`) marks the peer dead and
+    /// triggers a replan.
+    pub const HEARTBEAT: u8 = 12;
+    /// Control plane → peers: epoch fence announcement (payload =
+    /// epoch u64 LE), broadcast before the new epoch's ASSIGNs so a
+    /// stale directive from an older epoch can never be applied after
+    /// a newer one was seen.
+    pub const EPOCH: u8 = 13;
 }
 
 /// Payload for an ACK/NACK addressing one shard of a step.
@@ -87,6 +107,83 @@ pub fn parse_hop(payload: &[u8]) -> Result<u32> {
     match payload.len() {
         4 => Ok(u32::from_le_bytes(payload.try_into().unwrap())),
         n => bail!("bad hop payload length {}", n),
+    }
+}
+
+/// Payload for a JOIN frame: the peer's role (see
+/// [`crate::net::control::role`]) and the port its own relay listens
+/// on (0 for leaves, which serve no downstream).
+pub fn join_payload(role: u8, listen_port: u16) -> Vec<u8> {
+    let mut p = Vec::with_capacity(3);
+    p.push(role);
+    p.extend_from_slice(&listen_port.to_le_bytes());
+    p
+}
+
+/// Decode a JOIN payload into `(role, listen_port)`.
+pub fn parse_join(payload: &[u8]) -> Result<(u8, u16)> {
+    match payload.len() {
+        3 => Ok((payload[0], u16::from_le_bytes(payload[1..3].try_into().unwrap()))),
+        n => bail!("bad join payload length {}", n),
+    }
+}
+
+/// Payload for an ASSIGN frame: `(epoch, peer_id, upstream_port, hop)`.
+/// `upstream_port` 0 means standby (detach from any upstream and wait
+/// for the next epoch); `hop` is the peer's distance from the
+/// publisher under this plan (1 = directly under the root relay).
+pub fn assign_payload(epoch: u64, peer_id: u64, upstream_port: u16, hop: u32) -> Vec<u8> {
+    let mut p = Vec::with_capacity(22);
+    p.extend_from_slice(&epoch.to_le_bytes());
+    p.extend_from_slice(&peer_id.to_le_bytes());
+    p.extend_from_slice(&upstream_port.to_le_bytes());
+    p.extend_from_slice(&hop.to_le_bytes());
+    p
+}
+
+/// Decode an ASSIGN payload into `(epoch, peer_id, upstream_port, hop)`.
+pub fn parse_assign(payload: &[u8]) -> Result<(u64, u64, u16, u32)> {
+    if payload.len() != 22 {
+        bail!("bad assign payload length {}", payload.len());
+    }
+    Ok((
+        u64::from_le_bytes(payload[0..8].try_into().unwrap()),
+        u64::from_le_bytes(payload[8..16].try_into().unwrap()),
+        u16::from_le_bytes(payload[16..18].try_into().unwrap()),
+        u32::from_le_bytes(payload[18..22].try_into().unwrap()),
+    ))
+}
+
+/// Payload for a HEARTBEAT frame: `(peer_id, epoch)` — the epoch is
+/// the newest the peer has accepted, so the plane can see laggards.
+pub fn heartbeat_payload(peer_id: u64, epoch: u64) -> Vec<u8> {
+    let mut p = Vec::with_capacity(16);
+    p.extend_from_slice(&peer_id.to_le_bytes());
+    p.extend_from_slice(&epoch.to_le_bytes());
+    p
+}
+
+/// Decode a HEARTBEAT payload into `(peer_id, epoch)`.
+pub fn parse_heartbeat(payload: &[u8]) -> Result<(u64, u64)> {
+    if payload.len() != 16 {
+        bail!("bad heartbeat payload length {}", payload.len());
+    }
+    Ok((
+        u64::from_le_bytes(payload[0..8].try_into().unwrap()),
+        u64::from_le_bytes(payload[8..16].try_into().unwrap()),
+    ))
+}
+
+/// Payload for an EPOCH fence frame.
+pub fn epoch_payload(epoch: u64) -> Vec<u8> {
+    epoch.to_le_bytes().to_vec()
+}
+
+/// Decode an EPOCH payload.
+pub fn parse_epoch(payload: &[u8]) -> Result<u64> {
+    match payload.len() {
+        8 => Ok(u64::from_le_bytes(payload.try_into().unwrap())),
+        n => bail!("bad epoch payload length {}", n),
     }
 }
 
@@ -191,6 +288,23 @@ mod tests {
         // NACK_MISS reuses the shard ack payload shape
         let p = shard_ack_payload(12, 4);
         assert_eq!(parse_shard_ack(&p).unwrap(), (12, 4));
+    }
+
+    #[test]
+    fn control_payload_roundtrips() {
+        assert_eq!(parse_join(&join_payload(1, 40123)).unwrap(), (1, 40123));
+        assert_eq!(parse_join(&join_payload(2, 0)).unwrap(), (2, 0));
+        assert!(parse_join(&[1, 2]).is_err());
+        assert_eq!(
+            parse_assign(&assign_payload(7, 3, 50111, 2)).unwrap(),
+            (7, 3, 50111, 2)
+        );
+        assert_eq!(parse_assign(&assign_payload(0, 0, 0, 0)).unwrap(), (0, 0, 0, 0));
+        assert!(parse_assign(&[0u8; 21]).is_err());
+        assert_eq!(parse_heartbeat(&heartbeat_payload(9, 4)).unwrap(), (9, 4));
+        assert!(parse_heartbeat(&[0u8; 8]).is_err());
+        assert_eq!(parse_epoch(&epoch_payload(u64::MAX)).unwrap(), u64::MAX);
+        assert!(parse_epoch(&[0u8; 4]).is_err());
     }
 
     #[test]

@@ -217,6 +217,13 @@ pub struct TransportCounters {
     pub nacks_unserviceable: u64,
     /// Fault decorator only: faults actually injected.
     pub faults_injected: u64,
+    /// Control-plane fabrics only: times the subscription was
+    /// re-parented onto a new upstream relay (failover or replan);
+    /// 0 for statically-wired backends.
+    pub reparents: u64,
+    /// Control-plane fabrics only: the topology epoch this peer last
+    /// accepted (0 for statically-wired backends, which never replan).
+    pub epoch: u64,
 }
 
 #[derive(Default)]
@@ -243,6 +250,8 @@ impl CounterCell {
             nacks_sent: self.nacks_sent.load(Ordering::Relaxed),
             nacks_unserviceable: self.nacks_unserviceable.load(Ordering::Relaxed),
             faults_injected: 0,
+            reparents: 0,
+            epoch: 0,
         }
     }
 
@@ -609,6 +618,10 @@ struct SubState {
     /// HOP reply to our SUBSCRIBE; None until it arrives).
     hops: Option<u32>,
     closed: bool,
+    /// True only when the stream ended in a SOCKET ERROR; an orderly
+    /// CLOSE frame leaves it false. Control-plane supervisors
+    /// re-subscribe on failure, never on an orderly end-of-stream.
+    failed: bool,
 }
 
 impl SubState {
@@ -741,6 +754,17 @@ impl RelayTransport {
         }
     }
 
+    /// Subscriber role: true only when the stream died on a SOCKET
+    /// ERROR — an orderly CLOSE leaves this false. The control plane's
+    /// leaf supervisor re-subscribes on this, so an orderly
+    /// end-of-stream is never mistaken for a dead relay.
+    pub fn stream_failed(&self) -> bool {
+        match &self.role {
+            RelayRole::Subscriber(sub) => sub.state.0.lock().unwrap().failed,
+            RelayRole::Publisher { .. } => false,
+        }
+    }
+
     /// Relay hops between this peer and the publisher: `Some(0)` for
     /// the producer role (it feeds the root relay in-process); for a
     /// subscriber, the upstream relay's depth + 1 once the HOP reply
@@ -795,7 +819,10 @@ fn spawn_receiver(
             Ok(f) => f,
             Err(_) => {
                 let (lock, cv) = &*state;
-                lock.lock().unwrap().closed = true;
+                let mut st = lock.lock().unwrap();
+                st.closed = true;
+                st.failed = true;
+                drop(st);
                 cv.notify_all();
                 return;
             }

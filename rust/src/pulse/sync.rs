@@ -499,6 +499,14 @@ pub struct SyncStats {
     /// Survives the fast-path → slow-path fallback, like
     /// `bytes_downloaded`.
     pub nacks_unserviceable: usize,
+    /// Cumulative upstream re-parents the transport has performed so
+    /// far (control-plane fabrics; 0 on statically-wired backends).
+    /// Snapshot of `TransportCounters::reparents` at the end of the
+    /// call, so a jump between two calls brackets a failover.
+    pub reparents: u64,
+    /// Topology epoch the transport last accepted (control plane;
+    /// 0 on statically-wired backends, which never replan).
+    pub epoch: u64,
     pub verified: bool,
 }
 
@@ -574,6 +582,17 @@ impl<T: SyncTransport> Consumer<T> {
     /// path (anchor + chain); falls back to the slow path on any
     /// verification failure (§J.5 self-healing).
     pub fn synchronize(&mut self) -> Result<SyncStats> {
+        let mut stats = self.synchronize_inner()?;
+        // stamp the transport's topology bookkeeping (control-plane
+        // fabrics; zero on static backends) so per-sync rows can show
+        // failover cost next to the apply/refetch tallies
+        let counters = self.transport.counters();
+        stats.reparents = counters.reparents;
+        stats.epoch = counters.epoch;
+        Ok(stats)
+    }
+
+    fn synchronize_inner(&mut self) -> Result<SyncStats> {
         // one inventory scan serves the head lookup and the slow-path
         // anchor choice — reusing the snapshot a preceding
         // latest_ready() already paid for. A cached snapshot that saw

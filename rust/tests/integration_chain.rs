@@ -288,6 +288,78 @@ fn evicted_nack_escalates_upstream_and_heals() {
 }
 
 #[test]
+fn depth3_tree_bit_identity_and_double_hop_escalation() {
+    // ROADMAP "3+ levels", hand-wired (no control plane): publisher →
+    // root → node A → node B → leaf. Both mid nodes index only the
+    // newest step, so repairing an old step NACK-escalates across TWO
+    // hops to the root; the retransmit is re-indexed at every hop on
+    // the way back down and delivered to exactly the requester. The
+    // leaf ends bit-identical with one counted refetch.
+    let steps = 4u64;
+    let vs = views(N, steps, 250);
+    let layout = synthetic_layout(N, 64);
+
+    let root = Arc::new(Relay::start().unwrap());
+    let node_a = RelayNode::join_with_opts(root.port, pulse::net::relay::DEFAULT_QUEUE_DEPTH, 1)
+        .unwrap();
+    // let A learn its depth before B subscribes, so the HOP chain
+    // reports deterministically (A would otherwise reply 0 to B)
+    wait_hop(&node_a, 1);
+    let node_b =
+        RelayNode::join_with_opts(node_a.port(), pulse::net::relay::DEFAULT_QUEUE_DEPTH, 1)
+            .unwrap();
+    wait_hop(&node_b, 2);
+
+    let cons = RelayTransport::subscribe(node_b.port()).unwrap();
+    let decorated = FaultInjectingTransport::targeting(cons, 1, 0);
+    let mut consumer = Consumer::over(decorated, layout.clone());
+    let mut publisher = Publisher::over(
+        RelayTransport::publisher(root.clone()),
+        layout.clone(),
+        vs[0].clone(),
+        50,
+    )
+    .unwrap()
+    .with_shards(SHARDS);
+    for step in 1..=steps {
+        publisher.publish(step, &vs[step as usize]).unwrap();
+    }
+    // cold start AFTER the whole stream landed: the chain replays step
+    // 1, whose (1, 0) frame the decorator corrupts on first serve; by
+    // now both mid-tree indices have evicted step 1, so the NACK walks
+    // B → A → root
+    let cs = wait_sync(&mut consumer, steps);
+    assert_eq!(cs.path, SyncPath::Slow);
+    assert!(cs.verified);
+    assert_eq!(cs.shard_refetches, 1, "exactly one counted refetch");
+    assert_eq!(cs.nacks_unserviceable, 0);
+    assert_eq!(cs.reparents, 0, "hand-wired tree: no control plane, no re-parents");
+    assert_eq!(consumer.weights.as_ref().unwrap(), &vs[steps as usize]);
+    assert_eq!(node_b.relay().nacks_escalated(), 1, "B must escalate the evicted slot");
+    assert_eq!(node_a.relay().nacks_escalated(), 1, "A must escalate it again");
+    assert_eq!(root.nacks_serviced(), 1, "only the root still held the slot");
+    assert_eq!(node_a.relay().nacks_serviced(), 1, "A re-delivers (and re-indexes)");
+    assert_eq!(node_b.relay().nacks_serviced(), 1, "B re-delivers (and re-indexes)");
+    // topology bookkeeping across both hops
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while consumer.transport.inner().hops() != Some(3) {
+        assert!(Instant::now() < deadline, "leaf never learned hops=3");
+        std::thread::sleep(Duration::from_millis(3));
+    }
+    // CLOSE crosses both mid hops
+    publisher.transport.close();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while !consumer.transport.inner().stream_closed() {
+        assert!(Instant::now() < deadline, "CLOSE never crossed the depth-3 tree");
+        std::thread::sleep(Duration::from_millis(3));
+    }
+    drop(consumer);
+    node_b.stop();
+    node_a.stop();
+    root.stop();
+}
+
+#[test]
 fn unserviceable_nack_errors_fast_then_anchor_rescues() {
     // end-to-end over the wire: a repair NACK whose slot the relay has
     // evicted gets an explicit NACK_MISS — the consumer's synchronize
