@@ -25,8 +25,19 @@
 //! `PULSE_INDEX_BOUND=1` — to force repair NACKs past the local index:
 //! in tree mode they escalate upstream, which is exactly the failover
 //! path `paper control` measures.
+//!
+//! `--chaos-seed N` (or `PULSE_CHAOS_SEED=N`) runs the same demo over
+//! a faulty wire: every relay/node socket is wrapped in the seeded
+//! `net::chaos` fault layer. By default only the non-damaging faults
+//! fire (partial writes, added latency — the framing absorbs both and
+//! the end-of-run bit-identity asserts still hold); set
+//! `PULSE_CHAOS_BUDGET=K` to also admit K resets/corruptions, which
+//! this unsupervised demo is NOT built to heal — the control-plane
+//! chaos suite (`tests/integration_chaos.rs`) is. See the README
+//! "Failure model" section.
 
 use pulse::bf16;
+use pulse::net::chaos::ChaosConfig;
 use pulse::net::node::RelayNode;
 use pulse::net::relay::Relay;
 use pulse::net::transport::{RelayTransport, SyncTransport};
@@ -90,21 +101,53 @@ fn main() -> anyhow::Result<()> {
         })
         .unwrap_or(pulse::net::relay::INDEX_STEPS)
         .max(1);
+    // seeded wire-fault layer: `--chaos-seed N` wins over
+    // PULSE_CHAOS_SEED; absent → clean wire. The damaging-fault budget
+    // defaults to 0 here (partial writes + latency only): this demo
+    // hand-wires its subscribers, so it has no supervisor to heal an
+    // injected reset — the supervised chaos suite (integration_chaos)
+    // owns those. Raise PULSE_CHAOS_BUDGET to let resets/corruption
+    // through anyway.
+    let chaos = argv
+        .iter()
+        .position(|a| a == "--chaos-seed")
+        .and_then(|i| argv.get(i + 1))
+        .and_then(|v| v.parse::<u64>().ok())
+        .or_else(|| std::env::var("PULSE_CHAOS_SEED").ok().and_then(|v| v.parse().ok()))
+        .map(|seed| {
+            let budget = std::env::var("PULSE_CHAOS_BUDGET")
+                .ok()
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(0);
+            ChaosConfig::light(seed).with_budget(budget)
+        });
     let n = 500_000usize;
     let layout = synthetic_layout(n, 1024);
-    let relay =
-        Arc::new(Relay::start_with_opts(pulse::net::relay::DEFAULT_QUEUE_DEPTH, index_bound)?);
+    let relay = Arc::new(Relay::start_with_chaos(
+        pulse::net::relay::DEFAULT_QUEUE_DEPTH,
+        index_bound,
+        chaos.clone(),
+    )?);
     // opt-in 2-level tree: workers subscribe to a chained node that
     // re-stages the root's stream
     let node = if tree {
-        Some(RelayNode::join_with_opts(
+        Some(RelayNode::join_with_chaos(
             relay.port,
             pulse::net::relay::DEFAULT_QUEUE_DEPTH,
             index_bound,
+            chaos.clone(),
         )?)
     } else {
         None
     };
+    if let Some(c) = &chaos {
+        println!(
+            "chaos wire enabled: seed {}, damaging-fault budget {} \
+             (bit-identity asserts still apply)",
+            c.seed,
+            c.budget_remaining().unwrap_or(0)
+        );
+    }
     let sub_port = node.as_ref().map_or(relay.port, |n| n.port());
     match &node {
         Some(nd) => println!(

@@ -206,6 +206,7 @@ fn bench_control_replan(b: &mut Bench) {
         min_relay_levels: 1,
         heartbeat_interval: hb,
         missed_heartbeats: 5, // 150 ms death timeout
+        ..Default::default()
     };
     let wait_sync = |c: &mut Consumer<ControlSubscriberTransport>, step: u64| {
         let deadline = Instant::now() + Duration::from_secs(30);

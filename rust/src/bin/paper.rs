@@ -1721,6 +1721,7 @@ fn control(args: &Args) -> Result<()> {
             min_relay_levels: 1,
             heartbeat_interval: hb,
             missed_heartbeats: missed,
+            ..Default::default()
         };
         let plane = ControlPlane::start(root.port, cfg)?;
         let nodes: Vec<ControlledNode> = (0..3)

@@ -204,6 +204,9 @@ impl TransportMeter {
                 "bytes_fetched",
                 "nacks_sent",
                 "nacks_unserviceable",
+                "retries",
+                "gave_up",
+                "nack_suppressed",
                 "faults_injected",
                 "shard_refetches",
                 "slow_paths",
@@ -224,6 +227,9 @@ impl TransportMeter {
                 r.counters.bytes_fetched.to_string(),
                 r.counters.nacks_sent.to_string(),
                 r.counters.nacks_unserviceable.to_string(),
+                r.counters.retries.to_string(),
+                r.counters.gave_up.to_string(),
+                r.counters.nack_suppressed.to_string(),
                 r.counters.faults_injected.to_string(),
                 r.shard_refetches.to_string(),
                 r.slow_paths.to_string(),
@@ -306,7 +312,14 @@ mod tests {
         );
         m.set_counters(
             "object-store",
-            TransportCounters { reparents: 3, epoch: 9, ..Default::default() },
+            TransportCounters {
+                retries: 7,
+                gave_up: 1,
+                nack_suppressed: 4,
+                reparents: 3,
+                epoch: 9,
+                ..Default::default()
+            },
         );
         m.set_hop("object-store", 2);
         assert_eq!(m.rows().len(), 2);
@@ -331,6 +344,13 @@ mod tests {
         let os = text.lines().nth(2).unwrap();
         assert!(os.starts_with("object-store,2,"));
         assert!(os.ends_with(",3,9"), "failover columns must round-trip: {}", os);
+        // retries=7, gave_up=1, nack_suppressed=4 sit between
+        // nacks_unserviceable and faults_injected
+        assert!(os.contains(",7,1,4,0,"), "retry columns must round-trip: {}", os);
+        assert!(
+            text.lines().next().unwrap().contains(",retries,gave_up,nack_suppressed,"),
+            "header must carry the retry columns"
+        );
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

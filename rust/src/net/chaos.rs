@@ -1,0 +1,529 @@
+//! Seeded wire-level fault injection for the TCP sync plane.
+//!
+//! [`crate::net::transport::FaultInjectingTransport`] corrupts
+//! *decoded* fetches — useful for exercising the consumer's repair
+//! seams, blind to everything below them. This module injects faults
+//! where commodity networks actually fail: on the socket, under the
+//! framing. A [`FaultyStream`] wraps a `TcpStream` and deterministically
+//! injects
+//!
+//! * **partial writes** — a short count handed back mid-buffer, so the
+//!   framing layer's `write_all` retry loop really runs;
+//! * **mid-frame resets** — the connection is shut down both ways and
+//!   the write errors, tearing the frame in flight;
+//! * **byte corruption** — one bit flipped in a frame *payload* (never
+//!   the 5-byte header: header damage would silently desync the framing
+//!   for the life of the connection, a failure mode this module models
+//!   with resets instead — content damage is what payload corruption
+//!   models, and every payload is covered end to end by container
+//!   hashes, the hash tree, or the marker-frame checksum);
+//! * **added latency** — a real sleep before the bytes move;
+//! * **one-way partitions** — writes silently swallowed for a window,
+//!   engaged and disengaged only at frame boundaries (a 5-byte header
+//!   write) so the peer sees missing frames, never torn ones.
+//!
+//! Every decision is a pure function of `(seed, connection, op)` via
+//! [`crate::util::rng::splitmix64`] — no wall-clock entropy, so a
+//! failing chaos run replays from its seed. The state-damaging faults
+//! (reset, corruption, partition) draw from a shared **fault budget**;
+//! once it drains the wire goes permanently quiet, which is how the
+//! chaos integration suite guarantees convergence: fault freely, then
+//! publish clean steps past the damage. Partial writes and latency are
+//! self-healing by construction and stay outside the budget.
+//!
+//! A [`Wire`] is the drop-in connection type the relay, node, and
+//! control planes carry instead of a bare `TcpStream`: `Plain` is a
+//! zero-cost passthrough, `Chaos` wraps a [`FaultyStream`]. Install
+//! chaos on a layer by passing a [`ChaosConfig`] to
+//! `Relay::start_with_chaos`, `RelayNode::{detached,join}_with_chaos`,
+//! or `ControlPlane::start_with_chaos`; configuration from the
+//! environment comes from [`ChaosConfig::from_env`]
+//! (`PULSE_CHAOS_SEED`, `PULSE_CHAOS_BUDGET`).
+
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::net::tcp::FRAME_HEADER_LEN;
+use crate::util::rng::splitmix64;
+
+const SALT_PARTIAL: u64 = 0x5041_5254;
+const SALT_RESET: u64 = 0x5245_5354;
+const SALT_CORRUPT: u64 = 0xC0_44;
+const SALT_DELAY: u64 = 0xDE_1A;
+const SALT_PARTITION: u64 = 0x1_3A97;
+
+/// Fault mix for one chaos domain. Probabilities are per-mille per
+/// write op (0 disables a fault class); the config is `Clone` and all
+/// clones share the same fault budget and connection counter, so one
+/// config threaded through a whole tree behaves as one domain.
+#[derive(Clone, Debug)]
+pub struct ChaosConfig {
+    /// Root seed; every injected fault is a pure function of
+    /// `(seed, connection, op)`.
+    pub seed: u64,
+    /// Per-mille chance a write returns a short count.
+    pub partial_write_mille: u32,
+    /// Per-mille chance a write tears the connection down mid-frame.
+    pub reset_mille: u32,
+    /// Per-mille chance one payload bit is flipped in flight.
+    pub corrupt_mille: u32,
+    /// Per-mille chance a write sleeps for [`ChaosConfig::delay`].
+    pub delay_mille: u32,
+    /// Added latency when a delay fault fires.
+    pub delay: Duration,
+    /// Per-mille chance (evaluated at frame boundaries) that a one-way
+    /// partition opens.
+    pub partition_mille: u32,
+    /// Frames a one-way partition swallows once open.
+    pub partition_frames: u32,
+    /// Shared budget for state-damaging faults (reset, corruption,
+    /// partition): each one spends a token, and at zero the wire goes
+    /// permanently quiet. `None` = unlimited.
+    budget: Option<Arc<AtomicI64>>,
+    /// Per-domain connection counter salting each wrapped stream.
+    next_conn: Arc<AtomicU64>,
+}
+
+impl ChaosConfig {
+    /// All fault classes disabled; enable them field by field.
+    pub fn quiet(seed: u64) -> ChaosConfig {
+        ChaosConfig {
+            seed,
+            partial_write_mille: 0,
+            reset_mille: 0,
+            corrupt_mille: 0,
+            delay_mille: 0,
+            delay: Duration::from_millis(2),
+            partition_mille: 0,
+            partition_frames: 25,
+            budget: None,
+            next_conn: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// A commodity-network-ish mix: frequent short writes and small
+    /// delays, occasional corruption, rare resets and partitions.
+    pub fn light(seed: u64) -> ChaosConfig {
+        ChaosConfig {
+            partial_write_mille: 40,
+            reset_mille: 4,
+            corrupt_mille: 8,
+            delay_mille: 25,
+            partition_mille: 3,
+            ..ChaosConfig::quiet(seed)
+        }
+    }
+
+    /// Cap the number of state-damaging faults across every connection
+    /// sharing this config (clones share the pool).
+    pub fn with_budget(mut self, tokens: i64) -> ChaosConfig {
+        self.budget = Some(Arc::new(AtomicI64::new(tokens)));
+        self
+    }
+
+    /// Remaining fault tokens (`None` = unlimited). Never below zero.
+    pub fn budget_remaining(&self) -> Option<i64> {
+        self.budget.as_ref().map(|b| b.load(Ordering::Relaxed).max(0))
+    }
+
+    /// Build from the environment: `PULSE_CHAOS_SEED=<u64>` selects
+    /// the [`ChaosConfig::light`] mix with that seed (absent/invalid →
+    /// `None`, chaos off), `PULSE_CHAOS_BUDGET=<i64>` optionally caps
+    /// the damaging faults.
+    pub fn from_env() -> Option<ChaosConfig> {
+        let seed: u64 = std::env::var("PULSE_CHAOS_SEED").ok()?.parse().ok()?;
+        let cfg = ChaosConfig::light(seed);
+        match std::env::var("PULSE_CHAOS_BUDGET").ok().and_then(|v| v.parse().ok()) {
+            Some(tokens) => Some(cfg.with_budget(tokens)),
+            None => Some(cfg),
+        }
+    }
+}
+
+/// Per-connection fault state, shared by every [`FaultyStream`] clone
+/// of the same underlying socket (`try_clone` halves see one op
+/// sequence per direction and one partition state).
+#[derive(Debug)]
+struct ChaosState {
+    cfg: ChaosConfig,
+    conn: u64,
+    write_ops: AtomicU64,
+    read_ops: AtomicU64,
+    /// Frames an open one-way partition still swallows.
+    partition_left: AtomicI64,
+    /// Mid-frame: the current frame's header was swallowed, so its
+    /// payload must be too (keeps partitions frame-aligned).
+    swallow: AtomicBool,
+    faults: AtomicU64,
+}
+
+impl ChaosState {
+    /// Deterministic per-op fault decision.
+    fn roll(&self, op: u64, salt: u64, mille: u32) -> bool {
+        if mille == 0 {
+            return false;
+        }
+        let mut s = self
+            .cfg
+            .seed
+            .wrapping_add(self.conn.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+            .wrapping_add(op.wrapping_mul(0xD1B5_4A32_D192_ED03))
+            ^ salt;
+        splitmix64(&mut s) % 1000 < mille as u64
+    }
+
+    /// Spend one token from the damaging-fault budget.
+    fn spend(&self) -> bool {
+        match &self.cfg.budget {
+            None => true,
+            Some(b) => b.fetch_sub(1, Ordering::Relaxed) > 0,
+        }
+    }
+
+    fn fault(&self) {
+        self.faults.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// A `TcpStream` with deterministic wire faults. Construct via
+/// [`Wire::wrap`]; clones share fault state.
+#[derive(Debug)]
+pub struct FaultyStream {
+    inner: TcpStream,
+    st: Arc<ChaosState>,
+}
+
+impl FaultyStream {
+    fn new(inner: TcpStream, cfg: &ChaosConfig) -> FaultyStream {
+        let conn = cfg.next_conn.fetch_add(1, Ordering::Relaxed);
+        FaultyStream {
+            inner,
+            st: Arc::new(ChaosState {
+                cfg: cfg.clone(),
+                conn,
+                write_ops: AtomicU64::new(0),
+                read_ops: AtomicU64::new(0),
+                partition_left: AtomicI64::new(0),
+                swallow: AtomicBool::new(false),
+                faults: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    fn try_clone(&self) -> io::Result<FaultyStream> {
+        Ok(FaultyStream { inner: self.inner.try_clone()?, st: self.st.clone() })
+    }
+
+    /// Faults injected on this connection so far.
+    pub fn faults_injected(&self) -> u64 {
+        self.st.faults.load(Ordering::Relaxed)
+    }
+}
+
+impl Write for FaultyStream {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        if buf.is_empty() {
+            return self.inner.write(buf);
+        }
+        let st = self.st.clone();
+        let op = st.write_ops.fetch_add(1, Ordering::Relaxed);
+        let header = buf.len() == FRAME_HEADER_LEN;
+        if header {
+            // partitions engage and disengage only here, at a frame
+            // boundary, so the peer loses whole frames — never half of
+            // one (which would desync the framing permanently)
+            if st.partition_left.load(Ordering::Relaxed) > 0 {
+                st.partition_left.fetch_sub(1, Ordering::Relaxed);
+                st.swallow.store(true, Ordering::Relaxed);
+                return Ok(buf.len());
+            }
+            st.swallow.store(false, Ordering::Relaxed);
+            if st.roll(op, SALT_PARTITION, st.cfg.partition_mille) && st.spend() {
+                st.fault();
+                st.partition_left
+                    .store(st.cfg.partition_frames.max(1) as i64 - 1, Ordering::Relaxed);
+                st.swallow.store(true, Ordering::Relaxed);
+                return Ok(buf.len());
+            }
+        } else if st.swallow.load(Ordering::Relaxed) {
+            return Ok(buf.len());
+        }
+        if st.roll(op, SALT_DELAY, st.cfg.delay_mille) {
+            st.fault();
+            std::thread::sleep(st.cfg.delay);
+        }
+        if st.roll(op, SALT_RESET, st.cfg.reset_mille) && st.spend() {
+            st.fault();
+            let _ = self.inner.shutdown(Shutdown::Both);
+            return Err(io::Error::new(
+                io::ErrorKind::ConnectionReset,
+                "chaos: injected mid-frame reset",
+            ));
+        }
+        if !header
+            && buf.len() > FRAME_HEADER_LEN
+            && st.roll(op, SALT_CORRUPT, st.cfg.corrupt_mille)
+            && st.spend()
+        {
+            st.fault();
+            let mut copy = buf.to_vec();
+            let mut s = st.cfg.seed ^ op ^ st.conn.rotate_left(32);
+            let i = (splitmix64(&mut s) as usize) % copy.len();
+            copy[i] ^= 1 << (splitmix64(&mut s) % 8);
+            self.inner.write_all(&copy)?;
+            return Ok(buf.len());
+        }
+        if buf.len() > 1 && st.roll(op, SALT_PARTIAL, st.cfg.partial_write_mille) {
+            st.fault();
+            let mut s = st.cfg.seed ^ op.rotate_left(7) ^ st.conn;
+            let k = 1 + (splitmix64(&mut s) as usize) % (buf.len() - 1);
+            return self.inner.write(&buf[..k]);
+        }
+        self.inner.write(buf)
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+impl Read for FaultyStream {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        let st = self.st.clone();
+        let op = st.read_ops.fetch_add(1, Ordering::Relaxed);
+        // read-side chaos is latency only: byte damage is injected on
+        // the writing end (one faulty end per link suffices), and
+        // read-side header corruption would desync the framing
+        if st.roll(op ^ 0x5244, SALT_DELAY, st.cfg.delay_mille) {
+            st.fault();
+            std::thread::sleep(st.cfg.delay);
+        }
+        self.inner.read(buf)
+    }
+}
+
+/// One sync-plane connection: a plain `TcpStream` or a chaos-wrapped
+/// one, with the handful of socket controls the relay/node/control
+/// layers use passed through.
+#[derive(Debug)]
+pub enum Wire {
+    Plain(TcpStream),
+    Chaos(FaultyStream),
+}
+
+impl Wire {
+    /// Wrap `stream` in the chaos domain, or carry it untouched when
+    /// chaos is off.
+    pub fn wrap(stream: TcpStream, chaos: Option<&ChaosConfig>) -> Wire {
+        match chaos {
+            Some(cfg) => Wire::Chaos(FaultyStream::new(stream, cfg)),
+            None => Wire::Plain(stream),
+        }
+    }
+
+    pub fn plain(stream: TcpStream) -> Wire {
+        Wire::Plain(stream)
+    }
+
+    pub fn try_clone(&self) -> io::Result<Wire> {
+        Ok(match self {
+            Wire::Plain(s) => Wire::Plain(s.try_clone()?),
+            Wire::Chaos(s) => Wire::Chaos(s.try_clone()?),
+        })
+    }
+
+    fn stream(&self) -> &TcpStream {
+        match self {
+            Wire::Plain(s) => s,
+            Wire::Chaos(f) => &f.inner,
+        }
+    }
+
+    pub fn shutdown(&self, how: Shutdown) -> io::Result<()> {
+        self.stream().shutdown(how)
+    }
+
+    pub fn set_nodelay(&self, on: bool) -> io::Result<()> {
+        self.stream().set_nodelay(on)
+    }
+
+    pub fn set_read_timeout(&self, d: Option<Duration>) -> io::Result<()> {
+        self.stream().set_read_timeout(d)
+    }
+
+    pub fn set_write_timeout(&self, d: Option<Duration>) -> io::Result<()> {
+        self.stream().set_write_timeout(d)
+    }
+}
+
+impl Write for Wire {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            Wire::Plain(s) => s.write(buf),
+            Wire::Chaos(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            Wire::Plain(s) => s.flush(),
+            Wire::Chaos(s) => s.flush(),
+        }
+    }
+}
+
+impl Read for Wire {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            Wire::Plain(s) => s.read(buf),
+            Wire::Chaos(s) => s.read(buf),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::tcp::{self, Frame};
+
+    /// One accepted/connected socket pair on loopback.
+    fn pair() -> (TcpStream, TcpStream) {
+        let (listener, port) = tcp::listen_local().unwrap();
+        let client = tcp::connect_local(port).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        (client, server)
+    }
+
+    fn frame(tag: u8, len: usize) -> Frame {
+        Frame { kind: tcp::kind::PATCH, payload: vec![tag; len] }
+    }
+
+    #[test]
+    fn quiet_config_is_a_passthrough() {
+        let (c, s) = pair();
+        let mut w = Wire::wrap(c, Some(&ChaosConfig::quiet(1)));
+        let mut r = s;
+        for i in 0..8u8 {
+            tcp::write_frame(&mut w, &frame(i, 64)).unwrap();
+        }
+        for i in 0..8u8 {
+            let f = tcp::read_frame(&mut r).unwrap();
+            assert_eq!(f.payload, vec![i; 64]);
+        }
+    }
+
+    #[test]
+    fn partition_swallows_whole_frames_and_keeps_framing_aligned() {
+        let (c, s) = pair();
+        let mut cfg = ChaosConfig::quiet(3);
+        cfg.partition_mille = 1000;
+        cfg.partition_frames = 2;
+        let cfg = cfg.with_budget(1);
+        let mut w = Wire::wrap(c, Some(&cfg));
+        let mut r = s;
+        // frame 0 opens the partition (spending the only token) and is
+        // swallowed with frame 1; frame 2 rolls a partition again but
+        // the budget is dry, so it passes — intact
+        for i in 0..3u8 {
+            tcp::write_frame(&mut w, &frame(i, 300)).unwrap();
+        }
+        let f = tcp::read_frame(&mut r).unwrap();
+        assert_eq!(f.payload, vec![2u8; 300], "only the post-budget frame arrives");
+        assert_eq!(cfg.budget_remaining(), Some(0));
+    }
+
+    #[test]
+    fn corruption_hits_payload_bytes_never_headers() {
+        let (c, s) = pair();
+        let mut cfg = ChaosConfig::quiet(5);
+        cfg.corrupt_mille = 1000;
+        let cfg = cfg.with_budget(1_000);
+        let mut w = Wire::wrap(c, Some(&cfg));
+        let mut r = s;
+        for i in 0..6u8 {
+            tcp::write_frame(&mut w, &frame(i, 200)).unwrap();
+        }
+        for i in 0..6u8 {
+            // headers stay intact (kind + length decode), payloads are
+            // each one flipped bit away from what was sent
+            let f = tcp::read_frame(&mut r).unwrap();
+            assert_eq!(f.kind, tcp::kind::PATCH);
+            assert_eq!(f.payload.len(), 200);
+            let flipped: u32 = f
+                .payload
+                .iter()
+                .map(|&b| (b ^ i).count_ones())
+                .sum();
+            assert_eq!(flipped, 1, "exactly one bit flips per corrupted frame");
+        }
+    }
+
+    #[test]
+    fn reset_tears_the_connection_down() {
+        let (c, s) = pair();
+        let mut cfg = ChaosConfig::quiet(7);
+        cfg.reset_mille = 1000;
+        let cfg = cfg.with_budget(1);
+        let mut w = Wire::wrap(c, Some(&cfg));
+        let err = tcp::write_frame(&mut w, &frame(0, 64)).unwrap_err();
+        assert!(err.to_string().contains("reset"), "err = {:#}", err);
+        // the peer sees the teardown too
+        let mut r = s;
+        assert!(tcp::read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn partial_writes_heal_under_write_all() {
+        let (c, s) = pair();
+        let mut cfg = ChaosConfig::quiet(9);
+        cfg.partial_write_mille = 1000; // every write comes up short
+        let mut w = Wire::wrap(c, Some(&cfg));
+        let mut r = s;
+        for i in 0..5u8 {
+            tcp::write_frame(&mut w, &frame(i, 500)).unwrap();
+        }
+        for i in 0..5u8 {
+            assert_eq!(tcp::read_frame(&mut r).unwrap().payload, vec![i; 500]);
+        }
+    }
+
+    #[test]
+    fn same_seed_same_surviving_bytes() {
+        let run = |seed: u64| -> Vec<Vec<u8>> {
+            let (c, s) = pair();
+            let mut cfg = ChaosConfig::quiet(seed);
+            cfg.corrupt_mille = 300;
+            cfg.partition_mille = 100;
+            cfg.partition_frames = 2;
+            let cfg = cfg.with_budget(1_000);
+            let mut w = Wire::wrap(c, Some(&cfg));
+            for i in 0..20u8 {
+                tcp::write_frame(&mut w, &frame(i, 64)).unwrap();
+            }
+            drop(w);
+            let mut out = Vec::new();
+            let mut r = s;
+            while let Ok(f) = tcp::read_frame(&mut r) {
+                out.push(f.payload);
+            }
+            out
+        };
+        assert_eq!(run(42), run(42), "a seed fully determines the wire damage");
+        assert_ne!(run(42), run(43), "distinct seeds damage differently");
+    }
+
+    #[test]
+    fn from_env_reads_seed_and_budget() {
+        // no env in this test process is assumed; set + clear locally
+        std::env::set_var("PULSE_CHAOS_SEED", "11");
+        std::env::set_var("PULSE_CHAOS_BUDGET", "5");
+        let cfg = ChaosConfig::from_env().expect("seed set");
+        assert_eq!(cfg.seed, 11);
+        assert_eq!(cfg.budget_remaining(), Some(5));
+        std::env::remove_var("PULSE_CHAOS_SEED");
+        std::env::remove_var("PULSE_CHAOS_BUDGET");
+    }
+}

@@ -52,6 +52,7 @@
 //! killing a mid-tree relay re-parents its subtree with every
 //! surviving leaf bit-identical to the object-store reference.
 
+use super::chaos::{ChaosConfig, Wire};
 use super::node::RelayNode;
 use super::relay;
 use super::tcp::{self, kind, Frame};
@@ -60,6 +61,7 @@ use super::transport::{
 };
 use crate::coordinator::planner::{self, TopologyPlan, Upstream};
 use crate::storage::retention::Inventory;
+use crate::util::retry::RetryPolicy;
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::net::{Shutdown, TcpListener, TcpStream};
@@ -94,6 +96,15 @@ pub struct ControlConfig {
     /// Consecutive missed heartbeats before a peer is declared dead
     /// and its subtree re-parented (≥ 1).
     pub missed_heartbeats: u32,
+    /// How long an *unregistered* connection may sit silent before its
+    /// handler thread gives up on it (a port scan or LB health check
+    /// that never JOINs must not leak a blocked thread).
+    pub probe_read_timeout: Duration,
+    /// Write budget for directive pushes. `replan` pushes while holding
+    /// the plane mutex: a peer that stops draining its control socket
+    /// must fail the write (and be marked dead) rather than block the
+    /// whole plane behind a full send buffer.
+    pub push_write_timeout: Duration,
 }
 
 impl Default for ControlConfig {
@@ -103,6 +114,8 @@ impl Default for ControlConfig {
             min_relay_levels: 0,
             heartbeat_interval: DEFAULT_HEARTBEAT,
             missed_heartbeats: 3,
+            probe_read_timeout: Duration::from_secs(10),
+            push_write_timeout: Duration::from_secs(2),
         }
     }
 }
@@ -120,8 +133,9 @@ struct PeerEntry {
     role: u8,
     listen_port: u16,
     /// Write half (ASSIGN/EPOCH pushes); the handler thread owns the
-    /// read half.
-    conn: TcpStream,
+    /// read half. A [`Wire`] so a chaos-enabled plane exercises its
+    /// push-failure paths under injected wire faults.
+    conn: Wire,
     last_heartbeat: Instant,
     alive: bool,
 }
@@ -223,6 +237,19 @@ impl ControlPlane {
     /// Start the plane on an ephemeral localhost port. `root_port` is
     /// the root relay every epoch's tree hangs under.
     pub fn start(root_port: u16, cfg: ControlConfig) -> Result<ControlPlane> {
+        ControlPlane::start_with_chaos(root_port, cfg, None)
+    }
+
+    /// [`ControlPlane::start`] with seeded wire-fault injection on
+    /// every accepted control connection: JOIN intake, directive
+    /// pushes, and heartbeat reads all run over the faulty wire, so
+    /// membership and replanning are exercised against the same
+    /// failure modes as the data plane.
+    pub fn start_with_chaos(
+        root_port: u16,
+        cfg: ControlConfig,
+        chaos: Option<ChaosConfig>,
+    ) -> Result<ControlPlane> {
         let (listener, port) = tcp::listen_local()?;
         listener.set_nonblocking(true)?;
         let shared = Arc::new(Mutex::new(PlaneState {
@@ -240,6 +267,7 @@ impl ControlPlane {
             shared.clone(),
             cfg,
             stop.clone(),
+            chaos,
         )));
         let monitor = Mutex::new(Some(spawn_plane_monitor(shared.clone(), cfg, stop.clone())));
         Ok(ControlPlane { port, cfg, shared, stop, accept, monitor })
@@ -314,6 +342,7 @@ fn spawn_plane_accept(
     shared: Arc<Mutex<PlaneState>>,
     cfg: ControlConfig,
     stop: Arc<AtomicBool>,
+    chaos: Option<ChaosConfig>,
 ) -> std::thread::JoinHandle<()> {
     std::thread::spawn(move || loop {
         if stop.load(Ordering::SeqCst) {
@@ -322,6 +351,7 @@ fn spawn_plane_accept(
         match listener.accept() {
             Ok((stream, _)) => {
                 stream.set_nodelay(true).ok();
+                let stream = Wire::wrap(stream, chaos.as_ref());
                 let shared = shared.clone();
                 let stop = stop.clone();
                 // handler threads are detached: they exit when their
@@ -341,7 +371,7 @@ fn spawn_plane_accept(
 /// resurrects a peer the monitor gave up on — it re-enters the pool at
 /// the next replan); CLOSE or a dead socket marks the peer dead.
 fn plane_handler(
-    mut stream: TcpStream,
+    mut stream: Wire,
     shared: Arc<Mutex<PlaneState>>,
     cfg: ControlConfig,
     stop: Arc<AtomicBool>,
@@ -350,7 +380,7 @@ fn plane_handler(
     // cannot find it to shut down, so a silent probe (port scan, LB
     // health check) must time itself out instead of leaking a
     // permanently-blocked thread
-    let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+    let _ = stream.set_read_timeout(Some(cfg.probe_read_timeout));
     let mut my_id: Option<u64> = None;
     loop {
         if stop.load(Ordering::SeqCst) {
@@ -371,7 +401,7 @@ fn plane_handler(
                 // must fail the write (and be marked dead) rather than
                 // block the whole plane — including failure detection —
                 // behind a full send buffer
-                let _ = conn.set_write_timeout(Some(Duration::from_secs(2)));
+                let _ = conn.set_write_timeout(Some(cfg.push_write_timeout));
                 // registered peers block on reads indefinitely (their
                 // liveness is the heartbeat timeout, and stop() can now
                 // reach this socket through the peer table)
@@ -691,6 +721,7 @@ pub struct ControlledNode {
     node: Arc<RelayNode>,
     client: Arc<ControlClient>,
     reparents: Arc<AtomicU64>,
+    retries: Arc<AtomicU64>,
     stop: Arc<AtomicBool>,
     supervisor: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
@@ -716,18 +747,35 @@ impl ControlledNode {
         index_steps: usize,
         heartbeat: Duration,
     ) -> Result<ControlledNode> {
-        let node = Arc::new(RelayNode::detached_with_opts(queue_depth, index_steps)?);
+        ControlledNode::join_with_chaos(ctl_port, queue_depth, index_steps, heartbeat, None)
+    }
+
+    /// [`ControlledNode::join_with_opts`] with seeded wire-fault
+    /// injection on the node's *data* plane: its upstream attachments
+    /// and every downstream subscriber it accepts run over the faulty
+    /// wire (the control connection itself stays clean — pair with
+    /// [`ControlPlane::start_with_chaos`] to break both planes).
+    pub fn join_with_chaos(
+        ctl_port: u16,
+        queue_depth: usize,
+        index_steps: usize,
+        heartbeat: Duration,
+        chaos: Option<ChaosConfig>,
+    ) -> Result<ControlledNode> {
+        let node = Arc::new(RelayNode::detached_with_chaos(queue_depth, index_steps, chaos)?);
         let client =
             Arc::new(ControlClient::join(ctl_port, role::RELAY, node.port(), heartbeat)?);
         let reparents = Arc::new(AtomicU64::new(0));
+        let retries = Arc::new(AtomicU64::new(0));
         let stop = Arc::new(AtomicBool::new(false));
         let supervisor = Mutex::new(Some(spawn_node_supervisor(
             node.clone(),
             client.clone(),
             reparents.clone(),
+            retries.clone(),
             stop.clone(),
         )));
-        Ok(ControlledNode { node, client, reparents, stop, supervisor })
+        Ok(ControlledNode { node, client, reparents, retries, stop, supervisor })
     }
 
     /// Port downstream subscribers (or further nodes) connect to.
@@ -753,6 +801,13 @@ impl ControlledNode {
     /// Upstream re-attachments beyond the first (failover/replan cost).
     pub fn reparents(&self) -> u64 {
         self.reparents.load(Ordering::Relaxed)
+    }
+
+    /// Failed upstream-attach attempts the supervisor retried with
+    /// backoff (the assigned parent wasn't listening yet, or the
+    /// connect itself failed under injected faults).
+    pub fn connect_retries(&self) -> u64 {
+        self.retries.load(Ordering::Relaxed)
     }
 
     /// Hops between this node and the publisher under the current
@@ -808,18 +863,24 @@ impl RelayNode {
 /// Node supervisor: applies directives to the underlying node. Rewires
 /// only when the upstream PORT changes (or the current upstream died),
 /// so an epoch bump that keeps a peer's parent costs nothing on the
-/// data plane. Connect failures retry on the next tick — the upstream
-/// named by a fresh plan may itself still be attaching.
+/// data plane. Connect failures retry under
+/// [`RetryPolicy::connect_default`] backoff — the upstream named by a
+/// fresh plan may itself still be attaching — and the schedule resets
+/// on success (the supervisor never gives up: a directive change
+/// restarts it from the base delay).
 fn spawn_node_supervisor(
     node: Arc<RelayNode>,
     client: Arc<ControlClient>,
     reparents: Arc<AtomicU64>,
+    retries: Arc<AtomicU64>,
     stop: Arc<AtomicBool>,
 ) -> std::thread::JoinHandle<()> {
     std::thread::spawn(move || {
+        let policy = RetryPolicy::connect_default();
         let mut seen_seq = 0u64;
         let mut applied_port: Option<u16> = None;
         let mut ever_attached = false;
+        let mut failed_attempts = 0u32;
         loop {
             if stop.load(Ordering::SeqCst) {
                 return;
@@ -833,6 +894,7 @@ fn spawn_node_supervisor(
                         node.detach_upstream();
                         applied_port = None;
                     }
+                    failed_attempts = 0;
                 }
                 Some((port, hop)) => {
                     // re-attach on a directive change or a DEAD socket;
@@ -849,8 +911,11 @@ fn spawn_node_supervisor(
                             }
                             ever_attached = true;
                             applied_port = Some(port);
+                            failed_attempts = 0;
                         } else {
-                            applied_port = None; // retry next tick
+                            applied_port = None;
+                            retries.fetch_add(1, Ordering::Relaxed);
+                            failed_attempts = failed_attempts.saturating_add(1);
                         }
                     }
                     // the plan's hop is authoritative for a managed
@@ -862,8 +927,15 @@ fn spawn_node_supervisor(
                     }
                 }
             }
-            // wake promptly on a new directive, re-check health often
-            client.wait_directive(seen_seq, Duration::from_millis(20));
+            // wake promptly on a new directive, re-check health often;
+            // while attach attempts are failing the tick IS the backoff
+            // (a fresh directive still wakes the wait early)
+            let tick = if failed_attempts > 0 {
+                policy.delay_for(failed_attempts - 1)
+            } else {
+                Duration::from_millis(20)
+            };
+            client.wait_directive(seen_seq, tick);
         }
     })
 }
@@ -884,6 +956,7 @@ pub struct ControlSubscriberTransport {
     client: Arc<ControlClient>,
     inner: Arc<Mutex<Option<Arc<RelayTransport>>>>,
     reparents: Arc<AtomicU64>,
+    retries: Arc<AtomicU64>,
     stop: Arc<AtomicBool>,
     supervisor: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
@@ -908,14 +981,16 @@ impl ControlSubscriberTransport {
         let client = Arc::new(ControlClient::join(ctl_port, role::LEAF, 0, heartbeat)?);
         let inner: Arc<Mutex<Option<Arc<RelayTransport>>>> = Arc::new(Mutex::new(None));
         let reparents = Arc::new(AtomicU64::new(0));
+        let retries = Arc::new(AtomicU64::new(0));
         let stop = Arc::new(AtomicBool::new(false));
         let supervisor = Mutex::new(Some(spawn_leaf_supervisor(
             inner.clone(),
             client.clone(),
             reparents.clone(),
+            retries.clone(),
             stop.clone(),
         )));
-        Ok(ControlSubscriberTransport { client, inner, reparents, stop, supervisor })
+        Ok(ControlSubscriberTransport { client, inner, reparents, retries, stop, supervisor })
     }
 
     fn current(&self) -> Result<Arc<RelayTransport>> {
@@ -941,6 +1016,12 @@ impl ControlSubscriberTransport {
         self.reparents.load(Ordering::Relaxed)
     }
 
+    /// Failed subscribe attempts the supervisor retried with backoff
+    /// (also folded into `counters().retries`).
+    pub fn connect_retries(&self) -> u64 {
+        self.retries.load(Ordering::Relaxed)
+    }
+
     /// Relay hops between this leaf and the publisher under the
     /// current subscription (None before the HOP reply lands).
     pub fn hops(&self) -> Option<u32> {
@@ -961,16 +1042,20 @@ impl Drop for ControlSubscriberTransport {
 /// Leaf supervisor: (re)subscribes the inner transport per directive.
 /// The swap is an `Arc` replace — an in-flight fetch on the old
 /// subscription finishes (or errors) on the old value and the next
-/// call lands on the new one.
+/// call lands on the new one. Subscribe failures retry under
+/// [`RetryPolicy::connect_default`] backoff, counted into `retries`.
 fn spawn_leaf_supervisor(
     inner: Arc<Mutex<Option<Arc<RelayTransport>>>>,
     client: Arc<ControlClient>,
     reparents: Arc<AtomicU64>,
+    retries: Arc<AtomicU64>,
     stop: Arc<AtomicBool>,
 ) -> std::thread::JoinHandle<()> {
     std::thread::spawn(move || {
+        let policy = RetryPolicy::connect_default();
         let mut seen_seq = 0u64;
         let mut applied_port: Option<u16> = None;
+        let mut failed_attempts = 0u32;
         loop {
             if stop.load(Ordering::SeqCst) {
                 return;
@@ -983,6 +1068,7 @@ fn spawn_leaf_supervisor(
                         *inner.lock().unwrap() = None;
                         applied_port = None;
                     }
+                    failed_attempts = 0;
                 }
                 Some((port, hop)) => {
                     let _ = hop; // leaves learn depth from the HOP reply
@@ -1007,13 +1093,23 @@ fn spawn_leaf_supervisor(
                                 reparents.fetch_add(1, Ordering::Relaxed);
                             }
                             applied_port = Some(port);
+                            failed_attempts = 0;
                         } else {
-                            applied_port = None; // retry next tick
+                            applied_port = None;
+                            retries.fetch_add(1, Ordering::Relaxed);
+                            failed_attempts = failed_attempts.saturating_add(1);
                         }
                     }
                 }
             }
-            client.wait_directive(seen_seq, Duration::from_millis(20));
+            // the tick doubles as the connect backoff while attempts
+            // fail; a fresh directive still wakes the wait early
+            let tick = if failed_attempts > 0 {
+                policy.delay_for(failed_attempts - 1)
+            } else {
+                Duration::from_millis(20)
+            };
+            client.wait_directive(seen_seq, tick);
         }
     })
 }
@@ -1053,6 +1149,9 @@ impl SyncTransport for ControlSubscriberTransport {
             Err(_) => TransportCounters::default(),
         };
         c.reparents = self.reparents.load(Ordering::Relaxed);
+        // supervisor-level subscribe retries join the inner backend's
+        // NACK-resend retries under the one unified counter
+        c.retries += self.retries.load(Ordering::Relaxed);
         c.epoch = self.client.epoch();
         c
     }
@@ -1072,6 +1171,7 @@ mod tests {
             min_relay_levels: 1,
             heartbeat_interval: Duration::from_millis(50),
             missed_heartbeats: 100, // liveness not under test here
+            ..Default::default()
         };
         let plane = ControlPlane::start(4242, cfg).unwrap();
         let mut relay_conn = tcp::connect_local(plane.port).unwrap();
@@ -1169,6 +1269,7 @@ mod tests {
             min_relay_levels: 0,
             heartbeat_interval: Duration::from_millis(20),
             missed_heartbeats: 3,
+            ..Default::default()
         };
         let plane = ControlPlane::start(1, cfg).unwrap();
         // a raw relay peer that never heartbeats

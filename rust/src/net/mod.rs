@@ -8,8 +8,13 @@
 //! of them. The [`control`] module adds the operational layer: cluster
 //! membership (JOIN/HEARTBEAT), automatic fan-out planning from the
 //! measured leaf count ([`crate::coordinator::planner`]), and live
-//! re-parenting of relay subtrees when a hop dies.
+//! re-parenting of relay subtrees when a hop dies. The [`chaos`]
+//! module injects seeded wire-level faults (partial writes, mid-frame
+//! resets, corruption, latency, one-way partitions) under any of those
+//! layers, so the recovery machinery is exercised where commodity
+//! networks actually fail.
 
+pub mod chaos;
 pub mod control;
 pub mod node;
 pub mod relay;

@@ -61,10 +61,11 @@
 //! so every peer in the tree knows its distance from the publisher —
 //! `paper topology` prints the per-hop rows.
 
+use super::chaos::{ChaosConfig, Wire};
 use super::relay::Relay;
 use super::tcp::{self, kind, Frame};
 use anyhow::{Context, Result};
-use std::net::{Shutdown, TcpStream};
+use std::net::Shutdown;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -78,7 +79,10 @@ pub struct RelayNode {
     /// Write half of the current upstream connection (NACK escalation
     /// + the SUBSCRIBE handshake); the forward thread owns the read
     /// half. `None` while detached.
-    upstream: Arc<Mutex<Option<TcpStream>>>,
+    upstream: Arc<Mutex<Option<Wire>>>,
+    /// Fault injection for the node's wires (upstream attachments and
+    /// accepted downstream subscribers); `None` = plain TCP.
+    chaos: Option<ChaosConfig>,
     forward: Mutex<Option<std::thread::JoinHandle<()>>>,
     stop: Arc<AtomicBool>,
     /// Bumped on every detach; a forward thread whose generation is
@@ -116,7 +120,20 @@ impl RelayNode {
         queue_depth: usize,
         index_steps: usize,
     ) -> Result<RelayNode> {
-        let node = RelayNode::new(queue_depth, index_steps, true)?;
+        let node = RelayNode::new(queue_depth, index_steps, true, None)?;
+        node.attach_upstream(upstream_port)?;
+        Ok(node)
+    }
+
+    /// [`RelayNode::join_with_opts`] with seeded wire-level fault
+    /// injection on both sides of the hop ([`crate::net::chaos`]).
+    pub fn join_with_chaos(
+        upstream_port: u16,
+        queue_depth: usize,
+        index_steps: usize,
+        chaos: Option<ChaosConfig>,
+    ) -> Result<RelayNode> {
+        let node = RelayNode::new(queue_depth, index_steps, true, chaos)?;
         node.attach_upstream(upstream_port)?;
         Ok(node)
     }
@@ -135,16 +152,29 @@ impl RelayNode {
     /// [`RelayNode::detached`] with explicit queue depth and NACK
     /// frame-index bound.
     pub fn detached_with_opts(queue_depth: usize, index_steps: usize) -> Result<RelayNode> {
-        RelayNode::new(queue_depth, index_steps, false)
+        RelayNode::new(queue_depth, index_steps, false, None)
+    }
+
+    /// [`RelayNode::detached_with_opts`] with seeded wire-level fault
+    /// injection on BOTH sides of the hop: upstream attachments and
+    /// every accepted downstream subscriber ([`crate::net::chaos`]).
+    pub fn detached_with_chaos(
+        queue_depth: usize,
+        index_steps: usize,
+        chaos: Option<ChaosConfig>,
+    ) -> Result<RelayNode> {
+        RelayNode::new(queue_depth, index_steps, false, chaos)
     }
 
     fn new(
         queue_depth: usize,
         index_steps: usize,
         close_on_upstream_loss: bool,
+        chaos: Option<ChaosConfig>,
     ) -> Result<RelayNode> {
-        let relay = Arc::new(Relay::start_with_opts(queue_depth, index_steps)?);
-        let upstream: Arc<Mutex<Option<TcpStream>>> = Arc::new(Mutex::new(None));
+        let relay =
+            Arc::new(Relay::start_with_chaos(queue_depth, index_steps, chaos.clone())?);
+        let upstream: Arc<Mutex<Option<Wire>>> = Arc::new(Mutex::new(None));
         // escalation: a downstream NACK the node's index has evicted is
         // forwarded up the CURRENT upstream connection; the reply
         // (retransmit or NACK_MISS) comes back on the forward thread.
@@ -166,6 +196,7 @@ impl RelayNode {
         Ok(RelayNode {
             relay,
             upstream,
+            chaos,
             forward: Mutex::new(None),
             stop: Arc::new(AtomicBool::new(false)),
             attach_gen: Arc::new(AtomicU64::new(0)),
@@ -184,7 +215,8 @@ impl RelayNode {
     /// the subtree's failover catch-up.
     pub fn attach_upstream(&self, upstream_port: u16) -> Result<()> {
         self.detach_upstream();
-        let mut up = tcp::connect_local(upstream_port).context("connecting upstream")?;
+        let up = tcp::connect_local(upstream_port).context("connecting upstream")?;
+        let mut up = Wire::wrap(up, self.chaos.as_ref());
         tcp::write_frame(
             &mut up,
             &Frame { kind: kind::SUBSCRIBE, payload: 0u64.to_le_bytes().to_vec() },
@@ -281,7 +313,7 @@ impl RelayNode {
 /// without touching the downstream stream.
 #[allow(clippy::too_many_arguments)]
 fn spawn_forward(
-    mut stream: TcpStream,
+    mut stream: Wire,
     relay: Arc<Relay>,
     stop: Arc<AtomicBool>,
     attach_gen: Arc<AtomicU64>,

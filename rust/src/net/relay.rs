@@ -61,6 +61,15 @@
 //! subscriber falls back to the anchor slow path immediately instead
 //! of timing out.
 //!
+//! Escalations are **storm-suppressed**: while a slot's escalation is
+//! inside its backoff window ([`RetryPolicy::escalate_default`]), any
+//! further NACK for it — from the same subscriber re-sending or from k
+//! other leaves missing the same frame — just rides the pending entry
+//! ([`Relay::nacks_suppressed`]); the single upstream retransmit then
+//! fans back to every rider. Past the window the slot is re-escalated
+//! once and the window doubles, so even a mute upstream is asked on a
+//! bounded schedule, not per client NACK.
+//!
 //! # Topology (relay trees)
 //!
 //! A subscriber that sends a [`kind::SUBSCRIBE`] frame gets a
@@ -77,12 +86,15 @@
 //! wedge shutdown (it may lose in-flight frames — it was going to
 //! resync from an anchor anyway).
 
+use super::chaos::{ChaosConfig, Wire};
 use super::tcp::{self, kind, Frame};
+use crate::util::retry::RetryPolicy;
 use anyhow::Result;
 use std::collections::{HashMap, VecDeque};
-use std::net::{Shutdown, TcpListener, TcpStream};
+use std::net::{Shutdown, TcpListener};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
 
 /// Default bound on a subscriber's outbound queue, in frames.
 pub const DEFAULT_QUEUE_DEPTH: usize = 64;
@@ -137,7 +149,7 @@ struct SubHandle {
     chan: Chan,
     /// Clone of the subscriber socket, kept so `stop()` can unblock a
     /// writer stuck in `write` (the reader holds its own clone).
-    stream: TcpStream,
+    stream: Wire,
     writer: Option<std::thread::JoinHandle<()>>,
     reader: Option<std::thread::JoinHandle<()>>,
 }
@@ -167,13 +179,30 @@ struct Shared {
     nacks_escalated: u64,
     /// NACKs answered with NACK_MISS (no upstream, or upstream missed).
     nacks_unserviceable: u64,
-    /// Slots escalated upstream → subscribers awaiting the retransmit.
-    pending_upstream: HashMap<(u64, u32), Vec<Chan>>,
+    /// NACKs absorbed as riders on an in-window escalation instead of
+    /// going upstream again (storm suppression).
+    nacks_suppressed: u64,
+    /// Slots escalated upstream → subscribers awaiting the retransmit,
+    /// plus the escalation backoff state for the slot.
+    pending_upstream: HashMap<(u64, u32), Pending>,
+    /// Backoff schedule for re-escalating an unanswered slot.
+    escalate_policy: RetryPolicy,
     /// Upstream NACK hook; None for a root relay.
     escalate: Option<Escalate>,
     /// This relay's distance from the publisher (0 = root); replied to
     /// SUBSCRIBE frames as a HOP frame.
     hop: u32,
+}
+
+/// One escalated `(step, shard)` slot: the subscribers waiting on the
+/// retransmit, and the backoff state that keeps a NACK storm from
+/// multiplying upstream — k clients re-NACKing inside the current
+/// window ride the one escalation already in flight; only a window
+/// expiry re-asks the upstream (with the window growing per attempt).
+struct Pending {
+    chans: Vec<Chan>,
+    attempts: u32,
+    last: Instant,
 }
 
 impl Shared {
@@ -215,6 +244,17 @@ impl Relay {
     /// (both ≥ 1). A smaller `index_steps` evicts repair slots sooner —
     /// chained-relay tests use this to force upstream escalation.
     pub fn start_with_opts(queue_depth: usize, index_steps: usize) -> Result<Relay> {
+        Relay::start_with_chaos(queue_depth, index_steps, None)
+    }
+
+    /// Start with seeded wire-level fault injection on every accepted
+    /// subscriber socket ([`crate::net::chaos`]); `None` is a plain
+    /// wire, bit-for-bit the un-chaotic relay.
+    pub fn start_with_chaos(
+        queue_depth: usize,
+        index_steps: usize,
+        chaos: Option<ChaosConfig>,
+    ) -> Result<Relay> {
         let (listener, port) = tcp::listen_local()?;
         listener.set_nonblocking(true)?;
         let shared = Arc::new(Mutex::new(Shared {
@@ -229,13 +269,15 @@ impl Relay {
             nacks_serviced: 0,
             nacks_escalated: 0,
             nacks_unserviceable: 0,
+            nacks_suppressed: 0,
             pending_upstream: HashMap::new(),
+            escalate_policy: RetryPolicy::escalate_default(),
             escalate: None,
             hop: 0,
         }));
         let stop = Arc::new(AtomicBool::new(false));
         let accept_thread =
-            Mutex::new(Some(spawn_accept(listener, shared.clone(), stop.clone())));
+            Mutex::new(Some(spawn_accept(listener, shared.clone(), stop.clone(), chaos)));
         Ok(Relay { port, shared, accept_thread, stop })
     }
 
@@ -246,6 +288,13 @@ impl Relay {
     /// [`Relay::deliver_retransmit`] or [`Relay::fail_escalated`].
     pub fn set_escalation(&self, f: impl Fn(u64, u32) -> bool + Send + Sync + 'static) {
         self.shared.lock().unwrap().escalate = Some(Arc::new(f));
+    }
+
+    /// Override the escalation backoff schedule (tests pin it far out
+    /// to make rider counting deterministic, or shrink it to force
+    /// re-escalation quickly).
+    pub fn set_escalation_policy(&self, policy: RetryPolicy) {
+        self.shared.lock().unwrap().escalate_policy = policy;
     }
 
     /// Set this relay's hop distance from the publisher (0 = root),
@@ -403,6 +452,24 @@ impl Relay {
         self.shared.lock().unwrap().nacks_unserviceable
     }
 
+    /// NACKs absorbed as riders on an escalation already in flight
+    /// (inside its backoff window) instead of going upstream again.
+    pub fn nacks_suppressed(&self) -> u64 {
+        self.shared.lock().unwrap().nacks_suppressed
+    }
+
+    /// Subscribers currently waiting on an escalated `(step, shard)`
+    /// slot (0 when nothing is pending for it) — storm tests use this
+    /// to know every rider has registered before answering.
+    pub fn pending_riders(&self, step: u64, shard: u32) -> usize {
+        self.shared
+            .lock()
+            .unwrap()
+            .pending_upstream
+            .get(&(step, shard))
+            .map_or(0, |p| p.chans.len())
+    }
+
     /// Deliver an upstream retransmit for an escalated `(step, shard)`
     /// slot: re-index the frame (so the next NACK for it is served
     /// locally) and enqueue it to exactly the subscribers that were
@@ -412,13 +479,13 @@ impl Relay {
     pub fn deliver_retransmit(&self, step: u64, shard: u32, frame: Frame) -> bool {
         let frame = Arc::new(frame);
         let mut sh = self.shared.lock().unwrap();
-        let chans = match sh.pending_upstream.remove(&(step, shard)) {
-            Some(c) => c,
+        let pending = match sh.pending_upstream.remove(&(step, shard)) {
+            Some(p) => p,
             None => return false,
         };
         sh.index_frame(step, shard, frame.clone());
         sh.nacks_serviced += 1;
-        for chan in &chans {
+        for chan in &pending.chans {
             push_direct(chan, frame.clone());
         }
         true
@@ -429,8 +496,8 @@ impl Relay {
     /// stop waiting and take the anchor slow path.
     pub fn fail_escalated(&self, step: u64, shard: u32) {
         let mut sh = self.shared.lock().unwrap();
-        if let Some(chans) = sh.pending_upstream.remove(&(step, shard)) {
-            miss_waiters(&mut sh, step, shard, &chans);
+        if let Some(p) = sh.pending_upstream.remove(&(step, shard)) {
+            miss_waiters(&mut sh, step, shard, &p.chans);
         }
     }
 
@@ -443,8 +510,8 @@ impl Relay {
     pub fn fail_all_escalated(&self) {
         let mut sh = self.shared.lock().unwrap();
         let pending = std::mem::take(&mut sh.pending_upstream);
-        for ((step, shard), chans) in pending {
-            miss_waiters(&mut sh, step, shard, &chans);
+        for ((step, shard), p) in pending {
+            miss_waiters(&mut sh, step, shard, &p.chans);
         }
     }
 
@@ -491,7 +558,7 @@ impl Relay {
 /// this thread ever blocks on the socket's write half, so a stalled
 /// subscriber cannot delay anyone else.
 fn spawn_writer(
-    mut stream: TcpStream,
+    mut stream: Wire,
     chan: Chan,
     stop: Arc<AtomicBool>,
 ) -> std::thread::JoinHandle<()> {
@@ -534,7 +601,7 @@ fn spawn_writer(
 /// a concurrent publish. The escalation hook is invoked with no lock
 /// held (it writes to the upstream socket).
 fn spawn_reader(
-    mut stream: TcpStream,
+    mut stream: Wire,
     chan: Chan,
     shared: Arc<Mutex<Shared>>,
     stop: Arc<AtomicBool>,
@@ -558,40 +625,61 @@ fn spawn_reader(
                     // we can, otherwise tell the requester explicitly
                     // so it degrades to the anchor slow path instead
                     // of waiting out its NACK timeout
-                    let esc = sh.escalate.clone();
-                    match esc {
-                        Some(esc) => {
-                            // an escalation for this slot already in
-                            // flight answers every rider: duplicating
-                            // the upstream NACK would make the second
-                            // retransmit arrive with nothing pending
-                            // and be rebroadcast as stale stream
-                            // traffic
-                            let in_flight = sh.pending_upstream.contains_key(&(step, shard));
-                            sh.pending_upstream
-                                .entry((step, shard))
-                                .or_default()
-                                .push(chan.clone());
-                            if in_flight {
-                                continue;
+                    let esc = match sh.escalate.clone() {
+                        Some(esc) => esc,
+                        None => {
+                            reply_miss(&mut sh, &chan, step, shard);
+                            continue;
+                        }
+                    };
+                    // one escalation answers every rider: k clients
+                    // NACKing the slot inside the current backoff
+                    // window cost exactly one upstream frame (the
+                    // storm suppression of module docs); only a
+                    // window expiry re-asks the upstream, with the
+                    // window growing per attempt so a mute upstream
+                    // is re-asked on a bounded schedule
+                    let policy = sh.escalate_policy.clone();
+                    use std::collections::hash_map::Entry;
+                    let escalate_now = match sh.pending_upstream.entry((step, shard)) {
+                        Entry::Occupied(mut o) => {
+                            let p = o.get_mut();
+                            if !p.chans.iter().any(|c| Arc::ptr_eq(c, &chan)) {
+                                p.chans.push(chan.clone());
                             }
-                            sh.nacks_escalated += 1;
-                            drop(sh);
-                            if !esc(step, shard) {
-                                // upstream unreachable: the escalation
-                                // never went out, so answer EVERY
-                                // waiter (riders included) with a miss
-                                let mut sh = shared.lock().unwrap();
-                                if let Some(chans) =
-                                    sh.pending_upstream.remove(&(step, shard))
-                                {
-                                    for c in &chans {
-                                        reply_miss(&mut sh, c, step, shard);
-                                    }
-                                }
+                            let window =
+                                policy.delay_for(p.attempts.saturating_sub(1));
+                            if p.last.elapsed() < window {
+                                false
+                            } else {
+                                p.attempts += 1;
+                                p.last = Instant::now();
+                                true
                             }
                         }
-                        None => reply_miss(&mut sh, &chan, step, shard),
+                        Entry::Vacant(v) => {
+                            v.insert(Pending {
+                                chans: vec![chan.clone()],
+                                attempts: 1,
+                                last: Instant::now(),
+                            });
+                            true
+                        }
+                    };
+                    if !escalate_now {
+                        sh.nacks_suppressed += 1;
+                        continue;
+                    }
+                    sh.nacks_escalated += 1;
+                    drop(sh);
+                    if !esc(step, shard) {
+                        // upstream unreachable: the escalation never
+                        // went out, so answer EVERY waiter (riders
+                        // included) with a miss
+                        let mut sh = shared.lock().unwrap();
+                        if let Some(p) = sh.pending_upstream.remove(&(step, shard)) {
+                            miss_waiters(&mut sh, step, shard, &p.chans);
+                        }
                     }
                 }
             }
@@ -622,6 +710,7 @@ fn spawn_accept(
     listener: TcpListener,
     shared: Arc<Mutex<Shared>>,
     stop: Arc<AtomicBool>,
+    chaos: Option<ChaosConfig>,
 ) -> std::thread::JoinHandle<()> {
     std::thread::spawn(move || loop {
         if stop.load(Ordering::SeqCst) {
@@ -630,6 +719,10 @@ fn spawn_accept(
         match listener.accept() {
             Ok((stream, _)) => {
                 stream.set_nodelay(true).ok();
+                // one chaos domain per subscriber connection; clones
+                // share its fault state so both socket halves see one
+                // op sequence
+                let stream = Wire::wrap(stream, chaos.as_ref());
                 let (clone, rclone) = match (stream.try_clone(), stream.try_clone()) {
                     (Ok(c), Ok(r)) => (c, r),
                     _ => continue,
@@ -910,6 +1003,76 @@ mod tests {
         };
         let bytes = container::encode(&patch, &layout, EncodeOpts::default()).unwrap();
         Frame { kind: kind::PATCH, payload: bytes }
+    }
+
+    #[test]
+    fn nack_storm_collapses_to_one_escalation() {
+        // six leaves NACK the same evicted (step, shard) slot inside
+        // one backoff window: exactly ONE escalation goes upstream,
+        // the other five ride it as suppressed, and the single
+        // retransmit heals all six
+        let relay = Relay::start().unwrap();
+        let escalations = Arc::new(std::sync::atomic::AtomicU64::new(0));
+        {
+            let e = escalations.clone();
+            relay.set_escalation(move |_, _| {
+                e.fetch_add(1, Ordering::SeqCst);
+                true // accepted; the test answers it explicitly
+            });
+        }
+        // pin the window far past the test horizon so rider counting
+        // cannot race a re-escalation
+        relay.set_escalation_policy(RetryPolicy::new(
+            std::time::Duration::from_secs(30),
+            2.0,
+            std::time::Duration::from_secs(30),
+            std::time::Duration::from_secs(120),
+        ));
+        let mut conns: Vec<_> =
+            (0..6).map(|_| tcp::connect_local(relay.port).unwrap()).collect();
+        for _ in 0..400 {
+            if relay.subscriber_count() == 6 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert_eq!(relay.subscriber_count(), 6);
+        for conn in &mut conns {
+            tcp::write_frame(
+                conn,
+                &Frame { kind: kind::NACK, payload: tcp::shard_ack_payload(9, 1) },
+            )
+            .unwrap();
+        }
+        // readers are asynchronous: wait until every rider registered
+        for _ in 0..400 {
+            if relay.pending_riders(9, 1) == 6 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert_eq!(relay.pending_riders(9, 1), 6, "all six must ride the slot");
+        assert_eq!(escalations.load(Ordering::SeqCst), 1, "exactly one upstream NACK");
+        assert_eq!(relay.nacks_escalated(), 1);
+        assert_eq!(relay.nacks_suppressed(), 5);
+        // one retransmit fans back to every rider
+        let f = shard_frame(9, 1, 2, 3);
+        assert!(relay.deliver_retransmit(9, 1, f.clone()));
+        for conn in &mut conns {
+            assert_eq!(tcp::read_frame(conn).unwrap(), f, "every rider must heal");
+        }
+        assert_eq!(relay.pending_riders(9, 1), 0);
+        assert_eq!(relay.nacks_unserviceable(), 0);
+        // the retransmit was re-indexed: the next NACK is served
+        // locally, no new escalation
+        tcp::write_frame(
+            &mut conns[0],
+            &Frame { kind: kind::NACK, payload: tcp::shard_ack_payload(9, 1) },
+        )
+        .unwrap();
+        assert_eq!(tcp::read_frame(&mut conns[0]).unwrap(), f);
+        assert_eq!(escalations.load(Ordering::SeqCst), 1);
+        relay.stop();
     }
 
     #[test]

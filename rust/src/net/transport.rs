@@ -33,7 +33,9 @@
 //!   `v3:<shards>:<root>` for a sharded step
 //!   ([`sharded_marker`]/[`parse_sharded_marker`]), and
 //!   `v2:<chunk_elems>:<root>` (or a legacy bare scalar hash) for
-//!   anchors.
+//!   anchors. Any of them may carry an optional `g<gen>;` prefix — the
+//!   publisher generation ([`split_generation`]); its absence means
+//!   generation 0, so pre-generation stores stay readable.
 //!
 //! # Adding a backend
 //!
@@ -55,6 +57,7 @@ use crate::net::tcp::{self, kind, Frame};
 use crate::sparse::container;
 use crate::storage::retention::{self, Inventory, RetentionPolicy};
 use crate::storage::ObjectStore;
+use crate::util::retry::RetryPolicy;
 use crate::util::rng::splitmix64;
 use anyhow::{bail, Context, Result};
 use std::collections::{BTreeMap, HashSet};
@@ -67,9 +70,6 @@ use std::time::{Duration, Instant};
 /// Upper bound on the shard count accepted from untrusted markers and
 /// headers (a corrupted marker must not drive per-shard allocations).
 pub const MAX_SHARDS: u32 = 4096;
-
-/// How long the relay backend waits for a NACKed shard retransmit.
-pub const NACK_TIMEOUT: Duration = Duration::from_secs(5);
 
 /// Marker substring carried by the error [`RelayTransport::fetch_shard`]
 /// returns when the relay answered a repair NACK with NACK_MISS (the
@@ -111,6 +111,28 @@ pub fn anchor_ready_key(step: u64) -> String {
 /// Sharded delta ready-marker payload: `v3:<shard_count>:<root_hex>`.
 pub fn sharded_marker(shard_count: u32, root: &str) -> String {
     format!("v3:{}:{}", shard_count, root)
+}
+
+/// Split an optional publisher-generation prefix off a marker:
+/// `g<n>;<body>` yields `(n, body)`, anything else `(0, whole)`.
+///
+/// The prefix is how a restarted publisher ([`crate::pulse::sync`])
+/// tags everything it commits after resuming from the latest anchor,
+/// so consumers can tell a rewound-and-republished step from the
+/// original. `g` is not a hex digit, so the prefix can never collide
+/// with a bare-root marker; a malformed prefix is treated as body (the
+/// downstream grammar then rejects it).
+pub fn split_generation(marker: &str) -> (u64, &str) {
+    if let Some(rest) = marker.strip_prefix('g') {
+        if let Some((num, body)) = rest.split_once(';') {
+            if !num.is_empty() && num.bytes().all(|b| b.is_ascii_digit()) {
+                if let Ok(g) = num.parse::<u64>() {
+                    return (g, body);
+                }
+            }
+        }
+    }
+    (0, marker)
 }
 
 /// Parse a sharded delta marker; `None` for unsharded (bare-root)
@@ -215,6 +237,18 @@ pub struct TransportCounters {
     /// was evicted along the whole relay path, so the repair degraded
     /// to the anchor slow path.
     pub nacks_unserviceable: u64,
+    /// Recovery attempts re-issued on a [`RetryPolicy`] backoff
+    /// boundary (NACK re-sends, supervisor re-connects) — 0 on a
+    /// healthy fabric.
+    pub retries: u64,
+    /// Recovery sequences that drained their whole retry budget and
+    /// abandoned the slot (the consumer then degrades to the anchor
+    /// slow path).
+    pub gave_up: u64,
+    /// Duplicate repair requests absorbed by in-flight dedup instead
+    /// of reaching the wire (client side: concurrent fetches of one
+    /// slot ride a single outstanding NACK).
+    pub nack_suppressed: u64,
     /// Fault decorator only: faults actually injected.
     pub faults_injected: u64,
     /// Control-plane fabrics only: times the subscription was
@@ -236,6 +270,9 @@ struct CounterCell {
     bytes_fetched: AtomicU64,
     nacks_sent: AtomicU64,
     nacks_unserviceable: AtomicU64,
+    retries: AtomicU64,
+    gave_up: AtomicU64,
+    nack_suppressed: AtomicU64,
 }
 
 impl CounterCell {
@@ -249,6 +286,9 @@ impl CounterCell {
             bytes_fetched: self.bytes_fetched.load(Ordering::Relaxed),
             nacks_sent: self.nacks_sent.load(Ordering::Relaxed),
             nacks_unserviceable: self.nacks_unserviceable.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            gave_up: self.gave_up.load(Ordering::Relaxed),
+            nack_suppressed: self.nack_suppressed.load(Ordering::Relaxed),
             faults_injected: 0,
             reparents: 0,
             epoch: 0,
@@ -368,7 +408,8 @@ impl SyncTransport for ObjectStoreTransport {
             Ok(m) => String::from_utf8_lossy(&m).into_owned(),
             Err(_) => return Ok(None),
         };
-        if let Some((shard_count, root)) = parse_sharded_marker(&marker) {
+        let (_, marker) = split_generation(&marker);
+        if let Some((shard_count, root)) = parse_sharded_marker(marker) {
             return Ok(Some(StepData::Sharded { shard_count, root: root.to_string() }));
         }
         let obj = self.store.get(&self.key(delta_key(step)))?;
@@ -529,7 +570,8 @@ impl SyncTransport for InProcTransport {
             Some(m) => m.clone(),
             None => return Ok(None),
         };
-        if let Some((shard_count, root)) = parse_sharded_marker(&marker) {
+        let (_, marker) = split_generation(&marker);
+        if let Some((shard_count, root)) = parse_sharded_marker(marker) {
             return Ok(Some(StepData::Sharded { shard_count, root: root.to_string() }));
         }
         let obj = st
@@ -599,6 +641,9 @@ struct Subscriber {
     conn: Mutex<TcpStream>,
     reader: Option<std::thread::JoinHandle<()>>,
     counters: Arc<CounterCell>,
+    /// Backoff/budget for the NACK repair seam
+    /// ([`RetryPolicy::nack_default`] unless overridden).
+    nack_policy: RetryPolicy,
 }
 
 #[derive(Default)]
@@ -614,6 +659,10 @@ struct SubState {
     /// waiting `fetch_shard` consumes its entry and errors out so the
     /// consumer degrades to the anchor slow path immediately.
     unserviceable: HashSet<(u64, u32)>,
+    /// Slots with a NACK currently outstanding on the wire: concurrent
+    /// fetches of the same slot ride the first one's answer instead of
+    /// multiplying repair traffic (counted as `nack_suppressed`).
+    nack_inflight: HashSet<(u64, u32)>,
     /// Relay hops between this subscriber and the publisher (from the
     /// HOP reply to our SUBSCRIBE; None until it arrives).
     hops: Option<u32>,
@@ -686,6 +735,7 @@ impl DeltaStage {
     /// Shards this step's marker promises (1 for unsharded).
     fn expected_shards(&self) -> Option<u32> {
         let m = self.marker.as_deref()?;
+        let (_, m) = split_generation(m);
         Some(parse_sharded_marker(m).map(|(s, _)| s).unwrap_or(1))
     }
 
@@ -734,8 +784,23 @@ impl RelayTransport {
                 conn: Mutex::new(stream),
                 reader: Some(reader),
                 counters: Arc::new(CounterCell::default()),
+                nack_policy: RetryPolicy::nack_default(),
             })),
         })
+    }
+
+    /// Subscriber role: override the NACK repair backoff/budget
+    /// (chaos tests shrink it; latency-sensitive deployments tune it).
+    pub fn set_nack_policy(&mut self, policy: RetryPolicy) -> Result<()> {
+        match &mut self.role {
+            RelayRole::Subscriber(sub) => {
+                sub.nack_policy = policy;
+                Ok(())
+            }
+            RelayRole::Publisher { .. } => {
+                bail!("publisher-side relay transport has no NACK policy")
+            }
+        }
     }
 
     /// Publisher role: broadcast an orderly end-of-stream.
@@ -901,6 +966,18 @@ fn spawn_receiver(
     })
 }
 
+/// Put one repair NACK for `(step, shard)` on the wire and count it.
+fn send_nack(sub: &Subscriber, step: u64, shard: u32) -> Result<()> {
+    let mut conn = sub.conn.lock().unwrap();
+    tcp::write_frame(
+        &mut conn,
+        &Frame { kind: kind::NACK, payload: tcp::shard_ack_payload(step, shard) },
+    )
+    .context("sending shard NACK")?;
+    sub.counters.bump(&sub.counters.nacks_sent);
+    Ok(())
+}
+
 impl SyncTransport for RelayTransport {
     fn name(&self) -> &'static str {
         "relay"
@@ -958,7 +1035,8 @@ impl SyncTransport for RelayTransport {
             Some(m) => m.clone(),
             None => return Ok(None),
         };
-        if let Some((shard_count, root)) = parse_sharded_marker(&marker) {
+        let (_, marker) = split_generation(&marker);
+        if let Some((shard_count, root)) = parse_sharded_marker(marker) {
             return Ok(Some(StepData::Sharded { shard_count, root: root.to_string() }));
         }
         let obj = stage
@@ -992,31 +1070,56 @@ impl SyncTransport for RelayTransport {
         // repair (or a frame that never arrived): NACK the slot and
         // wait for the relay's per-subscriber retransmit to land as a
         // new generation — or for an explicit NACK_MISS saying the
-        // slot is unserviceable along the whole relay path
+        // slot is unserviceable along the whole relay path. Exactly
+        // one NACK per slot is outstanding at a time: concurrent
+        // fetches ride it (`nack_suppressed`), and the owner re-sends
+        // on the RetryPolicy backoff schedule (`retries`, for a NACK
+        // or retransmit lost on a faulty wire) until the budget is
+        // spent (`gave_up`).
         let base_generation = staged.map(|(_, g)| g).unwrap_or(0);
-        {
-            // a stale miss flag from an earlier attempt must not
-            // short-circuit this fresh NACK's answer
-            lock.lock().unwrap().unserviceable.remove(&(step, shard));
-            let mut conn = sub.conn.lock().unwrap();
-            tcp::write_frame(
-                &mut conn,
-                &Frame { kind: kind::NACK, payload: tcp::shard_ack_payload(step, shard) },
-            )
-            .context("sending shard NACK")?;
-            sub.counters.bump(&sub.counters.nacks_sent);
+        let owner = {
+            let mut st = lock.lock().unwrap();
+            if st.nack_inflight.insert((step, shard)) {
+                // a stale miss flag from an earlier attempt must not
+                // short-circuit this fresh NACK's answer
+                st.unserviceable.remove(&(step, shard));
+                true
+            } else {
+                sub.counters.bump(&sub.counters.nack_suppressed);
+                false
+            }
+        };
+        if owner {
+            if let Err(e) = send_nack(sub, step, shard) {
+                lock.lock().unwrap().nack_inflight.remove(&(step, shard));
+                return Err(e);
+            }
         }
-        let deadline = Instant::now() + NACK_TIMEOUT;
+        let mut retry = sub.nack_policy.start();
+        let deadline = retry.deadline();
+        let mut next_resend = if owner {
+            retry.next_delay().map(|d| Instant::now() + d)
+        } else {
+            None
+        };
         let mut st = lock.lock().unwrap();
         loop {
             if let Some((bytes, g)) = st.deltas.get(&step).and_then(|d| d.frames.get(&shard)) {
                 if *g > base_generation {
                     let out = bytes.clone();
+                    if owner {
+                        st.nack_inflight.remove(&(step, shard));
+                        cv.notify_all();
+                    }
                     sub.counters.fetched(out.len());
                     return Ok(out);
                 }
             }
             if st.unserviceable.remove(&(step, shard)) {
+                if owner {
+                    st.nack_inflight.remove(&(step, shard));
+                    cv.notify_all();
+                }
                 sub.counters.bump(&sub.counters.nacks_unserviceable);
                 bail!(
                     "shard {} of step {}: {} (slot evicted along the relay path)",
@@ -1026,13 +1129,43 @@ impl SyncTransport for RelayTransport {
                 );
             }
             if st.closed {
+                if owner {
+                    st.nack_inflight.remove(&(step, shard));
+                }
                 bail!("relay stream closed awaiting shard {} of step {}", shard, step);
             }
             let now = Instant::now();
             if now >= deadline {
-                bail!("timed out awaiting retransmit of shard {} step {}", shard, step);
+                if owner {
+                    st.nack_inflight.remove(&(step, shard));
+                    cv.notify_all();
+                }
+                sub.counters.bump(&sub.counters.gave_up);
+                bail!(
+                    "timed out awaiting retransmit of shard {} step {} ({} resends)",
+                    shard,
+                    step,
+                    retry.attempts().saturating_sub(1)
+                );
             }
-            st = cv.wait_timeout(st, deadline - now).unwrap().0;
+            if let Some(t) = next_resend {
+                if now >= t {
+                    // backoff window expired unanswered: the NACK (or
+                    // its retransmit) may have died on a faulty wire —
+                    // re-send and count the retry
+                    drop(st);
+                    if let Err(e) = send_nack(sub, step, shard) {
+                        lock.lock().unwrap().nack_inflight.remove(&(step, shard));
+                        return Err(e);
+                    }
+                    sub.counters.bump(&sub.counters.retries);
+                    next_resend = retry.next_delay().map(|d| Instant::now() + d);
+                    st = lock.lock().unwrap();
+                    continue;
+                }
+            }
+            let wake = next_resend.map_or(deadline, |t| t.min(deadline));
+            st = cv.wait_timeout(st, wake - now).unwrap().0;
         }
     }
 
@@ -1534,8 +1667,8 @@ mod tests {
         let err = consumer.fetch_shard(1, 1).unwrap_err();
         assert!(is_unserviceable(&err), "error must carry the marker: {:#}", err);
         assert!(
-            t0.elapsed() < NACK_TIMEOUT / 2,
-            "NACK_MISS must fail fast, not wait out the timeout"
+            t0.elapsed() < RetryPolicy::nack_default().total / 2,
+            "NACK_MISS must fail fast, not wait out the retry budget"
         );
         assert_eq!(consumer.counters().nacks_unserviceable, 1);
         assert_eq!(relay.nacks_unserviceable(), 1);
@@ -1553,6 +1686,227 @@ mod tests {
         producer
             .publish_marker(MarkerId::Delta(step), &sharded_marker(shards, &"ab".repeat(32)))
             .unwrap();
+    }
+
+    /// A v3-shaped shard frame whose container header peeks as
+    /// `(step, shard, of)` — what a relay retransmit carries.
+    fn shard_frame_bytes(step: u64, shard: u32, of: u32) -> Vec<u8> {
+        let n = 2048usize;
+        let layout = crate::sparse::synthetic_layout(n, 64);
+        let per = n as u64 / of as u64;
+        let patch = container::Patch {
+            step,
+            base_step: step.saturating_sub(1),
+            total_params: n as u64,
+            indices: vec![shard as u64 * per],
+            values: container::Values::Bf16(vec![7u16]),
+            result_hash: "ab".repeat(32),
+            chunk_elems: 64,
+            shard_index: shard,
+            shard_count: of,
+            elem_offset: shard as u64 * per,
+            elem_len: per,
+            shard_root: "cd".repeat(32),
+        };
+        container::encode(&patch, &layout, container::EncodeOpts::default()).unwrap()
+    }
+
+    /// Block until the subscriber has staged at least one delta step.
+    fn wait_staged(consumer: &RelayTransport) {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while consumer.sub_side().unwrap().state.0.lock().unwrap().deltas.is_empty() {
+            assert!(Instant::now() < deadline, "marker never staged");
+            std::thread::sleep(Duration::from_millis(3));
+        }
+    }
+
+    #[test]
+    fn concurrent_fetches_of_one_slot_send_one_nack() {
+        // client-side storm suppression: two fetches of the same
+        // evicted slot put exactly one NACK on the wire; the second
+        // rides the first one's answer and is counted as suppressed
+        let relay = Arc::new(Relay::start().unwrap());
+        let escalations = Arc::new(AtomicU64::new(0));
+        {
+            let e = escalations.clone();
+            relay.set_escalation(move |_, _| {
+                e.fetch_add(1, Ordering::SeqCst);
+                true // accepted upstream; answered later by the test
+            });
+        }
+        let mut consumer = RelayTransport::subscribe(relay.port).unwrap();
+        // a resend schedule far past the test horizon keeps the wire
+        // deterministic: exactly one NACK unless the test misbehaves
+        consumer
+            .set_nack_policy(RetryPolicy::new(
+                Duration::from_secs(5),
+                2.0,
+                Duration::from_secs(5),
+                Duration::from_secs(20),
+            ))
+            .unwrap();
+        let consumer = Arc::new(consumer);
+        producer_stage_marker(&relay, 1, 2);
+        wait_staged(&consumer);
+        let c1 = consumer.clone();
+        let h1 = std::thread::spawn(move || c1.fetch_shard(1, 1));
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while consumer.counters().nacks_sent < 1 || escalations.load(Ordering::SeqCst) < 1 {
+            assert!(Instant::now() < deadline, "first NACK never escalated");
+            std::thread::sleep(Duration::from_millis(3));
+        }
+        let c2 = consumer.clone();
+        let h2 = std::thread::spawn(move || c2.fetch_shard(1, 1));
+        while consumer.counters().nack_suppressed < 1 {
+            assert!(Instant::now() < deadline, "second fetch never suppressed");
+            std::thread::sleep(Duration::from_millis(3));
+        }
+        // answer the single escalated slot once; both fetches heal
+        assert!(relay.deliver_retransmit(
+            1,
+            1,
+            Frame { kind: kind::PATCH, payload: shard_frame_bytes(1, 1, 2) },
+        ));
+        let a = h1.join().unwrap().unwrap();
+        let b = h2.join().unwrap().unwrap();
+        assert_eq!(a, b, "both fetches must heal from the single retransmit");
+        assert_eq!(escalations.load(Ordering::SeqCst), 1, "one upstream escalation");
+        let c = consumer.counters();
+        assert_eq!(c.nacks_sent, 1, "one NACK on the wire");
+        assert_eq!(c.nack_suppressed, 1);
+        assert_eq!(c.gave_up, 0);
+        drop(consumer);
+        relay.stop();
+    }
+
+    #[test]
+    fn nack_resends_are_counted_as_retries() {
+        // a mute upstream (escalation accepted, never answered) forces
+        // the owner through its backoff schedule; each boundary
+        // re-sends the NACK and counts a retry, and the late
+        // retransmit still heals the fetch
+        let relay = Arc::new(Relay::start().unwrap());
+        relay.set_escalation(|_, _| true);
+        let mut consumer = RelayTransport::subscribe(relay.port).unwrap();
+        consumer
+            .set_nack_policy(RetryPolicy::new(
+                Duration::from_millis(30),
+                2.0,
+                Duration::from_millis(60),
+                Duration::from_secs(10),
+            ))
+            .unwrap();
+        let consumer = Arc::new(consumer);
+        producer_stage_marker(&relay, 1, 2);
+        wait_staged(&consumer);
+        let c1 = consumer.clone();
+        let h = std::thread::spawn(move || c1.fetch_shard(1, 1));
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while consumer.counters().retries < 2 {
+            assert!(Instant::now() < deadline, "resends never happened");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(relay.deliver_retransmit(
+            1,
+            1,
+            Frame { kind: kind::PATCH, payload: shard_frame_bytes(1, 1, 2) },
+        ));
+        let bytes = h.join().unwrap().unwrap();
+        assert!(!bytes.is_empty());
+        let c = consumer.counters();
+        assert!(c.retries >= 2, "retries={}", c.retries);
+        assert!(c.nacks_sent >= 3, "initial + resends, got {}", c.nacks_sent);
+        assert_eq!(c.gave_up, 0);
+        drop(consumer);
+        relay.stop();
+    }
+
+    #[test]
+    fn nack_budget_exhaustion_counts_gave_up() {
+        // the upstream swallows the escalation forever: the fetch must
+        // drain its (tiny) retry budget, count gave_up, and error with
+        // a timeout — NOT the unserviceable marker (nothing said the
+        // slot is gone; the consumer may still slow-path past it)
+        let relay = Arc::new(Relay::start().unwrap());
+        relay.set_escalation(|_, _| true);
+        let mut consumer = RelayTransport::subscribe(relay.port).unwrap();
+        consumer
+            .set_nack_policy(RetryPolicy::new(
+                Duration::from_millis(20),
+                2.0,
+                Duration::from_millis(40),
+                Duration::from_millis(150),
+            ))
+            .unwrap();
+        producer_stage_marker(&relay, 1, 2);
+        wait_staged(&consumer);
+        let err = consumer.fetch_shard(1, 1).unwrap_err();
+        assert!(
+            format!("{:#}", err).contains("timed out"),
+            "budget exhaustion must read as a timeout: {:#}",
+            err
+        );
+        assert!(!is_unserviceable(&err));
+        let c = consumer.counters();
+        assert_eq!(c.gave_up, 1);
+        assert_eq!(c.nack_suppressed, 0);
+        drop(consumer);
+        relay.stop();
+    }
+
+    #[test]
+    fn generation_prefix_grammar() {
+        assert_eq!(split_generation("abc"), (0, "abc"));
+        assert_eq!(split_generation("g3;v3:4:root"), (3, "v3:4:root"));
+        assert_eq!(split_generation("g0;x"), (0, "x"));
+        // malformed prefixes fall through whole
+        assert_eq!(split_generation("g;x"), (0, "g;x"));
+        assert_eq!(split_generation("g12"), (0, "g12"));
+        assert_eq!(split_generation("gg;x"), (0, "gg;x"));
+        // a generation-tagged sharded marker still parses after split
+        let m = format!("g2;{}", sharded_marker(4, &"ab".repeat(32)));
+        let (g, body) = split_generation(&m);
+        assert_eq!(g, 2);
+        assert_eq!(parse_sharded_marker(body).unwrap().0, 4);
+    }
+
+    #[test]
+    fn fetch_step_sees_through_the_generation_prefix() {
+        let t = InProcTransport::new();
+        t.publish_frame(FrameId::Delta { step: 1 }, b"obj").unwrap();
+        t.publish_marker(MarkerId::Delta(1), &format!("g2;{}", "ab".repeat(32))).unwrap();
+        assert_eq!(t.fetch_step(1).unwrap(), Some(StepData::Whole(b"obj".to_vec())));
+        t.publish_marker(
+            MarkerId::Delta(2),
+            &format!("g2;{}", sharded_marker(2, &"cd".repeat(32))),
+        )
+        .unwrap();
+        assert_eq!(
+            t.fetch_step(2).unwrap(),
+            Some(StepData::Sharded { shard_count: 2, root: "cd".repeat(32) }),
+            "a g-prefixed v3 marker must still read as sharded"
+        );
+    }
+
+    #[test]
+    fn fault_decorator_marker_delay_is_deterministic_per_seed() {
+        let mk = || {
+            let inner = InProcTransport::new();
+            for step in 1..=6u64 {
+                inner.publish_frame(FrameId::Delta { step }, b"d").unwrap();
+                inner.publish_marker(MarkerId::Delta(step), &"ab".repeat(32)).unwrap();
+            }
+            inner
+        };
+        let plan = FaultPlan { delay_marker_prob: 0.5, ..FaultPlan::default() };
+        let a = FaultInjectingTransport::new(mk(), 9, plan);
+        let b = FaultInjectingTransport::new(mk(), 9, plan);
+        assert_eq!(
+            a.latest_ready().unwrap().delta_steps,
+            b.latest_ready().unwrap().delta_steps,
+            "same seed must hide (or not hide) the same head"
+        );
+        assert_eq!(a.injected(), b.injected());
     }
 
     #[test]

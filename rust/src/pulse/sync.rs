@@ -103,6 +103,13 @@ pub use crate::net::transport::MAX_SHARDS;
 /// Anchor ready-marker payload: `v2:<chunk_elems>:<root_hex>` for
 /// hash-tree verification. Legacy markers are the bare scalar SHA-256
 /// hex of the raw BF16 bytes and still verify.
+///
+/// Either form may carry a publisher-generation prefix (`g<n>;`, see
+/// [`crate::net::transport::split_generation`]): a [`Publisher`] that
+/// resumed after a crash re-commits the anchor it recovered from and
+/// publishes every subsequent marker under the next generation, so
+/// consumers can tell a rewound lineage from a stale poll. Generation
+/// 0 omits the prefix, keeping pre-recovery stores byte-identical.
 fn anchor_marker(tree: &HashTree) -> String {
     format!("v2:{}:{}", tree.chunk_elems(), tree.root_hex())
 }
@@ -322,10 +329,53 @@ pub struct Publisher<T: SyncTransport = ObjectStoreTransport> {
     /// Shards per published step (1 = classic single-frame publish;
     /// shard ranges align to hash-tree chunk boundaries).
     pub shard_count: usize,
+    /// Publisher generation: 0 for a fresh lineage (markers stay
+    /// untagged, wire-compatible with every earlier store), bumped by
+    /// [`Publisher::resume_over`] after a crash so consumers detect
+    /// the rewound lineage from the `g<n>;` marker prefix.
+    pub generation: u64,
     /// Previous published view + hash tree, advanced per publish.
     enc: ShardedEncoder,
     /// Test hook: force the next delta upload to fail (§J.5 recovery).
     pub fail_next_delta: bool,
+}
+
+/// Read the newest anchor on `transport`: the recovery point for a
+/// restarted publisher. Returns the anchor's weights, its step, and
+/// the generation its ready marker carries (0 for untagged markers).
+/// The anchor is verified against its marker before being trusted.
+pub fn recover_anchor_state<T: SyncTransport>(transport: &T) -> Result<(Vec<u16>, u64, u64)> {
+    let inv = transport.latest_ready()?;
+    let step = inv
+        .anchor_steps
+        .last()
+        .copied()
+        .ok_or_else(|| anyhow::anyhow!("no anchor to resume from on {}", transport.name()))?;
+    let (obj, marker) = transport
+        .fetch_anchor(step)
+        .with_context(|| format!("recovery anchor {}", step))?;
+    if obj.len() < 20 || &obj[0..4] != b"PLSA" {
+        bail!("bad anchor header");
+    }
+    let astep = u64::from_le_bytes(obj[4..12].try_into().unwrap());
+    let n = u64::from_le_bytes(obj[12..20].try_into().unwrap()) as usize;
+    if astep != step {
+        bail!("anchor step mismatch");
+    }
+    let raw = Codec::Zstd1.decompress(&obj[20..], n * 2)?;
+    let w = crate::util::bytes_to_u16(&raw);
+    if w.len() != n {
+        bail!("anchor length mismatch");
+    }
+    let (generation, body) = crate::net::transport::split_generation(&marker);
+    if let Some((chunk_elems, root)) = parse_anchor_marker(body) {
+        if HashTree::build(&w, chunk_elems).root_hex() != root {
+            bail!("anchor hash mismatch at step {}", step);
+        }
+    } else if !body.is_empty() && body != sha256_hex(u16_as_bytes(&w)) {
+        bail!("anchor hash mismatch at step {}", step);
+    }
+    Ok((w, step, generation))
 }
 
 impl Publisher<ObjectStoreTransport> {
@@ -357,11 +407,62 @@ impl<T: SyncTransport> Publisher<T> {
             opts: EncodeOpts::default(),
             anchor_interval: anchor_interval.max(1),
             shard_count: 1,
+            generation: 0,
             enc: ShardedEncoder::new(initial, 0),
             fail_next_delta: false,
         };
         p.upload_anchor(0)?;
         Ok(p)
+    }
+
+    /// Continue an existing lineage after a crash: start from `weights`
+    /// at `step`, publish as `generation`, and immediately re-commit
+    /// the anchor under the new generation so consumers detect the
+    /// bump. Steps published by the dead publisher past `step` are
+    /// abandoned — the lineage rewinds to the anchor, exactly as §J.5
+    /// rewinds a single failed delta.
+    pub fn resume(
+        transport: T,
+        layout: Vec<TensorShape>,
+        weights: Vec<u16>,
+        step: u64,
+        generation: u64,
+        anchor_interval: u64,
+    ) -> Result<Publisher<T>> {
+        let mut p = Publisher {
+            transport,
+            layout,
+            opts: EncodeOpts::default(),
+            anchor_interval: anchor_interval.max(1),
+            shard_count: 1,
+            generation,
+            enc: ShardedEncoder::new(weights, step),
+            fail_next_delta: false,
+        };
+        p.upload_anchor(step)?;
+        Ok(p)
+    }
+
+    /// Crash-recovery constructor: resume from the transport's own
+    /// newest anchor as the next generation
+    /// ([`recover_anchor_state`] + [`Publisher::resume`]).
+    pub fn resume_over(
+        transport: T,
+        layout: Vec<TensorShape>,
+        anchor_interval: u64,
+    ) -> Result<Publisher<T>> {
+        let (w, step, gen) = recover_anchor_state(&transport)?;
+        Publisher::resume(transport, layout, w, step, gen + 1, anchor_interval)
+    }
+
+    /// Ready-marker text for this publisher's generation: untagged for
+    /// generation 0, `g<n>;`-prefixed otherwise.
+    fn marker_text(&self, body: &str) -> String {
+        if self.generation == 0 {
+            body.to_string()
+        } else {
+            format!("g{};{}", self.generation, body)
+        }
     }
 
     /// Builder-style shard count override (clamped to [`MAX_SHARDS`]).
@@ -400,8 +501,9 @@ impl<T: SyncTransport> Publisher<T> {
         obj.extend_from_slice(&comp);
         self.transport.publish_frame(FrameId::Anchor { step }, &obj)?;
         // anchor ready marker carries the hash-tree geometry + root
-        self.transport
-            .publish_marker(MarkerId::Anchor(step), &anchor_marker(self.enc.tree()))?;
+        // (plus the generation tag for resumed lineages)
+        let marker = self.marker_text(&anchor_marker(self.enc.tree()));
+        self.transport.publish_marker(MarkerId::Anchor(step), &marker)?;
         Ok(obj.len() as u64)
     }
 
@@ -440,7 +542,8 @@ impl<T: SyncTransport> Publisher<T> {
         if encoded.frames.len() == 1 {
             self.transport
                 .publish_frame(FrameId::Delta { step }, &encoded.frames[0].bytes)?;
-            self.transport.publish_marker(MarkerId::Delta(step), &encoded.root)?;
+            self.transport
+                .publish_marker(MarkerId::Delta(step), &self.marker_text(&encoded.root))?;
         } else {
             // pipelined fan-out: each shard frame publishes on its own
             // pool worker, overlapping fabric latency across shards;
@@ -458,7 +561,8 @@ impl<T: SyncTransport> Publisher<T> {
                 encoded.frames.len() as u32,
                 &encoded.root,
             );
-            self.transport.publish_marker(MarkerId::Delta(step), &marker)?;
+            self.transport
+                .publish_marker(MarkerId::Delta(step), &self.marker_text(&marker))?;
         }
         if step % self.anchor_interval == 0 {
             stats.anchor_bytes = self.upload_anchor(step)?;
@@ -499,6 +603,22 @@ pub struct SyncStats {
     /// Survives the fast-path → slow-path fallback, like
     /// `bytes_downloaded`.
     pub nacks_unserviceable: usize,
+    /// Repair NACKs re-sent after a backoff boundary passed with the
+    /// retransmit still missing (snapshot of
+    /// `TransportCounters::retries`, cumulative like `reparents`).
+    pub retries: u64,
+    /// Repair fetches whose whole [`crate::util::retry::RetryPolicy`]
+    /// budget drained without a retransmit (cumulative snapshot of
+    /// `TransportCounters::gave_up`).
+    pub gave_up: u64,
+    /// Duplicate repair NACKs the transport suppressed because the
+    /// same `(step, shard)` already had one in flight (cumulative
+    /// snapshot of `TransportCounters::nack_suppressed`).
+    pub nack_suppressed: u64,
+    /// Publisher generation this consumer last anchored against (0
+    /// until a generation-tagged anchor is seen; bumps when a
+    /// restarted publisher's re-anchor is adopted).
+    pub generation: u64,
     /// Cumulative upstream re-parents the transport has performed so
     /// far (control-plane fabrics; 0 on statically-wired backends).
     /// Snapshot of `TransportCounters::reparents` at the end of the
@@ -528,6 +648,11 @@ pub struct Consumer<T: SyncTransport = ObjectStoreTransport> {
     /// Local BF16 weights (None until first slow-path sync).
     pub weights: Option<Vec<u16>>,
     pub step: u64,
+    /// Publisher generation of the last anchor adopted (0 until a
+    /// `g<n>;`-tagged marker is seen). A bump means the publisher
+    /// restarted and rewound; the consumer re-anchors on the new
+    /// lineage instead of chaining across it.
+    pub generation: u64,
     /// Hash tree mirroring `weights`, reused across synchronize() calls
     /// so the fast path verifies in O(nnz · chunk). None until built
     /// from an anchor, or after a legacy v1 patch made it stale.
@@ -558,7 +683,15 @@ impl Consumer<ObjectStoreTransport> {
 impl<T: SyncTransport> Consumer<T> {
     /// Consumer over any transport.
     pub fn over(transport: T, layout: Vec<TensorShape>) -> Consumer<T> {
-        Consumer { transport, layout, weights: None, step: 0, tree: None, cached_inv: None }
+        Consumer {
+            transport,
+            layout,
+            weights: None,
+            step: 0,
+            generation: 0,
+            tree: None,
+            cached_inv: None,
+        }
     }
 
     /// Root of the hash tree mirroring the local weights (None before
@@ -589,6 +722,9 @@ impl<T: SyncTransport> Consumer<T> {
         let counters = self.transport.counters();
         stats.reparents = counters.reparents;
         stats.epoch = counters.epoch;
+        stats.retries = counters.retries;
+        stats.gave_up = counters.gave_up;
+        stats.nack_suppressed = counters.nack_suppressed;
         Ok(stats)
     }
 
@@ -612,6 +748,7 @@ impl<T: SyncTransport> Consumer<T> {
             from_step: self.step,
             to_step: latest,
             transport: self.transport.name(),
+            generation: self.generation,
             ..Default::default()
         };
         if self.weights.is_some() && latest == self.step {
@@ -620,30 +757,37 @@ impl<T: SyncTransport> Consumer<T> {
             return Ok(stats);
         }
         if let Some(w) = self.weights.clone() {
-            // try fast/chain path: apply deltas step+1 ..= latest
-            let tree = self.tree.take();
-            match self.apply_chain(w, tree, self.step, latest, &mut stats) {
-                Ok((weights, tree)) => {
-                    self.weights = Some(weights);
-                    self.tree = tree;
-                    self.step = latest;
-                    stats.path = if latest == stats.from_step + 1 {
-                        SyncPath::Fast
-                    } else {
-                        SyncPath::Chain
-                    };
-                    stats.verified = true;
-                    return Ok(stats);
-                }
-                Err(_) => {
-                    // fall through to slow path; drop the abandoned
-                    // attempt's apply counters (the slow path rebuilds
-                    // from an anchor) but keep bytes_downloaded — those
-                    // bytes really were transferred
-                    stats.patches_applied = 0;
-                    stats.anchors_restored = 0;
+            if latest > self.step {
+                // try fast/chain path: apply deltas step+1 ..= latest
+                let tree = self.tree.take();
+                match self.apply_chain(w, tree, self.step, latest, &mut stats) {
+                    Ok((weights, tree)) => {
+                        self.weights = Some(weights);
+                        self.tree = tree;
+                        self.step = latest;
+                        self.generation = self.generation.max(stats.generation);
+                        stats.path = if latest == stats.from_step + 1 {
+                            SyncPath::Fast
+                        } else {
+                            SyncPath::Chain
+                        };
+                        stats.verified = true;
+                        return Ok(stats);
+                    }
+                    Err(_) => {
+                        // fall through to slow path; drop the abandoned
+                        // attempt's apply counters (the slow path rebuilds
+                        // from an anchor) but keep bytes_downloaded — those
+                        // bytes really were transferred
+                        stats.patches_applied = 0;
+                        stats.anchors_restored = 0;
+                    }
                 }
             }
+            // latest < self.step: the head moved backwards — a restarted
+            // publisher re-anchored below us and rewound the lineage.
+            // Skip the (vacuous) chain attempt and re-anchor on the new
+            // generation via the slow path.
         }
         // slow path: nearest anchor ≤ latest, then chain
         let anchor = inv
@@ -653,13 +797,15 @@ impl<T: SyncTransport> Consumer<T> {
             .next_back()
             .copied()
             .ok_or_else(|| anyhow::anyhow!("no anchor available for slow path"))?;
-        let (w, tree, bytes) = self.download_anchor(anchor)?;
+        let (w, tree, bytes, agen) = self.download_anchor(anchor)?;
         stats.bytes_downloaded += bytes;
         stats.anchors_restored += 1;
+        stats.generation = stats.generation.max(agen);
         let (weights, tree) = self.apply_chain(w, tree, anchor, latest, &mut stats)?;
         self.weights = Some(weights);
         self.tree = tree;
         self.step = latest;
+        self.generation = self.generation.max(stats.generation);
         stats.path = SyncPath::Slow;
         stats.verified = true;
         Ok(stats)
@@ -667,8 +813,9 @@ impl<T: SyncTransport> Consumer<T> {
 
     /// Download + verify an anchor, returning its hash tree when the
     /// ready marker carries v2 geometry (legacy scalar markers verify
-    /// via the full-buffer hash and return no tree).
-    fn download_anchor(&self, step: u64) -> Result<(Vec<u16>, Option<HashTree>, u64)> {
+    /// via the full-buffer hash and return no tree), plus the
+    /// publisher generation its marker carries (0 when untagged).
+    fn download_anchor(&self, step: u64) -> Result<(Vec<u16>, Option<HashTree>, u64, u64)> {
         let (obj, expect) = self
             .transport
             .fetch_anchor(step)
@@ -687,7 +834,8 @@ impl<T: SyncTransport> Consumer<T> {
             bail!("anchor length mismatch");
         }
         // verify against the ready marker (and keep the tree it implies)
-        let tree = if let Some((chunk_elems, root)) = parse_anchor_marker(&expect) {
+        let (agen, expect) = crate::net::transport::split_generation(&expect);
+        let tree = if let Some((chunk_elems, root)) = parse_anchor_marker(expect) {
             let t = HashTree::build(&w, chunk_elems);
             if t.root_hex() != root {
                 bail!("anchor hash mismatch at step {}", step);
@@ -699,7 +847,7 @@ impl<T: SyncTransport> Consumer<T> {
             }
             None
         };
-        Ok((w, tree, obj.len() as u64))
+        Ok((w, tree, obj.len() as u64, agen))
     }
 
     /// Apply deltas `(from, to]` onto `w`, verifying each patch's
@@ -722,11 +870,12 @@ impl<T: SyncTransport> Consumer<T> {
                 None => {
                     // §J.5: a failed delta upload was replaced by an
                     // anchor.
-                    let (aw, atree, bytes) = self.download_anchor(t)?;
+                    let (aw, atree, bytes, agen) = self.download_anchor(t)?;
                     w = aw;
                     tree = atree;
                     stats.bytes_downloaded += bytes;
                     stats.anchors_restored += 1;
+                    stats.generation = stats.generation.max(agen);
                     continue;
                 }
             };
@@ -1427,6 +1576,103 @@ mod tests {
         assert!(cs.verified);
         assert_eq!(cs.to_step, 1);
         assert_eq!(c.weights.as_ref().unwrap(), &w);
+    }
+
+    #[test]
+    fn publisher_restart_resumes_from_anchor_as_next_generation() {
+        // crash after step 7 (k = 5, so the newest anchor is step 5):
+        // the restarted publisher must resume from anchor 5 as
+        // generation 1, and a consumer that followed the dead lineage
+        // to step 7 must re-anchor onto the new one without
+        // re-applying anything it already holds
+        let (mut p, mut c, store, mut w, mut rng) = setup(6_000, 5);
+        c.synchronize().unwrap();
+        for step in 1..=7u64 {
+            perturb(&mut rng, &mut w, 60);
+            p.publish(step, &w).unwrap();
+        }
+        c.synchronize().unwrap();
+        assert_eq!(c.step, 7);
+        drop(p); // publisher crash
+        let (rw, rstep, rgen) =
+            recover_anchor_state(&ObjectStoreTransport::new(store.clone(), "sync")).unwrap();
+        assert_eq!(rstep, 5);
+        assert_eq!(rgen, 0, "the dead lineage was generation 0");
+        let mut p2 = Publisher::resume_over(
+            ObjectStoreTransport::new(store.clone(), "sync"),
+            c.layout.clone(),
+            5,
+        )
+        .unwrap();
+        assert_eq!(p2.generation, 1);
+        assert_eq!(p2.current_step(), 5);
+        assert_eq!(p2.current_weights(), &rw[..]);
+        // the lineage rewinds: 6 and 7 are re-published with new
+        // content, then training continues past the dead head
+        let mut w2 = rw;
+        for step in 6..=12u64 {
+            perturb(&mut rng, &mut w2, 60);
+            p2.publish(step, &w2).unwrap();
+        }
+        let marker = String::from_utf8(store.get("sync/delta_ready_6").unwrap()).unwrap();
+        assert!(marker.starts_with("g1;"), "resumed markers carry the tag: {}", marker);
+        let cs = c.synchronize().unwrap();
+        assert!(cs.verified);
+        assert_eq!(cs.path, SyncPath::Slow, "cross-generation catch-up re-anchors");
+        assert_eq!(cs.generation, 1);
+        assert_eq!(c.generation, 1);
+        assert_eq!(c.weights.as_ref().unwrap(), &w2);
+        let again = c.synchronize().unwrap();
+        assert_eq!(again.path, SyncPath::UpToDate);
+        assert_eq!(again.patches_applied, 0, "no duplicate applies after re-anchor");
+    }
+
+    #[test]
+    fn head_regression_reanchors_instead_of_no_op() {
+        // a consumer ahead of a freshly resumed publisher's head
+        // (retention pruned the dead lineage's tail) must rewind to
+        // the recovery anchor, not silently report success on stale
+        // weights
+        let (mut p, mut c, store, mut w, mut rng) = setup(4_000, 5);
+        c.synchronize().unwrap();
+        let mut w5 = Vec::new();
+        for step in 1..=7u64 {
+            perturb(&mut rng, &mut w, 40);
+            p.publish(step, &w).unwrap();
+            if step == 5 {
+                w5 = w.clone();
+            }
+        }
+        c.synchronize().unwrap();
+        assert_eq!(c.step, 7);
+        for t in 6..=7u64 {
+            store.delete(&format!("sync/{}", delta_key(t))).unwrap();
+            store.delete(&format!("sync/delta_ready_{}", t)).unwrap();
+        }
+        drop(p);
+        let mut p2 = Publisher::resume_over(
+            ObjectStoreTransport::new(store.clone(), "sync"),
+            c.layout.clone(),
+            5,
+        )
+        .unwrap();
+        let cs = c.synchronize().unwrap();
+        assert_eq!(cs.path, SyncPath::Slow);
+        assert_eq!((cs.from_step, cs.to_step), (7, 5), "head regressed to the anchor");
+        assert_eq!(cs.patches_applied, 0, "nothing re-applies on the rewind");
+        assert_eq!(c.step, 5);
+        assert_eq!(c.generation, 1);
+        assert_eq!(c.weights.as_ref().unwrap(), &w5);
+        // and the new lineage chains normally from there
+        let mut w2 = w5;
+        for step in 6..=8u64 {
+            perturb(&mut rng, &mut w2, 40);
+            p2.publish(step, &w2).unwrap();
+        }
+        let cs2 = c.synchronize().unwrap();
+        assert_eq!(cs2.path, SyncPath::Chain);
+        assert_eq!(cs2.patches_applied, 3);
+        assert_eq!(c.weights.as_ref().unwrap(), &w2);
     }
 
     #[test]

@@ -7,6 +7,7 @@ pub mod cli;
 pub mod json;
 pub mod pool;
 pub mod prop;
+pub mod retry;
 pub mod rng;
 
 use std::path::Path;

@@ -1,0 +1,211 @@
+//! One retry/backoff policy for every recovery loop in the sync
+//! plane: bounded exponential backoff with deterministic jitter.
+//!
+//! Before this module each layer hardcoded its own wait — the repair
+//! path waited a flat `NACK_TIMEOUT`, control supervisors retried "next
+//! tick" on a fixed 20 ms cadence, and the relay re-escalated on
+//! whatever cadence its clients happened to NACK. A [`RetryPolicy`]
+//! names the same four numbers everywhere (first delay, growth factor,
+//! per-attempt cap, total budget) and draws its jitter from
+//! [`crate::util::rng::splitmix64`] keyed by `(seed, attempt)`, so a
+//! given seed always produces the same backoff schedule — no wall-clock
+//! entropy, which keeps chaos runs (`net/chaos`) reproducible.
+
+use std::time::{Duration, Instant};
+
+use crate::util::rng::splitmix64;
+
+/// Bounded exponential backoff: attempt `n` waits
+/// `min(cap, base * factor^n)`, jittered deterministically into
+/// `[0.75, 1.25)` of itself, until the `total` budget is spent.
+#[derive(Clone, Debug)]
+pub struct RetryPolicy {
+    /// Delay before the first retry.
+    pub base: Duration,
+    /// Multiplier between consecutive attempts.
+    pub factor: f64,
+    /// Upper bound on any single delay.
+    pub cap: Duration,
+    /// Total time budget across all attempts; a caller that drains it
+    /// gives up (and should say so in its counters).
+    pub total: Duration,
+    /// Jitter seed; same seed, same schedule.
+    pub seed: u64,
+}
+
+impl RetryPolicy {
+    pub fn new(base: Duration, factor: f64, cap: Duration, total: Duration) -> RetryPolicy {
+        RetryPolicy { base, factor, cap, total, seed: 0 }
+    }
+
+    /// Builder-style jitter seed override.
+    pub fn with_seed(mut self, seed: u64) -> RetryPolicy {
+        self.seed = seed;
+        self
+    }
+
+    /// Repair-NACK policy: re-send the NACK at ~250 ms, ~500 ms, ~1 s,
+    /// ~2 s, and give up after 5 s total — the same overall budget as
+    /// the flat `NACK_TIMEOUT` this replaces, so existing behavior at
+    /// the deadline is unchanged.
+    pub fn nack_default() -> RetryPolicy {
+        RetryPolicy::new(
+            Duration::from_millis(250),
+            2.0,
+            Duration::from_secs(2),
+            Duration::from_secs(5),
+        )
+    }
+
+    /// Connect/re-attach policy for control supervisors: first retry
+    /// after the old 20 ms tick, backing off to 250 ms, with a 1 s
+    /// budget for bounded joins (supervisor loops ignore the budget
+    /// and just keep calling [`RetryPolicy::delay_for`]).
+    pub fn connect_default() -> RetryPolicy {
+        RetryPolicy::new(
+            Duration::from_millis(20),
+            2.0,
+            Duration::from_millis(250),
+            Duration::from_secs(1),
+        )
+    }
+
+    /// Relay upstream-escalation policy: a slot already escalated is
+    /// not re-escalated for ~200 ms, doubling to 2 s, so a storm of
+    /// client NACK resends costs one upstream frame per backoff window.
+    pub fn escalate_default() -> RetryPolicy {
+        RetryPolicy::new(
+            Duration::from_millis(200),
+            2.0,
+            Duration::from_secs(2),
+            Duration::from_secs(30),
+        )
+    }
+
+    /// Jittered delay for the `attempt`-th retry (0-based), capped.
+    /// Pure in `(self, attempt)` — no clock, no global state.
+    pub fn delay_for(&self, attempt: u32) -> Duration {
+        let exp = self.base.as_secs_f64() * self.factor.powi(attempt.min(64) as i32);
+        let raw = exp.min(self.cap.as_secs_f64());
+        let mut s = self
+            .seed
+            .wrapping_add(0x9E3779B97F4A7C15u64.wrapping_mul(attempt as u64 + 1));
+        let unit = (splitmix64(&mut s) >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        Duration::from_secs_f64(raw * (0.75 + 0.5 * unit))
+    }
+
+    /// Begin a budgeted retry sequence anchored at "now".
+    pub fn start(&self) -> Retry {
+        Retry {
+            policy: self.clone(),
+            attempt: 0,
+            deadline: Instant::now() + self.total,
+        }
+    }
+}
+
+/// In-flight state of one budgeted retry sequence.
+pub struct Retry {
+    policy: RetryPolicy,
+    attempt: u32,
+    deadline: Instant,
+}
+
+impl Retry {
+    /// Delay to wait before the next attempt, or `None` once waiting
+    /// would overrun the total budget — the caller should give up (the
+    /// absolute cutoff is [`Retry::deadline`]).
+    pub fn next_delay(&mut self) -> Option<Duration> {
+        let d = self.policy.delay_for(self.attempt);
+        if Instant::now() + d >= self.deadline {
+            return None;
+        }
+        self.attempt += 1;
+        Some(d)
+    }
+
+    /// Retries handed out so far.
+    pub fn attempts(&self) -> u32 {
+        self.attempt
+    }
+
+    /// Absolute give-up instant (start + total budget).
+    pub fn deadline(&self) -> Instant {
+        self.deadline
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_is_deterministic_per_seed() {
+        let a = RetryPolicy::nack_default().with_seed(7);
+        let b = RetryPolicy::nack_default().with_seed(7);
+        for n in 0..10 {
+            assert_eq!(a.delay_for(n), b.delay_for(n));
+        }
+        let c = RetryPolicy::nack_default().with_seed(8);
+        assert_ne!(a.delay_for(0), c.delay_for(0), "different seeds jitter differently");
+    }
+
+    #[test]
+    fn delays_grow_exponentially_then_cap() {
+        let p = RetryPolicy::new(
+            Duration::from_millis(100),
+            2.0,
+            Duration::from_secs(1),
+            Duration::from_secs(60),
+        );
+        for n in 0..20u32 {
+            let d = p.delay_for(n).as_secs_f64();
+            let nominal = (0.1 * 2f64.powi(n as i32)).min(1.0);
+            assert!(
+                d >= nominal * 0.75 && d < nominal * 1.25,
+                "attempt {}: {} outside jitter band of {}",
+                n,
+                d,
+                nominal
+            );
+        }
+        // deep attempts stay finite and capped
+        assert!(p.delay_for(63).as_secs_f64() <= 1.25);
+    }
+
+    #[test]
+    fn budget_exhaustion_returns_none() {
+        let p = RetryPolicy::new(
+            Duration::from_millis(50),
+            2.0,
+            Duration::from_millis(50),
+            Duration::from_millis(1),
+        );
+        let mut r = p.start();
+        assert!(r.next_delay().is_none(), "a 50ms delay cannot fit a 1ms budget");
+        assert_eq!(r.attempts(), 0);
+    }
+
+    #[test]
+    fn nack_default_keeps_the_old_five_second_budget() {
+        assert_eq!(RetryPolicy::nack_default().total, Duration::from_secs(5));
+    }
+
+    #[test]
+    fn budgeted_sequence_hands_out_several_attempts() {
+        let p = RetryPolicy::new(
+            Duration::from_millis(1),
+            2.0,
+            Duration::from_millis(2),
+            Duration::from_secs(5),
+        );
+        let mut r = p.start();
+        let mut got = 0;
+        for _ in 0..5 {
+            if r.next_delay().is_some() {
+                got += 1;
+            }
+        }
+        assert_eq!(got, 5, "tiny delays all fit a 5s budget");
+    }
+}

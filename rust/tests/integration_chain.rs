@@ -400,8 +400,8 @@ fn unserviceable_nack_errors_fast_then_anchor_rescues() {
     let t0 = Instant::now();
     let err = consumer.synchronize().unwrap_err();
     assert!(
-        t0.elapsed() < pulse::net::transport::NACK_TIMEOUT,
-        "NACK_MISS must preempt the retransmit timeout"
+        t0.elapsed() < pulse::util::retry::RetryPolicy::nack_default().total,
+        "NACK_MISS must preempt the retransmit retry budget"
     );
     assert!(
         pulse::net::transport::is_unserviceable(&err),

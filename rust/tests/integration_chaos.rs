@@ -1,0 +1,431 @@
+//! Chaos suite (tentpole: wire faults + publisher restart + relay
+//! crash, together).
+//!
+//! Acceptance bar (ISSUE 6):
+//!
+//! * a control-plane relay tree runs under **seeded wire-level
+//!   faults** (partial writes, mid-frame resets, payload corruption,
+//!   latency, one-way partitions) on every data-plane connection —
+//!   root accepts, relay-to-relay attachments, leaf subscriptions;
+//! * mid-run the **publisher crashes** and a replacement resumes from
+//!   the newest anchor as the next generation, republishing the
+//!   abandoned tail;
+//! * mid-run a **relay crashes** (silent heartbeats, socket open) and
+//!   its subtree re-parents onto a standby;
+//! * despite all three, every leaf ends **bit-identical to a clean
+//!   object-store reference** fed the same views, with **zero
+//!   duplicate applies** across the generation + epoch boundaries
+//!   (`from_step == previous to_step`, final sync applies nothing).
+//!
+//! The seed comes from `PULSE_CHAOS_SEED` (default 1); CI loops the
+//! suite over several seeds and prints the failing one, so any red run
+//! reproduces locally with a single env var. Damaging faults draw from
+//! one shared budget, so the noise is bounded and the final published
+//! steps land on a quiet wire.
+
+use pulse::coordinator::planner::Upstream;
+use pulse::net::chaos::ChaosConfig;
+use pulse::net::control::{
+    ControlConfig, ControlPlane, ControlSubscriberTransport, ControlledNode,
+};
+use pulse::net::relay::{Relay, DEFAULT_QUEUE_DEPTH, INDEX_STEPS};
+use pulse::net::transport::{
+    FaultInjectingTransport, ObjectStoreTransport, RelayTransport, SyncTransport,
+};
+use pulse::pulse::sync::{recover_anchor_state, Consumer, Publisher, SyncPath, SyncStats};
+use pulse::sparse::synthetic_layout;
+use pulse::storage::ObjectStore;
+use pulse::util::rng::Rng;
+use pulse::util::retry::RetryPolicy;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const N: usize = 12_000;
+const SHARDS: usize = 4;
+
+/// The run's chaos seed: `PULSE_CHAOS_SEED` or 1. CI sweeps this.
+fn chaos_seed() -> u64 {
+    std::env::var("PULSE_CHAOS_SEED").ok().and_then(|v| v.parse().ok()).unwrap_or(1)
+}
+
+/// Seeded stream of views (views[0] = initial checkpoint).
+fn views(n: usize, steps: u64, perturbs: usize) -> Vec<Vec<u16>> {
+    let mut rng = Rng::new(137);
+    let mut w: Vec<u16> = (0..n).map(|_| rng.next_u32() as u16).collect();
+    let mut out = vec![w.clone()];
+    for _ in 0..steps {
+        for _ in 0..perturbs {
+            let i = rng.below(n as u64) as usize;
+            w[i] = rng.next_u32() as u16;
+        }
+        out.push(w.clone());
+    }
+    out
+}
+
+/// Poll until `step` is committed from this consumer's view, then
+/// synchronize. Transient errors are the point of this suite — a fetch
+/// may die mid-frame, a subscription may be between parents, a NACK
+/// budget may drain — so every failure is retried until the deadline.
+fn wait_sync<T: pulse::net::transport::SyncTransport>(
+    c: &mut Consumer<T>,
+    step: u64,
+) -> SyncStats {
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        assert!(
+            Instant::now() < deadline,
+            "step {} never synced (seed {})",
+            step,
+            chaos_seed()
+        );
+        match c.latest_ready() {
+            Ok(Some(head)) if head >= step => match c.synchronize() {
+                Ok(cs) if cs.to_step >= step => return cs,
+                _ => std::thread::sleep(Duration::from_millis(5)),
+            },
+            _ => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+}
+
+fn wait_until(what: &str, deadline_s: u64, mut cond: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(deadline_s);
+    while !cond() {
+        assert!(
+            Instant::now() < deadline,
+            "timed out waiting for {} (seed {})",
+            what,
+            chaos_seed()
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// The tentpole run: faulty wires everywhere on the data plane, a
+/// publisher crash + generation-bumped resume, and a relay crash +
+/// re-parent — one run, all three, bit-identical convergence.
+#[test]
+fn chaos_tree_survives_faults_restart_and_relay_crash() {
+    let seed = chaos_seed();
+    const BUDGET: i64 = 60;
+    let chaos = ChaosConfig::light(seed).with_budget(BUDGET);
+    let hb = Duration::from_millis(50);
+    let cfg = ControlConfig {
+        fanout_cap: 4,
+        min_relay_levels: 1,
+        heartbeat_interval: hb,
+        missed_heartbeats: 8, // death timeout: 400 ms
+        ..Default::default()
+    };
+    let steps = 8u64;
+    let crash_after = 5u64; // publisher dies after publishing step 5
+    let anchor_k = 4u64; // anchors at 0, 4, 8 — recovery points
+    let vs = views(N, steps, 200);
+    let layout = synthetic_layout(N, 64);
+
+    // clean object-store reference lineage, mirrored publish-for-publish
+    // (including the crash rewind) — the arbiter for "bit-identical"
+    let store = ObjectStore::temp(&format!("chaos_ref_{}", seed)).unwrap();
+    let mut ref_pub = Publisher::over(
+        ObjectStoreTransport::new(store.clone(), "sync"),
+        layout.clone(),
+        vs[0].clone(),
+        anchor_k,
+    )
+    .unwrap()
+    .with_shards(SHARDS);
+    let mut ref_con =
+        Consumer::over(ObjectStoreTransport::new(store.clone(), "sync"), layout.clone());
+
+    // chaos root + 3 managed relays (one becomes the crash victim,
+    // the spares are failover targets) + 4 leaves. Every data-plane
+    // wire — root accepts, upstream attachments, node accepts — draws
+    // damaging faults from ONE shared budget, so the noise is bounded.
+    let root = Arc::new(
+        Relay::start_with_chaos(DEFAULT_QUEUE_DEPTH, INDEX_STEPS, Some(chaos.clone()))
+            .unwrap(),
+    );
+    let mut publisher = Publisher::over(
+        RelayTransport::publisher(root.clone()),
+        layout.clone(),
+        vs[0].clone(),
+        anchor_k,
+    )
+    .unwrap()
+    .with_shards(SHARDS);
+    let plane = ControlPlane::start(root.port, cfg).unwrap();
+    let nodes: Vec<ControlledNode> = (0..3)
+        .map(|_| {
+            ControlledNode::join_with_chaos(
+                plane.port,
+                DEFAULT_QUEUE_DEPTH,
+                INDEX_STEPS,
+                hb,
+                Some(chaos.clone()),
+            )
+            .unwrap()
+        })
+        .collect();
+    let mut leaves: Vec<Consumer<ControlSubscriberTransport>> = (0..4)
+        .map(|_| {
+            Consumer::over(
+                ControlSubscriberTransport::join_with_heartbeat(plane.port, hb).unwrap(),
+                layout.clone(),
+            )
+        })
+        .collect();
+    wait_until("membership to settle", 20, || plane.live_peers() == (3, 4));
+
+    for step in 1..=crash_after {
+        publisher.publish(step, &vs[step as usize]).unwrap();
+        ref_pub.publish(step, &vs[step as usize]).unwrap();
+    }
+    // every leaf verified at the pre-crash head, through the faulty
+    // wires; later syncs must continue exactly at to_step
+    let mut prev_to = vec![0u64; leaves.len()];
+    for (i, leaf) in leaves.iter_mut().enumerate() {
+        let cs = wait_sync(leaf, crash_after);
+        assert!(cs.verified, "leaf {} unverified pre-crash (seed {})", i, seed);
+        assert_eq!(
+            leaf.weights.as_ref().unwrap(),
+            &vs[crash_after as usize],
+            "leaf {} diverged pre-crash (seed {})",
+            i,
+            seed
+        );
+        prev_to[i] = cs.to_step;
+    }
+
+    // ---- publisher crash. The replacement recovers from the newest
+    // anchor of the clean lineage (step 4: the dead publisher's step-5
+    // tail is abandoned) and BOTH lineages resume as generation 1,
+    // re-committing the anchor under the new tag.
+    drop(publisher);
+    let (w_rec, step_rec, gen_rec) =
+        recover_anchor_state(&ObjectStoreTransport::new(store.clone(), "sync")).unwrap();
+    assert_eq!((step_rec, gen_rec), (4, 0), "newest anchor before the crash");
+    let mut publisher = Publisher::resume(
+        RelayTransport::publisher(root.clone()),
+        layout.clone(),
+        w_rec.clone(),
+        step_rec,
+        gen_rec + 1,
+        anchor_k,
+    )
+    .unwrap()
+    .with_shards(SHARDS);
+    let mut ref_pub = Publisher::resume(
+        ObjectStoreTransport::new(store.clone(), "sync"),
+        layout.clone(),
+        w_rec,
+        step_rec,
+        gen_rec + 1,
+        anchor_k,
+    )
+    .unwrap()
+    .with_shards(SHARDS);
+
+    // ---- relay crash, while the publisher restart is still fresh:
+    // kill the relay parenting leaf 0 (silent heartbeats, socket open
+    // — only the timeout can discover it)
+    let plan = plane.plan().unwrap();
+    let leaf_ids: Vec<u64> =
+        leaves.iter().map(|l| l.transport.peer_id().unwrap()).collect();
+    let parent_of = |leaf_id: u64| match plan.assignment_of(leaf_id).unwrap().upstream {
+        Upstream::Peer(id) => id,
+        other => panic!("leaf {} not under a relay: {:?}", leaf_id, other),
+    };
+    let victim_id = parent_of(leaf_ids[0]);
+    let victim =
+        nodes.iter().find(|n| n.peer_id() == Some(victim_id)).expect("victim node");
+    let deaths_before = plane.deaths();
+    victim.fail_silently();
+    wait_until("failure detection", 10, || plane.deaths() > deaths_before);
+
+    // the stream never stops: the resumed generation republishes the
+    // abandoned tail and carries on to the final head (step 8 is an
+    // anchor — a clean recovery point past every injected fault)
+    for step in step_rec + 1..=steps {
+        publisher.publish(step, &vs[step as usize]).unwrap();
+        ref_pub.publish(step, &vs[step as usize]).unwrap();
+    }
+    let ref_stats = ref_con.synchronize().unwrap();
+    assert!(ref_stats.verified);
+    assert_eq!(
+        ref_stats.generation, 1,
+        "reference consumer must adopt the restarted lineage"
+    );
+
+    for (i, leaf) in leaves.iter_mut().enumerate() {
+        let cs = wait_sync(leaf, steps);
+        assert!(cs.verified, "leaf {} unverified at the end (seed {})", i, seed);
+        assert_eq!(
+            cs.from_step, prev_to[i],
+            "leaf {} must continue exactly where it stopped — no duplicate applies \
+             across the generation/epoch boundary (seed {})",
+            i, seed
+        );
+        assert_eq!(
+            leaf.weights.as_ref().unwrap(),
+            ref_con.weights.as_ref().unwrap(),
+            "leaf {} not bit-identical to the clean reference (seed {})",
+            i,
+            seed
+        );
+        // idempotence at the boundary: nothing left to apply
+        let again = leaf.synchronize().unwrap();
+        assert_eq!(again.path, SyncPath::UpToDate);
+        assert_eq!(again.patches_applied, 0);
+    }
+
+    // vacuity guard: the run must actually have drawn damaging faults
+    // (a broken wrap that silently hands out clean wires would make
+    // everything above meaningless)
+    let left = chaos.budget_remaining().unwrap();
+    assert!(
+        left < BUDGET,
+        "no damaging fault was ever injected (seed {}, budget {}/{})",
+        seed,
+        left,
+        BUDGET
+    );
+
+    drop(leaves);
+    for n in &nodes {
+        n.stop();
+    }
+    plane.stop();
+    root.stop();
+    std::fs::remove_dir_all(store.root()).ok();
+}
+
+/// Generation tags traverse the relay staging end-to-end: a subscriber
+/// that anchors AFTER a publisher restart adopts the new generation
+/// from the relayed `g<n>;`-tagged anchor marker.
+#[test]
+fn restart_generation_is_adopted_through_the_relay() {
+    let steps = 4u64;
+    let vs = views(N, steps, 150);
+    let layout = synthetic_layout(N, 64);
+    let root = Arc::new(Relay::start().unwrap());
+
+    let mut publisher = Publisher::over(
+        RelayTransport::publisher(root.clone()),
+        layout.clone(),
+        vs[0].clone(),
+        2, // anchors at 0, 2, 4
+    )
+    .unwrap()
+    .with_shards(SHARDS);
+    let mut early =
+        Consumer::over(RelayTransport::subscribe(root.port).unwrap(), layout.clone());
+    for step in 1..=2 {
+        publisher.publish(step, &vs[step as usize]).unwrap();
+    }
+    let cs = wait_sync(&mut early, 2);
+    assert_eq!(cs.generation, 0, "pre-restart lineage is untagged");
+
+    // crash + resume from the step-2 state as generation 1
+    drop(publisher);
+    let mut publisher = Publisher::resume(
+        RelayTransport::publisher(root.clone()),
+        layout.clone(),
+        vs[2].clone(),
+        2,
+        1,
+        2,
+    )
+    .unwrap()
+    .with_shards(SHARDS);
+    for step in 3..=steps {
+        publisher.publish(step, &vs[step as usize]).unwrap();
+    }
+
+    // a fresh subscriber's catch-up preload replays the g1-tagged
+    // anchor; its first sync lands on the new lineage
+    let mut late =
+        Consumer::over(RelayTransport::subscribe(root.port).unwrap(), layout.clone());
+    let cs = wait_sync(&mut late, steps);
+    assert!(cs.verified);
+    assert_eq!(cs.generation, 1, "late subscriber must adopt the restarted lineage");
+    assert_eq!(late.weights.as_ref().unwrap(), &vs[steps as usize]);
+    // the early subscriber chains across the boundary (identical
+    // republished content) with zero duplicate applies
+    let cs = wait_sync(&mut early, steps);
+    assert_eq!(cs.from_step, 2);
+    assert_eq!(early.weights.as_ref().unwrap(), &vs[steps as usize]);
+
+    root.stop();
+}
+
+/// The unified retry policy is live end-to-end: a repair NACK that can
+/// never be answered re-sends on backoff boundaries (`retries`), then
+/// exhausts its budget (`gave_up`) — the same synchronize call heals
+/// via the slow path, and both tallies surface through `SyncStats`.
+#[test]
+fn nack_retry_counters_surface_in_sync_stats() {
+    let steps = 3u64;
+    let vs = views(N, steps, 150);
+    let layout = synthetic_layout(N, 64);
+    // a one-step frame index, so step 2's slots are long evicted by
+    // the time the repair NACK arrives
+    let root = Arc::new(Relay::start_with_opts(DEFAULT_QUEUE_DEPTH, 1).unwrap());
+    // mute upstream: the escalation is "accepted" and never answered —
+    // no retransmit, no NACK_MISS. To the leaf this is a one-way
+    // partition towards the publisher: only its retry budget ends it.
+    root.set_escalation(|_, _| true);
+
+    let mut sub = RelayTransport::subscribe(root.port).unwrap();
+    // tight budget: resends at ~20/40/40/... ms, dry inside 200 ms
+    sub.set_nack_policy(RetryPolicy::new(
+        Duration::from_millis(20),
+        2.0,
+        Duration::from_millis(40),
+        Duration::from_millis(200),
+    ))
+    .unwrap();
+    let decorated = FaultInjectingTransport::targeting(sub, 2, 0);
+    let mut consumer = Consumer::over(decorated, layout.clone());
+
+    let mut publisher = Publisher::over(
+        RelayTransport::publisher(root.clone()),
+        layout.clone(),
+        vs[0].clone(),
+        100, // anchor 0 only: recovery must re-chain through staging
+    )
+    .unwrap()
+    .with_shards(SHARDS);
+    publisher.publish(1, &vs[1]).unwrap();
+    let cs = wait_sync(&mut consumer, 1);
+    assert!(cs.verified);
+    assert_eq!((cs.retries, cs.gave_up), (0, 0), "healthy fabric needs no retries");
+
+    for step in 2..=steps {
+        publisher.publish(step, &vs[step as usize]).unwrap();
+    }
+    // chain path: (2, 0) corrupts on first serve → the repair NACK
+    // escalates into the mute upstream → re-sends on every backoff
+    // boundary → the budget drains → the chain attempt dies, and the
+    // SAME call degrades to the slow path, whose staged re-serve of
+    // step 2 is clean
+    let cs = wait_sync(&mut consumer, steps);
+    assert_eq!(cs.path, SyncPath::Slow, "recovery must ride the anchor slow path");
+    assert!(cs.verified);
+    assert_eq!(consumer.weights.as_ref().unwrap(), &vs[steps as usize]);
+    let counters = consumer.transport.counters();
+    assert!(
+        counters.retries >= 1,
+        "the doomed NACK must re-send on backoff boundaries: {:?}",
+        counters
+    );
+    assert_eq!(counters.gave_up, 1, "the retry budget must drain exactly once");
+    assert_eq!(
+        (cs.retries, cs.gave_up),
+        (counters.retries, 1),
+        "SyncStats must mirror the transport counters"
+    );
+    assert_eq!(consumer.transport.injected(), 1, "exactly one corrupted serve");
+
+    root.stop();
+}

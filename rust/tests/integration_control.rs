@@ -81,6 +81,7 @@ fn three_level_tree_self_assembles_from_joins() {
         min_relay_levels: 2,
         heartbeat_interval: hb,
         missed_heartbeats: 40, // liveness generous: assembly is under test
+        ..Default::default()
     };
     let steps = 4u64;
     let vs = views(N, steps, 200);
@@ -169,6 +170,7 @@ fn mid_tree_relay_death_reparents_subtree_bit_identically() {
         min_relay_levels: 0,
         heartbeat_interval: hb,
         missed_heartbeats: 8, // death timeout: 400 ms
+        ..Default::default()
     };
     let steps = 6u64;
     let kill_after = 3u64;
