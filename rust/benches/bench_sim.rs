@@ -1,0 +1,71 @@
+//! Scale-simulator benches: wall-clock cost of simulating one full
+//! publish window to convergence at 1k and 10k leaves, clean and under
+//! loss + churn. These price the *simulator itself* (events/sec on the
+//! host), not the modeled network — the modeled numbers live in
+//! `results/sim_scale.csv` from `paper scale`. Rows land in
+//! `BENCH_sim.json`, so the CI bench guard catches a simulator that
+//! quietly gets an order of magnitude slower and would blow the
+//! sim-scale job's time budget.
+//!
+//! `PULSE_BENCH_FAST=1` (CI bench-smoke) skips the 10k-leaf rows.
+
+use std::time::Duration;
+
+use pulse::sim::churn::ChurnScript;
+use pulse::sim::topo::TopoSpec;
+use pulse::sim::{run, SimConfig};
+use pulse::util::bench::Bench;
+
+/// The scale-gate shape at a reduced leaf count: cap-8 tree, 5 steps
+/// of 4 x 2 KiB shards on a 16 KiB anchor.
+fn cfg_for(leaves: usize, seed: u64) -> SimConfig {
+    let mut cfg = SimConfig::new(TopoSpec::kary(leaves, 8), seed);
+    cfg.steps = 5;
+    cfg.shards_per_step = 4;
+    cfg.bytes_per_shard = 2048;
+    cfg.anchor_bytes = 16384;
+    cfg.step_interval = Duration::from_millis(20);
+    cfg
+}
+
+fn faulty(leaves: usize, seed: u64) -> SimConfig {
+    let mut cfg = cfg_for(leaves, seed);
+    cfg.link = cfg.link.with_loss(10_000); // 1% frame loss
+    cfg.churn = ChurnScript::seeded(
+        seed,
+        4,
+        Duration::from_millis(20),
+        Duration::from_millis(80),
+    );
+    cfg
+}
+
+fn bench_converge(b: &mut Bench, name: &str, mk: impl Fn() -> SimConfig) {
+    // Simulated traffic volume is deterministic per config, so report
+    // it as throughput: "modeled bytes simulated per wall second".
+    let probe = run(mk());
+    assert!(probe.converged, "bench config must converge: {:?}", probe);
+    b.run_bytes(name, probe.link_bytes, || {
+        let r = run(mk());
+        assert!(r.converged);
+        std::hint::black_box(&r);
+    });
+}
+
+fn main() {
+    let fast = std::env::var("PULSE_BENCH_FAST").ok().as_deref() == Some("1");
+    let mut b = Bench::new();
+
+    bench_converge(&mut b, "sim/converge/1k leaves clean", || cfg_for(1_000, 1));
+    bench_converge(&mut b, "sim/converge/1k leaves 1pct loss + churn", || faulty(1_000, 2));
+    if !fast {
+        bench_converge(&mut b, "sim/converge/10k leaves clean", || cfg_for(10_000, 3));
+        bench_converge(&mut b, "sim/converge/10k leaves 1pct loss + churn", || {
+            faulty(10_000, 4)
+        });
+    }
+
+    let results = pulse::coordinator::metrics::results_dir();
+    b.write_csv(&results.join("bench_sim.csv")).unwrap();
+    b.write_json(&results.join("BENCH_sim.json")).unwrap();
+}

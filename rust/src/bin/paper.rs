@@ -69,6 +69,8 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         "transports" => transports(args),
         "topology" => topology(args),
         "control" => control(args),
+        "scale" => scale(args),
+        "benchguard" => benchguard(args),
         "all" => {
             for c in [
                 "table1", "fig9", "fig3", "table2", "table6", "fig1", "fig2", "fig14", "fig13",
@@ -86,7 +88,8 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
                 "usage: paper <exp> [--options]\n\
                  exps: fig1 fig2 fig3 fig4 fig6 fig7 fig8 fig9 fig10 fig11 fig12 fig13 fig14\n\
                  fig15 fig16 fig17 table1 table2 table4 table5 table6 table7 table10\n\
-                 table11 table13 table14 transports topology control all"
+                 table11 table13 table14 transports topology control all\n\
+                 gates: scale (sim scale gate) benchguard (bench regression guard)"
             );
             Ok(())
         }
@@ -1892,4 +1895,296 @@ fn measure_tree_mbps() -> f64 {
     let t = Stopwatch::start();
     std::hint::black_box(HashTree::build(&data, DEFAULT_CHUNK_ELEMS));
     ((data.len() * 2) as f64 / 1e6) / t.secs()
+}
+
+/// The CI scale gate: run the deterministic scale simulator (the real
+/// planner / control-plane / relay / retry machinery in virtual time,
+/// `src/sim`) at paper-scale leaf counts on a laptop-class runner.
+///
+/// Per leaf count it runs two profiles:
+///   * `clean`  — lossless, churn-free; gated on a tight bytes-per-leaf
+///     overhead ceiling (`--max-overhead`, default 5%): the fan-out
+///     tree must deliver essentially exactly one copy per leaf.
+///   * `churn`  — 0.2% frame loss plus a seeded churn script (crashes,
+///     joins, slowdowns); gated on convergence and a loose waste bound
+///     (`--max-churn-overhead`, default 200%): repairs, catch-up
+///     replays, and store fallbacks may cost, but never runaway.
+///
+/// Every profile runs `--repeat` times (default 2) and the gate fails
+/// unless all repeats are bit-identical — the replay/determinism
+/// contract is enforced at full scale, not just in the unit tests.
+/// Writes `results/sim_scale.csv` (one row per profile x size).
+fn scale(args: &Args) -> Result<()> {
+    use pulse::sim::churn::ChurnScript;
+    use pulse::sim::topo::TopoSpec;
+    use pulse::sim::{run, SimConfig, SimReport};
+    use std::time::Duration;
+
+    let leaves = args.usize_list_or("leaves", &[1_000, 10_000, 100_000]);
+    let fanout = args.usize_or("fanout", 8);
+    let seed = args.u64_or("seed", 42);
+    let steps = args.u64_or("steps", 8);
+    let repeat = args.usize_or("repeat", 2).max(1);
+    let churn_events = args.usize_or("churn", 8);
+    let max_overhead = args.f64_or("max-overhead", 5.0);
+    let max_churn_overhead = args.f64_or("max-churn-overhead", 200.0);
+
+    let mut lines = vec![format!("profile,{}", SimReport::csv_header())];
+    let mut rows = Vec::new();
+    for &n in &leaves {
+        for profile in ["clean", "churn"] {
+            // The run is a pure function of this config; rebuilding it
+            // per repeat keeps the identity check honest.
+            let mk = || {
+                let mut cfg =
+                    SimConfig::new(TopoSpec::kary(n, fanout).with_spares(2), seed);
+                cfg.steps = steps;
+                cfg.step_interval = Duration::from_millis(50);
+                cfg.shards_per_step = 4;
+                cfg.bytes_per_shard = 4096;
+                cfg.anchor_bytes = 65536;
+                if profile == "churn" {
+                    cfg.link = cfg.link.with_loss(2_000); // 0.2% frame loss
+                    cfg.churn = ChurnScript::seeded(
+                        seed,
+                        churn_events,
+                        cfg.step_interval,
+                        cfg.step_interval * steps as u32,
+                    );
+                }
+                cfg
+            };
+            let wall = Stopwatch::start();
+            let r = run(mk());
+            let wall = wall.secs();
+            for rerun in 1..repeat {
+                let again = run(mk());
+                anyhow::ensure!(
+                    again == r,
+                    "{} leaves ({}): repeat {} diverged from repeat 0 \
+                     ({:016x} vs {:016x}) — determinism contract broken",
+                    n,
+                    profile,
+                    rerun,
+                    again.trace_hash,
+                    r.trace_hash
+                );
+            }
+            anyhow::ensure!(
+                r.converged,
+                "{} leaves ({}): failed to converge within the horizon: {:?}",
+                n,
+                profile,
+                r
+            );
+            let ceiling =
+                if profile == "clean" { max_overhead } else { max_churn_overhead };
+            anyhow::ensure!(
+                r.overhead_pct <= ceiling,
+                "{} leaves ({}): bytes-per-leaf overhead {:.2}% exceeds the \
+                 {:.0}% ceiling ({} vs ideal {})",
+                n,
+                profile,
+                r.overhead_pct,
+                ceiling,
+                fmt_bytes(r.bytes_per_leaf),
+                fmt_bytes(r.ideal_bytes_per_leaf)
+            );
+            lines.push(format!("{},{}", profile, r.csv_row()));
+            rows.push(vec![
+                n.to_string(),
+                profile.to_string(),
+                r.relays_live.to_string(),
+                r.depth.to_string(),
+                format!("{:.0}", r.settle.as_secs_f64() * 1e3),
+                fmt_bytes(r.bytes_per_leaf),
+                format!("{:+.2}%", r.overhead_pct),
+                (r.leaf_nacks + r.slow_paths).to_string(),
+                r.replans.to_string(),
+                r.deaths.to_string(),
+                r.events.to_string(),
+                format!("{:.1}", wall),
+            ]);
+        }
+    }
+
+    let out = results_dir().join("sim_scale.csv");
+    if let Some(p) = out.parent() {
+        std::fs::create_dir_all(p)?;
+    }
+    std::fs::write(&out, lines.join("\n") + "\n")?;
+    print_table(
+        &format!(
+            "sim scale gate (fanout {}, {} steps, seed {}, x{} repeats bit-identical)",
+            fanout, steps, seed, repeat
+        ),
+        &[
+            "leaves", "profile", "relays", "depth", "settle ms", "bytes/leaf",
+            "overhead", "repairs", "replans", "deaths", "events", "wall s",
+        ],
+        &rows,
+    );
+    println!("wrote {}", out.display());
+    Ok(())
+}
+
+/// The CI bench regression guard: diff every `results/BENCH_*.json`
+/// snapshot produced by this run's benches against the checked-in
+/// baseline (`ci/bench_baseline.json`) and fail on any row whose
+/// mean regressed beyond `--max-regress` (default 0.25 = +25%).
+///
+/// Only rows named in the baseline are gated — new benches ride along
+/// ungated until the baseline is refreshed with
+/// `paper benchguard --update` (run it on a green CI runner and check
+/// in the result). Baseline rows missing from the current run are
+/// reported but don't fail, so self-skipping benches (e.g. the
+/// artifact-gated train-step row) stay compatible; a run where *no*
+/// baseline row matched fails loudly instead of passing vacuously.
+fn benchguard(args: &Args) -> Result<()> {
+    use pulse::util::json::Json;
+    use std::path::{Path, PathBuf};
+
+    let max_regress = args.f64_or("max-regress", 0.25);
+    let raw = PathBuf::from(args.str_or("baseline", "ci/bench_baseline.json"));
+    // Resolve relative paths that don't exist under the cwd against
+    // the repo root (parent of the crate manifest), so the command
+    // works from the workspace root or from `rust/`.
+    let baseline_path = if raw.is_relative() && !raw.exists() {
+        Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .map(|p| p.join(&raw))
+            .unwrap_or(raw)
+    } else {
+        raw
+    };
+
+    let dir = results_dir();
+    let mut files: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .map_err(|e| {
+            anyhow::anyhow!(
+                "no results dir at {} — run the benches first: {}",
+                dir.display(),
+                e
+            )
+        })?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| {
+            p.file_name()
+                .and_then(|f| f.to_str())
+                .map(|f| f.starts_with("BENCH_") && f.ends_with(".json"))
+                .unwrap_or(false)
+        })
+        .collect();
+    files.sort();
+    anyhow::ensure!(
+        !files.is_empty(),
+        "no BENCH_*.json under {} — run `cargo bench` first",
+        dir.display()
+    );
+
+    let mut current: Vec<(String, f64)> = Vec::new();
+    for f in &files {
+        let j = Json::parse_file(f)?;
+        for row in j.req("results")?.as_arr().unwrap_or(&[]) {
+            current.push((row.req_str("name")?.to_string(), row.req_f64("mean_ns")?));
+        }
+    }
+
+    if args.flag("update") {
+        current.sort_by(|a, b| a.0.cmp(&b.0));
+        let rows: Vec<Json> = current
+            .iter()
+            .map(|(name, mean_ns)| {
+                let mut j = Json::obj();
+                j.set("name", name.as_str().into()).set("mean_ns", (*mean_ns).into());
+                j
+            })
+            .collect();
+        let mut root = Json::obj();
+        root.set(
+            "note",
+            "mean_ns ceilings for `paper benchguard`; refresh on a green CI \
+             runner with `paper benchguard --update`"
+                .into(),
+        )
+        .set("results", Json::Arr(rows));
+        if let Some(p) = baseline_path.parent() {
+            std::fs::create_dir_all(p)?;
+        }
+        std::fs::write(&baseline_path, root.to_pretty())?;
+        println!("wrote {} ({} rows)", baseline_path.display(), current.len());
+        return Ok(());
+    }
+
+    let fmt_ns = |ns: f64| {
+        if ns < 1e3 {
+            format!("{:.0} ns", ns)
+        } else if ns < 1e6 {
+            format!("{:.1} µs", ns / 1e3)
+        } else if ns < 1e9 {
+            format!("{:.2} ms", ns / 1e6)
+        } else {
+            format!("{:.2} s", ns / 1e9)
+        }
+    };
+    let base = Json::parse_file(&baseline_path).map_err(|e| {
+        anyhow::anyhow!("cannot read baseline {}: {}", baseline_path.display(), e)
+    })?;
+    let mut rows = Vec::new();
+    let mut regressions: Vec<String> = Vec::new();
+    let mut matched = 0usize;
+    for brow in base.req("results")?.as_arr().unwrap_or(&[]) {
+        let name = brow.req_str("name")?;
+        let base_ns = brow.req_f64("mean_ns")?;
+        let Some((_, cur)) = current.iter().find(|(n, _)| n.as_str() == name) else {
+            rows.push(vec![
+                name.to_string(),
+                fmt_ns(base_ns),
+                "-".to_string(),
+                "-".to_string(),
+                "not run".to_string(),
+            ]);
+            continue;
+        };
+        matched += 1;
+        let cur_ns = *cur;
+        let delta = cur_ns / base_ns - 1.0;
+        let verdict = if delta > max_regress {
+            regressions.push(format!("{} ({:+.0}%)", name, delta * 100.0));
+            "REGRESSED"
+        } else if delta < -max_regress {
+            "faster — consider --update"
+        } else {
+            "ok"
+        };
+        rows.push(vec![
+            name.to_string(),
+            fmt_ns(base_ns),
+            fmt_ns(cur_ns),
+            format!("{:+.1}%", delta * 100.0),
+            verdict.to_string(),
+        ]);
+    }
+    print_table(
+        &format!(
+            "bench guard vs {} (fail beyond +{:.0}%)",
+            baseline_path.display(),
+            max_regress * 100.0
+        ),
+        &["bench", "baseline", "current", "delta", "verdict"],
+        &rows,
+    );
+    anyhow::ensure!(
+        matched > 0,
+        "no baseline row matched any current bench — wrong results dir or \
+         stale baseline names"
+    );
+    anyhow::ensure!(
+        regressions.is_empty(),
+        "bench regression(s) beyond +{:.0}%: {}",
+        max_regress * 100.0,
+        regressions.join(", ")
+    );
+    Ok(())
 }

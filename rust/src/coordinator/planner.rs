@@ -184,6 +184,12 @@ impl TopologyPlan {
 /// (and unfillable holes, when the cluster truly shrank) append/close
 /// in join order. With no previous plan this is join order unchanged.
 pub fn stable_relay_order(prev: Option<&TopologyPlan>, live: &[u64]) -> Vec<u64> {
+    // Hash-set membership instead of Vec::contains: this runs on every
+    // replan, and at simulated scale (100k+ peers churning) the old
+    // O(slots × live) scans dominated the control plane. Output is
+    // identical — the sets only answer membership, all ordering still
+    // comes from `prev` slot order and `live` join order.
+    use std::collections::HashSet;
     let Some(prev) = prev else { return live.to_vec() };
     let prev_active: Vec<u64> = prev
         .relays
@@ -191,11 +197,13 @@ pub fn stable_relay_order(prev: Option<&TopologyPlan>, live: &[u64]) -> Vec<u64>
         .filter(|a| a.upstream != Upstream::Standby)
         .map(|a| a.peer)
         .collect();
+    let active_set: HashSet<u64> = prev_active.iter().copied().collect();
+    let live_set: HashSet<u64> = live.iter().copied().collect();
     let mut spares: std::collections::VecDeque<u64> =
-        live.iter().copied().filter(|id| !prev_active.contains(id)).collect();
+        live.iter().copied().filter(|id| !active_set.contains(id)).collect();
     let mut out = Vec::with_capacity(live.len());
     for id in &prev_active {
-        if live.contains(id) {
+        if live_set.contains(id) {
             out.push(*id);
         } else if let Some(s) = spares.pop_front() {
             out.push(s);

@@ -31,6 +31,7 @@ pub mod optim;
 pub mod pulse;
 pub mod rl;
 pub mod runtime;
+pub mod sim;
 pub mod sparse;
 pub mod storage;
 pub mod util;

@@ -60,6 +60,7 @@ use super::transport::{
     FrameId, MarkerId, RelayTransport, StepData, SyncTransport, TransportCounters,
 };
 use crate::coordinator::planner::{self, TopologyPlan, Upstream};
+use crate::sim::clock::Clock;
 use crate::storage::retention::Inventory;
 use crate::util::retry::RetryPolicy;
 use anyhow::{bail, Context, Result};
@@ -126,28 +127,219 @@ impl ControlConfig {
     }
 }
 
-// ========================================================= ControlPlane
+// =========================================================== Membership
 
-struct PeerEntry {
-    id: u64,
-    role: u8,
-    listen_port: u16,
-    /// Write half (ASSIGN/EPOCH pushes); the handler thread owns the
-    /// read half. A [`Wire`] so a chaos-enabled plane exercises its
-    /// push-failure paths under injected wire faults.
-    conn: Wire,
-    last_heartbeat: Instant,
-    alive: bool,
+/// One registered peer as the membership machine sees it (no socket —
+/// the plane pairs these with [`Wire`] write halves, the simulator
+/// with modeled nodes).
+#[derive(Debug, Clone)]
+pub struct MemberEntry {
+    pub id: u64,
+    pub role: u8,
+    /// Downstream listen port (0 for leaves and simulated peers).
+    pub listen_port: u16,
+    /// Clock reading of the last JOIN/HEARTBEAT (see
+    /// [`crate::sim::clock::Clock`]).
+    pub last_heartbeat: Duration,
+    pub alive: bool,
 }
 
-struct PlaneState {
-    peers: Vec<PeerEntry>,
+/// The socket-free membership + planning state machine: peer registry,
+/// heartbeat liveness, death sweeps, and epoch-bumping replans through
+/// the real [`planner::stable_relay_order`] + [`planner::bind`].
+///
+/// Extracted from the TCP control plane so the scale simulator
+/// (`crate::sim`) drives the *same* membership arithmetic — timing
+/// flows through explicit `now` readings, so heartbeat timeouts work
+/// identically on the wall and in simulated time. The plane keeps the
+/// sockets ([`ControlPlane`] pairs each entry with a [`Wire`]); this
+/// struct decides *who is alive and where everyone attaches*.
+#[derive(Default)]
+pub struct Membership {
+    peers: Vec<MemberEntry>,
     epoch: u64,
-    root_port: u16,
     next_id: u64,
     plan: Option<TopologyPlan>,
     replans: u64,
     deaths: u64,
+}
+
+impl Membership {
+    pub fn new() -> Membership {
+        Membership { next_id: 1, ..Default::default() }
+    }
+
+    /// Register a peer at clock reading `now`; returns its assigned id.
+    /// Does NOT replan — the caller decides when (the plane replans per
+    /// JOIN; the simulator batches a wave of joins into one replan).
+    pub fn join(&mut self, role: u8, listen_port: u16, now: Duration) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.peers.push(MemberEntry {
+            id,
+            role,
+            listen_port,
+            last_heartbeat: now,
+            alive: true,
+        });
+        id
+    }
+
+    /// Refresh a peer's liveness; true when this resurrected a peer the
+    /// detector had given up on (the caller should replan — it re-enters
+    /// the pool).
+    pub fn heartbeat(&mut self, id: u64, now: Duration) -> bool {
+        match self.peers.iter_mut().find(|p| p.id == id) {
+            Some(p) => {
+                p.last_heartbeat = now;
+                let resurrected = !p.alive;
+                p.alive = true;
+                resurrected
+            }
+            None => false,
+        }
+    }
+
+    /// Bulk liveness refresh: one pass over the registry, refreshing
+    /// every peer `beating` reports as up. This is the simulator's
+    /// heartbeat *transport* (a wave of beacons landing in one tick —
+    /// per-id [`Membership::heartbeat`] would make a 100k-peer wave
+    /// quadratic in registry scans); detection semantics are untouched
+    /// and still live in [`Membership::sweep`]. Returns how many
+    /// refreshed peers the detector had already declared dead (the
+    /// caller should replan — they re-enter the pool).
+    pub fn heartbeat_all(
+        &mut self,
+        now: Duration,
+        mut beating: impl FnMut(u64) -> bool,
+    ) -> u64 {
+        let mut resurrected = 0u64;
+        for p in self.peers.iter_mut() {
+            if beating(p.id) {
+                p.last_heartbeat = now;
+                if !p.alive {
+                    resurrected += 1;
+                }
+                p.alive = true;
+            }
+        }
+        resurrected
+    }
+
+    /// Declare one peer dead (socket teardown, failed directive push).
+    /// True when it was alive — the death is counted and the caller
+    /// should replan around it.
+    pub fn mark_dead(&mut self, id: u64) -> bool {
+        match self.peers.iter_mut().find(|p| p.id == id && p.alive) {
+            Some(p) => {
+                p.alive = false;
+                self.deaths += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Failure-detector sweep: every live peer silent past `timeout` at
+    /// reading `now` is declared dead. Returns how many died (caller
+    /// replans once for the whole sweep).
+    pub fn sweep(&mut self, now: Duration, timeout: Duration) -> u64 {
+        let mut died = 0u64;
+        for p in self.peers.iter_mut().filter(|p| p.alive) {
+            if now.saturating_sub(p.last_heartbeat) > timeout {
+                p.alive = false;
+                died += 1;
+            }
+        }
+        self.deaths += died;
+        died
+    }
+
+    /// Bump the epoch and bind a fresh plan for the current live
+    /// membership: stable slots (survivors keep their place, spares
+    /// fill dead peers' holes — so only a dead peer's own subtree
+    /// rewires), then the planner's balanced k-ary bind. The plan is
+    /// retained (for the next stable order) and returned for pushing.
+    pub fn plan_next(&mut self, fanout_cap: usize, min_relay_levels: usize) -> &TopologyPlan {
+        self.epoch += 1;
+        self.replans += 1;
+        let relays: Vec<u64> = self
+            .peers
+            .iter()
+            .filter(|p| p.alive && p.role == role::RELAY)
+            .map(|p| p.id)
+            .collect();
+        let leaves: Vec<u64> = self
+            .peers
+            .iter()
+            .filter(|p| p.alive && p.role == role::LEAF)
+            .map(|p| p.id)
+            .collect();
+        let relays = planner::stable_relay_order(self.plan.as_ref(), &relays);
+        let plan = planner::bind(self.epoch, &relays, &leaves, fanout_cap, min_relay_levels);
+        self.plan = Some(plan);
+        self.plan.as_ref().unwrap()
+    }
+
+    /// Current topology epoch (0 until the first replan).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Replans so far (joins, deaths, forced).
+    pub fn replans(&self) -> u64 {
+        self.replans
+    }
+
+    /// Peers declared dead so far (heartbeat timeout, socket teardown,
+    /// push failure).
+    pub fn deaths(&self) -> u64 {
+        self.deaths
+    }
+
+    /// The current plan (None before the first replan).
+    pub fn plan(&self) -> Option<&TopologyPlan> {
+        self.plan.as_ref()
+    }
+
+    /// Live `(relays, leaves)` counts.
+    pub fn live_counts(&self) -> (usize, usize) {
+        let relays =
+            self.peers.iter().filter(|p| p.alive && p.role == role::RELAY).count();
+        let leaves =
+            self.peers.iter().filter(|p| p.alive && p.role == role::LEAF).count();
+        (relays, leaves)
+    }
+
+    /// Whether `id` is registered and alive.
+    pub fn is_alive(&self, id: u64) -> bool {
+        self.peers.iter().any(|p| p.id == id && p.alive)
+    }
+
+    /// All registered peers (dead ones included), registration order.
+    pub fn peers(&self) -> &[MemberEntry] {
+        &self.peers
+    }
+}
+
+// ========================================================= ControlPlane
+
+/// A registered peer's control socket (write half for ASSIGN/EPOCH
+/// pushes; the handler thread owns the read half). A [`Wire`] so a
+/// chaos-enabled plane exercises its push-failure paths under injected
+/// wire faults.
+struct PeerConn {
+    id: u64,
+    conn: Wire,
+}
+
+struct PlaneState {
+    members: Membership,
+    conns: Vec<PeerConn>,
+    root_port: u16,
+    /// Wall on the socket plane; the simulator drives [`Membership`]
+    /// directly off its virtual clock instead.
+    clock: Clock,
 }
 
 impl PlaneState {
@@ -165,58 +357,41 @@ impl PlaneState {
     /// One planning + push pass; false if a push failure killed a peer
     /// (the plan is stale and must be recomputed).
     fn replan_once(&mut self, cfg: &ControlConfig) -> bool {
-        self.epoch += 1;
-        self.replans += 1;
-        let relays: Vec<u64> = self
-            .peers
-            .iter()
-            .filter(|p| p.alive && p.role == role::RELAY)
-            .map(|p| p.id)
-            .collect();
-        let leaves: Vec<u64> = self
-            .peers
-            .iter()
-            .filter(|p| p.alive && p.role == role::LEAF)
-            .map(|p| p.id)
-            .collect();
-        // stable slots: survivors keep their place, spares fill dead
-        // peers' holes — so only the dead peer's own subtree rewires
-        let relays = planner::stable_relay_order(self.plan.as_ref(), &relays);
-        let plan =
-            planner::bind(self.epoch, &relays, &leaves, cfg.fanout_cap, cfg.min_relay_levels);
+        let plan = self.members.plan_next(cfg.fanout_cap, cfg.min_relay_levels).clone();
         let port_of: HashMap<u64, u16> =
-            self.peers.iter().map(|p| (p.id, p.listen_port)).collect();
+            self.members.peers().iter().map(|p| (p.id, p.listen_port)).collect();
         let root_port = self.root_port;
-        let epoch = self.epoch;
+        let epoch = plan.epoch;
         let mut push_deaths = 0u64;
-        for peer in self.peers.iter_mut().filter(|p| p.alive) {
-            let Some(a) = plan.assignment_of(peer.id) else { continue };
+        for pc in self.conns.iter_mut() {
+            if !self.members.is_alive(pc.id) {
+                continue;
+            }
+            let Some(a) = plan.assignment_of(pc.id) else { continue };
             let upstream_port = match a.upstream {
                 Upstream::Root => root_port,
                 Upstream::Peer(id) => port_of.get(&id).copied().unwrap_or(0),
                 Upstream::Standby => 0,
             };
             let ok = tcp::write_frame(
-                &mut peer.conn,
+                &mut pc.conn,
                 &Frame { kind: kind::EPOCH, payload: tcp::epoch_payload(epoch) },
             )
             .and_then(|_| {
                 tcp::write_frame(
-                    &mut peer.conn,
+                    &mut pc.conn,
                     &Frame {
                         kind: kind::ASSIGN,
-                        payload: tcp::assign_payload(epoch, peer.id, upstream_port, a.hop),
+                        payload: tcp::assign_payload(epoch, pc.id, upstream_port, a.hop),
                     },
                 )
             })
             .is_ok();
             if !ok {
-                peer.alive = false;
+                self.members.mark_dead(pc.id);
                 push_deaths += 1;
             }
         }
-        self.plan = Some(plan);
-        self.deaths += push_deaths;
         push_deaths == 0
     }
 }
@@ -253,13 +428,10 @@ impl ControlPlane {
         let (listener, port) = tcp::listen_local()?;
         listener.set_nonblocking(true)?;
         let shared = Arc::new(Mutex::new(PlaneState {
-            peers: Vec::new(),
-            epoch: 0,
+            members: Membership::new(),
+            conns: Vec::new(),
             root_port,
-            next_id: 1,
-            plan: None,
-            replans: 0,
-            deaths: 0,
+            clock: Clock::wall(),
         }));
         let stop = Arc::new(AtomicBool::new(false));
         let accept = Mutex::new(Some(spawn_plane_accept(
@@ -275,31 +447,27 @@ impl ControlPlane {
 
     /// Current topology epoch (0 until the first peer joins).
     pub fn epoch(&self) -> u64 {
-        self.shared.lock().unwrap().epoch
+        self.shared.lock().unwrap().members.epoch()
     }
 
     /// Replans so far (joins, deaths, forced).
     pub fn replans(&self) -> u64 {
-        self.shared.lock().unwrap().replans
+        self.shared.lock().unwrap().members.replans()
     }
 
     /// Peers declared dead by heartbeat timeout so far.
     pub fn deaths(&self) -> u64 {
-        self.shared.lock().unwrap().deaths
+        self.shared.lock().unwrap().members.deaths()
     }
 
     /// Live `(relays, leaves)` counts.
     pub fn live_peers(&self) -> (usize, usize) {
-        let sh = self.shared.lock().unwrap();
-        let relays =
-            sh.peers.iter().filter(|p| p.alive && p.role == role::RELAY).count();
-        let leaves = sh.peers.iter().filter(|p| p.alive && p.role == role::LEAF).count();
-        (relays, leaves)
+        self.shared.lock().unwrap().members.live_counts()
     }
 
     /// Snapshot of the current plan (None before the first JOIN).
     pub fn plan(&self) -> Option<TopologyPlan> {
-        self.shared.lock().unwrap().plan.clone()
+        self.shared.lock().unwrap().members.plan().cloned()
     }
 
     /// Root-to-leaf hop depth of the current plan.
@@ -325,8 +493,8 @@ impl ControlPlane {
             let _ = h.join();
         }
         let sh = self.shared.lock().unwrap();
-        for p in &sh.peers {
-            let _ = p.conn.shutdown(Shutdown::Both);
+        for pc in &sh.conns {
+            let _ = pc.conn.shutdown(Shutdown::Both);
         }
     }
 }
@@ -407,29 +575,19 @@ fn plane_handler(
                 // reach this socket through the peer table)
                 let _ = stream.set_read_timeout(None);
                 let mut sh = shared.lock().unwrap();
-                let id = sh.next_id;
-                sh.next_id += 1;
+                let now = sh.clock.now();
+                let id = sh.members.join(peer_role, listen_port, now);
                 my_id = Some(id);
-                sh.peers.push(PeerEntry {
-                    id,
-                    role: peer_role,
-                    listen_port,
-                    conn,
-                    last_heartbeat: Instant::now(),
-                    alive: true,
-                });
+                sh.conns.push(PeerConn { id, conn });
                 sh.replan(&cfg);
             }
             kind::HEARTBEAT => {
                 if let Ok((id, _peer_epoch)) = tcp::parse_heartbeat(&frame.payload) {
                     let mut sh = shared.lock().unwrap();
-                    let mut resurrected = false;
-                    if let Some(p) = sh.peers.iter_mut().find(|p| p.id == id) {
-                        p.last_heartbeat = Instant::now();
-                        resurrected = !p.alive;
-                        p.alive = true;
-                    }
-                    if resurrected {
+                    let now = sh.clock.now();
+                    if sh.members.heartbeat(id, now) {
+                        // resurrected a peer the monitor gave up on —
+                        // it re-enters the pool at this replan
                         sh.replan(&cfg);
                     }
                 }
@@ -447,18 +605,21 @@ fn plane_handler(
     }
     if let Some(id) = my_id {
         let mut sh = shared.lock().unwrap();
-        if let Some(p) = sh.peers.iter_mut().find(|p| p.id == id) {
-            if p.alive {
-                p.alive = false;
-                sh.deaths += 1;
-                sh.replan(&cfg);
-            }
+        if sh.members.mark_dead(id) {
+            sh.replan(&cfg);
         }
     }
 }
 
 /// Failure detector: any live peer silent past the death timeout is
 /// declared dead and the tree replans around it in one sweep.
+///
+/// Wall-clock audit (scale-sim seam): the `sleep(tick)` below is the
+/// socket plane's polling cadence and intentionally stays real — this
+/// thread only exists when a TCP plane is started. The *decision*
+/// (who is silent past the timeout) lives in [`Membership::sweep`] and
+/// runs off `Clock` readings, which is what the simulator drives from
+/// virtual time without ever spawning this thread.
 fn spawn_plane_monitor(
     shared: Arc<Mutex<PlaneState>>,
     cfg: ControlConfig,
@@ -473,16 +634,8 @@ fn spawn_plane_monitor(
             }
             std::thread::sleep(tick);
             let mut sh = shared.lock().unwrap();
-            let now = Instant::now();
-            let mut died = 0u64;
-            for p in sh.peers.iter_mut().filter(|p| p.alive) {
-                if now.duration_since(p.last_heartbeat) > timeout {
-                    p.alive = false;
-                    died += 1;
-                }
-            }
-            if died > 0 {
-                sh.deaths += died;
+            let now = sh.clock.now();
+            if sh.members.sweep(now, timeout) > 0 {
                 sh.replan(&cfg);
             }
         }
@@ -491,11 +644,45 @@ fn spawn_plane_monitor(
 
 // ======================================================== ControlClient
 
+/// The peer-side epoch fence: a directive is only applied when it is
+/// at least as new as the newest epoch the peer has seen (EPOCH
+/// broadcast or accepted ASSIGN), so a delayed directive from a
+/// superseded plan cannot wire a demoted relay back into the tree.
+///
+/// Extracted from the client reader so simulated peers (`crate::sim`)
+/// fence modeled directives with the same arithmetic as TCP clients.
+#[derive(Default, Debug, Clone)]
+pub struct EpochFence {
+    epoch: u64,
+}
+
+impl EpochFence {
+    /// Record an EPOCH broadcast (monotone — never rewinds).
+    pub fn observe(&mut self, epoch: u64) {
+        self.epoch = self.epoch.max(epoch);
+    }
+
+    /// Admit or fence a directive carried at `epoch`: false when a
+    /// newer epoch already superseded it. Admission advances the fence.
+    pub fn admit(&mut self, epoch: u64) -> bool {
+        if epoch < self.epoch {
+            return false;
+        }
+        self.epoch = epoch;
+        true
+    }
+
+    /// Newest epoch seen.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+}
+
 #[derive(Default)]
 struct ClientState {
     peer_id: Option<u64>,
     /// Newest epoch seen (EPOCH fence or accepted ASSIGN).
-    epoch: u64,
+    fence: EpochFence,
     /// Latest accepted directive: `(upstream_port, hop)`; port 0 =
     /// standby. None until the first ASSIGN.
     directive: Option<(u16, u32)>,
@@ -566,11 +753,11 @@ impl ControlClient {
 
     fn snapshot(&self) -> (u64, u64, Option<(u16, u32)>, Option<u64>) {
         let st = self.state.0.lock().unwrap();
-        (st.epoch, st.directive_seq, st.directive, st.peer_id)
+        (st.fence.epoch(), st.directive_seq, st.directive, st.peer_id)
     }
 
     fn epoch(&self) -> u64 {
-        self.state.0.lock().unwrap().epoch
+        self.state.0.lock().unwrap().fence.epoch()
     }
 
     fn peer_id(&self) -> Option<u64> {
@@ -579,6 +766,12 @@ impl ControlClient {
 
     /// Wait (bounded) for a directive newer than `seen_seq`; returns
     /// the new `(seq, port, hop)` or None on timeout/closed plane.
+    ///
+    /// Wall-clock audit: `Instant` here (and in the heartbeat thread's
+    /// sliced sleep) bounds a real condvar wait on a real socket's
+    /// state — client threads exist only on the TCP plane, so virtual
+    /// runs cannot block on them. The epoch-fence arithmetic a
+    /// simulated peer shares lives in [`EpochFence`], not here.
     fn wait_directive(&self, seen_seq: u64, timeout: Duration) -> Option<(u64, u16, u32)> {
         let (lock, cv) = &*self.state;
         let deadline = Instant::now() + timeout;
@@ -641,17 +834,15 @@ fn spawn_client_reader(
         match frame.kind {
             kind::EPOCH => {
                 if let Ok(e) = tcp::parse_epoch(&frame.payload) {
-                    let mut st = lock.lock().unwrap();
-                    st.epoch = st.epoch.max(e);
+                    lock.lock().unwrap().fence.observe(e);
                 }
             }
             kind::ASSIGN => {
                 if let Ok((epoch, id, port, hop)) = tcp::parse_assign(&frame.payload) {
                     let mut st = lock.lock().unwrap();
-                    if epoch < st.epoch {
+                    if !st.fence.admit(epoch) {
                         continue; // fenced: a newer epoch superseded this
                     }
-                    st.epoch = epoch;
                     st.peer_id = Some(id);
                     st.directive = Some((port, hop));
                     st.directive_seq += 1;
@@ -695,7 +886,7 @@ fn spawn_client_heartbeat(
             if st.closed {
                 return;
             }
-            (st.peer_id, st.epoch)
+            (st.peer_id, st.fence.epoch())
         };
         let Some(id) = id else { continue };
         let mut c = conn.lock().unwrap();
@@ -1310,5 +1501,50 @@ mod tests {
         }
         assert!(plane.epoch() > epoch_after_death, "resurrection must bump the epoch");
         plane.stop();
+    }
+
+    // ── extracted state machines (shared with crate::sim) ──────────
+
+    #[test]
+    fn membership_machine_joins_sweeps_and_replans() {
+        let mut m = Membership::new();
+        let t = Duration::from_millis;
+        let r1 = m.join(role::RELAY, 7001, t(0));
+        let l1 = m.join(role::LEAF, 0, t(0));
+        let l2 = m.join(role::LEAF, 0, t(0));
+        assert_eq!((r1, l1, l2), (1, 2, 3), "ids are dense from 1");
+        let plan = m.plan_next(4, 0).clone();
+        assert_eq!(plan.epoch, 1);
+        assert!(plan.assignment_of(l1).is_some() && plan.assignment_of(r1).is_some());
+        assert_eq!(m.live_counts(), (1, 2));
+        // l1 goes silent; l2 and r1 stay fresh
+        assert!(!m.heartbeat(l2, t(900)), "routine heartbeat is not a resurrection");
+        assert!(!m.heartbeat(r1, t(900)));
+        assert_eq!(m.sweep(t(1000), t(500)), 1, "only the silent peer dies");
+        assert_eq!(m.deaths(), 1);
+        assert!(!m.is_alive(l1) && m.is_alive(l2));
+        let plan2 = m.plan_next(4, 0).clone();
+        assert_eq!(plan2.epoch, 2);
+        assert!(plan2.assignment_of(l1).is_none(), "dead peers drop out of the plan");
+        // the dead peer heartbeats again: resurrection is flagged
+        assert!(m.heartbeat(l1, t(1200)), "late heartbeat resurrects");
+        assert_eq!(m.live_counts(), (1, 2));
+        // unknown ids are inert
+        assert!(!m.heartbeat(99, t(0)) && !m.mark_dead(99));
+        assert!(m.mark_dead(l2) && !m.mark_dead(l2), "mark_dead counts once");
+        assert_eq!(m.deaths(), 2);
+    }
+
+    #[test]
+    fn epoch_fence_blocks_stale_directives() {
+        let mut f = EpochFence::default();
+        assert!(f.admit(3), "first directive admits");
+        f.observe(7);
+        assert!(!f.admit(5), "older than the observed fence is rejected");
+        assert!(f.admit(7), "equal to the fence admits (re-push of the live plan)");
+        assert!(f.admit(9));
+        assert_eq!(f.epoch(), 9);
+        f.observe(4);
+        assert_eq!(f.epoch(), 9, "observe never rewinds");
     }
 }

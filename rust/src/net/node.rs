@@ -60,6 +60,18 @@
 //! root reports 1). The depth is re-served to downstream SUBSCRIBEs,
 //! so every peer in the tree knows its distance from the publisher —
 //! `paper topology` prints the per-hop rows.
+//!
+//! # Wall-clock audit (scale-sim seam)
+//!
+//! This module holds **no timing logic** — no `Instant::now()`, no
+//! sleeps, no backoff arithmetic. Every time-dependent decision a hop
+//! makes (escalation backoff windows, coalescing, retry budgets) lives
+//! in the state machines [`crate::net::relay`] extracts
+//! (`RelayStage`, `EscalationLedger`, `coalesce_enqueue`) and in
+//! [`crate::util::retry`], all parameterized by explicit clock
+//! readings. That is what lets the scale simulator (`crate::sim`)
+//! model a chained hop faithfully without ever instantiating the
+//! socket-bound `RelayNode` itself.
 
 use super::chaos::{ChaosConfig, Wire};
 use super::relay::Relay;

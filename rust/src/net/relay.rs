@@ -85,22 +85,277 @@
 //! drain, then shuts the sockets down, so a stalled subscriber cannot
 //! wedge shutdown (it may lose in-flight frames — it was going to
 //! resync from an anchor anyway).
+//!
+//! # Wall-clock audit (scale-sim seam)
+//!
+//! The relay's time-dependent *decisions* — staging/index eviction
+//! ([`RelayStage`]), per-subscriber coalescing ([`coalesce_enqueue`]),
+//! and escalation storm suppression ([`EscalationLedger`]) — are
+//! extracted state machines driven by explicit clock readings
+//! ([`crate::sim::clock::Clock`]), shared verbatim with the scale
+//! simulator. The wall-clock uses that remain are socket pump loops
+//! (accept poll, writer condvar timeout, `stop`'s drain grace) which
+//! exist only when a real TCP relay is started; simulated runs never
+//! spawn these threads and so cannot block on real time.
 
 use super::chaos::{ChaosConfig, Wire};
 use super::tcp::{self, kind, Frame};
+use crate::sim::clock::Clock;
 use crate::util::retry::RetryPolicy;
 use anyhow::Result;
 use std::collections::{HashMap, VecDeque};
 use std::net::{Shutdown, TcpListener};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::Duration;
 
 /// Default bound on a subscriber's outbound queue, in frames.
 pub const DEFAULT_QUEUE_DEPTH: usize = 64;
 
 /// Distinct steps the NACK frame index retains.
 pub const INDEX_STEPS: usize = 8;
+
+/// Per-hop staging state: the last anchor, the tail published since it
+/// (patches *and* markers — the canonical catch-up bundle), and the
+/// bounded `(step, shard)` frame index NACK repair is served from.
+///
+/// Extracted from the socket relay so the scale simulator
+/// (`crate::sim`) runs the *same* staging/eviction logic per simulated
+/// hop — no fork of the catch-up or index-eviction policy.
+pub struct RelayStage {
+    last_anchor: Option<Arc<Frame>>,
+    /// Patches + markers since the last anchor, in publish order.
+    tail: Vec<Arc<Frame>>,
+    /// Container PATCH frames by (step, shard_index) for NACK service.
+    frame_index: HashMap<(u64, u32), Arc<Frame>>,
+    /// Distinct steps present in `frame_index`, insertion order.
+    index_steps: VecDeque<u64>,
+    /// Bound on `index_steps` (defaults to [`INDEX_STEPS`]).
+    max_index_steps: usize,
+}
+
+impl RelayStage {
+    /// Empty staging with an index bound of `index_steps` (≥ 1).
+    pub fn new(index_steps: usize) -> RelayStage {
+        RelayStage {
+            last_anchor: None,
+            tail: Vec::new(),
+            frame_index: HashMap::new(),
+            index_steps: VecDeque::new(),
+            max_index_steps: index_steps.max(1),
+        }
+    }
+
+    /// Stage one published frame: ANCHOR supersedes the tail, PATCH and
+    /// MARKER extend it (markers are part of the replayable stream — a
+    /// step is only committed once its marker lands). `shard_meta` is
+    /// the frame's `(step, shard_index)` when it parses as a patch
+    /// container (socket plane: `container::peek_meta`; simulator:
+    /// carried on the modeled frame) — such frames are indexed for
+    /// per-shard NACK service; opaque payloads just aren't NACKable.
+    pub fn stage(&mut self, frame: &Arc<Frame>, shard_meta: Option<(u64, u32)>) {
+        match frame.kind {
+            kind::ANCHOR => {
+                self.last_anchor = Some(frame.clone());
+                self.tail.clear();
+            }
+            kind::PATCH => {
+                self.tail.push(frame.clone());
+                if let Some((step, shard)) = shard_meta {
+                    self.index_frame(step, shard, frame.clone());
+                }
+            }
+            kind::MARKER => self.tail.push(frame.clone()),
+            _ => {}
+        }
+    }
+
+    /// Index one container PATCH frame for per-shard NACK service,
+    /// evicting the oldest indexed steps past the bound.
+    pub fn index_frame(&mut self, step: u64, shard: u32, frame: Arc<Frame>) {
+        if !self.index_steps.contains(&step) {
+            self.index_steps.push_back(step);
+            while self.index_steps.len() > self.max_index_steps {
+                let old = self.index_steps.pop_front().unwrap();
+                self.frame_index.retain(|&(s, _), _| s != old);
+            }
+        }
+        self.frame_index.insert((step, shard), frame);
+    }
+
+    /// The indexed frame for `(step, shard)`, if not yet evicted.
+    pub fn lookup(&self, step: u64, shard: u32) -> Option<Arc<Frame>> {
+        self.frame_index.get(&(step, shard)).cloned()
+    }
+
+    /// The canonical catch-up bundle: last anchor + everything published
+    /// since. This is exactly the late-joiner stream, and what a
+    /// coalesced subscriber's queue is rebuilt from.
+    pub fn catchup(&self) -> impl Iterator<Item = Arc<Frame>> + '_ {
+        self.last_anchor.iter().cloned().chain(self.tail.iter().cloned())
+    }
+
+    /// Frames in the catch-up bundle (anchor + tail).
+    pub fn catchup_len(&self) -> usize {
+        self.last_anchor.is_some() as usize + self.tail.len()
+    }
+}
+
+/// The per-subscriber coalescing policy (module docs, "Coalescing
+/// catch-up policy"), extracted so the simulator enqueues through the
+/// exact code the socket relay uses:
+///
+/// * ANCHOR clears the queued stream (control replies survive) and
+///   restarts it at the anchor.
+/// * Any frame overflowing `depth` swaps the queue for the catch-up
+///   bundle from `stage` (+ surviving control frames; + the frame
+///   itself unless it already rides in the rebuilt tail).
+/// * Everything else appends.
+///
+/// Returns `(coalesced, dropped)`: whether an overflow catch-up swap
+/// happened, and how many queued stream frames were superseded.
+pub fn coalesce_enqueue(
+    q: &mut VecDeque<Arc<Frame>>,
+    frame: &Arc<Frame>,
+    stage: &RelayStage,
+    depth: usize,
+) -> (bool, u64) {
+    let is_stream =
+        |f: &Frame| f.kind == kind::PATCH || f.kind == kind::ANCHOR || f.kind == kind::MARKER;
+    match frame.kind {
+        kind::ANCHOR => {
+            // the anchor supersedes the queued stream; control replies
+            // (HOP, NACK_MISS, CLOSE, …) survive the clear exactly as
+            // they survive a coalesce — otherwise an anchor racing a
+            // SUBSCRIBE handshake would eat the HOP reply for good
+            let keep: Vec<Arc<Frame>> =
+                q.iter().filter(|f| !is_stream(f)).cloned().collect();
+            let dropped = (q.len() - keep.len()) as u64;
+            q.clear();
+            q.push_back(frame.clone());
+            q.extend(keep);
+            (false, dropped)
+        }
+        // the depth bound applies to EVERY enqueue, not just patches: a
+        // marker- or control-heavy stream must coalesce a slow
+        // subscriber exactly like a patch stream would
+        _ if q.len() >= depth => {
+            // slow subscriber: swap the queue for the canonical
+            // catch-up bundle (anchor + tail), keeping control frames;
+            // superseded patches/markers are dropped once (the tail
+            // replays surviving markers)
+            let keep: Vec<Arc<Frame>> =
+                q.iter().filter(|f| !is_stream(f)).cloned().collect();
+            let dropped = (q.len() - keep.len()) as u64;
+            q.clear();
+            q.extend(stage.catchup());
+            q.extend(keep);
+            // PATCH/MARKER frames already ride in the rebuilt tail;
+            // anything else (CLOSE, …) follows the bundle
+            if frame.kind != kind::PATCH && frame.kind != kind::MARKER {
+                q.push_back(frame.clone());
+            }
+            (true, dropped)
+        }
+        _ => {
+            q.push_back(frame.clone());
+            (false, 0)
+        }
+    }
+}
+
+/// One escalated `(step, shard)` slot: the riders waiting on the
+/// retransmit, and the backoff state that keeps a NACK storm from
+/// multiplying upstream.
+struct PendingSlot<R> {
+    riders: Vec<R>,
+    attempts: u32,
+    /// Clock reading of the last escalation actually sent upstream.
+    last: Duration,
+}
+
+/// NACK-storm suppression ledger, generic over the rider handle (the
+/// socket relay rides subscriber channels; the simulator rides peer
+/// ids). While a slot's escalation is inside its backoff window
+/// ([`RetryPolicy::escalate_default`]), further NACKs for it just ride
+/// the pending entry; past the window the slot is re-escalated once
+/// and the window doubles. All timing flows through explicit `now`
+/// readings (see [`crate::sim::clock::Clock`]), so the same dedup
+/// arithmetic runs on the wall and in simulated time.
+pub struct EscalationLedger<R> {
+    pending: HashMap<(u64, u32), PendingSlot<R>>,
+    policy: RetryPolicy,
+}
+
+impl<R> EscalationLedger<R> {
+    pub fn new(policy: RetryPolicy) -> EscalationLedger<R> {
+        EscalationLedger { pending: HashMap::new(), policy }
+    }
+
+    /// Override the escalation backoff schedule.
+    pub fn set_policy(&mut self, policy: RetryPolicy) {
+        self.policy = policy;
+    }
+
+    /// Record one NACK for `(step, shard)` from `rider` at time `now`.
+    /// Returns whether the caller should escalate upstream *now*:
+    /// true for the first NACK on a slot or once the current backoff
+    /// window has expired (the window grows per attempt); false while
+    /// in-window — the rider is registered and the caller should count
+    /// a suppression. `same` dedups riders (channel pointer equality on
+    /// the socket plane, id equality in the simulator).
+    pub fn on_nack(
+        &mut self,
+        step: u64,
+        shard: u32,
+        rider: R,
+        same: impl Fn(&R, &R) -> bool,
+        now: Duration,
+    ) -> bool {
+        use std::collections::hash_map::Entry;
+        match self.pending.entry((step, shard)) {
+            Entry::Occupied(mut o) => {
+                let p = o.get_mut();
+                if !p.riders.iter().any(|r| same(r, &rider)) {
+                    p.riders.push(rider);
+                }
+                let window = self.policy.delay_for(p.attempts.saturating_sub(1));
+                if now.saturating_sub(p.last) < window {
+                    false
+                } else {
+                    p.attempts += 1;
+                    p.last = now;
+                    true
+                }
+            }
+            Entry::Vacant(v) => {
+                v.insert(PendingSlot { riders: vec![rider], attempts: 1, last: now });
+                true
+            }
+        }
+    }
+
+    /// Resolve one slot (retransmit arrived, or the escalation failed):
+    /// every registered rider, or None when nothing was pending.
+    pub fn resolve(&mut self, step: u64, shard: u32) -> Option<Vec<R>> {
+        self.pending.remove(&(step, shard)).map(|p| p.riders)
+    }
+
+    /// Resolve EVERY pending slot (upstream torn down).
+    pub fn resolve_all(&mut self) -> Vec<((u64, u32), Vec<R>)> {
+        self.pending.drain().map(|(k, p)| (k, p.riders)).collect()
+    }
+
+    /// Riders currently waiting on `(step, shard)` (0 when none).
+    pub fn riders(&self, step: u64, shard: u32) -> usize {
+        self.pending.get(&(step, shard)).map_or(0, |p| p.riders.len())
+    }
+
+    /// Slots currently escalated and unanswered.
+    pub fn pending_slots(&self) -> usize {
+        self.pending.len()
+    }
+}
 
 struct SubQueue {
     /// Frames are `Arc`-shared across subscribers/tail, so enqueueing
@@ -161,18 +416,12 @@ type Escalate = Arc<dyn Fn(u64, u32) -> bool + Send + Sync>;
 
 struct Shared {
     subs: Vec<SubHandle>,
-    last_anchor: Option<Arc<Frame>>,
-    /// Patches + markers since the last anchor, in publish order.
-    tail: Vec<Arc<Frame>>,
+    /// Anchor + tail staging and the NACK frame index — the hop state
+    /// machine shared with the simulator ([`RelayStage`]).
+    stage: RelayStage,
     queue_depth: usize,
     /// Total coalescing events across subscribers (observability).
     coalesced: u64,
-    /// Container PATCH frames by (step, shard_index) for NACK service.
-    frame_index: HashMap<(u64, u32), Arc<Frame>>,
-    /// Distinct steps present in `frame_index`, insertion order.
-    index_steps: VecDeque<u64>,
-    /// Bound on `index_steps` (defaults to [`INDEX_STEPS`]).
-    max_index_steps: usize,
     /// Shard NACKs serviced from the index (observability/tests).
     nacks_serviced: u64,
     /// NACKs forwarded upstream because the local index missed.
@@ -182,42 +431,18 @@ struct Shared {
     /// NACKs absorbed as riders on an in-window escalation instead of
     /// going upstream again (storm suppression).
     nacks_suppressed: u64,
-    /// Slots escalated upstream → subscribers awaiting the retransmit,
-    /// plus the escalation backoff state for the slot.
-    pending_upstream: HashMap<(u64, u32), Pending>,
-    /// Backoff schedule for re-escalating an unanswered slot.
-    escalate_policy: RetryPolicy,
+    /// Storm-suppression state: slots escalated upstream → subscriber
+    /// channels awaiting the retransmit, with per-slot backoff.
+    ledger: EscalationLedger<Chan>,
     /// Upstream NACK hook; None for a root relay.
     escalate: Option<Escalate>,
     /// This relay's distance from the publisher (0 = root); replied to
     /// SUBSCRIBE frames as a HOP frame.
     hop: u32,
-}
-
-/// One escalated `(step, shard)` slot: the subscribers waiting on the
-/// retransmit, and the backoff state that keeps a NACK storm from
-/// multiplying upstream — k clients re-NACKing inside the current
-/// window ride the one escalation already in flight; only a window
-/// expiry re-asks the upstream (with the window growing per attempt).
-struct Pending {
-    chans: Vec<Chan>,
-    attempts: u32,
-    last: Instant,
-}
-
-impl Shared {
-    /// Index one container PATCH frame for per-shard NACK service,
-    /// evicting the oldest indexed steps past the bound.
-    fn index_frame(&mut self, step: u64, shard: u32, frame: Arc<Frame>) {
-        if !self.index_steps.contains(&step) {
-            self.index_steps.push_back(step);
-            while self.index_steps.len() > self.max_index_steps {
-                let old = self.index_steps.pop_front().unwrap();
-                self.frame_index.retain(|&(s, _), _| s != old);
-            }
-        }
-        self.frame_index.insert((step, shard), frame);
-    }
+    /// Time source for escalation backoff windows (wall on the socket
+    /// plane; the sim drives the extracted state machines off a virtual
+    /// clock instead).
+    clock: Clock,
 }
 
 /// Relay server handle.
@@ -259,21 +484,17 @@ impl Relay {
         listener.set_nonblocking(true)?;
         let shared = Arc::new(Mutex::new(Shared {
             subs: Vec::new(),
-            last_anchor: None,
-            tail: Vec::new(),
+            stage: RelayStage::new(index_steps),
             queue_depth: queue_depth.max(1),
             coalesced: 0,
-            frame_index: HashMap::new(),
-            index_steps: VecDeque::new(),
-            max_index_steps: index_steps.max(1),
             nacks_serviced: 0,
             nacks_escalated: 0,
             nacks_unserviceable: 0,
             nacks_suppressed: 0,
-            pending_upstream: HashMap::new(),
-            escalate_policy: RetryPolicy::escalate_default(),
+            ledger: EscalationLedger::new(RetryPolicy::escalate_default()),
             escalate: None,
             hop: 0,
+            clock: Clock::wall(),
         }));
         let stop = Arc::new(AtomicBool::new(false));
         let accept_thread =
@@ -294,7 +515,7 @@ impl Relay {
     /// to make rider counting deterministic, or shrink it to force
     /// re-escalation quickly).
     pub fn set_escalation_policy(&self, policy: RetryPolicy) {
-        self.shared.lock().unwrap().escalate_policy = policy;
+        self.shared.lock().unwrap().ledger.set_policy(policy);
     }
 
     /// Set this relay's hop distance from the publisher (0 = root),
@@ -316,26 +537,17 @@ impl Relay {
         let frame = Arc::new(frame);
         let mut guard = self.shared.lock().unwrap();
         let sh: &mut Shared = &mut guard;
-        match frame.kind {
-            kind::ANCHOR => {
-                sh.last_anchor = Some(frame.clone());
-                sh.tail.clear();
-            }
-            kind::PATCH => {
-                sh.tail.push(frame.clone());
-                // index container frames for per-shard NACK service;
-                // opaque payloads just aren't NACKable
-                if let Ok(meta) = crate::sparse::container::peek_meta(&frame.payload) {
-                    sh.index_frame(meta.step, meta.shard_index, frame.clone());
-                }
-            }
-            // markers are part of the replayable stream: a step is only
-            // committed once its marker lands, so late joiners and
-            // coalesced subscribers must replay them with the patches
-            kind::MARKER => sh.tail.push(frame.clone()),
-            _ => {}
-        }
-        let Shared { subs, last_anchor, tail, queue_depth, coalesced, .. } = sh;
+        // index container frames for per-shard NACK service; opaque
+        // payloads just aren't NACKable
+        let shard_meta = if frame.kind == kind::PATCH {
+            crate::sparse::container::peek_meta(&frame.payload)
+                .ok()
+                .map(|m| (m.step, m.shard_index))
+        } else {
+            None
+        };
+        sh.stage.stage(&frame, shard_meta);
+        let Shared { subs, stage, queue_depth, coalesced, .. } = sh;
         let depth = *queue_depth;
         subs.retain_mut(|sub| {
             let (lock, cv) = &*sub.chan;
@@ -353,66 +565,13 @@ impl Relay {
                 drop(sub.reader.take());
                 return false;
             }
-            match frame.kind {
-                kind::ANCHOR => {
-                    // the anchor supersedes the queued stream; control
-                    // replies (HOP, NACK_MISS, CLOSE, …) survive the
-                    // clear exactly as they survive a coalesce —
-                    // otherwise an anchor racing a SUBSCRIBE handshake
-                    // would eat the HOP reply for good
-                    let keep: Vec<Arc<Frame>> = q
-                        .q
-                        .iter()
-                        .filter(|f| {
-                            f.kind != kind::PATCH
-                                && f.kind != kind::ANCHOR
-                                && f.kind != kind::MARKER
-                        })
-                        .cloned()
-                        .collect();
-                    q.dropped += (q.q.len() - keep.len()) as u64;
-                    q.q.clear();
-                    q.q.push_back(frame.clone());
-                    q.q.extend(keep);
-                }
-                // the depth bound applies to EVERY enqueue, not just
-                // patches: a marker- or control-heavy stream must
-                // coalesce a slow subscriber exactly like a patch
-                // stream would (this used to be `kind::PATCH if …`,
-                // letting markers grow the queue past the bound)
-                _ if q.q.len() >= depth => {
-                    // slow subscriber: swap the queue for the canonical
-                    // catch-up bundle (anchor + tail), keeping control
-                    // frames; superseded patches/markers are dropped
-                    // once (the tail replays surviving markers)
-                    *coalesced += 1;
-                    let keep: Vec<Arc<Frame>> = q
-                        .q
-                        .iter()
-                        .filter(|f| {
-                            f.kind != kind::PATCH
-                                && f.kind != kind::ANCHOR
-                                && f.kind != kind::MARKER
-                        })
-                        .cloned()
-                        .collect();
-                    q.dropped += (q.q.len() - keep.len()) as u64;
-                    q.q.clear();
-                    if let Some(a) = last_anchor.as_ref() {
-                        q.q.push_back(a.clone());
-                    }
-                    for p in tail.iter() {
-                        q.q.push_back(p.clone());
-                    }
-                    q.q.extend(keep);
-                    // PATCH/MARKER frames already ride in the rebuilt
-                    // tail; anything else (CLOSE, …) follows the bundle
-                    if frame.kind != kind::PATCH && frame.kind != kind::MARKER {
-                        q.q.push_back(frame.clone());
-                    }
-                }
-                _ => q.q.push_back(frame.clone()),
+            // one coalescing policy for the socket plane and the
+            // simulator — see `coalesce_enqueue`
+            let (was_coalesced, dropped) = coalesce_enqueue(&mut q.q, &frame, stage, depth);
+            if was_coalesced {
+                *coalesced += 1;
             }
+            q.dropped += dropped;
             cv.notify_one();
             true
         });
@@ -462,12 +621,7 @@ impl Relay {
     /// slot (0 when nothing is pending for it) — storm tests use this
     /// to know every rider has registered before answering.
     pub fn pending_riders(&self, step: u64, shard: u32) -> usize {
-        self.shared
-            .lock()
-            .unwrap()
-            .pending_upstream
-            .get(&(step, shard))
-            .map_or(0, |p| p.chans.len())
+        self.shared.lock().unwrap().ledger.riders(step, shard)
     }
 
     /// Deliver an upstream retransmit for an escalated `(step, shard)`
@@ -479,13 +633,13 @@ impl Relay {
     pub fn deliver_retransmit(&self, step: u64, shard: u32, frame: Frame) -> bool {
         let frame = Arc::new(frame);
         let mut sh = self.shared.lock().unwrap();
-        let pending = match sh.pending_upstream.remove(&(step, shard)) {
-            Some(p) => p,
+        let riders = match sh.ledger.resolve(step, shard) {
+            Some(r) => r,
             None => return false,
         };
-        sh.index_frame(step, shard, frame.clone());
+        sh.stage.index_frame(step, shard, frame.clone());
         sh.nacks_serviced += 1;
-        for chan in &pending.chans {
+        for chan in &riders {
             push_direct(chan, frame.clone());
         }
         true
@@ -496,8 +650,8 @@ impl Relay {
     /// stop waiting and take the anchor slow path.
     pub fn fail_escalated(&self, step: u64, shard: u32) {
         let mut sh = self.shared.lock().unwrap();
-        if let Some(p) = sh.pending_upstream.remove(&(step, shard)) {
-            miss_waiters(&mut sh, step, shard, &p.chans);
+        if let Some(riders) = sh.ledger.resolve(step, shard) {
+            miss_waiters(&mut sh, step, shard, &riders);
         }
     }
 
@@ -509,9 +663,8 @@ impl Relay {
     /// NACK timeouts across the failover.
     pub fn fail_all_escalated(&self) {
         let mut sh = self.shared.lock().unwrap();
-        let pending = std::mem::take(&mut sh.pending_upstream);
-        for ((step, shard), p) in pending {
-            miss_waiters(&mut sh, step, shard, &p.chans);
+        for ((step, shard), riders) in sh.ledger.resolve_all() {
+            miss_waiters(&mut sh, step, shard, &riders);
         }
     }
 
@@ -614,7 +767,7 @@ fn spawn_reader(
             Ok(f) if f.kind == kind::NACK => {
                 if let Ok((step, shard)) = tcp::parse_shard_ack(&f.payload) {
                     let mut sh = shared.lock().unwrap();
-                    if let Some(frame) = sh.frame_index.get(&(step, shard)).cloned() {
+                    if let Some(frame) = sh.stage.lookup(step, shard) {
                         sh.nacks_serviced += 1;
                         // a retransmit bypasses the coalescing policy:
                         // it is already the minimal repair
@@ -638,34 +791,17 @@ fn spawn_reader(
                     // storm suppression of module docs); only a
                     // window expiry re-asks the upstream, with the
                     // window growing per attempt so a mute upstream
-                    // is re-asked on a bounded schedule
-                    let policy = sh.escalate_policy.clone();
-                    use std::collections::hash_map::Entry;
-                    let escalate_now = match sh.pending_upstream.entry((step, shard)) {
-                        Entry::Occupied(mut o) => {
-                            let p = o.get_mut();
-                            if !p.chans.iter().any(|c| Arc::ptr_eq(c, &chan)) {
-                                p.chans.push(chan.clone());
-                            }
-                            let window =
-                                policy.delay_for(p.attempts.saturating_sub(1));
-                            if p.last.elapsed() < window {
-                                false
-                            } else {
-                                p.attempts += 1;
-                                p.last = Instant::now();
-                                true
-                            }
-                        }
-                        Entry::Vacant(v) => {
-                            v.insert(Pending {
-                                chans: vec![chan.clone()],
-                                attempts: 1,
-                                last: Instant::now(),
-                            });
-                            true
-                        }
-                    };
+                    // is re-asked on a bounded schedule — the window
+                    // arithmetic lives in EscalationLedger, shared
+                    // with the simulator
+                    let now = sh.clock.now();
+                    let escalate_now = sh.ledger.on_nack(
+                        step,
+                        shard,
+                        chan.clone(),
+                        |a, b| Arc::ptr_eq(a, b),
+                        now,
+                    );
                     if !escalate_now {
                         sh.nacks_suppressed += 1;
                         continue;
@@ -677,8 +813,8 @@ fn spawn_reader(
                         // went out, so answer EVERY waiter (riders
                         // included) with a miss
                         let mut sh = shared.lock().unwrap();
-                        if let Some(p) = sh.pending_upstream.remove(&(step, shard)) {
-                            miss_waiters(&mut sh, step, shard, &p.chans);
+                        if let Some(riders) = sh.ledger.resolve(step, shard) {
+                            miss_waiters(&mut sh, step, shard, &riders);
                         }
                     }
                 }
@@ -731,13 +867,7 @@ fn spawn_accept(
                 // catch-up preload: anchor + tail (patches and markers);
                 // the writer thread delivers it, so a slow joiner cannot
                 // stall accept
-                let mut q = VecDeque::new();
-                if let Some(a) = &sh.last_anchor {
-                    q.push_back(a.clone());
-                }
-                for p in &sh.tail {
-                    q.push_back(p.clone());
-                }
+                let q: VecDeque<Arc<Frame>> = sh.stage.catchup().collect();
                 let chan: Chan =
                     Arc::new((Mutex::new(SubQueue { q, dead: false, dropped: 0 }), Condvar::new()));
                 let writer = spawn_writer(stream, chan.clone(), stop.clone());
@@ -923,10 +1053,10 @@ mod tests {
             // anchor first, then the surviving tail — never more than
             // bundle-size frames, however many markers flooded past
             assert!(
-                q.q.len() <= 1 + sh.tail.len(),
+                q.q.len() <= sh.stage.catchup_len(),
                 "queue ({}) exceeds the catch-up bundle ({})",
                 q.q.len(),
-                1 + sh.tail.len()
+                sh.stage.catchup_len()
             );
             assert_eq!(q.q[0].kind, kind::ANCHOR, "coalesce must restart at the anchor");
         }
@@ -1124,5 +1254,71 @@ mod tests {
         .unwrap();
         assert_eq!(tcp::read_frame(&mut a).unwrap().kind, kind::CLOSE);
         relay.stop();
+    }
+
+    // ── extracted state machines (shared with crate::sim) ──────────
+
+    #[test]
+    fn stage_machine_anchors_tails_and_evicts() {
+        let mut st = RelayStage::new(2);
+        let af = Arc::new(frame(kind::ANCHOR, 0xa));
+        let pf = |tag| Arc::new(frame(kind::PATCH, tag));
+        let mf = Arc::new(frame(kind::MARKER, 0xb));
+        st.stage(&pf(1), Some((1, 0)));
+        st.stage(&mf, None);
+        assert_eq!(st.catchup_len(), 2, "patch + marker tail before any anchor");
+        st.stage(&af, None);
+        assert_eq!(st.catchup_len(), 1, "anchor supersedes the tail");
+        assert!(st.lookup(1, 0).is_some(), "the index survives an anchor");
+        // index bound: 2 distinct steps — staging a third evicts step 1
+        st.stage(&pf(2), Some((2, 0)));
+        st.stage(&pf(3), Some((3, 0)));
+        assert!(st.lookup(1, 0).is_none(), "oldest step evicted past the bound");
+        assert!(st.lookup(2, 0).is_some() && st.lookup(3, 0).is_some());
+        let kinds: Vec<u8> = st.catchup().map(|f| f.kind).collect();
+        assert_eq!(kinds, vec![kind::ANCHOR, kind::PATCH, kind::PATCH]);
+    }
+
+    #[test]
+    fn coalesce_enqueue_matches_policy() {
+        let mut st = RelayStage::new(INDEX_STEPS);
+        st.stage(&Arc::new(frame(kind::ANCHOR, 0xa)), None);
+        st.stage(&Arc::new(frame(kind::PATCH, 1)), None);
+        let mut q: VecDeque<Arc<Frame>> = VecDeque::new();
+        q.push_back(Arc::new(frame(kind::HOP, 0))); // control reply
+        q.push_back(Arc::new(frame(kind::PATCH, 9)));
+        // anchor: stream cleared, control survives after the anchor
+        let (c, d) = coalesce_enqueue(&mut q, &Arc::new(frame(kind::ANCHOR, 0xa)), &st, 8);
+        assert!(!c && d == 1);
+        assert_eq!(q.iter().map(|f| f.kind).collect::<Vec<_>>(), vec![kind::ANCHOR, kind::HOP]);
+        // overflow at depth 2: queue becomes catch-up bundle + control
+        let (c, d) = coalesce_enqueue(&mut q, &Arc::new(frame(kind::PATCH, 2)), &st, 2);
+        assert!(c, "overflow must coalesce");
+        assert_eq!(d, 1, "the queued anchor is superseded by the bundle");
+        assert_eq!(
+            q.iter().map(|f| f.kind).collect::<Vec<_>>(),
+            vec![kind::ANCHOR, kind::PATCH, kind::HOP],
+            "bundle (anchor+tail) then surviving control frames"
+        );
+    }
+
+    #[test]
+    fn escalation_ledger_windows_and_riders() {
+        use std::time::Duration;
+        let mut led: EscalationLedger<u64> =
+            EscalationLedger::new(RetryPolicy::escalate_default().with_seed(1));
+        let t0 = Duration::from_secs(1);
+        assert!(led.on_nack(5, 0, 10, |a, b| a == b, t0), "first NACK escalates");
+        // in-window re-NACKs (same or other rider) are suppressed
+        assert!(!led.on_nack(5, 0, 10, |a, b| a == b, t0 + Duration::from_millis(1)));
+        assert!(!led.on_nack(5, 0, 11, |a, b| a == b, t0 + Duration::from_millis(2)));
+        assert_eq!(led.riders(5, 0), 2, "riders dedup by identity");
+        // past the first window (≤ 250ms jittered) the slot re-escalates
+        assert!(led.on_nack(5, 0, 10, |a, b| a == b, t0 + Duration::from_millis(300)));
+        assert_eq!(led.riders(5, 0), 2);
+        let riders = led.resolve(5, 0).unwrap();
+        assert_eq!(riders, vec![10, 11]);
+        assert_eq!(led.pending_slots(), 0);
+        assert!(led.resolve(5, 0).is_none(), "resolve is one-shot");
     }
 }

@@ -1095,6 +1095,14 @@ impl SyncTransport for RelayTransport {
                 return Err(e);
             }
         }
+        // Wall-clock audit (scale-sim seam): this wait is intentionally
+        // real time. It parks the calling thread on a condvar fed by a
+        // live socket reader, which only exists on the TCP plane — the
+        // simulator never enters this loop (modeled leaves schedule
+        // NACK resends as events off the same RetryPolicy via
+        // `RetryPolicy::start_at`). Moving this behind the virtual
+        // clock would mean virtualizing the condvar wakeup itself,
+        // i.e. simulating the thread scheduler — out of scope.
         let mut retry = sub.nack_policy.start();
         let deadline = retry.deadline();
         let mut next_resend = if owner {

@@ -663,14 +663,24 @@ pub struct Consumer<T: SyncTransport = ObjectStoreTransport> {
     cached_inv: Option<Inventory>,
 }
 
-/// Latest step with a delta-ready (or anchor-ready) marker in `inv`.
-fn latest_of(inv: &Inventory) -> Option<u64> {
+/// Latest step with a delta-ready (or anchor-ready) marker in `inv` —
+/// the "head" a consumer converges to. Public so the scale simulator
+/// (`crate::sim`) applies the same convergence rule to modeled leaves.
+pub fn latest_of(inv: &Inventory) -> Option<u64> {
     inv.delta_steps
         .last()
         .copied()
         .into_iter()
         .chain(inv.anchor_steps.last().copied())
         .max()
+}
+
+/// Slow-path anchor choice: the nearest anchor at or below `target`.
+/// Shared by [`Consumer::synchronize`] and the simulator's modeled
+/// catch-up, so simulated slow paths pick the same restart point the
+/// real consumer would.
+pub fn slow_path_anchor(inv: &Inventory, target: u64) -> Option<u64> {
+    inv.anchor_steps.iter().filter(|&&a| a <= target).next_back().copied()
 }
 
 impl Consumer<ObjectStoreTransport> {
@@ -790,12 +800,7 @@ impl<T: SyncTransport> Consumer<T> {
             // generation via the slow path.
         }
         // slow path: nearest anchor ≤ latest, then chain
-        let anchor = inv
-            .anchor_steps
-            .iter()
-            .filter(|&&a| a <= latest)
-            .next_back()
-            .copied()
+        let anchor = slow_path_anchor(&inv, latest)
             .ok_or_else(|| anyhow::anyhow!("no anchor available for slow path"))?;
         let (w, tree, bytes, agen) = self.download_anchor(anchor)?;
         stats.bytes_downloaded += bytes;

@@ -1,0 +1,127 @@
+//! Scripted churn for the scale simulator: timed joins, silent
+//! crashes, and slow-subscriber degradations.
+//!
+//! A [`ChurnScript`] is a fixed list of `(at, action)` pairs resolved
+//! against the *live* population when each event fires (`nth` picks
+//! the n-th live node of the role, modulo the live count, in id
+//! order) — so a script composed before the run stays valid however
+//! earlier events reshaped the cluster. [`ChurnScript::seeded`]
+//! derives a mixed workload from a seed via
+//! [`crate::util::rng::splitmix64`]; the same seed always yields the
+//! same script, which is half of the determinism contract
+//! (`crate::sim` module docs).
+
+use std::time::Duration;
+
+use crate::util::rng::splitmix64;
+
+/// One scripted perturbation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChurnAction {
+    /// A new leaf registers with the control plane.
+    JoinLeaf,
+    /// A new (spare) relay registers with the control plane.
+    JoinRelay,
+    /// The n-th live relay (id order, modulo live count) freezes
+    /// silently: it stops processing and heartbeating but its sockets
+    /// stay "open" — death is discovered by the sweep, exactly like
+    /// `ControlledNode::fail_silently` on the TCP plane.
+    CrashRelay { nth: usize },
+    /// The n-th live leaf freezes silently.
+    CrashLeaf { nth: usize },
+    /// The n-th live leaf's ingress edge drops to `1/factor` of its
+    /// bandwidth — the slow-subscriber case coalescing exists for.
+    SlowLeaf { nth: usize, factor: u32 },
+}
+
+/// One timed churn event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChurnEvent {
+    /// Virtual time the action fires.
+    pub at: Duration,
+    pub action: ChurnAction,
+}
+
+/// An ordered churn schedule (construction order; the simulator's
+/// event heap breaks same-instant ties by schedule order).
+#[derive(Debug, Clone, Default)]
+pub struct ChurnScript {
+    pub events: Vec<ChurnEvent>,
+}
+
+impl ChurnScript {
+    /// No churn.
+    pub fn none() -> ChurnScript {
+        ChurnScript::default()
+    }
+
+    /// Builder-style append.
+    pub fn then(mut self, at: Duration, action: ChurnAction) -> ChurnScript {
+        self.events.push(ChurnEvent { at, action });
+        self
+    }
+
+    /// A deterministic mixed workload: `count` events spread evenly
+    /// over `[start, start + span)` with seeded jitter, cycling
+    /// through joins, crashes, and slowdowns with seeded selectors.
+    pub fn seeded(seed: u64, count: usize, start: Duration, span: Duration) -> ChurnScript {
+        let mut s = seed.wrapping_mul(0xA076_1D64_78BD_642F) ^ 0x5851_F42D_4C95_7F2D;
+        let mut events = Vec::with_capacity(count);
+        let span_ns = span.as_nanos() as u64;
+        for i in 0..count {
+            let slot = span_ns * i as u64 / count as u64;
+            let jitter = splitmix64(&mut s) % (span_ns / count as u64).max(1);
+            let at = start + Duration::from_nanos(slot + jitter);
+            let nth = (splitmix64(&mut s) % 64) as usize;
+            let action = match splitmix64(&mut s) % 5 {
+                0 => ChurnAction::JoinLeaf,
+                1 => ChurnAction::JoinRelay,
+                2 => ChurnAction::CrashRelay { nth },
+                3 => ChurnAction::CrashLeaf { nth },
+                _ => ChurnAction::SlowLeaf { nth, factor: 4 << (splitmix64(&mut s) % 3) },
+            };
+            events.push(ChurnEvent { at, action });
+        }
+        ChurnScript { events }
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeded_scripts_are_reproducible_and_seed_sensitive() {
+        let span = Duration::from_secs(10);
+        let a = ChurnScript::seeded(9, 16, Duration::from_secs(1), span);
+        let b = ChurnScript::seeded(9, 16, Duration::from_secs(1), span);
+        let c = ChurnScript::seeded(10, 16, Duration::from_secs(1), span);
+        assert_eq!(a.events, b.events);
+        assert_ne!(a.events, c.events);
+        assert_eq!(a.len(), 16);
+        // Events are ordered and inside the window.
+        for w in a.events.windows(2) {
+            assert!(w[0].at <= w[1].at);
+        }
+        assert!(a.events.iter().all(|e| {
+            e.at >= Duration::from_secs(1) && e.at < Duration::from_secs(1) + span
+        }));
+    }
+
+    #[test]
+    fn builder_appends_in_order() {
+        let s = ChurnScript::none()
+            .then(Duration::from_secs(1), ChurnAction::CrashRelay { nth: 0 })
+            .then(Duration::from_secs(2), ChurnAction::JoinLeaf);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.events[1].action, ChurnAction::JoinLeaf);
+    }
+}

@@ -1,0 +1,105 @@
+//! The clock seam between the socket plane and the scale simulator.
+//!
+//! Production code used to call `Instant::now()` directly, which makes
+//! time untestable: a simulated 100k-leaf run would spend real seconds
+//! inside escalation backoff windows and heartbeat sweeps. A [`Clock`]
+//! is either the wall (anchored once per process, so readings are
+//! monotone Durations) or a shared virtual counter the discrete-event
+//! loop advances explicitly. State machines take `now: Duration`
+//! readings from whichever clock they were built with — the *same*
+//! comparison code runs under both, so the simulator cannot drift from
+//! the TCP plane's timing logic.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
+use std::time::{Duration, Instant};
+
+/// Process-wide wall anchor: all `Clock::Wall` readings are durations
+/// since the first reading, so they compare like `Instant`s but share a
+/// representation with virtual time.
+fn wall_anchor() -> Instant {
+    static ANCHOR: OnceLock<Instant> = OnceLock::new();
+    *ANCHOR.get_or_init(Instant::now)
+}
+
+/// A monotone time source: the process wall clock or a simulator-driven
+/// virtual counter (nanoseconds). Cloning a `Virtual` clock shares the
+/// counter, so every hop in a simulated tree reads the same instant.
+#[derive(Clone, Debug)]
+pub enum Clock {
+    /// Real time, anchored at first use.
+    Wall,
+    /// Simulated time in nanoseconds, advanced by the event loop.
+    Virtual(Arc<AtomicU64>),
+}
+
+impl Default for Clock {
+    fn default() -> Clock {
+        Clock::Wall
+    }
+}
+
+impl Clock {
+    /// The wall clock (production default).
+    pub fn wall() -> Clock {
+        Clock::Wall
+    }
+
+    /// A fresh virtual clock starting at t=0.
+    pub fn virtual_clock() -> Clock {
+        Clock::Virtual(Arc::new(AtomicU64::new(0)))
+    }
+
+    /// Current reading. Wall readings are monotone durations since the
+    /// process anchor; virtual readings are whatever the event loop
+    /// last set.
+    pub fn now(&self) -> Duration {
+        match self {
+            Clock::Wall => wall_anchor().elapsed(),
+            Clock::Virtual(t) => Duration::from_nanos(t.load(Ordering::Acquire)),
+        }
+    }
+
+    /// Advance a virtual clock to `ns` (no-op if already past — virtual
+    /// time never rewinds, mirroring wall monotonicity). Panics on a
+    /// wall clock: only the simulator owns time.
+    pub fn advance_to(&self, ns: u64) {
+        match self {
+            Clock::Wall => panic!("advance_to on the wall clock"),
+            Clock::Virtual(t) => {
+                t.fetch_max(ns, Ordering::AcqRel);
+            }
+        }
+    }
+
+    /// True for `Clock::Virtual` — used by socket-plane loops to skip
+    /// real sleeps that would stall a simulated run.
+    pub fn is_virtual(&self) -> bool {
+        matches!(self, Clock::Virtual(_))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wall_readings_are_monotone() {
+        let c = Clock::wall();
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn virtual_clock_is_shared_and_never_rewinds() {
+        let c = Clock::virtual_clock();
+        let d = c.clone();
+        assert_eq!(c.now(), Duration::ZERO);
+        c.advance_to(5_000);
+        assert_eq!(d.now(), Duration::from_nanos(5_000), "clones share the counter");
+        c.advance_to(1_000); // rewind attempt
+        assert_eq!(d.now(), Duration::from_nanos(5_000), "time never rewinds");
+        assert!(c.is_virtual() && !Clock::wall().is_virtual());
+    }
+}

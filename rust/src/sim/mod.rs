@@ -1,0 +1,1419 @@
+//! Deterministic scale-model simulation of the PULSE sync plane.
+//!
+//! A seeded discrete-event simulator that drives the **real** plane
+//! logic — no forks — over a modeled network, so 100k-leaf relay
+//! trees converge in simulated time on a laptop-class CI runner:
+//!
+//! * Membership, failure detection, and fan-out planning run through
+//!   the real [`crate::net::control::Membership`] (which itself calls
+//!   [`crate::coordinator::planner::stable_relay_order`] +
+//!   [`crate::coordinator::planner::bind`]); directives fence through
+//!   the real [`crate::net::control::EpochFence`].
+//! * Every hop stages and coalesces with the real
+//!   [`crate::net::relay::RelayStage`] and
+//!   [`crate::net::relay::coalesce_enqueue`]; NACK storms dedup
+//!   through the real [`crate::net::relay::EscalationLedger`].
+//! * Leaf NACK backoff uses the real
+//!   [`crate::util::retry::RetryAt`] schedule; slow-path head/anchor
+//!   selection is the real [`crate::pulse::sync::latest_of`] +
+//!   [`crate::pulse::sync::slow_path_anchor`] arithmetic against a
+//!   real [`crate::net::transport::SyncTransport`] (an
+//!   [`crate::net::transport::InProcTransport`] store by default; a
+//!   [`crate::net::transport::FaultInjectingTransport`] to model an
+//!   unserviceable backstop).
+//!
+//! Time is a virtual [`clock::Clock`]: the event loop pops the
+//! earliest `(t, seq)` event and advances the clock to it — a 100k
+//! leaf run covering a minute of simulated time executes in seconds
+//! of real time. Frames are real [`crate::net::tcp::Frame`] values
+//! (step/shard carried in the first payload bytes, padded to the
+//! modeled size) so the shared staging/coalescing code operates on
+//! exactly what the socket plane ships.
+//!
+//! # Determinism contract
+//!
+//! A run is a pure function of `(SimConfig, seed)`: same config →
+//! bit-identical metrics AND an identical event-trace hash (FNV-1a
+//! over every processed event); a different seed diverges. Everything
+//! random (loss rolls, churn scripts, retry jitter) derives from
+//! [`crate::util::rng::splitmix64`]; no wall-clock reading enters any
+//! decision; every cross-node collection is iterated in a
+//! deterministic order (dense id vectors, `BTreeMap`s, or sorted
+//! drains).
+//!
+//! Frame loss on a modeled edge stands in for the chaos faults the
+//! socket plane injects (torn connections, truncated writes): a hole
+//! the NACK path cannot repair falls back to the store, exactly like
+//! the `NACK_MISS` escalation contract.
+
+pub mod churn;
+pub mod clock;
+pub mod link;
+pub mod topo;
+
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::coordinator::planner::{Assignment, Upstream};
+use crate::net::control::{role, Membership};
+use crate::net::relay::{coalesce_enqueue, DEFAULT_QUEUE_DEPTH, INDEX_STEPS};
+use crate::net::tcp::{kind, Frame};
+use crate::net::transport::{
+    sharded_marker, FrameId, InProcTransport, MarkerId, StepData, SyncTransport,
+};
+use crate::pulse::sync::{latest_of, slow_path_anchor};
+use crate::util::retry::RetryPolicy;
+
+use churn::{ChurnAction, ChurnScript};
+use clock::Clock;
+use link::{frame_lost, LinkModel};
+use topo::{SimNode, TopoSpec};
+
+/// Per-frame wire framing cost (kind byte + u32 length prefix).
+pub const FRAME_WIRE_OVERHEAD: u64 = 5;
+/// Modeled size of a MARKER frame payload.
+const MARKER_BYTES: usize = 64;
+/// Modeled size of a control frame payload (NACK, NACK_MISS).
+const CTRL_BYTES: usize = 12;
+/// The 64-char content root stamped into sim markers (the marker
+/// grammar requires one; the sim never verifies it).
+const SIM_ROOT: &str = "0000000000000000000000000000000000000000000000000000000000000000";
+
+// ------------------------------------------------------- modeled frames
+
+fn patch_frame(step: u64, shard: u32, bytes: usize) -> Frame {
+    let mut payload = vec![0u8; bytes.max(CTRL_BYTES)];
+    payload[0..8].copy_from_slice(&step.to_le_bytes());
+    payload[8..12].copy_from_slice(&shard.to_le_bytes());
+    Frame { kind: kind::PATCH, payload }
+}
+
+fn anchor_frame(step: u64, bytes: usize) -> Frame {
+    let mut payload = vec![0u8; bytes.max(8)];
+    payload[0..8].copy_from_slice(&step.to_le_bytes());
+    Frame { kind: kind::ANCHOR, payload }
+}
+
+fn marker_frame(step: u64, shards: u32) -> Frame {
+    let mut payload = vec![0u8; MARKER_BYTES];
+    payload[0..8].copy_from_slice(&step.to_le_bytes());
+    payload[8..12].copy_from_slice(&shards.to_le_bytes());
+    Frame { kind: kind::MARKER, payload }
+}
+
+fn ctrl_frame(k: u8, step: u64, shard: u32) -> Frame {
+    let mut payload = vec![0u8; CTRL_BYTES];
+    payload[0..8].copy_from_slice(&step.to_le_bytes());
+    payload[8..12].copy_from_slice(&shard.to_le_bytes());
+    Frame { kind: k, payload }
+}
+
+/// Step number carried in a modeled frame (0 when too short).
+fn frame_step(f: &Frame) -> u64 {
+    f.payload
+        .get(0..8)
+        .map_or(0, |b| u64::from_le_bytes(b.try_into().unwrap()))
+}
+
+/// Shard index / shard count carried in a modeled frame.
+fn frame_shard(f: &Frame) -> u32 {
+    f.payload
+        .get(8..12)
+        .map_or(0, |b| u32::from_le_bytes(b.try_into().unwrap()))
+}
+
+// ------------------------------------------------------------ the events
+
+enum Ev {
+    /// The publisher emits step `step` (0 = the initial anchor).
+    Publish { step: u64 },
+    /// A frame finishes arriving at `to`.
+    Deliver { from: u64, to: u64, frame: Arc<Frame> },
+    /// `from → to` finishes serializing its current frame.
+    EdgeFree { from: u64, to: u64 },
+    /// One batched heartbeat wave lands at the control plane.
+    Heartbeats,
+    /// The failure detector sweeps the registry.
+    Sweep,
+    /// Scripted churn event `idx` fires.
+    Churn { idx: usize },
+    /// A leaf's NACK backoff timer for `(step, shard)` expires.
+    LeafRetry { leaf: u64, step: u64, shard: u32 },
+    /// A leaf's slow-path (store fallback) fetch completes.
+    SlowDone { leaf: u64, target: u64, bytes: u64 },
+    /// Post-publish stall probe: a leaf still short of the final head
+    /// with no repair in flight falls back to the store (the consumer
+    /// poll — with lossy links a tail-end marker can vanish with no
+    /// later traffic to expose the hole).
+    StallCheck { leaf: u64 },
+}
+
+struct Pending {
+    t: u64,
+    seq: u64,
+    ev: Ev,
+}
+
+impl Ord for Pending {
+    // BinaryHeap is a max-heap: invert so the earliest (t, seq) pops
+    // first. seq breaks same-instant ties in schedule order — the
+    // other half of the determinism contract.
+    fn cmp(&self, other: &Pending) -> Ordering {
+        other.t.cmp(&self.t).then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+impl PartialOrd for Pending {
+    fn partial_cmp(&self, other: &Pending) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl PartialEq for Pending {
+    fn eq(&self, other: &Pending) -> bool {
+        self.t == other.t && self.seq == other.seq
+    }
+}
+impl Eq for Pending {}
+
+// ------------------------------------------------------------ the config
+
+/// One simulation run's full parameterization. A run is a pure
+/// function of this value (see module docs).
+#[derive(Clone)]
+pub struct SimConfig {
+    pub topo: TopoSpec,
+    /// Default tree-edge link model.
+    pub link: LinkModel,
+    /// Link model for slow-path store fetches.
+    pub store_link: LinkModel,
+    /// Seeds loss rolls; combine with churn scripts seeded likewise.
+    pub seed: u64,
+    /// Patch steps to publish (step numbers 1..=steps).
+    pub steps: u64,
+    pub step_interval: Duration,
+    /// Shards per step (clamped ≥ 2 — the sharded marker grammar's
+    /// floor).
+    pub shards_per_step: u32,
+    pub bytes_per_shard: usize,
+    pub anchor_bytes: usize,
+    /// Publish a fresh anchor every N steps (0 = only the initial
+    /// anchor at t=0).
+    pub anchor_every: u64,
+    /// Per-subscriber queue bound (the coalescing trigger).
+    pub queue_depth: usize,
+    /// Per-hop NACK index bound, in distinct steps.
+    pub index_steps: usize,
+    pub heartbeat_interval: Duration,
+    /// Sweep timeout = `heartbeat_interval * missed_heartbeats`.
+    pub missed_heartbeats: u32,
+    /// Leaf NACK retry schedule.
+    pub nack_policy: RetryPolicy,
+    /// Relay escalation backoff (storm suppression window).
+    pub escalate_policy: RetryPolicy,
+    pub churn: ChurnScript,
+    /// How long a leaf may sit short of the final head with no repair
+    /// in flight before the stall probe sends it to the store.
+    pub stall_grace: Duration,
+    /// Virtual-time cap: a run that hasn't converged by here reports
+    /// `converged: false`.
+    pub horizon: Duration,
+    /// Event cap backstop against runaway configurations.
+    pub max_events: u64,
+}
+
+impl SimConfig {
+    pub fn new(topo: TopoSpec, seed: u64) -> SimConfig {
+        SimConfig {
+            topo,
+            link: LinkModel::lan(),
+            store_link: LinkModel::lan(),
+            seed,
+            steps: 5,
+            step_interval: Duration::from_millis(100),
+            shards_per_step: 4,
+            bytes_per_shard: 4096,
+            anchor_bytes: 65536,
+            anchor_every: 0,
+            queue_depth: DEFAULT_QUEUE_DEPTH,
+            index_steps: INDEX_STEPS,
+            heartbeat_interval: Duration::from_millis(500),
+            missed_heartbeats: 3,
+            nack_policy: RetryPolicy::nack_default(),
+            escalate_policy: RetryPolicy::escalate_default(),
+            churn: ChurnScript::none(),
+            stall_grace: Duration::from_secs(1),
+            horizon: Duration::from_secs(120),
+            max_events: 100_000_000,
+        }
+    }
+}
+
+// ------------------------------------------------------------ the report
+
+/// Everything one run measured. All byte counts include
+/// [`FRAME_WIRE_OVERHEAD`] per frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimReport {
+    pub seed: u64,
+    /// Live population at the end of the run.
+    pub leaves_live: usize,
+    pub relays_live: usize,
+    /// Tree depth (hops root→leaf) under the final plan.
+    pub depth: usize,
+    /// Every live leaf reached the final published head in time.
+    pub converged: bool,
+    pub converged_at: Duration,
+    /// When the publisher finished its last step.
+    pub publish_done_at: Duration,
+    /// Convergence lag past the last publish.
+    pub settle: Duration,
+    pub head_step: u64,
+    /// Total bytes that arrived at leaves (stream + repairs + slow
+    /// paths).
+    pub leaf_bytes: u64,
+    pub bytes_per_leaf: u64,
+    /// One clean copy of everything published, per leaf.
+    pub ideal_bytes_per_leaf: u64,
+    /// `bytes_per_leaf` over the ideal, as a percentage above 100.
+    pub overhead_pct: f64,
+    /// Bytes serialized across every tree edge.
+    pub link_bytes: u64,
+    pub frames_lost: u64,
+    pub leaf_nacks: u64,
+    pub leaf_nack_retries: u64,
+    pub nacks_serviced: u64,
+    pub nacks_escalated: u64,
+    pub nacks_suppressed: u64,
+    pub nacks_unserviceable: u64,
+    pub nack_misses: u64,
+    /// Retransmits relayed to riders at interior hops.
+    pub retransmits: u64,
+    /// NACKs the root answered out of the store rather than its index.
+    pub store_repairs: u64,
+    /// NACKed shards that a retransmit actually filled at a leaf.
+    pub leaf_repairs: u64,
+    /// Frames a leaf ignored as already-applied duplicates.
+    pub dup_frames: u64,
+    /// Frames that arrived at a crashed peer.
+    pub delivered_to_dead: u64,
+    pub slow_paths: u64,
+    pub nack_budget_exhausted: u64,
+    pub coalesced: u64,
+    pub frames_superseded: u64,
+    pub epochs: u64,
+    pub replans: u64,
+    pub deaths: u64,
+    pub reparents: u64,
+    pub fenced: u64,
+    pub joins: u64,
+    pub crashes: u64,
+    pub slowdowns: u64,
+    /// Deepest any subscriber queue got, in frames.
+    pub max_queue_depth: usize,
+    pub events: u64,
+    /// FNV-1a over every processed event, in processing order.
+    pub trace_hash: u64,
+}
+
+impl SimReport {
+    /// Header for the `results/sim_scale.csv` paper table.
+    pub fn csv_header() -> &'static str {
+        "leaves,relays,depth,seed,converged,settle_ms,bytes_per_leaf,\
+         ideal_bytes_per_leaf,overhead_pct,nacks,slow_paths,coalesced,\
+         replans,deaths,max_queue,events,trace_hash"
+    }
+
+    /// One CSV row matching [`SimReport::csv_header`].
+    pub fn csv_row(&self) -> String {
+        format!(
+            "{},{},{},{},{},{:.1},{},{},{:.2},{},{},{},{},{},{},{},{:016x}",
+            self.leaves_live,
+            self.relays_live,
+            self.depth,
+            self.seed,
+            self.converged,
+            self.settle.as_secs_f64() * 1e3,
+            self.bytes_per_leaf,
+            self.ideal_bytes_per_leaf,
+            self.overhead_pct,
+            self.leaf_nacks,
+            self.slow_paths,
+            self.coalesced,
+            self.replans,
+            self.deaths,
+            self.max_queue_depth,
+            self.events,
+            self.trace_hash,
+        )
+    }
+}
+
+// ------------------------------------------------------------- the edges
+
+struct Edge {
+    q: VecDeque<Arc<Frame>>,
+    busy: bool,
+    link: LinkModel,
+}
+
+#[derive(Default)]
+struct Counters {
+    leaf_bytes: u64,
+    link_bytes: u64,
+    frames_lost: u64,
+    dup_frames: u64,
+    to_dead: u64,
+    leaf_nacks: u64,
+    leaf_nack_retries: u64,
+    leaf_repairs: u64,
+    nacks_serviced: u64,
+    nacks_escalated: u64,
+    nacks_suppressed: u64,
+    nacks_unserviceable: u64,
+    nack_misses: u64,
+    retransmits: u64,
+    store_repairs: u64,
+    slow_paths: u64,
+    nack_budget_exhausted: u64,
+    coalesced: u64,
+    frames_superseded: u64,
+    reparents: u64,
+    fenced: u64,
+    joins: u64,
+    crashes: u64,
+    slowdowns: u64,
+    max_queue: usize,
+}
+
+// ------------------------------------------------------------ the engine
+
+struct Sim {
+    cfg: SimConfig,
+    clock: Clock,
+    members: Membership,
+    store: Box<dyn SyncTransport>,
+    nodes: Vec<SimNode>,
+    edges: HashMap<(u64, u64), Edge>,
+    heap: BinaryHeap<Pending>,
+    seq: u64,
+    tx_seq: u64,
+    horizon_ns: u64,
+    depth: usize,
+    final_head: u64,
+    publish_done: bool,
+    publish_done_at: u64,
+    live_leaves: usize,
+    at_head_leaves: usize,
+    converged_at: Option<u64>,
+    done: bool,
+    events: u64,
+    hash: u64,
+    m: Counters,
+}
+
+/// Run one simulation over the default in-process store.
+pub fn run(cfg: SimConfig) -> SimReport {
+    let window = (cfg.steps as usize).saturating_add(8).max(16);
+    run_with_store(cfg, Box::new(InProcTransport::with_window(window, 16)))
+}
+
+/// Run one simulation over an explicit store backend (e.g. a
+/// [`crate::net::transport::FaultInjectingTransport`] to model an
+/// unserviceable backstop slot).
+pub fn run_with_store(cfg: SimConfig, store: Box<dyn SyncTransport>) -> SimReport {
+    let mut sim = Sim {
+        horizon_ns: cfg.horizon.as_nanos() as u64,
+        cfg,
+        clock: Clock::virtual_clock(),
+        members: Membership::new(),
+        store,
+        nodes: Vec::new(),
+        edges: HashMap::new(),
+        heap: BinaryHeap::new(),
+        seq: 0,
+        tx_seq: 0,
+        depth: 0,
+        final_head: 0,
+        publish_done: false,
+        publish_done_at: 0,
+        live_leaves: 0,
+        at_head_leaves: 0,
+        converged_at: None,
+        done: false,
+        events: 0,
+        hash: 0xcbf2_9ce4_8422_2325,
+        m: Counters::default(),
+    };
+    sim.bootstrap();
+    while let Some(p) = sim.heap.pop() {
+        if p.t > sim.horizon_ns || sim.events >= sim.cfg.max_events {
+            break;
+        }
+        sim.clock.advance_to(p.t);
+        sim.events += 1;
+        sim.hash_event(&p);
+        sim.dispatch(p.t, p.ev);
+        if sim.done {
+            break;
+        }
+    }
+    sim.report()
+}
+
+impl Sim {
+    fn schedule(&mut self, t: u64, ev: Ev) {
+        self.seq += 1;
+        self.heap.push(Pending { t, seq: self.seq, ev });
+    }
+
+    fn bootstrap(&mut self) {
+        self.nodes.push(SimNode::root(self.cfg.index_steps));
+        for _ in 0..self.cfg.topo.relays {
+            let id = self.members.join(role::RELAY, 0, Duration::ZERO);
+            self.nodes.push(SimNode::relay(
+                id,
+                self.cfg.index_steps,
+                self.cfg.escalate_policy.clone(),
+            ));
+        }
+        for _ in 0..self.cfg.topo.leaves {
+            let id = self.members.join(role::LEAF, 0, Duration::ZERO);
+            self.nodes.push(SimNode::leaf(id));
+            self.live_leaves += 1;
+        }
+        // One batched replan for the bootstrap wave (the TCP plane
+        // replans per JOIN; a simulated 100k-join wave batches).
+        self.replan_apply(0);
+        self.schedule(0, Ev::Publish { step: 0 });
+        let hb = self.cfg.heartbeat_interval.as_nanos() as u64;
+        self.schedule(hb, Ev::Heartbeats);
+        self.schedule((hb / 2).max(1), Ev::Sweep);
+        let churn: Vec<(u64, usize)> = self
+            .cfg
+            .churn
+            .events
+            .iter()
+            .enumerate()
+            .map(|(i, e)| (e.at.as_nanos() as u64, i))
+            .collect();
+        for (at, i) in churn {
+            self.schedule(at, Ev::Churn { idx: i });
+        }
+    }
+
+    // FNV-1a over the processed event stream: the trace hash two runs
+    // of one config must agree on bit-for-bit.
+    fn hash_event(&mut self, p: &Pending) {
+        let (tag, a, b, c): (u64, u64, u64, u64) = match &p.ev {
+            Ev::Publish { step } => (1, *step, 0, 0),
+            Ev::Deliver { from, to, frame } => (
+                2,
+                *from,
+                *to,
+                ((frame.kind as u64) << 48) ^ (frame_step(frame) << 8) ^ frame_shard(frame) as u64,
+            ),
+            Ev::EdgeFree { from, to } => (3, *from, *to, 0),
+            Ev::Heartbeats => (4, 0, 0, 0),
+            Ev::Sweep => (5, 0, 0, 0),
+            Ev::Churn { idx } => (6, *idx as u64, 0, 0),
+            Ev::LeafRetry { leaf, step, shard } => (7, *leaf, *step, *shard as u64),
+            Ev::SlowDone { leaf, target, bytes } => (8, *leaf, *target, *bytes),
+            Ev::StallCheck { leaf } => (9, *leaf, 0, 0),
+        };
+        for word in [p.t, p.seq, tag, a, b, c] {
+            for byte in word.to_le_bytes() {
+                self.hash = (self.hash ^ byte as u64).wrapping_mul(0x100_0000_01b3);
+            }
+        }
+    }
+
+    fn dispatch(&mut self, t: u64, ev: Ev) {
+        match ev {
+            Ev::Publish { step } => self.publish_step(t, step),
+            Ev::Deliver { from, to, frame } => self.deliver(t, from, to, frame),
+            Ev::EdgeFree { from, to } => {
+                if let Some(e) = self.edges.get_mut(&(from, to)) {
+                    e.busy = false;
+                }
+                self.kick_edge(t, from, to);
+            }
+            Ev::Heartbeats => {
+                let now = self.clock.now();
+                let resurrected = {
+                    let nodes = &self.nodes;
+                    self.members.heartbeat_all(now, |id| {
+                        nodes.get(id as usize).is_some_and(|n| n.up)
+                    })
+                };
+                if resurrected > 0 {
+                    self.replan_apply(t);
+                }
+                let next = t + self.cfg.heartbeat_interval.as_nanos() as u64;
+                if next <= self.horizon_ns {
+                    self.schedule(next, Ev::Heartbeats);
+                }
+            }
+            Ev::Sweep => {
+                let now = self.clock.now();
+                let timeout = self.cfg.heartbeat_interval * self.cfg.missed_heartbeats;
+                if self.members.sweep(now, timeout) > 0 {
+                    self.replan_apply(t);
+                }
+                let next = t + (self.cfg.heartbeat_interval.as_nanos() as u64 / 2).max(1);
+                if next <= self.horizon_ns {
+                    self.schedule(next, Ev::Sweep);
+                }
+            }
+            Ev::Churn { idx } => self.churn_apply(t, idx),
+            Ev::LeafRetry { leaf, step, shard } => self.leaf_retry(t, leaf, step, shard),
+            Ev::SlowDone { leaf, target, bytes } => {
+                let idx = leaf as usize;
+                if !self.nodes[idx].up {
+                    return;
+                }
+                self.nodes[idx].in_slow = false;
+                self.m.leaf_bytes += bytes;
+                if target > self.nodes[idx].applied {
+                    self.set_applied(t, leaf, target);
+                }
+                self.leaf_try_advance(t, leaf);
+            }
+            Ev::StallCheck { leaf } => self.stall_check(t, leaf),
+        }
+    }
+
+    /// Post-publish consumer poll: a live leaf short of the final head
+    /// with no NACK or slow path in flight has nothing left that could
+    /// repair it — send it to the store, and keep probing until it
+    /// arrives.
+    fn stall_check(&mut self, t: u64, leaf: u64) {
+        let idx = leaf as usize;
+        let node = &self.nodes[idx];
+        if !node.up || node.at_head || node.applied >= self.final_head {
+            return;
+        }
+        if !node.in_slow && node.nacks.is_empty() {
+            self.enter_slow(t, leaf);
+        }
+        let next = t + self.cfg.stall_grace.as_nanos() as u64;
+        if next <= self.horizon_ns {
+            self.schedule(next, Ev::StallCheck { leaf });
+        }
+    }
+
+    // ------------------------------------------------------ publishing
+
+    fn publish_step(&mut self, t: u64, step: u64) {
+        if step == 0 {
+            let f = Arc::new(anchor_frame(0, self.cfg.anchor_bytes));
+            let _ = self.store.publish_frame(FrameId::Anchor { step: 0 }, &f.payload);
+            let _ = self.store.publish_marker(MarkerId::Anchor(0), "ready");
+            self.hop_stream(t, 0, f);
+        } else {
+            let shards = self.cfg.shards_per_step.max(2);
+            for k in 0..shards {
+                let f = Arc::new(patch_frame(step, k, self.cfg.bytes_per_shard));
+                let _ = self
+                    .store
+                    .publish_frame(FrameId::Shard { step, shard: k }, &f.payload);
+                self.hop_stream(t, 0, f);
+            }
+            let _ = self
+                .store
+                .publish_marker(MarkerId::Delta(step), &sharded_marker(shards, SIM_ROOT));
+            self.hop_stream(t, 0, Arc::new(marker_frame(step, shards)));
+            if self.cfg.anchor_every > 0 && step % self.cfg.anchor_every == 0 {
+                let f = Arc::new(anchor_frame(step, self.cfg.anchor_bytes));
+                let _ = self.store.publish_frame(FrameId::Anchor { step }, &f.payload);
+                let _ = self.store.publish_marker(MarkerId::Anchor(step), "ready");
+                self.hop_stream(t, 0, f);
+            }
+        }
+        if step < self.cfg.steps {
+            self.schedule(
+                t + self.cfg.step_interval.as_nanos() as u64,
+                Ev::Publish { step: step + 1 },
+            );
+        } else {
+            self.publish_done_at = t;
+            self.note_publish_done(t);
+        }
+    }
+
+    /// Stage a stream frame at hop `id` and fan it out through the
+    /// real coalescing enqueue — the publish path and the relay
+    /// forward path are the same code, as on the socket plane.
+    fn hop_stream(&mut self, t: u64, id: u64, frame: Arc<Frame>) {
+        let idx = id as usize;
+        let meta = (frame.kind == kind::PATCH)
+            .then(|| (frame_step(&frame), frame_shard(&frame)));
+        self.nodes[idx].stage.as_mut().expect("hop has stage").stage(&frame, meta);
+        let children = self.nodes[idx].children.clone();
+        for c in children {
+            self.enqueue_stream(t, id, c, &frame);
+        }
+    }
+
+    // ------------------------------------------------------ edge motion
+
+    fn enqueue_stream(&mut self, t: u64, parent: u64, child: u64, frame: &Arc<Frame>) {
+        let depth = self.cfg.queue_depth;
+        {
+            let stage = self.nodes[parent as usize].stage.as_ref().expect("hop has stage");
+            let Some(edge) = self.edges.get_mut(&(parent, child)) else { return };
+            let (coalesced, dropped) = coalesce_enqueue(&mut edge.q, frame, stage, depth);
+            if coalesced {
+                self.m.coalesced += 1;
+            }
+            self.m.frames_superseded += dropped;
+            self.m.max_queue = self.m.max_queue.max(edge.q.len());
+        }
+        self.kick_edge(t, parent, child);
+    }
+
+    /// Queue-order push that bypasses coalescing: NACK retransmits,
+    /// NACK_MISS replies, and catch-up preloads (the socket plane's
+    /// direct pushes).
+    fn push_direct(&mut self, t: u64, from: u64, to: u64, frame: Arc<Frame>) {
+        {
+            let Some(edge) = self.edges.get_mut(&(from, to)) else { return };
+            edge.q.push_back(frame);
+            self.m.max_queue = self.m.max_queue.max(edge.q.len());
+        }
+        self.kick_edge(t, from, to);
+    }
+
+    fn kick_edge(&mut self, t: u64, from: u64, to: u64) {
+        let frame;
+        let ser_ns;
+        let arrive_ns;
+        let lost;
+        {
+            let Some(edge) = self.edges.get_mut(&(from, to)) else { return };
+            if edge.busy || edge.q.is_empty() {
+                return;
+            }
+            let f = edge.q.pop_front().unwrap();
+            edge.busy = true;
+            let bytes = f.payload.len() as u64 + FRAME_WIRE_OVERHEAD;
+            ser_ns = edge.link.serialize_ns(bytes).max(1);
+            arrive_ns = ser_ns + edge.link.latency.as_nanos() as u64;
+            self.tx_seq += 1;
+            lost = frame_lost(self.cfg.seed, from, to, self.tx_seq, edge.link.loss_ppm);
+            self.m.link_bytes += bytes;
+            frame = f;
+        }
+        self.schedule(t + ser_ns, Ev::EdgeFree { from, to });
+        if lost {
+            self.m.frames_lost += 1;
+        } else {
+            self.schedule(t + arrive_ns, Ev::Deliver { from, to, frame });
+        }
+    }
+
+    /// Control frames ride the reverse (upstream) path outside the
+    /// data queues — the subscriber socket's back-channel.
+    fn send_ctrl(&mut self, t: u64, from: u64, to: u64, k: u8, step: u64, shard: u32) {
+        let f = Arc::new(ctrl_frame(k, step, shard));
+        let delay = self
+            .cfg
+            .link
+            .tx_ns(f.payload.len() as u64 + FRAME_WIRE_OVERHEAD)
+            .max(1);
+        self.schedule(t + delay, Ev::Deliver { from, to, frame: f });
+    }
+
+    // -------------------------------------------------------- delivery
+
+    fn deliver(&mut self, t: u64, from: u64, to: u64, frame: Arc<Frame>) {
+        let idx = to as usize;
+        if idx >= self.nodes.len() || !self.nodes[idx].up {
+            self.m.to_dead += 1;
+            return;
+        }
+        match frame.kind {
+            kind::NACK => {
+                let (s, k) = (frame_step(&frame), frame_shard(&frame));
+                self.handle_nack(t, to, from, s, k);
+            }
+            kind::NACK_MISS => {
+                let (s, k) = (frame_step(&frame), frame_shard(&frame));
+                if self.nodes[idx].is_hop() {
+                    // fan the miss out to every rider, as the socket
+                    // relay's miss_waiters path does
+                    let riders = self.nodes[idx]
+                        .ledger
+                        .as_mut()
+                        .and_then(|l| l.resolve(s, k))
+                        .unwrap_or_default();
+                    for r in riders {
+                        self.push_direct(t, to, r, Arc::new(ctrl_frame(kind::NACK_MISS, s, k)));
+                    }
+                } else {
+                    self.m.nack_misses += 1;
+                    self.nodes[idx].nacks.remove(&(s, k));
+                    self.enter_slow(t, to);
+                }
+            }
+            _ => {
+                if self.nodes[idx].is_hop() {
+                    self.hop_deliver(t, to, frame);
+                } else {
+                    self.leaf_deliver(t, to, frame);
+                }
+            }
+        }
+    }
+
+    fn hop_deliver(&mut self, t: u64, id: u64, frame: Arc<Frame>) {
+        let idx = id as usize;
+        if frame.kind == kind::PATCH {
+            // A PATCH answering an escalated slot is a retransmit:
+            // index it and hand it only to the riders (the socket
+            // plane's deliver_retransmit contract).
+            let (s, k) = (frame_step(&frame), frame_shard(&frame));
+            let riders = self.nodes[idx].ledger.as_mut().and_then(|l| l.resolve(s, k));
+            if let Some(riders) = riders {
+                self.nodes[idx]
+                    .stage
+                    .as_mut()
+                    .expect("hop has stage")
+                    .index_frame(s, k, frame.clone());
+                self.m.retransmits += riders.len() as u64;
+                for r in riders {
+                    self.push_direct(t, id, r, frame.clone());
+                }
+                return;
+            }
+        }
+        self.hop_stream(t, id, frame);
+    }
+
+    fn handle_nack(&mut self, t: u64, id: u64, from: u64, step: u64, shard: u32) {
+        let idx = id as usize;
+        // Serve from this hop's frame index when it still has the slot.
+        let hit = self.nodes[idx].stage.as_ref().and_then(|st| st.lookup(step, shard));
+        if let Some(f) = hit {
+            self.m.nacks_serviced += 1;
+            self.push_direct(t, id, from, f);
+            return;
+        }
+        if id == 0 {
+            // The root's backstop is the store — the same role the
+            // object store plays behind NACK_MISS on the socket plane.
+            match self.store.fetch_shard(step, shard) {
+                Ok(bytes) => {
+                    let f = Arc::new(Frame { kind: kind::PATCH, payload: bytes });
+                    self.nodes[0]
+                        .stage
+                        .as_mut()
+                        .expect("root has stage")
+                        .index_frame(step, shard, f.clone());
+                    self.m.nacks_serviced += 1;
+                    self.m.store_repairs += 1;
+                    self.push_direct(t, 0, from, f);
+                }
+                Err(_) => {
+                    self.m.nacks_unserviceable += 1;
+                    self.push_direct(
+                        t,
+                        0,
+                        from,
+                        Arc::new(ctrl_frame(kind::NACK_MISS, step, shard)),
+                    );
+                }
+            }
+            return;
+        }
+        // Interior relay: escalate upstream through the real
+        // storm-suppression ledger (rider = downstream peer id).
+        let now = self.clock.now();
+        let escalate = self.nodes[idx]
+            .ledger
+            .as_mut()
+            .expect("relay has ledger")
+            .on_nack(step, shard, from, |a, b| a == b, now);
+        if !escalate {
+            self.m.nacks_suppressed += 1;
+            return;
+        }
+        self.m.nacks_escalated += 1;
+        match self.nodes[idx].parent {
+            Some(p) => self.send_ctrl(t, id, p, kind::NACK, step, shard),
+            None => {
+                // Orphaned hop: nothing upstream to ask — fail the
+                // slot so riders fall back to the store (the
+                // fail_escalated contract).
+                let riders = self.nodes[idx]
+                    .ledger
+                    .as_mut()
+                    .expect("relay has ledger")
+                    .resolve(step, shard)
+                    .unwrap_or_default();
+                self.m.nacks_unserviceable += 1;
+                for r in riders {
+                    self.push_direct(t, id, r, Arc::new(ctrl_frame(kind::NACK_MISS, step, shard)));
+                }
+            }
+        }
+    }
+
+    // ---------------------------------------------------- leaf assembly
+
+    fn leaf_deliver(&mut self, t: u64, id: u64, frame: Arc<Frame>) {
+        let idx = id as usize;
+        self.m.leaf_bytes += frame.payload.len() as u64 + FRAME_WIRE_OVERHEAD;
+        match frame.kind {
+            kind::ANCHOR => {
+                let s = frame_step(&frame);
+                if s > self.nodes[idx].applied {
+                    self.set_applied(t, id, s);
+                    self.leaf_try_advance(t, id);
+                }
+            }
+            kind::PATCH => {
+                let (s, k) = (frame_step(&frame), frame_shard(&frame));
+                if s <= self.nodes[idx].applied {
+                    self.m.dup_frames += 1;
+                    return;
+                }
+                self.nodes[idx].pending.entry(s).or_default().seen.insert(k);
+                if self.nodes[idx].nacks.remove(&(s, k)).is_some() {
+                    self.m.leaf_repairs += 1;
+                }
+                self.leaf_try_advance(t, id);
+            }
+            kind::MARKER => {
+                let s = frame_step(&frame);
+                let n = frame_shard(&frame);
+                if s <= self.nodes[idx].applied {
+                    self.m.dup_frames += 1;
+                    return;
+                }
+                self.nodes[idx].pending.entry(s).or_default().total = Some(n);
+                let applied = self.nodes[idx].applied;
+                if s == applied + 1 {
+                    let missing: Vec<u32> = {
+                        let asm = self.nodes[idx].pending.get(&s).unwrap();
+                        (0..n).filter(|k| !asm.seen.contains(k)).collect()
+                    };
+                    if missing.is_empty() {
+                        self.leaf_try_advance(t, id);
+                    } else if !self.nodes[idx].in_slow {
+                        for k in missing {
+                            self.leaf_start_nack(t, id, s, k);
+                        }
+                    }
+                } else {
+                    // A commit point beyond applied+1: the stream has
+                    // a hole no NACK can name (a lost marker or a
+                    // coalesced-away step) — store fallback.
+                    self.enter_slow(t, id);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    fn leaf_try_advance(&mut self, t: u64, id: u64) {
+        let idx = id as usize;
+        let mut new_applied = self.nodes[idx].applied;
+        loop {
+            let next = new_applied + 1;
+            let complete = match self.nodes[idx].pending.get(&next) {
+                Some(asm) => match asm.total {
+                    Some(n) => (0..n).all(|k| asm.seen.contains(&k)),
+                    None => false,
+                },
+                None => false,
+            };
+            if !complete {
+                break;
+            }
+            new_applied = next;
+        }
+        if new_applied > self.nodes[idx].applied {
+            self.set_applied(t, id, new_applied);
+        }
+    }
+
+    fn set_applied(&mut self, t: u64, id: u64, new: u64) {
+        let idx = id as usize;
+        let reached = {
+            let node = &mut self.nodes[idx];
+            node.applied = new;
+            node.pending = node.pending.split_off(&(new + 1));
+            node.nacks.retain(|&(s, _), _| s > new);
+            if self.publish_done && !node.at_head && new >= self.final_head {
+                node.at_head = true;
+                true
+            } else {
+                false
+            }
+        };
+        if reached {
+            self.at_head_leaves += 1;
+            self.check_converged(t);
+        }
+    }
+
+    fn leaf_start_nack(&mut self, t: u64, id: u64, step: u64, shard: u32) {
+        let idx = id as usize;
+        if self.nodes[idx].nacks.contains_key(&(step, shard)) {
+            return;
+        }
+        let Some(parent) = self.nodes[idx].parent else {
+            self.enter_slow(t, id);
+            return;
+        };
+        let now = self.clock.now();
+        let mut rt = self.cfg.nack_policy.start_at(now);
+        self.m.leaf_nacks += 1;
+        self.send_ctrl(t, id, parent, kind::NACK, step, shard);
+        match rt.next_delay_at(now) {
+            Some(d) => {
+                self.nodes[idx].nacks.insert((step, shard), rt);
+                self.schedule(
+                    t + d.as_nanos() as u64,
+                    Ev::LeafRetry { leaf: id, step, shard },
+                );
+            }
+            None => {
+                self.m.nack_budget_exhausted += 1;
+                self.enter_slow(t, id);
+            }
+        }
+    }
+
+    fn leaf_retry(&mut self, t: u64, leaf: u64, step: u64, shard: u32) {
+        let idx = leaf as usize;
+        if !self.nodes[idx].up || self.nodes[idx].in_slow {
+            return;
+        }
+        if self.nodes[idx].applied >= step
+            || !self.nodes[idx].nacks.contains_key(&(step, shard))
+        {
+            return;
+        }
+        let now = self.clock.now();
+        let next = self.nodes[idx]
+            .nacks
+            .get_mut(&(step, shard))
+            .unwrap()
+            .next_delay_at(now);
+        match next {
+            Some(d) => {
+                self.m.leaf_nack_retries += 1;
+                if let Some(p) = self.nodes[idx].parent {
+                    self.send_ctrl(t, leaf, p, kind::NACK, step, shard);
+                }
+                self.schedule(
+                    t + d.as_nanos() as u64,
+                    Ev::LeafRetry { leaf, step, shard },
+                );
+            }
+            None => {
+                self.nodes[idx].nacks.remove(&(step, shard));
+                self.m.nack_budget_exhausted += 1;
+                self.enter_slow(t, leaf);
+            }
+        }
+    }
+
+    /// Store fallback: the real consumer slow-path arithmetic
+    /// ([`latest_of`] + [`slow_path_anchor`]) against the real
+    /// transport, with the fetch modeled as one bulk transfer over the
+    /// store link.
+    fn enter_slow(&mut self, t: u64, id: u64) {
+        let idx = id as usize;
+        if self.nodes[idx].in_slow || !self.nodes[idx].up {
+            return;
+        }
+        let inv = match self.store.latest_ready() {
+            Ok(i) => i,
+            Err(_) => return,
+        };
+        let Some(target) = latest_of(&inv) else { return };
+        let Some(anchor) = slow_path_anchor(&inv, target) else { return };
+        self.nodes[idx].in_slow = true;
+        self.nodes[idx].nacks.clear();
+        self.m.slow_paths += 1;
+        let mut bytes = self
+            .store
+            .fetch_anchor(anchor)
+            .map(|(b, _)| b.len() as u64)
+            .unwrap_or(0);
+        for s in anchor + 1..=target {
+            match self.store.fetch_step(s) {
+                Ok(Some(StepData::Sharded { shard_count, .. })) => {
+                    for k in 0..shard_count {
+                        bytes += self
+                            .store
+                            .fetch_shard(s, k)
+                            .map(|b| b.len() as u64)
+                            .unwrap_or(0);
+                    }
+                }
+                Ok(Some(StepData::Whole(b))) => bytes += b.len() as u64,
+                _ => {}
+            }
+        }
+        let link = self.cfg.store_link.slowed(self.nodes[idx].slow_factor);
+        let delay = link.tx_ns(bytes.max(1)).max(1);
+        self.schedule(t + delay, Ev::SlowDone { leaf: id, target, bytes });
+    }
+
+    // ----------------------------------------------------- control plane
+
+    fn replan_apply(&mut self, t: u64) {
+        let plan = self
+            .members
+            .plan_next(self.cfg.topo.fanout_cap, self.cfg.topo.min_relay_levels)
+            .clone();
+        self.depth = plan.depth();
+        let epoch = plan.epoch;
+        for a in plan.relays.iter().chain(plan.leaves.iter()) {
+            self.apply_assign(t, a, epoch);
+        }
+        // Anyone the plan no longer names (swept-dead peers) gets
+        // detached: the plane stops streaming at a peer the instant it
+        // leaves the membership — otherwise a frozen subtree keeps
+        // soaking up transmissions until the horizon.
+        let planned: std::collections::HashSet<u64> = plan
+            .relays
+            .iter()
+            .chain(plan.leaves.iter())
+            .map(|a| a.peer)
+            .collect();
+        let unplanned: Vec<u64> = self.nodes[1..]
+            .iter()
+            .filter(|n| n.parent.is_some() && !planned.contains(&n.id))
+            .map(|n| n.id)
+            .collect();
+        for id in unplanned {
+            self.detach(id);
+        }
+    }
+
+    /// Remove `id` from its parent's fan-out and drop the edge (and
+    /// whatever was queued on it).
+    fn detach(&mut self, id: u64) {
+        let idx = id as usize;
+        if let Some(op) = self.nodes[idx].parent.take() {
+            self.nodes[op as usize].children.retain(|&c| c != id);
+            if let Some(e) = self.edges.remove(&(op, id)) {
+                self.m.frames_superseded += e.q.len() as u64;
+            }
+        }
+    }
+
+    fn apply_assign(&mut self, t: u64, a: &Assignment, epoch: u64) {
+        let idx = a.peer as usize;
+        // A frozen peer's directive lands nowhere (silent crash: the
+        // plane doesn't know yet).
+        if idx >= self.nodes.len() || !self.nodes[idx].up {
+            return;
+        }
+        self.nodes[idx].fence.observe(epoch);
+        if !self.nodes[idx].fence.admit(epoch) {
+            self.m.fenced += 1;
+            return;
+        }
+        self.nodes[idx].hop = a.hop;
+        let new_parent = match a.upstream {
+            Upstream::Root => Some(0),
+            Upstream::Peer(p) => Some(p),
+            Upstream::Standby => None,
+        };
+        let old = self.nodes[idx].parent;
+        if old == new_parent {
+            return;
+        }
+        if old.is_some() {
+            self.detach(a.peer);
+            self.m.reparents += 1;
+            // Escalations pending against the torn-down upstream fail
+            // over to the store (sorted drain keeps the trace
+            // deterministic) — the fail_all_escalated contract.
+            let mut failed = self.nodes[idx]
+                .ledger
+                .as_mut()
+                .map(|l| l.resolve_all())
+                .unwrap_or_default();
+            failed.sort_by_key(|(slot, _)| *slot);
+            for ((s, k), riders) in failed {
+                self.m.nacks_unserviceable += 1;
+                for r in riders {
+                    self.push_direct(t, a.peer, r, Arc::new(ctrl_frame(kind::NACK_MISS, s, k)));
+                }
+            }
+        }
+        self.nodes[idx].parent = new_parent;
+        if let Some(np) = new_parent {
+            let npi = np as usize;
+            self.nodes[npi].children.push(a.peer);
+            let link = if self.nodes[idx].role == role::LEAF {
+                self.cfg.link.slowed(self.nodes[idx].slow_factor)
+            } else {
+                self.cfg.link
+            };
+            self.edges
+                .insert((np, a.peer), Edge { q: VecDeque::new(), busy: false, link });
+            // Catch-up preload: the accept-path bundle (anchor +
+            // tail), pushed directly like spawn_accept does.
+            if self.nodes[npi].up {
+                let bundle: Vec<Arc<Frame>> = self.nodes[npi]
+                    .stage
+                    .as_ref()
+                    .map(|s| s.catchup().collect())
+                    .unwrap_or_default();
+                for f in bundle {
+                    self.push_direct(t, np, a.peer, f);
+                }
+            }
+        }
+    }
+
+    fn churn_apply(&mut self, t: u64, idx: usize) {
+        let action = self.cfg.churn.events[idx].action;
+        let now = self.clock.now();
+        match action {
+            ChurnAction::JoinLeaf => {
+                let id = self.members.join(role::LEAF, 0, now);
+                debug_assert_eq!(id as usize, self.nodes.len());
+                self.nodes.push(SimNode::leaf(id));
+                self.live_leaves += 1;
+                self.m.joins += 1;
+                // the plane replans per JOIN
+                self.replan_apply(t);
+                if self.publish_done {
+                    let probe = t + self.cfg.stall_grace.as_nanos() as u64;
+                    self.schedule(probe, Ev::StallCheck { leaf: id });
+                }
+            }
+            ChurnAction::JoinRelay => {
+                let id = self.members.join(role::RELAY, 0, now);
+                debug_assert_eq!(id as usize, self.nodes.len());
+                self.nodes.push(SimNode::relay(
+                    id,
+                    self.cfg.index_steps,
+                    self.cfg.escalate_policy.clone(),
+                ));
+                self.m.joins += 1;
+                self.replan_apply(t);
+            }
+            ChurnAction::CrashRelay { nth } => {
+                if let Some(v) = self.pick_nth_live(role::RELAY, nth) {
+                    self.crash(t, v);
+                }
+            }
+            ChurnAction::CrashLeaf { nth } => {
+                if let Some(v) = self.pick_nth_live(role::LEAF, nth) {
+                    self.crash(t, v);
+                }
+            }
+            ChurnAction::SlowLeaf { nth, factor } => {
+                if let Some(v) = self.pick_nth_live(role::LEAF, nth) {
+                    let vi = v as usize;
+                    self.nodes[vi].slow_factor = factor.max(1);
+                    if let Some(p) = self.nodes[vi].parent {
+                        if let Some(e) = self.edges.get_mut(&(p, v)) {
+                            e.link = self.cfg.link.slowed(factor);
+                        }
+                    }
+                    self.m.slowdowns += 1;
+                }
+            }
+        }
+    }
+
+    fn pick_nth_live(&self, want: u8, nth: usize) -> Option<u64> {
+        let live: Vec<u64> = self
+            .nodes
+            .iter()
+            .filter(|n| n.up && n.role == want)
+            .map(|n| n.id)
+            .collect();
+        if live.is_empty() {
+            None
+        } else {
+            Some(live[nth % live.len()])
+        }
+    }
+
+    /// Silent freeze: the node stops processing and heartbeating;
+    /// discovery is the sweep's job (no mark_dead here — exactly the
+    /// fail_silently fault on the TCP plane).
+    fn crash(&mut self, t: u64, id: u64) {
+        let idx = id as usize;
+        self.nodes[idx].up = false;
+        self.m.crashes += 1;
+        if self.nodes[idx].role == role::LEAF {
+            self.live_leaves -= 1;
+            if self.nodes[idx].at_head {
+                self.at_head_leaves -= 1;
+            }
+            // the straggler holding up convergence may just have died
+            self.check_converged(t);
+        }
+    }
+
+    // ------------------------------------------------------ convergence
+
+    fn note_publish_done(&mut self, t: u64) {
+        self.publish_done = true;
+        self.final_head = self.cfg.steps;
+        let mut at_head = 0usize;
+        let mut stragglers: Vec<u64> = Vec::new();
+        for n in self.nodes.iter_mut() {
+            if n.up && n.role == role::LEAF {
+                if n.applied >= self.final_head {
+                    n.at_head = true;
+                    at_head += 1;
+                } else {
+                    stragglers.push(n.id);
+                }
+            }
+        }
+        self.at_head_leaves = at_head;
+        let probe = t + self.cfg.stall_grace.as_nanos() as u64;
+        for id in stragglers {
+            self.schedule(probe, Ev::StallCheck { leaf: id });
+        }
+        self.check_converged(t);
+    }
+
+    fn check_converged(&mut self, t: u64) {
+        if self.publish_done
+            && self.converged_at.is_none()
+            && self.live_leaves > 0
+            && self.at_head_leaves >= self.live_leaves
+        {
+            self.converged_at = Some(t);
+            self.done = true;
+        }
+    }
+
+    fn report(self) -> SimReport {
+        let relays_live = self
+            .nodes
+            .iter()
+            .filter(|n| n.up && n.role == role::RELAY)
+            .count();
+        let shards = self.cfg.shards_per_step.max(2) as u64;
+        let per_step = shards * (self.cfg.bytes_per_shard.max(CTRL_BYTES) as u64 + FRAME_WIRE_OVERHEAD)
+            + (MARKER_BYTES as u64 + FRAME_WIRE_OVERHEAD);
+        let anchors = 1 + if self.cfg.anchor_every > 0 {
+            self.cfg.steps / self.cfg.anchor_every
+        } else {
+            0
+        };
+        let ideal = anchors * (self.cfg.anchor_bytes.max(8) as u64 + FRAME_WIRE_OVERHEAD)
+            + self.cfg.steps * per_step;
+        let bytes_per_leaf = self.m.leaf_bytes / self.live_leaves.max(1) as u64;
+        let converged_at = Duration::from_nanos(self.converged_at.unwrap_or(0));
+        let publish_done_at = Duration::from_nanos(self.publish_done_at);
+        SimReport {
+            seed: self.cfg.seed,
+            leaves_live: self.live_leaves,
+            relays_live,
+            depth: self.depth,
+            converged: self.converged_at.is_some(),
+            converged_at,
+            publish_done_at,
+            settle: converged_at.saturating_sub(publish_done_at),
+            head_step: self.final_head,
+            leaf_bytes: self.m.leaf_bytes,
+            bytes_per_leaf,
+            ideal_bytes_per_leaf: ideal,
+            overhead_pct: (bytes_per_leaf as f64 / ideal.max(1) as f64 - 1.0) * 100.0,
+            link_bytes: self.m.link_bytes,
+            frames_lost: self.m.frames_lost,
+            leaf_nacks: self.m.leaf_nacks,
+            leaf_nack_retries: self.m.leaf_nack_retries,
+            nacks_serviced: self.m.nacks_serviced,
+            nacks_escalated: self.m.nacks_escalated,
+            nacks_suppressed: self.m.nacks_suppressed,
+            nacks_unserviceable: self.m.nacks_unserviceable,
+            nack_misses: self.m.nack_misses,
+            retransmits: self.m.retransmits,
+            store_repairs: self.m.store_repairs,
+            leaf_repairs: self.m.leaf_repairs,
+            dup_frames: self.m.dup_frames,
+            delivered_to_dead: self.m.to_dead,
+            slow_paths: self.m.slow_paths,
+            nack_budget_exhausted: self.m.nack_budget_exhausted,
+            coalesced: self.m.coalesced,
+            frames_superseded: self.m.frames_superseded,
+            epochs: self.members.epoch(),
+            replans: self.members.replans(),
+            deaths: self.members.deaths(),
+            reparents: self.m.reparents,
+            fenced: self.m.fenced,
+            joins: self.m.joins,
+            crashes: self.m.crashes,
+            slowdowns: self.m.slowdowns,
+            max_queue_depth: self.m.max_queue,
+            events: self.events,
+            trace_hash: self.hash,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny(seed: u64) -> SimConfig {
+        let mut cfg = SimConfig::new(TopoSpec::kary(24, 4).with_spares(1), seed);
+        cfg.steps = 3;
+        cfg.shards_per_step = 2;
+        cfg.bytes_per_shard = 256;
+        cfg.anchor_bytes = 1024;
+        cfg.step_interval = Duration::from_millis(10);
+        cfg.horizon = Duration::from_secs(30);
+        cfg
+    }
+
+    #[test]
+    fn clean_run_converges_with_no_repair_traffic() {
+        let r = run(tiny(1));
+        assert!(r.converged, "clean 24-leaf run must converge: {:?}", r);
+        assert_eq!(r.head_step, 3);
+        assert_eq!(r.leaves_live, 24);
+        assert_eq!(r.frames_lost, 0);
+        assert_eq!(r.leaf_nacks, 0);
+        assert_eq!(r.slow_paths, 0);
+        assert!(r.depth >= 2, "cap 4 over 24 leaves needs a relay tier");
+        // Every leaf got exactly one clean copy of the stream.
+        assert_eq!(r.bytes_per_leaf, r.ideal_bytes_per_leaf);
+        assert!(r.overhead_pct.abs() < 1e-9);
+    }
+
+    #[test]
+    fn runs_are_bit_identical_per_seed_and_diverge_across_seeds() {
+        let mut cfg = tiny(7);
+        cfg.link = cfg.link.with_loss(20_000);
+        let a = run(cfg.clone());
+        let b = run(cfg.clone());
+        assert_eq!(a, b, "same config+seed must be bit-identical");
+        assert_eq!(a.trace_hash, b.trace_hash);
+        let mut other = cfg.clone();
+        other.seed = 8;
+        let c = run(other);
+        assert_ne!(a.trace_hash, c.trace_hash, "different seed, different trace");
+    }
+
+    #[test]
+    fn lossy_run_repairs_through_nacks_and_converges() {
+        let mut cfg = tiny(5);
+        cfg.link = cfg.link.with_loss(30_000); // 3% frame loss
+        let r = run(cfg);
+        assert!(r.converged, "lossy run must still converge: {:?}", r);
+        assert!(r.frames_lost > 0, "3% loss over ~hundreds of frames must drop some");
+        // Repair traffic exists and costs overhead.
+        assert!(r.leaf_nacks + r.slow_paths > 0);
+        assert!(r.bytes_per_leaf >= r.ideal_bytes_per_leaf);
+    }
+}

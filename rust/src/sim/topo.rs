@@ -1,0 +1,206 @@
+//! Topology specification and per-node state for the scale simulator.
+//!
+//! A [`TopoSpec`] describes the modeled cluster (relay and leaf
+//! counts, fan-out cap, forced relay depth); the actual tree comes
+//! from the real planner via [`crate::net::control::Membership`] — the
+//! spec only decides how many peers register. [`SimNode`] is one
+//! modeled peer: relays carry the *real*
+//! [`crate::net::relay::RelayStage`] and
+//! [`crate::net::relay::EscalationLedger`] (rider = downstream peer
+//! id); leaves carry the consumer-side assembly state (applied step,
+//! pending shards, NACK retry schedules off the real
+//! [`crate::util::retry::RetryAt`]) and the real
+//! [`crate::net::control::EpochFence`].
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+
+use crate::net::control::{role, EpochFence};
+use crate::net::relay::{EscalationLedger, RelayStage};
+use crate::util::retry::{RetryAt, RetryPolicy};
+
+/// Cluster shape: how many peers of each role register at bootstrap.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TopoSpec {
+    /// Interior relay peers registered at t=0 (the root relay is the
+    /// publisher's own and is not a member).
+    pub relays: usize,
+    /// Leaf subscribers registered at t=0.
+    pub leaves: usize,
+    /// Planner fan-out cap per hop.
+    pub fanout_cap: usize,
+    /// Forced minimum relay depth (0 = whatever the planner needs).
+    pub min_relay_levels: usize,
+}
+
+impl TopoSpec {
+    /// A balanced k-ary spec: exactly enough relays for `leaves` under
+    /// `fanout_cap`, computed with the same recurrence the planner's
+    /// shape uses (each level parents up to `cap` children of the
+    /// level below).
+    pub fn kary(leaves: usize, fanout_cap: usize) -> TopoSpec {
+        TopoSpec {
+            relays: relays_for(leaves, fanout_cap),
+            leaves,
+            fanout_cap,
+            min_relay_levels: 0,
+        }
+    }
+
+    /// Same spec with `extra` spare relays (standby pool the planner
+    /// promotes when a relay dies).
+    pub fn with_spares(mut self, extra: usize) -> TopoSpec {
+        self.relays += extra;
+        self
+    }
+
+    /// Same spec with a forced relay depth.
+    pub fn with_min_levels(mut self, levels: usize) -> TopoSpec {
+        self.min_relay_levels = levels;
+        self
+    }
+
+    /// Total peers registered at bootstrap.
+    pub fn peers(&self) -> usize {
+        self.relays + self.leaves
+    }
+}
+
+/// Relays needed to parent `leaves` under `cap`: the bottom relay tier
+/// needs `ceil(leaves / cap)` nodes, each tier above parents the one
+/// below, until a tier fits under the root relay's own cap.
+pub fn relays_for(leaves: usize, cap: usize) -> usize {
+    let cap = cap.max(2);
+    if leaves <= cap {
+        return 0;
+    }
+    let mut tier = leaves.div_ceil(cap);
+    let mut total = 0;
+    loop {
+        total += tier;
+        if tier <= cap {
+            return total;
+        }
+        tier = tier.div_ceil(cap);
+    }
+}
+
+/// Leaf-side assembly of one uncommitted step: which shards arrived,
+/// and the shard count once the step's marker landed.
+#[derive(Debug, Default)]
+pub struct StepAsm {
+    pub total: Option<u32>,
+    pub seen: HashSet<u32>,
+}
+
+/// One modeled peer. Index in the simulator's node table == its
+/// control-plane peer id (id 0 is the root relay / publisher).
+pub struct SimNode {
+    pub id: u64,
+    /// `role::RELAY`, `role::LEAF`, or 0 for the root.
+    pub role: u8,
+    /// False once crashed (frozen: delivered frames are ignored, no
+    /// heartbeats refresh it).
+    pub up: bool,
+    pub parent: Option<u64>,
+    /// Downstream peers, attach order (fan-out order is deterministic).
+    pub children: Vec<u64>,
+    pub hop: u32,
+    /// Real directive fence — stale ASSIGNs bounce here, same as on
+    /// the TCP plane.
+    pub fence: EpochFence,
+    /// Hop staging (root + relays): the real anchor/tail/index machine.
+    pub stage: Option<RelayStage>,
+    /// NACK-storm suppression (relays): riders are downstream peer ids.
+    pub ledger: Option<EscalationLedger<u64>>,
+    // ---- leaf assembly state ----
+    /// Last committed step (0 = baseline).
+    pub applied: u64,
+    /// Whether this live leaf has reached the final published head.
+    pub at_head: bool,
+    /// A slow-path (store fallback) fetch is in flight.
+    pub in_slow: bool,
+    /// Ingress bandwidth divisor (1 = healthy; set by churn).
+    pub slow_factor: u32,
+    /// Uncommitted steps by number (ordered — pruning is a range op).
+    pub pending: BTreeMap<u64, StepAsm>,
+    /// Outstanding per-shard NACK retry schedules.
+    pub nacks: HashMap<(u64, u32), RetryAt>,
+}
+
+impl SimNode {
+    fn base(id: u64, role: u8) -> SimNode {
+        SimNode {
+            id,
+            role,
+            up: true,
+            parent: None,
+            children: Vec::new(),
+            hop: 0,
+            fence: EpochFence::default(),
+            stage: None,
+            ledger: None,
+            applied: 0,
+            at_head: false,
+            in_slow: false,
+            slow_factor: 1,
+            pending: BTreeMap::new(),
+            nacks: HashMap::new(),
+        }
+    }
+
+    /// The root relay (peer id 0, hop 0, never a member).
+    pub fn root(index_steps: usize) -> SimNode {
+        let mut n = SimNode::base(0, 0);
+        n.stage = Some(RelayStage::new(index_steps));
+        n
+    }
+
+    /// An interior relay peer.
+    pub fn relay(id: u64, index_steps: usize, escalate: RetryPolicy) -> SimNode {
+        let mut n = SimNode::base(id, role::RELAY);
+        n.stage = Some(RelayStage::new(index_steps));
+        n.ledger = Some(EscalationLedger::new(escalate));
+        n
+    }
+
+    /// A leaf subscriber peer.
+    pub fn leaf(id: u64) -> SimNode {
+        SimNode::base(id, role::LEAF)
+    }
+
+    /// Root or relay — anything that stages and fans out.
+    pub fn is_hop(&self) -> bool {
+        self.stage.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relay_provisioning_matches_the_kary_recurrence() {
+        // ≤ cap leaves sit directly under the root: no relays.
+        assert_eq!(relays_for(8, 8), 0);
+        // 64 leaves / cap 8 → one tier of 8.
+        assert_eq!(relays_for(64, 8), 8);
+        // 100k leaves / cap 8 → 12500 + 1563 + 196 + 25 + 4.
+        assert_eq!(relays_for(100_000, 8), 14288);
+        let spec = TopoSpec::kary(100_000, 8).with_spares(2);
+        assert_eq!(spec.relays, 14290);
+        assert_eq!(spec.peers(), 114_290);
+    }
+
+    #[test]
+    fn node_constructors_set_roles_and_machines() {
+        let r = SimNode::root(4);
+        assert!(r.is_hop() && r.ledger.is_none() && r.id == 0);
+        let relay = SimNode::relay(3, 4, RetryPolicy::escalate_default());
+        assert!(relay.is_hop() && relay.ledger.is_some());
+        assert_eq!(relay.role, role::RELAY);
+        let leaf = SimNode::leaf(7);
+        assert!(!leaf.is_hop());
+        assert_eq!(leaf.role, role::LEAF);
+        assert_eq!(leaf.applied, 0);
+    }
+}

@@ -94,30 +94,39 @@ impl RetryPolicy {
         Duration::from_secs_f64(raw * (0.75 + 0.5 * unit))
     }
 
-    /// Begin a budgeted retry sequence anchored at "now".
+    /// Begin a budgeted retry sequence anchored at "now" on the wall
+    /// clock. Wall-plane convenience over [`RetryPolicy::start_at`].
     pub fn start(&self) -> Retry {
-        Retry {
-            policy: self.clone(),
-            attempt: 0,
-            deadline: Instant::now() + self.total,
-        }
+        Retry { inner: self.start_at(Duration::ZERO), anchor: Instant::now() }
+    }
+
+    /// Begin a budgeted retry sequence anchored at an explicit reading
+    /// (`now` from any monotone origin — the wall anchor or a virtual
+    /// clock). This is the clock-agnostic core: the scale simulator
+    /// (`crate::sim`) drives the *same* schedule/budget arithmetic the
+    /// socket plane uses, off its event-loop time instead of real time.
+    pub fn start_at(&self, now: Duration) -> RetryAt {
+        RetryAt { policy: self.clone(), attempt: 0, deadline: now + self.total }
     }
 }
 
-/// In-flight state of one budgeted retry sequence.
-pub struct Retry {
+/// In-flight state of one budgeted retry sequence, parameterized by an
+/// external time source: every query takes the caller's current `now`
+/// reading. [`Retry`] wraps this for wall-clock callers.
+pub struct RetryAt {
     policy: RetryPolicy,
     attempt: u32,
-    deadline: Instant,
+    deadline: Duration,
 }
 
-impl Retry {
-    /// Delay to wait before the next attempt, or `None` once waiting
-    /// would overrun the total budget — the caller should give up (the
-    /// absolute cutoff is [`Retry::deadline`]).
-    pub fn next_delay(&mut self) -> Option<Duration> {
+impl RetryAt {
+    /// Delay to wait before the next attempt given the current reading,
+    /// or `None` once waiting would overrun the total budget — the
+    /// caller should give up (the absolute cutoff is
+    /// [`RetryAt::deadline`]).
+    pub fn next_delay_at(&mut self, now: Duration) -> Option<Duration> {
         let d = self.policy.delay_for(self.attempt);
-        if Instant::now() + d >= self.deadline {
+        if now + d >= self.deadline {
             return None;
         }
         self.attempt += 1;
@@ -129,9 +138,37 @@ impl Retry {
         self.attempt
     }
 
+    /// Absolute give-up reading (start + total budget), on the same
+    /// origin the sequence was started with.
+    pub fn deadline(&self) -> Duration {
+        self.deadline
+    }
+}
+
+/// In-flight state of one budgeted retry sequence on the wall clock
+/// (a [`RetryAt`] anchored at its creation instant).
+pub struct Retry {
+    inner: RetryAt,
+    anchor: Instant,
+}
+
+impl Retry {
+    /// Delay to wait before the next attempt, or `None` once waiting
+    /// would overrun the total budget — the caller should give up (the
+    /// absolute cutoff is [`Retry::deadline`]).
+    pub fn next_delay(&mut self) -> Option<Duration> {
+        let now = self.anchor.elapsed();
+        self.inner.next_delay_at(now)
+    }
+
+    /// Retries handed out so far.
+    pub fn attempts(&self) -> u32 {
+        self.inner.attempts()
+    }
+
     /// Absolute give-up instant (start + total budget).
     pub fn deadline(&self) -> Instant {
-        self.deadline
+        self.anchor + self.inner.deadline()
     }
 }
 
@@ -184,6 +221,28 @@ mod tests {
         let mut r = p.start();
         assert!(r.next_delay().is_none(), "a 50ms delay cannot fit a 1ms budget");
         assert_eq!(r.attempts(), 0);
+    }
+
+    #[test]
+    fn virtual_time_sequence_matches_policy_schedule() {
+        // RetryAt under an explicitly advanced clock hands out exactly
+        // the policy's jittered delays until the budget is spent —
+        // this is the schedule the scale simulator replays.
+        let p = RetryPolicy::nack_default().with_seed(3);
+        let mut r = p.start_at(Duration::from_secs(10));
+        assert_eq!(r.deadline(), Duration::from_secs(15));
+        let mut now = Duration::from_secs(10);
+        let mut handed = Vec::new();
+        while let Some(d) = r.next_delay_at(now) {
+            now += d;
+            handed.push(d);
+            assert!(handed.len() < 64, "budget must bound the sequence");
+        }
+        assert!(!handed.is_empty(), "a 5s budget fits several 250ms+ delays");
+        for (n, d) in handed.iter().enumerate() {
+            assert_eq!(*d, p.delay_for(n as u32), "delays come from the shared policy");
+        }
+        assert!(now + p.delay_for(r.attempts()) >= r.deadline());
     }
 
     #[test]

@@ -1,0 +1,193 @@
+//! Scale-simulator integration suite: determinism (the replay
+//! contract), churn recovery through the real control plane, slow
+//! subscribers through the real coalescing path, and the NACK_MISS /
+//! store-fallback repair chain — all in virtual time, no sockets.
+//!
+//! Replay rule (mirrors `PULSE_CHAOS_SEED`): every run here is a pure
+//! function of its `SimConfig`, so a red assertion reproduces locally
+//! by running the same test — no flake window, no timing dependence.
+
+use std::time::Duration;
+
+use pulse::net::transport::{FaultInjectingTransport, InProcTransport};
+use pulse::sim::churn::{ChurnAction, ChurnScript};
+use pulse::sim::topo::TopoSpec;
+use pulse::sim::{run, run_with_store, SimConfig};
+
+/// A 24-leaf / cap-4 tree (2 relay tiers) publishing 10 small steps.
+fn small(seed: u64) -> SimConfig {
+    let mut cfg = SimConfig::new(TopoSpec::kary(24, 4), seed);
+    cfg.steps = 10;
+    cfg.shards_per_step = 2;
+    cfg.bytes_per_shard = 512;
+    cfg.anchor_bytes = 4096;
+    cfg.step_interval = Duration::from_millis(10);
+    cfg.horizon = Duration::from_secs(60);
+    cfg
+}
+
+#[test]
+fn same_seed_and_churn_script_replay_bit_identically() {
+    let mk = |seed: u64| {
+        let mut cfg = small(seed);
+        cfg.link = cfg.link.with_loss(10_000); // 1% frame loss
+        cfg.churn = ChurnScript::seeded(
+            seed,
+            6,
+            Duration::from_millis(20),
+            Duration::from_millis(100),
+        );
+        cfg
+    };
+    let a = run(mk(11));
+    let b = run(mk(11));
+    // Full-report equality, not just the hash: every counter, byte
+    // tally, and timestamp must replay.
+    assert_eq!(a, b, "same (topology, seed, churn) must be bit-identical");
+    assert_eq!(a.trace_hash, b.trace_hash);
+    assert!(a.converged, "churny-but-lossy small run must converge: {:?}", a);
+
+    let c = run(mk(12));
+    assert_ne!(
+        a.trace_hash, c.trace_hash,
+        "a different seed must produce a different event trace"
+    );
+}
+
+#[test]
+fn relay_crash_is_swept_replanned_and_survivors_reconverge() {
+    let mut cfg = small(3);
+    cfg.steps = 20;
+    // Tight failure detector so the sweep (not the stall probe) drives
+    // recovery: death timeout = 100ms * 3 = 300ms.
+    cfg.heartbeat_interval = Duration::from_millis(100);
+    cfg.missed_heartbeats = 3;
+    cfg.churn = ChurnScript::none()
+        .then(Duration::from_millis(50), ChurnAction::CrashRelay { nth: 0 })
+        .then(Duration::from_millis(70), ChurnAction::JoinLeaf)
+        .then(Duration::from_millis(80), ChurnAction::SlowLeaf { nth: 2, factor: 8 });
+    let r = run(cfg);
+    assert!(r.converged, "crash + join + slowdown must still converge: {:?}", r);
+    assert_eq!(r.crashes, 1);
+    assert_eq!(r.joins, 1);
+    assert_eq!(r.slowdowns, 1);
+    assert_eq!(r.leaves_live, 25, "24 bootstrap leaves + 1 join");
+    assert!(r.deaths >= 1, "the sweep must discover the silent relay crash: {:?}", r);
+    assert!(
+        r.reparents >= 1,
+        "the dead relay's subtree must be re-parented by the replan: {:?}",
+        r
+    );
+    // Bootstrap plan + the join + the post-sweep replan.
+    assert!(r.replans >= 3, "expected at least 3 plan epochs: {:?}", r);
+}
+
+#[test]
+fn slow_subscriber_is_coalesced_and_converges_through_the_store() {
+    // 6 leaves directly under the root; leaf 0's ingress drops to
+    // ~1 Mbit/s against a ~66 Mbit/s stream, with a 2-frame queue.
+    let mut cfg = SimConfig::new(TopoSpec::kary(6, 8), 9);
+    cfg.steps = 30;
+    cfg.shards_per_step = 2;
+    cfg.bytes_per_shard = 4096;
+    cfg.anchor_bytes = 65536;
+    cfg.step_interval = Duration::from_millis(1);
+    cfg.queue_depth = 2;
+    cfg.churn = ChurnScript::none()
+        .then(Duration::from_nanos(1), ChurnAction::SlowLeaf { nth: 0, factor: 1000 });
+    let r = run(cfg);
+    assert!(r.converged, "the slow leaf must converge via the store: {:?}", r);
+    assert_eq!(r.slowdowns, 1);
+    assert!(
+        r.coalesced + r.frames_superseded > 0,
+        "a 2-deep queue against a 1000x-slowed edge must coalesce: {:?}",
+        r
+    );
+    assert!(
+        r.slow_paths >= 1,
+        "the slow leaf cannot drain the stream in time; the stall probe \
+         must hand it to the store: {:?}",
+        r
+    );
+    // The healthy leaves were never coalesced: their cost is one clean
+    // copy, so the mean stays well under 2x ideal despite leaf 0.
+    assert!(r.bytes_per_leaf < 2 * r.ideal_bytes_per_leaf, "{:?}", r);
+}
+
+#[test]
+fn unserviceable_store_slot_falls_back_through_nack_miss() {
+    // Publish faster than the control round-trip with a 1-step NACK
+    // index, so every repair lookup structurally misses its hop cache
+    // and escalates to the root's store backstop. Slot (step 1, shard
+    // 0) is poisoned there: NACKs for it must fail over to NACK_MISS
+    // and send the affected leaves down the slow path.
+    let mut cfg = SimConfig::new(TopoSpec::kary(32, 8), 17);
+    cfg.steps = 4;
+    cfg.shards_per_step = 2;
+    cfg.bytes_per_shard = 1024;
+    cfg.anchor_bytes = 8192;
+    cfg.step_interval = Duration::from_micros(100); // < 200µs link latency
+    cfg.index_steps = 1;
+    cfg.link = cfg.link.with_loss(250_000); // 25% frame loss
+    let store = FaultInjectingTransport::unserviceable(
+        InProcTransport::with_window(16, 16),
+        1,
+        0,
+    );
+    let r = run_with_store(cfg, Box::new(store));
+    assert!(r.converged, "poisoned slot must not block convergence: {:?}", r);
+    assert!(r.frames_lost > 0);
+    assert!(r.leaf_nacks > 0, "25% loss must trigger NACKs: {:?}", r);
+    assert!(
+        r.nacks_escalated > 0,
+        "1-step hop indexes must escalate leaf NACKs upward: {:?}",
+        r
+    );
+    assert!(
+        r.store_repairs > 0,
+        "healthy slots must be repaired out of the root's store: {:?}",
+        r
+    );
+    assert!(
+        r.nacks_unserviceable > 0,
+        "the poisoned slot must be reported unserviceable at the root: {:?}",
+        r
+    );
+    assert!(
+        r.nack_misses > 0 && r.slow_paths > 0,
+        "NACK_MISS must cascade to leaves and send them to the store: {:?}",
+        r
+    );
+}
+
+#[test]
+fn total_blackout_converges_through_the_stall_probe() {
+    // 100% loss on every tree edge: no frame ever reaches a relay or a
+    // leaf, so the post-publish stall probe must route every leaf
+    // through the store fallback.
+    let mut cfg = SimConfig::new(TopoSpec::kary(12, 4), 21);
+    cfg.steps = 5;
+    cfg.step_interval = Duration::from_millis(5);
+    cfg.link = cfg.link.with_loss(1_000_000);
+    let r = run(cfg);
+    assert!(r.converged, "blackout must converge via the store: {:?}", r);
+    assert_eq!(r.slow_paths, 12, "every leaf takes exactly one slow path: {:?}", r);
+    assert_eq!(r.leaf_nacks, 0, "no marker ever arrives, so nothing to NACK");
+    assert!(r.frames_lost > 0);
+}
+
+#[test]
+fn clean_kilo_leaf_run_pays_exactly_one_copy_per_leaf() {
+    let cfg = SimConfig::new(TopoSpec::kary(1_000, 8), 1);
+    let r = run(cfg);
+    assert!(r.converged, "{:?}", r);
+    assert_eq!(r.leaves_live, 1_000);
+    assert!(r.depth >= 3, "1k leaves under cap 8 needs multiple relay tiers");
+    assert_eq!(
+        r.bytes_per_leaf, r.ideal_bytes_per_leaf,
+        "lossless run must deliver exactly one clean copy per leaf: {:?}",
+        r
+    );
+    assert_eq!(r.frames_lost, 0);
+    assert_eq!(r.leaf_nacks + r.slow_paths + r.coalesced, 0);
+}
