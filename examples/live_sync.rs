@@ -35,15 +35,30 @@
 //! this unsupervised demo is NOT built to heal — the control-plane
 //! chaos suite (`tests/integration_chaos.rs`) is. See the README
 //! "Failure model" section.
+//!
+//! `--store <addr>` (or `PULSE_STORE_ADDR=<addr>`) runs the stream
+//! over the **store plane** instead of the relay: the trainer PUTs
+//! frames into an origin store server and both workers pull through a
+//! caching hop (`RemoteStoreTransport`), so the origin serves each
+//! patch object once no matter how many workers ride the hop. `<addr>`
+//! is `host:port` or a bare port (loopback only — the store wire is
+//! the local tcp framing), or `local` to self-host an origin over a
+//! temp object store. Unlike the relay path, chaos-seeded corruption
+//! IS healed here: the store client retries damaged rpcs under its
+//! budgeted backoff.
 
 use pulse::bf16;
 use pulse::net::chaos::ChaosConfig;
 use pulse::net::node::RelayNode;
 use pulse::net::relay::Relay;
+use pulse::net::store::{caching_hop, DirectStore, RemoteStoreTransport, StoreServer};
 use pulse::net::transport::{RelayTransport, SyncTransport};
 use pulse::pulse::sync::{Consumer, Publisher, SyncPath};
 use pulse::sparse::{synthetic_layout, TensorShape};
+use pulse::storage::retention::RetentionPolicy;
+use pulse::storage::ObjectStore;
 use pulse::util::rng::Rng;
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
 const SHARDS: usize = 4;
@@ -84,6 +99,151 @@ fn run_worker(
     Ok((steps, bytes, root))
 }
 
+/// Store-plane worker: a cold `Consumer<RemoteStoreTransport>` pulling
+/// from the store server on `port` until `target` is applied. Returns
+/// (steps applied, bytes fetched, final root).
+fn run_store_worker(
+    port: u16,
+    layout: Vec<TensorShape>,
+    target: u64,
+) -> anyhow::Result<(usize, u64, String)> {
+    let mut consumer = Consumer::over(RemoteStoreTransport::connect(port, "live"), layout);
+    let mut steps = 0usize;
+    loop {
+        let head = consumer.latest_ready()?;
+        let behind =
+            head.is_some_and(|h| consumer.weights.is_none() || h > consumer.step);
+        if behind {
+            let cs = consumer.synchronize()?;
+            assert!(cs.verified);
+            if cs.path != SyncPath::UpToDate {
+                steps += cs.patches_applied + cs.anchors_restored;
+            }
+        } else if consumer.weights.is_some() && consumer.step >= target {
+            break;
+        } else {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+    }
+    let bytes = consumer.transport.counters().bytes_fetched;
+    let root = consumer.tree_root().unwrap_or_default();
+    Ok((steps, bytes, root))
+}
+
+/// The relay demo's stream, re-run over the store plane: publisher →
+/// origin store server, workers ← caching hop. See the module docs for
+/// the `--store` grammar.
+fn run_over_store(addr: &str, chaos: Option<ChaosConfig>) -> anyhow::Result<()> {
+    let n = 200_000usize;
+    let layout = synthetic_layout(n, 1024);
+    // `local` self-hosts the origin; anything else is an already
+    // running store server (e.g. another process of this example)
+    let (origin, temp) = if addr == "local" {
+        let store = ObjectStore::temp("live_store")?;
+        let server =
+            StoreServer::serve(Arc::new(DirectStore::new(store.clone())), chaos.clone())?;
+        (Some(server), Some(store))
+    } else {
+        (None, None)
+    };
+    let origin_port = match &origin {
+        Some(s) => s.port(),
+        None => addr.rsplit(':').next().unwrap_or(addr).parse::<u16>().map_err(|_| {
+            anyhow::anyhow!("--store expects host:port, a port, or 'local' (got '{}')", addr)
+        })?,
+    };
+    let (hop, hop_cache) = caching_hop(origin_port, RetentionPolicy::default(), chaos.clone())?;
+    println!(
+        "store plane: origin 127.0.0.1:{} -> caching hop 127.0.0.1:{}",
+        origin_port,
+        hop.port()
+    );
+    if let Some(c) = &chaos {
+        println!(
+            "chaos wire enabled on every store hop: seed {}, damaging-fault budget {} \
+             (client retries heal the damage)",
+            c.seed,
+            c.budget_remaining().unwrap_or(0)
+        );
+    }
+
+    // trainer-side state, same drift model as the relay path
+    let mut rng = Rng::new(3);
+    let mut master: Vec<f32> = (0..n)
+        .map(|_| {
+            let z = rng.normal();
+            let s = if z < 0.0 { 1.48 } else { 0.72 };
+            ((-4.47 + s * z).exp() * if rng.f64() < 0.5 { -1.0 } else { 1.0 }) as f32
+        })
+        .collect();
+    let mut prev = Vec::new();
+    bf16::cast_slice_par(&master, &mut prev);
+    let mut publisher = Publisher::over(
+        RemoteStoreTransport::connect(origin_port, "live"),
+        layout.clone(),
+        prev,
+        1_000,
+    )?
+    .with_shards(SHARDS);
+
+    let steps = 10u64;
+    let (p, l1, l2) = (hop.port(), layout.clone(), layout);
+    let fast = std::thread::spawn(move || run_store_worker(p, l1, steps));
+    let late = std::thread::spawn(move || {
+        std::thread::sleep(std::time::Duration::from_millis(150));
+        run_store_worker(p, l2, steps)
+    });
+    let mut total_patch_bytes = 0u64;
+    for step in 1..=steps {
+        for x in master.iter_mut() {
+            *x += 3e-6 * if rng.f64() < 0.5 { -1.0 } else { 1.0 };
+        }
+        let mut view = Vec::new();
+        bf16::cast_slice_par(&master, &mut view);
+        let ps = publisher.publish(step, &view)?;
+        total_patch_bytes += ps.patch_bytes;
+        println!(
+            "trainer step {:>2}: nnz {:>6} / {}  {} shards  {:>9} total",
+            step,
+            ps.nnz,
+            n,
+            ps.shard_count,
+            pulse::util::fmt_bytes(ps.patch_bytes)
+        );
+    }
+    let (fast_steps, fast_bytes, fast_root) = fast.join().unwrap()?;
+    let (late_steps, late_bytes, late_root) = late.join().unwrap()?;
+    assert_eq!(fast_root, publisher.tree().root_hex(), "early worker root mismatch");
+    assert_eq!(late_root, publisher.tree().root_hex(), "late joiner root mismatch");
+    println!(
+        "\nearly worker applied {} steps over the store wire ({}), all hash-verified ✓",
+        fast_steps,
+        pulse::util::fmt_bytes(fast_bytes)
+    );
+    println!(
+        "late joiner applied {} steps ({}) after anchor catch-up ✓",
+        late_steps,
+        pulse::util::fmt_bytes(late_bytes)
+    );
+    println!(
+        "caching hop: {} hits / {} misses, {} origin fetches, {} revalidations NOT_MODIFIED \
+         — the origin served each patch object once for {} total patch bytes",
+        hop_cache.counters.hits.load(Ordering::Relaxed),
+        hop_cache.counters.misses.load(Ordering::Relaxed),
+        hop_cache.counters.origin_fetches.load(Ordering::Relaxed),
+        hop_cache.counters.not_modified.load(Ordering::Relaxed),
+        pulse::util::fmt_bytes(total_patch_bytes)
+    );
+    hop.stop();
+    if let Some(o) = &origin {
+        o.stop();
+    }
+    if let Some(store) = temp {
+        let _ = std::fs::remove_dir_all(store.root());
+    }
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let argv: Vec<String> = std::env::args().collect();
     let tree = argv.iter().any(|a| a == "--tree")
@@ -121,6 +281,17 @@ fn main() -> anyhow::Result<()> {
                 .unwrap_or(0);
             ChaosConfig::light(seed).with_budget(budget)
         });
+    // store plane: `--store <addr>` wins over PULSE_STORE_ADDR; when
+    // present the whole demo runs over the patch CDN instead of the
+    // relay fabric (see run_over_store)
+    let store_addr = argv
+        .iter()
+        .position(|a| a == "--store")
+        .and_then(|i| argv.get(i + 1).cloned())
+        .or_else(|| std::env::var("PULSE_STORE_ADDR").ok());
+    if let Some(addr) = store_addr {
+        return run_over_store(&addr, chaos);
+    }
     let n = 500_000usize;
     let layout = synthetic_layout(n, 1024);
     let relay = Arc::new(Relay::start_with_chaos(

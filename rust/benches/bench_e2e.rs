@@ -5,10 +5,13 @@
 //! store I/O (runs everywhere, including CI bench-smoke); star vs
 //! 2-level-tree relay fan-out over real TCP sockets, so the chaining
 //! trade-off (one extra staging hop vs root uplink load) accumulates
-//! data points per PR; a control-plane failover cycle
-//! (`e2e/control_replan`) pricing detection + replan + re-subscribe +
-//! catch-up end to end; and one full GRPO train step on the tiny model
-//! (requires artifacts; skipped cleanly without them).
+//! data points per PR; the store plane (`e2e/remote_store_cold` /
+//! `_warm` / `_poll_nop` — cold pull from the origin, the same pull
+//! through a warm caching hop, and the NOT_MODIFIED revalidation
+//! poll); a control-plane failover cycle (`e2e/control_replan`)
+//! pricing detection + replan + re-subscribe + catch-up end to end;
+//! and one full GRPO train step on the tiny model (requires
+//! artifacts; skipped cleanly without them).
 use pulse::bf16;
 use pulse::coordinator;
 use pulse::net::node::RelayNode;
@@ -180,6 +183,84 @@ fn bench_fanout_topologies(b: &mut Bench) {
     fanout_over(b, &format!("e2e/fanout_tree2/{}leaves 200k", leaves), true, leaves, n, &init, &mut rng);
 }
 
+/// The store plane priced three ways (bench-smoke rows for the patch
+/// CDN): a cold consumer pulling the whole stream straight from the
+/// origin store server; the same cold pull through an already-warm
+/// caching hop (origin never touched for data objects); and the no-op
+/// poll — a conditional GET of the head ready marker revalidated
+/// through the hop, answered NOT_MODIFIED end to end.
+fn bench_remote_store(b: &mut Bench) {
+    use pulse::net::store::{
+        caching_hop, DirectStore, GetOutcome, ObjectApi, RemoteStoreTransport, StoreClient,
+        StoreServer,
+    };
+    use pulse::net::transport::delta_ready_key;
+    use pulse::storage::retention::RetentionPolicy;
+    use std::sync::Arc;
+
+    let n = 200_000usize;
+    let steps = 3u64;
+    let layout = synthetic_layout(n, 1024);
+    let mut rng = Rng::new(53);
+    let init: Vec<u16> = (0..n)
+        .map(|_| pulse::bf16::f32_to_bf16_bits((rng.normal() * 0.02) as f32))
+        .collect();
+    let store = ObjectStore::temp("bench_e2e_store").unwrap();
+    let origin = StoreServer::serve(Arc::new(DirectStore::new(store.clone())), None).unwrap();
+    // publish the stream once; every bench iteration replays a cold sync
+    let mut publisher = Publisher::over(
+        RemoteStoreTransport::connect(origin.port(), "sync"),
+        layout.clone(),
+        init.clone(),
+        50,
+    )
+    .unwrap()
+    .with_shards(4);
+    let mut w = init;
+    for step in 1..=steps {
+        for _ in 0..n / 100 {
+            let i = rng.below(n as u64) as usize;
+            w[i] = pulse::bf16::f32_to_bf16_bits((rng.normal() * 0.02) as f32);
+        }
+        publisher.publish(step, &w).unwrap();
+    }
+
+    b.run_bytes("e2e/remote_store_cold/200k x4 shards", (n * 2) as u64, || {
+        let mut c =
+            Consumer::over(RemoteStoreTransport::connect(origin.port(), "sync"), layout.clone());
+        let cs = c.synchronize().unwrap();
+        assert!(cs.verified);
+        assert_eq!(c.step, steps);
+    });
+
+    let (hop, _cache) = caching_hop(origin.port(), RetentionPolicy::default(), None).unwrap();
+    b.run_bytes("e2e/remote_store_warm/200k x4 shards hop", (n * 2) as u64, || {
+        let mut c =
+            Consumer::over(RemoteStoreTransport::connect(hop.port(), "sync"), layout.clone());
+        let cs = c.synchronize().unwrap();
+        assert!(cs.verified);
+        assert_eq!(c.step, steps);
+    });
+
+    // the steady-state poll: revalidate the head marker through the hop
+    let client = StoreClient::new(hop.port());
+    let marker = format!("sync/{}", delta_ready_key(steps));
+    let etag = match client.get(&marker, None, None).unwrap() {
+        GetOutcome::Body { etag, .. } => etag,
+        other => panic!("head marker must have a body, got {:?}", other),
+    };
+    b.run("e2e/remote_store_poll_nop/cond GET", || {
+        match client.get(&marker, None, Some(etag.as_str())).unwrap() {
+            GetOutcome::NotModified { .. } => {}
+            other => panic!("expected NOT_MODIFIED, got {:?}", other),
+        }
+    });
+
+    hop.stop();
+    origin.stop();
+    std::fs::remove_dir_all(store.root()).unwrap();
+}
+
 /// One full control-plane failover cycle: assemble a plane-managed
 /// tree (1 active relay + 1 standby, 2 leaves) from JOINs, stream,
 /// crash the active relay silently, and wait until every leaf has
@@ -335,6 +416,7 @@ fn main() {
     let mut b = Bench::new();
     bench_sync_roundtrip(&mut b);
     bench_fanout_topologies(&mut b);
+    bench_remote_store(&mut b);
     bench_control_replan(&mut b);
     bench_train_step(&mut b);
     let results = pulse::coordinator::metrics::results_dir();

@@ -67,6 +67,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         "table13" => table13(args),
         "table14" => table14(args),
         "transports" => transports(args),
+        "cache" => cache(args),
         "topology" => topology(args),
         "control" => control(args),
         "scale" => scale(args),
@@ -75,8 +76,8 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
             for c in [
                 "table1", "fig9", "fig3", "table2", "table6", "fig1", "fig2", "fig14", "fig13",
                 "fig16", "fig15", "fig4", "fig8", "table5", "table10", "table11", "table13",
-                "fig11", "table14", "transports", "topology", "control", "fig7", "fig10",
-                "fig12", "fig17", "table7", "fig6",
+                "fig11", "table14", "transports", "cache", "topology", "control", "fig7",
+                "fig10", "fig12", "fig17", "table7", "fig6",
             ] {
                 println!("\n################ paper {} ################", c);
                 dispatch(c, args)?;
@@ -88,7 +89,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
                 "usage: paper <exp> [--options]\n\
                  exps: fig1 fig2 fig3 fig4 fig6 fig7 fig8 fig9 fig10 fig11 fig12 fig13 fig14\n\
                  fig15 fig16 fig17 table1 table2 table4 table5 table6 table7 table10\n\
-                 table11 table13 table14 transports topology control all\n\
+                 table11 table13 table14 transports cache topology control all\n\
                  gates: scale (sim scale gate) benchguard (bench regression guard)"
             );
             Ok(())
@@ -1428,6 +1429,169 @@ fn transports(args: &Args) -> Result<()> {
             "faults",
         ],
         &rows,
+    );
+    std::fs::remove_dir_all(store.root()).ok();
+    Ok(())
+}
+
+// ====================================================== store cache
+/// Star vs 2-level cached tree over real store-plane sockets: the same
+/// published stream, the same number of cold leaves, once with every
+/// leaf pulling straight from the origin store server and once through
+/// two `CachingStore` hops. The table prices what the caching tier
+/// buys: origin egress bytes and the leaf-side hit rate
+/// (`results/store_cache.csv`). Leaves sync sequentially — concurrent
+/// cold misses on one hop can each reach the origin (no single-flight
+/// dedup; see `net::store` module docs), and this table measures the
+/// steady caching bound, not that race.
+fn cache(args: &Args) -> Result<()> {
+    use pulse::net::store::{caching_hop, DirectStore, RemoteStoreTransport, StoreServer};
+    use pulse::net::transport::SyncTransport;
+    use pulse::pulse::sync::{Consumer, Publisher};
+    use pulse::storage::retention::RetentionPolicy;
+    use pulse::storage::ObjectStore;
+    use pulse::util::rng::Rng;
+    use std::sync::atomic::Ordering;
+    use std::sync::Arc;
+
+    let n = args.usize_or("params", 200_000);
+    let steps = args.usize_or("steps", 6) as u64;
+    let shards = args.usize_or("shards", 4).max(1);
+    // ≥ 4 so each of the two hops serves ≥ 2 leaves and the egress
+    // assertion below is meaningful
+    let leaves = args.usize_or("leaves", 6).max(4);
+    let layout = sparse::synthetic_layout(n, 1024);
+    let mut rng = Rng::new(47);
+    let init: Vec<u16> = (0..n).map(|_| rng.next_u32() as u16).collect();
+    let mut views = vec![init.clone()];
+    {
+        let mut w = init;
+        for _ in 0..steps {
+            for _ in 0..n / 100 {
+                let i = rng.below(n as u64) as usize;
+                w[i] = rng.next_u32() as u16;
+            }
+            views.push(w.clone());
+        }
+    }
+
+    // one origin serves both legs; the stream is published once and
+    // every leaf syncs the same cold workload from scratch
+    let store = ObjectStore::temp("paper_cache")?;
+    let origin = StoreServer::serve(Arc::new(DirectStore::new(store.clone())), None)?;
+    let mut publisher = Publisher::over(
+        RemoteStoreTransport::connect(origin.port(), "sync"),
+        layout.clone(),
+        views[0].clone(),
+        6,
+    )?
+    .with_shards(shards);
+    for (step, view) in views.iter().enumerate().skip(1) {
+        publisher.publish(step as u64, view)?;
+    }
+    let final_view = views.last().unwrap();
+
+    // sync a batch of cold leaves sequentially, aggregating the
+    // store-plane counters: (hits, misses, origin_fetches)
+    let run_leaves = |ports: Vec<u16>| -> Result<(u64, u64, u64)> {
+        let (mut hits, mut misses, mut fetched) = (0u64, 0u64, 0u64);
+        for p in ports {
+            let mut c =
+                Consumer::over(RemoteStoreTransport::connect(p, "sync"), layout.clone());
+            let s = c.synchronize()?;
+            anyhow::ensure!(
+                s.verified && c.weights.as_ref().unwrap() == final_view,
+                "bit-identity broken on the store plane"
+            );
+            let counters = c.transport.counters();
+            hits += counters.cache_hits;
+            misses += counters.cache_misses;
+            fetched += counters.origin_fetches;
+        }
+        Ok((hits, misses, fetched))
+    };
+    let hit_rate = |h: u64, m: u64| 100.0 * h as f64 / (h + m).max(1) as f64;
+
+    // star: every cold leaf pulls straight from the origin
+    let star0 = origin.stats().bytes_served.load(Ordering::Relaxed);
+    let (star_h, star_m, star_f) = run_leaves(vec![origin.port(); leaves])?;
+    let star_bytes = origin.stats().bytes_served.load(Ordering::Relaxed) - star0;
+
+    // 2-level cached tree: the same leaves split across two hops
+    let (hop_a, cache_a) = caching_hop(origin.port(), RetentionPolicy::default(), None)?;
+    let (hop_b, cache_b) = caching_hop(origin.port(), RetentionPolicy::default(), None)?;
+    let tree0 = origin.stats().bytes_served.load(Ordering::Relaxed);
+    let tree_ports: Vec<u16> = (0..leaves)
+        .map(|i| if i % 2 == 0 { hop_a.port() } else { hop_b.port() })
+        .collect();
+    let (tree_h, tree_m, tree_f) = run_leaves(tree_ports)?;
+    let tree_bytes = origin.stats().bytes_served.load(Ordering::Relaxed) - tree0;
+    let tree_nm = cache_a.counters.not_modified.load(Ordering::Relaxed)
+        + cache_b.counters.not_modified.load(Ordering::Relaxed);
+
+    let results = results_dir();
+    let mut w = CsvWriter::create(
+        &results.join("store_cache.csv"),
+        &[
+            "topology",
+            "leaves",
+            "origin_bytes",
+            "cache_hits",
+            "cache_misses",
+            "origin_fetches",
+            "conditional_not_modified",
+            "hit_rate_pct",
+        ],
+    )?;
+    let mut rows = Vec::new();
+    for (label, bytes, h, m, f, nm) in [
+        ("store-star", star_bytes, star_h, star_m, star_f, 0u64),
+        ("store-tree2", tree_bytes, tree_h, tree_m, tree_f, tree_nm),
+    ] {
+        w.row(&[
+            label.to_string(),
+            leaves.to_string(),
+            bytes.to_string(),
+            h.to_string(),
+            m.to_string(),
+            f.to_string(),
+            nm.to_string(),
+            format!("{:.1}", hit_rate(h, m)),
+        ])?;
+        rows.push(vec![
+            label.to_string(),
+            leaves.to_string(),
+            fmt_bytes(bytes),
+            h.to_string(),
+            m.to_string(),
+            f.to_string(),
+            nm.to_string(),
+            format!("{:.1}%", hit_rate(h, m)),
+        ]);
+    }
+    print_table(
+        &format!(
+            "Store plane: origin egress for {} cold leaves, {}-step stream ({} params, {} shards)",
+            leaves, steps, n, shards
+        ),
+        &[
+            "topology",
+            "leaves",
+            "origin bytes",
+            "hits",
+            "misses",
+            "origin fetches",
+            "not-modified",
+            "hit rate",
+        ],
+        &rows,
+    );
+    println!("  -> {}", results.join("store_cache.csv").display());
+    anyhow::ensure!(
+        tree_bytes < star_bytes,
+        "caching hops must cut origin egress (tree {} vs star {})",
+        tree_bytes,
+        star_bytes
     );
     std::fs::remove_dir_all(store.root()).ok();
     Ok(())

@@ -208,6 +208,10 @@ impl TransportMeter {
                 "gave_up",
                 "nack_suppressed",
                 "faults_injected",
+                "cache_hits",
+                "cache_misses",
+                "origin_fetches",
+                "conditional_not_modified",
                 "shard_refetches",
                 "slow_paths",
                 "reparents",
@@ -231,6 +235,10 @@ impl TransportMeter {
                 r.counters.gave_up.to_string(),
                 r.counters.nack_suppressed.to_string(),
                 r.counters.faults_injected.to_string(),
+                r.counters.cache_hits.to_string(),
+                r.counters.cache_misses.to_string(),
+                r.counters.origin_fetches.to_string(),
+                r.counters.conditional_not_modified.to_string(),
                 r.shard_refetches.to_string(),
                 r.slow_paths.to_string(),
                 r.counters.reparents.to_string(),
@@ -318,6 +326,10 @@ mod tests {
                 nack_suppressed: 4,
                 reparents: 3,
                 epoch: 9,
+                cache_hits: 5,
+                cache_misses: 2,
+                origin_fetches: 2,
+                conditional_not_modified: 6,
                 ..Default::default()
             },
         );
@@ -347,9 +359,17 @@ mod tests {
         // retries=7, gave_up=1, nack_suppressed=4 sit between
         // nacks_unserviceable and faults_injected
         assert!(os.contains(",7,1,4,0,"), "retry columns must round-trip: {}", os);
+        // cache_hits=5, cache_misses=2, origin_fetches=2,
+        // conditional_not_modified=6 sit between faults_injected and
+        // shard_refetches
+        assert!(os.contains(",0,5,2,2,6,0,"), "cache columns must round-trip: {}", os);
         assert!(
             text.lines().next().unwrap().contains(",retries,gave_up,nack_suppressed,"),
             "header must carry the retry columns"
+        );
+        assert!(
+            text.lines().next().unwrap().contains(",cache_hits,cache_misses,origin_fetches,conditional_not_modified,"),
+            "header must carry the store-plane cache columns"
         );
         std::fs::remove_dir_all(&dir).unwrap();
     }

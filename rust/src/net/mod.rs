@@ -12,12 +12,17 @@
 //! module injects seeded wire-level faults (partial writes, mid-frame
 //! resets, corruption, latency, one-way partitions) under any of those
 //! layers, so the recovery machinery is exercised where commodity
-//! networks actually fail.
+//! networks actually fail. The [`store`] module is the store plane: a
+//! networked GET/PUT/LIST/STAT object server over the same framing, a
+//! `RemoteStoreTransport` that runs the sync protocol against it, and
+//! `CachingStore` hops that turn a tree of cold consumers into
+//! O(depth) origin reads — a CDN for weight patches.
 
 pub mod chaos;
 pub mod control;
 pub mod node;
 pub mod relay;
+pub mod store;
 pub mod tcp;
 pub mod transport;
 

@@ -1,0 +1,1422 @@
+//! The store plane: a networked object store behind [`SyncTransport`]
+//! (paper §E.1's "S3-compatible object storage", made real over our own
+//! wire — the image has no crates.io, so GET/PUT/LIST/STAT ride the
+//! existing `net::tcp` framing as new frame kinds).
+//!
+//! Layers, bottom up:
+//!
+//! * [`ObjectApi`] — the store verbs every layer speaks: ranged +
+//!   conditional GET, PUT, LIST, STAT. Implemented by the local
+//!   [`DirectStore`], the networked [`StoreClient`], and the
+//!   [`CachingStore`] decorator, so a serving stack composes freely
+//!   (an origin serves a `DirectStore`; a mid-tier hop serves a
+//!   `CachingStore<StoreClient>` pointed at the origin).
+//! * [`StoreServer`] — serves any `ObjectApi` over TCP. Connections are
+//!   wrapped in the chaos [`Wire`], so seeded wire faults exercise the
+//!   whole plane. Every request/reply payload carries a trailing
+//!   FNV-1a checksum: a flipped wire bit turns into a retryable error
+//!   instead of silently poisoning a key or an inventory listing
+//!   (object *bodies* already verify end to end via container hashes).
+//! * [`StoreClient`] — one persistent connection, a [`RetryPolicy`]
+//!   behind every RPC (reconnect on io error / checksum mismatch /
+//!   RETRY status), and a read timeout so a chaos partition that
+//!   swallows a reply frame surfaces as a retry, not a hang.
+//! * [`CachingStore`] — the CDN hop. **Coherence rule:** an object
+//!   under a content address (`*.bin` data objects — their ETag is the
+//!   container's hash-tree root) is immutable and served from cache
+//!   without revalidation; ready markers are mutable (a restarted
+//!   publisher may rewrite a step's marker under a bumped generation)
+//!   and revalidate against the origin with a conditional GET on every
+//!   read. The cache is bounded by the same [`retention::plan`] the
+//!   store plane retires objects with.
+//! * [`RemoteStoreTransport`] — [`SyncTransport`] over any
+//!   `ObjectApi`, with the object-store key scheme; `latest_ready()`
+//!   is exactly one LIST parsed by [`retention::parse_inventory`].
+//!
+//! Concurrent cold misses on one caching hop may each reach the origin
+//! (no single-flight dedup, like a CDN without request coalescing);
+//! origin reads per object are bounded by the hop count times the
+//! concurrency, not by the leaf count.
+
+use crate::net::chaos::{ChaosConfig, Wire};
+use crate::net::tcp::{self, kind, Frame};
+use crate::net::transport::{
+    anchor_key, anchor_ready_key, delta_key, delta_ready_key, delta_shard_key,
+    parse_sharded_marker, split_generation, FrameId, MarkerId, StepData, SyncTransport,
+    TransportCounters,
+};
+use crate::storage::retention::{self, RetentionPolicy};
+use crate::storage::ObjectStore;
+use crate::util::retry::RetryPolicy;
+use anyhow::{bail, Context, Result};
+use std::collections::{BTreeSet, HashMap, HashSet};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Reply status codes (the store plane's HTTP-ish status line).
+pub mod status {
+    pub const OK: u8 = 0;
+    pub const NOT_FOUND: u8 = 1;
+    /// Conditional GET: the object's ETag matches `if_none_match`.
+    pub const NOT_MODIFIED: u8 = 2;
+    /// Request failed for a reason a resend won't fix.
+    pub const ERR: u8 = 3;
+    /// The request envelope arrived damaged (checksum mismatch) — the
+    /// client should resend the same request.
+    pub const RETRY: u8 = 4;
+}
+
+/// Reply flag bit: the body was served from a caching hop without
+/// touching its origin.
+pub const FLAG_FROM_CACHE: u8 = 1;
+
+// ------------------------------------------------------------ wire codec
+
+fn fnv1a(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811C_9DC5;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+/// Append the payload checksum (every store frame carries one).
+fn seal(mut payload: Vec<u8>) -> Vec<u8> {
+    let c = fnv1a(&payload);
+    payload.extend_from_slice(&c.to_le_bytes());
+    payload
+}
+
+/// Verify and strip the trailing checksum.
+fn unseal(payload: &[u8]) -> Result<&[u8]> {
+    if payload.len() < 4 {
+        bail!("store payload too short ({} bytes)", payload.len());
+    }
+    let (body, tail) = payload.split_at(payload.len() - 4);
+    let want = u32::from_le_bytes(tail.try_into().unwrap());
+    if fnv1a(body) != want {
+        bail!("store payload checksum mismatch");
+    }
+    Ok(body)
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    out.extend_from_slice(&(s.len() as u16).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn read_str<'a>(b: &'a [u8], o: &mut usize) -> Result<&'a str> {
+    if b.len() < *o + 2 {
+        bail!("store payload truncated at string length");
+    }
+    let n = u16::from_le_bytes(b[*o..*o + 2].try_into().unwrap()) as usize;
+    *o += 2;
+    if b.len() < *o + n {
+        bail!("store payload truncated at string body");
+    }
+    let s = std::str::from_utf8(&b[*o..*o + n]).context("store string is not utf8")?;
+    *o += n;
+    Ok(s)
+}
+
+fn read_u64(b: &[u8], o: &mut usize) -> Result<u64> {
+    if b.len() < *o + 8 {
+        bail!("store payload truncated at u64");
+    }
+    let v = u64::from_le_bytes(b[*o..*o + 8].try_into().unwrap());
+    *o += 8;
+    Ok(v)
+}
+
+/// GET request payload: key, byte range (`(0, u64::MAX)` = whole
+/// object), `if_none_match` ETag (empty = unconditional).
+pub fn encode_get(key: &str, range: Option<(u64, u64)>, if_none_match: Option<&str>) -> Vec<u8> {
+    let mut p = Vec::with_capacity(key.len() + 24);
+    put_str(&mut p, key);
+    let (off, len) = range.unwrap_or((0, u64::MAX));
+    p.extend_from_slice(&off.to_le_bytes());
+    p.extend_from_slice(&len.to_le_bytes());
+    put_str(&mut p, if_none_match.unwrap_or(""));
+    seal(p)
+}
+
+pub fn parse_get(payload: &[u8]) -> Result<(String, Option<(u64, u64)>, Option<String>)> {
+    let b = unseal(payload)?;
+    let mut o = 0;
+    let key = read_str(b, &mut o)?.to_string();
+    let off = read_u64(b, &mut o)?;
+    let len = read_u64(b, &mut o)?;
+    let etag = read_str(b, &mut o)?;
+    let range = if off == 0 && len == u64::MAX { None } else { Some((off, len)) };
+    let inm = if etag.is_empty() { None } else { Some(etag.to_string()) };
+    Ok((key, range, inm))
+}
+
+/// PUT request payload: key + body.
+pub fn encode_put(key: &str, bytes: &[u8]) -> Vec<u8> {
+    let mut p = Vec::with_capacity(key.len() + bytes.len() + 8);
+    put_str(&mut p, key);
+    p.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+    p.extend_from_slice(bytes);
+    seal(p)
+}
+
+pub fn parse_put(payload: &[u8]) -> Result<(String, Vec<u8>)> {
+    let b = unseal(payload)?;
+    let mut o = 0;
+    let key = read_str(b, &mut o)?.to_string();
+    if b.len() < o + 4 {
+        bail!("store PUT payload truncated at body length");
+    }
+    let n = u32::from_le_bytes(b[o..o + 4].try_into().unwrap()) as usize;
+    o += 4;
+    if b.len() != o + n {
+        bail!("store PUT body length {} != declared {}", b.len() - o, n);
+    }
+    Ok((key, b[o..].to_vec()))
+}
+
+/// LIST / STAT request payload: one string (prefix / key).
+pub fn encode_key(key: &str) -> Vec<u8> {
+    let mut p = Vec::with_capacity(key.len() + 2);
+    put_str(&mut p, key);
+    seal(p)
+}
+
+pub fn parse_key(payload: &[u8]) -> Result<String> {
+    let b = unseal(payload)?;
+    let mut o = 0;
+    let key = read_str(b, &mut o)?.to_string();
+    if o != b.len() {
+        bail!("trailing bytes in store key payload");
+    }
+    Ok(key)
+}
+
+/// One STORE_REPLY: status + flags + ETag + body (ERR/RETRY: utf8
+/// message; LIST: newline-joined keys; STAT: size u64 LE).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Reply {
+    pub status: u8,
+    pub flags: u8,
+    pub etag: String,
+    pub body: Vec<u8>,
+}
+
+impl Reply {
+    pub fn ok(etag: String, body: Vec<u8>, from_cache: bool) -> Reply {
+        let flags = if from_cache { FLAG_FROM_CACHE } else { 0 };
+        Reply { status: status::OK, flags, etag, body }
+    }
+
+    pub fn not_found() -> Reply {
+        Reply { status: status::NOT_FOUND, flags: 0, etag: String::new(), body: Vec::new() }
+    }
+
+    pub fn not_modified(etag: String, from_cache: bool) -> Reply {
+        let flags = if from_cache { FLAG_FROM_CACHE } else { 0 };
+        Reply { status: status::NOT_MODIFIED, flags, etag, body: Vec::new() }
+    }
+
+    fn failure(status: u8, msg: String) -> Reply {
+        Reply { status, flags: 0, etag: String::new(), body: msg.into_bytes() }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut p = Vec::with_capacity(self.etag.len() + self.body.len() + 12);
+        p.push(self.status);
+        p.push(self.flags);
+        put_str(&mut p, &self.etag);
+        p.extend_from_slice(&(self.body.len() as u32).to_le_bytes());
+        p.extend_from_slice(&self.body);
+        seal(p)
+    }
+
+    pub fn parse(payload: &[u8]) -> Result<Reply> {
+        let b = unseal(payload)?;
+        if b.len() < 2 {
+            bail!("store reply too short");
+        }
+        let (status, flags) = (b[0], b[1]);
+        let mut o = 2;
+        let etag = read_str(b, &mut o)?.to_string();
+        if b.len() < o + 4 {
+            bail!("store reply truncated at body length");
+        }
+        let n = u32::from_le_bytes(b[o..o + 4].try_into().unwrap()) as usize;
+        o += 4;
+        if b.len() != o + n {
+            bail!("store reply body length {} != declared {}", b.len() - o, n);
+        }
+        Ok(Reply { status, flags, etag, body: b[o..].to_vec() })
+    }
+}
+
+// ------------------------------------------------------------- ObjectApi
+
+/// Outcome of an [`ObjectApi::get`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum GetOutcome {
+    /// The (possibly range-sliced) body, its ETag, and whether a
+    /// caching hop answered without touching its origin.
+    Body { bytes: Vec<u8>, etag: String, from_cache: bool },
+    /// Conditional GET: the caller's ETag still names the current
+    /// content.
+    NotModified { etag: String },
+    Missing,
+}
+
+/// The store verbs (HTTP-ish GET/PUT/LIST/STAT) every layer of the
+/// store plane speaks. ETags are content addresses: the v3 container's
+/// hash-tree root when the object is a patch container ([`object_etag`]),
+/// SHA-256 of the bytes otherwise.
+pub trait ObjectApi: Send + Sync {
+    /// Ranged + conditional read. `range` slices the body *after* the
+    /// ETag check (the ETag always names the whole object).
+    fn get(
+        &self,
+        key: &str,
+        range: Option<(u64, u64)>,
+        if_none_match: Option<&str>,
+    ) -> Result<GetOutcome>;
+
+    fn put(&self, key: &str, bytes: &[u8]) -> Result<()>;
+
+    /// Keys under `prefix`, sorted.
+    fn list(&self, prefix: &str) -> Result<Vec<String>>;
+
+    /// `(size, etag)` of an object, `None` if absent.
+    fn stat(&self, key: &str) -> Result<Option<(u64, String)>>;
+
+    /// `(retries, gave_up)` spent by networked layers underneath (0 for
+    /// local stacks) — surfaced into [`TransportCounters`].
+    fn net_retries(&self) -> (u64, u64) {
+        (0, 0)
+    }
+
+    /// Conditional-GET revalidations answered NOT_MODIFIED by caching
+    /// layers in this stack (0 when no cache is mounted).
+    fn not_modified_total(&self) -> u64 {
+        0
+    }
+}
+
+impl<T: ObjectApi + ?Sized> ObjectApi for Arc<T> {
+    fn get(
+        &self,
+        key: &str,
+        range: Option<(u64, u64)>,
+        if_none_match: Option<&str>,
+    ) -> Result<GetOutcome> {
+        (**self).get(key, range, if_none_match)
+    }
+    fn put(&self, key: &str, bytes: &[u8]) -> Result<()> {
+        (**self).put(key, bytes)
+    }
+    fn list(&self, prefix: &str) -> Result<Vec<String>> {
+        (**self).list(prefix)
+    }
+    fn stat(&self, key: &str) -> Result<Option<(u64, String)>> {
+        (**self).stat(key)
+    }
+    fn net_retries(&self) -> (u64, u64) {
+        (**self).net_retries()
+    }
+    fn not_modified_total(&self) -> u64 {
+        (**self).not_modified_total()
+    }
+}
+
+/// ETag of object bytes: the container's committed hash-tree root when
+/// the bytes parse as a patch container header (the content address the
+/// consumer's verification already pins), SHA-256 of the bytes
+/// otherwise (anchors, markers, arbitrary objects).
+pub fn object_etag(bytes: &[u8]) -> String {
+    container_root(bytes).unwrap_or_else(|| crate::util::sha256_hex(bytes))
+}
+
+/// The 32-byte result-hash field of a container header, as hex. `None`
+/// when the bytes are not a container or the field is zero (pseudo-
+/// gradient payloads carry no commitment).
+fn container_root(buf: &[u8]) -> Option<String> {
+    use crate::sparse::container as c;
+    if buf.len() < 81 || buf[0..4] != c::MAGIC {
+        return None;
+    }
+    // header: magic 4 + version/tags 5 + five u64s = 49, then +8 for
+    // v2's chunk_elems, then +56 for v3's shard fields; the 32-byte
+    // result hash follows (see container::decode)
+    let off = match buf[4] {
+        c::VERSION_V1 => 49,
+        c::VERSION => 57,
+        c::VERSION_V3 => 113,
+        _ => return None,
+    };
+    if buf.len() < off + 32 {
+        return None;
+    }
+    let h = &buf[off..off + 32];
+    if h.iter().all(|&b| b == 0) {
+        return None;
+    }
+    Some(crate::util::hex(h))
+}
+
+fn slice_range(bytes: &[u8], range: Option<(u64, u64)>) -> Vec<u8> {
+    match range {
+        None => bytes.to_vec(),
+        Some((off, len)) => {
+            let start = (off as usize).min(bytes.len());
+            let end = start.saturating_add(len.min(usize::MAX as u64) as usize).min(bytes.len());
+            bytes[start..end].to_vec()
+        }
+    }
+}
+
+// ----------------------------------------------------------- DirectStore
+
+/// [`ObjectApi`] over a local [`ObjectStore`] — what an origin server
+/// serves.
+#[derive(Clone)]
+pub struct DirectStore {
+    pub store: ObjectStore,
+}
+
+impl DirectStore {
+    pub fn new(store: ObjectStore) -> DirectStore {
+        DirectStore { store }
+    }
+}
+
+impl ObjectApi for DirectStore {
+    fn get(
+        &self,
+        key: &str,
+        range: Option<(u64, u64)>,
+        if_none_match: Option<&str>,
+    ) -> Result<GetOutcome> {
+        if !self.store.exists(key) {
+            return Ok(GetOutcome::Missing);
+        }
+        let bytes = self.store.get(key)?;
+        let etag = object_etag(&bytes);
+        if if_none_match == Some(etag.as_str()) {
+            return Ok(GetOutcome::NotModified { etag });
+        }
+        Ok(GetOutcome::Body { bytes: slice_range(&bytes, range), etag, from_cache: false })
+    }
+
+    fn put(&self, key: &str, bytes: &[u8]) -> Result<()> {
+        self.store.put(key, bytes)
+    }
+
+    fn list(&self, prefix: &str) -> Result<Vec<String>> {
+        self.store.list(prefix)
+    }
+
+    fn stat(&self, key: &str) -> Result<Option<(u64, String)>> {
+        if !self.store.exists(key) {
+            return Ok(None);
+        }
+        let bytes = self.store.get(key)?;
+        Ok(Some((bytes.len() as u64, object_etag(&bytes))))
+    }
+}
+
+// ----------------------------------------------------------- StoreServer
+
+/// Per-server operation counters, including per-key body-serve counts —
+/// the accounting the "origin serves each object O(1) times" assertion
+/// reads.
+#[derive(Default)]
+pub struct StoreStats {
+    pub gets: AtomicU64,
+    pub puts: AtomicU64,
+    pub lists: AtomicU64,
+    pub stat_ops: AtomicU64,
+    pub not_modified: AtomicU64,
+    pub bytes_served: AtomicU64,
+    body_serves: Mutex<HashMap<String, u64>>,
+}
+
+impl StoreStats {
+    fn note_serve(&self, key: &str, bytes: usize) {
+        self.bytes_served.fetch_add(bytes as u64, Ordering::Relaxed);
+        *self.body_serves.lock().unwrap().entry(key.to_string()).or_insert(0) += 1;
+    }
+
+    /// Times this server sent `key`'s body (NOT_MODIFIED replies don't
+    /// count — no body moved).
+    pub fn body_serves_of(&self, key: &str) -> u64 {
+        self.body_serves.lock().unwrap().get(key).copied().unwrap_or(0)
+    }
+
+    /// Max body serves over keys ending with `suffix` (e.g. `".bin"`
+    /// for "no data object left the origin more than N times").
+    pub fn max_body_serves(&self, suffix: &str) -> u64 {
+        self.body_serves
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(k, _)| k.ends_with(suffix))
+            .map(|(_, &n)| n)
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// Serves any [`ObjectApi`] over the tcp framing; one thread per
+/// connection, chaos [`Wire`] under the framing when configured.
+pub struct StoreServer {
+    port: u16,
+    stats: Arc<StoreStats>,
+    stop: Arc<AtomicBool>,
+}
+
+impl StoreServer {
+    pub fn serve(api: Arc<dyn ObjectApi>, chaos: Option<ChaosConfig>) -> Result<StoreServer> {
+        let (listener, port) = tcp::listen_local()?;
+        let stats = Arc::new(StoreStats::default());
+        let stop = Arc::new(AtomicBool::new(false));
+        let (stats2, stop2) = (stats.clone(), stop.clone());
+        std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                if stop2.load(Ordering::Relaxed) {
+                    return;
+                }
+                let stream = match conn {
+                    Ok(s) => s,
+                    Err(_) => continue,
+                };
+                let _ = stream.set_nodelay(true);
+                let wire = Wire::wrap(stream, chaos.as_ref());
+                let api = api.clone();
+                let stats = stats2.clone();
+                std::thread::spawn(move || serve_conn(wire, api, stats));
+            }
+        });
+        Ok(StoreServer { port, stats, stop })
+    }
+
+    pub fn port(&self) -> u16 {
+        self.port
+    }
+
+    pub fn stats(&self) -> Arc<StoreStats> {
+        self.stats.clone()
+    }
+
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // unblock the accept loop
+        let _ = TcpStream::connect(("127.0.0.1", self.port));
+    }
+}
+
+impl Drop for StoreServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn serve_conn(mut wire: Wire, api: Arc<dyn ObjectApi>, stats: Arc<StoreStats>) {
+    loop {
+        let req = match tcp::read_frame(&mut wire) {
+            Ok(f) => f,
+            Err(_) => return,
+        };
+        if req.kind == kind::CLOSE {
+            return;
+        }
+        let reply = handle_request(&api, &stats, &req);
+        let frame = Frame { kind: kind::STORE_REPLY, payload: reply.encode() };
+        if tcp::write_frame(&mut wire, &frame).is_err() {
+            return;
+        }
+    }
+}
+
+fn handle_request(api: &Arc<dyn ObjectApi>, stats: &Arc<StoreStats>, req: &Frame) -> Reply {
+    // a damaged request envelope asks for a resend; anything else that
+    // fails is a terminal ERR with the reason in the body
+    if unseal(&req.payload).is_err() {
+        return Reply::failure(status::RETRY, "request checksum mismatch".to_string());
+    }
+    let out = (|| -> Result<Reply> {
+        match req.kind {
+            kind::STORE_GET => {
+                let (key, range, inm) = parse_get(&req.payload)?;
+                stats.gets.fetch_add(1, Ordering::Relaxed);
+                Ok(match api.get(&key, range, inm.as_deref())? {
+                    GetOutcome::Body { bytes, etag, from_cache } => {
+                        stats.note_serve(&key, bytes.len());
+                        Reply::ok(etag, bytes, from_cache)
+                    }
+                    GetOutcome::NotModified { etag } => {
+                        stats.not_modified.fetch_add(1, Ordering::Relaxed);
+                        Reply::not_modified(etag, false)
+                    }
+                    GetOutcome::Missing => Reply::not_found(),
+                })
+            }
+            kind::STORE_PUT => {
+                let (key, bytes) = parse_put(&req.payload)?;
+                api.put(&key, &bytes)?;
+                stats.puts.fetch_add(1, Ordering::Relaxed);
+                Ok(Reply::ok(String::new(), Vec::new(), false))
+            }
+            kind::STORE_LIST => {
+                let prefix = parse_key(&req.payload)?;
+                let keys = api.list(&prefix)?;
+                stats.lists.fetch_add(1, Ordering::Relaxed);
+                Ok(Reply::ok(String::new(), keys.join("\n").into_bytes(), false))
+            }
+            kind::STORE_STAT => {
+                let key = parse_key(&req.payload)?;
+                stats.stat_ops.fetch_add(1, Ordering::Relaxed);
+                Ok(match api.stat(&key)? {
+                    Some((size, etag)) => Reply::ok(etag, size.to_le_bytes().to_vec(), false),
+                    None => Reply::not_found(),
+                })
+            }
+            k => bail!("unknown store frame kind {}", k),
+        }
+    })();
+    out.unwrap_or_else(|e| Reply::failure(status::ERR, format!("{:#}", e)))
+}
+
+// ----------------------------------------------------------- StoreClient
+
+/// Networked [`ObjectApi`]: one persistent connection to a
+/// [`StoreServer`], every RPC behind a [`RetryPolicy`] (reconnect and
+/// resend on io errors, reply-checksum mismatches, and RETRY statuses
+/// — all store verbs are idempotent, so a resend is always safe).
+pub struct StoreClient {
+    port: u16,
+    chaos: Option<ChaosConfig>,
+    retry: RetryPolicy,
+    read_timeout: Duration,
+    conn: Mutex<Option<Wire>>,
+    retries: AtomicU64,
+    gave_up: AtomicU64,
+}
+
+impl StoreClient {
+    /// Client for the store server on a local `port`. Connects lazily.
+    pub fn new(port: u16) -> StoreClient {
+        StoreClient {
+            port,
+            chaos: None,
+            retry: RetryPolicy::new(
+                Duration::from_millis(25),
+                2.0,
+                Duration::from_millis(500),
+                Duration::from_secs(10),
+            ),
+            read_timeout: Duration::from_secs(2),
+            conn: Mutex::new(None),
+            retries: AtomicU64::new(0),
+            gave_up: AtomicU64::new(0),
+        }
+    }
+
+    /// Wrap this client's connections in a chaos domain (client-side
+    /// wire faults; the server wraps its own side).
+    pub fn with_chaos(mut self, chaos: Option<ChaosConfig>) -> StoreClient {
+        self.chaos = chaos;
+        self
+    }
+
+    pub fn with_retry(mut self, retry: RetryPolicy) -> StoreClient {
+        self.retry = retry;
+        self
+    }
+
+    /// Read timeout per RPC — a swallowed reply frame (chaos partition)
+    /// becomes a retryable error instead of a hang.
+    pub fn with_read_timeout(mut self, d: Duration) -> StoreClient {
+        self.read_timeout = d;
+        self
+    }
+
+    fn attempt(&self, req: &Frame) -> Result<Reply> {
+        let mut guard = self.conn.lock().unwrap();
+        if guard.is_none() {
+            let stream = tcp::connect_local(self.port)?;
+            let wire = Wire::wrap(stream, self.chaos.as_ref());
+            wire.set_read_timeout(Some(self.read_timeout))?;
+            *guard = Some(wire);
+        }
+        let wire = guard.as_mut().unwrap();
+        tcp::write_frame(wire, req)?;
+        let frame = tcp::read_frame(wire)?;
+        if frame.kind != kind::STORE_REPLY {
+            bail!("unexpected store reply kind {}", frame.kind);
+        }
+        let reply = Reply::parse(&frame.payload)?;
+        if reply.status == status::RETRY {
+            bail!("server asked for resend: {}", String::from_utf8_lossy(&reply.body));
+        }
+        Ok(reply)
+    }
+
+    fn rpc(&self, req: &Frame) -> Result<Reply> {
+        let mut retry = self.retry.start();
+        loop {
+            match self.attempt(req) {
+                Ok(r) => return Ok(r),
+                Err(e) => {
+                    // the exchange may be desynced (late reply, torn
+                    // frame) — drop the connection and redial
+                    *self.conn.lock().unwrap() = None;
+                    match retry.next_delay() {
+                        Some(d) => {
+                            self.retries.fetch_add(1, Ordering::Relaxed);
+                            std::thread::sleep(d);
+                        }
+                        None => {
+                            self.gave_up.fetch_add(1, Ordering::Relaxed);
+                            return Err(e).context("store rpc retry budget drained");
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl ObjectApi for StoreClient {
+    fn get(
+        &self,
+        key: &str,
+        range: Option<(u64, u64)>,
+        if_none_match: Option<&str>,
+    ) -> Result<GetOutcome> {
+        let req = Frame { kind: kind::STORE_GET, payload: encode_get(key, range, if_none_match) };
+        let r = self.rpc(&req)?;
+        match r.status {
+            status::OK => Ok(GetOutcome::Body {
+                bytes: r.body,
+                etag: r.etag,
+                from_cache: r.flags & FLAG_FROM_CACHE != 0,
+            }),
+            status::NOT_FOUND => Ok(GetOutcome::Missing),
+            status::NOT_MODIFIED => Ok(GetOutcome::NotModified { etag: r.etag }),
+            _ => bail!("store GET '{}' failed: {}", key, String::from_utf8_lossy(&r.body)),
+        }
+    }
+
+    fn put(&self, key: &str, bytes: &[u8]) -> Result<()> {
+        let req = Frame { kind: kind::STORE_PUT, payload: encode_put(key, bytes) };
+        let r = self.rpc(&req)?;
+        if r.status != status::OK {
+            bail!("store PUT '{}' failed: {}", key, String::from_utf8_lossy(&r.body));
+        }
+        Ok(())
+    }
+
+    fn list(&self, prefix: &str) -> Result<Vec<String>> {
+        let req = Frame { kind: kind::STORE_LIST, payload: encode_key(prefix) };
+        let r = self.rpc(&req)?;
+        if r.status != status::OK {
+            bail!("store LIST '{}' failed: {}", prefix, String::from_utf8_lossy(&r.body));
+        }
+        let text = String::from_utf8(r.body).context("store LIST body is not utf8")?;
+        Ok(text.split('\n').filter(|s| !s.is_empty()).map(str::to_string).collect())
+    }
+
+    fn stat(&self, key: &str) -> Result<Option<(u64, String)>> {
+        let req = Frame { kind: kind::STORE_STAT, payload: encode_key(key) };
+        let r = self.rpc(&req)?;
+        match r.status {
+            status::OK => {
+                if r.body.len() != 8 {
+                    bail!("store STAT body length {}", r.body.len());
+                }
+                Ok(Some((u64::from_le_bytes(r.body[..].try_into().unwrap()), r.etag)))
+            }
+            status::NOT_FOUND => Ok(None),
+            _ => bail!("store STAT '{}' failed: {}", key, String::from_utf8_lossy(&r.body)),
+        }
+    }
+
+    fn net_retries(&self) -> (u64, u64) {
+        (self.retries.load(Ordering::Relaxed), self.gave_up.load(Ordering::Relaxed))
+    }
+}
+
+// ---------------------------------------------------------- CachingStore
+
+/// Cache-layer counters (one caching hop's view; the `paper cache`
+/// table reads these directly).
+#[derive(Default)]
+pub struct CacheCounters {
+    pub hits: AtomicU64,
+    pub misses: AtomicU64,
+    pub origin_fetches: AtomicU64,
+    pub not_modified: AtomicU64,
+    pub evictions: AtomicU64,
+}
+
+struct CacheEntry {
+    body: Vec<u8>,
+    etag: String,
+}
+
+/// The caching hop. Data objects (`*.bin`) are immutable under their
+/// content address and served from cache without revalidation; ready
+/// markers revalidate against the origin with a conditional GET on
+/// every read (the coherence rule — see module docs). Bounded by the
+/// retention plan over cached steps.
+pub struct CachingStore<U: ObjectApi> {
+    origin: U,
+    policy: RetentionPolicy,
+    cache: Mutex<HashMap<String, CacheEntry>>,
+    pub counters: Arc<CacheCounters>,
+}
+
+/// True for objects that are immutable under their content address.
+fn is_data_key(key: &str) -> bool {
+    key.ends_with(".bin")
+}
+
+/// `(is_anchor, step)` of any store-plane key (data object or ready
+/// marker), `None` for foreign keys.
+fn cached_step(key: &str) -> Option<(bool, u64)> {
+    let base = key.rsplit('/').next().unwrap_or(key);
+    let (anchor, rest) = if let Some(r) = base.strip_prefix("anchor_ready_") {
+        (true, r)
+    } else if let Some(r) = base.strip_prefix("delta_ready_") {
+        (false, r)
+    } else if let Some(r) = base.strip_prefix("anchor_") {
+        (true, r)
+    } else if let Some(r) = base.strip_prefix("delta_") {
+        (false, r)
+    } else {
+        return None;
+    };
+    rest.split('.').next()?.parse().ok().map(|s| (anchor, s))
+}
+
+impl<U: ObjectApi> CachingStore<U> {
+    pub fn new(origin: U, policy: RetentionPolicy) -> CachingStore<U> {
+        CachingStore {
+            origin,
+            policy,
+            cache: Mutex::new(HashMap::new()),
+            counters: Arc::new(CacheCounters::default()),
+        }
+    }
+
+    pub fn origin(&self) -> &U {
+        &self.origin
+    }
+
+    /// Objects currently cached.
+    pub fn cached_objects(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    fn serve(&self, entry: &CacheEntry, range: Option<(u64, u64)>, inm: Option<&str>, from_cache: bool) -> GetOutcome {
+        if inm == Some(entry.etag.as_str()) {
+            return GetOutcome::NotModified { etag: entry.etag.clone() };
+        }
+        GetOutcome::Body {
+            bytes: slice_range(&entry.body, range),
+            etag: entry.etag.clone(),
+            from_cache,
+        }
+    }
+
+    fn insert(&self, key: &str, body: Vec<u8>, etag: String) {
+        let mut cache = self.cache.lock().unwrap();
+        cache.insert(key.to_string(), CacheEntry { body, etag });
+        self.evict(&mut cache);
+    }
+
+    /// Drop cached steps outside the retention plan (the cache never
+    /// holds more steps than the store itself would retain).
+    fn evict(&self, cache: &mut HashMap<String, CacheEntry>) {
+        let mut delta_steps: BTreeSet<u64> = BTreeSet::new();
+        let mut anchor_steps: BTreeSet<u64> = BTreeSet::new();
+        for key in cache.keys() {
+            match cached_step(key) {
+                Some((true, s)) => {
+                    anchor_steps.insert(s);
+                }
+                Some((false, s)) => {
+                    delta_steps.insert(s);
+                }
+                None => {}
+            }
+        }
+        if delta_steps.len() <= self.policy.max_deltas
+            && anchor_steps.len() <= self.policy.max_anchors
+        {
+            return;
+        }
+        let inv = retention::Inventory {
+            delta_steps: delta_steps.into_iter().collect(),
+            anchor_steps: anchor_steps.into_iter().collect(),
+        };
+        let (dd, da) = retention::plan(&inv, self.policy);
+        let dd: HashSet<u64> = dd.into_iter().collect();
+        let da: HashSet<u64> = da.into_iter().collect();
+        let before = cache.len();
+        cache.retain(|k, _| match cached_step(k) {
+            Some((true, s)) => !da.contains(&s),
+            Some((false, s)) => !dd.contains(&s),
+            None => true,
+        });
+        self.counters.evictions.fetch_add((before - cache.len()) as u64, Ordering::Relaxed);
+    }
+}
+
+impl<U: ObjectApi> ObjectApi for CachingStore<U> {
+    fn get(
+        &self,
+        key: &str,
+        range: Option<(u64, u64)>,
+        if_none_match: Option<&str>,
+    ) -> Result<GetOutcome> {
+        let immutable = is_data_key(key);
+        // snapshot the entry; never hold the lock across an origin call
+        let cached_etag = {
+            let cache = self.cache.lock().unwrap();
+            match cache.get(key) {
+                Some(e) if immutable => {
+                    // immutable hit: serve without touching the origin
+                    self.counters.hits.fetch_add(1, Ordering::Relaxed);
+                    return Ok(self.serve(e, range, if_none_match, true));
+                }
+                Some(e) => Some(e.etag.clone()),
+                None => None,
+            }
+        };
+        if let Some(etag) = cached_etag {
+            // mutable (ready marker): revalidate with a conditional GET
+            match self.origin.get(key, None, Some(&etag))? {
+                GetOutcome::NotModified { .. } => {
+                    self.counters.not_modified.fetch_add(1, Ordering::Relaxed);
+                    self.counters.hits.fetch_add(1, Ordering::Relaxed);
+                    let cache = self.cache.lock().unwrap();
+                    if let Some(e) = cache.get(key) {
+                        return Ok(self.serve(e, range, if_none_match, true));
+                    }
+                    // evicted between snapshot and revalidation — fall
+                    // through to a cold fetch
+                }
+                GetOutcome::Body { bytes, etag, .. } => {
+                    self.counters.misses.fetch_add(1, Ordering::Relaxed);
+                    self.counters.origin_fetches.fetch_add(1, Ordering::Relaxed);
+                    let out = self.serve(
+                        &CacheEntry { body: bytes.clone(), etag: etag.clone() },
+                        range,
+                        if_none_match,
+                        false,
+                    );
+                    self.insert(key, bytes, etag);
+                    return Ok(out);
+                }
+                GetOutcome::Missing => {
+                    self.cache.lock().unwrap().remove(key);
+                    return Ok(GetOutcome::Missing);
+                }
+            }
+        }
+        // cold path: fetch the whole object, cache it, serve the slice
+        self.counters.misses.fetch_add(1, Ordering::Relaxed);
+        match self.origin.get(key, None, None)? {
+            GetOutcome::Body { bytes, etag, .. } => {
+                self.counters.origin_fetches.fetch_add(1, Ordering::Relaxed);
+                let out = self.serve(
+                    &CacheEntry { body: bytes.clone(), etag: etag.clone() },
+                    range,
+                    if_none_match,
+                    false,
+                );
+                self.insert(key, bytes, etag);
+                Ok(out)
+            }
+            GetOutcome::NotModified { .. } => {
+                bail!("origin answered NOT_MODIFIED to an unconditional GET for '{}'", key)
+            }
+            GetOutcome::Missing => Ok(GetOutcome::Missing),
+        }
+    }
+
+    fn put(&self, key: &str, bytes: &[u8]) -> Result<()> {
+        // write-through; the local copy warms the hop for its subtree
+        self.origin.put(key, bytes)?;
+        self.insert(key, bytes.to_vec(), object_etag(bytes));
+        Ok(())
+    }
+
+    fn list(&self, prefix: &str) -> Result<Vec<String>> {
+        self.origin.list(prefix)
+    }
+
+    fn stat(&self, key: &str) -> Result<Option<(u64, String)>> {
+        if is_data_key(key) {
+            if let Some(e) = self.cache.lock().unwrap().get(key) {
+                self.counters.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(Some((e.body.len() as u64, e.etag.clone())));
+            }
+        }
+        self.origin.stat(key)
+    }
+
+    fn net_retries(&self) -> (u64, u64) {
+        self.origin.net_retries()
+    }
+
+    fn not_modified_total(&self) -> u64 {
+        self.counters.not_modified.load(Ordering::Relaxed) + self.origin.not_modified_total()
+    }
+}
+
+/// Mount a caching hop: a [`StoreServer`] serving a
+/// [`CachingStore`]<[`StoreClient`]> pointed at the origin server on
+/// `origin_port`. Returns the server and the hop's cache layer (for
+/// counters).
+pub fn caching_hop(
+    origin_port: u16,
+    policy: RetentionPolicy,
+    chaos: Option<ChaosConfig>,
+) -> Result<(StoreServer, Arc<CachingStore<StoreClient>>)> {
+    let client = StoreClient::new(origin_port).with_chaos(chaos.clone());
+    let hop = Arc::new(CachingStore::new(client, policy));
+    let server = StoreServer::serve(hop.clone(), chaos)?;
+    Ok((server, hop))
+}
+
+// -------------------------------------------------- RemoteStoreTransport
+
+#[derive(Default)]
+struct RemoteCounters {
+    inventory_scans: AtomicU64,
+    frames_published: AtomicU64,
+    bytes_published: AtomicU64,
+    markers_published: AtomicU64,
+    frames_fetched: AtomicU64,
+    bytes_fetched: AtomicU64,
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
+    origin_fetches: AtomicU64,
+}
+
+/// [`SyncTransport`] over any [`ObjectApi`] — the networked sibling of
+/// `ObjectStoreTransport`, same key scheme, same marker grammar.
+/// `latest_ready()` costs exactly one LIST
+/// ([`retention::parse_inventory`] on the listed keys), so the
+/// consumer's cached-inventory snapshot keeps poll-then-sync at one
+/// LIST per cycle on the remote path too.
+pub struct RemoteStoreTransport<A: ObjectApi = StoreClient> {
+    api: A,
+    prefix: String,
+    counters: Arc<RemoteCounters>,
+}
+
+impl RemoteStoreTransport<StoreClient> {
+    /// Transport over a plain client to the store server on `port`.
+    pub fn connect(port: u16, prefix: &str) -> RemoteStoreTransport<StoreClient> {
+        RemoteStoreTransport::over(StoreClient::new(port), prefix)
+    }
+}
+
+impl<A: ObjectApi> RemoteStoreTransport<A> {
+    /// Transport over any store stack (a client, a client behind a
+    /// local [`CachingStore`], a [`DirectStore`] for tests).
+    pub fn over(api: A, prefix: &str) -> RemoteStoreTransport<A> {
+        RemoteStoreTransport {
+            api,
+            prefix: prefix.trim_end_matches('/').to_string(),
+            counters: Arc::new(RemoteCounters::default()),
+        }
+    }
+
+    pub fn api(&self) -> &A {
+        &self.api
+    }
+
+    fn key(&self, k: String) -> String {
+        format!("{}/{}", self.prefix, k)
+    }
+
+    /// Count one served GET body by where it came from.
+    fn note(&self, from_cache: bool) {
+        if from_cache {
+            self.counters.cache_hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.counters.cache_misses.fetch_add(1, Ordering::Relaxed);
+            self.counters.origin_fetches.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn get_required(&self, key: &str, what: &str) -> Result<Vec<u8>> {
+        match self.api.get(key, None, None).with_context(|| format!("fetching {}", what))? {
+            GetOutcome::Body { bytes, from_cache, .. } => {
+                self.note(from_cache);
+                Ok(bytes)
+            }
+            GetOutcome::NotModified { .. } => {
+                bail!("unexpected NOT_MODIFIED for {} ('{}')", what, key)
+            }
+            GetOutcome::Missing => bail!("{} missing ('{}')", what, key),
+        }
+    }
+
+    fn get_optional(&self, key: &str) -> Result<Option<Vec<u8>>> {
+        match self.api.get(key, None, None)? {
+            GetOutcome::Body { bytes, from_cache, .. } => {
+                self.note(from_cache);
+                Ok(Some(bytes))
+            }
+            GetOutcome::NotModified { .. } => bail!("unexpected NOT_MODIFIED for '{}'", key),
+            GetOutcome::Missing => Ok(None),
+        }
+    }
+}
+
+impl<A: ObjectApi> SyncTransport for RemoteStoreTransport<A> {
+    fn name(&self) -> &'static str {
+        "remote-store"
+    }
+
+    fn publish_frame(&self, id: FrameId, bytes: &[u8]) -> Result<()> {
+        self.api.put(&self.key(id.object_key()), bytes)?;
+        self.counters.frames_published.fetch_add(1, Ordering::Relaxed);
+        self.counters.bytes_published.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn publish_marker(&self, id: MarkerId, payload: &str) -> Result<()> {
+        self.api.put(&self.key(id.object_key()), payload.as_bytes())?;
+        self.counters.markers_published.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn latest_ready(&self) -> Result<retention::Inventory> {
+        self.counters.inventory_scans.fetch_add(1, Ordering::Relaxed);
+        let keys = self.api.list(&self.prefix)?;
+        Ok(retention::parse_inventory(&keys, &self.prefix))
+    }
+
+    fn fetch_step(&self, step: u64) -> Result<Option<StepData>> {
+        // a missing marker is the §J.5 "anchor replaced the delta"
+        // signal, not a transport failure
+        let marker = match self.get_optional(&self.key(delta_ready_key(step)))? {
+            Some(m) => String::from_utf8_lossy(&m).into_owned(),
+            None => return Ok(None),
+        };
+        let (_, marker) = split_generation(&marker);
+        if let Some((shard_count, root)) = parse_sharded_marker(marker) {
+            return Ok(Some(StepData::Sharded { shard_count, root: root.to_string() }));
+        }
+        let obj = self.get_required(&self.key(delta_key(step)), "delta object")?;
+        self.counters.frames_fetched.fetch_add(1, Ordering::Relaxed);
+        self.counters.bytes_fetched.fetch_add(obj.len() as u64, Ordering::Relaxed);
+        Ok(Some(StepData::Whole(obj)))
+    }
+
+    fn fetch_shard(&self, step: u64, shard: u32) -> Result<Vec<u8>> {
+        let obj = self
+            .get_required(&self.key(delta_shard_key(step, shard)), "shard frame")
+            .with_context(|| format!("shard {} of step {}", shard, step))?;
+        self.counters.frames_fetched.fetch_add(1, Ordering::Relaxed);
+        self.counters.bytes_fetched.fetch_add(obj.len() as u64, Ordering::Relaxed);
+        Ok(obj)
+    }
+
+    fn fetch_anchor(&self, step: u64) -> Result<(Vec<u8>, String)> {
+        let obj = self
+            .get_required(&self.key(anchor_key(step)), "anchor object")
+            .with_context(|| format!("anchor {}", step))?;
+        let marker = self
+            .get_required(&self.key(anchor_ready_key(step)), "anchor marker")
+            .with_context(|| format!("anchor marker {}", step))?;
+        self.counters.frames_fetched.fetch_add(1, Ordering::Relaxed);
+        self.counters.bytes_fetched.fetch_add(obj.len() as u64, Ordering::Relaxed);
+        Ok((obj, String::from_utf8_lossy(&marker).into_owned()))
+    }
+
+    fn counters(&self) -> TransportCounters {
+        let c = &self.counters;
+        let (retries, gave_up) = self.api.net_retries();
+        TransportCounters {
+            inventory_scans: c.inventory_scans.load(Ordering::Relaxed),
+            frames_published: c.frames_published.load(Ordering::Relaxed),
+            bytes_published: c.bytes_published.load(Ordering::Relaxed),
+            markers_published: c.markers_published.load(Ordering::Relaxed),
+            frames_fetched: c.frames_fetched.load(Ordering::Relaxed),
+            bytes_fetched: c.bytes_fetched.load(Ordering::Relaxed),
+            retries,
+            gave_up,
+            cache_hits: c.cache_hits.load(Ordering::Relaxed),
+            cache_misses: c.cache_misses.load(Ordering::Relaxed),
+            origin_fetches: c.origin_fetches.load(Ordering::Relaxed),
+            conditional_not_modified: self.api.not_modified_total(),
+            ..TransportCounters::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::container::{self, Patch, Values};
+
+    fn temp_store(tag: &str) -> ObjectStore {
+        ObjectStore::temp(tag).unwrap()
+    }
+
+    #[test]
+    fn request_and_reply_payloads_roundtrip() {
+        let (k, r, e) = parse_get(&encode_get("a/b.bin", Some((8, 100)), Some("etag1"))).unwrap();
+        assert_eq!((k.as_str(), r, e.as_deref()), ("a/b.bin", Some((8, 100)), Some("etag1")));
+        let (k, r, e) = parse_get(&encode_get("x", None, None)).unwrap();
+        assert_eq!((k.as_str(), r, e), ("x", None, None));
+        let (k, b) = parse_put(&encode_put("k", b"body")).unwrap();
+        assert_eq!((k.as_str(), b.as_slice()), ("k", b"body".as_slice()));
+        assert_eq!(parse_key(&encode_key("pfx")).unwrap(), "pfx");
+        let rep = Reply::ok("e".into(), vec![1, 2, 3], true);
+        let back = Reply::parse(&rep.encode()).unwrap();
+        assert_eq!(back, rep);
+        assert_eq!(back.flags & FLAG_FROM_CACHE, FLAG_FROM_CACHE);
+    }
+
+    #[test]
+    fn checksums_reject_flipped_bits() {
+        let mut p = encode_get("key", None, None);
+        let n = p.len();
+        p[n - 6] ^= 0x04;
+        assert!(parse_get(&p).is_err());
+        let mut rep = Reply::ok("e".into(), vec![9; 64], false).encode();
+        rep[10] ^= 0x01;
+        assert!(Reply::parse(&rep).is_err());
+    }
+
+    #[test]
+    fn etag_is_container_root_or_sha256() {
+        assert_eq!(object_etag(b"junk"), crate::util::sha256_hex(b"junk"));
+        let layout = crate::sparse::synthetic_layout(64, 64);
+        let mut p = Patch::default();
+        p.total_params = 64;
+        p.indices = vec![3];
+        p.values = Values::Bf16(vec![7]);
+        p.result_hash = crate::util::sha256_hex(b"root");
+        let bytes = container::encode(&p, &layout, Default::default()).unwrap();
+        assert_eq!(object_etag(&bytes), p.result_hash, "etag is the committed root");
+    }
+
+    #[test]
+    fn direct_store_conditional_and_ranged_get() {
+        let store = temp_store("direct");
+        let api = DirectStore::new(store.clone());
+        api.put("sync/blob", b"0123456789").unwrap();
+        let etag = match api.get("sync/blob", None, None).unwrap() {
+            GetOutcome::Body { bytes, etag, from_cache } => {
+                assert_eq!(bytes, b"0123456789");
+                assert!(!from_cache);
+                etag
+            }
+            o => panic!("{:?}", o),
+        };
+        match api.get("sync/blob", None, Some(&etag)).unwrap() {
+            GetOutcome::NotModified { etag: e } => assert_eq!(e, etag),
+            o => panic!("{:?}", o),
+        }
+        match api.get("sync/blob", Some((2, 3)), None).unwrap() {
+            GetOutcome::Body { bytes, .. } => assert_eq!(bytes, b"234"),
+            o => panic!("{:?}", o),
+        }
+        // range past the end clamps instead of erroring
+        match api.get("sync/blob", Some((8, 100)), None).unwrap() {
+            GetOutcome::Body { bytes, .. } => assert_eq!(bytes, b"89"),
+            o => panic!("{:?}", o),
+        }
+        assert_eq!(api.get("sync/nope", None, None).unwrap(), GetOutcome::Missing);
+        assert_eq!(api.stat("sync/blob").unwrap().unwrap().0, 10);
+        std::fs::remove_dir_all(store.root()).unwrap();
+    }
+
+    #[test]
+    fn server_and_client_speak_the_wire() {
+        let store = temp_store("wire");
+        let server =
+            StoreServer::serve(Arc::new(DirectStore::new(store.clone())), None).unwrap();
+        let client = StoreClient::new(server.port());
+        client.put("s/delta_ready_1", b"marker-1").unwrap();
+        client.put("s/obj.bin", b"payload").unwrap();
+        match client.get("s/obj.bin", None, None).unwrap() {
+            GetOutcome::Body { bytes, etag, from_cache } => {
+                assert_eq!(bytes, b"payload");
+                assert_eq!(etag, crate::util::sha256_hex(b"payload"));
+                assert!(!from_cache);
+            }
+            o => panic!("{:?}", o),
+        }
+        match client.get("s/obj.bin", Some((1, 3)), None).unwrap() {
+            GetOutcome::Body { bytes, .. } => assert_eq!(bytes, b"ayl"),
+            o => panic!("{:?}", o),
+        }
+        let etag = crate::util::sha256_hex(b"payload");
+        assert_eq!(
+            client.get("s/obj.bin", None, Some(&etag)).unwrap(),
+            GetOutcome::NotModified { etag: etag.clone() }
+        );
+        assert_eq!(client.get("s/ghost", None, None).unwrap(), GetOutcome::Missing);
+        assert_eq!(client.list("s").unwrap(), vec!["s/delta_ready_1", "s/obj.bin"]);
+        assert_eq!(client.stat("s/obj.bin").unwrap().unwrap(), (7, etag));
+        assert_eq!(client.stat("s/ghost").unwrap(), None);
+        assert_eq!(server.stats().gets.load(Ordering::Relaxed), 4);
+        assert_eq!(server.stats().body_serves_of("s/obj.bin"), 2);
+        assert_eq!(server.stats().not_modified.load(Ordering::Relaxed), 1);
+        std::fs::remove_dir_all(store.root()).unwrap();
+    }
+
+    #[test]
+    fn caching_hop_serves_repeat_reads_without_origin() {
+        let store = temp_store("hop");
+        let origin =
+            StoreServer::serve(Arc::new(DirectStore::new(store.clone())), None).unwrap();
+        let (hop, cache) = caching_hop(origin.port(), RetentionPolicy::default(), None).unwrap();
+        let direct = StoreClient::new(origin.port());
+        direct.put("s/delta_00000001.bin", b"immutable-data").unwrap();
+        direct.put("s/delta_ready_1", b"marker-v1").unwrap();
+
+        let leaf = StoreClient::new(hop.port());
+        // cold: the hop misses and pulls from the origin
+        match leaf.get("s/delta_00000001.bin", None, None).unwrap() {
+            GetOutcome::Body { from_cache, .. } => assert!(!from_cache),
+            o => panic!("{:?}", o),
+        }
+        // warm: served from the hop's cache, origin untouched
+        match leaf.get("s/delta_00000001.bin", None, None).unwrap() {
+            GetOutcome::Body { bytes, from_cache, .. } => {
+                assert_eq!(bytes, b"immutable-data");
+                assert!(from_cache);
+            }
+            o => panic!("{:?}", o),
+        }
+        assert_eq!(origin.stats().body_serves_of("s/delta_00000001.bin"), 1);
+        assert_eq!(cache.counters.hits.load(Ordering::Relaxed), 1);
+        assert_eq!(cache.counters.misses.load(Ordering::Relaxed), 1);
+
+        // markers revalidate: first read caches, second costs the
+        // origin only a NOT_MODIFIED (no body)
+        for _ in 0..2 {
+            match leaf.get("s/delta_ready_1", None, None).unwrap() {
+                GetOutcome::Body { bytes, .. } => assert_eq!(bytes, b"marker-v1"),
+                o => panic!("{:?}", o),
+            }
+        }
+        assert_eq!(cache.counters.not_modified.load(Ordering::Relaxed), 1);
+        assert_eq!(origin.stats().body_serves_of("s/delta_ready_1"), 1);
+
+        // the marker changes (publisher restart): revalidation sees the
+        // new content, cache coherence holds
+        direct.put("s/delta_ready_1", b"g2;marker-v2").unwrap();
+        match leaf.get("s/delta_ready_1", None, None).unwrap() {
+            GetOutcome::Body { bytes, from_cache, .. } => {
+                assert_eq!(bytes, b"g2;marker-v2");
+                assert!(!from_cache);
+            }
+            o => panic!("{:?}", o),
+        }
+        std::fs::remove_dir_all(store.root()).unwrap();
+    }
+
+    #[test]
+    fn cache_is_bounded_by_the_retention_plan() {
+        let store = temp_store("bound");
+        let cache = CachingStore::new(
+            DirectStore::new(store.clone()),
+            RetentionPolicy { max_deltas: 4, max_anchors: 2 },
+        );
+        for step in 1..=10u64 {
+            cache.put(&format!("s/{}", delta_key(step)), b"d").unwrap();
+            cache.put(&format!("s/{}", delta_ready_key(step)), b"m").unwrap();
+        }
+        // ≤ 4 delta steps cached (data + marker per step), evictions
+        // counted
+        assert!(cache.cached_objects() <= 8, "{} objects", cache.cached_objects());
+        assert!(cache.counters.evictions.load(Ordering::Relaxed) > 0);
+        // the newest step is still warm
+        match cache.get(&format!("s/{}", delta_key(10)), None, None).unwrap() {
+            GetOutcome::Body { from_cache, .. } => assert!(from_cache),
+            o => panic!("{:?}", o),
+        }
+        std::fs::remove_dir_all(store.root()).unwrap();
+    }
+
+    #[test]
+    fn client_retries_through_wire_corruption() {
+        let store = temp_store("chaos_client");
+        // server-side chaos: every ~3rd write flips a payload bit until
+        // the budget drains; the reply checksum turns that into a
+        // client retry, never bad data
+        let mut chaos = ChaosConfig::quiet(11).with_budget(6);
+        chaos.corrupt_mille = 300;
+        let server =
+            StoreServer::serve(Arc::new(DirectStore::new(store.clone())), Some(chaos)).unwrap();
+        let client = StoreClient::new(server.port());
+        client.put("s/obj.bin", &vec![0xA5u8; 4096]).unwrap();
+        for _ in 0..20 {
+            match client.get("s/obj.bin", None, None).unwrap() {
+                GetOutcome::Body { bytes, .. } => assert_eq!(bytes, vec![0xA5u8; 4096]),
+                o => panic!("{:?}", o),
+            }
+        }
+        let (retries, gave_up) = client.net_retries();
+        assert!(retries > 0, "chaos never fired");
+        assert_eq!(gave_up, 0);
+        std::fs::remove_dir_all(store.root()).unwrap();
+    }
+
+    #[test]
+    fn remote_transport_latest_ready_is_one_list() {
+        let store = temp_store("one_list");
+        let server =
+            StoreServer::serve(Arc::new(DirectStore::new(store.clone())), None).unwrap();
+        let t = RemoteStoreTransport::connect(server.port(), "sync");
+        t.publish_frame(FrameId::Delta { step: 1 }, b"obj").unwrap();
+        t.publish_marker(MarkerId::Delta(1), &"ab".repeat(32)).unwrap();
+        t.publish_frame(FrameId::Anchor { step: 0 }, b"anch").unwrap();
+        t.publish_marker(MarkerId::Anchor(0), "m0").unwrap();
+        let inv = t.latest_ready().unwrap();
+        assert_eq!(inv.delta_steps, vec![1]);
+        assert_eq!(inv.anchor_steps, vec![0]);
+        assert_eq!(t.counters().inventory_scans, 1);
+        assert_eq!(server.stats().lists.load(Ordering::Relaxed), 1, "one LIST on the wire");
+        // fetches never re-list
+        assert_eq!(t.fetch_step(1).unwrap(), Some(StepData::Whole(b"obj".to_vec())));
+        assert_eq!(t.fetch_anchor(0).unwrap(), (b"anch".to_vec(), "m0".to_string()));
+        assert_eq!(t.fetch_step(99).unwrap(), None, "missing marker is the §J.5 signal");
+        assert_eq!(server.stats().lists.load(Ordering::Relaxed), 1);
+        std::fs::remove_dir_all(store.root()).unwrap();
+    }
+
+    #[test]
+    fn remote_transport_counts_cache_traffic() {
+        let store = temp_store("remote_cache");
+        let origin =
+            StoreServer::serve(Arc::new(DirectStore::new(store.clone())), None).unwrap();
+        let (hop, _cache) = caching_hop(origin.port(), RetentionPolicy::default(), None).unwrap();
+        let producer = RemoteStoreTransport::connect(origin.port(), "sync");
+        producer.publish_frame(FrameId::Delta { step: 1 }, b"obj").unwrap();
+        producer.publish_marker(MarkerId::Delta(1), &"ab".repeat(32)).unwrap();
+        let a = RemoteStoreTransport::connect(hop.port(), "sync");
+        let b = RemoteStoreTransport::connect(hop.port(), "sync");
+        a.fetch_step(1).unwrap();
+        b.fetch_step(1).unwrap();
+        assert_eq!(a.counters().cache_misses, 2, "marker + object, both cold");
+        assert_eq!(b.counters().cache_hits, 2, "marker + object served from the hop");
+        assert_eq!(b.counters().origin_fetches, 0);
+        assert_eq!(origin.stats().body_serves_of("sync/delta_00000001.bin"), 1);
+        std::fs::remove_dir_all(store.root()).unwrap();
+    }
+}

@@ -78,6 +78,21 @@ pub mod kind {
     /// stale directive from an older epoch can never be applied after
     /// a newer one was seen.
     pub const EPOCH: u8 = 13;
+    /// Client → store: fetch an object, optionally a byte range and/or
+    /// conditional on an ETag (payload codec in [`crate::net::store`];
+    /// every store payload carries a trailing FNV-1a checksum so a
+    /// chaos bit-flip is detected and retried instead of applied).
+    pub const STORE_GET: u8 = 14;
+    /// Client → store: write an object atomically (key ++ body).
+    pub const STORE_PUT: u8 = 15;
+    /// Client → store: list keys under a prefix (newline-joined reply).
+    pub const STORE_LIST: u8 = 16;
+    /// Client → store: object size probe without the body.
+    pub const STORE_STAT: u8 = 17;
+    /// Store → client: the single reply frame for every store request
+    /// (status u8 ++ flags u8 ++ etag ++ body; see
+    /// [`crate::net::store::Reply`]).
+    pub const STORE_REPLY: u8 = 18;
 }
 
 /// Payload for an ACK/NACK addressing one shard of a step.

@@ -258,6 +258,17 @@ pub struct TransportCounters {
     /// Control-plane fabrics only: the topology epoch this peer last
     /// accepted (0 for statically-wired backends, which never replan).
     pub epoch: u64,
+    /// Store plane only: GETs answered from a cache (a `CachingStore`
+    /// hop or a revalidated local entry) without an origin body read.
+    pub cache_hits: u64,
+    /// Store plane only: GETs that had to go past every cache.
+    pub cache_misses: u64,
+    /// Store plane only: object bodies actually pulled from the
+    /// origin — the egress the caching tree exists to bound.
+    pub origin_fetches: u64,
+    /// Store plane only: conditional GETs answered NOT_MODIFIED (the
+    /// ETag — the container's hash-tree root — still matched).
+    pub conditional_not_modified: u64,
 }
 
 #[derive(Default)]
@@ -292,6 +303,10 @@ impl CounterCell {
             faults_injected: 0,
             reparents: 0,
             epoch: 0,
+            cache_hits: 0,
+            cache_misses: 0,
+            origin_fetches: 0,
+            conditional_not_modified: 0,
         }
     }
 

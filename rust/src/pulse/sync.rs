@@ -627,6 +627,20 @@ pub struct SyncStats {
     /// Topology epoch the transport last accepted (control plane;
     /// 0 on statically-wired backends, which never replan).
     pub epoch: u64,
+    /// Store plane: GETs answered from a cache without an origin body
+    /// read (cumulative snapshot of `TransportCounters::cache_hits`).
+    pub cache_hits: u64,
+    /// Store plane: GETs that went past every cache (cumulative
+    /// snapshot of `TransportCounters::cache_misses`).
+    pub cache_misses: u64,
+    /// Store plane: object bodies pulled from the origin — the egress
+    /// the caching tree bounds (cumulative snapshot of
+    /// `TransportCounters::origin_fetches`).
+    pub origin_fetches: u64,
+    /// Store plane: conditional GETs answered NOT_MODIFIED because the
+    /// content-address ETag still matched (cumulative snapshot of
+    /// `TransportCounters::conditional_not_modified`).
+    pub conditional_not_modified: u64,
     pub verified: bool,
 }
 
@@ -735,6 +749,10 @@ impl<T: SyncTransport> Consumer<T> {
         stats.retries = counters.retries;
         stats.gave_up = counters.gave_up;
         stats.nack_suppressed = counters.nack_suppressed;
+        stats.cache_hits = counters.cache_hits;
+        stats.cache_misses = counters.cache_misses;
+        stats.origin_fetches = counters.origin_fetches;
+        stats.conditional_not_modified = counters.conditional_not_modified;
         Ok(stats)
     }
 

@@ -52,7 +52,7 @@ pub mod link;
 pub mod topo;
 
 use std::cmp::Ordering;
-use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::collections::{BinaryHeap, HashMap, HashSet, VecDeque};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -298,6 +298,15 @@ pub struct SimReport {
     /// Frames that arrived at a crashed peer.
     pub delivered_to_dead: u64,
     pub slow_paths: u64,
+    /// Bytes the origin store actually served for slow-path fetches
+    /// under the caching-hop model (each object is charged once per
+    /// cold relay subtree, not once per leaf — the store plane's
+    /// `CachingStore` egress bound, priced at scale).
+    pub origin_bytes: u64,
+    /// Slow-path object reads served by a warm ancestor relay cache.
+    pub store_hits: u64,
+    /// Slow-path object reads that had to go to the origin.
+    pub store_misses: u64,
     pub nack_budget_exhausted: u64,
     pub coalesced: u64,
     pub frames_superseded: u64,
@@ -320,14 +329,15 @@ impl SimReport {
     /// Header for the `results/sim_scale.csv` paper table.
     pub fn csv_header() -> &'static str {
         "leaves,relays,depth,seed,converged,settle_ms,bytes_per_leaf,\
-         ideal_bytes_per_leaf,overhead_pct,nacks,slow_paths,coalesced,\
-         replans,deaths,max_queue,events,trace_hash"
+         ideal_bytes_per_leaf,overhead_pct,nacks,slow_paths,origin_bytes,\
+         store_hits,store_misses,coalesced,replans,deaths,max_queue,\
+         events,trace_hash"
     }
 
     /// One CSV row matching [`SimReport::csv_header`].
     pub fn csv_row(&self) -> String {
         format!(
-            "{},{},{},{},{},{:.1},{},{},{:.2},{},{},{},{},{},{},{},{:016x}",
+            "{},{},{},{},{},{:.1},{},{},{:.2},{},{},{},{},{},{},{},{},{},{},{:016x}",
             self.leaves_live,
             self.relays_live,
             self.depth,
@@ -339,6 +349,9 @@ impl SimReport {
             self.overhead_pct,
             self.leaf_nacks,
             self.slow_paths,
+            self.origin_bytes,
+            self.store_hits,
+            self.store_misses,
             self.coalesced,
             self.replans,
             self.deaths,
@@ -375,6 +388,9 @@ struct Counters {
     retransmits: u64,
     store_repairs: u64,
     slow_paths: u64,
+    origin_bytes: u64,
+    store_hits: u64,
+    store_misses: u64,
     nack_budget_exhausted: u64,
     coalesced: u64,
     frames_superseded: u64,
@@ -410,6 +426,12 @@ struct Sim {
     events: u64,
     hash: u64,
     m: Counters,
+    /// Per-relay warm object sets for the caching-hop store model
+    /// (`net::store::CachingStore`): a slow-path fetch warms every
+    /// live relay on the leaf's ancestor path, and later fetches of
+    /// the same object from that subtree are served there instead of
+    /// billing origin egress.
+    store_warm: HashMap<u64, HashSet<(u8, u64, u32)>>,
 }
 
 /// Run one simulation over the default in-process store.
@@ -444,6 +466,7 @@ pub fn run_with_store(cfg: SimConfig, store: Box<dyn SyncTransport>) -> SimRepor
         events: 0,
         hash: 0xcbf2_9ce4_8422_2325,
         m: Counters::default(),
+        store_warm: HashMap::new(),
     };
     sim.bootstrap();
     while let Some(p) = sim.heap.pop() {
@@ -1039,29 +1062,72 @@ impl Sim {
         self.nodes[idx].in_slow = true;
         self.nodes[idx].nacks.clear();
         self.m.slow_paths += 1;
-        let mut bytes = self
-            .store
-            .fetch_anchor(anchor)
-            .map(|(b, _)| b.len() as u64)
-            .unwrap_or(0);
+        // collect the fetched objects so each can be priced through
+        // the caching-hop model individually (object tags: 0 = anchor,
+        // 1 = whole delta, 2 = shard)
+        let mut objects: Vec<((u8, u64, u32), u64)> = Vec::new();
+        if let Ok((b, _)) = self.store.fetch_anchor(anchor) {
+            objects.push(((0, anchor, 0), b.len() as u64));
+        }
         for s in anchor + 1..=target {
             match self.store.fetch_step(s) {
                 Ok(Some(StepData::Sharded { shard_count, .. })) => {
                     for k in 0..shard_count {
-                        bytes += self
-                            .store
-                            .fetch_shard(s, k)
-                            .map(|b| b.len() as u64)
-                            .unwrap_or(0);
+                        if let Ok(b) = self.store.fetch_shard(s, k) {
+                            objects.push(((2, s, k), b.len() as u64));
+                        }
                     }
                 }
-                Ok(Some(StepData::Whole(b))) => bytes += b.len() as u64,
+                Ok(Some(StepData::Whole(b))) => objects.push(((1, s, 0), b.len() as u64)),
                 _ => {}
             }
+        }
+        let mut bytes = 0u64;
+        for (obj, len) in objects {
+            bytes += len;
+            self.store_cache_account(id, obj, len);
         }
         let link = self.cfg.store_link.slowed(self.nodes[idx].slow_factor);
         let delay = link.tx_ns(bytes.max(1)).max(1);
         self.schedule(t + delay, Ev::SlowDone { leaf: id, target, bytes });
+    }
+
+    /// Caching-hop model for slow-path store reads (the sim face of
+    /// `net::store::CachingStore`): a fetched object warms every live
+    /// relay on the leaf's ancestor path; a later fetch of the same
+    /// object from under a warm relay is served there. Origin egress
+    /// (`origin_bytes`) is charged only on the cold misses, so a tree
+    /// of cold consumers costs the origin O(subtrees) reads per
+    /// object instead of O(leaves) — the bound the CI scale gate
+    /// prices at 100k leaves. Pure accounting: delivery timing is
+    /// unchanged, so the determinism contract is untouched.
+    fn store_cache_account(&mut self, leaf: u64, obj: (u8, u64, u32), len: u64) {
+        let mut path: Vec<u64> = Vec::new();
+        let mut warm_hit = false;
+        let mut cur = self.nodes[leaf as usize].parent;
+        while let Some(p) = cur {
+            if p == 0 {
+                break; // the root is the origin itself
+            }
+            let n = &self.nodes[p as usize];
+            if n.up && n.role == role::RELAY {
+                if self.store_warm.get(&p).is_some_and(|s| s.contains(&obj)) {
+                    warm_hit = true;
+                    break;
+                }
+                path.push(p);
+            }
+            cur = n.parent;
+        }
+        if warm_hit {
+            self.m.store_hits += 1;
+        } else {
+            self.m.store_misses += 1;
+            self.m.origin_bytes += len;
+        }
+        for p in path {
+            self.store_warm.entry(p).or_default().insert(obj);
+        }
     }
 
     // ----------------------------------------------------- control plane
@@ -1249,6 +1315,8 @@ impl Sim {
         let idx = id as usize;
         self.nodes[idx].up = false;
         self.m.crashes += 1;
+        // a crashed relay's store cache dies with it
+        self.store_warm.remove(&id);
         if self.nodes[idx].role == role::LEAF {
             self.live_leaves -= 1;
             if self.nodes[idx].at_head {
@@ -1343,6 +1411,9 @@ impl Sim {
             dup_frames: self.m.dup_frames,
             delivered_to_dead: self.m.to_dead,
             slow_paths: self.m.slow_paths,
+            origin_bytes: self.m.origin_bytes,
+            store_hits: self.m.store_hits,
+            store_misses: self.m.store_misses,
             nack_budget_exhausted: self.m.nack_budget_exhausted,
             coalesced: self.m.coalesced,
             frames_superseded: self.m.frames_superseded,
@@ -1403,6 +1474,32 @@ mod tests {
         other.seed = 8;
         let c = run(other);
         assert_ne!(a.trace_hash, c.trace_hash, "different seed, different trace");
+    }
+
+    #[test]
+    fn slow_path_caching_bounds_origin_egress() {
+        // Total tree-edge loss: every leaf converges through the store
+        // slow path, so the caching-hop model gets the full cold-tree
+        // workload. Leaves sharing a relay must warm it: the origin is
+        // charged once per cold subtree, not once per leaf.
+        let mut cfg = tiny(9);
+        cfg.link = cfg.link.with_loss(1_000_000);
+        cfg.horizon = Duration::from_secs(60);
+        let r = run(cfg);
+        assert!(r.converged, "all-loss run must converge via the store: {:?}", r);
+        assert!(r.slow_paths > 0);
+        assert!(r.store_misses > 0, "the first fetch per subtree is cold");
+        assert!(r.store_hits > 0, "leaves sharing a relay must hit its warm cache");
+        assert!(
+            r.origin_bytes < r.leaf_bytes,
+            "origin egress {} must be a fraction of delivered bytes {}",
+            r.origin_bytes,
+            r.leaf_bytes
+        );
+        // clean runs never touch the origin
+        let clean = run(tiny(9));
+        assert_eq!(clean.origin_bytes, 0);
+        assert_eq!(clean.store_hits + clean.store_misses, 0);
     }
 
     #[test]

@@ -28,9 +28,17 @@ pub struct Inventory {
 }
 
 pub fn scan(store: &ObjectStore, prefix: &str) -> Result<Inventory> {
+    Ok(parse_inventory(&store.list(prefix)?, prefix))
+}
+
+/// Build an [`Inventory`] from an already-fetched key listing. Remote
+/// backends (`net::store`) call this on the result of a single LIST so
+/// `latest_ready()` costs exactly one round trip — re-listing the full
+/// prefix per call is the O(objects) trap `scan` used to hide.
+pub fn parse_inventory(keys: &[String], prefix: &str) -> Inventory {
     let mut inv = Inventory::default();
-    for key in store.list(prefix)? {
-        let rel = key.strip_prefix(prefix).unwrap_or(&key).trim_start_matches('/');
+    for key in keys {
+        let rel = key.strip_prefix(prefix).unwrap_or(key).trim_start_matches('/');
         if let Some(step) = parse_marker(rel, "delta_ready_") {
             inv.delta_steps.push(step);
         } else if let Some(step) = parse_marker(rel, "anchor_ready_") {
@@ -39,7 +47,7 @@ pub fn scan(store: &ObjectStore, prefix: &str) -> Result<Inventory> {
     }
     inv.delta_steps.sort_unstable();
     inv.anchor_steps.sort_unstable();
-    Ok(inv)
+    inv
 }
 
 fn parse_marker(rel: &str, kind: &str) -> Option<u64> {

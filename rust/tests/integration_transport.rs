@@ -1,8 +1,9 @@
 //! Transport conformance suite: the SAME PULSESync stream (seeded,
 //! deterministic) runs over every `SyncTransport` backend —
 //! object-store, in-proc, TCP relay (star AND chained through a
-//! `RelayNode`), and fault-injected wrappers — and must end
-//! bit-identical to the object-store reference:
+//! `RelayNode`), the networked store plane (`RemoteStoreTransport`
+//! direct and behind caching hops), and fault-injected wrappers — and
+//! must end bit-identical to the object-store reference:
 //!
 //! * bit-identity per step and at the end of the stream;
 //! * chain catch-up and cold-start slow path on every backend;
@@ -13,16 +14,20 @@
 //! * the poll-then-sync pattern costs one inventory scan, not two;
 //! * a zero-fault `FaultInjectingTransport` is transparent.
 
+use pulse::net::chaos::ChaosConfig;
 use pulse::net::node::RelayNode;
 use pulse::net::relay::Relay;
+use pulse::net::store::{caching_hop, DirectStore, RemoteStoreTransport, StoreServer};
 use pulse::net::transport::{
     FaultInjectingTransport, FaultPlan, InProcTransport, ObjectStoreTransport, RelayTransport,
     SyncTransport,
 };
 use pulse::pulse::sync::{Consumer, Publisher, SyncPath, SyncStats};
 use pulse::sparse::synthetic_layout;
+use pulse::storage::retention::RetentionPolicy;
 use pulse::storage::ObjectStore;
 use pulse::util::rng::Rng;
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -413,5 +418,284 @@ fn poll_then_sync_costs_one_scan_on_object_store() {
             "poll + sync must cost exactly one scan"
         );
     }
+    std::fs::remove_dir_all(store.root()).unwrap();
+}
+
+// ------------------------------------------------------ remote store
+
+/// An origin [`StoreServer`] over a fresh temp [`ObjectStore`]; the
+/// caller stops the server and removes `store.root()`.
+fn origin_server(label: &str) -> (StoreServer, ObjectStore) {
+    let store = ObjectStore::temp(label).unwrap();
+    let server = StoreServer::serve(Arc::new(DirectStore::new(store.clone())), None).unwrap();
+    (server, store)
+}
+
+#[test]
+fn remote_store_direct_and_cached_bit_identical_to_reference() {
+    let reference = object_store_reference();
+
+    // direct: producer and consumer both speak the store wire to the
+    // origin — the networked sibling of the object-store run
+    let (origin, store) = origin_server("conf_rs_direct");
+    let prod = RemoteStoreTransport::connect(origin.port(), "sync");
+    let cons = RemoteStoreTransport::connect(origin.port(), "sync");
+    let (w, r) = run_stream(prod, cons, 3);
+    assert_eq!(r, 0);
+    assert_eq!(w, reference, "remote store diverged from object store");
+    origin.stop();
+    std::fs::remove_dir_all(store.root()).unwrap();
+
+    // behind one caching hop: same stream, consumer one hop out
+    let (origin, store) = origin_server("conf_rs_hop");
+    let (hop, cache) = caching_hop(origin.port(), RetentionPolicy::default(), None).unwrap();
+    let prod = RemoteStoreTransport::connect(origin.port(), "sync");
+    let cons = RemoteStoreTransport::connect(hop.port(), "sync");
+    let (w, r) = run_stream(prod, cons, 3);
+    assert_eq!(r, 0);
+    assert_eq!(w, reference, "cached remote store diverged from object store");
+    assert!(cache.counters.origin_fetches.load(Ordering::Relaxed) > 0);
+    hop.stop();
+    origin.stop();
+    std::fs::remove_dir_all(store.root()).unwrap();
+}
+
+#[test]
+fn single_shard_corruption_heals_on_remote_store() {
+    // direct to the origin
+    let (origin, store) = origin_server("conf_rs_corrupt");
+    corruption_heals(
+        RemoteStoreTransport::connect(origin.port(), "sync"),
+        RemoteStoreTransport::connect(origin.port(), "sync"),
+    );
+    origin.stop();
+    std::fs::remove_dir_all(store.root()).unwrap();
+
+    // behind a caching hop: the refetch is served from the hop's
+    // cached (intact) copy — corruption at the leaf never re-reads
+    // the origin's object a second time
+    let (origin, store) = origin_server("conf_rs_corrupt_hop");
+    let (hop, _cache) = caching_hop(origin.port(), RetentionPolicy::default(), None).unwrap();
+    corruption_heals(
+        RemoteStoreTransport::connect(origin.port(), "sync"),
+        RemoteStoreTransport::connect(hop.port(), "sync"),
+    );
+    hop.stop();
+    origin.stop();
+    std::fs::remove_dir_all(store.root()).unwrap();
+}
+
+#[test]
+fn any_single_shard_corruption_heals_once_on_remote_store_property() {
+    // property (satellite): FaultInjectingTransport<RemoteStoreTransport>
+    // — for ANY (step, shard) corruption target the stream heals with
+    // exactly one counted refetch, same as every local backend
+    let n = 8_000usize;
+    let layout = synthetic_layout(n, 64);
+    let steps = 4u64;
+    let vs = views(n, steps, 150);
+    let (origin, store) = origin_server("conf_rs_prop");
+    pulse::util::prop::check("remote store single corruption heals once", 6, |g| {
+        let step = 1 + g.rng.below(steps);
+        let shard = g.rng.below(4) as u32;
+        // a fresh prefix per case keeps the streams isolated
+        let prefix = format!("sync_{}_{}", step, shard);
+        let mut publisher = Publisher::over(
+            RemoteStoreTransport::connect(origin.port(), &prefix),
+            layout.clone(),
+            vs[0].clone(),
+            50,
+        )
+        .unwrap()
+        .with_shards(4);
+        let cons = RemoteStoreTransport::connect(origin.port(), &prefix);
+        let mut c = Consumer::over(
+            FaultInjectingTransport::targeting(cons, step, shard),
+            layout.clone(),
+        );
+        c.synchronize().unwrap();
+        let mut refetches = 0usize;
+        for s in 1..=steps {
+            publisher.publish(s, &vs[s as usize]).unwrap();
+            let cs = c.synchronize().unwrap();
+            refetches += cs.shard_refetches;
+            assert!(cs.verified);
+            assert_eq!(c.weights.as_ref().unwrap(), &vs[s as usize]);
+        }
+        assert_eq!(
+            refetches, 1,
+            "target ({}, {}) must heal with exactly one refetch",
+            step, shard
+        );
+    });
+    origin.stop();
+    std::fs::remove_dir_all(store.root()).unwrap();
+}
+
+#[test]
+fn dropped_shards_heal_over_remote_store() {
+    // seeded drop plan over the store wire: every shard of every delta
+    // dropped once at the consumer, healed by counted refetches
+    let (origin, store) = origin_server("conf_rs_drop");
+    let prod = RemoteStoreTransport::connect(origin.port(), "sync");
+    let cons = FaultInjectingTransport::new(
+        RemoteStoreTransport::connect(origin.port(), "sync"),
+        11,
+        FaultPlan { drop_shard_prob: 1.0, ..FaultPlan::default() },
+    );
+    let (w, refetches) = run_stream(prod, cons, 50);
+    let vs = views(N, STEPS, 400);
+    assert_eq!(w, vs[STEPS as usize]);
+    assert_eq!(refetches, STEPS as usize * SHARDS);
+    origin.stop();
+    std::fs::remove_dir_all(store.root()).unwrap();
+}
+
+#[test]
+fn cold_tree_syncs_bit_identical_with_bounded_origin_egress() {
+    // acceptance: a 2-level tree of 6 cold leaves behind two caching
+    // hops ends bit-identical to the object-store reference while the
+    // origin serves each data object at most once per hop (O(depth)
+    // origin reads, not O(leaves))
+    let reference = object_store_reference();
+    let (origin, store) = origin_server("conf_rs_tree");
+    let layout = synthetic_layout(N, 64);
+    let vs = views(N, STEPS, 400);
+
+    // publish the whole stream up front — every leaf starts cold
+    let mut publisher = Publisher::over(
+        RemoteStoreTransport::connect(origin.port(), "sync"),
+        layout.clone(),
+        vs[0].clone(),
+        50,
+    )
+    .unwrap()
+    .with_shards(SHARDS);
+    for step in 1..=STEPS {
+        publisher.publish(step, &vs[step as usize]).unwrap();
+    }
+
+    let (hop_a, _ca) = caching_hop(origin.port(), RetentionPolicy::default(), None).unwrap();
+    let (hop_b, _cb) = caching_hop(origin.port(), RetentionPolicy::default(), None).unwrap();
+
+    // leaves sync SEQUENTIALLY (the store plane has no single-flight
+    // dedup — see net::store docs), alternating between the two hops
+    let mut leaf_origin_fetches = Vec::new();
+    for i in 0..6u64 {
+        let port = if i % 2 == 0 { hop_a.port() } else { hop_b.port() };
+        let mut c = Consumer::over(RemoteStoreTransport::connect(port, "sync"), layout.clone());
+        let s = wait_sync(&mut c, STEPS);
+        assert_eq!(s.path, SyncPath::Slow, "leaf {} must cold-start", i);
+        assert!(s.verified);
+        assert_eq!(c.weights.as_ref().unwrap(), &reference, "leaf {} diverged", i);
+        leaf_origin_fetches.push(s.origin_fetches);
+        if i >= 2 {
+            // both hops are warm: later leaves ride the cache entirely
+            assert_eq!(s.origin_fetches, 0, "leaf {} should be all cache hits", i);
+            assert!(s.cache_hits > 0, "leaf {} must report its cache hits", i);
+        }
+    }
+
+    // the egress bound: no data object left the origin more than once
+    // per hop, regardless of leaf count
+    let stats = origin.stats();
+    assert!(stats.gets.load(Ordering::Relaxed) > 0);
+    assert!(
+        stats.max_body_serves(".bin") <= 2,
+        "origin served a data object more than once per hop (max {})",
+        stats.max_body_serves(".bin")
+    );
+    // only the first leaf behind each hop pulled from the origin
+    assert!(leaf_origin_fetches[0] > 0 && leaf_origin_fetches[1] > 0);
+    assert_eq!(leaf_origin_fetches[2..].iter().sum::<u64>(), 0);
+
+    hop_a.stop();
+    hop_b.stop();
+    origin.stop();
+    std::fs::remove_dir_all(store.root()).unwrap();
+}
+
+#[test]
+fn cached_tree_survives_chaotic_store_wire() {
+    // chaos leg (CI sweeps PULSE_CHAOS_SEED over this test; any red
+    // run reproduces with the same seed): a cached tree where BOTH
+    // store wires — hop→origin and leaf→hop — run under a budgeted
+    // chaos mix; client retries must absorb every fault and the
+    // leaves must end bit-identical
+    let seed: u64 =
+        std::env::var("PULSE_CHAOS_SEED").ok().and_then(|v| v.parse().ok()).unwrap_or(1);
+    let chaos = ChaosConfig::light(seed).with_budget(48);
+    let n = 8_000usize;
+    let steps = 4u64;
+    let layout = synthetic_layout(n, 64);
+    let vs = views(n, steps, 150);
+    let (origin, store) = origin_server("conf_rs_chaos");
+    let mut publisher = Publisher::over(
+        RemoteStoreTransport::connect(origin.port(), "sync"),
+        layout.clone(),
+        vs[0].clone(),
+        2,
+    )
+    .unwrap()
+    .with_shards(4);
+    for step in 1..=steps {
+        publisher.publish(step, &vs[step as usize]).unwrap();
+    }
+    let (hop, _cache) = caching_hop(origin.port(), RetentionPolicy::default(), Some(chaos)).unwrap();
+    for leaf in 0..2 {
+        let mut c = Consumer::over(RemoteStoreTransport::connect(hop.port(), "sync"), layout.clone());
+        let s = wait_sync(&mut c, steps);
+        assert!(s.verified, "leaf {} unverified under chaos seed {}", leaf, seed);
+        assert_eq!(
+            c.weights.as_ref().unwrap(),
+            &vs[steps as usize],
+            "leaf {} diverged under chaos seed {}",
+            leaf,
+            seed
+        );
+    }
+    hop.stop();
+    origin.stop();
+    std::fs::remove_dir_all(store.root()).unwrap();
+}
+
+#[test]
+fn poll_then_sync_costs_one_list_on_remote_store() {
+    // regression (satellite): retention::scan used to re-list the full
+    // prefix on every call; on the remote path the transport now lists
+    // once and parses the snapshot (`retention::parse_inventory`), so
+    // poll + sync is exactly one LIST rpc at the server
+    let (origin, store) = origin_server("conf_rs_scans");
+    let layout = synthetic_layout(4_000, 64);
+    let vs = views(4_000, 2, 60);
+    let mut publisher = Publisher::over(
+        RemoteStoreTransport::connect(origin.port(), "sync"),
+        layout.clone(),
+        vs[0].clone(),
+        50,
+    )
+    .unwrap();
+    let mut c = Consumer::over(RemoteStoreTransport::connect(origin.port(), "sync"), layout);
+    c.synchronize().unwrap();
+    let stats = origin.stats();
+    for step in 1..=2u64 {
+        publisher.publish(step, &vs[step as usize]).unwrap();
+        let scans_before = c.transport.counters().inventory_scans;
+        let lists_before = stats.lists.load(Ordering::Relaxed);
+        assert_eq!(c.latest_ready().unwrap(), Some(step));
+        let cs = c.synchronize().unwrap();
+        assert!(cs.verified);
+        assert_eq!(
+            c.transport.counters().inventory_scans,
+            scans_before + 1,
+            "poll + sync must cost exactly one scan on the remote path"
+        );
+        assert_eq!(
+            stats.lists.load(Ordering::Relaxed),
+            lists_before + 1,
+            "poll + sync must cost exactly one LIST rpc at the server"
+        );
+    }
+    origin.stop();
     std::fs::remove_dir_all(store.root()).unwrap();
 }
