@@ -1,0 +1,526 @@
+//! Source lexer for the repo lint (`paper lint`). No external parser
+//! crates exist in `vendor/`, so this is a self-contained scanner: it
+//! strips comments and string/char literals (so rule patterns never
+//! match inside them), collects `pallas-lint:` pragmas from comments,
+//! records string literals separately (the counter↔CSV rule reads the
+//! column-name literals), and tracks just enough scope structure —
+//! `#[cfg(test)]` / `#[test]` / `mod tests` regions, enclosing `fn` /
+//! `impl` / `struct` / `mod` names — for the rules to tell test code
+//! from wire-path code.
+//!
+//! This is a lexer, not a parser: it understands tokens and brace
+//! nesting, not grammar. The known blind spots (attributes split by
+//! stray semicolons, generic `impl<T> Foo<T>` headers resolving to the
+//! first trailing token) do not occur in this codebase and are
+//! acceptable for a repo-internal lint.
+
+/// One source line after comment/string stripping, with the scope
+/// state the rules key on.
+#[derive(Debug, Clone)]
+pub struct Line {
+    /// 1-based line number.
+    pub number: usize,
+    /// Line text with comments removed and string/char literal
+    /// *contents* blanked (the delimiters remain, so code shape holds).
+    pub code: String,
+    /// True when any part of the line sits inside a `#[cfg(test)]`
+    /// item, a `#[test]` fn, or a `mod tests` block.
+    pub in_test: bool,
+    /// Innermost enclosing function name, if any.
+    pub fn_name: Option<String>,
+    /// Innermost enclosing `impl` target name, if any.
+    pub impl_name: Option<String>,
+    /// Innermost enclosing `struct`/`enum` name, if any.
+    pub struct_name: Option<String>,
+    /// Innermost enclosing `mod` name, if any.
+    pub mod_name: Option<String>,
+}
+
+/// A `// pallas-lint: allow(<rule>): <reason>` pragma, or a malformed
+/// attempt at one (surfaced as its own finding — suppressions must be
+/// machine-readable or they are not suppressions).
+#[derive(Debug, Clone)]
+pub struct Pragma {
+    pub line: usize,
+    pub rule: String,
+    pub reason: String,
+    /// Parse error, if the pragma text did not match the grammar.
+    pub malformed: Option<String>,
+}
+
+/// A string literal's content, with the scope it appeared in.
+#[derive(Debug, Clone)]
+pub struct StrLit {
+    pub line: usize,
+    pub text: String,
+    pub fn_name: Option<String>,
+    pub impl_name: Option<String>,
+}
+
+/// Lexed view of one source file.
+#[derive(Debug, Default)]
+pub struct FileScan {
+    pub lines: Vec<Line>,
+    pub pragmas: Vec<Pragma>,
+    pub strings: Vec<StrLit>,
+}
+
+/// What kind of block a `{` opened.
+#[derive(Debug, Clone, PartialEq)]
+enum ScopeKind {
+    Mod(String),
+    Fn(String),
+    Impl(String),
+    Struct(String),
+    Block,
+}
+
+#[derive(Debug, Clone)]
+struct Scope {
+    kind: ScopeKind,
+    is_test: bool,
+}
+
+/// Lex one file. `scan` never fails: unterminated constructs degrade
+/// to "rest of file is literal/comment", which is also what rustc's
+/// recovery does before erroring.
+pub fn scan(source: &str) -> FileScan {
+    let stripped = strip(source);
+    let lines = scope(&stripped.code);
+    let strings = stripped
+        .strings
+        .into_iter()
+        .map(|mut s| {
+            if let Some(l) = lines.get(s.line.saturating_sub(1)) {
+                s.fn_name = l.fn_name.clone();
+                s.impl_name = l.impl_name.clone();
+            }
+            s
+        })
+        .collect();
+    FileScan { lines, pragmas: stripped.pragmas, strings }
+}
+
+struct Stripped {
+    /// Per line: code with comments/literal contents removed.
+    code: Vec<String>,
+    /// Raw string-literal contents, per line of appearance.
+    strings: Vec<StrLit>,
+    pragmas: Vec<Pragma>,
+}
+
+/// Pass 1 (char level): remove comments, blank literal contents,
+/// collect comment pragmas and string literals.
+fn strip(source: &str) -> Stripped {
+    let chars: Vec<char> = source.chars().collect();
+    let mut code_lines: Vec<String> = Vec::new();
+    let mut strings: Vec<StrLit> = Vec::new();
+    let mut pragmas: Vec<Pragma> = Vec::new();
+    let mut line = String::new();
+    let mut lineno = 1usize;
+    let mut i = 0usize;
+
+    let mut flush_line = |line: &mut String, lineno: &mut usize| {
+        code_lines.push(std::mem::take(line));
+        *lineno += 1;
+    };
+
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            flush_line(&mut line, &mut lineno);
+            i += 1;
+        } else if c == '/' && chars.get(i + 1) == Some(&'/') {
+            // line comment: capture text (for pragmas), drop from code
+            let start = i + 2;
+            let mut j = start;
+            while j < chars.len() && chars[j] != '\n' {
+                j += 1;
+            }
+            let text: String = chars[start..j].iter().collect();
+            if let Some(p) = parse_pragma(&text, lineno) {
+                pragmas.push(p);
+            }
+            i = j;
+        } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+            // block comment — Rust block comments nest
+            let mut depth = 1;
+            let mut j = i + 2;
+            while j < chars.len() && depth > 0 {
+                if chars[j] == '\n' {
+                    flush_line(&mut line, &mut lineno);
+                    j += 1;
+                } else if chars[j] == '/' && chars.get(j + 1) == Some(&'*') {
+                    depth += 1;
+                    j += 2;
+                } else if chars[j] == '*' && chars.get(j + 1) == Some(&'/') {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            line.push(' ');
+            i = j;
+        } else if is_raw_str_start(&chars, i) {
+            // r"...", r#"..."#, b-prefixed variants
+            let mut j = i;
+            while chars.get(j) == Some(&'b') || chars.get(j) == Some(&'r') {
+                j += 1;
+            }
+            let mut hashes = 0;
+            while chars.get(j) == Some(&'#') {
+                hashes += 1;
+                j += 1;
+            }
+            j += 1; // opening quote
+            let start_line = lineno;
+            let mut text = String::new();
+            while j < chars.len() {
+                if chars[j] == '"' && closes_raw(&chars, j + 1, hashes) {
+                    j += 1 + hashes;
+                    break;
+                }
+                if chars[j] == '\n' {
+                    flush_line(&mut line, &mut lineno);
+                } else {
+                    text.push(chars[j]);
+                }
+                j += 1;
+            }
+            line.push_str("\"\"");
+            strings.push(StrLit { line: start_line, text, fn_name: None, impl_name: None });
+            i = j;
+        } else if c == '"' {
+            let start_line = lineno;
+            let mut text = String::new();
+            let mut j = i + 1;
+            while j < chars.len() {
+                match chars[j] {
+                    '\\' => {
+                        if let Some(&e) = chars.get(j + 1) {
+                            text.push('\\');
+                            text.push(e);
+                        }
+                        j += 2;
+                    }
+                    '"' => {
+                        j += 1;
+                        break;
+                    }
+                    '\n' => {
+                        flush_line(&mut line, &mut lineno);
+                        j += 1;
+                    }
+                    other => {
+                        text.push(other);
+                        j += 1;
+                    }
+                }
+            }
+            line.push_str("\"\"");
+            strings.push(StrLit { line: start_line, text, fn_name: None, impl_name: None });
+            i = j;
+        } else if c == '\'' {
+            // char literal vs lifetime
+            if chars.get(i + 1) == Some(&'\\') {
+                // escaped char literal: skip to closing quote
+                let mut j = i + 2;
+                if j < chars.len() {
+                    j += 1; // the escaped char
+                }
+                while j < chars.len() && chars[j] != '\'' {
+                    j += 1;
+                }
+                line.push_str("''");
+                i = j + 1;
+            } else if chars.get(i + 2) == Some(&'\'') && chars.get(i + 1) != Some(&'\'') {
+                // plain char literal 'x'
+                line.push_str("''");
+                i += 3;
+            } else {
+                // lifetime — keep as code
+                line.push(c);
+                i += 1;
+            }
+        } else {
+            line.push(c);
+            i += 1;
+        }
+    }
+    code_lines.push(line);
+    Stripped { code: code_lines, strings, pragmas }
+}
+
+fn is_raw_str_start(chars: &[char], i: usize) -> bool {
+    // r"..." / r#"..." / br"..." / brand new identifiers like `for r in`
+    // must NOT match: require the char before `i` to not be part of an
+    // identifier.
+    if i > 0 && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_') {
+        return false;
+    }
+    let mut j = i;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if chars.get(j) != Some(&'r') {
+        return false;
+    }
+    j += 1;
+    while chars.get(j) == Some(&'#') {
+        j += 1;
+    }
+    chars.get(j) == Some(&'"')
+}
+
+fn closes_raw(chars: &[char], mut j: usize, hashes: usize) -> bool {
+    for _ in 0..hashes {
+        if chars.get(j) != Some(&'#') {
+            return false;
+        }
+        j += 1;
+    }
+    true
+}
+
+/// Parse a pragma out of one comment's text. A pragma comment must
+/// *begin* with `pallas-lint:` (after whitespace) — prose that merely
+/// mentions the marker mid-sentence is not a suppression. Returns
+/// None when the comment is not a pragma at all.
+fn parse_pragma(comment: &str, line: usize) -> Option<Pragma> {
+    let rest = comment.trim_start().strip_prefix("pallas-lint:")?.trim();
+    let bad = |msg: &str| Pragma {
+        line,
+        rule: String::new(),
+        reason: String::new(),
+        malformed: Some(msg.to_string()),
+    };
+    let Some(body) = rest.strip_prefix("allow(") else {
+        return Some(bad("expected `allow(<rule>): <reason>` after `pallas-lint:`"));
+    };
+    let Some(close) = body.find(')') else {
+        return Some(bad("unclosed `allow(` in pragma"));
+    };
+    let rule = body[..close].trim().to_string();
+    let tail = body[close + 1..].trim_start();
+    let Some(reason) = tail.strip_prefix(':') else {
+        return Some(bad("pragma is missing the `: <reason>` clause"));
+    };
+    let reason = reason.trim().to_string();
+    if reason.is_empty() {
+        return Some(bad("pragma reason must not be empty"));
+    }
+    if rule.is_empty() {
+        return Some(bad("pragma rule name must not be empty"));
+    }
+    Some(Pragma { line, rule, reason, malformed: None })
+}
+
+/// Pass 2 (line level over stripped code): brace-depth scope tracking.
+fn scope(code_lines: &[String]) -> Vec<Line> {
+    let mut scopes: Vec<Scope> = Vec::new();
+    // decl text accumulated since the last `{`, `}`, or `;` — what a
+    // `{` is classified from.
+    let mut decl = String::new();
+    let mut out: Vec<Line> = Vec::new();
+
+    for (idx, code) in code_lines.iter().enumerate() {
+        // merge the scope state across the whole line, so a one-line
+        // `fn f() { ... }` still reports its fn name and a line that
+        // opens `mod tests {` already counts as test code
+        let mut state = snapshot(&scopes);
+        for c in code.chars() {
+            match c {
+                '{' => {
+                    let (kind, own_test) = classify(&decl);
+                    let inherited = scopes.last().map(|s| s.is_test).unwrap_or(false);
+                    scopes.push(Scope { kind, is_test: own_test || inherited });
+                    merge(&mut state, snapshot(&scopes));
+                    decl.clear();
+                }
+                '}' => {
+                    scopes.pop();
+                    decl.clear();
+                }
+                ';' => decl.clear(),
+                other => decl.push(other),
+            }
+        }
+        merge(&mut state, snapshot(&scopes));
+        out.push(Line {
+            number: idx + 1,
+            code: code.clone(),
+            in_test: state.0,
+            fn_name: state.1,
+            impl_name: state.2,
+            struct_name: state.3,
+            mod_name: state.4,
+        });
+    }
+    out
+}
+
+fn merge(into: &mut ScopeSnapshot, other: ScopeSnapshot) {
+    into.0 |= other.0;
+    if into.1.is_none() {
+        into.1 = other.1;
+    }
+    if into.2.is_none() {
+        into.2 = other.2;
+    }
+    if into.3.is_none() {
+        into.3 = other.3;
+    }
+    if into.4.is_none() {
+        into.4 = other.4;
+    }
+}
+
+type ScopeSnapshot =
+    (bool, Option<String>, Option<String>, Option<String>, Option<String>);
+
+fn snapshot(scopes: &[Scope]) -> ScopeSnapshot {
+    let in_test = scopes.iter().any(|s| s.is_test);
+    let mut fn_name = None;
+    let mut impl_name = None;
+    let mut struct_name = None;
+    let mut mod_name = None;
+    for s in scopes.iter().rev() {
+        match &s.kind {
+            ScopeKind::Fn(n) if fn_name.is_none() => fn_name = Some(n.clone()),
+            ScopeKind::Impl(n) if impl_name.is_none() => impl_name = Some(n.clone()),
+            ScopeKind::Struct(n) if struct_name.is_none() => struct_name = Some(n.clone()),
+            ScopeKind::Mod(n) if mod_name.is_none() => mod_name = Some(n.clone()),
+            _ => {}
+        }
+    }
+    (in_test, fn_name, impl_name, struct_name, mod_name)
+}
+
+/// Classify the block a `{` opens from the declaration text before it.
+/// Returns the scope kind and whether the decl itself marks test code.
+fn classify(decl: &str) -> (ScopeKind, bool) {
+    let is_test = decl.contains("#[cfg(test)]") || decl.contains("#[test]");
+    let tokens: Vec<&str> = decl
+        .split(|c: char| !(c.is_alphanumeric() || c == '_'))
+        .filter(|t| !t.is_empty())
+        .collect();
+    let after = |kw: &str| {
+        tokens
+            .iter()
+            .position(|t| *t == kw)
+            .and_then(|p| tokens.get(p + 1))
+            .map(|t| t.to_string())
+            .unwrap_or_default()
+    };
+    // `fn` first: a fn signature may carry `impl Trait` in return
+    // position, but an `impl` header never contains the token `fn`.
+    let kind = if tokens.contains(&"fn") {
+        ScopeKind::Fn(after("fn"))
+    } else if tokens.contains(&"mod") {
+        ScopeKind::Mod(after("mod"))
+    } else if tokens.contains(&"struct") || tokens.contains(&"enum") || tokens.contains(&"union") {
+        let kw = if tokens.contains(&"struct") {
+            "struct"
+        } else if tokens.contains(&"enum") {
+            "enum"
+        } else {
+            "union"
+        };
+        ScopeKind::Struct(after(kw))
+    } else if tokens.contains(&"impl") {
+        let name = if tokens.contains(&"for") { after("for") } else { after("impl") };
+        ScopeKind::Impl(name)
+    } else {
+        ScopeKind::Block
+    };
+    (kind, is_test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_comments_and_strings() {
+        let s = scan("let a = \"Instant::now()\"; // Instant::now()\nlet b = 1; /* x */ let c = 2;\n");
+        assert_eq!(s.lines[0].code, "let a = \"\"; ");
+        assert!(s.lines[1].code.contains("let b = 1;"));
+        assert!(s.lines[1].code.contains("let c = 2;"));
+        assert!(!s.lines[1].code.contains("x"));
+        assert_eq!(s.strings[0].text, "Instant::now()");
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        let s = scan("fn f<'a>(x: &'a str) -> char { let c = 'x'; let d = '\\n'; c }\n");
+        assert!(s.lines[0].code.contains("&'a str"), "{}", s.lines[0].code);
+        assert!(!s.lines[0].code.contains("'x'"));
+    }
+
+    #[test]
+    fn raw_strings_are_captured() {
+        let s = scan("let a = r#\"quote \" inside\"#; let b = 0;\n");
+        assert_eq!(s.strings[0].text, "quote \" inside");
+        assert!(s.lines[0].code.contains("let b = 0;"));
+    }
+
+    #[test]
+    fn tracks_test_regions_and_fn_names() {
+        let src = "fn live() { x(); }\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                   use super::*;\n\
+                   #[test]\n\
+                   fn truncated_decode_case() { y(); }\n\
+                   }\n\
+                   fn live2() { z(); }\n";
+        let s = scan(src);
+        assert!(!s.lines[0].in_test);
+        assert_eq!(s.lines[0].fn_name.as_deref(), Some("live"));
+        assert!(s.lines[3].in_test, "inside mod tests");
+        assert!(s.lines[5].in_test);
+        assert_eq!(s.lines[5].fn_name.as_deref(), Some("truncated_decode_case"));
+        assert!(!s.lines[7].in_test, "after the tests mod closes");
+        assert_eq!(s.lines[7].fn_name.as_deref(), Some("live2"));
+    }
+
+    #[test]
+    fn tracks_struct_impl_and_mod_names() {
+        let src = "pub mod kind {\npub const PATCH: u8 = 1;\n}\n\
+                   pub struct Counters {\npub a: u64,\n}\n\
+                   impl Meter {\nfn write_csv(&self) { let h = \"col_a\"; }\n}\n";
+        let s = scan(src);
+        assert_eq!(s.lines[1].mod_name.as_deref(), Some("kind"));
+        assert_eq!(s.lines[4].struct_name.as_deref(), Some("Counters"));
+        assert_eq!(s.lines[7].impl_name.as_deref(), Some("Meter"));
+        let lit = s.strings.iter().find(|l| l.text == "col_a").unwrap();
+        assert_eq!(lit.impl_name.as_deref(), Some("Meter"));
+        assert_eq!(lit.fn_name.as_deref(), Some("write_csv"));
+    }
+
+    #[test]
+    fn parses_pragmas() {
+        let s = scan(
+            "// pallas-lint: allow(clock-seam): bench loops time real work\n\
+             let t = 1; // pallas-lint: allow(retry-discipline): bounded poll\n\
+             // pallas-lint: allow(clock-seam) missing reason colon\n\
+             // pallas-lint: allow(clock-seam):\n\
+             // a normal comment\n",
+        );
+        assert_eq!(s.pragmas.len(), 4);
+        assert_eq!(s.pragmas[0].rule, "clock-seam");
+        assert_eq!(s.pragmas[0].reason, "bench loops time real work");
+        assert!(s.pragmas[0].malformed.is_none());
+        assert_eq!(s.pragmas[1].line, 2);
+        assert!(s.pragmas[2].malformed.is_some(), "no `:` clause");
+        assert!(s.pragmas[3].malformed.is_some(), "empty reason");
+    }
+
+    #[test]
+    fn fn_with_impl_in_return_position_is_a_fn() {
+        let s = scan("fn catchup(&self) -> impl Iterator<Item = u8> + '_ {\nlet x = 1;\n}\n");
+        assert_eq!(s.lines[1].fn_name.as_deref(), Some("catchup"));
+        assert!(s.lines[1].impl_name.is_none());
+    }
+}

@@ -1,0 +1,536 @@
+//! `paper lint` — the repo-invariant static analysis pass.
+//!
+//! PULSE's bit-identical-sync claim rests on source disciplines that
+//! reviewers previously enforced by memory (the PR 7 wall-clock audit,
+//! PR 6's "RetryPolicy behind every wait", the counter↔CSV columns
+//! kept in sync by hand across PRs 4–8). This module machine-checks
+//! them: [`lexer`] strips comments/strings and tracks test regions,
+//! [`rules`] runs the six repo rules over the lexed files, and
+//! [`run_lint`] walks `rust/src` and produces a [`LintReport`] the
+//! `paper lint` subcommand renders (human + `results/lint.json`) and
+//! CI blocks on.
+//!
+//! Suppressions are pragmas only — a comment *starting* with
+//! `pallas-lint: allow(<rule>): <reason>` on the violating line or the
+//! line directly above. The reason is mandatory; malformed pragmas are
+//! findings themselves and cannot be suppressed. Suppressed findings
+//! stay in the JSON report as an audit trail.
+//!
+//! Scope: `rust/src/**/*.rs`. Integration tests (`rust/tests/`),
+//! benches, and `vendor/` are outside the wire-path surface the rules
+//! guard and are not scanned.
+
+pub mod lexer;
+pub mod rules;
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+pub use rules::{evaluate, Finding, SourceFile, PRAGMA_RULE, RULES};
+
+use crate::util::json::Json;
+
+/// Everything one lint run produced.
+#[derive(Debug)]
+pub struct LintReport {
+    /// Number of `.rs` files scanned.
+    pub files_scanned: usize,
+    /// All findings, active and suppressed, sorted by (file, line).
+    pub findings: Vec<Finding>,
+}
+
+impl LintReport {
+    /// Findings not covered by an allow-pragma — these fail the run.
+    pub fn active(&self) -> impl Iterator<Item = &Finding> {
+        self.findings.iter().filter(|f| f.suppressed.is_none())
+    }
+
+    /// Findings covered by an allow-pragma (audit trail).
+    pub fn suppressed(&self) -> impl Iterator<Item = &Finding> {
+        self.findings.iter().filter(|f| f.suppressed.is_some())
+    }
+
+    pub fn is_clean(&self) -> bool {
+        self.active().next().is_none()
+    }
+
+    /// Human-readable rendering: one line per active finding, then the
+    /// summary. Suppressed findings are listed in brief because a
+    /// suppression is a reviewable decision, not a deletion.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for f in self.active() {
+            out.push_str(&format!("{}:{} [{}] {}\n", f.file, f.line, f.rule, f.message));
+        }
+        let n_active = self.active().count();
+        let n_supp = self.suppressed().count();
+        if n_supp > 0 {
+            out.push_str(&format!("suppressed ({}):\n", n_supp));
+            for f in self.suppressed() {
+                out.push_str(&format!(
+                    "  {}:{} [{}] allowed: {}\n",
+                    f.file,
+                    f.line,
+                    f.rule,
+                    f.suppressed.as_deref().unwrap_or("")
+                ));
+            }
+        }
+        out.push_str(&format!(
+            "lint: {} file(s), {} finding(s), {} suppressed — {}\n",
+            self.files_scanned,
+            n_active,
+            n_supp,
+            if n_active == 0 { "clean" } else { "FAIL" }
+        ));
+        out
+    }
+
+    /// Machine-readable report (`results/lint.json`).
+    pub fn to_json(&self) -> Json {
+        let mut root = Json::obj();
+        root.set("files_scanned", self.files_scanned.into());
+        root.set("active", self.active().count().into());
+        root.set("suppressed", self.suppressed().count().into());
+        root.set("clean", self.is_clean().into());
+        let rules: Vec<Json> = RULES
+            .iter()
+            .map(|(name, desc)| {
+                let mut r = Json::obj();
+                r.set("name", (*name).into());
+                r.set("description", (*desc).into());
+                r
+            })
+            .collect();
+        root.set("rules", Json::Arr(rules));
+        let findings: Vec<Json> = self
+            .findings
+            .iter()
+            .map(|f| {
+                let mut j = Json::obj();
+                j.set("rule", f.rule.into());
+                j.set("file", f.file.as_str().into());
+                j.set("line", f.line.into());
+                j.set("message", f.message.as_str().into());
+                j.set(
+                    "suppressed",
+                    match &f.suppressed {
+                        Some(reason) => reason.as_str().into(),
+                        None => Json::Null,
+                    },
+                );
+                j
+            })
+            .collect();
+        root.set("findings", Json::Arr(findings));
+        root
+    }
+}
+
+/// Lint a set of in-memory sources, given as (repo-src-relative path,
+/// source text) pairs. This is the fixture-testable core; [`run_lint`]
+/// feeds it from disk.
+pub fn lint_sources(sources: &[(&str, &str)]) -> LintReport {
+    let files: Vec<SourceFile> = sources
+        .iter()
+        .map(|(path, text)| SourceFile { path: path.to_string(), scan: lexer::scan(text) })
+        .collect();
+    let findings = evaluate(&files);
+    LintReport { files_scanned: files.len(), findings }
+}
+
+/// Walk `src_root` for `.rs` files and lint them. Paths in findings are
+/// relative to `src_root` with forward slashes (`net/tcp.rs`).
+pub fn run_lint(src_root: &Path) -> Result<LintReport> {
+    let mut paths: Vec<std::path::PathBuf> = Vec::new();
+    collect_rs(src_root, &mut paths)
+        .with_context(|| format!("walking {}", src_root.display()))?;
+    paths.sort();
+    let mut files: Vec<SourceFile> = Vec::new();
+    for p in &paths {
+        let text = std::fs::read_to_string(p)
+            .with_context(|| format!("reading {}", p.display()))?;
+        let rel = p
+            .strip_prefix(src_root)
+            .unwrap_or(p)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy().into_owned())
+            .collect::<Vec<_>>()
+            .join("/");
+        files.push(SourceFile { path: rel, scan: lexer::scan(&text) });
+    }
+    let findings = evaluate(&files);
+    Ok(LintReport { files_scanned: files.len(), findings })
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if entry.file_type()?.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn active_rules(report: &LintReport) -> Vec<&'static str> {
+        report.active().map(|f| f.rule).collect()
+    }
+
+    // ---------------------------------------------------- clock-seam
+
+    #[test]
+    fn clock_seam_failing_suppressed_clean() {
+        // failing: wall-clock read in non-test code outside the seam
+        let r = lint_sources(&[(
+            "pulse/sync.rs",
+            "fn poll() { let t = std::time::Instant::now(); }\n",
+        )]);
+        assert_eq!(active_rules(&r), ["clock-seam"]);
+        assert_eq!(r.findings[0].line, 1);
+
+        // suppressed: pragma on the line above, with a reason
+        let r = lint_sources(&[(
+            "pulse/sync.rs",
+            "fn poll() {\n\
+             // pallas-lint: allow(clock-seam): measuring real wall time for the report\n\
+             let t = std::time::Instant::now();\n\
+             }\n",
+        )]);
+        assert!(r.is_clean(), "{}", r.render());
+        assert_eq!(r.suppressed().count(), 1);
+        assert_eq!(
+            r.suppressed().next().unwrap().suppressed.as_deref(),
+            Some("measuring real wall time for the report")
+        );
+
+        // clean: test code and the sim clock seam itself may read time
+        let r = lint_sources(&[
+            (
+                "pulse/sync.rs",
+                "#[cfg(test)]\nmod tests {\nfn t() { let t = Instant::now(); }\n}\n",
+            ),
+            ("sim/clock.rs", "fn now() -> Instant { Instant::now() }\n"),
+        ]);
+        assert!(r.is_clean(), "{}", r.render());
+        assert_eq!(r.suppressed().count(), 0);
+    }
+
+    #[test]
+    fn clock_seam_catches_system_time() {
+        let r = lint_sources(&[("util/x.rs", "fn f() { let t = SystemTime::now(); }\n")]);
+        assert_eq!(active_rules(&r), ["clock-seam"]);
+    }
+
+    // ----------------------------------------------- retry-discipline
+
+    #[test]
+    fn retry_discipline_failing_suppressed_clean() {
+        let src = "fn wait() { std::thread::sleep(d); }\n";
+        // failing: raw sleep outside util/retry.rs
+        let r = lint_sources(&[("net/relay.rs", src)]);
+        assert_eq!(active_rules(&r), ["retry-discipline"]);
+
+        // suppressed: same-line pragma
+        let r = lint_sources(&[(
+            "net/relay.rs",
+            "fn wait() { std::thread::sleep(d); } \
+             // pallas-lint: allow(retry-discipline): bounded drain poll, max 100 iters\n",
+        )]);
+        assert!(r.is_clean(), "{}", r.render());
+        assert_eq!(r.suppressed().count(), 1);
+
+        // clean: util/retry.rs owns the sleep; test code may sleep
+        let r = lint_sources(&[
+            ("util/retry.rs", src),
+            ("net/relay.rs", "#[cfg(test)]\nmod tests {\nfn t() { std::thread::sleep(d); }\n}\n"),
+        ]);
+        assert!(r.is_clean(), "{}", r.render());
+    }
+
+    // ------------------------------------------------- panic-free-net
+
+    #[test]
+    fn panic_free_net_failing_suppressed_clean() {
+        // failing: each panic-family pattern on a non-test net/ line
+        for bad in
+            ["x.unwrap();", "x.expect(\"y\");", "panic!(\"z\");", "unreachable!();"]
+        {
+            let src = format!("fn decode() {{ {} }}\n", bad);
+            let r = lint_sources(&[("net/tcp.rs", &src)]);
+            assert_eq!(active_rules(&r), ["panic-free-net"], "pattern {}", bad);
+        }
+
+        // suppressed: the poisoned-lock idiom with an annotated allow
+        let r = lint_sources(&[(
+            "net/store.rs",
+            "fn stats(&self) {\n\
+             // pallas-lint: allow(panic-free-net): lock poisoning is unrecoverable here\n\
+             let g = self.inner.lock().unwrap();\n\
+             }\n",
+        )]);
+        assert!(r.is_clean(), "{}", r.render());
+
+        // clean: unwrap in net/ test code, and anywhere outside net/
+        let r = lint_sources(&[
+            ("net/tcp.rs", "#[cfg(test)]\nmod tests {\nfn t() { x.unwrap(); }\n}\n"),
+            ("codec/mod.rs", "fn f() { x.unwrap(); }\n"),
+        ]);
+        assert!(r.is_clean(), "{}", r.render());
+    }
+
+    #[test]
+    fn panic_free_net_ignores_patterns_inside_strings() {
+        let r = lint_sources(&[(
+            "net/tcp.rs",
+            "fn f() -> String { format!(\"do not panic!({})\", x) }\n",
+        )]);
+        assert!(r.is_clean(), "{}", r.render());
+    }
+
+    // ----------------------------------------------- bounded-channels
+
+    #[test]
+    fn bounded_channels_failing_suppressed_clean() {
+        // failing: unbounded channel on a sim/ path
+        let r = lint_sources(&[("sim/mod.rs", "fn f() { let (tx, rx) = mpsc::channel(); }\n")]);
+        assert_eq!(active_rules(&r), ["bounded-channels"]);
+
+        // suppressed
+        let r = lint_sources(&[(
+            "net/relay.rs",
+            "// pallas-lint: allow(bounded-channels): drained synchronously below, depth <= 1\n\
+             fn f() { let (tx, rx) = mpsc::channel(); }\n",
+        )]);
+        assert!(r.is_clean(), "{}", r.render());
+
+        // clean: sync_channel is bounded; non-net/sim paths are out of scope
+        let r = lint_sources(&[
+            ("net/relay.rs", "fn f() { let (tx, rx) = mpsc::sync_channel(8); }\n"),
+            ("coordinator/mod.rs", "fn f() { let (tx, rx) = mpsc::channel(); }\n"),
+        ]);
+        assert!(r.is_clean(), "{}", r.render());
+    }
+
+    // ------------------------------------------- frame-kind-coverage
+
+    fn tcp_with_kinds(kinds: &str) -> String {
+        format!("pub mod kind {{\n{}}}\n", kinds)
+    }
+
+    #[test]
+    fn frame_kind_coverage_failing_suppressed_clean() {
+        // failing: a kind with neither dispatch nor truncation test
+        let tcp = tcp_with_kinds("pub const PATCH: u8 = 1;\n");
+        let r = lint_sources(&[("net/tcp.rs", &tcp)]);
+        let rules = active_rules(&r);
+        assert_eq!(rules, ["frame-kind-coverage", "frame-kind-coverage"]);
+        assert!(r.findings.iter().all(|f| f.line == 2), "anchors at the const");
+
+        // suppressed: one pragma above the const covers both legs
+        let tcp = tcp_with_kinds(
+            "// pallas-lint: allow(frame-kind-coverage): reserved kind, dispatch lands in PR 10\n\
+             pub const PATCH: u8 = 1;\n",
+        );
+        let r = lint_sources(&[("net/tcp.rs", &tcp)]);
+        assert!(r.is_clean(), "{}", r.render());
+        assert_eq!(r.suppressed().count(), 2);
+
+        // clean: dispatched by non-test net/ code outside tcp.rs AND
+        // referenced by a truncated-decode test
+        let tcp = tcp_with_kinds("pub const PATCH: u8 = 1;\n");
+        let relay = "fn route(k: u8) { if k == kind::PATCH { stage(); } }\n";
+        let tests = "#[cfg(test)]\nmod tests {\n#[test]\n\
+                     fn truncated_patch() { decode(kind::PATCH); }\n}\n";
+        let r = lint_sources(&[
+            ("net/tcp.rs", &tcp),
+            ("net/relay.rs", relay),
+            ("net/node.rs", tests),
+        ]);
+        assert!(r.is_clean(), "{}", r.render());
+    }
+
+    #[test]
+    fn frame_kind_reference_needs_word_boundary() {
+        // kind::NACK_MISS references must NOT satisfy kind::NACK
+        let tcp = tcp_with_kinds("pub const NACK: u8 = 5;\npub const NACK_MISS: u8 = 6;\n");
+        let relay = "fn route(k: u8) { if k == kind::NACK_MISS { fall_back(); } }\n";
+        let tests = "#[cfg(test)]\nmod tests {\n#[test]\n\
+                     fn truncated_nacks() { decode(kind::NACK); decode(kind::NACK_MISS); }\n}\n";
+        let r = lint_sources(&[
+            ("net/tcp.rs", &tcp),
+            ("net/relay.rs", relay),
+            ("net/node.rs", tests),
+        ]);
+        // NACK_MISS is fully covered; NACK still lacks dispatch
+        let act: Vec<_> = r.active().collect();
+        assert_eq!(act.len(), 1, "{}", r.render());
+        assert!(act[0].message.contains("`NACK`"), "{}", act[0].message);
+        assert!(act[0].message.contains("dispatched"), "{}", act[0].message);
+    }
+
+    // -------------------------------------------- counter-csv-drift
+
+    const COUNTERS: &str = "pub struct TransportCounters {\n\
+                            pub frames_published: u64,\n\
+                            pub retries: u64,\n\
+                            }\n";
+    const STATS: &str = "pub struct SyncStats {\n\
+                         pub bytes_downloaded: u64,\n\
+                         pub verified: bool,\n\
+                         }\n";
+
+    #[test]
+    fn counter_csv_drift_failing_suppressed_clean() {
+        let meter_full = "pub struct TransportMeter {}\nimpl TransportMeter {\n\
+                          fn write_csv(&self) {\n\
+                          let cols = [\"frames_published\", \"retries\", \"bytes_downloaded\"];\n\
+                          }\n}\n";
+        let meter_missing = "pub struct TransportMeter {}\nimpl TransportMeter {\n\
+                             fn write_csv(&self) {\n\
+                             let cols = [\"frames_published\", \"retries\"];\n\
+                             }\n}\n";
+
+        // failing: SyncStats.bytes_downloaded has no column
+        let r = lint_sources(&[
+            ("net/transport.rs", COUNTERS),
+            ("pulse/sync.rs", STATS),
+            ("coordinator/metrics.rs", meter_missing),
+        ]);
+        assert_eq!(active_rules(&r), ["counter-csv-drift"]);
+        let f = r.active().next().unwrap();
+        assert_eq!(f.file, "pulse/sync.rs");
+        assert!(f.message.contains("bytes_downloaded"), "{}", f.message);
+
+        // suppressed: pragma above the drifting field
+        let stats = "pub struct SyncStats {\n\
+                     // pallas-lint: allow(counter-csv-drift): per-call bracket, meaningless summed\n\
+                     pub bytes_downloaded: u64,\n\
+                     }\n";
+        let r = lint_sources(&[
+            ("net/transport.rs", COUNTERS),
+            ("pulse/sync.rs", stats),
+            ("coordinator/metrics.rs", meter_missing),
+        ]);
+        assert!(r.is_clean(), "{}", r.render());
+
+        // clean: every numeric field has a column; bool/str fields and
+        // column names outside TransportMeter::write_csv are ignored
+        let r = lint_sources(&[
+            ("net/transport.rs", COUNTERS),
+            ("pulse/sync.rs", STATS),
+            ("coordinator/metrics.rs", meter_full),
+        ]);
+        assert!(r.is_clean(), "{}", r.render());
+    }
+
+    #[test]
+    fn csv_columns_outside_write_csv_do_not_count() {
+        let meter = "pub struct TransportMeter {}\nimpl TransportMeter {\n\
+                     fn other(&self) { let x = \"frames_published\"; }\n\
+                     fn write_csv(&self) { let cols = [\"nope\"]; }\n}\n";
+        let r = lint_sources(&[
+            ("net/transport.rs", "pub struct TransportCounters {\npub frames_published: u64,\n}\n"),
+            ("coordinator/metrics.rs", meter),
+        ]);
+        assert_eq!(active_rules(&r), ["counter-csv-drift"]);
+    }
+
+    // ------------------------------------------------ pragma hygiene
+
+    #[test]
+    fn malformed_pragmas_are_findings_and_unsuppressible() {
+        // missing reason clause
+        let r = lint_sources(&[(
+            "net/relay.rs",
+            "// pallas-lint: allow(clock-seam) forgot the colon\nfn f() {}\n",
+        )]);
+        assert_eq!(active_rules(&r), ["pragma"]);
+
+        // empty reason
+        let r = lint_sources(&[("a.rs", "// pallas-lint: allow(clock-seam):\n")]);
+        assert_eq!(active_rules(&r), ["pragma"]);
+
+        // unknown rule name
+        let r = lint_sources(&[("a.rs", "// pallas-lint: allow(no-such-rule): why\n")]);
+        assert_eq!(active_rules(&r), ["pragma"]);
+        assert!(r.findings[0].message.contains("no-such-rule"));
+
+        // a malformed pragma cannot suppress itself or a real finding
+        let r = lint_sources(&[(
+            "net/x.rs",
+            "// pallas-lint: allow(panic-free-net) oops\nfn f() { x.unwrap(); }\n",
+        )]);
+        let mut rules = active_rules(&r);
+        rules.sort();
+        assert_eq!(rules, ["panic-free-net", "pragma"]);
+
+        // prose that merely mentions the marker is not a pragma
+        let r = lint_sources(&[(
+            "a.rs",
+            "// suppressions use pallas-lint: allow(...) comments, see README\n",
+        )]);
+        assert!(r.is_clean(), "{}", r.render());
+    }
+
+    #[test]
+    fn pragma_only_reaches_its_own_rule_and_adjacent_lines() {
+        // wrong rule name → no suppression
+        let r = lint_sources(&[(
+            "net/x.rs",
+            "// pallas-lint: allow(clock-seam): wrong rule\nfn f() { x.unwrap(); }\n",
+        )]);
+        assert_eq!(active_rules(&r), ["panic-free-net"]);
+
+        // two lines above → out of range
+        let r = lint_sources(&[(
+            "net/x.rs",
+            "// pallas-lint: allow(panic-free-net): too far away\n\nfn f() { x.unwrap(); }\n",
+        )]);
+        assert_eq!(active_rules(&r), ["panic-free-net"]);
+    }
+
+    // ------------------------------------------------ report surface
+
+    #[test]
+    fn json_report_shape() {
+        let r = lint_sources(&[(
+            "net/x.rs",
+            "fn f() { x.unwrap(); }\n\
+             // pallas-lint: allow(panic-free-net): demo\n\
+             fn g() { y.unwrap(); }\n",
+        )]);
+        let j = r.to_json();
+        assert_eq!(j.req_usize("files_scanned").unwrap(), 1);
+        assert_eq!(j.req_usize("active").unwrap(), 1);
+        assert_eq!(j.req_usize("suppressed").unwrap(), 1);
+        assert!(!j.get("clean").unwrap().as_bool().unwrap());
+        assert_eq!(j.get("rules").unwrap().as_arr().unwrap().len(), RULES.len());
+        let f0 = j.get("findings").unwrap().idx(0).unwrap();
+        assert_eq!(f0.req_str("file").unwrap(), "net/x.rs");
+        assert_eq!(f0.req_str("rule").unwrap(), "panic-free-net");
+        // round-trips through the parser
+        assert!(Json::parse(&j.to_pretty()).is_ok());
+    }
+
+    // -------------------------------------------- the real repo gate
+
+    /// Tier-1 regression gate: the repo itself must be lint-clean.
+    /// CI's blocking `lint` job runs `paper lint`; this test makes the
+    /// same check part of every local `cargo test`.
+    #[test]
+    fn repo_is_lint_clean() {
+        let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+        let report = run_lint(&src).expect("scan rust/src");
+        assert!(report.files_scanned > 40, "walker found {} files", report.files_scanned);
+        assert!(report.is_clean(), "repo lint findings:\n{}", report.render());
+    }
+}

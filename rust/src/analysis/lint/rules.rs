@@ -1,0 +1,385 @@
+//! The repo-invariant rule set behind `paper lint`.
+//!
+//! Each rule machine-checks a discipline the sync plane's correctness
+//! story rests on (see README §Static analysis for the table):
+//!
+//! * `clock-seam` — the only file that may read the wall clock
+//!   unjustified is `sim/clock.rs` (the `Clock` seam). Every other
+//!   `Instant::now()` / `SystemTime::now()` outside test code needs a
+//!   pragma saying why virtual time cannot drive it — one stray read
+//!   breaks bit-identical scale-sim replay.
+//! * `retry-discipline` — no raw `thread::sleep` wait loops outside
+//!   `util/retry.rs`: every wait rides a `RetryPolicy` (budgeted,
+//!   seeded, sim-replayable) or justifies itself.
+//! * `panic-free-net` — no `unwrap()` / `expect()` / `panic!` family
+//!   macros in non-test `net/` code: a torn frame must surface as a
+//!   propagated `Err` the retry machinery can heal, never a worker
+//!   panic.
+//! * `bounded-channels` — no unbounded `mpsc::channel` on net/sim
+//!   paths; backpressure must be explicit (the repo's queues are
+//!   depth-bounded by design, PR 2/4).
+//! * `frame-kind-coverage` — every frame-kind constant in
+//!   `net/tcp.rs` is (a) dispatched by non-test net code outside
+//!   tcp.rs and (b) exercised by a truncated-decode test. (The chaos
+//!   layer's partition logic is deliberately kind-agnostic — it keys
+//!   on `FRAME_HEADER_LEN` writes — so coverage is checked where kinds
+//!   actually matter: dispatch and decode.)
+//! * `counter-csv-drift` — every numeric `TransportCounters` /
+//!   `SyncStats` field surfaces as a `TransportMeter` CSV column, so
+//!   a counter added in a future PR cannot silently vanish from
+//!   `results/*.csv`.
+//!
+//! A finding is suppressible only by a pragma comment on the same line
+//! or the line directly above, carrying the rule name and a non-empty
+//! reason (grammar in [`super::lexer::Pragma`]). Malformed pragmas are
+//! findings themselves (`pragma` rule) and cannot be suppressed.
+
+use super::lexer::FileScan;
+
+/// Rule names, paired with one-line descriptions (the `paper lint`
+/// header and README table are generated from this).
+pub const RULES: &[(&str, &str)] = &[
+    ("clock-seam", "wall-clock reads only in sim/clock.rs, tests, or under a justification"),
+    ("retry-discipline", "no raw thread::sleep outside util/retry.rs without a justification"),
+    ("panic-free-net", "no unwrap/expect/panic! in non-test net/ code"),
+    ("bounded-channels", "no unbounded mpsc::channel on net/ or sim/ paths"),
+    ("frame-kind-coverage", "every tcp.rs frame kind is dispatched and truncation-tested"),
+    ("counter-csv-drift", "every TransportCounters/SyncStats counter lands in the meter CSV"),
+];
+
+/// The pseudo-rule malformed pragmas are reported under.
+pub const PRAGMA_RULE: &str = "pragma";
+
+/// One lint finding. `suppressed` carries the pragma reason when an
+/// allow-pragma covers the finding (suppressed findings still land in
+/// the JSON report — a suppression is an audit trail, not an eraser).
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+    pub suppressed: Option<String>,
+}
+
+/// A lexed source file plus its path relative to the scan root
+/// (forward slashes, e.g. `net/tcp.rs`).
+pub struct SourceFile {
+    pub path: String,
+    pub scan: FileScan,
+}
+
+/// Run every rule over the file set and resolve suppressions.
+pub fn evaluate(files: &[SourceFile]) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for f in files {
+        clock_seam(f, &mut findings);
+        retry_discipline(f, &mut findings);
+        panic_free_net(f, &mut findings);
+        bounded_channels(f, &mut findings);
+        pragma_hygiene(f, &mut findings);
+    }
+    frame_kind_coverage(files, &mut findings);
+    counter_csv_drift(files, &mut findings);
+    suppress(files, &mut findings);
+    findings.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    findings
+}
+
+// ------------------------------------------------------------ per-file
+
+fn clock_seam(f: &SourceFile, out: &mut Vec<Finding>) {
+    if f.path == "sim/clock.rs" {
+        return;
+    }
+    for l in &f.scan.lines {
+        if l.in_test {
+            continue;
+        }
+        for pat in ["Instant::now", "SystemTime::now"] {
+            if l.code.contains(pat) {
+                out.push(Finding {
+                    rule: "clock-seam",
+                    file: f.path.clone(),
+                    line: l.number,
+                    message: format!(
+                        "`{}` outside the sim clock seam — breaks virtual-time replay",
+                        pat
+                    ),
+                    suppressed: None,
+                });
+                break;
+            }
+        }
+    }
+}
+
+fn retry_discipline(f: &SourceFile, out: &mut Vec<Finding>) {
+    if f.path == "util/retry.rs" {
+        return;
+    }
+    for l in &f.scan.lines {
+        if !l.in_test && l.code.contains("thread::sleep") {
+            out.push(Finding {
+                rule: "retry-discipline",
+                file: f.path.clone(),
+                line: l.number,
+                message: "raw `thread::sleep` — waits must ride a RetryPolicy or justify \
+                          themselves"
+                    .to_string(),
+                suppressed: None,
+            });
+        }
+    }
+}
+
+fn panic_free_net(f: &SourceFile, out: &mut Vec<Finding>) {
+    if !f.path.starts_with("net/") {
+        return;
+    }
+    const PATTERNS: &[&str] =
+        &[".unwrap()", ".expect(", "panic!", "unreachable!", "todo!", "unimplemented!"];
+    for l in &f.scan.lines {
+        if l.in_test {
+            continue;
+        }
+        for pat in PATTERNS {
+            if l.code.contains(pat) {
+                out.push(Finding {
+                    rule: "panic-free-net",
+                    file: f.path.clone(),
+                    line: l.number,
+                    message: format!(
+                        "`{}` on a wire path — net/ code must propagate errors, not panic",
+                        pat.trim_start_matches('.')
+                    ),
+                    suppressed: None,
+                });
+                break;
+            }
+        }
+    }
+}
+
+fn bounded_channels(f: &SourceFile, out: &mut Vec<Finding>) {
+    if !(f.path.starts_with("net/") || f.path.starts_with("sim/")) {
+        return;
+    }
+    for l in &f.scan.lines {
+        // `mpsc::sync_channel` (bounded) does not contain the pattern
+        if !l.in_test && l.code.contains("mpsc::channel") {
+            out.push(Finding {
+                rule: "bounded-channels",
+                file: f.path.clone(),
+                line: l.number,
+                message: "unbounded `mpsc::channel` on a net/sim path — use a depth-bounded \
+                          queue (`mpsc::sync_channel` or the relay SubQueue pattern)"
+                    .to_string(),
+                suppressed: None,
+            });
+        }
+    }
+}
+
+fn pragma_hygiene(f: &SourceFile, out: &mut Vec<Finding>) {
+    for p in &f.scan.pragmas {
+        if let Some(err) = &p.malformed {
+            out.push(Finding {
+                rule: PRAGMA_RULE,
+                file: f.path.clone(),
+                line: p.line,
+                message: format!("malformed pragma: {}", err),
+                suppressed: None,
+            });
+        } else if !RULES.iter().any(|(name, _)| *name == p.rule) {
+            out.push(Finding {
+                rule: PRAGMA_RULE,
+                file: f.path.clone(),
+                line: p.line,
+                message: format!("pragma allows unknown rule `{}`", p.rule),
+                suppressed: None,
+            });
+        }
+    }
+}
+
+// -------------------------------------------------------------- global
+
+/// True when `code` references `kind::<name>` as a full path segment
+/// (so `kind::NACK` does not match `kind::NACK_MISS`).
+fn references_kind(code: &str, name: &str) -> bool {
+    let pat = format!("kind::{}", name);
+    let mut from = 0;
+    while let Some(pos) = code[from..].find(&pat) {
+        let end = from + pos + pat.len();
+        let boundary = code[end..]
+            .chars()
+            .next()
+            .map(|c| !(c.is_alphanumeric() || c == '_'))
+            .unwrap_or(true);
+        if boundary {
+            return true;
+        }
+        from = end;
+    }
+    false
+}
+
+fn frame_kind_coverage(files: &[SourceFile], out: &mut Vec<Finding>) {
+    // the frame-kind registry: `pub const NAME: u8 = n;` inside
+    // `mod kind` in net/tcp.rs
+    let Some(tcp) = files.iter().find(|f| f.path == "net/tcp.rs") else {
+        return;
+    };
+    let mut kinds: Vec<(String, usize)> = Vec::new();
+    for l in &tcp.scan.lines {
+        if l.in_test || l.mod_name.as_deref() != Some("kind") {
+            continue;
+        }
+        let toks: Vec<&str> = l
+            .code
+            .split(|c: char| !(c.is_alphanumeric() || c == '_'))
+            .filter(|t| !t.is_empty())
+            .collect();
+        if let Some(p) = toks.iter().position(|t| *t == "const") {
+            if let Some(name) = toks.get(p + 1) {
+                kinds.push((name.to_string(), l.number));
+            }
+        }
+    }
+    for (name, def_line) in kinds {
+        let mut dispatched = false;
+        let mut truncation_tested = false;
+        for f in files {
+            for l in &f.scan.lines {
+                if !references_kind(&l.code, &name) {
+                    continue;
+                }
+                if !l.in_test && f.path.starts_with("net/") && f.path != "net/tcp.rs" {
+                    dispatched = true;
+                }
+                if l.in_test
+                    && l.fn_name.as_deref().is_some_and(|n| n.contains("truncated"))
+                {
+                    truncation_tested = true;
+                }
+            }
+        }
+        if !dispatched {
+            out.push(Finding {
+                rule: "frame-kind-coverage",
+                file: tcp.path.clone(),
+                line: def_line,
+                message: format!(
+                    "frame kind `{}` is never dispatched by non-test net/ code outside tcp.rs",
+                    name
+                ),
+                suppressed: None,
+            });
+        }
+        if !truncation_tested {
+            out.push(Finding {
+                rule: "frame-kind-coverage",
+                file: tcp.path.clone(),
+                line: def_line,
+                message: format!(
+                    "frame kind `{}` has no truncated-decode test (no `*truncated*` test fn \
+                     references it)",
+                    name
+                ),
+                suppressed: None,
+            });
+        }
+    }
+}
+
+/// Parse `pub <name>: <type>` off a struct-field line; returns the
+/// field name when the type is a scalar counter type.
+fn counter_field(code: &str) -> Option<String> {
+    let (lhs, rhs) = code.split_once(':')?;
+    let lhs_toks: Vec<&str> = lhs
+        .split(|c: char| !(c.is_alphanumeric() || c == '_'))
+        .filter(|t| !t.is_empty())
+        .collect();
+    if lhs_toks.first() != Some(&"pub") {
+        return None;
+    }
+    let name = (*lhs_toks.last()?).to_string();
+    let ty = rhs
+        .split(|c: char| !(c.is_alphanumeric() || c == '_'))
+        .find(|t| !t.is_empty())?;
+    matches!(ty, "u64" | "u32" | "usize").then_some(name)
+}
+
+fn counter_csv_drift(files: &[SourceFile], out: &mut Vec<Finding>) {
+    // counter sources: TransportCounters (net/transport.rs) and
+    // SyncStats (pulse/sync.rs); numeric fields only — enum/str/bool
+    // fields (path, transport, verified) have no column representation
+    let mut fields: Vec<(String, String, usize)> = Vec::new(); // (file, field, line)
+    for f in files {
+        let want = match f.path.as_str() {
+            "net/transport.rs" => "TransportCounters",
+            "pulse/sync.rs" => "SyncStats",
+            _ => continue,
+        };
+        for l in &f.scan.lines {
+            if l.in_test || l.struct_name.as_deref() != Some(want) {
+                continue;
+            }
+            if let Some(name) = counter_field(&l.code) {
+                fields.push((f.path.clone(), name, l.number));
+            }
+        }
+    }
+    if fields.is_empty() {
+        return;
+    }
+    // the CSV surface: string literals inside TransportMeter::write_csv
+    let columns: Vec<String> = files
+        .iter()
+        .filter(|f| f.path == "coordinator/metrics.rs")
+        .flat_map(|f| f.scan.strings.iter())
+        .filter(|s| {
+            s.impl_name.as_deref() == Some("TransportMeter")
+                && s.fn_name.as_deref() == Some("write_csv")
+        })
+        .map(|s| s.text.clone())
+        .collect();
+    for (file, field, line) in fields {
+        if !columns.iter().any(|c| *c == field) {
+            out.push(Finding {
+                rule: "counter-csv-drift",
+                file,
+                line,
+                message: format!(
+                    "counter field `{}` has no TransportMeter CSV column — the observability \
+                     surface drifted",
+                    field
+                ),
+                suppressed: None,
+            });
+        }
+    }
+}
+
+// -------------------------------------------------------- suppressions
+
+fn suppress(files: &[SourceFile], findings: &mut [Finding]) {
+    for fin in findings.iter_mut() {
+        if fin.rule == PRAGMA_RULE {
+            continue;
+        }
+        let Some(src) = files.iter().find(|f| f.path == fin.file) else {
+            continue;
+        };
+        for p in &src.scan.pragmas {
+            if p.malformed.is_none()
+                && p.rule == fin.rule
+                && (p.line == fin.line || p.line + 1 == fin.line)
+            {
+                fin.suppressed = Some(p.reason.clone());
+                break;
+            }
+        }
+    }
+}

@@ -3,6 +3,8 @@
 //! utilization model (Fig. 1 — see also [`crate::net`]), and the
 //! lower-precision projection (Table 6, §D).
 
+pub mod lint;
+
 use crate::bf16::Dtype;
 
 /// Adam moments simulator for the adversarial-ρ experiment (Fig. 9):

@@ -72,6 +72,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         "control" => control(args),
         "scale" => scale(args),
         "benchguard" => benchguard(args),
+        "lint" => lint(args),
         "all" => {
             for c in [
                 "table1", "fig9", "fig3", "table2", "table6", "fig1", "fig2", "fig14", "fig13",
@@ -90,7 +91,8 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
                  exps: fig1 fig2 fig3 fig4 fig6 fig7 fig8 fig9 fig10 fig11 fig12 fig13 fig14\n\
                  fig15 fig16 fig17 table1 table2 table4 table5 table6 table7 table10\n\
                  table11 table13 table14 transports cache topology control all\n\
-                 gates: scale (sim scale gate) benchguard (bench regression guard)"
+                 gates: scale (sim scale gate) benchguard (bench regression guard)\n\
+                 lint (static analysis: paper lint [--json results/lint.json])"
             );
             Ok(())
         }
@@ -1316,7 +1318,7 @@ fn transports(args: &Args) -> Result<()> {
     use pulse::net::transport::{
         FaultInjectingTransport, InProcTransport, ObjectStoreTransport, SyncTransport,
     };
-    use pulse::pulse::sync::{Consumer, Publisher, SyncPath};
+    use pulse::pulse::sync::{Consumer, Publisher};
     use pulse::storage::ObjectStore;
     use pulse::util::rng::Rng;
 
@@ -1342,7 +1344,7 @@ fn transports(args: &Args) -> Result<()> {
             let t = Stopwatch::start();
             let cs = consumer.synchronize()?;
             t_sync += t.secs();
-            meter.record_sync(&label, cs.shard_refetches as u64, cs.path == SyncPath::Slow);
+            meter.record_sync(&label, &cs);
             anyhow::ensure!(
                 cs.verified && consumer.weights.as_ref().unwrap() == view,
                 "bit-identity broken on {} at step {}",
@@ -1609,24 +1611,25 @@ fn topology(args: &Args) -> Result<()> {
     use pulse::net::node::RelayNode;
     use pulse::net::relay::Relay;
     use pulse::net::transport::{RelayTransport, SyncTransport};
-    use pulse::pulse::sync::{Consumer, Publisher, SyncPath, SyncStats};
+    use pulse::pulse::sync::{Consumer, Publisher, SyncStats};
     use pulse::util::pool;
+    use pulse::util::retry::Deadline;
     use pulse::util::rng::Rng;
     use std::sync::Arc;
-    use std::time::{Duration, Instant};
+    use std::time::Duration;
 
     /// Poll one leaf until `step` is committed from its view, then
     /// synchronize once (relays stage asynchronously).
     fn wait_sync(c: &mut Consumer<RelayTransport>, step: u64) -> Result<SyncStats> {
-        let deadline = Instant::now() + Duration::from_secs(30);
+        let deadline = Deadline::after(Duration::from_secs(30));
         loop {
             if let Some(head) = c.latest_ready()? {
                 if head >= step {
                     return c.synchronize();
                 }
             }
-            anyhow::ensure!(Instant::now() < deadline, "step {} never became ready", step);
-            std::thread::sleep(Duration::from_millis(2));
+            anyhow::ensure!(!deadline.expired(), "step {} never became ready", step);
+            deadline.tick(Duration::from_millis(2));
         }
     }
 
@@ -1687,7 +1690,7 @@ fn topology(args: &Args) -> Result<()> {
                     label,
                     step
                 );
-                meter.record_sync(&leaf_label, cs.shard_refetches as u64, cs.path == SyncPath::Slow);
+                meter.record_sync(&leaf_label, &cs);
                 consumers.push(c);
             }
         }
@@ -1735,9 +1738,9 @@ fn topology(args: &Args) -> Result<()> {
     let node_b = RelayNode::join(root.port)?;
     // let the nodes learn their depth before leaves attach, so the
     // per-hop rows report hop 2 deterministically
-    let deadline = Instant::now() + Duration::from_secs(5);
-    while (node_a.hop() != 1 || node_b.hop() != 1) && Instant::now() < deadline {
-        std::thread::sleep(Duration::from_millis(3));
+    let deadline = Deadline::after(Duration::from_secs(5));
+    while (node_a.hop() != 1 || node_b.hop() != 1) && !deadline.expired() {
+        deadline.tick(Duration::from_millis(3));
     }
     let tree_ports: Vec<u16> =
         (0..subs).map(|i| if i % 2 == 0 { node_a.port() } else { node_b.port() }).collect();
@@ -1810,9 +1813,10 @@ fn control(args: &Args) -> Result<()> {
     use pulse::net::transport::RelayTransport;
     use pulse::pulse::sync::{Consumer, Publisher, SyncPath, SyncStats};
     use pulse::util::pool;
+    use pulse::util::retry::Deadline;
     use pulse::util::rng::Rng;
     use std::sync::Arc;
-    use std::time::{Duration, Instant};
+    use std::time::Duration;
 
     /// Poll one leaf until `step` is committed from its view, then
     /// synchronize; transient errors (mid-failover) retry.
@@ -1820,7 +1824,7 @@ fn control(args: &Args) -> Result<()> {
         c: &mut Consumer<ControlSubscriberTransport>,
         step: u64,
     ) -> Result<SyncStats> {
-        let deadline = Instant::now() + Duration::from_secs(30);
+        let deadline = Deadline::after(Duration::from_secs(30));
         loop {
             if let Ok(Some(head)) = c.latest_ready() {
                 if head >= step {
@@ -1829,8 +1833,8 @@ fn control(args: &Args) -> Result<()> {
                     }
                 }
             }
-            anyhow::ensure!(Instant::now() < deadline, "step {} never synced", step);
-            std::thread::sleep(Duration::from_millis(3));
+            anyhow::ensure!(!deadline.expired(), "step {} never synced", step);
+            deadline.tick(Duration::from_millis(3));
         }
     }
 
@@ -1903,10 +1907,10 @@ fn control(args: &Args) -> Result<()> {
                 layout.clone(),
             ));
         }
-        let deadline = Instant::now() + Duration::from_secs(20);
+        let deadline = Deadline::after(Duration::from_secs(20));
         while plane.live_peers() != (3, leaves_n) {
-            anyhow::ensure!(Instant::now() < deadline, "membership never settled");
-            std::thread::sleep(Duration::from_millis(5));
+            anyhow::ensure!(!deadline.expired(), "membership never settled");
+            deadline.tick(Duration::from_millis(5));
         }
 
         for step in 1..=pre_steps {
@@ -1946,14 +1950,14 @@ fn control(args: &Args) -> Result<()> {
             .find(|nd| nd.peer_id() == Some(victim_id))
             .ok_or_else(|| anyhow::anyhow!("victim relay not found"))?;
         let epoch_before = plane.epoch();
-        let t_kill = Instant::now();
+        let t_kill = Stopwatch::start();
         victim.fail_silently();
-        let deadline = Instant::now() + Duration::from_secs(20);
+        let deadline = Deadline::after(Duration::from_secs(20));
         while plane.epoch() == epoch_before {
-            anyhow::ensure!(Instant::now() < deadline, "death never detected");
-            std::thread::sleep(Duration::from_millis(2));
+            anyhow::ensure!(!deadline.expired(), "death never detected");
+            deadline.tick(Duration::from_millis(2));
         }
-        let detect = t_kill.elapsed();
+        let detect = t_kill.secs();
 
         // the recovery step: published after the kill, so a leaf
         // verifying it proves the subtree re-parented and caught up
@@ -1963,7 +1967,7 @@ fn control(args: &Args) -> Result<()> {
             let r = wait_sync(&mut c, rec_step);
             (c, r)
         });
-        let recover = t_kill.elapsed();
+        let recover = t_kill.secs();
         let (mut reparents_total, mut slow, mut patches, mut anchors) = (0u64, 0u64, 0u64, 0u64);
         consumers = Vec::with_capacity(synced.len());
         for (i, (c, r)) in synced.into_iter().enumerate() {
@@ -1988,8 +1992,8 @@ fn control(args: &Args) -> Result<()> {
         csv.row(&[
             s.to_string(),
             leaves_n.to_string(),
-            format!("{:.1}", detect.as_secs_f64() * 1e3),
-            format!("{:.1}", recover.as_secs_f64() * 1e3),
+            format!("{:.1}", detect * 1e3),
+            format!("{:.1}", recover * 1e3),
             epoch.to_string(),
             reparents.to_string(),
             slow.to_string(),
@@ -1999,8 +2003,8 @@ fn control(args: &Args) -> Result<()> {
         rows.push(vec![
             format!("{}", s),
             format!("{}", leaves_n),
-            format!("{:.0} ms", detect.as_secs_f64() * 1e3),
-            format!("{:.0} ms", recover.as_secs_f64() * 1e3),
+            format!("{:.0} ms", detect * 1e3),
+            format!("{:.0} ms", recover * 1e3),
             epoch.to_string(),
             reparents.to_string(),
             slow.to_string(),
@@ -2189,6 +2193,35 @@ fn scale(args: &Args) -> Result<()> {
         &rows,
     );
     println!("wrote {}", out.display());
+    Ok(())
+}
+
+// ====================================================== lint
+/// The CI static-analysis gate: scan `rust/src` with the in-tree lint
+/// (`analysis::lint`) — clock-seam, retry-discipline, panic-free wire
+/// paths, bounded channels, frame-kind coverage, counter↔CSV drift.
+/// Prints the human report, writes the machine report to `--json`
+/// (default `results/lint.json`), and fails on any active finding;
+/// pragma-suppressed findings are listed as the audit trail but pass.
+fn lint(args: &Args) -> Result<()> {
+    let src_root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src");
+    let report = analysis::lint::run_lint(&src_root)?;
+    print!("{}", report.render());
+    let json_path = match args.get("json") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => results_dir().join("lint.json"),
+    };
+    if let Some(p) = json_path.parent() {
+        std::fs::create_dir_all(p)?;
+    }
+    std::fs::write(&json_path, report.to_json().to_pretty())?;
+    eprintln!("[paper lint] report: {}", json_path.display());
+    anyhow::ensure!(
+        report.is_clean(),
+        "{} active lint finding(s) — fix them or justify with \
+         `// pallas-lint: allow(rule): <why>`",
+        report.active().count()
+    );
     Ok(())
 }
 

@@ -6,6 +6,7 @@
 //! traffic per `net::transport` backend.
 
 use crate::net::transport::TransportCounters;
+use crate::pulse::sync::{SyncPath, SyncStats};
 use anyhow::Result;
 use std::io::Write;
 use std::path::{Path, PathBuf};
@@ -142,6 +143,12 @@ pub struct TransportRow {
     pub counters: TransportCounters,
     pub shard_refetches: u64,
     pub slow_paths: u64,
+    pub bytes_downloaded: u64,
+    pub patches_applied: u64,
+    pub anchors_restored: u64,
+    /// Highest publisher generation any synchronize() on this backend
+    /// anchored against (folded with max, not summed).
+    pub generation: u64,
 }
 
 impl TransportMeter {
@@ -163,14 +170,19 @@ impl TransportMeter {
         self.row_mut(transport).publishes += 1;
     }
 
-    /// Record one synchronize() outcome on `transport`.
-    pub fn record_sync(&mut self, transport: &str, shard_refetches: u64, slow_path: bool) {
+    /// Record one synchronize() outcome on `transport`, folding the
+    /// call's [`SyncStats`] into the backend's row.
+    pub fn record_sync(&mut self, transport: &str, stats: &SyncStats) {
         let row = self.row_mut(transport);
         row.syncs += 1;
-        row.shard_refetches += shard_refetches;
-        if slow_path {
+        row.shard_refetches += stats.shard_refetches as u64;
+        if stats.path == SyncPath::Slow {
             row.slow_paths += 1;
         }
+        row.bytes_downloaded += stats.bytes_downloaded;
+        row.patches_applied += stats.patches_applied as u64;
+        row.anchors_restored += stats.anchors_restored as u64;
+        row.generation = row.generation.max(stats.generation);
     }
 
     /// Attach the final counter snapshot for `transport`.
@@ -200,6 +212,7 @@ impl TransportMeter {
                 "inventory_scans",
                 "frames_published",
                 "bytes_published",
+                "markers_published",
                 "frames_fetched",
                 "bytes_fetched",
                 "nacks_sent",
@@ -214,6 +227,10 @@ impl TransportMeter {
                 "conditional_not_modified",
                 "shard_refetches",
                 "slow_paths",
+                "bytes_downloaded",
+                "patches_applied",
+                "anchors_restored",
+                "generation",
                 "reparents",
                 "epoch",
             ],
@@ -227,6 +244,7 @@ impl TransportMeter {
                 r.counters.inventory_scans.to_string(),
                 r.counters.frames_published.to_string(),
                 r.counters.bytes_published.to_string(),
+                r.counters.markers_published.to_string(),
                 r.counters.frames_fetched.to_string(),
                 r.counters.bytes_fetched.to_string(),
                 r.counters.nacks_sent.to_string(),
@@ -241,6 +259,10 @@ impl TransportMeter {
                 r.counters.conditional_not_modified.to_string(),
                 r.shard_refetches.to_string(),
                 r.slow_paths.to_string(),
+                r.bytes_downloaded.to_string(),
+                r.patches_applied.to_string(),
+                r.anchors_restored.to_string(),
+                r.generation.to_string(),
                 r.counters.reparents.to_string(),
                 r.counters.epoch.to_string(),
             ])?;
@@ -312,8 +334,21 @@ mod tests {
         let mut m = TransportMeter::new();
         m.record_publish("in-proc");
         m.record_publish("in-proc");
-        m.record_sync("in-proc", 1, false);
-        m.record_sync("object-store", 0, true);
+        m.record_sync(
+            "in-proc",
+            &SyncStats { shard_refetches: 1, path: SyncPath::Fast, ..Default::default() },
+        );
+        m.record_sync(
+            "object-store",
+            &SyncStats {
+                path: SyncPath::Slow,
+                bytes_downloaded: 2048,
+                patches_applied: 3,
+                anchors_restored: 1,
+                generation: 2,
+                ..Default::default()
+            },
+        );
         m.set_counters(
             "in-proc",
             TransportCounters { inventory_scans: 2, bytes_fetched: 512, ..Default::default() },
@@ -370,6 +405,17 @@ mod tests {
         assert!(
             text.lines().next().unwrap().contains(",cache_hits,cache_misses,origin_fetches,conditional_not_modified,"),
             "header must carry the store-plane cache columns"
+        );
+        // bytes_downloaded=2048, patches_applied=3, anchors_restored=1,
+        // generation=2 sit between slow_paths=1 and reparents=3
+        assert!(os.contains(",1,2048,3,1,2,3,9"), "sync-stats columns must round-trip: {}", os);
+        assert!(
+            text.lines().next().unwrap().contains(",bytes_downloaded,patches_applied,anchors_restored,generation,"),
+            "header must carry the per-sync consumer columns"
+        );
+        assert!(
+            text.lines().next().unwrap().contains(",markers_published,"),
+            "header must carry the publish-marker column"
         );
         std::fs::remove_dir_all(&dir).unwrap();
     }

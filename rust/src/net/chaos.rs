@@ -253,6 +253,7 @@ impl Write for FaultyStream {
         }
         if st.roll(op, SALT_DELAY, st.cfg.delay_mille) {
             st.fault();
+            // pallas-lint: allow(retry-discipline): the injected-latency fault itself
             std::thread::sleep(st.cfg.delay);
         }
         if st.roll(op, SALT_RESET, st.cfg.reset_mille) && st.spend() {
@@ -299,6 +300,7 @@ impl Read for FaultyStream {
         // read-side header corruption would desync the framing
         if st.roll(op ^ 0x5244, SALT_DELAY, st.cfg.delay_mille) {
             st.fault();
+            // pallas-lint: allow(retry-discipline): the injected-latency fault itself
             std::thread::sleep(st.cfg.delay);
         }
         self.inner.read(buf)

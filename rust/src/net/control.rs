@@ -62,7 +62,8 @@ use super::transport::{
 use crate::coordinator::planner::{self, TopologyPlan, Upstream};
 use crate::sim::clock::Clock;
 use crate::storage::retention::Inventory;
-use crate::util::retry::RetryPolicy;
+use crate::util::retry::{Deadline, RetryPolicy};
+use crate::util::sync::{CondvarExt, LockExt};
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::net::{Shutdown, TcpListener, TcpStream};
@@ -277,8 +278,7 @@ impl Membership {
             .collect();
         let relays = planner::stable_relay_order(self.plan.as_ref(), &relays);
         let plan = planner::bind(self.epoch, &relays, &leaves, fanout_cap, min_relay_levels);
-        self.plan = Some(plan);
-        self.plan.as_ref().unwrap()
+        &*self.plan.insert(plan)
     }
 
     /// Current topology epoch (0 until the first replan).
@@ -447,27 +447,27 @@ impl ControlPlane {
 
     /// Current topology epoch (0 until the first peer joins).
     pub fn epoch(&self) -> u64 {
-        self.shared.lock().unwrap().members.epoch()
+        self.shared.plock().members.epoch()
     }
 
     /// Replans so far (joins, deaths, forced).
     pub fn replans(&self) -> u64 {
-        self.shared.lock().unwrap().members.replans()
+        self.shared.plock().members.replans()
     }
 
     /// Peers declared dead by heartbeat timeout so far.
     pub fn deaths(&self) -> u64 {
-        self.shared.lock().unwrap().members.deaths()
+        self.shared.plock().members.deaths()
     }
 
     /// Live `(relays, leaves)` counts.
     pub fn live_peers(&self) -> (usize, usize) {
-        self.shared.lock().unwrap().members.live_counts()
+        self.shared.plock().members.live_counts()
     }
 
     /// Snapshot of the current plan (None before the first JOIN).
     pub fn plan(&self) -> Option<TopologyPlan> {
-        self.shared.lock().unwrap().members.plan().cloned()
+        self.shared.plock().members.plan().cloned()
     }
 
     /// Root-to-leaf hop depth of the current plan.
@@ -478,7 +478,7 @@ impl ControlPlane {
     /// Bump the epoch and push fresh ASSIGNs without a membership
     /// change (operational escape hatch).
     pub fn force_replan(&self) {
-        self.shared.lock().unwrap().replan(&self.cfg);
+        self.shared.plock().replan(&self.cfg);
     }
 
     /// Stop the plane: no more joins, no more replans; peers keep
@@ -486,13 +486,13 @@ impl ControlPlane {
     /// control plane is not on the data path).
     pub fn stop(&self) {
         self.stop.store(true, Ordering::SeqCst);
-        if let Some(h) = self.accept.lock().unwrap().take() {
+        if let Some(h) = self.accept.plock().take() {
             let _ = h.join();
         }
-        if let Some(h) = self.monitor.lock().unwrap().take() {
+        if let Some(h) = self.monitor.plock().take() {
             let _ = h.join();
         }
-        let sh = self.shared.lock().unwrap();
+        let sh = self.shared.plock();
         for pc in &sh.conns {
             let _ = pc.conn.shutdown(Shutdown::Both);
         }
@@ -527,6 +527,7 @@ fn spawn_plane_accept(
                 std::thread::spawn(move || plane_handler(stream, shared, cfg, stop));
             }
             Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                // pallas-lint: allow(retry-discipline): nonblocking-accept poll cadence, not a recovery wait
                 std::thread::sleep(Duration::from_millis(5));
             }
             Err(_) => return,
@@ -574,7 +575,7 @@ fn plane_handler(
                 // liveness is the heartbeat timeout, and stop() can now
                 // reach this socket through the peer table)
                 let _ = stream.set_read_timeout(None);
-                let mut sh = shared.lock().unwrap();
+                let mut sh = shared.plock();
                 let now = sh.clock.now();
                 let id = sh.members.join(peer_role, listen_port, now);
                 my_id = Some(id);
@@ -583,7 +584,7 @@ fn plane_handler(
             }
             kind::HEARTBEAT => {
                 if let Ok((id, _peer_epoch)) = tcp::parse_heartbeat(&frame.payload) {
-                    let mut sh = shared.lock().unwrap();
+                    let mut sh = shared.plock();
                     let now = sh.clock.now();
                     if sh.members.heartbeat(id, now) {
                         // resurrected a peer the monitor gave up on —
@@ -604,7 +605,7 @@ fn plane_handler(
         return;
     }
     if let Some(id) = my_id {
-        let mut sh = shared.lock().unwrap();
+        let mut sh = shared.plock();
         if sh.members.mark_dead(id) {
             sh.replan(&cfg);
         }
@@ -632,8 +633,9 @@ fn spawn_plane_monitor(
             if stop.load(Ordering::SeqCst) {
                 return;
             }
+            // pallas-lint: allow(retry-discipline): failure-detector sweep cadence; the decision runs off Clock
             std::thread::sleep(tick);
-            let mut sh = shared.lock().unwrap();
+            let mut sh = shared.plock();
             let now = sh.clock.now();
             if sh.members.sweep(now, timeout) > 0 {
                 sh.replan(&cfg);
@@ -752,16 +754,16 @@ impl ControlClient {
     }
 
     fn snapshot(&self) -> (u64, u64, Option<(u16, u32)>, Option<u64>) {
-        let st = self.state.0.lock().unwrap();
+        let st = self.state.0.plock();
         (st.fence.epoch(), st.directive_seq, st.directive, st.peer_id)
     }
 
     fn epoch(&self) -> u64 {
-        self.state.0.lock().unwrap().fence.epoch()
+        self.state.0.plock().fence.epoch()
     }
 
     fn peer_id(&self) -> Option<u64> {
-        self.state.0.lock().unwrap().peer_id
+        self.state.0.plock().peer_id
     }
 
     /// Wait (bounded) for a directive newer than `seen_seq`; returns
@@ -774,31 +776,34 @@ impl ControlClient {
     /// simulated peer shares lives in [`EpochFence`], not here.
     fn wait_directive(&self, seen_seq: u64, timeout: Duration) -> Option<(u64, u16, u32)> {
         let (lock, cv) = &*self.state;
+        // pallas-lint: allow(clock-seam): bounds a condvar wait on a live socket (see audit note above)
         let deadline = Instant::now() + timeout;
-        let mut st = lock.lock().unwrap();
+        let mut st = lock.plock();
         loop {
             if st.directive_seq > seen_seq {
-                let (port, hop) = st.directive.unwrap();
-                return Some((st.directive_seq, port, hop));
+                if let Some((port, hop)) = st.directive {
+                    return Some((st.directive_seq, port, hop));
+                }
             }
             if st.closed {
                 return None;
             }
+            // pallas-lint: allow(clock-seam): the matching wall reading of the bounded wait
             let now = Instant::now();
             if now >= deadline {
                 return None;
             }
-            st = cv.wait_timeout(st, deadline - now).unwrap().0;
+            st = cv.pwait_timeout(st, deadline - now);
         }
     }
 
     fn stop(&self) {
         self.stop.store(true, Ordering::SeqCst);
-        let _ = self.conn.lock().unwrap().shutdown(Shutdown::Both);
-        if let Some(h) = self.reader.lock().unwrap().take() {
+        let _ = self.conn.plock().shutdown(Shutdown::Both);
+        if let Some(h) = self.reader.plock().take() {
             let _ = h.join();
         }
-        if let Some(h) = self.heart.lock().unwrap().take() {
+        if let Some(h) = self.heart.plock().take() {
             let _ = h.join();
         }
     }
@@ -826,7 +831,7 @@ fn spawn_client_reader(
         let frame = match tcp::read_frame(&mut stream) {
             Ok(f) => f,
             Err(_) => {
-                lock.lock().unwrap().closed = true;
+                lock.plock().closed = true;
                 cv.notify_all();
                 return;
             }
@@ -834,12 +839,12 @@ fn spawn_client_reader(
         match frame.kind {
             kind::EPOCH => {
                 if let Ok(e) = tcp::parse_epoch(&frame.payload) {
-                    lock.lock().unwrap().fence.observe(e);
+                    lock.plock().fence.observe(e);
                 }
             }
             kind::ASSIGN => {
                 if let Ok((epoch, id, port, hop)) = tcp::parse_assign(&frame.payload) {
-                    let mut st = lock.lock().unwrap();
+                    let mut st = lock.plock();
                     if !st.fence.admit(epoch) {
                         continue; // fenced: a newer epoch superseded this
                     }
@@ -850,7 +855,7 @@ fn spawn_client_reader(
                 }
             }
             kind::CLOSE => {
-                lock.lock().unwrap().closed = true;
+                lock.plock().closed = true;
                 cv.notify_all();
                 return;
             }
@@ -867,13 +872,13 @@ fn spawn_client_heartbeat(
     interval: Duration,
 ) -> std::thread::JoinHandle<()> {
     std::thread::spawn(move || loop {
-        // sliced sleep so stop() never waits out a long interval
-        let until = Instant::now() + interval;
-        while Instant::now() < until {
+        // sliced wait so stop() never waits out a long interval
+        let pause = Deadline::after(interval);
+        while !pause.expired() {
             if stop.load(Ordering::SeqCst) {
                 return;
             }
-            std::thread::sleep(Duration::from_millis(10).min(interval));
+            pause.tick(Duration::from_millis(10).min(interval));
         }
         if stop.load(Ordering::SeqCst) {
             return;
@@ -882,14 +887,14 @@ fn spawn_client_heartbeat(
             continue;
         }
         let (id, epoch) = {
-            let st = state.0.lock().unwrap();
+            let st = state.0.plock();
             if st.closed {
                 return;
             }
             (st.peer_id, st.fence.epoch())
         };
         let Some(id) = id else { continue };
-        let mut c = conn.lock().unwrap();
+        let mut c = conn.plock();
         if tcp::write_frame(
             &mut c,
             &Frame { kind: kind::HEARTBEAT, payload: tcp::heartbeat_payload(id, epoch) },
@@ -1013,7 +1018,7 @@ impl ControlledNode {
     pub fn stop(&self) {
         self.stop.store(true, Ordering::SeqCst);
         self.client.stop();
-        if let Some(h) = self.supervisor.lock().unwrap().take() {
+        if let Some(h) = self.supervisor.plock().take() {
             let _ = h.join();
         }
         self.node.stop();
@@ -1028,7 +1033,7 @@ impl ControlledNode {
     pub fn fail_silently(&self) {
         self.client.silence();
         self.stop.store(true, Ordering::SeqCst);
-        if let Some(h) = self.supervisor.lock().unwrap().take() {
+        if let Some(h) = self.supervisor.plock().take() {
             let _ = h.join();
         }
         self.node.stop();
@@ -1186,8 +1191,7 @@ impl ControlSubscriberTransport {
 
     fn current(&self) -> Result<Arc<RelayTransport>> {
         self.inner
-            .lock()
-            .unwrap()
+            .plock()
             .clone()
             .ok_or_else(|| anyhow::anyhow!("no upstream assigned yet by the control plane"))
     }
@@ -1216,7 +1220,7 @@ impl ControlSubscriberTransport {
     /// Relay hops between this leaf and the publisher under the
     /// current subscription (None before the HOP reply lands).
     pub fn hops(&self) -> Option<u32> {
-        self.inner.lock().unwrap().as_ref().and_then(|t| t.hops())
+        self.inner.plock().as_ref().and_then(|t| t.hops())
     }
 }
 
@@ -1224,7 +1228,7 @@ impl Drop for ControlSubscriberTransport {
     fn drop(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
         self.client.stop();
-        if let Some(h) = self.supervisor.lock().unwrap().take() {
+        if let Some(h) = self.supervisor.plock().take() {
             let _ = h.join();
         }
     }
@@ -1256,7 +1260,7 @@ fn spawn_leaf_supervisor(
             match directive {
                 None | Some((0, _)) => {
                     if applied_port.is_some() {
-                        *inner.lock().unwrap() = None;
+                        *inner.plock() = None;
                         applied_port = None;
                     }
                     failed_attempts = 0;
@@ -1267,15 +1271,11 @@ fn spawn_leaf_supervisor(
                     // socket; an orderly CLOSE is the stream ending —
                     // resubscribing would flip stream_closed back to
                     // false and undo end-of-stream for the consumer
-                    let dead = inner
-                        .lock()
-                        .unwrap()
-                        .as_ref()
-                        .is_some_and(|t| t.stream_failed());
+                    let dead = inner.plock().as_ref().is_some_and(|t| t.stream_failed());
                     if applied_port != Some(port) || dead {
                         if let Ok(t) = RelayTransport::subscribe(port) {
                             let had_previous = {
-                                let mut cur = inner.lock().unwrap();
+                                let mut cur = inner.plock();
                                 let had = cur.is_some();
                                 *cur = Some(Arc::new(t));
                                 had

@@ -76,6 +76,7 @@
 use super::chaos::{ChaosConfig, Wire};
 use super::relay::Relay;
 use super::tcp::{self, kind, Frame};
+use crate::util::sync::LockExt;
 use anyhow::{Context, Result};
 use std::net::Shutdown;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -194,7 +195,7 @@ impl RelayNode {
         {
             let upstream = upstream.clone();
             relay.set_escalation(move |step, shard| {
-                let mut conn = upstream.lock().unwrap();
+                let mut conn = upstream.plock();
                 match conn.as_mut() {
                     Some(conn) => tcp::write_frame(
                         conn,
@@ -237,7 +238,7 @@ impl RelayNode {
         let up_read = up.try_clone()?;
         self.upstream_closed.store(false, Ordering::SeqCst);
         self.upstream_failed.store(false, Ordering::SeqCst);
-        *self.upstream.lock().unwrap() = Some(up);
+        *self.upstream.plock() = Some(up);
         let gen = self.attach_gen.load(Ordering::SeqCst);
         let handle = spawn_forward(
             up_read,
@@ -249,7 +250,7 @@ impl RelayNode {
             self.upstream_failed.clone(),
             self.close_on_upstream_loss,
         );
-        *self.forward.lock().unwrap() = Some(handle);
+        *self.forward.plock() = Some(handle);
         Ok(())
     }
 
@@ -260,10 +261,10 @@ impl RelayNode {
     /// being served from the node's staging.
     pub fn detach_upstream(&self) {
         self.attach_gen.fetch_add(1, Ordering::SeqCst);
-        if let Some(conn) = self.upstream.lock().unwrap().take() {
+        if let Some(conn) = self.upstream.plock().take() {
             let _ = conn.shutdown(Shutdown::Both);
         }
-        if let Some(h) = self.forward.lock().unwrap().take() {
+        if let Some(h) = self.forward.plock().take() {
             let _ = h.join();
         }
         self.relay.fail_all_escalated();
@@ -272,7 +273,7 @@ impl RelayNode {
     /// True while an upstream connection is attached (it may still be
     /// closed-but-unreaped; see [`RelayNode::upstream_closed`]).
     pub fn upstream_attached(&self) -> bool {
-        self.upstream.lock().unwrap().is_some()
+        self.upstream.plock().is_some()
     }
 
     /// Port downstream subscribers (or further nodes) connect to.

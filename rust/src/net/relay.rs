@@ -102,6 +102,7 @@ use super::chaos::{ChaosConfig, Wire};
 use super::tcp::{self, kind, Frame};
 use crate::sim::clock::Clock;
 use crate::util::retry::RetryPolicy;
+use crate::util::sync::{CondvarExt, LockExt};
 use anyhow::Result;
 use std::collections::{HashMap, VecDeque};
 use std::net::{Shutdown, TcpListener};
@@ -176,8 +177,9 @@ impl RelayStage {
         if !self.index_steps.contains(&step) {
             self.index_steps.push_back(step);
             while self.index_steps.len() > self.max_index_steps {
-                let old = self.index_steps.pop_front().unwrap();
-                self.frame_index.retain(|&(s, _), _| s != old);
+                if let Some(old) = self.index_steps.pop_front() {
+                    self.frame_index.retain(|&(s, _), _| s != old);
+                }
             }
         }
         self.frame_index.insert((step, shard), frame);
@@ -374,7 +376,7 @@ type Chan = Arc<(Mutex<SubQueue>, Condvar)>;
 /// already minimal) and wake its writer. No-op on a dead subscriber.
 fn push_direct(chan: &Chan, frame: Arc<Frame>) {
     let (lock, cv) = &**chan;
-    let mut q = lock.lock().unwrap();
+    let mut q = lock.plock();
     if !q.dead {
         q.q.push_back(frame);
         cv.notify_one();
@@ -508,25 +510,25 @@ impl Relay {
     /// the send succeeded; the requester is answered later via
     /// [`Relay::deliver_retransmit`] or [`Relay::fail_escalated`].
     pub fn set_escalation(&self, f: impl Fn(u64, u32) -> bool + Send + Sync + 'static) {
-        self.shared.lock().unwrap().escalate = Some(Arc::new(f));
+        self.shared.plock().escalate = Some(Arc::new(f));
     }
 
     /// Override the escalation backoff schedule (tests pin it far out
     /// to make rider counting deterministic, or shrink it to force
     /// re-escalation quickly).
     pub fn set_escalation_policy(&self, policy: RetryPolicy) {
-        self.shared.lock().unwrap().ledger.set_policy(policy);
+        self.shared.plock().ledger.set_policy(policy);
     }
 
     /// Set this relay's hop distance from the publisher (0 = root),
     /// replied to SUBSCRIBE frames so downstream peers learn theirs.
     pub fn set_hop(&self, hop: u32) {
-        self.shared.lock().unwrap().hop = hop;
+        self.shared.plock().hop = hop;
     }
 
     /// Hop distance from the publisher (0 = root relay).
     pub fn hop(&self) -> u32 {
-        self.shared.lock().unwrap().hop
+        self.shared.plock().hop
     }
 
     /// Publish a frame to all current subscribers (and remember anchors
@@ -535,7 +537,7 @@ impl Relay {
     /// above.
     pub fn publish(&self, frame: Frame) {
         let frame = Arc::new(frame);
-        let mut guard = self.shared.lock().unwrap();
+        let mut guard = self.shared.plock();
         let sh: &mut Shared = &mut guard;
         // index container frames for per-shard NACK service; opaque
         // payloads just aren't NACKable
@@ -551,7 +553,7 @@ impl Relay {
         let depth = *queue_depth;
         subs.retain_mut(|sub| {
             let (lock, cv) = &*sub.chan;
-            let mut q = lock.lock().unwrap();
+            let mut q = lock.plock();
             if q.dead {
                 drop(q);
                 // unblock a writer stuck in write() / a reader stuck in
@@ -579,49 +581,49 @@ impl Relay {
 
     /// Live (non-dead) subscriber connections.
     pub fn subscriber_count(&self) -> usize {
-        let sh = self.shared.lock().unwrap();
-        sh.subs.iter().filter(|s| !s.chan.0.lock().unwrap().dead).count()
+        let sh = self.shared.plock();
+        sh.subs.iter().filter(|s| !s.chan.0.plock().dead).count()
     }
 
     /// Total coalescing (catch-up) events so far, across subscribers.
     pub fn coalesced_catchups(&self) -> u64 {
-        self.shared.lock().unwrap().coalesced
+        self.shared.plock().coalesced
     }
 
     /// Frames dropped as superseded across current subscribers.
     pub fn dropped_frames(&self) -> u64 {
-        let sh = self.shared.lock().unwrap();
-        sh.subs.iter().map(|s| s.chan.0.lock().unwrap().dropped).sum()
+        let sh = self.shared.plock();
+        sh.subs.iter().map(|s| s.chan.0.plock().dropped).sum()
     }
 
     /// Shard NACKs answered from the frame index so far.
     pub fn nacks_serviced(&self) -> u64 {
-        self.shared.lock().unwrap().nacks_serviced
+        self.shared.plock().nacks_serviced
     }
 
     /// NACKs forwarded upstream because the local index had evicted
     /// the slot (0 unless this relay is a chained node).
     pub fn nacks_escalated(&self) -> u64 {
-        self.shared.lock().unwrap().nacks_escalated
+        self.shared.plock().nacks_escalated
     }
 
     /// NACKs answered with an explicit NACK_MISS (no upstream to ask,
     /// or the upstream missed too).
     pub fn nacks_unserviceable(&self) -> u64 {
-        self.shared.lock().unwrap().nacks_unserviceable
+        self.shared.plock().nacks_unserviceable
     }
 
     /// NACKs absorbed as riders on an escalation already in flight
     /// (inside its backoff window) instead of going upstream again.
     pub fn nacks_suppressed(&self) -> u64 {
-        self.shared.lock().unwrap().nacks_suppressed
+        self.shared.plock().nacks_suppressed
     }
 
     /// Subscribers currently waiting on an escalated `(step, shard)`
     /// slot (0 when nothing is pending for it) — storm tests use this
     /// to know every rider has registered before answering.
     pub fn pending_riders(&self, step: u64, shard: u32) -> usize {
-        self.shared.lock().unwrap().ledger.riders(step, shard)
+        self.shared.plock().ledger.riders(step, shard)
     }
 
     /// Deliver an upstream retransmit for an escalated `(step, shard)`
@@ -632,7 +634,7 @@ impl Relay {
     /// as ordinary stream traffic.
     pub fn deliver_retransmit(&self, step: u64, shard: u32, frame: Frame) -> bool {
         let frame = Arc::new(frame);
-        let mut sh = self.shared.lock().unwrap();
+        let mut sh = self.shared.plock();
         let riders = match sh.ledger.resolve(step, shard) {
             Some(r) => r,
             None => return false,
@@ -649,7 +651,7 @@ impl Relay {
     /// NACK_MISS: forward the miss to the waiting subscribers so they
     /// stop waiting and take the anchor slow path.
     pub fn fail_escalated(&self, step: u64, shard: u32) {
-        let mut sh = self.shared.lock().unwrap();
+        let mut sh = self.shared.plock();
         if let Some(riders) = sh.ledger.resolve(step, shard) {
             miss_waiters(&mut sh, step, shard, &riders);
         }
@@ -662,7 +664,7 @@ impl Relay {
     /// to the anchor slow path immediately instead of burning their
     /// NACK timeouts across the failover.
     pub fn fail_all_escalated(&self) {
-        let mut sh = self.shared.lock().unwrap();
+        let mut sh = self.shared.plock();
         for ((step, shard), riders) in sh.ledger.resolve_all() {
             miss_waiters(&mut sh, step, shard, &riders);
         }
@@ -677,24 +679,25 @@ impl Relay {
         // join the accept thread FIRST (it polls the stop flag every
         // ~5ms), so no subscriber can register after we drain the list
         // — otherwise its writer/reader threads would leak
-        if let Some(t) = self.accept_thread.lock().unwrap().take() {
+        if let Some(t) = self.accept_thread.plock().take() {
             let _ = t.join();
         }
         let subs = {
-            let mut sh = self.shared.lock().unwrap();
+            let mut sh = self.shared.plock();
             std::mem::take(&mut sh.subs)
         };
         for mut sub in subs {
             let (lock, cv) = &*sub.chan;
             for _ in 0..100 {
-                let q = lock.lock().unwrap();
+                let q = lock.plock();
                 if q.q.is_empty() || q.dead {
                     break;
                 }
                 drop(q);
+                // pallas-lint: allow(retry-discipline): stop()'s bounded drain grace, not a recovery wait
                 std::thread::sleep(std::time::Duration::from_millis(10));
             }
-            lock.lock().unwrap().dead = true;
+            lock.plock().dead = true;
             cv.notify_all();
             let _ = sub.stream.shutdown(Shutdown::Both);
             if let Some(h) = sub.writer.take() {
@@ -718,7 +721,7 @@ fn spawn_writer(
     std::thread::spawn(move || loop {
         let frame = {
             let (lock, cv) = &*chan;
-            let mut q = lock.lock().unwrap();
+            let mut q = lock.plock();
             loop {
                 if q.dead {
                     return;
@@ -729,12 +732,12 @@ fn spawn_writer(
                 if stop.load(Ordering::SeqCst) {
                     return;
                 }
-                q = cv.wait_timeout(q, std::time::Duration::from_millis(20)).unwrap().0;
+                q = cv.pwait_timeout(q, std::time::Duration::from_millis(20));
             }
         };
         if tcp::write_frame(&mut stream, &frame).is_err() {
             let (lock, cv) = &*chan;
-            lock.lock().unwrap().dead = true;
+            lock.plock().dead = true;
             cv.notify_all();
             return;
         }
@@ -766,7 +769,7 @@ fn spawn_reader(
         match tcp::read_frame(&mut stream) {
             Ok(f) if f.kind == kind::NACK => {
                 if let Ok((step, shard)) = tcp::parse_shard_ack(&f.payload) {
-                    let mut sh = shared.lock().unwrap();
+                    let mut sh = shared.plock();
                     if let Some(frame) = sh.stage.lookup(step, shard) {
                         sh.nacks_serviced += 1;
                         // a retransmit bypasses the coalescing policy:
@@ -812,7 +815,7 @@ fn spawn_reader(
                         // upstream unreachable: the escalation never
                         // went out, so answer EVERY waiter (riders
                         // included) with a miss
-                        let mut sh = shared.lock().unwrap();
+                        let mut sh = shared.plock();
                         if let Some(riders) = sh.ledger.resolve(step, shard) {
                             miss_waiters(&mut sh, step, shard, &riders);
                         }
@@ -821,7 +824,7 @@ fn spawn_reader(
             }
             Ok(f) if f.kind == kind::SUBSCRIBE => {
                 // topology handshake: reply with this relay's hop depth
-                let hop = shared.lock().unwrap().hop;
+                let hop = shared.plock().hop;
                 push_direct(
                     &chan,
                     Arc::new(Frame { kind: kind::HOP, payload: tcp::hop_payload(hop) }),
@@ -833,7 +836,7 @@ fn spawn_reader(
             Ok(f) if f.kind != kind::CLOSE => {}
             _ => {
                 let (lock, cv) = &*chan;
-                lock.lock().unwrap().dead = true;
+                lock.plock().dead = true;
                 cv.notify_all();
                 let _ = stream.shutdown(Shutdown::Both);
                 return;
@@ -863,7 +866,7 @@ fn spawn_accept(
                     (Ok(c), Ok(r)) => (c, r),
                     _ => continue,
                 };
-                let mut sh = shared.lock().unwrap();
+                let mut sh = shared.plock();
                 // catch-up preload: anchor + tail (patches and markers);
                 // the writer thread delivers it, so a slow joiner cannot
                 // stall accept
@@ -880,6 +883,7 @@ fn spawn_accept(
                 });
             }
             Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                // pallas-lint: allow(retry-discipline): nonblocking-accept poll cadence, not a recovery wait
                 std::thread::sleep(std::time::Duration::from_millis(5));
             }
             Err(_) => return,
@@ -1002,8 +1006,8 @@ mod tests {
         }
         relay.publish(Frame { kind: kind::ANCHOR, payload: vec![2u8; 1 << 16] });
         {
-            let sh = relay.shared.lock().unwrap();
-            let q = sh.subs[0].chan.0.lock().unwrap();
+            let sh = relay.shared.plock();
+            let q = sh.subs[0].chan.0.plock();
             assert_eq!(q.q.len(), 1, "anchor must clear the queue");
             assert_eq!(q.q[0].kind, kind::ANCHOR);
             assert_eq!(q.q[0].payload[0], 2);
@@ -1047,8 +1051,8 @@ mod tests {
             "a marker flood past queue_depth must coalesce"
         );
         {
-            let sh = relay.shared.lock().unwrap();
-            let q = sh.subs[0].chan.0.lock().unwrap();
+            let sh = relay.shared.plock();
+            let q = sh.subs[0].chan.0.plock();
             // the queue is exactly the canonical catch-up bundle:
             // anchor first, then the surviving tail — never more than
             // bundle-size frames, however many markers flooded past

@@ -48,6 +48,7 @@ use crate::net::transport::{
 use crate::storage::retention::{self, RetentionPolicy};
 use crate::storage::ObjectStore;
 use crate::util::retry::RetryPolicy;
+use crate::util::sync::LockExt;
 use anyhow::{bail, Context, Result};
 use std::collections::{BTreeSet, HashMap, HashSet};
 use std::net::TcpStream;
@@ -96,7 +97,7 @@ fn unseal(payload: &[u8]) -> Result<&[u8]> {
         bail!("store payload too short ({} bytes)", payload.len());
     }
     let (body, tail) = payload.split_at(payload.len() - 4);
-    let want = u32::from_le_bytes(tail.try_into().unwrap());
+    let want = u32::from_le_bytes(tail.try_into()?);
     if fnv1a(body) != want {
         bail!("store payload checksum mismatch");
     }
@@ -112,7 +113,7 @@ fn read_str<'a>(b: &'a [u8], o: &mut usize) -> Result<&'a str> {
     if b.len() < *o + 2 {
         bail!("store payload truncated at string length");
     }
-    let n = u16::from_le_bytes(b[*o..*o + 2].try_into().unwrap()) as usize;
+    let n = u16::from_le_bytes(b[*o..*o + 2].try_into()?) as usize;
     *o += 2;
     if b.len() < *o + n {
         bail!("store payload truncated at string body");
@@ -126,7 +127,7 @@ fn read_u64(b: &[u8], o: &mut usize) -> Result<u64> {
     if b.len() < *o + 8 {
         bail!("store payload truncated at u64");
     }
-    let v = u64::from_le_bytes(b[*o..*o + 8].try_into().unwrap());
+    let v = u64::from_le_bytes(b[*o..*o + 8].try_into()?);
     *o += 8;
     Ok(v)
 }
@@ -171,7 +172,7 @@ pub fn parse_put(payload: &[u8]) -> Result<(String, Vec<u8>)> {
     if b.len() < o + 4 {
         bail!("store PUT payload truncated at body length");
     }
-    let n = u32::from_le_bytes(b[o..o + 4].try_into().unwrap()) as usize;
+    let n = u32::from_le_bytes(b[o..o + 4].try_into()?) as usize;
     o += 4;
     if b.len() != o + n {
         bail!("store PUT body length {} != declared {}", b.len() - o, n);
@@ -246,7 +247,7 @@ impl Reply {
         if b.len() < o + 4 {
             bail!("store reply truncated at body length");
         }
-        let n = u32::from_le_bytes(b[o..o + 4].try_into().unwrap()) as usize;
+        let n = u32::from_le_bytes(b[o..o + 4].try_into()?) as usize;
         o += 4;
         if b.len() != o + n {
             bail!("store reply body length {} != declared {}", b.len() - o, n);
@@ -445,21 +446,20 @@ pub struct StoreStats {
 impl StoreStats {
     fn note_serve(&self, key: &str, bytes: usize) {
         self.bytes_served.fetch_add(bytes as u64, Ordering::Relaxed);
-        *self.body_serves.lock().unwrap().entry(key.to_string()).or_insert(0) += 1;
+        *self.body_serves.plock().entry(key.to_string()).or_insert(0) += 1;
     }
 
     /// Times this server sent `key`'s body (NOT_MODIFIED replies don't
     /// count — no body moved).
     pub fn body_serves_of(&self, key: &str) -> u64 {
-        self.body_serves.lock().unwrap().get(key).copied().unwrap_or(0)
+        self.body_serves.plock().get(key).copied().unwrap_or(0)
     }
 
     /// Max body serves over keys ending with `suffix` (e.g. `".bin"`
     /// for "no data object left the origin more than N times").
     pub fn max_body_serves(&self, suffix: &str) -> u64 {
         self.body_serves
-            .lock()
-            .unwrap()
+            .plock()
             .iter()
             .filter(|(k, _)| k.ends_with(suffix))
             .map(|(_, &n)| n)
@@ -643,14 +643,16 @@ impl StoreClient {
     }
 
     fn attempt(&self, req: &Frame) -> Result<Reply> {
-        let mut guard = self.conn.lock().unwrap();
+        let mut guard = self.conn.plock();
         if guard.is_none() {
             let stream = tcp::connect_local(self.port)?;
             let wire = Wire::wrap(stream, self.chaos.as_ref());
             wire.set_read_timeout(Some(self.read_timeout))?;
             *guard = Some(wire);
         }
-        let wire = guard.as_mut().unwrap();
+        let Some(wire) = guard.as_mut() else {
+            bail!("store connection slot empty after dial");
+        };
         tcp::write_frame(wire, req)?;
         let frame = tcp::read_frame(wire)?;
         if frame.kind != kind::STORE_REPLY {
@@ -671,10 +673,11 @@ impl StoreClient {
                 Err(e) => {
                     // the exchange may be desynced (late reply, torn
                     // frame) — drop the connection and redial
-                    *self.conn.lock().unwrap() = None;
+                    *self.conn.plock() = None;
                     match retry.next_delay() {
                         Some(d) => {
                             self.retries.fetch_add(1, Ordering::Relaxed);
+                            // pallas-lint: allow(retry-discipline): the delay IS a RetryPolicy schedule
                             std::thread::sleep(d);
                         }
                         None => {
@@ -736,7 +739,7 @@ impl ObjectApi for StoreClient {
                 if r.body.len() != 8 {
                     bail!("store STAT body length {}", r.body.len());
                 }
-                Ok(Some((u64::from_le_bytes(r.body[..].try_into().unwrap()), r.etag)))
+                Ok(Some((u64::from_le_bytes(r.body[..].try_into()?), r.etag)))
             }
             status::NOT_FOUND => Ok(None),
             _ => bail!("store STAT '{}' failed: {}", key, String::from_utf8_lossy(&r.body)),
@@ -817,7 +820,7 @@ impl<U: ObjectApi> CachingStore<U> {
 
     /// Objects currently cached.
     pub fn cached_objects(&self) -> usize {
-        self.cache.lock().unwrap().len()
+        self.cache.plock().len()
     }
 
     fn serve(&self, entry: &CacheEntry, range: Option<(u64, u64)>, inm: Option<&str>, from_cache: bool) -> GetOutcome {
@@ -832,7 +835,7 @@ impl<U: ObjectApi> CachingStore<U> {
     }
 
     fn insert(&self, key: &str, body: Vec<u8>, etag: String) {
-        let mut cache = self.cache.lock().unwrap();
+        let mut cache = self.cache.plock();
         cache.insert(key.to_string(), CacheEntry { body, etag });
         self.evict(&mut cache);
     }
@@ -885,7 +888,7 @@ impl<U: ObjectApi> ObjectApi for CachingStore<U> {
         let immutable = is_data_key(key);
         // snapshot the entry; never hold the lock across an origin call
         let cached_etag = {
-            let cache = self.cache.lock().unwrap();
+            let cache = self.cache.plock();
             match cache.get(key) {
                 Some(e) if immutable => {
                     // immutable hit: serve without touching the origin
@@ -902,7 +905,7 @@ impl<U: ObjectApi> ObjectApi for CachingStore<U> {
                 GetOutcome::NotModified { .. } => {
                     self.counters.not_modified.fetch_add(1, Ordering::Relaxed);
                     self.counters.hits.fetch_add(1, Ordering::Relaxed);
-                    let cache = self.cache.lock().unwrap();
+                    let cache = self.cache.plock();
                     if let Some(e) = cache.get(key) {
                         return Ok(self.serve(e, range, if_none_match, true));
                     }
@@ -922,7 +925,7 @@ impl<U: ObjectApi> ObjectApi for CachingStore<U> {
                     return Ok(out);
                 }
                 GetOutcome::Missing => {
-                    self.cache.lock().unwrap().remove(key);
+                    self.cache.plock().remove(key);
                     return Ok(GetOutcome::Missing);
                 }
             }
@@ -961,7 +964,7 @@ impl<U: ObjectApi> ObjectApi for CachingStore<U> {
 
     fn stat(&self, key: &str) -> Result<Option<(u64, String)>> {
         if is_data_key(key) {
-            if let Some(e) = self.cache.lock().unwrap().get(key) {
+            if let Some(e) = self.cache.plock().get(key) {
                 self.counters.hits.fetch_add(1, Ordering::Relaxed);
                 return Ok(Some((e.body.len() as u64, e.etag.clone())));
             }

@@ -33,6 +33,7 @@ pub mod kind {
     pub const SUBSCRIBE: u8 = 3;
     /// Acknowledgement (payload = step u64 LE, or step u64 ++ shard
     /// u32 for ACK-per-shard; see [`super::shard_ack_payload`]).
+    // pallas-lint: allow(frame-kind-coverage): sent by the fan-out example (tests/integration_fanout.rs, outside the src scan); in-tree transports ack implicitly via NACK absence
     pub const ACK: u8 = 4;
     /// Orderly shutdown.
     pub const CLOSE: u8 = 5;
@@ -107,10 +108,10 @@ pub fn shard_ack_payload(step: u64, shard: u32) -> Vec<u8> {
 /// with shard 0.
 pub fn parse_shard_ack(payload: &[u8]) -> Result<(u64, u32)> {
     match payload.len() {
-        8 => Ok((u64::from_le_bytes(payload.try_into().unwrap()), 0)),
+        8 => Ok((u64::from_le_bytes(payload.try_into()?), 0)),
         12 => Ok((
-            u64::from_le_bytes(payload[0..8].try_into().unwrap()),
-            u32::from_le_bytes(payload[8..12].try_into().unwrap()),
+            u64::from_le_bytes(payload[0..8].try_into()?),
+            u32::from_le_bytes(payload[8..12].try_into()?),
         )),
         n => bail!("bad ack payload length {}", n),
     }
@@ -125,7 +126,7 @@ pub fn hop_payload(hops: u32) -> Vec<u8> {
 /// Decode a HOP frame payload.
 pub fn parse_hop(payload: &[u8]) -> Result<u32> {
     match payload.len() {
-        4 => Ok(u32::from_le_bytes(payload.try_into().unwrap())),
+        4 => Ok(u32::from_le_bytes(payload.try_into()?)),
         n => bail!("bad hop payload length {}", n),
     }
 }
@@ -143,7 +144,7 @@ pub fn join_payload(role: u8, listen_port: u16) -> Vec<u8> {
 /// Decode a JOIN payload into `(role, listen_port)`.
 pub fn parse_join(payload: &[u8]) -> Result<(u8, u16)> {
     match payload.len() {
-        3 => Ok((payload[0], u16::from_le_bytes(payload[1..3].try_into().unwrap()))),
+        3 => Ok((payload[0], u16::from_le_bytes(payload[1..3].try_into()?))),
         n => bail!("bad join payload length {}", n),
     }
 }
@@ -167,10 +168,10 @@ pub fn parse_assign(payload: &[u8]) -> Result<(u64, u64, u16, u32)> {
         bail!("bad assign payload length {}", payload.len());
     }
     Ok((
-        u64::from_le_bytes(payload[0..8].try_into().unwrap()),
-        u64::from_le_bytes(payload[8..16].try_into().unwrap()),
-        u16::from_le_bytes(payload[16..18].try_into().unwrap()),
-        u32::from_le_bytes(payload[18..22].try_into().unwrap()),
+        u64::from_le_bytes(payload[0..8].try_into()?),
+        u64::from_le_bytes(payload[8..16].try_into()?),
+        u16::from_le_bytes(payload[16..18].try_into()?),
+        u32::from_le_bytes(payload[18..22].try_into()?),
     ))
 }
 
@@ -189,8 +190,8 @@ pub fn parse_heartbeat(payload: &[u8]) -> Result<(u64, u64)> {
         bail!("bad heartbeat payload length {}", payload.len());
     }
     Ok((
-        u64::from_le_bytes(payload[0..8].try_into().unwrap()),
-        u64::from_le_bytes(payload[8..16].try_into().unwrap()),
+        u64::from_le_bytes(payload[0..8].try_into()?),
+        u64::from_le_bytes(payload[8..16].try_into()?),
     ))
 }
 
@@ -202,7 +203,7 @@ pub fn epoch_payload(epoch: u64) -> Vec<u8> {
 /// Decode an EPOCH payload.
 pub fn parse_epoch(payload: &[u8]) -> Result<u64> {
     match payload.len() {
-        8 => Ok(u64::from_le_bytes(payload.try_into().unwrap())),
+        8 => Ok(u64::from_le_bytes(payload.try_into()?)),
         n => bail!("bad epoch payload length {}", n),
     }
 }
@@ -245,8 +246,8 @@ pub fn parse_marker_frame(payload: &[u8]) -> Result<(bool, u64, String)> {
     if payload.len() < 13 || payload[0] > 1 {
         bail!("bad marker frame payload ({} bytes)", payload.len());
     }
-    let step = u64::from_le_bytes(payload[1..9].try_into().unwrap());
-    let crc = u32::from_le_bytes(payload[9..13].try_into().unwrap());
+    let step = u64::from_le_bytes(payload[1..9].try_into()?);
+    let crc = u32::from_le_bytes(payload[9..13].try_into()?);
     if marker_checksum(payload[0], step, &payload[13..]) != crc {
         bail!("marker frame checksum mismatch at step {}", step);
     }
@@ -275,7 +276,7 @@ pub fn read_frame<R: Read>(stream: &mut R) -> Result<Frame> {
     let mut header = [0u8; FRAME_HEADER_LEN];
     stream.read_exact(&mut header).context("reading frame header")?;
     let kind = header[0];
-    let len = u32::from_le_bytes(header[1..5].try_into().unwrap()) as usize;
+    let len = u32::from_le_bytes(header[1..5].try_into()?) as usize;
     if len > MAX_FRAME {
         bail!("frame too large: {}", len);
     }
@@ -412,6 +413,54 @@ mod tests {
         write_frame(&mut out, &Frame { kind: kind::ACK, payload: vec![1, 2, 3] }).unwrap();
         let f = read_frame(&mut Cursor::new(out)).unwrap();
         assert_eq!((f.kind, f.payload), (kind::ACK, vec![1, 2, 3]));
+    }
+
+    #[test]
+    fn truncated_decode_fails_for_every_frame_kind() {
+        use std::io::Cursor;
+        // every kind constant in `mod kind`, in declaration order — a
+        // new kind must be added here or the frame-kind-coverage lint
+        // rule flags its missing truncation test
+        let kinds = [
+            kind::PATCH,
+            kind::ANCHOR,
+            kind::SUBSCRIBE,
+            kind::ACK,
+            kind::CLOSE,
+            kind::NACK,
+            kind::MARKER,
+            kind::NACK_MISS,
+            kind::HOP,
+            kind::JOIN,
+            kind::ASSIGN,
+            kind::HEARTBEAT,
+            kind::EPOCH,
+            kind::STORE_GET,
+            kind::STORE_PUT,
+            kind::STORE_LIST,
+            kind::STORE_STAT,
+            kind::STORE_REPLY,
+        ];
+        for (i, &k) in kinds.iter().enumerate() {
+            assert_eq!(k as usize, i + 1, "kinds list out of sync with mod kind");
+            // 3 of 5 header bytes
+            let e = read_frame(&mut Cursor::new(vec![k, 1, 0])).unwrap_err();
+            assert!(format!("{:#}", e).contains("reading frame header"), "kind {}: {:#}", k, e);
+            // full header promising 100 payload bytes, only 10 present
+            let mut buf = vec![k, 100, 0, 0, 0];
+            buf.extend_from_slice(&[7u8; 10]);
+            let e = read_frame(&mut Cursor::new(buf)).unwrap_err();
+            assert!(format!("{:#}", e).contains("reading frame payload"), "kind {}: {:#}", k, e);
+        }
+        // truncated *payloads* of the fixed-size control codecs error
+        // instead of panicking (these used to be unwrap() sites)
+        assert!(parse_shard_ack(&[1, 2, 3]).is_err());
+        assert!(parse_hop(&[1]).is_err());
+        assert!(parse_join(&[1]).is_err());
+        assert!(parse_assign(&[0u8; 5]).is_err());
+        assert!(parse_heartbeat(&[0u8; 3]).is_err());
+        assert!(parse_epoch(&[0u8; 2]).is_err());
+        assert!(parse_marker_frame(&[0u8; 4]).is_err());
     }
 
     #[test]

@@ -59,6 +59,7 @@ use crate::storage::retention::{self, Inventory, RetentionPolicy};
 use crate::storage::ObjectStore;
 use crate::util::retry::RetryPolicy;
 use crate::util::rng::splitmix64;
+use crate::util::sync::{CondvarExt, LockExt};
 use anyhow::{bail, Context, Result};
 use std::collections::{BTreeMap, HashSet};
 use std::net::Shutdown;
@@ -539,7 +540,7 @@ impl SyncTransport for InProcTransport {
     }
 
     fn publish_frame(&self, id: FrameId, bytes: &[u8]) -> Result<()> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.plock();
         match id {
             FrameId::Delta { step } => {
                 st.deltas.insert(step, bytes.to_vec());
@@ -556,7 +557,7 @@ impl SyncTransport for InProcTransport {
     }
 
     fn publish_marker(&self, id: MarkerId, payload: &str) -> Result<()> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.plock();
         match id {
             MarkerId::Delta(step) => {
                 st.delta_markers.insert(step, payload.to_string());
@@ -572,7 +573,7 @@ impl SyncTransport for InProcTransport {
 
     fn latest_ready(&self) -> Result<Inventory> {
         self.counters.bump(&self.counters.inventory_scans);
-        let st = self.state.lock().unwrap();
+        let st = self.state.plock();
         Ok(Inventory {
             delta_steps: st.delta_markers.keys().copied().collect(),
             anchor_steps: st.anchor_markers.keys().copied().collect(),
@@ -580,7 +581,7 @@ impl SyncTransport for InProcTransport {
     }
 
     fn fetch_step(&self, step: u64) -> Result<Option<StepData>> {
-        let st = self.state.lock().unwrap();
+        let st = self.state.plock();
         let marker = match st.delta_markers.get(&step) {
             Some(m) => m.clone(),
             None => return Ok(None),
@@ -599,7 +600,7 @@ impl SyncTransport for InProcTransport {
     }
 
     fn fetch_shard(&self, step: u64, shard: u32) -> Result<Vec<u8>> {
-        let st = self.state.lock().unwrap();
+        let st = self.state.plock();
         let obj = st
             .shards
             .get(&(step, shard))
@@ -610,7 +611,7 @@ impl SyncTransport for InProcTransport {
     }
 
     fn fetch_anchor(&self, step: u64) -> Result<(Vec<u8>, String)> {
-        let st = self.state.lock().unwrap();
+        let st = self.state.plock();
         let obj = st
             .anchors
             .get(&step)
@@ -829,7 +830,7 @@ impl RelayTransport {
     /// error). Always false for the producer role.
     pub fn stream_closed(&self) -> bool {
         match &self.role {
-            RelayRole::Subscriber(sub) => sub.state.0.lock().unwrap().closed,
+            RelayRole::Subscriber(sub) => sub.state.0.plock().closed,
             RelayRole::Publisher { .. } => false,
         }
     }
@@ -840,7 +841,7 @@ impl RelayTransport {
     /// end-of-stream is never mistaken for a dead relay.
     pub fn stream_failed(&self) -> bool {
         match &self.role {
-            RelayRole::Subscriber(sub) => sub.state.0.lock().unwrap().failed,
+            RelayRole::Subscriber(sub) => sub.state.0.plock().failed,
             RelayRole::Publisher { .. } => false,
         }
     }
@@ -851,7 +852,7 @@ impl RelayTransport {
     /// to the SUBSCRIBE handshake has arrived (None before that).
     pub fn hops(&self) -> Option<u32> {
         match &self.role {
-            RelayRole::Subscriber(sub) => sub.state.0.lock().unwrap().hops,
+            RelayRole::Subscriber(sub) => sub.state.0.plock().hops,
             RelayRole::Publisher { .. } => Some(0),
         }
     }
@@ -878,7 +879,7 @@ impl RelayTransport {
 impl Drop for RelayTransport {
     fn drop(&mut self) {
         if let RelayRole::Subscriber(sub) = &mut self.role {
-            let _ = sub.conn.lock().unwrap().shutdown(Shutdown::Both);
+            let _ = sub.conn.plock().shutdown(Shutdown::Both);
             if let Some(h) = sub.reader.take() {
                 let _ = h.join();
             }
@@ -899,7 +900,7 @@ fn spawn_receiver(
             Ok(f) => f,
             Err(_) => {
                 let (lock, cv) = &*state;
-                let mut st = lock.lock().unwrap();
+                let mut st = lock.plock();
                 st.closed = true;
                 st.failed = true;
                 drop(st);
@@ -911,7 +912,7 @@ fn spawn_receiver(
         match frame.kind {
             kind::PATCH => {
                 if let Ok(meta) = container::peek_meta(&frame.payload) {
-                    let mut st = lock.lock().unwrap();
+                    let mut st = lock.plock();
                     let stage = st.deltas.entry(meta.step).or_default();
                     let generation = stage
                         .frames
@@ -928,8 +929,11 @@ fn spawn_receiver(
                 // anchors travel as the store-plane PLSA object, so the
                 // step rides in the header
                 if frame.payload.len() >= 20 && &frame.payload[0..4] == b"PLSA" {
-                    let step = u64::from_le_bytes(frame.payload[4..12].try_into().unwrap());
-                    let mut st = lock.lock().unwrap();
+                    let Ok(step_bytes) = <[u8; 8]>::try_from(&frame.payload[4..12]) else {
+                        continue;
+                    };
+                    let step = u64::from_le_bytes(step_bytes);
+                    let mut st = lock.plock();
                     let stage = st.anchors.entry(step).or_default();
                     stage.object = Some(frame.payload);
                     if stage.marker.is_some() {
@@ -941,7 +945,7 @@ fn spawn_receiver(
             }
             kind::MARKER => {
                 if let Ok((is_anchor, step, marker)) = tcp::parse_marker_frame(&frame.payload) {
-                    let mut st = lock.lock().unwrap();
+                    let mut st = lock.plock();
                     if is_anchor {
                         let stage = st.anchors.entry(step).or_default();
                         stage.marker = Some(marker);
@@ -960,7 +964,7 @@ fn spawn_receiver(
                 // so a waiting fetch_shard stops immediately instead
                 // of running out its NACK timeout
                 if let Ok((step, shard)) = tcp::parse_shard_ack(&frame.payload) {
-                    let mut st = lock.lock().unwrap();
+                    let mut st = lock.plock();
                     st.unserviceable.insert((step, shard));
                     cv.notify_all();
                 }
@@ -968,11 +972,11 @@ fn spawn_receiver(
             kind::HOP => {
                 // reply to our SUBSCRIBE: upstream relay depth → ours
                 if let Ok(h) = tcp::parse_hop(&frame.payload) {
-                    lock.lock().unwrap().hops = Some(h + 1);
+                    lock.plock().hops = Some(h + 1);
                 }
             }
             kind::CLOSE => {
-                lock.lock().unwrap().closed = true;
+                lock.plock().closed = true;
                 cv.notify_all();
                 return;
             }
@@ -983,7 +987,7 @@ fn spawn_receiver(
 
 /// Put one repair NACK for `(step, shard)` on the wire and count it.
 fn send_nack(sub: &Subscriber, step: u64, shard: u32) -> Result<()> {
-    let mut conn = sub.conn.lock().unwrap();
+    let mut conn = sub.conn.plock();
     tcp::write_frame(
         &mut conn,
         &Frame { kind: kind::NACK, payload: tcp::shard_ack_payload(step, shard) },
@@ -1019,7 +1023,7 @@ impl SyncTransport for RelayTransport {
     fn latest_ready(&self) -> Result<Inventory> {
         let sub = self.sub_side()?;
         sub.counters.bump(&sub.counters.inventory_scans);
-        let st = sub.state.0.lock().unwrap();
+        let st = sub.state.0.plock();
         Ok(Inventory {
             // only fully-staged steps are committed from this
             // subscriber's point of view: a coalesced-away step simply
@@ -1041,7 +1045,7 @@ impl SyncTransport for RelayTransport {
 
     fn fetch_step(&self, step: u64) -> Result<Option<StepData>> {
         let sub = self.sub_side()?;
-        let st = sub.state.0.lock().unwrap();
+        let st = sub.state.0.plock();
         let stage = match st.deltas.get(&step) {
             Some(d) => d,
             None => return Ok(None),
@@ -1067,7 +1071,7 @@ impl SyncTransport for RelayTransport {
         let sub = self.sub_side()?;
         let (lock, cv) = &*sub.state;
         let (first, staged) = {
-            let mut st = lock.lock().unwrap();
+            let mut st = lock.plock();
             let first = st.served.insert((step, shard));
             let staged = st
                 .deltas
@@ -1093,7 +1097,7 @@ impl SyncTransport for RelayTransport {
         // spent (`gave_up`).
         let base_generation = staged.map(|(_, g)| g).unwrap_or(0);
         let owner = {
-            let mut st = lock.lock().unwrap();
+            let mut st = lock.plock();
             if st.nack_inflight.insert((step, shard)) {
                 // a stale miss flag from an earlier attempt must not
                 // short-circuit this fresh NACK's answer
@@ -1106,7 +1110,7 @@ impl SyncTransport for RelayTransport {
         };
         if owner {
             if let Err(e) = send_nack(sub, step, shard) {
-                lock.lock().unwrap().nack_inflight.remove(&(step, shard));
+                lock.plock().nack_inflight.remove(&(step, shard));
                 return Err(e);
             }
         }
@@ -1121,11 +1125,12 @@ impl SyncTransport for RelayTransport {
         let mut retry = sub.nack_policy.start();
         let deadline = retry.deadline();
         let mut next_resend = if owner {
+            // pallas-lint: allow(clock-seam): schedules the next wall-time NACK resend (see audit note above)
             retry.next_delay().map(|d| Instant::now() + d)
         } else {
             None
         };
-        let mut st = lock.lock().unwrap();
+        let mut st = lock.plock();
         loop {
             if let Some((bytes, g)) = st.deltas.get(&step).and_then(|d| d.frames.get(&shard)) {
                 if *g > base_generation {
@@ -1157,6 +1162,7 @@ impl SyncTransport for RelayTransport {
                 }
                 bail!("relay stream closed awaiting shard {} of step {}", shard, step);
             }
+            // pallas-lint: allow(clock-seam): wall reading against the live-socket NACK deadline
             let now = Instant::now();
             if now >= deadline {
                 if owner {
@@ -1178,23 +1184,24 @@ impl SyncTransport for RelayTransport {
                     // re-send and count the retry
                     drop(st);
                     if let Err(e) = send_nack(sub, step, shard) {
-                        lock.lock().unwrap().nack_inflight.remove(&(step, shard));
+                        lock.plock().nack_inflight.remove(&(step, shard));
                         return Err(e);
                     }
                     sub.counters.bump(&sub.counters.retries);
+                    // pallas-lint: allow(clock-seam): re-arms the wall-time resend schedule
                     next_resend = retry.next_delay().map(|d| Instant::now() + d);
-                    st = lock.lock().unwrap();
+                    st = lock.plock();
                     continue;
                 }
             }
             let wake = next_resend.map_or(deadline, |t| t.min(deadline));
-            st = cv.wait_timeout(st, wake - now).unwrap().0;
+            st = cv.pwait_timeout(st, wake - now);
         }
     }
 
     fn fetch_anchor(&self, step: u64) -> Result<(Vec<u8>, String)> {
         let sub = self.sub_side()?;
-        let st = sub.state.0.lock().unwrap();
+        let st = sub.state.0.plock();
         let stage = st.anchors.get(&step).with_context(|| format!("anchor {}", step))?;
         match (&stage.object, &stage.marker) {
             (Some(obj), Some(marker)) => {
@@ -1331,7 +1338,7 @@ impl<T: SyncTransport> SyncTransport for FaultInjectingTransport<T> {
         if self.plan.delay_marker_prob > 0.0 {
             if let Some(&head) = inv.delta_steps.last() {
                 if self.roll(head, 0, SALT_DELAY) < self.plan.delay_marker_prob
-                    && self.delayed.lock().unwrap().insert(head)
+                    && self.delayed.plock().insert(head)
                 {
                     self.injected.fetch_add(1, Ordering::Relaxed);
                     inv.delta_steps.pop();
@@ -1346,7 +1353,7 @@ impl<T: SyncTransport> SyncTransport for FaultInjectingTransport<T> {
     }
 
     fn fetch_shard(&self, step: u64, shard: u32) -> Result<Vec<u8>> {
-        let first = self.served.lock().unwrap().insert((step, shard));
+        let first = self.served.plock().insert((step, shard));
         if !first && self.plan.target_unserviceable == Some((step, shard)) {
             // the repair seam is dead for this slot: report it the way
             // the relay backend reports a NACK_MISS, so the consumer's
@@ -1682,7 +1689,7 @@ mod tests {
         // marker to believe in, but shard 1's frame never arrives
         producer_stage_marker(&relay, 1, 2);
         let deadline = Instant::now() + Duration::from_secs(10);
-        while consumer.sub_side().unwrap().state.0.lock().unwrap().deltas.is_empty() {
+        while consumer.sub_side().unwrap().state.0.plock().deltas.is_empty() {
             assert!(Instant::now() < deadline, "marker never staged");
             std::thread::sleep(Duration::from_millis(3));
         }
@@ -1737,7 +1744,7 @@ mod tests {
     /// Block until the subscriber has staged at least one delta step.
     fn wait_staged(consumer: &RelayTransport) {
         let deadline = Instant::now() + Duration::from_secs(10);
-        while consumer.sub_side().unwrap().state.0.lock().unwrap().deltas.is_empty() {
+        while consumer.sub_side().unwrap().state.0.plock().deltas.is_empty() {
             assert!(Instant::now() < deadline, "marker never staged");
             std::thread::sleep(Duration::from_millis(3));
         }

@@ -575,7 +575,9 @@ impl<T: SyncTransport> Publisher<T> {
 /// Consumer-side statistics for one synchronize() call.
 #[derive(Debug, Clone, Default)]
 pub struct SyncStats {
+    // pallas-lint: allow(counter-csv-drift): per-call step bracket, meaningless summed across calls
     pub from_step: u64,
+    // pallas-lint: allow(counter-csv-drift): per-call step bracket, meaningless summed across calls
     pub to_step: u64,
     pub path: SyncPath,
     /// Which transport backend served this call.

@@ -35,6 +35,7 @@ impl ObjectStore {
             "pulse_store_{}_{}_{}",
             tag,
             std::process::id(),
+            // pallas-lint: allow(clock-seam): entropy for a unique temp-dir name, never compared as time
             std::time::SystemTime::now()
                 .duration_since(std::time::UNIX_EPOCH)
                 .unwrap()

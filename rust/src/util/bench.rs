@@ -98,14 +98,17 @@ impl Bench {
         f: &mut dyn FnMut(),
     ) -> &BenchResult {
         // Warmup.
+        // pallas-lint: allow(clock-seam): benchmarks time real work by definition
         let w = Instant::now();
         while w.elapsed().as_secs_f64() < self.warmup {
             f();
         }
         // Measure.
         let mut samples_ns: Vec<f64> = Vec::new();
+        // pallas-lint: allow(clock-seam): benchmarks time real work by definition
         let start = Instant::now();
         while start.elapsed().as_secs_f64() < self.min_time || samples_ns.len() < self.min_iters {
+            // pallas-lint: allow(clock-seam): the per-iteration sample itself
             let t = Instant::now();
             f();
             samples_ns.push(t.elapsed().as_nanos() as f64);

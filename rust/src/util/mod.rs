@@ -9,6 +9,7 @@ pub mod pool;
 pub mod prop;
 pub mod retry;
 pub mod rng;
+pub mod sync;
 
 use std::path::Path;
 
@@ -81,6 +82,7 @@ pub fn atomic_write(path: &Path, contents: &[u8]) -> std::io::Result<()> {
     let tmp = path.with_extension(format!(
         "tmp.{}.{}",
         std::process::id(),
+        // pallas-lint: allow(clock-seam): entropy for a unique temp name, never compared as time
         std::time::SystemTime::now()
             .duration_since(std::time::UNIX_EPOCH)
             .map(|d| d.subsec_nanos())
@@ -146,6 +148,7 @@ pub struct Stopwatch(std::time::Instant);
 
 impl Stopwatch {
     pub fn start() -> Self {
+        // pallas-lint: allow(clock-seam): Stopwatch IS the wall-time seam for bench/report timing
         Stopwatch(std::time::Instant::now())
     }
     pub fn secs(&self) -> f64 {

@@ -97,6 +97,7 @@ impl RetryPolicy {
     /// Begin a budgeted retry sequence anchored at "now" on the wall
     /// clock. Wall-plane convenience over [`RetryPolicy::start_at`].
     pub fn start(&self) -> Retry {
+        // pallas-lint: allow(clock-seam): the wall anchor for socket-plane retries; sim uses start_at
         Retry { inner: self.start_at(Duration::ZERO), anchor: Instant::now() }
     }
 
@@ -172,9 +173,60 @@ impl Retry {
     }
 }
 
+/// A wall-clock deadline for bounded poll loops — the socket plane's
+/// "wait up to N seconds for X" primitive. Open-coded versions of this
+/// (`let t0 = Instant::now(); while t0.elapsed() < budget { sleep }`)
+/// are exactly what the `clock-seam` and `retry-discipline` lint rules
+/// flag; `Deadline` centralizes the two wall reads and the sleep here,
+/// in the one file those rules exempt, so callers stay clean. Waits
+/// that need backoff should ride a [`RetryPolicy`] instead — this is
+/// for fixed-cadence convergence polls (tests, CLI drivers, heartbeat
+/// pacing).
+pub struct Deadline {
+    end: Instant,
+}
+
+impl Deadline {
+    /// A deadline `budget` from now.
+    pub fn after(budget: Duration) -> Deadline {
+        // pallas-lint: allow(clock-seam): wall anchor of the bounded-wait seam; sim polls its own clock
+        Deadline { end: Instant::now() + budget }
+    }
+
+    /// True once the budget is spent.
+    pub fn expired(&self) -> bool {
+        // pallas-lint: allow(clock-seam): the matching wall read of the bounded-wait seam
+        Instant::now() >= self.end
+    }
+
+    /// Sleep one poll step (never past useful precision; a zero step
+    /// yields the scheduler slot).
+    pub fn tick(&self, step: Duration) {
+        std::thread::sleep(step);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn deadline_expires_after_budget() {
+        let d = Deadline::after(Duration::from_millis(5));
+        assert!(!d.expired(), "fresh deadline not yet expired");
+        let mut polls = 0;
+        while !d.expired() {
+            d.tick(Duration::from_millis(1));
+            polls += 1;
+            assert!(polls < 10_000, "deadline must expire");
+        }
+        assert!(d.expired());
+    }
+
+    #[test]
+    fn zero_budget_deadline_is_immediately_expired() {
+        assert!(Deadline::after(Duration::ZERO).expired());
+    }
 
     #[test]
     fn schedule_is_deterministic_per_seed() {

@@ -1,0 +1,100 @@
+//! Poison-tolerant lock/condvar helpers for the wire plane.
+//!
+//! `Mutex::lock().unwrap()` was the single biggest `unwrap()`
+//! population in `net/` (~100 sites) before the `panic-free-net` lint
+//! rule landed. Propagating a `PoisonError` would be the wrong fix:
+//! the sync plane's correctness story deliberately does not rest on
+//! lock-state invariants — every consumer verifies end-to-end against
+//! the container hash tree and every wait rides a budgeted
+//! `RetryPolicy` — so the most a poisoned lock can leak is a stale
+//! counter or a queue entry the retry machinery re-requests. A worker
+//! panicking while holding one of these locks must therefore not
+//! cascade into every peer thread panicking on acquire.
+//!
+//! [`LockExt::plock`] ("poison-tolerant lock") acquires the mutex and,
+//! on poison, takes the inner guard anyway. [`CondvarExt::pwait_timeout`]
+//! does the same for `Condvar::wait_timeout`.
+
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::Duration;
+
+/// Poison-tolerant `Mutex` acquisition.
+pub trait LockExt<T> {
+    /// Lock, recovering the guard from a poisoned mutex instead of
+    /// panicking. Use on every wire-plane lock; data behind these
+    /// locks is re-verified or re-requested end-to-end.
+    fn plock(&self) -> MutexGuard<'_, T>;
+}
+
+impl<T> LockExt<T> for Mutex<T> {
+    fn plock(&self) -> MutexGuard<'_, T> {
+        self.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+}
+
+/// Poison-tolerant `Condvar` waits.
+pub trait CondvarExt {
+    /// `wait_timeout`, recovering the guard from a poisoned mutex and
+    /// dropping the (unused on the wire plane) timeout flag.
+    fn pwait_timeout<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        dur: Duration,
+    ) -> MutexGuard<'a, T>;
+}
+
+impl CondvarExt for Condvar {
+    fn pwait_timeout<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        dur: Duration,
+    ) -> MutexGuard<'a, T> {
+        self.wait_timeout(guard, dur)
+            .unwrap_or_else(|poisoned| poisoned.into_inner())
+            .0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Condvar, Mutex};
+
+    #[test]
+    fn plock_survives_poison() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        assert_eq!(*m.plock(), 7, "guard still accessible after poison");
+        *m.plock() = 8;
+        assert_eq!(*m.plock(), 8);
+    }
+
+    #[test]
+    fn pwait_timeout_returns_guard() {
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let (lock, cv) = &*pair;
+        let g = lock.plock();
+        let g = cv.pwait_timeout(g, Duration::from_millis(1));
+        assert!(!*g, "timed out without a notify; state unchanged");
+    }
+
+    #[test]
+    fn pwait_timeout_survives_poison() {
+        let pair = Arc::new((Mutex::new(0u32), Condvar::new()));
+        let pair2 = Arc::clone(&pair);
+        let _ = std::thread::spawn(move || {
+            let _g = pair2.0.lock().unwrap();
+            panic!("poison");
+        })
+        .join();
+        let (lock, cv) = &*pair;
+        let g = cv.pwait_timeout(lock.plock(), Duration::from_millis(1));
+        assert_eq!(*g, 0);
+    }
+}
