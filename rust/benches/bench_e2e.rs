@@ -96,6 +96,47 @@ fn bench_sync_roundtrip(b: &mut Bench) {
     }
 }
 
+/// The observability tax: the same in-proc roundtrip with the flight
+/// recorder + histograms on (default) and off. Every span on the hot
+/// path is a mutex lock plus one ring store and every histogram sample
+/// an atomic bump, so the two rows must stay within noise of each
+/// other — `ci/bench_baseline.json` carries both so a regression in
+/// either the instrumented or the bare path trips the guard.
+fn bench_obs_overhead(b: &mut Bench) {
+    let n = 200_000usize;
+    let mut rng = Rng::new(67);
+    let init: Vec<u16> = (0..n)
+        .map(|_| pulse::bf16::f32_to_bf16_bits((rng.normal() * 0.02) as f32))
+        .collect();
+    let hub = pulse::obs::Obs::global();
+    hub.set_enabled(true);
+    let fabric = InProcTransport::new();
+    roundtrip_over(
+        b,
+        "e2e/obs_recorder_on/200k x4 shards inproc",
+        fabric.clone(),
+        fabric,
+        4,
+        n,
+        &init,
+        &mut rng,
+    );
+    hub.set_enabled(false);
+    let fabric = InProcTransport::new();
+    roundtrip_over(
+        b,
+        "e2e/obs_recorder_off/200k x4 shards inproc",
+        fabric.clone(),
+        fabric,
+        4,
+        n,
+        &init,
+        &mut rng,
+    );
+    hub.set_enabled(true);
+    hub.clear();
+}
+
 /// One publish → EVERY leaf synced, over a real TCP relay topology:
 /// `tree = false` is the star (all leaves on the root), `tree = true`
 /// a 2-level tree (two mid-tier `RelayNode`s, leaves split across
@@ -415,6 +456,7 @@ fn bench_train_step(b: &mut Bench) {
 fn main() {
     let mut b = Bench::new();
     bench_sync_roundtrip(&mut b);
+    bench_obs_overhead(&mut b);
     bench_fanout_topologies(&mut b);
     bench_remote_store(&mut b);
     bench_control_replan(&mut b);

@@ -444,6 +444,75 @@ mod tests {
         assert_eq!(active_rules(&r), ["counter-csv-drift"]);
     }
 
+    const OBS_HUB: &str = "pub struct Obs {}\nimpl Obs {\n\
+                           pub fn hist_names() -> [&'static str; 2] {\n\
+                           [\"nack_repair_us\", \"e2e_step_us\"]\n\
+                           }\n}\n";
+
+    #[test]
+    fn hist_csv_drift_failing_suppressed_clean() {
+        let export_full = "pub struct ObsExport {}\nimpl ObsExport {\n\
+                           fn write_csv(&self) {\n\
+                           let rows = [\"nack_repair_us\", \"e2e_step_us\"];\n\
+                           }\n}\n";
+        let export_missing = "pub struct ObsExport {}\nimpl ObsExport {\n\
+                              fn write_csv(&self) {\n\
+                              let rows = [\"nack_repair_us\"];\n\
+                              }\n}\n";
+
+        // failing: e2e_step_us is registered but never exported
+        let r = lint_sources(&[
+            ("obs/mod.rs", OBS_HUB),
+            ("coordinator/metrics.rs", export_missing),
+        ]);
+        assert_eq!(active_rules(&r), ["counter-csv-drift"]);
+        let f = r.active().next().unwrap();
+        assert_eq!(f.file, "obs/mod.rs");
+        assert!(f.message.contains("e2e_step_us"), "{}", f.message);
+        assert!(f.message.contains("ObsExport"), "{}", f.message);
+
+        // suppressed: pragma above the registry line
+        let obs_supp = "pub struct Obs {}\nimpl Obs {\n\
+                        pub fn hist_names() -> [&'static str; 2] {\n\
+                        // pallas-lint: allow(counter-csv-drift): exporter row lands next PR\n\
+                        [\"nack_repair_us\", \"e2e_step_us\"]\n\
+                        }\n}\n";
+        let r = lint_sources(&[
+            ("obs/mod.rs", obs_supp),
+            ("coordinator/metrics.rs", export_missing),
+        ]);
+        assert!(r.is_clean(), "{}", r.render());
+        assert_eq!(r.suppressed().count(), 1);
+
+        // clean: every registered histogram has an export row
+        let r = lint_sources(&[
+            ("obs/mod.rs", OBS_HUB),
+            ("coordinator/metrics.rs", export_full),
+        ]);
+        assert!(r.is_clean(), "{}", r.render());
+    }
+
+    #[test]
+    fn hist_names_outside_obs_or_rows_outside_write_csv_do_not_count() {
+        // the registry only reads Obs::hist_names; a same-file helper
+        // listing names is not a registry
+        let stray = "pub struct Obs {}\nimpl Obs {\n\
+                     fn labels() { let x = [\"nack_repair_us\"]; }\n\
+                     pub fn hist_names() -> [&'static str; 1] { [\"e2e_step_us\"] }\n\
+                     }\n";
+        // rows outside ObsExport::write_csv do not satisfy the surface
+        let export = "pub struct ObsExport {}\nimpl ObsExport {\n\
+                      fn other(&self) { let x = \"e2e_step_us\"; }\n\
+                      fn write_csv(&self) { let rows = [\"nack_repair_us\"]; }\n}\n";
+        let r = lint_sources(&[
+            ("obs/mod.rs", stray),
+            ("coordinator/metrics.rs", export),
+        ]);
+        let act: Vec<_> = r.active().collect();
+        assert_eq!(act.len(), 1, "{}", r.render());
+        assert!(act[0].message.contains("`e2e_step_us`"), "{}", act[0].message);
+    }
+
     // ------------------------------------------------ pragma hygiene
 
     #[test]

@@ -25,9 +25,10 @@
 //!   on `FRAME_HEADER_LEN` writes — so coverage is checked where kinds
 //!   actually matter: dispatch and decode.)
 //! * `counter-csv-drift` — every numeric `TransportCounters` /
-//!   `SyncStats` field surfaces as a `TransportMeter` CSV column, so
-//!   a counter added in a future PR cannot silently vanish from
-//!   `results/*.csv`.
+//!   `SyncStats` field surfaces as a `TransportMeter` CSV column, and
+//!   every histogram registered in `Obs::hist_names` surfaces as an
+//!   `ObsExport` CSV row, so a counter or latency histogram added in a
+//!   future PR cannot silently vanish from `results/*.csv`.
 //!
 //! A finding is suppressible only by a pragma comment on the same line
 //! or the line directly above, carrying the rule name and a non-empty
@@ -44,7 +45,7 @@ pub const RULES: &[(&str, &str)] = &[
     ("panic-free-net", "no unwrap/expect/panic! in non-test net/ code"),
     ("bounded-channels", "no unbounded mpsc::channel on net/ or sim/ paths"),
     ("frame-kind-coverage", "every tcp.rs frame kind is dispatched and truncation-tested"),
-    ("counter-csv-drift", "every TransportCounters/SyncStats counter lands in the meter CSV"),
+    ("counter-csv-drift", "every TransportCounters/SyncStats counter and Obs histogram lands in its CSV"),
 ];
 
 /// The pseudo-rule malformed pragmas are reported under.
@@ -355,6 +356,51 @@ fn counter_csv_drift(files: &[SourceFile], out: &mut Vec<Finding>) {
                     "counter field `{}` has no TransportMeter CSV column — the observability \
                      surface drifted",
                     field
+                ),
+                suppressed: None,
+            });
+        }
+    }
+    hist_csv_drift(files, out);
+}
+
+/// The histogram leg of `counter-csv-drift`: every name registered in
+/// `Obs::hist_names` (obs/mod.rs) must appear as a string literal in
+/// `ObsExport::write_csv` (coordinator/metrics.rs), so a latency
+/// histogram added to the hub cannot be dropped from
+/// `results/obs_hist.csv`.
+fn hist_csv_drift(files: &[SourceFile], out: &mut Vec<Finding>) {
+    let hists: Vec<(String, String, usize)> = files // (file, name, line)
+        .iter()
+        .filter(|f| f.path == "obs/mod.rs")
+        .flat_map(|f| f.scan.strings.iter().map(move |s| (f, s)))
+        .filter(|(_, s)| {
+            s.impl_name.as_deref() == Some("Obs") && s.fn_name.as_deref() == Some("hist_names")
+        })
+        .map(|(f, s)| (f.path.clone(), s.text.clone(), s.line))
+        .collect();
+    if hists.is_empty() {
+        return;
+    }
+    let rows: Vec<String> = files
+        .iter()
+        .filter(|f| f.path == "coordinator/metrics.rs")
+        .flat_map(|f| f.scan.strings.iter())
+        .filter(|s| {
+            s.impl_name.as_deref() == Some("ObsExport")
+                && s.fn_name.as_deref() == Some("write_csv")
+        })
+        .map(|s| s.text.clone())
+        .collect();
+    for (file, name, line) in hists {
+        if !rows.iter().any(|r| *r == name) {
+            out.push(Finding {
+                rule: "counter-csv-drift",
+                file,
+                line,
+                message: format!(
+                    "histogram `{}` has no ObsExport CSV row — the latency surface drifted",
+                    name
                 ),
                 suppressed: None,
             });

@@ -73,6 +73,8 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         "scale" => scale(args),
         "benchguard" => benchguard(args),
         "lint" => lint(args),
+        "obs" => obs_cmd(args),
+        "trace" => trace(args),
         "all" => {
             for c in [
                 "table1", "fig9", "fig3", "table2", "table6", "fig1", "fig2", "fig14", "fig13",
@@ -92,7 +94,9 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
                  fig15 fig16 fig17 table1 table2 table4 table5 table6 table7 table10\n\
                  table11 table13 table14 transports cache topology control all\n\
                  gates: scale (sim scale gate) benchguard (bench regression guard)\n\
-                 lint (static analysis: paper lint [--json results/lint.json])"
+                 lint (static analysis: paper lint [--json results/lint.json])\n\
+                 obs <host:port> [--events] (live OBS_SNAP snapshot from any sync-plane node)\n\
+                 trace [--sim] (flight-recorder timeline reconstruction -> results/trace.csv)"
             );
             Ok(())
         }
@@ -2193,6 +2197,251 @@ fn scale(args: &Args) -> Result<()> {
         &rows,
     );
     println!("wrote {}", out.display());
+    Ok(())
+}
+
+// ====================================================== obs
+/// Live node introspection: fetch one `OBS_SNAP` snapshot from any
+/// sync-plane listener (relay root, mid-tier relay node, store server,
+/// control plane — they all answer the same frame) and pretty-print
+/// the JSON. `--events` additionally pulls the target's
+/// flight-recorder ring.
+fn obs_cmd(args: &Args) -> Result<()> {
+    let addr = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("usage: paper obs <host:port|port> [--events]"))?;
+    let flags = if args.flag("events") { pulse::obs::SNAP_WITH_EVENTS } else { 0 };
+    let snap = pulse::obs::fetch_snapshot(addr, flags)?;
+    println!("{}", snap.to_pretty());
+    Ok(())
+}
+
+// ====================================================== trace
+/// `results/trace.csv`: one row per pipeline stage with its offset
+/// from the step's publish span.
+fn write_trace_csv(mode: &str, report: &pulse::obs::TraceReport) -> Result<()> {
+    let out = results_dir().join("trace.csv");
+    let mut w =
+        CsvWriter::create(&out, &["mode", "stage", "count", "p50_us", "p99_us", "max_us"])?;
+    let mut rows = Vec::new();
+    for r in &report.rows {
+        let row = vec![
+            mode.to_string(),
+            r.stage.name().to_string(),
+            r.count.to_string(),
+            r.p50_us.to_string(),
+            r.p99_us.to_string(),
+            r.max_us.to_string(),
+        ];
+        w.row(&row)?;
+        rows.push(row);
+    }
+    print_table(
+        &format!(
+            "per-stage timeline offsets ({}; {} timelines, {} complete)",
+            mode, report.timelines, report.complete
+        ),
+        &["mode", "stage", "count", "p50 us", "p99 us", "max us"],
+        &rows,
+    );
+    println!("wrote {}", out.display());
+    Ok(())
+}
+
+/// Flight-recorder timeline reconstruction. Default mode drives a real
+/// 2-level relay tree (root → 2 mid-tier nodes → leaves) through a
+/// sharded stream, then reconstructs every `(step, shard)` timeline
+/// from the process-global recorder: publish → relay stage → apply,
+/// with per-stage p50/p99 offsets landing in `results/trace.csv`.
+/// `--sim` instead replays the deterministic simulator twice, asserts
+/// the span stream is bit-identical, and reconstructs from it.
+fn trace(args: &Args) -> Result<()> {
+    if args.flag("sim") {
+        return trace_sim(args);
+    }
+    use pulse::net::node::RelayNode;
+    use pulse::net::relay::Relay;
+    use pulse::net::transport::RelayTransport;
+    use pulse::pulse::sync::{Consumer, Publisher, SyncStats};
+    use pulse::util::pool;
+    use pulse::util::retry::Deadline;
+    use pulse::util::rng::Rng;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    fn wait_sync(c: &mut Consumer<RelayTransport>, step: u64) -> Result<SyncStats> {
+        let deadline = Deadline::after(Duration::from_secs(30));
+        loop {
+            if let Some(head) = c.latest_ready()? {
+                if head >= step {
+                    return c.synchronize();
+                }
+            }
+            anyhow::ensure!(!deadline.expired(), "step {} never became ready", step);
+            deadline.tick(Duration::from_millis(2));
+        }
+    }
+
+    let n = args.usize_or("params", 60_000);
+    let steps = args.usize_or("steps", 6) as u64;
+    let shards = args.usize_or("shards", 4).max(2);
+    let subs = args.usize_or("subs", 4).max(2);
+
+    let hub = pulse::obs::Obs::global();
+    hub.clear();
+
+    let layout = sparse::synthetic_layout(n, 1024);
+    let mut rng = Rng::new(11);
+    let init: Vec<u16> = (0..n).map(|_| rng.next_u32() as u16).collect();
+
+    let root = Arc::new(Relay::start()?);
+    let node_a = RelayNode::join(root.port)?;
+    let node_b = RelayNode::join(root.port)?;
+    let deadline = Deadline::after(Duration::from_secs(5));
+    while (node_a.hop() != 1 || node_b.hop() != 1) && !deadline.expired() {
+        deadline.tick(Duration::from_millis(3));
+    }
+
+    let mut publisher =
+        Publisher::over(RelayTransport::publisher(root.clone()), layout.clone(), init.clone(), 6)?
+            .with_shards(shards);
+    let mut consumers: Vec<Consumer<RelayTransport>> = Vec::new();
+    for i in 0..subs {
+        let p = if i % 2 == 0 { node_a.port() } else { node_b.port() };
+        consumers.push(Consumer::over(RelayTransport::subscribe(p)?, layout.clone()));
+    }
+    let started = pool::par_map(consumers, |_, mut c| {
+        let r = wait_sync(&mut c, 0);
+        (c, r)
+    });
+    consumers = Vec::with_capacity(started.len());
+    for (c, r) in started {
+        r?;
+        consumers.push(c);
+    }
+
+    let mut w = init;
+    for step in 1..=steps {
+        for _ in 0..n / 100 {
+            let i = rng.below(n as u64) as usize;
+            w[i] = rng.next_u32() as u16;
+        }
+        publisher.publish(step, &w)?;
+        let synced = pool::par_map(consumers, |_, mut c| {
+            let r = wait_sync(&mut c, step);
+            (c, r)
+        });
+        consumers = Vec::with_capacity(synced.len());
+        for (c, r) in synced {
+            let cs = r?;
+            anyhow::ensure!(
+                cs.verified && c.weights.as_deref() == Some(w.as_slice()),
+                "bit-identity broken at step {}",
+                step
+            );
+            consumers.push(c);
+        }
+    }
+
+    // snapshot before teardown so shutdown noise cannot land in the
+    // trace; step 0 is the bootstrap anchor, which by design has no
+    // publish span (leaves restore it via the catch-up path)
+    let events: Vec<pulse::obs::SpanEvent> = hub
+        .recorder
+        .snapshot()
+        .into_iter()
+        .filter(|e| e.step >= 1 && e.step <= steps)
+        .collect();
+    node_a.stop();
+    node_b.stop();
+    root.stop();
+
+    let report = pulse::obs::reconstruct(&events);
+    anyhow::ensure!(
+        report.is_complete(),
+        "trace reconstruction incomplete: {} of {} timelines missing an endpoint ({:?})",
+        report.incomplete.len(),
+        report.timelines,
+        report.incomplete
+    );
+    write_trace_csv("tree", &report)?;
+    // the run also fed the latency histograms (e2e step, catch-up,
+    // NACK repair) — land their quantiles next to the trace
+    let hist_out = results_dir().join("obs_hist.csv");
+    pulse::coordinator::metrics::ObsExport::new().write_csv(&hist_out)?;
+    println!("wrote {}", hist_out.display());
+    println!(
+        "real-tree trace: {} leaves x {} steps x {} shards over 2 hops — {} timelines, all complete",
+        subs, steps, shards, report.timelines
+    );
+    Ok(())
+}
+
+/// The `--sim` leg of `paper trace`: run the deterministic simulator
+/// twice with a recorder sized to keep *every* span, assert the span
+/// stream replays bit-identically (hash and events), and reconstruct
+/// the timelines the same way the real-tree mode does.
+fn trace_sim(args: &Args) -> Result<()> {
+    use pulse::sim::topo::TopoSpec;
+    use pulse::sim::{run, SimConfig};
+    use std::time::Duration;
+
+    let n = args.usize_or("leaves", 10_000);
+    let fanout = args.usize_or("fanout", 8);
+    let seed = args.u64_or("seed", 42);
+    let steps = args.u64_or("steps", 8);
+
+    let mk = || {
+        let mut cfg = SimConfig::new(TopoSpec::kary(n, fanout).with_spares(2), seed);
+        cfg.steps = steps;
+        cfg.step_interval = Duration::from_millis(50);
+        cfg.shards_per_step = 4;
+        cfg.bytes_per_shard = 4096;
+        cfg.anchor_bytes = 65536;
+        // keep the whole span stream: reconstruction needs every
+        // event, not the newest-ring the scale gate keeps
+        cfg.recorder_capacity = n * steps as usize * 8 + 65_536;
+        cfg
+    };
+    let t = Stopwatch::start();
+    let r = run(mk());
+    let again = run(mk());
+    anyhow::ensure!(
+        r.span_hash == again.span_hash && r == again,
+        "span stream diverged across replays: {:016x} vs {:016x} — determinism contract broken",
+        r.span_hash,
+        again.span_hash
+    );
+    anyhow::ensure!(
+        r.converged,
+        "trace sim failed to converge (head {} at {:?})",
+        r.head_step,
+        r.converged_at
+    );
+    anyhow::ensure!(
+        r.spans as usize == r.span_events.len(),
+        "recorder ring dropped spans ({} retained of {}) — capacity estimate too small",
+        r.span_events.len(),
+        r.spans
+    );
+    let report = pulse::obs::reconstruct(&r.span_events);
+    anyhow::ensure!(
+        report.is_complete(),
+        "sim trace reconstruction incomplete: {} of {} timelines missing an endpoint",
+        report.incomplete.len(),
+        report.timelines
+    );
+    write_trace_csv("sim", &report)?;
+    println!(
+        "sim trace: {} leaves, {} spans, span_hash {:016x} (bit-identical x2), \
+         {} timelines complete in {:.1}s",
+        n,
+        r.spans,
+        r.span_hash,
+        report.complete,
+        t.secs()
+    );
     Ok(())
 }
 

@@ -1,9 +1,11 @@
 //! CSV metrics emission for the paper harness (`results/*.csv`) — every
 //! figure/table is regenerated from these files — plus the per-shard
 //! fan-out meter ([`ShardFanoutMeter`]) that tracks bytes/latency per
-//! shard of the sharded publish path (`pulse::sync`) and the
+//! shard of the sharded publish path (`pulse::sync`), the
 //! per-transport meter ([`TransportMeter`]) that accumulates sync-plane
-//! traffic per `net::transport` backend.
+//! traffic per `net::transport` backend, and the latency-histogram
+//! exporter ([`ObsExport`]) that lands the process-global observability
+//! hub's tail quantiles in `results/obs_hist.csv`.
 
 use crate::net::transport::TransportCounters;
 use crate::pulse::sync::{SyncPath, SyncStats};
@@ -271,6 +273,47 @@ impl TransportMeter {
     }
 }
 
+/// Exports the process-global observability hub ([`crate::obs::Obs`])
+/// to `results/obs_hist.csv`: one row per latency histogram with its
+/// sample count, mean, and tail quantiles. The histogram list written
+/// here mirrors [`crate::obs::Obs::hist_names`] — the
+/// `counter-csv-drift` lint rule fails the tree when the two drift
+/// apart, exactly like the `TransportCounters` ↔ [`TransportMeter`]
+/// column pairing.
+#[derive(Debug, Default)]
+pub struct ObsExport;
+
+impl ObsExport {
+    pub fn new() -> ObsExport {
+        ObsExport
+    }
+
+    /// One CSV row per registered histogram, read live from
+    /// [`crate::obs::Obs::global`].
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        let mut w = CsvWriter::create(
+            path,
+            &["hist", "count", "mean_us", "p50_us", "p99_us", "p999_us", "max_us"],
+        )?;
+        let obs = crate::obs::Obs::global();
+        for name in ["nack_repair_us", "catch_up_us", "store_rpc_us", "e2e_step_us"] {
+            let h = obs
+                .hist_named(name)
+                .ok_or_else(|| anyhow::anyhow!("histogram `{name}` is not registered"))?;
+            w.row(&[
+                name.to_string(),
+                h.count().to_string(),
+                format!("{:.1}", h.mean_us()),
+                h.p50_us().to_string(),
+                h.p99_us().to_string(),
+                h.p999_us().to_string(),
+                h.max_us().to_string(),
+            ])?;
+        }
+        Ok(())
+    }
+}
+
 /// Results directory: `$PULSE_RESULTS` or `<repo>/results`.
 pub fn results_dir() -> PathBuf {
     if let Ok(d) = std::env::var("PULSE_RESULTS") {
@@ -417,6 +460,29 @@ mod tests {
             text.lines().next().unwrap().contains(",markers_published,"),
             "header must carry the publish-marker column"
         );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn obs_export_writes_one_row_per_histogram() {
+        // The hub is process-global, so other tests may have recorded
+        // samples already — assert presence and lower bounds only.
+        crate::obs::hist(crate::obs::HistKind::NackRepair, 1_000);
+        let dir = std::env::temp_dir().join(format!("pulse_obscsv_{}", std::process::id()));
+        let p = dir.join("obs_hist.csv");
+        ObsExport::new().write_csv(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text.lines().count(), 5, "header + one row per histogram: {text}");
+        assert!(text.starts_with("hist,count,mean_us,p50_us,p99_us,p999_us,max_us\n"));
+        for name in crate::obs::Obs::hist_names() {
+            assert!(
+                text.lines().any(|l| l.starts_with(&format!("{name},"))),
+                "missing histogram row {name}: {text}"
+            );
+        }
+        let nack = text.lines().find(|l| l.starts_with("nack_repair_us,")).unwrap();
+        let count: u64 = nack.split(',').nth(1).unwrap().parse().unwrap();
+        assert!(count >= 1, "recorded sample must land: {nack}");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

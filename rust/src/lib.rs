@@ -9,8 +9,9 @@
 //!   compute-visibility gate ([`gate`]), sparse patch formats
 //!   ([`sparse`], [`codec`]), PULSESync / PULSELoCo ([`pulse`]),
 //!   dense baselines ([`baselines`]), GRPO training ([`rl`]), the
-//!   grail deployment substrate ([`grail`], [`storage`], [`net`]) and
-//!   the multi-trainer coordinator ([`coordinator`]).
+//!   grail deployment substrate ([`grail`], [`storage`], [`net`]),
+//!   the multi-trainer coordinator ([`coordinator`]) and the sync-plane
+//!   observability layer ([`obs`]).
 //! * **L2 (python/compile/model.py)** — the JAX model graphs, lowered
 //!   once to HLO text and executed from [`runtime`] via PJRT.
 //! * **L1 (python/compile/kernels/)** — Pallas kernels (attention,
@@ -27,6 +28,7 @@ pub mod coordinator;
 pub mod gate;
 pub mod grail;
 pub mod net;
+pub mod obs;
 pub mod optim;
 pub mod pulse;
 pub mod rl;

@@ -593,6 +593,28 @@ fn plane_handler(
                     }
                 }
             }
+            kind::OBS_SNAP => {
+                // introspection probes never JOIN — answer on the same
+                // socket and keep the probe timeout armed
+                let flags = tcp::parse_obs_snap(&frame.payload).unwrap_or(0);
+                let mut c = crate::util::json::Json::obj();
+                {
+                    let sh = shared.plock();
+                    let (relays, leaves) = sh.members.live_counts();
+                    c.set("epoch", sh.members.epoch().into())
+                        .set("replans", sh.members.replans().into())
+                        .set("deaths", sh.members.deaths().into())
+                        .set("live_relays", relays.into())
+                        .set("live_leaves", leaves.into())
+                        .set("root_port", (sh.root_port as u64).into());
+                }
+                let body = crate::obs::snapshot_reply("control", flags, c).to_string();
+                let reply =
+                    Frame { kind: kind::OBS_REPLY, payload: tcp::obs_reply_payload(&body) };
+                if tcp::write_frame(&mut stream, &reply).is_err() {
+                    break;
+                }
+            }
             kind::CLOSE => break,
             _ => {}
         }
@@ -1400,6 +1422,16 @@ mod tests {
         assert_eq!((epoch, id, port, hop), (2, relay_id, 4242, 1));
         assert_eq!(plane.depth(), Some(2));
         assert_eq!(plane.live_peers(), (1, 1));
+
+        // an OBS_SNAP probe (never JOINs) reads the same membership
+        // counters the accessors expose
+        let snap = crate::obs::fetch_snapshot(&format!("127.0.0.1:{}", plane.port), 0).unwrap();
+        assert_eq!(snap.get("role").and_then(|r| r.as_str()), Some("control"));
+        let c = snap.get("counters").expect("counters object");
+        assert_eq!(c.get("epoch").and_then(|v| v.as_f64()), Some(2.0));
+        assert_eq!(c.get("live_relays").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(c.get("live_leaves").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(c.get("root_port").and_then(|v| v.as_f64()), Some(4242.0));
         plane.stop();
     }
 

@@ -357,6 +357,10 @@ fn spawn_forward(
                     }
                     upstream_failed.store(true, Ordering::SeqCst);
                     upstream_closed.store(true, Ordering::SeqCst);
+                    // crash-path flight-recorder dump (no-op unless
+                    // PULSE_OBS_DUMP_DIR is set)
+                    let _ = crate::obs::Obs::global()
+                        .dump_incident(&format!("upstream socket error at hop {}", relay.hop()));
                     return;
                 }
             };
@@ -373,9 +377,20 @@ fn spawn_forward(
                     // waiting subscribers only; anything else is stream
                     // traffic for everyone
                     let meta = crate::sparse::container::peek_meta(&frame.payload).ok();
-                    let consumed = meta.is_some_and(|m| {
-                        relay.deliver_retransmit(m.step, m.shard_index, frame.clone())
-                    });
+                    let bytes = frame.payload.len() as u64;
+                    let mut consumed = false;
+                    if let Some(m) = &meta {
+                        if relay.deliver_retransmit(m.step, m.shard_index, frame.clone()) {
+                            crate::obs::span(
+                                crate::obs::Stage::Retransmit,
+                                0,
+                                m.step,
+                                m.shard_index,
+                                bytes,
+                            );
+                            consumed = true;
+                        }
+                    }
                     if !consumed {
                         relay.publish(frame);
                     }

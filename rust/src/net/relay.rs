@@ -100,6 +100,7 @@
 
 use super::chaos::{ChaosConfig, Wire};
 use super::tcp::{self, kind, Frame};
+use crate::obs;
 use crate::sim::clock::Clock;
 use crate::util::retry::RetryPolicy;
 use crate::util::sync::{CondvarExt, LockExt};
@@ -395,6 +396,14 @@ fn reply_miss(sh: &mut Shared, chan: &Chan, step: u64, shard: u32) {
 /// `sh`.
 fn miss_waiters(sh: &mut Shared, step: u64, shard: u32, chans: &[Chan]) {
     sh.nacks_unserviceable += chans.len() as u64;
+    obs::span_at(
+        sh.clock.now().as_micros() as u64,
+        obs::Stage::NackMiss,
+        0,
+        step,
+        shard,
+        chans.len() as u64,
+    );
     let miss =
         Arc::new(Frame { kind: kind::NACK_MISS, payload: tcp::shard_ack_payload(step, shard) });
     for chan in chans {
@@ -549,6 +558,12 @@ impl Relay {
             None
         };
         sh.stage.stage(&frame, shard_meta);
+        // trace seam: relay-side spans stamp the relay's own clock (the
+        // wall anchor on real sockets), keyed like the publisher's
+        let now_us = sh.clock.now().as_micros() as u64;
+        if let Some((step, shard)) = shard_meta {
+            obs::span_at(now_us, obs::Stage::RelayStage, 0, step, shard, sh.hop as u64);
+        }
         let Shared { subs, stage, queue_depth, coalesced, .. } = sh;
         let depth = *queue_depth;
         subs.retain_mut(|sub| {
@@ -572,6 +587,14 @@ impl Relay {
             let (was_coalesced, dropped) = coalesce_enqueue(&mut q.q, &frame, stage, depth);
             if was_coalesced {
                 *coalesced += 1;
+                if let Some((step, shard)) = shard_meta {
+                    obs::span_at(now_us, obs::Stage::Coalesce, 0, step, shard, q.q.len() as u64);
+                }
+            }
+            if dropped > 0 {
+                if let Some((step, shard)) = shard_meta {
+                    obs::span_at(now_us, obs::Stage::Evict, 0, step, shard, dropped);
+                }
             }
             q.dropped += dropped;
             cv.notify_one();
@@ -654,6 +677,9 @@ impl Relay {
         let mut sh = self.shared.plock();
         if let Some(riders) = sh.ledger.resolve(step, shard) {
             miss_waiters(&mut sh, step, shard, &riders);
+            drop(sh);
+            let _ = obs::Obs::global()
+                .dump_incident(&format!("escalation failed step {} shard {}", step, shard));
         }
     }
 
@@ -665,8 +691,14 @@ impl Relay {
     /// NACK timeouts across the failover.
     pub fn fail_all_escalated(&self) {
         let mut sh = self.shared.plock();
-        for ((step, shard), riders) in sh.ledger.resolve_all() {
+        let failed = sh.ledger.resolve_all();
+        let any = !failed.is_empty();
+        for ((step, shard), riders) in failed {
             miss_waiters(&mut sh, step, shard, &riders);
+        }
+        drop(sh);
+        if any {
+            let _ = obs::Obs::global().dump_incident("upstream lost, all escalations failed");
         }
     }
 
@@ -772,6 +804,14 @@ fn spawn_reader(
                     let mut sh = shared.plock();
                     if let Some(frame) = sh.stage.lookup(step, shard) {
                         sh.nacks_serviced += 1;
+                        obs::span_at(
+                            sh.clock.now().as_micros() as u64,
+                            obs::Stage::NackServe,
+                            0,
+                            step,
+                            shard,
+                            frame.payload.len() as u64,
+                        );
                         // a retransmit bypasses the coalescing policy:
                         // it is already the minimal repair
                         push_direct(&chan, frame);
@@ -810,6 +850,14 @@ fn spawn_reader(
                         continue;
                     }
                     sh.nacks_escalated += 1;
+                    obs::span_at(
+                        sh.clock.now().as_micros() as u64,
+                        obs::Stage::Escalate,
+                        0,
+                        step,
+                        shard,
+                        sh.ledger.riders(step, shard) as u64,
+                    );
                     drop(sh);
                     if !esc(step, shard) {
                         // upstream unreachable: the escalation never
@@ -828,6 +876,33 @@ fn spawn_reader(
                 push_direct(
                     &chan,
                     Arc::new(Frame { kind: kind::HOP, payload: tcp::hop_payload(hop) }),
+                );
+            }
+            Ok(f) if f.kind == kind::OBS_SNAP => {
+                // live introspection (`paper obs`): this relay's fan-out
+                // counters + the process obs hub, served off the data
+                // path through the subscriber's ordinary writer queue
+                let flags = tcp::parse_obs_snap(&f.payload).unwrap_or(0);
+                let mut c = crate::util::json::Json::obj();
+                {
+                    let sh = shared.plock();
+                    let live = sh.subs.iter().filter(|s| !s.chan.0.plock().dead).count();
+                    c.set("hop", (sh.hop as u64).into())
+                        .set("subscribers", live.into())
+                        .set("coalesced", sh.coalesced.into())
+                        .set("nacks_serviced", sh.nacks_serviced.into())
+                        .set("nacks_escalated", sh.nacks_escalated.into())
+                        .set("nacks_unserviceable", sh.nacks_unserviceable.into())
+                        .set("nacks_suppressed", sh.nacks_suppressed.into())
+                        .set("pending_escalations", sh.ledger.pending_slots().into());
+                }
+                let body = obs::snapshot_reply("relay", flags, c).to_string();
+                push_direct(
+                    &chan,
+                    Arc::new(Frame {
+                        kind: kind::OBS_REPLY,
+                        payload: tcp::obs_reply_payload(&body),
+                    }),
                 );
             }
             // ACK is accepted and ignored (observability hooks may
@@ -1113,6 +1188,36 @@ mod tests {
         let reply = tcp::read_frame(&mut conn).unwrap();
         assert_eq!(reply.kind, kind::HOP);
         assert_eq!(tcp::parse_hop(&reply.payload).unwrap(), 2);
+        relay.stop();
+    }
+
+    #[test]
+    fn obs_snap_gets_live_snapshot() {
+        let relay = Relay::start().unwrap();
+        relay.set_hop(1);
+        let mut conn = tcp::connect_local(relay.port).unwrap();
+        for _ in 0..200 {
+            if relay.subscriber_count() == 1 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        tcp::write_frame(
+            &mut conn,
+            &Frame { kind: kind::OBS_SNAP, payload: tcp::obs_snap_payload(0) },
+        )
+        .unwrap();
+        let reply = tcp::read_frame(&mut conn).unwrap();
+        assert_eq!(reply.kind, kind::OBS_REPLY);
+        let j = crate::util::json::Json::parse(&tcp::parse_obs_reply(&reply.payload).unwrap())
+            .unwrap();
+        assert_eq!(j.req_str("role").unwrap(), "relay");
+        let c = j.get("counters").unwrap();
+        assert_eq!(c.req_f64("hop").unwrap(), 1.0);
+        assert_eq!(c.req_f64("subscribers").unwrap(), 1.0);
+        assert!(j.get("histograms").unwrap().get("nack_repair_us").is_some());
+        // flags bit 0 omitted → recorder summary only, no event dump
+        assert!(j.get("recorder").unwrap().get("events").is_none());
         relay.stop();
     }
 

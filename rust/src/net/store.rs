@@ -303,6 +303,14 @@ pub trait ObjectApi: Send + Sync {
     fn not_modified_total(&self) -> u64 {
         0
     }
+
+    /// `[hits, misses, origin_fetches, not_modified, evictions]` of the
+    /// cache layer in this stack (all zero when no cache is mounted) —
+    /// surfaced through `OBS_SNAP` so hop-side cache behaviour is
+    /// visible without a handle on the [`CachingStore`] itself.
+    fn cache_stats(&self) -> [u64; 5] {
+        [0; 5]
+    }
 }
 
 impl<T: ObjectApi + ?Sized> ObjectApi for Arc<T> {
@@ -328,6 +336,9 @@ impl<T: ObjectApi + ?Sized> ObjectApi for Arc<T> {
     }
     fn not_modified_total(&self) -> u64 {
         (**self).not_modified_total()
+    }
+    fn cache_stats(&self) -> [u64; 5] {
+        (**self).cache_stats()
     }
 }
 
@@ -455,6 +466,12 @@ impl StoreStats {
         self.body_serves.plock().get(key).copied().unwrap_or(0)
     }
 
+    /// Total bodies sent across all keys (the `OBS_SNAP` aggregate of
+    /// the per-key map).
+    pub fn total_body_serves(&self) -> u64 {
+        self.body_serves.plock().values().sum()
+    }
+
     /// Max body serves over keys ending with `suffix` (e.g. `".bin"`
     /// for "no data object left the origin more than N times").
     pub fn max_body_serves(&self, suffix: &str) -> u64 {
@@ -530,6 +547,32 @@ fn serve_conn(mut wire: Wire, api: Arc<dyn ObjectApi>, stats: Arc<StoreStats>) {
         };
         if req.kind == kind::CLOSE {
             return;
+        }
+        if req.kind == kind::OBS_SNAP {
+            let flags = tcp::parse_obs_snap(&req.payload).unwrap_or(0);
+            let cs = api.cache_stats();
+            let (retries, gave_up) = api.net_retries();
+            let mut c = crate::util::json::Json::obj();
+            c.set("gets", stats.gets.load(Ordering::Relaxed).into())
+                .set("puts", stats.puts.load(Ordering::Relaxed).into())
+                .set("lists", stats.lists.load(Ordering::Relaxed).into())
+                .set("stat_ops", stats.stat_ops.load(Ordering::Relaxed).into())
+                .set("not_modified", stats.not_modified.load(Ordering::Relaxed).into())
+                .set("bytes_served", stats.bytes_served.load(Ordering::Relaxed).into())
+                .set("body_serves", stats.total_body_serves().into())
+                .set("cache_hits", cs[0].into())
+                .set("cache_misses", cs[1].into())
+                .set("origin_fetches", cs[2].into())
+                .set("cache_not_modified", cs[3].into())
+                .set("cache_evictions", cs[4].into())
+                .set("net_retries", retries.into())
+                .set("net_gave_up", gave_up.into());
+            let body = crate::obs::snapshot_reply("store", flags, c).to_string();
+            let frame = Frame { kind: kind::OBS_REPLY, payload: tcp::obs_reply_payload(&body) };
+            if tcp::write_frame(&mut wire, &frame).is_err() {
+                return;
+            }
+            continue;
         }
         let reply = handle_request(&api, &stats, &req);
         let frame = Frame { kind: kind::STORE_REPLY, payload: reply.encode() };
@@ -666,10 +709,14 @@ impl StoreClient {
     }
 
     fn rpc(&self, req: &Frame) -> Result<Reply> {
+        let t = crate::util::Stopwatch::start();
         let mut retry = self.retry.start();
         loop {
             match self.attempt(req) {
-                Ok(r) => return Ok(r),
+                Ok(r) => {
+                    crate::obs::hist_secs(crate::obs::HistKind::StoreRpc, t.secs());
+                    return Ok(r);
+                }
                 Err(e) => {
                     // the exchange may be desynced (late reply, torn
                     // frame) — drop the connection and redial
@@ -978,6 +1025,24 @@ impl<U: ObjectApi> ObjectApi for CachingStore<U> {
 
     fn not_modified_total(&self) -> u64 {
         self.counters.not_modified.load(Ordering::Relaxed) + self.origin.not_modified_total()
+    }
+
+    fn cache_stats(&self) -> [u64; 5] {
+        let deeper = self.origin.cache_stats();
+        let own = [
+            self.counters.hits.load(Ordering::Relaxed),
+            self.counters.misses.load(Ordering::Relaxed),
+            self.counters.origin_fetches.load(Ordering::Relaxed),
+            self.counters.not_modified.load(Ordering::Relaxed),
+            self.counters.evictions.load(Ordering::Relaxed),
+        ];
+        [
+            own[0] + deeper[0],
+            own[1] + deeper[1],
+            own[2] + deeper[2],
+            own[3] + deeper[3],
+            own[4] + deeper[4],
+        ]
     }
 }
 
@@ -1420,6 +1485,34 @@ mod tests {
         assert_eq!(b.counters().cache_hits, 2, "marker + object served from the hop");
         assert_eq!(b.counters().origin_fetches, 0);
         assert_eq!(origin.stats().body_serves_of("sync/delta_00000001.bin"), 1);
+        std::fs::remove_dir_all(store.root()).unwrap();
+    }
+
+    #[test]
+    fn obs_snap_surfaces_store_and_cache_counters() {
+        let store = temp_store("obs_snap");
+        let origin =
+            StoreServer::serve(Arc::new(DirectStore::new(store.clone())), None).unwrap();
+        let (hop, _cache) = caching_hop(origin.port(), RetentionPolicy::default(), None).unwrap();
+        let direct = StoreClient::new(origin.port());
+        direct.put("s/delta_00000001.bin", b"immutable-data").unwrap();
+        let leaf = StoreClient::new(hop.port());
+        for _ in 0..3 {
+            leaf.get("s/delta_00000001.bin", None, None).unwrap();
+        }
+        leaf.list("s/").unwrap();
+
+        let snap = crate::obs::fetch_snapshot(&format!("127.0.0.1:{}", hop.port()), 0).unwrap();
+        assert_eq!(snap.get("role").and_then(|r| r.as_str()), Some("store"));
+        let c = snap.get("counters").expect("counters object");
+        assert_eq!(c.get("gets").and_then(|v| v.as_f64()), Some(3.0));
+        assert_eq!(c.get("lists").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(c.get("body_serves").and_then(|v| v.as_f64()), Some(3.0));
+        // 1 cold miss + 2 warm hits on the hop's cache layer
+        assert_eq!(c.get("cache_hits").and_then(|v| v.as_f64()), Some(2.0));
+        assert_eq!(c.get("cache_misses").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(c.get("origin_fetches").and_then(|v| v.as_f64()), Some(1.0));
+        assert!(snap.get("histograms").is_some(), "histograms ride every snapshot");
         std::fs::remove_dir_all(store.root()).unwrap();
     }
 }

@@ -94,6 +94,17 @@ pub mod kind {
     /// (status u8 ++ flags u8 ++ etag ++ body; see
     /// [`crate::net::store::Reply`]).
     pub const STORE_REPLY: u8 = 18;
+    /// Client → any sync-plane node (relay, relay node, store server,
+    /// control plane): request a live metric+recorder snapshot
+    /// (payload = flags u64 LE, bit 0 = include recorder events; see
+    /// [`crate::obs`] and [`super::obs_snap_payload`]). Served outside
+    /// the data path, so a `paper obs` probe never perturbs fan-out.
+    pub const OBS_SNAP: u8 = 19;
+    /// Node → client: the snapshot reply (payload = FNV-1a checksum
+    /// u32 LE ++ utf8 JSON; see [`super::obs_reply_payload`]). JSON so
+    /// new histograms/counters extend the snapshot without a wire
+    /// version bump.
+    pub const OBS_REPLY: u8 = 20;
 }
 
 /// Payload for an ACK/NACK addressing one shard of a step.
@@ -255,6 +266,57 @@ pub fn parse_marker_frame(payload: &[u8]) -> Result<(bool, u64, String)> {
         .map_err(|_| anyhow::anyhow!("marker frame payload is not utf8"))?
         .to_string();
     Ok((payload[0] == 1, step, marker))
+}
+
+/// FNV-1a over an OBS_REPLY body (same construction as
+/// [`marker_checksum`]): the snapshot travels next to chaos-wrapped
+/// data frames, so a flipped bit must surface as a decode error the
+/// prober can retry, not as silently wrong metrics.
+fn obs_checksum(body: &[u8]) -> u32 {
+    let mut h: u32 = 0x811C_9DC5;
+    for &b in body {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+/// Payload for an OBS_SNAP request: request flags (bit 0 =
+/// [`crate::obs::SNAP_WITH_EVENTS`], include recorder events).
+pub fn obs_snap_payload(flags: u64) -> Vec<u8> {
+    flags.to_le_bytes().to_vec()
+}
+
+/// Decode an OBS_SNAP payload into its flags word.
+pub fn parse_obs_snap(payload: &[u8]) -> Result<u64> {
+    match payload.len() {
+        8 => Ok(u64::from_le_bytes(payload.try_into()?)),
+        n => bail!("bad obs snap payload length {}", n),
+    }
+}
+
+/// Payload for an OBS_REPLY frame: 4-byte FNV-1a checksum + the
+/// snapshot JSON.
+pub fn obs_reply_payload(json: &str) -> Vec<u8> {
+    let mut p = Vec::with_capacity(4 + json.len());
+    p.extend_from_slice(&obs_checksum(json.as_bytes()).to_le_bytes());
+    p.extend_from_slice(json.as_bytes());
+    p
+}
+
+/// Decode an OBS_REPLY payload into the snapshot JSON text, rejecting
+/// truncated or corrupted payloads.
+pub fn parse_obs_reply(payload: &[u8]) -> Result<String> {
+    if payload.len() < 4 {
+        bail!("bad obs reply payload ({} bytes)", payload.len());
+    }
+    let crc = u32::from_le_bytes(payload[0..4].try_into()?);
+    if obs_checksum(&payload[4..]) != crc {
+        bail!("obs reply checksum mismatch");
+    }
+    Ok(std::str::from_utf8(&payload[4..])
+        .map_err(|_| anyhow::anyhow!("obs reply payload is not utf8"))?
+        .to_string())
 }
 
 /// Write one frame: the 5-byte header, then the payload. Generic over
@@ -440,6 +502,8 @@ mod tests {
             kind::STORE_LIST,
             kind::STORE_STAT,
             kind::STORE_REPLY,
+            kind::OBS_SNAP,
+            kind::OBS_REPLY,
         ];
         for (i, &k) in kinds.iter().enumerate() {
             assert_eq!(k as usize, i + 1, "kinds list out of sync with mod kind");
@@ -461,6 +525,27 @@ mod tests {
         assert!(parse_heartbeat(&[0u8; 3]).is_err());
         assert!(parse_epoch(&[0u8; 2]).is_err());
         assert!(parse_marker_frame(&[0u8; 4]).is_err());
+        assert!(parse_obs_snap(&[0u8; 3]).is_err());
+        assert!(parse_obs_snap(&[0u8; 9]).is_err());
+        assert!(parse_obs_reply(&[0u8; 2]).is_err());
+    }
+
+    #[test]
+    fn obs_payload_roundtrips_and_rejects_corruption() {
+        assert_eq!(parse_obs_snap(&obs_snap_payload(0)).unwrap(), 0);
+        assert_eq!(parse_obs_snap(&obs_snap_payload(u64::MAX)).unwrap(), u64::MAX);
+        let body = r#"{"role":"relay","histograms":{}}"#;
+        assert_eq!(parse_obs_reply(&obs_reply_payload(body)).unwrap(), body);
+        assert_eq!(parse_obs_reply(&obs_reply_payload("")).unwrap(), "");
+        // one flipped bit in the JSON body
+        let mut p = obs_reply_payload(body);
+        let n = p.len();
+        p[n - 1] ^= 0x01;
+        assert!(parse_obs_reply(&p).is_err());
+        // and in the checksum itself
+        let mut p2 = obs_reply_payload(body);
+        p2[1] ^= 0x40;
+        assert!(parse_obs_reply(&p2).is_err());
     }
 
     #[test]

@@ -1096,6 +1096,7 @@ impl SyncTransport for RelayTransport {
         // or retransmit lost on a faulty wire) until the budget is
         // spent (`gave_up`).
         let base_generation = staged.map(|(_, g)| g).unwrap_or(0);
+        let t_repair = crate::util::Stopwatch::start();
         let owner = {
             let mut st = lock.plock();
             if st.nack_inflight.insert((step, shard)) {
@@ -1113,6 +1114,7 @@ impl SyncTransport for RelayTransport {
                 lock.plock().nack_inflight.remove(&(step, shard));
                 return Err(e);
             }
+            crate::obs::span(crate::obs::Stage::NackSent, 0, step, shard, 0);
         }
         // Wall-clock audit (scale-sim seam): this wait is intentionally
         // real time. It parks the calling thread on a condvar fed by a
@@ -1140,6 +1142,7 @@ impl SyncTransport for RelayTransport {
                         cv.notify_all();
                     }
                     sub.counters.fetched(out.len());
+                    crate::obs::hist_secs(crate::obs::HistKind::NackRepair, t_repair.secs());
                     return Ok(out);
                 }
             }
@@ -1170,6 +1173,15 @@ impl SyncTransport for RelayTransport {
                     cv.notify_all();
                 }
                 sub.counters.bump(&sub.counters.gave_up);
+                crate::obs::span(
+                    crate::obs::Stage::GaveUp,
+                    0,
+                    step,
+                    shard,
+                    retry.attempts() as u64,
+                );
+                let _ = crate::obs::Obs::global()
+                    .dump_incident(&format!("nack gave up step {} shard {}", step, shard));
                 bail!(
                     "timed out awaiting retransmit of shard {} step {} ({} resends)",
                     shard,

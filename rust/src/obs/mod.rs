@@ -1,0 +1,945 @@
+//! Observability for the sync plane: trace spans, a bounded flight
+//! recorder, and log-bucket latency histograms (ISSUE 10).
+//!
+//! The counters in [`crate::net::transport::TransportCounters`] say how
+//! *often* things happened; this module says **where a patch's time
+//! goes** between [`crate::pulse::sync::Publisher::publish`] and a
+//! leaf's apply, and lets `paper obs <addr>` ask a live node mid-run.
+//!
+//! # Span model
+//!
+//! A [`SpanEvent`] is a fixed-size record keyed by
+//! `(generation, step, shard)` with a [`Stage`] tag marking one
+//! transition of a patch's life: publish → relay stage →
+//! coalesce/evict → NACK/serve/escalate → leaf apply (plus slow-path
+//! catch-up and repair give-up). Events carry a microsecond timestamp
+//! drawn through an existing time seam — the wall
+//! [`crate::util::Stopwatch`] on real sockets, the virtual
+//! [`crate::sim`] clock inside the simulator — so the same
+//! reconstruction ([`reconstruct`]) and the same deterministic
+//! [`trace_hash`] work on both.
+//!
+//! # Flight recorder
+//!
+//! [`FlightRecorder`] is a fixed-capacity ring of [`SpanEvent`]s: the
+//! buffer is allocated once at construction and recording never
+//! allocates, so it is safe on the relay/transport hot paths. When the
+//! ring wraps, the oldest events are overwritten and counted in
+//! `dropped`. The process-global recorder ([`Obs::global`]) dumps JSON
+//! on demand (`OBS_SNAP` / `paper obs`) and on incident paths —
+//! repair `gave_up`, escalation failure — via [`Obs::dump_incident`]
+//! (written only when `PULSE_OBS_DUMP_DIR` is set, so tests stay
+//! quiet).
+//!
+//! # Histograms
+//!
+//! [`Histogram`] buckets microsecond latencies by power of two
+//! (40 buckets ≈ 0 µs .. 12 days) with lock-free atomic counts, and
+//! reports p50/p99/p999 as bucket upper bounds. The process hub keeps
+//! one per [`HistKind`]: NACK repair, slow-path catch-up, store RPC,
+//! and end-to-end step latency. [`Obs::hist_names`] is the canonical
+//! registry the `counter-csv-drift` lint checks against
+//! `ObsExport::write_csv` (see `coordinator/metrics.rs`), so a
+//! histogram added here must reach the CSV exporter or the tree fails
+//! `paper lint`.
+
+use crate::util::json::Json;
+use crate::util::sync::LockExt;
+use anyhow::{Context, Result};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// One transition in a patch's publish→apply life. The discriminants
+/// are stable wire/hash values: changing one changes every stored
+/// trace hash.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Stage {
+    /// Publisher committed a shard frame (detail = frame bytes).
+    Publish = 1,
+    /// Relay staged a frame for fan-out (detail = stage depth).
+    RelayStage = 2,
+    /// An enqueue superseded an older queued frame (detail = queue len).
+    Coalesce = 3,
+    /// A full queue dropped a frame (detail = queue depth).
+    Evict = 4,
+    /// Subscriber sent a repair NACK (detail = attempt number).
+    NackSent = 5,
+    /// Relay retransmitted a staged frame for a NACK (detail = bytes).
+    NackServe = 6,
+    /// Relay escalated a NACK upstream (detail = riders).
+    Escalate = 7,
+    /// Subscriber received the repair retransmit (detail = bytes).
+    Retransmit = 8,
+    /// NACK answered unserviceable: slot evicted along the whole path.
+    NackMiss = 9,
+    /// Consumer fell back to the anchor slow path (detail = anchor step).
+    CatchUp = 10,
+    /// Leaf applied the step (detail = bytes downloaded).
+    Apply = 11,
+    /// Repair retry budget drained without a retransmit.
+    GaveUp = 12,
+}
+
+impl Stage {
+    /// Every stage, in publish→apply pipeline order (table order for
+    /// `paper trace` output).
+    pub const ALL: [Stage; 12] = [
+        Stage::Publish,
+        Stage::RelayStage,
+        Stage::Coalesce,
+        Stage::Evict,
+        Stage::NackSent,
+        Stage::NackServe,
+        Stage::Escalate,
+        Stage::Retransmit,
+        Stage::NackMiss,
+        Stage::CatchUp,
+        Stage::Apply,
+        Stage::GaveUp,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Publish => "publish",
+            Stage::RelayStage => "relay_stage",
+            Stage::Coalesce => "coalesce",
+            Stage::Evict => "evict",
+            Stage::NackSent => "nack_sent",
+            Stage::NackServe => "nack_serve",
+            Stage::Escalate => "escalate",
+            Stage::Retransmit => "retransmit",
+            Stage::NackMiss => "nack_miss",
+            Stage::CatchUp => "catch_up",
+            Stage::Apply => "apply",
+            Stage::GaveUp => "gave_up",
+        }
+    }
+
+    pub fn from_u8(v: u8) -> Option<Stage> {
+        Stage::ALL.iter().copied().find(|s| *s as u8 == v)
+    }
+}
+
+/// One fixed-size trace event. `Copy` so ring writes are plain stores
+/// — the recorder hot path never allocates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct SpanEvent {
+    /// Microseconds since the recorder's epoch (process start on the
+    /// wall seam, virtual t=0 inside the simulator).
+    pub t_us: u64,
+    pub generation: u64,
+    pub step: u64,
+    pub shard: u32,
+    /// `Stage` discriminant (u8 so the event stays 40 bytes).
+    pub stage: u8,
+    /// Stage-specific detail (bytes, depth, attempt, …).
+    pub detail: u64,
+}
+
+impl SpanEvent {
+    pub fn stage(&self) -> Option<Stage> {
+        Stage::from_u8(self.stage)
+    }
+
+    fn to_json(self) -> Json {
+        let mut j = Json::obj();
+        j.set("t_us", self.t_us.into())
+            .set("gen", self.generation.into())
+            .set("step", self.step.into())
+            .set("shard", (self.shard as u64).into())
+            .set("stage", self.stage().map(Stage::name).unwrap_or("?").into())
+            .set("detail", self.detail.into());
+        j
+    }
+
+    fn from_json(j: &Json) -> Result<SpanEvent> {
+        let stage_name = j.req_str("stage")?;
+        let stage = Stage::ALL
+            .iter()
+            .copied()
+            .find(|s| s.name() == stage_name)
+            .ok_or_else(|| anyhow::anyhow!("unknown stage '{}'", stage_name))?;
+        Ok(SpanEvent {
+            t_us: j.req_f64("t_us")? as u64,
+            generation: j.req_f64("gen")? as u64,
+            step: j.req_f64("step")? as u64,
+            shard: j.req_f64("shard")? as u32,
+            stage: stage as u8,
+            detail: j.req_f64("detail")? as u64,
+        })
+    }
+}
+
+/// Default ring capacity of the process-global recorder.
+pub const DEFAULT_RING: usize = 8192;
+
+struct Ring {
+    buf: Vec<SpanEvent>,
+    /// Next write slot (wraps at capacity).
+    next: usize,
+    /// Events ever recorded (total - capacity = overwritten).
+    total: u64,
+}
+
+/// Fixed-capacity ring of [`SpanEvent`]s. The buffer is preallocated
+/// in [`FlightRecorder::new`]; [`FlightRecorder::record`] is a mutex
+/// lock plus one array store — no allocation, no channel, bounded by
+/// construction.
+pub struct FlightRecorder {
+    ring: Mutex<Ring>,
+    capacity: usize,
+}
+
+impl FlightRecorder {
+    pub fn new(capacity: usize) -> FlightRecorder {
+        let capacity = capacity.max(1);
+        FlightRecorder {
+            ring: Mutex::new(Ring {
+                buf: vec![SpanEvent::default(); capacity],
+                next: 0,
+                total: 0,
+            }),
+            capacity,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Record one event (overwrites the oldest once full).
+    pub fn record(&self, ev: SpanEvent) {
+        let mut r = self.ring.plock();
+        let slot = r.next;
+        r.buf[slot] = ev;
+        r.next = (slot + 1) % self.capacity;
+        r.total += 1;
+    }
+
+    /// Events ever recorded (including overwritten ones).
+    pub fn total(&self) -> u64 {
+        self.ring.plock().total
+    }
+
+    /// Events lost to ring wrap.
+    pub fn dropped(&self) -> u64 {
+        let r = self.ring.plock();
+        r.total.saturating_sub(self.capacity as u64)
+    }
+
+    /// Retained events, oldest first.
+    pub fn snapshot(&self) -> Vec<SpanEvent> {
+        let r = self.ring.plock();
+        let kept = (r.total as usize).min(self.capacity);
+        let mut out = Vec::with_capacity(kept);
+        // oldest retained event sits at `next` once the ring has wrapped
+        let start = if r.total as usize > self.capacity { r.next } else { 0 };
+        for i in 0..kept {
+            out.push(r.buf[(start + i) % self.capacity]);
+        }
+        out
+    }
+
+    pub fn clear(&self) {
+        let mut r = self.ring.plock();
+        r.next = 0;
+        r.total = 0;
+    }
+
+    pub fn to_json(&self) -> Json {
+        let events: Vec<Json> = self.snapshot().into_iter().map(SpanEvent::to_json).collect();
+        let mut j = Json::obj();
+        j.set("capacity", self.capacity.into())
+            .set("total", self.total().into())
+            .set("dropped", self.dropped().into())
+            .set("events", Json::Arr(events));
+        j
+    }
+}
+
+/// Power-of-two microsecond buckets: bucket `i` holds `[2^i, 2^(i+1))`
+/// (0 µs lands in bucket 0). 40 buckets cover ~12 days.
+pub const HIST_BUCKETS: usize = 40;
+
+/// Lock-free log-bucket latency histogram. Percentiles are reported as
+/// the upper bound of the bucket the rank lands in — at most 2x the
+/// true latency, which is all a p999 over a long-tailed repair path
+/// needs.
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_of(us: u64) -> usize {
+        // floor(log2(us)) with 0 and 1 both in bucket 0; the tail
+        // collapses into the last bucket
+        ((63 - (us | 1).leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+    }
+
+    /// Upper bound (inclusive) of bucket `i`, in microseconds.
+    fn bucket_hi(i: usize) -> u64 {
+        (1u64 << (i + 1)) - 1
+    }
+
+    pub fn record_us(&self, us: u64) {
+        self.buckets[Self::bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    /// Latency at quantile `q` in `(0, 1]`, as the containing bucket's
+    /// upper bound (0 when empty).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= rank {
+                return Self::bucket_hi(i);
+            }
+        }
+        self.max_us()
+    }
+
+    pub fn p50_us(&self) -> u64 {
+        self.quantile_us(0.50)
+    }
+
+    pub fn p99_us(&self) -> u64 {
+        self.quantile_us(0.99)
+    }
+
+    pub fn p999_us(&self) -> u64 {
+        self.quantile_us(0.999)
+    }
+
+    pub fn clear(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum_us.store(0, Ordering::Relaxed);
+        self.max_us.store(0, Ordering::Relaxed);
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("count", self.count().into())
+            .set("mean_us", self.mean_us().into())
+            .set("p50_us", self.p50_us().into())
+            .set("p99_us", self.p99_us().into())
+            .set("p999_us", self.p999_us().into())
+            .set("max_us", self.max_us().into());
+        j
+    }
+}
+
+/// The latency surfaces the hub tracks, index order matching
+/// [`Obs::hist_names`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HistKind {
+    /// NACK sent → retransmit applied (relay repair seam).
+    NackRepair = 0,
+    /// Slow-path anchor restore + chain replay.
+    CatchUp = 1,
+    /// One store-plane RPC round trip.
+    StoreRpc = 2,
+    /// `synchronize()` end to end (excluding up-to-date no-ops).
+    E2eStep = 3,
+}
+
+/// Process-wide observability hub: one flight recorder + the standard
+/// latency histograms, behind a single enable flag checked with one
+/// relaxed atomic load on every hot-path call.
+pub struct Obs {
+    enabled: AtomicBool,
+    pub recorder: FlightRecorder,
+    hists: [Histogram; 4],
+    incident_seq: AtomicU64,
+}
+
+static GLOBAL: OnceLock<Obs> = OnceLock::new();
+
+impl Obs {
+    fn new() -> Obs {
+        Obs {
+            enabled: AtomicBool::new(true),
+            recorder: FlightRecorder::new(DEFAULT_RING),
+            hists: std::array::from_fn(|_| Histogram::new()),
+            incident_seq: AtomicU64::new(0),
+        }
+    }
+
+    /// The process-global hub (created on first use, enabled by
+    /// default).
+    pub fn global() -> &'static Obs {
+        GLOBAL.get_or_init(Obs::new)
+    }
+
+    /// Canonical histogram registry, index order matching [`HistKind`].
+    /// The `counter-csv-drift` lint requires every name here to appear
+    /// in `ObsExport::write_csv` (`coordinator/metrics.rs`) — add a
+    /// histogram without exporting it and `paper lint` fails.
+    pub fn hist_names() -> [&'static str; 4] {
+        ["nack_repair_us", "catch_up_us", "store_rpc_us", "e2e_step_us"]
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Microseconds on the process wall anchor — the same
+    /// [`crate::sim::clock::Clock::Wall`] reading the relay's
+    /// escalation windows use, so spans stamped here and spans stamped
+    /// from a relay's clock share one epoch.
+    pub fn now_us(&self) -> u64 {
+        crate::sim::clock::Clock::wall().now().as_micros() as u64
+    }
+
+    /// Record a span stamped with the hub's wall clock.
+    pub fn span(&self, stage: Stage, generation: u64, step: u64, shard: u32, detail: u64) {
+        if !self.enabled() {
+            return;
+        }
+        self.span_at(self.now_us(), stage, generation, step, shard, detail);
+    }
+
+    /// Record a span with an explicit timestamp (relay [`crate::sim`]
+    /// virtual clocks draw `t_us` from their own seam).
+    pub fn span_at(
+        &self,
+        t_us: u64,
+        stage: Stage,
+        generation: u64,
+        step: u64,
+        shard: u32,
+        detail: u64,
+    ) {
+        if !self.enabled() {
+            return;
+        }
+        self.recorder.record(SpanEvent {
+            t_us,
+            generation,
+            step,
+            shard,
+            stage: stage as u8,
+            detail,
+        });
+    }
+
+    pub fn hist(&self, kind: HistKind) -> &Histogram {
+        &self.hists[kind as usize]
+    }
+
+    pub fn hist_named(&self, name: &str) -> Option<&Histogram> {
+        let i = Self::hist_names().iter().position(|n| *n == name)?;
+        Some(&self.hists[i])
+    }
+
+    /// Record one latency sample (no-op while disabled, so the
+    /// recorder-off bench rows measure the true cost of the flag).
+    pub fn record_hist(&self, kind: HistKind, us: u64) {
+        if !self.enabled() {
+            return;
+        }
+        self.hists[kind as usize].record_us(us);
+    }
+
+    /// Convenience for seconds-valued timers ([`crate::util::Stopwatch::secs`]).
+    pub fn record_hist_secs(&self, kind: HistKind, secs: f64) {
+        self.record_hist(kind, (secs * 1e6) as u64);
+    }
+
+    /// Reset recorder + histograms (bench and test isolation).
+    pub fn clear(&self) {
+        self.recorder.clear();
+        for h in &self.hists {
+            h.clear();
+        }
+    }
+
+    /// Full hub snapshot: histograms always; recorder events only when
+    /// `with_events` (the `OBS_SNAP` flags bit 0).
+    pub fn snapshot_json(&self, with_events: bool) -> Json {
+        let mut hists = Json::obj();
+        for (i, name) in Self::hist_names().iter().enumerate() {
+            hists.set(name, self.hists[i].to_json());
+        }
+        let mut j = Json::obj();
+        j.set("enabled", self.enabled().into())
+            .set("now_us", self.now_us().into())
+            .set("histograms", hists);
+        if with_events {
+            j.set("recorder", self.recorder.to_json());
+        } else {
+            let mut r = Json::obj();
+            r.set("capacity", self.recorder.capacity().into())
+                .set("total", self.recorder.total().into())
+                .set("dropped", self.recorder.dropped().into());
+            j.set("recorder", r);
+        }
+        j
+    }
+
+    /// Dump the recorder on an incident path (repair `gave_up`,
+    /// escalation failure). Writes
+    /// `$PULSE_OBS_DUMP_DIR/obs_incident_<seq>_<reason>.json`; a no-op
+    /// when the env var is unset so hot paths and tests never touch
+    /// the filesystem by surprise. Returns the path written, if any.
+    pub fn dump_incident(&self, reason: &str) -> Option<std::path::PathBuf> {
+        let dir = std::env::var("PULSE_OBS_DUMP_DIR").ok()?;
+        if dir.is_empty() {
+            return None;
+        }
+        let seq = self.incident_seq.fetch_add(1, Ordering::Relaxed);
+        let safe: String = reason
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+            .take(48)
+            .collect();
+        let path = std::path::Path::new(&dir).join(format!("obs_incident_{:04}_{}.json", seq, safe));
+        let mut j = self.snapshot_json(true);
+        j.set("reason", reason.into());
+        std::fs::create_dir_all(&dir).ok()?;
+        std::fs::write(&path, j.to_pretty()).ok()?;
+        Some(path)
+    }
+}
+
+/// Record a span on the process-global hub (wall timestamps). The
+/// instrumentation entry point for the socket plane.
+pub fn span(stage: Stage, generation: u64, step: u64, shard: u32, detail: u64) {
+    Obs::global().span(stage, generation, step, shard, detail);
+}
+
+/// Record a span on the process-global hub at an explicit time
+/// (virtual-clock call sites: the relay under `Clock::Virtual`).
+pub fn span_at(t_us: u64, stage: Stage, generation: u64, step: u64, shard: u32, detail: u64) {
+    Obs::global().span_at(t_us, stage, generation, step, shard, detail);
+}
+
+/// Record one latency sample on the process-global hub.
+pub fn hist(kind: HistKind, us: u64) {
+    Obs::global().record_hist(kind, us);
+}
+
+/// Record one seconds-valued latency sample on the process-global hub.
+pub fn hist_secs(kind: HistKind, secs: f64) {
+    Obs::global().record_hist_secs(kind, secs);
+}
+
+// ---------------------------------------------------------------------
+// Trace reconstruction
+// ---------------------------------------------------------------------
+
+/// Per-stage latency summary over every `(step, shard)` timeline:
+/// offsets are measured from that key's first `publish` event.
+#[derive(Debug, Clone)]
+pub struct StageRow {
+    pub stage: Stage,
+    /// Events of this stage seen across all timelines.
+    pub count: usize,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub max_us: u64,
+}
+
+/// The cross-hop timeline reconstruction `paper trace` prints.
+#[derive(Debug, Clone, Default)]
+pub struct TraceReport {
+    /// Distinct `(step, shard)` keys seen.
+    pub timelines: usize,
+    /// Timelines with both a `publish` and an `apply` event.
+    pub complete: usize,
+    /// Keys missing either endpoint.
+    pub incomplete: Vec<(u64, u32)>,
+    pub rows: Vec<StageRow>,
+}
+
+impl TraceReport {
+    pub fn is_complete(&self) -> bool {
+        self.timelines > 0 && self.complete == self.timelines
+    }
+}
+
+fn pct_sorted(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
+/// Reconstruct per-`(step, shard)` timelines from collected recorder
+/// events (any order, any number of recorders merged) into a
+/// per-stage breakdown. Offsets are exact (computed from raw events,
+/// not histogram buckets). Spans are *keyed* by
+/// `(generation, step, shard)` but timelines group on `(step, shard)`:
+/// mid-stream hops cannot know the publisher generation, and a
+/// re-published step after a lineage rewind is one timeline.
+pub fn reconstruct(events: &[SpanEvent]) -> TraceReport {
+    use std::collections::BTreeMap;
+    let mut by_key: BTreeMap<(u64, u32), Vec<&SpanEvent>> = BTreeMap::new();
+    for ev in events {
+        by_key.entry((ev.step, ev.shard)).or_default().push(ev);
+    }
+    let mut report = TraceReport { timelines: by_key.len(), ..Default::default() };
+    let mut offsets: BTreeMap<u8, Vec<u64>> = BTreeMap::new();
+    for (key, evs) in &by_key {
+        let t0 = evs
+            .iter()
+            .filter(|e| e.stage == Stage::Publish as u8)
+            .map(|e| e.t_us)
+            .min();
+        let applied = evs.iter().any(|e| e.stage == Stage::Apply as u8);
+        match t0 {
+            Some(t0) if applied => {
+                report.complete += 1;
+                for e in evs {
+                    offsets.entry(e.stage).or_default().push(e.t_us.saturating_sub(t0));
+                }
+            }
+            _ => report.incomplete.push(*key),
+        }
+    }
+    for stage in Stage::ALL {
+        if let Some(v) = offsets.get_mut(&(stage as u8)) {
+            v.sort_unstable();
+            report.rows.push(StageRow {
+                stage,
+                count: v.len(),
+                p50_us: pct_sorted(v, 0.50),
+                p99_us: pct_sorted(v, 0.99),
+                max_us: *v.last().unwrap(),
+            });
+        }
+    }
+    report
+}
+
+/// Deterministic FNV-1a hash over a span stream. Inside the simulator
+/// the same seed and config must reproduce this bit-identically across
+/// replays; any reordering, timestamp drift, or dropped span changes
+/// it.
+pub fn trace_hash(events: &[SpanEvent]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for ev in events {
+        h = fold_span(h, ev);
+    }
+    h
+}
+
+/// One [`trace_hash`] folding step — lets the simulator hash its span
+/// stream incrementally (bounded memory at 100k leaves) and still agree
+/// with `trace_hash` over the same events.
+pub fn fold_span(mut h: u64, ev: &SpanEvent) -> u64 {
+    let mut mix = |v: u64| {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    };
+    mix(ev.t_us);
+    mix(ev.generation);
+    mix(ev.step);
+    mix(ev.shard as u64);
+    mix(ev.stage as u64);
+    mix(ev.detail);
+    h
+}
+
+/// Parse recorder events back out of a snapshot/dump JSON (the inverse
+/// of [`FlightRecorder::to_json`], used by `paper trace` to merge
+/// dumps collected from several processes).
+pub fn events_from_json(j: &Json) -> Result<Vec<SpanEvent>> {
+    let rec = j.get("recorder").unwrap_or(j);
+    let events = rec
+        .get("events")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("snapshot has no recorder events"))?;
+    events.iter().map(SpanEvent::from_json).collect()
+}
+
+// ---------------------------------------------------------------------
+// Live snapshot wire client (OBS_SNAP → OBS_REPLY)
+// ---------------------------------------------------------------------
+
+/// `OBS_SNAP` flags bit 0: include recorder events in the reply.
+pub const SNAP_WITH_EVENTS: u64 = 1;
+
+/// Fetch a live metric+recorder snapshot from a node serving the
+/// `OBS_SNAP` frame (`Relay`, `RelayNode`, `StoreServer`,
+/// `ControlPlane`). `addr` is `host:port` or a bare port (localhost).
+pub fn fetch_snapshot(addr: &str, flags: u64) -> Result<Json> {
+    use crate::net::tcp::{self, kind, Frame};
+    let addr = if addr.contains(':') {
+        addr.to_string()
+    } else {
+        format!("127.0.0.1:{}", addr.parse::<u16>().context("addr must be host:port or port")?)
+    };
+    let mut stream = std::net::TcpStream::connect(&addr)
+        .with_context(|| format!("connecting to {}", addr))?;
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(5)))?;
+    tcp::write_frame(&mut stream, &Frame { kind: kind::OBS_SNAP, payload: tcp::obs_snap_payload(flags) })?;
+    loop {
+        let reply = tcp::read_frame(&mut stream)?;
+        match reply.kind {
+            kind::OBS_REPLY => {
+                let text = tcp::parse_obs_reply(&reply.payload)?;
+                let _ = tcp::write_frame(&mut stream, &Frame { kind: kind::CLOSE, payload: vec![] });
+                return Json::parse(&text);
+            }
+            // relay sockets push staged traffic to every subscriber;
+            // skip frames until our reply arrives
+            _ => continue,
+        }
+    }
+}
+
+/// Build the standard `OBS_REPLY` body a server sends: the process
+/// hub's snapshot plus a role tag and role-specific counters.
+pub fn snapshot_reply(role: &str, flags: u64, extra: Json) -> Json {
+    let mut j = Obs::global().snapshot_json(flags & SNAP_WITH_EVENTS != 0);
+    j.set("role", role.into()).set("counters", extra);
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(t: u64, step: u64, shard: u32, stage: Stage) -> SpanEvent {
+        SpanEvent { t_us: t, generation: 0, step, shard, stage: stage as u8, detail: 0 }
+    }
+
+    #[test]
+    fn ring_wraps_and_counts_drops() {
+        let r = FlightRecorder::new(4);
+        for i in 0..10u64 {
+            r.record(ev(i, i, 0, Stage::Publish));
+        }
+        assert_eq!(r.total(), 10);
+        assert_eq!(r.dropped(), 6);
+        let snap = r.snapshot();
+        assert_eq!(snap.len(), 4);
+        // oldest-first, newest retained events are 6..=9
+        assert_eq!(snap.iter().map(|e| e.t_us).collect::<Vec<_>>(), vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn ring_snapshot_before_wrap_is_in_order() {
+        let r = FlightRecorder::new(8);
+        for i in 0..3u64 {
+            r.record(ev(i * 10, i, 0, Stage::Apply));
+        }
+        assert_eq!(r.dropped(), 0);
+        assert_eq!(r.snapshot().iter().map(|e| e.t_us).collect::<Vec<_>>(), vec![0, 10, 20]);
+    }
+
+    #[test]
+    fn histogram_percentiles_bracket_samples() {
+        let h = Histogram::new();
+        for us in [1u64, 2, 3, 100, 1000, 10_000] {
+            h.record_us(us);
+        }
+        assert_eq!(h.count(), 6);
+        assert_eq!(h.max_us(), 10_000);
+        // bucket upper bounds: within 2x above the true value, never below
+        assert!(h.p50_us() >= 3 && h.p50_us() <= 200);
+        assert!(h.p99_us() >= 10_000 && h.p99_us() <= 20_000);
+        assert!(h.p999_us() >= h.p99_us());
+        assert_eq!(Histogram::new().p99_us(), 0);
+    }
+
+    #[test]
+    fn histogram_bucket_edges() {
+        assert_eq!(Histogram::bucket_of(0), 0);
+        assert_eq!(Histogram::bucket_of(1), 0);
+        assert_eq!(Histogram::bucket_of(2), 1);
+        assert_eq!(Histogram::bucket_of(3), 1);
+        assert_eq!(Histogram::bucket_of(4), 2);
+        assert_eq!(Histogram::bucket_of(u64::MAX), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn reconstruct_reports_completeness_and_offsets() {
+        let mut evs = vec![
+            ev(100, 1, 0, Stage::Publish),
+            ev(150, 1, 0, Stage::RelayStage),
+            ev(300, 1, 0, Stage::Apply),
+            ev(200, 2, 0, Stage::Publish),
+            ev(420, 2, 0, Stage::Apply),
+            // step 3 never applies
+            ev(500, 3, 0, Stage::Publish),
+        ];
+        // order must not matter
+        evs.reverse();
+        let r = reconstruct(&evs);
+        assert_eq!(r.timelines, 3);
+        assert_eq!(r.complete, 2);
+        assert_eq!(r.incomplete, vec![(3, 0)]);
+        assert!(!r.is_complete());
+        let apply = r.rows.iter().find(|row| row.stage == Stage::Apply).unwrap();
+        assert_eq!(apply.count, 2);
+        assert_eq!(apply.max_us, 220);
+        assert_eq!(apply.p50_us, 200);
+        let publish = r.rows.iter().find(|row| row.stage == Stage::Publish).unwrap();
+        assert_eq!(publish.max_us, 0);
+    }
+
+    #[test]
+    fn trace_hash_is_deterministic_and_sensitive() {
+        let a = vec![ev(1, 1, 0, Stage::Publish), ev(2, 1, 0, Stage::Apply)];
+        let b = a.clone();
+        assert_eq!(trace_hash(&a), trace_hash(&b));
+        let mut c = a.clone();
+        c[1].t_us = 3;
+        assert_ne!(trace_hash(&a), trace_hash(&c));
+        let mut d = a.clone();
+        d.swap(0, 1);
+        assert_ne!(trace_hash(&a), trace_hash(&d));
+        assert_ne!(trace_hash(&a), trace_hash(&a[..1]));
+    }
+
+    #[test]
+    fn snapshot_json_roundtrips_events() {
+        let r = FlightRecorder::new(16);
+        r.record(SpanEvent {
+            t_us: 42,
+            generation: 3,
+            step: 7,
+            shard: 2,
+            stage: Stage::NackServe as u8,
+            detail: 999,
+        });
+        let j = r.to_json();
+        let text = j.to_pretty();
+        let parsed = Json::parse(&text).unwrap();
+        let mut wrapper = Json::obj();
+        wrapper.set("recorder", parsed);
+        let evs = events_from_json(&wrapper).unwrap();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].t_us, 42);
+        assert_eq!(evs[0].generation, 3);
+        assert_eq!(evs[0].step, 7);
+        assert_eq!(evs[0].shard, 2);
+        assert_eq!(evs[0].stage(), Some(Stage::NackServe));
+        assert_eq!(evs[0].detail, 999);
+        assert_eq!(trace_hash(&evs), trace_hash(&r.snapshot()));
+    }
+
+    #[test]
+    fn hub_enable_flag_gates_recording() {
+        // a private hub, not the global one, so tests stay independent
+        let hub = Obs::new();
+        hub.set_enabled(false);
+        hub.span(Stage::Publish, 0, 1, 0, 0);
+        hub.record_hist(HistKind::E2eStep, 10);
+        assert_eq!(hub.recorder.total(), 0);
+        assert_eq!(hub.hist(HistKind::E2eStep).count(), 0);
+        hub.set_enabled(true);
+        hub.span(Stage::Publish, 0, 1, 0, 0);
+        hub.record_hist(HistKind::E2eStep, 10);
+        assert_eq!(hub.recorder.total(), 1);
+        assert_eq!(hub.hist(HistKind::E2eStep).count(), 1);
+        let snap = hub.snapshot_json(true);
+        assert_eq!(snap.get("histograms").unwrap().get("e2e_step_us").unwrap().req_f64("count").unwrap(), 1.0);
+        assert_eq!(
+            snap.get("recorder").unwrap().get("events").unwrap().as_arr().unwrap().len(),
+            1
+        );
+    }
+
+    #[test]
+    fn hist_names_match_hist_kinds() {
+        let names = Obs::hist_names();
+        assert_eq!(names.len(), 4);
+        for (kind, name) in [
+            (HistKind::NackRepair, "nack_repair_us"),
+            (HistKind::CatchUp, "catch_up_us"),
+            (HistKind::StoreRpc, "store_rpc_us"),
+            (HistKind::E2eStep, "e2e_step_us"),
+        ] {
+            assert_eq!(names[kind as usize], name);
+            let hub = Obs::new();
+            hub.record_hist(kind, 5);
+            assert_eq!(hub.hist_named(name).unwrap().count(), 1);
+        }
+        assert!(Obs::new().hist_named("nope").is_none());
+    }
+
+    #[test]
+    fn incident_dump_writes_only_when_dir_set() {
+        let hub = Obs::new();
+        // without the env var: silent no-op
+        std::env::remove_var("PULSE_OBS_DUMP_DIR");
+        assert!(hub.dump_incident("gave_up").is_none());
+        let dir = std::env::temp_dir().join(format!("obs_dump_test_{}", std::process::id()));
+        std::env::set_var("PULSE_OBS_DUMP_DIR", &dir);
+        hub.span(Stage::GaveUp, 0, 9, 1, 0);
+        let path = hub.dump_incident("gave_up: step 9 shard 1").unwrap();
+        std::env::remove_var("PULSE_OBS_DUMP_DIR");
+        let j = Json::parse_file(&path).unwrap();
+        assert_eq!(j.req_str("reason").unwrap(), "gave_up: step 9 shard 1");
+        let evs = events_from_json(&j).unwrap();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].stage(), Some(Stage::GaveUp));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stage_names_roundtrip() {
+        for s in Stage::ALL {
+            assert_eq!(Stage::from_u8(s as u8), Some(s));
+            assert!(!s.name().is_empty());
+        }
+        assert_eq!(Stage::from_u8(0), None);
+        assert_eq!(Stage::from_u8(200), None);
+    }
+}

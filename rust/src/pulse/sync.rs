@@ -544,6 +544,13 @@ impl<T: SyncTransport> Publisher<T> {
                 .publish_frame(FrameId::Delta { step }, &encoded.frames[0].bytes)?;
             self.transport
                 .publish_marker(MarkerId::Delta(step), &self.marker_text(&encoded.root))?;
+            crate::obs::span(
+                crate::obs::Stage::Publish,
+                self.generation,
+                step,
+                0,
+                encoded.frames[0].bytes.len() as u64,
+            );
         } else {
             // pipelined fan-out: each shard frame publishes on its own
             // pool worker, overlapping fabric latency across shards;
@@ -563,6 +570,17 @@ impl<T: SyncTransport> Publisher<T> {
             );
             self.transport
                 .publish_marker(MarkerId::Delta(step), &self.marker_text(&marker))?;
+            // one span per committed shard frame: the marker is the
+            // step's commit point, so the spans carry its timestamp
+            for f in &encoded.frames {
+                crate::obs::span(
+                    crate::obs::Stage::Publish,
+                    self.generation,
+                    step,
+                    f.shard_index,
+                    f.bytes.len() as u64,
+                );
+            }
         }
         if step % self.anchor_interval == 0 {
             stats.anchor_bytes = self.upload_anchor(step)?;
@@ -741,6 +759,7 @@ impl<T: SyncTransport> Consumer<T> {
     /// path (anchor + chain); falls back to the slow path on any
     /// verification failure (§J.5 self-healing).
     pub fn synchronize(&mut self) -> Result<SyncStats> {
+        let t = crate::util::Stopwatch::start();
         let mut stats = self.synchronize_inner()?;
         // stamp the transport's topology bookkeeping (control-plane
         // fabrics; zero on static backends) so per-sync rows can show
@@ -755,6 +774,7 @@ impl<T: SyncTransport> Consumer<T> {
         stats.cache_misses = counters.cache_misses;
         stats.origin_fetches = counters.origin_fetches;
         stats.conditional_not_modified = counters.conditional_not_modified;
+        crate::obs::hist_secs(crate::obs::HistKind::E2eStep, t.secs());
         Ok(stats)
     }
 
@@ -820,6 +840,7 @@ impl<T: SyncTransport> Consumer<T> {
             // generation via the slow path.
         }
         // slow path: nearest anchor ≤ latest, then chain
+        let t_slow = crate::util::Stopwatch::start();
         let anchor = slow_path_anchor(&inv, latest)
             .ok_or_else(|| anyhow::anyhow!("no anchor available for slow path"))?;
         let (w, tree, bytes, agen) = self.download_anchor(anchor)?;
@@ -833,6 +854,14 @@ impl<T: SyncTransport> Consumer<T> {
         self.generation = self.generation.max(stats.generation);
         stats.path = SyncPath::Slow;
         stats.verified = true;
+        crate::obs::hist_secs(crate::obs::HistKind::CatchUp, t_slow.secs());
+        crate::obs::span(
+            crate::obs::Stage::CatchUp,
+            stats.generation,
+            latest,
+            0,
+            stats.bytes_downloaded,
+        );
         Ok(stats)
     }
 
@@ -957,6 +986,7 @@ impl<T: SyncTransport> Consumer<T> {
                 tree = None;
             }
             stats.patches_applied += 1;
+            crate::obs::span(crate::obs::Stage::Apply, stats.generation, t, 0, obj.len() as u64);
         }
         Ok((w, tree))
     }
@@ -1061,6 +1091,17 @@ impl<T: SyncTransport> Consumer<T> {
             bail!("assembled shard root mismatch at step {}", step);
         }
         *tree = Some(ht);
+        // the whole step verified against the marker root: every shard
+        // is now applied, so each gets its apply span here
+        for i in 0..shard_count {
+            crate::obs::span(
+                crate::obs::Stage::Apply,
+                stats.generation,
+                step,
+                i,
+                shard_count as u64,
+            );
+        }
         Ok(())
     }
 }

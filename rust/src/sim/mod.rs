@@ -63,6 +63,7 @@ use crate::net::tcp::{kind, Frame};
 use crate::net::transport::{
     sharded_marker, FrameId, InProcTransport, MarkerId, StepData, SyncTransport,
 };
+use crate::obs::{fold_span, FlightRecorder, SpanEvent, Stage};
 use crate::pulse::sync::{latest_of, slow_path_anchor};
 use crate::util::retry::RetryPolicy;
 
@@ -220,6 +221,12 @@ pub struct SimConfig {
     pub horizon: Duration,
     /// Event cap backstop against runaway configurations.
     pub max_events: u64,
+    /// Capacity of the run's span flight recorder. The span *hash*
+    /// always covers every span; the recorder keeps the newest
+    /// `recorder_capacity` for reconstruction/dumps, so memory stays
+    /// bounded at 100k leaves. `paper trace --sim` raises this so the
+    /// whole run's spans survive for timeline reconstruction.
+    pub recorder_capacity: usize,
 }
 
 impl SimConfig {
@@ -245,6 +252,7 @@ impl SimConfig {
             stall_grace: Duration::from_secs(1),
             horizon: Duration::from_secs(120),
             max_events: 100_000_000,
+            recorder_capacity: crate::obs::DEFAULT_RING,
         }
     }
 }
@@ -323,6 +331,17 @@ pub struct SimReport {
     pub events: u64,
     /// FNV-1a over every processed event, in processing order.
     pub trace_hash: u64,
+    /// Trace spans emitted across the run (publish → relay stage →
+    /// NACK/escalate → apply, stamped in virtual microseconds).
+    pub spans: u64,
+    /// [`crate::obs::fold_span`] over every span, in emit order — the
+    /// replay-identity witness for the span stream (bounded memory:
+    /// the hash covers spans the recorder has since overwritten).
+    pub span_hash: u64,
+    /// The newest `recorder_capacity` spans, for timeline
+    /// reconstruction ([`crate::obs::reconstruct`]) and CI artifact
+    /// dumps.
+    pub span_events: Vec<SpanEvent>,
 }
 
 impl SimReport {
@@ -331,13 +350,13 @@ impl SimReport {
         "leaves,relays,depth,seed,converged,settle_ms,bytes_per_leaf,\
          ideal_bytes_per_leaf,overhead_pct,nacks,slow_paths,origin_bytes,\
          store_hits,store_misses,coalesced,replans,deaths,max_queue,\
-         events,trace_hash"
+         events,trace_hash,spans,span_hash"
     }
 
     /// One CSV row matching [`SimReport::csv_header`].
     pub fn csv_row(&self) -> String {
         format!(
-            "{},{},{},{},{},{:.1},{},{},{:.2},{},{},{},{},{},{},{},{},{},{},{:016x}",
+            "{},{},{},{},{},{:.1},{},{},{:.2},{},{},{},{},{},{},{},{},{},{},{:016x},{},{:016x}",
             self.leaves_live,
             self.relays_live,
             self.depth,
@@ -358,6 +377,8 @@ impl SimReport {
             self.max_queue_depth,
             self.events,
             self.trace_hash,
+            self.spans,
+            self.span_hash,
         )
     }
 }
@@ -425,6 +446,9 @@ struct Sim {
     done: bool,
     events: u64,
     hash: u64,
+    recorder: FlightRecorder,
+    spans: u64,
+    span_hash: u64,
     m: Counters,
     /// Per-relay warm object sets for the caching-hop store model
     /// (`net::store::CachingStore`): a slow-path fetch warms every
@@ -446,6 +470,7 @@ pub fn run(cfg: SimConfig) -> SimReport {
 pub fn run_with_store(cfg: SimConfig, store: Box<dyn SyncTransport>) -> SimReport {
     let mut sim = Sim {
         horizon_ns: cfg.horizon.as_nanos() as u64,
+        recorder: FlightRecorder::new(cfg.recorder_capacity),
         cfg,
         clock: Clock::virtual_clock(),
         members: Membership::new(),
@@ -465,6 +490,8 @@ pub fn run_with_store(cfg: SimConfig, store: Box<dyn SyncTransport>) -> SimRepor
         done: false,
         events: 0,
         hash: 0xcbf2_9ce4_8422_2325,
+        spans: 0,
+        span_hash: 0xcbf2_9ce4_8422_2325,
         m: Counters::default(),
         store_warm: HashMap::new(),
     };
@@ -488,6 +515,25 @@ impl Sim {
     fn schedule(&mut self, t: u64, ev: Ev) {
         self.seq += 1;
         self.heap.push(Pending { t, seq: self.seq, ev });
+    }
+
+    /// Emit one trace span at virtual time `t` (ns → µs). Spans use
+    /// the same stage vocabulary as the socket plane's `obs` hub;
+    /// generation is always 0 here (the sim models a single publisher
+    /// lineage). Every span folds into `span_hash` in emit order — the
+    /// recorder only retains the newest `recorder_capacity` of them.
+    fn span(&mut self, t: u64, stage: Stage, step: u64, shard: u32, detail: u64) {
+        let ev = SpanEvent {
+            t_us: t / 1_000,
+            generation: 0,
+            step,
+            shard,
+            stage: stage as u8,
+            detail,
+        };
+        self.recorder.record(ev);
+        self.spans += 1;
+        self.span_hash = fold_span(self.span_hash, &ev);
     }
 
     fn bootstrap(&mut self) {
@@ -640,6 +686,7 @@ impl Sim {
                 let _ = self
                     .store
                     .publish_frame(FrameId::Shard { step, shard: k }, &f.payload);
+                self.span(t, Stage::Publish, step, k, f.payload.len() as u64);
                 self.hop_stream(t, 0, f);
             }
             let _ = self
@@ -672,6 +719,9 @@ impl Sim {
         let meta = (frame.kind == kind::PATCH)
             .then(|| (frame_step(&frame), frame_shard(&frame)));
         self.nodes[idx].stage.as_mut().expect("hop has stage").stage(&frame, meta);
+        if let Some((s, k)) = meta {
+            self.span(t, Stage::RelayStage, s, k, id);
+        }
         let children = self.nodes[idx].children.clone();
         for c in children {
             self.enqueue_stream(t, id, c, &frame);
@@ -682,15 +732,25 @@ impl Sim {
 
     fn enqueue_stream(&mut self, t: u64, parent: u64, child: u64, frame: &Arc<Frame>) {
         let depth = self.cfg.queue_depth;
-        {
+        let (coalesced, dropped) = {
             let stage = self.nodes[parent as usize].stage.as_ref().expect("hop has stage");
             let Some(edge) = self.edges.get_mut(&(parent, child)) else { return };
             let (coalesced, dropped) = coalesce_enqueue(&mut edge.q, frame, stage, depth);
-            if coalesced {
-                self.m.coalesced += 1;
-            }
             self.m.frames_superseded += dropped;
             self.m.max_queue = self.m.max_queue.max(edge.q.len());
+            (coalesced, dropped)
+        };
+        if coalesced {
+            self.m.coalesced += 1;
+        }
+        if frame.kind == kind::PATCH && (coalesced || dropped > 0) {
+            let (s, k) = (frame_step(frame), frame_shard(frame));
+            if coalesced {
+                self.span(t, Stage::Coalesce, s, k, parent);
+            }
+            if dropped > 0 {
+                self.span(t, Stage::Evict, s, k, dropped);
+            }
         }
         self.kick_edge(t, parent, child);
     }
@@ -804,6 +864,7 @@ impl Sim {
                     .expect("hop has stage")
                     .index_frame(s, k, frame.clone());
                 self.m.retransmits += riders.len() as u64;
+                self.span(t, Stage::Retransmit, s, k, riders.len() as u64);
                 for r in riders {
                     self.push_direct(t, id, r, frame.clone());
                 }
@@ -819,6 +880,7 @@ impl Sim {
         let hit = self.nodes[idx].stage.as_ref().and_then(|st| st.lookup(step, shard));
         if let Some(f) = hit {
             self.m.nacks_serviced += 1;
+            self.span(t, Stage::NackServe, step, shard, id);
             self.push_direct(t, id, from, f);
             return;
         }
@@ -835,10 +897,12 @@ impl Sim {
                         .index_frame(step, shard, f.clone());
                     self.m.nacks_serviced += 1;
                     self.m.store_repairs += 1;
+                    self.span(t, Stage::NackServe, step, shard, 0);
                     self.push_direct(t, 0, from, f);
                 }
                 Err(_) => {
                     self.m.nacks_unserviceable += 1;
+                    self.span(t, Stage::NackMiss, step, shard, 0);
                     self.push_direct(
                         t,
                         0,
@@ -862,6 +926,7 @@ impl Sim {
             return;
         }
         self.m.nacks_escalated += 1;
+        self.span(t, Stage::Escalate, step, shard, id);
         match self.nodes[idx].parent {
             Some(p) => self.send_ctrl(t, id, p, kind::NACK, step, shard),
             None => {
@@ -875,6 +940,7 @@ impl Sim {
                     .resolve(step, shard)
                     .unwrap_or_default();
                 self.m.nacks_unserviceable += 1;
+                self.span(t, Stage::NackMiss, step, shard, id);
                 for r in riders {
                     self.push_direct(t, id, r, Arc::new(ctrl_frame(kind::NACK_MISS, step, shard)));
                 }
@@ -963,18 +1029,28 @@ impl Sim {
 
     fn set_applied(&mut self, t: u64, id: u64, new: u64) {
         let idx = id as usize;
-        let reached = {
+        let (old, reached) = {
             let node = &mut self.nodes[idx];
+            let old = node.applied;
             node.applied = new;
             node.pending = node.pending.split_off(&(new + 1));
             node.nacks.retain(|&(s, _), _| s > new);
             if self.publish_done && !node.at_head && new >= self.final_head {
                 node.at_head = true;
-                true
+                (old, true)
             } else {
-                false
+                (old, false)
             }
         };
+        // apply spans close every (step, shard) timeline this advance
+        // covers — anchor jumps included, matching the consumer's
+        // chain-apply semantics
+        let shards = self.cfg.shards_per_step.max(2);
+        for s in old + 1..=new.min(self.cfg.steps) {
+            for k in 0..shards {
+                self.span(t, Stage::Apply, s, k, id);
+            }
+        }
         if reached {
             self.at_head_leaves += 1;
             self.check_converged(t);
@@ -993,6 +1069,7 @@ impl Sim {
         let now = self.clock.now();
         let mut rt = self.cfg.nack_policy.start_at(now);
         self.m.leaf_nacks += 1;
+        self.span(t, Stage::NackSent, step, shard, id);
         self.send_ctrl(t, id, parent, kind::NACK, step, shard);
         match rt.next_delay_at(now) {
             Some(d) => {
@@ -1004,6 +1081,7 @@ impl Sim {
             }
             None => {
                 self.m.nack_budget_exhausted += 1;
+                self.span(t, Stage::GaveUp, step, shard, id);
                 self.enter_slow(t, id);
             }
         }
@@ -1039,6 +1117,7 @@ impl Sim {
             None => {
                 self.nodes[idx].nacks.remove(&(step, shard));
                 self.m.nack_budget_exhausted += 1;
+                self.span(t, Stage::GaveUp, step, shard, leaf);
                 self.enter_slow(t, leaf);
             }
         }
@@ -1062,6 +1141,7 @@ impl Sim {
         self.nodes[idx].in_slow = true;
         self.nodes[idx].nacks.clear();
         self.m.slow_paths += 1;
+        self.span(t, Stage::CatchUp, target, 0, id);
         // collect the fetched objects so each can be priced through
         // the caching-hop model individually (object tags: 0 = anchor,
         // 1 = whole delta, 2 = shard)
@@ -1428,6 +1508,9 @@ impl Sim {
             max_queue_depth: self.m.max_queue,
             events: self.events,
             trace_hash: self.hash,
+            spans: self.spans,
+            span_hash: self.span_hash,
+            span_events: self.recorder.snapshot(),
         }
     }
 }
@@ -1470,10 +1553,35 @@ mod tests {
         let b = run(cfg.clone());
         assert_eq!(a, b, "same config+seed must be bit-identical");
         assert_eq!(a.trace_hash, b.trace_hash);
+        assert_eq!(a.span_hash, b.span_hash, "span stream must replay identically");
         let mut other = cfg.clone();
         other.seed = 8;
         let c = run(other);
         assert_ne!(a.trace_hash, c.trace_hash, "different seed, different trace");
+    }
+
+    #[test]
+    fn spans_cover_the_run_and_reconstruct_timelines() {
+        let r = run(tiny(3));
+        assert!(r.spans > 0, "a converging run must emit spans");
+        assert_ne!(r.span_hash, 0xcbf2_9ce4_8422_2325, "hash must fold spans");
+        assert_eq!(
+            r.spans as usize,
+            r.span_events.len(),
+            "tiny run fits entirely in the default recorder ring"
+        );
+        let report = crate::obs::reconstruct(&r.span_events);
+        assert!(!report.rows.is_empty());
+        assert!(
+            report.complete > 0,
+            "clean run must close publish→apply timelines: {} rows",
+            report.rows.len()
+        );
+        assert!(
+            report.incomplete.is_empty(),
+            "every published (step, shard) must reach every leaf: {:?}",
+            report.incomplete
+        );
     }
 
     #[test]

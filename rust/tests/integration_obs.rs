@@ -1,0 +1,242 @@
+//! Observability integration suite (tentpole: flight-recorder tracing
+//! + live introspection across the sync plane).
+//!
+//! * `trace_reconstructs_complete_timelines_over_two_level_tree` — the
+//!   CI `obs` step's by-name target: a real root → 2 mid-tier nodes →
+//!   4 leaves tree streams a sharded stream, and every published
+//!   `(step, shard)` must reconstruct a complete publish → relay stage
+//!   → apply timeline from the process-global recorder.
+//! * `sim_trace_hash_replays_bit_identically` — the simulator's span
+//!   stream is part of its determinism contract: same config + seed →
+//!   identical span hash AND identical retained events, and the
+//!   incremental fold agrees with [`pulse::obs::trace_hash`] over the
+//!   full stream.
+//! * `obs_snap_answers_from_every_node_kind` — relay root, mid-tier
+//!   relay node, store server, and control plane all answer the same
+//!   `OBS_SNAP` frame with their role and live counters.
+//!
+//! The flight recorder is process-global, so tests that clear or read
+//! it serialize on a file-local mutex (separate test binaries are
+//! separate processes — no cross-suite interference).
+
+use pulse::net::control::{ControlConfig, ControlPlane};
+use pulse::net::node::RelayNode;
+use pulse::net::relay::Relay;
+use pulse::net::store::{DirectStore, StoreServer};
+use pulse::net::transport::{RelayTransport, SyncTransport};
+use pulse::obs::{fetch_snapshot, reconstruct, trace_hash, Obs, SpanEvent, Stage, SNAP_WITH_EVENTS};
+use pulse::pulse::sync::{Consumer, Publisher, SyncStats};
+use pulse::sparse::synthetic_layout;
+use pulse::storage::ObjectStore;
+use pulse::util::rng::Rng;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Serializes access to the process-global recorder within this suite.
+static GATE: Mutex<()> = Mutex::new(());
+
+const N: usize = 16_000;
+const SHARDS: usize = 4;
+
+/// Seeded stream of views (views[0] = initial checkpoint).
+fn views(n: usize, steps: u64, perturbs: usize) -> Vec<Vec<u16>> {
+    let mut rng = Rng::new(91);
+    let mut w: Vec<u16> = (0..n).map(|_| rng.next_u32() as u16).collect();
+    let mut out = vec![w.clone()];
+    for _ in 0..steps {
+        for _ in 0..perturbs {
+            let i = rng.below(n as u64) as usize;
+            w[i] = rng.next_u32() as u16;
+        }
+        out.push(w.clone());
+    }
+    out
+}
+
+/// Poll until `step` is committed from this consumer's view, then
+/// synchronize once.
+fn wait_sync<T: SyncTransport>(c: &mut Consumer<T>, step: u64) -> SyncStats {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        if let Ok(Some(head)) = c.latest_ready() {
+            if head >= step {
+                return c.synchronize().unwrap();
+            }
+        }
+        assert!(Instant::now() < deadline, "step {} never became ready", step);
+        std::thread::sleep(Duration::from_millis(3));
+    }
+}
+
+fn wait_hop(node: &RelayNode, hop: u32) {
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while node.hop() != hop {
+        assert!(Instant::now() < deadline, "node never learned hop {}", hop);
+        std::thread::sleep(Duration::from_millis(3));
+    }
+}
+
+#[test]
+fn trace_reconstructs_complete_timelines_over_two_level_tree() {
+    let _g = GATE.lock().unwrap();
+    let hub = Obs::global();
+    hub.clear();
+
+    let steps = 3u64;
+    let vs = views(N, steps, N / 100);
+    let layout = synthetic_layout(N, 1024);
+
+    let root = Arc::new(Relay::start().unwrap());
+    let node_a = RelayNode::join(root.port).unwrap();
+    let node_b = RelayNode::join(root.port).unwrap();
+    wait_hop(&node_a, 1);
+    wait_hop(&node_b, 1);
+
+    let mut publisher = Publisher::over(
+        RelayTransport::publisher(root.clone()),
+        layout.clone(),
+        vs[0].clone(),
+        6,
+    )
+    .unwrap()
+    .with_shards(SHARDS);
+    let ports = [node_a.port(), node_b.port(), node_a.port(), node_b.port()];
+    let mut leaves: Vec<Consumer<RelayTransport>> = ports
+        .iter()
+        .map(|&p| Consumer::over(RelayTransport::subscribe(p).unwrap(), layout.clone()))
+        .collect();
+    for c in leaves.iter_mut() {
+        wait_sync(c, 0);
+    }
+    for (step, view) in vs.iter().enumerate().skip(1) {
+        publisher.publish(step as u64, view).unwrap();
+        for c in leaves.iter_mut() {
+            let cs = wait_sync(c, step as u64);
+            assert!(cs.verified);
+            assert_eq!(c.weights.as_deref(), Some(view.as_slice()));
+        }
+    }
+
+    // snapshot before teardown; step 0 is the bootstrap anchor, which
+    // by design has no publish span (leaves restore it via catch-up)
+    let events: Vec<SpanEvent> = hub
+        .recorder
+        .snapshot()
+        .into_iter()
+        .filter(|e| e.step >= 1 && e.step <= steps)
+        .collect();
+    drop(leaves);
+    node_a.stop();
+    node_b.stop();
+    root.stop();
+
+    let report = reconstruct(&events);
+    assert!(report.timelines > 0, "a streamed run must produce timelines");
+    assert!(
+        report.is_complete(),
+        "{} of {} timelines missing an endpoint: {:?}",
+        report.incomplete.len(),
+        report.timelines,
+        report.incomplete
+    );
+    let row = |s: Stage| report.rows.iter().find(|r| r.stage == s);
+    let publish = row(Stage::Publish).expect("publish stage row");
+    let staged = row(Stage::RelayStage).expect("relay stage row");
+    let apply = row(Stage::Apply).expect("apply stage row");
+    // exactly one publish span anchors each timeline at offset zero
+    assert_eq!(publish.count, report.timelines);
+    assert_eq!(publish.p99_us, 0);
+    // every frame staged through at least the mid-tier hop; all four
+    // leaves applied every timeline
+    assert!(staged.count >= report.timelines, "{} staged", staged.count);
+    assert_eq!(apply.count, report.timelines * ports.len());
+}
+
+#[test]
+fn sim_trace_hash_replays_bit_identically() {
+    // the simulator records into its own per-run recorder (not the
+    // process-global hub), so no GATE is needed here
+    use pulse::sim::topo::TopoSpec;
+    use pulse::sim::{run, SimConfig};
+
+    let leaves = 2_000usize;
+    let mut cfg = SimConfig::new(TopoSpec::kary(leaves, 8).with_spares(2), 7);
+    cfg.steps = 6;
+    cfg.step_interval = Duration::from_millis(50);
+    cfg.shards_per_step = 4;
+    cfg.bytes_per_shard = 2048;
+    cfg.anchor_bytes = 16_384;
+    // hold the whole span stream so reconstruction sees every event
+    cfg.recorder_capacity = leaves * 6 * 8;
+
+    let a = run(cfg.clone());
+    let b = run(cfg);
+    assert!(
+        a.converged,
+        "clean sim must converge (head {} at {:?})",
+        a.head_step, a.converged_at
+    );
+    assert_eq!(a.span_hash, b.span_hash, "span hash must replay bit-identically");
+    assert_eq!(a.span_events, b.span_events, "retained spans must replay bit-identically");
+    assert_eq!(
+        a.spans as usize,
+        a.span_events.len(),
+        "ring must hold the full stream ({} of {})",
+        a.span_events.len(),
+        a.spans
+    );
+    // the incremental per-event fold and the batch hash agree
+    assert_eq!(trace_hash(&a.span_events), a.span_hash);
+
+    let report = reconstruct(&a.span_events);
+    assert!(
+        report.is_complete(),
+        "{} of {} sim timelines missing an endpoint",
+        report.incomplete.len(),
+        report.timelines
+    );
+}
+
+#[test]
+fn obs_snap_answers_from_every_node_kind() {
+    let _g = GATE.lock().unwrap();
+
+    // relay root + mid-tier relay node
+    let root = Arc::new(Relay::start().unwrap());
+    let node = RelayNode::join(root.port).unwrap();
+    wait_hop(&node, 1);
+    let snap = fetch_snapshot(&root.port.to_string(), 0).unwrap();
+    assert_eq!(snap.req_str("role").unwrap(), "relay");
+    assert!(snap.get("histograms").is_some(), "snapshot carries the hub histograms");
+    assert!(
+        snap.get("recorder").unwrap().get("events").is_none(),
+        "without the events flag the reply carries ring counters only"
+    );
+    let snap = fetch_snapshot(&format!("127.0.0.1:{}", node.port()), SNAP_WITH_EVENTS).unwrap();
+    assert_eq!(snap.req_str("role").unwrap(), "relay");
+    assert_eq!(snap.get("counters").unwrap().req_f64("hop").unwrap(), 1.0);
+    assert!(
+        snap.get("recorder").unwrap().get("events").is_some(),
+        "the events flag pulls the recorder ring"
+    );
+    node.stop();
+    root.stop();
+
+    // store server
+    let store = ObjectStore::temp("obs_snap_kinds").unwrap();
+    let origin = StoreServer::serve(Arc::new(DirectStore::new(store.clone())), None).unwrap();
+    let snap = fetch_snapshot(&origin.port().to_string(), 0).unwrap();
+    assert_eq!(snap.req_str("role").unwrap(), "store");
+    assert!(snap.get("counters").unwrap().get("gets").is_some());
+    origin.stop();
+    std::fs::remove_dir_all(store.root()).unwrap();
+
+    // control plane
+    let root = Arc::new(Relay::start().unwrap());
+    let plane = ControlPlane::start(root.port, ControlConfig::default()).unwrap();
+    let snap = fetch_snapshot(&plane.port.to_string(), 0).unwrap();
+    assert_eq!(snap.req_str("role").unwrap(), "control");
+    assert!(snap.get("counters").unwrap().get("epoch").is_some());
+    plane.stop();
+    root.stop();
+}
